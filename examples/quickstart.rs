@@ -1,0 +1,90 @@
+//! Quickstart: the end-to-end validation driver.
+//!
+//! Trains a PAAC agent (arch_tiny, the paper's hyperparameter scheme) on
+//! Catch for ~120k timesteps — a few hundred synchronous updates — and
+//! prints the score/loss curve plus the final Table-1-protocol
+//! evaluation against the random baseline. All three layers compose:
+//! Pallas kernels -> JAX train artifact -> PJRT -> this Rust loop.
+//!
+//!   cargo run --release --example quickstart [-- --steps 120000 --game catch]
+
+use paac::algo::evaluator::{random_baseline, EvalProtocol};
+use paac::cli::Cli;
+use paac::config::Config;
+use paac::coordinator::master::Trainer;
+use paac::envs::GameId;
+use paac::error::Result;
+
+fn main() -> Result<()> {
+    let args = Cli::new("quickstart", "end-to-end PAAC training demo")
+        .flag("steps", Some("200000"), "timestep budget")
+        .flag("game", Some("catch"), "game id")
+        .flag("seed", Some("1"), "run seed")
+        .flag("artifacts", Some("artifacts"), "artifact dir")
+        .parse_or_exit();
+
+    let game = GameId::parse(&args.str_of("game")?)?;
+    let mut cfg = Config::preset_quickstart();
+    cfg.game = game;
+    cfg.max_timesteps = args.u64_of("steps")?;
+    cfg.seed = args.u64_of("seed")?;
+    cfg.artifacts_dir = args.str_of("artifacts")?.into();
+    cfg.eval_episodes = 30;
+
+    println!("== PAAC quickstart ==");
+    println!(
+        "game={} arch={} n_e={} n_w={} t_max={} lr={} steps={}",
+        cfg.game.name(),
+        cfg.arch,
+        cfg.n_e,
+        cfg.n_w,
+        cfg.t_max,
+        cfg.lr,
+        cfg.max_timesteps
+    );
+
+    let mut trainer = Trainer::new(cfg.clone())?;
+    let report = trainer.run_paac(true)?;
+
+    println!("\n-- score curve (EMA of episode returns) --");
+    println!("| timestep | wall s | score |");
+    println!("|---|---|---|");
+    let stride = (report.score_curve.len() / 20).max(1);
+    for (i, p) in report.score_curve.iter().enumerate() {
+        if i % stride == 0 || i + 1 == report.score_curve.len() {
+            println!("| {} | {:.1} | {:.2} |", p.timestep, p.wall_secs, p.score);
+        }
+    }
+
+    println!("\n-- summary --");
+    println!(
+        "{} timesteps in {:.1}s = {:.0} timesteps/s, {} updates, {} episodes",
+        report.timesteps,
+        report.wall_secs,
+        report.timesteps_per_sec,
+        report.updates,
+        report.episodes
+    );
+    print!("time usage:");
+    for (name, f) in &report.phase_fractions {
+        print!(" {name}={:.1}%", f * 100.0);
+    }
+    println!();
+
+    // final evaluation vs random, Table-1 protocol
+    let proto = EvalProtocol::default();
+    let rand = random_baseline(cfg.game, &proto, cfg.seed);
+    if let Some(eval) = &report.eval {
+        println!(
+            "\nfinal eval (best of 3 actors x 30 eps, <=30 no-ops): {:.2} (mean {:.2})",
+            eval.best, eval.mean
+        );
+        println!("random baseline: {:.2}", rand.best);
+        let improved = eval.best > rand.best;
+        println!("learned vs random: {}", if improved { "YES" } else { "NO" });
+        if !improved {
+            std::process::exit(1);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! Time-usage breakdown — Figure 2's measurement.
+//!
+//! Runs PAAC for a fixed number of updates at each n_e and reports the
+//! fraction of wall-clock spent in environment interaction vs action
+//! selection vs learning (the paper's Pong measurement: ~50% env, ~37%
+//! action+learn at n_e = 32 with arch_nips). With --atari the same
+//! measurement runs through the full 84x84x4 pipeline and arch_nips /
+//! arch_nature, reproducing the figure's model-size comparison.
+//!
+//!   cargo run --release --example time_breakdown -- --game pong
+//!   cargo run --release --example time_breakdown -- --game pong --atari
+
+use paac::benchkit::Table;
+use paac::cli::Cli;
+use paac::config::Config;
+use paac::coordinator::master::Trainer;
+use paac::envs::GameId;
+use paac::error::Result;
+use paac::runtime::Runtime;
+use paac::util::timer::Phase;
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    let args = Cli::new("time_breakdown", "Figure 2 phase-time measurement")
+        .flag("game", Some("pong"), "game id")
+        .flag("updates", Some("120"), "measured updates per configuration")
+        .flag("ne-list", None, "n_e values (default depends on mode)")
+        .flag("seed", Some("1"), "run seed")
+        .flag("artifacts", Some("artifacts"), "artifact dir")
+        .switch("atari", "use the 84x84x4 pipeline with arch_nips + arch_nature")
+        .parse_or_exit();
+
+    let game = GameId::parse(&args.str_of("game")?)?;
+    let updates = args.u64_of("updates")?;
+    let seed = args.u64_of("seed")?;
+    let atari = args.has("atari");
+    let rt = Arc::new(Runtime::new(args.str_of("artifacts")?)?);
+
+    let archs: Vec<&str> = if atari { vec!["nips", "nature"] } else { vec!["tiny"] };
+    let ne_default = if atari { "16,32" } else { "16,32,64,128,256" };
+    let ne_list: Vec<usize> = args
+        .get("ne-list")
+        .unwrap_or(ne_default)
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse().unwrap())
+        .collect();
+
+    let mut table = Table::new(&[
+        "arch",
+        "n_e",
+        "env step %",
+        "action select %",
+        "learn %",
+        "batch+returns %",
+        "timesteps/s",
+    ]);
+
+    for arch in &archs {
+        for &ne in &ne_list {
+            let mut cfg = Config::preset_paper(game);
+            cfg.arch = arch.to_string();
+            cfg.atari_mode = atari;
+            cfg.n_e = ne;
+            cfg.n_w = cfg.n_w.min(ne);
+            cfg.seed = seed;
+            cfg.artifacts_dir = args.str_of("artifacts")?.into();
+            eprintln!("== measuring arch={arch} n_e={ne} ({updates} updates) ==");
+            let mut trainer = Trainer::with_runtime(cfg, rt.clone())?;
+            let (fractions, tps) = trainer.measure_phases(updates)?;
+            let get = |p: Phase| {
+                fractions
+                    .iter()
+                    .find(|(q, _)| *q == p)
+                    .map(|(_, f)| *f)
+                    .unwrap_or(0.0)
+            };
+            table.row(vec![
+                arch.to_string(),
+                ne.to_string(),
+                format!("{:.1}", get(Phase::EnvStep) * 100.0),
+                format!("{:.1}", get(Phase::ActionSelect) * 100.0),
+                format!("{:.1}", get(Phase::Learn) * 100.0),
+                format!(
+                    "{:.1}",
+                    (get(Phase::Batching) + get(Phase::Returns)) * 100.0
+                ),
+                format!("{:.0}", tps),
+            ]);
+        }
+    }
+
+    println!("\n== Figure 2: time usage in {} ==\n", game.name());
+    println!("{}", table.render());
+    println!(
+        "(paper, arch_nips GPU n_e=32: ~50% env interaction, ~37% learning + \
+         action selection; arch_nature costs ~22% throughput on GPU, ~41% on CPU)"
+    );
+    Ok(())
+}

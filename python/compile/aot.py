@@ -1,0 +1,233 @@
+"""AOT compile path: lower every L2 entry point to HLO text + manifest.
+
+This is the ONLY Python that ever runs for this system, and it runs once at
+build time (``make artifacts``).  The Rust coordinator loads the emitted
+``artifacts/*.hlo.txt`` through ``HloModuleProto::from_text_file`` and runs
+them via PJRT; Python is never on the training path.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` crate binds) rejects with
+``proto.id() <= INT_MAX``; the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/gen_hlo.py.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+                       [--archs tiny,nips,nature] [--tiny-ne 4,16,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Artifact matrix defaults (DESIGN.md §6).  tiny covers the n_e sweep of
+# Figures 3/4; nips/nature cover Table 1 fidelity and Figure 2.
+DEFAULT_TINY_NE = (4, 16, 32, 64, 128, 256)
+DEFAULT_BIG_NE = (16, 32)
+MANIFEST_VERSION = 3
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _describe(specs):
+    return [
+        {"dtype": str(s.dtype), "shape": list(s.shape)}
+        for s in specs
+    ]
+
+
+class Emitter:
+    """Lowers entry points and accumulates manifest records."""
+
+    def __init__(self, out_dir: str, verbose: bool = True):
+        self.out_dir = out_dir
+        self.entries = []
+        self.verbose = verbose
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name: str, fn, in_specs, meta: dict):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(self.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        # Output shapes via abstract evaluation (no FLOPs spent).
+        outs = [
+            {"dtype": str(v.dtype), "shape": list(v.shape)}
+            for v in jax.eval_shape(fn, *in_specs)
+        ]
+        rec = {
+            "name": name,
+            "file": fname,
+            "inputs": _describe(in_specs),
+            "outputs": outs,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            **meta,
+        }
+        self.entries.append(rec)
+        if self.verbose:
+            print(
+                f"  [{time.time() - t0:6.1f}s] {fname}  "
+                f"({len(text) / 1024:.0f} KiB, {len(in_specs)} in / {len(outs)} out)",
+                flush=True,
+            )
+        return rec
+
+
+def emit_arch(em: Emitter, arch: model.Arch, ne_list, t_max: int):
+    """Emit the full entry set for one architecture."""
+    specs = model.param_specs(arch)
+    n = len(specs)
+    p_specs = [_spec(s) for _, s in specs]
+    h, w, c = arch.obs_shape
+    a = arch.actions
+
+    # init: seed -> params
+    em.emit(
+        f"{arch.name}_init",
+        model.make_init(arch),
+        [_spec((), jnp.int32)],
+        {"arch": arch.name, "kind": "init"},
+    )
+
+    # forward1: batch-1 policy evaluation for the evaluator / A3C actors
+    em.emit(
+        f"{arch.name}_forward_b1",
+        model.make_forward(arch),
+        p_specs + [_spec((1, h, w, c))],
+        {"arch": arch.name, "kind": "forward", "batch": 1},
+    )
+
+    for ne in ne_list:
+        b = ne * t_max
+        em.emit(
+            f"{arch.name}_forward_b{ne}",
+            model.make_forward(arch),
+            p_specs + [_spec((ne, h, w, c))],
+            {"arch": arch.name, "kind": "forward", "batch": ne},
+        )
+        em.emit(
+            f"{arch.name}_train_ne{ne}",
+            model.make_train(arch),
+            p_specs
+            + p_specs
+            + [
+                _spec((b, h, w, c)),
+                _spec((b,), jnp.int32),
+                _spec((b,)),
+                _spec(()),
+            ],
+            {"arch": arch.name, "kind": "train", "ne": ne, "t_max": t_max, "batch": b},
+        )
+        em.emit(
+            f"{arch.name}_returns_ne{ne}",
+            model.make_returns(),
+            [_spec((ne, t_max)), _spec((ne, t_max)), _spec((ne,))],
+            {"arch": arch.name, "kind": "returns", "ne": ne, "t_max": t_max},
+        )
+
+    # A3C baseline: per-actor grads on a t_max batch + shared apply
+    em.emit(
+        f"{arch.name}_grads_t{t_max}",
+        model.make_grads(arch),
+        p_specs + [_spec((t_max, h, w, c)), _spec((t_max,), jnp.int32), _spec((t_max,))],
+        {"arch": arch.name, "kind": "grads", "batch": t_max},
+    )
+    em.emit(
+        f"{arch.name}_apply",
+        model.make_apply(arch),
+        p_specs + p_specs + p_specs + [_spec(())],
+        {"arch": arch.name, "kind": "apply"},
+    )
+    del n, a
+
+
+def arch_manifest(arch: model.Arch) -> dict:
+    return {
+        "obs_shape": list(arch.obs_shape),
+        "actions": arch.actions,
+        "fc": arch.fc,
+        "convs": [
+            {"kernel": c.kernel, "channels": c.channels, "stride": c.stride}
+            for c in arch.convs
+        ],
+        "params": [
+            {"name": name, "shape": list(shape)}
+            for name, shape in model.param_specs(arch)
+        ],
+        "param_count": model.param_count(arch),
+        "forward_flops_per_sample": model.forward_flops_per_sample(arch),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--archs", default="tiny,nips,nature")
+    ap.add_argument("--tiny-ne", default=",".join(str(x) for x in DEFAULT_TINY_NE))
+    ap.add_argument("--big-ne", default=",".join(str(x) for x in DEFAULT_BIG_NE))
+    ap.add_argument("--t-max", type=int, default=model.T_MAX)
+    args = ap.parse_args(argv)
+
+    archs = [a for a in args.archs.split(",") if a]
+    tiny_ne = [int(x) for x in args.tiny_ne.split(",") if x]
+    big_ne = [int(x) for x in args.big_ne.split(",") if x]
+
+    em = Emitter(args.out_dir)
+    t0 = time.time()
+    for name in archs:
+        arch = model.ARCHS[name]
+        ne_list = tiny_ne if name == "tiny" else big_ne
+        print(f"== lowering arch_{name} (ne={ne_list}) ==", flush=True)
+        emit_arch(em, arch, ne_list, args.t_max)
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "generated_unix": int(time.time()),
+        "jax_version": jax.__version__,
+        "hyperparams": {
+            "gamma": model.GAMMA,
+            "beta": model.BETA,
+            "value_coef": model.VALUE_COEF,
+            "rmsprop_rho": model.RMSPROP_RHO,
+            "rmsprop_eps": model.RMSPROP_EPS,
+            "clip_norm": model.CLIP_NORM,
+            "t_max": args.t_max,
+        },
+        "archs": {name: arch_manifest(model.ARCHS[name]) for name in archs},
+        "entries": em.entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(
+        f"wrote {len(em.entries)} artifacts + manifest.json "
+        f"in {time.time() - t0:.1f}s -> {args.out_dir}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,9 @@
+# L1: Pallas kernels for the PAAC compute hot-spots.
+#
+# conv2d     — strided NHWC convolution (shifted-GEMM decomposition)
+# dense      — fused matmul + bias + ReLU (fwd and bwd kernels)
+# fused_loss — one-pass actor-critic loss (Eq. 10/11) with analytic bwd
+# rmsprop    — elementwise RMSProp + clip-by-global-norm update
+# returns    — n-step discounted return recursion (Algorithm 1, l.11-15)
+# ref        — pure-jnp oracles; the pytest ground truth for all of the above
+from . import common, conv2d, dense, fused_loss, ref, returns, rmsprop  # noqa: F401

@@ -1,0 +1,70 @@
+"""Shared helpers for the Pallas kernels.
+
+All kernels in this package are lowered with ``interpret=True``: interpret
+mode lowers the kernel body to plain HLO ops (a while-loop over the grid),
+which any PJRT backend — including the Rust CPU client on the request path —
+can execute.  Real-TPU lowering would instead emit a Mosaic custom-call that
+only a TPU plugin can run, so the TPU path is compile-only in this repo (see
+DESIGN.md §Hardware-Adaptation).
+
+The block-size helpers below keep tiles shaped the way a TPU would want
+them: second-to-last dimension a multiple of 8 sublanes, last dimension a
+multiple of 128 lanes, total tile under the VMEM budget.  Interpret mode
+does not enforce this, but the AOT artifacts should carry TPU-credible
+structure per the design doc.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+# Single switch for the whole package; flipping this to False is the
+# "real TPU" compile-only configuration.
+INTERPRET = True
+
+# A conservative per-kernel VMEM budget in bytes (v4-class cores expose
+# ~16 MiB; leave headroom for double buffering).
+VMEM_BUDGET = 8 * 1024 * 1024
+
+LANE = 128
+SUBLANE = 8
+
+
+def round_up(x: int, m: int) -> int:
+    """Round ``x`` up to a multiple of ``m``."""
+    return ((x + m - 1) // m) * m
+
+
+def cdiv(a: int, b: int) -> int:
+    """Ceiling division."""
+    return (a + b - 1) // b
+
+
+def pick_block(dim: int, target: int, align: int) -> int:
+    """Pick a block size for ``dim``: at most ``target``, aligned to
+    ``align`` when the dimension itself is at least one alignment unit."""
+    if dim <= align:
+        return dim
+    blk = min(target, dim)
+    return max(align, (blk // align) * align)
+
+
+def tile_bytes(shape, dtype_bytes: int = 4) -> int:
+    """Bytes of one tile of ``shape`` (f32 by default)."""
+    n = 1
+    for d in shape:
+        n *= d
+    return n * dtype_bytes
+
+
+@functools.cache
+def interpret_flag() -> bool:
+    """Whether pallas_call should run in interpret mode on this host.
+
+    Kept as a function so tests can monkeypatch the module constant and
+    clear the cache if they ever need the compile-only path.
+    """
+    del jax  # only imported for parity with the real-TPU branch
+    return INTERPRET

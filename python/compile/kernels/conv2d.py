@@ -1,0 +1,169 @@
+"""Pallas 2-D convolution (NHWC, VALID padding, square stride).
+
+This is the L1 hot-spot of the PAAC networks: all three paper
+architectures (`arch_tiny`, `arch_nips`, `arch_nature`) start with strided
+convolutions over the observation batch, and the batched policy evaluation
+at the heart of the paper (master evaluates pi(.|s) for all n_e
+environments in ONE device call) spends most of its FLOPs here.
+
+Kernel strategy (TPU-shaped, run via interpret=True on CPU):
+
+  * grid over batch blocks: each program instance convolves a block of
+    ``block_n`` images, so the inner matmuls have M = block_n * OH * OW
+    rows — large enough to look like an MXU workload rather than a
+    per-image GEMV.
+  * the (KH, KW) taps are unrolled in the kernel body; each tap is a
+    strided slice of the input block followed by a single
+    ``(block_n*OH*OW, Ci) @ (Ci, Co)`` matmul accumulated in f32.
+    This is the classic shifted-GEMM decomposition of convolution: it
+    avoids materializing the full im2col buffer (KH*KW times the input) in
+    VMEM while still expressing all compute as matmuls.
+  * bias add + optional ReLU are fused into the same kernel, so the
+    artifact never round-trips activations to HBM between conv and
+    nonlinearity.
+
+The backward pass (dx, dw, db) is provided through ``jax.custom_vjp`` using
+XLA's transposed-convolution primitives: on the training path those lower
+to the same fused HLO loops, and keeping the bwd in lax keeps the vjp
+correct for every (stride, kernel, shape) combination the sweep compiles.
+The custom_vjp is still exercised end-to-end by pytest against
+``jax.grad`` of the pure-jnp oracle (``ref.conv2d``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _out_dim(size: int, k: int, stride: int) -> int:
+    """Output spatial size for VALID padding."""
+    return (size - k) // stride + 1
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, stride, oh, ow, relu):
+    """One grid step: convolve a block of images.
+
+    x_ref: (bn, H, W, Ci)    w_ref: (KH, KW, Ci, Co)
+    b_ref: (Co,)             o_ref: (bn, OH, OW, Co)
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    bn = x.shape[0]
+    kh, kw, ci, co = w.shape
+    acc = jnp.zeros((bn * oh * ow, co), dtype=jnp.float32)
+    # Shifted-GEMM: one strided slice + matmul per filter tap.
+    for i in range(kh):
+        for j in range(kw):
+            patch = jax.lax.slice(
+                x,
+                (0, i, j, 0),
+                (bn, i + stride * (oh - 1) + 1, j + stride * (ow - 1) + 1, ci),
+                (1, stride, stride, 1),
+            )  # (bn, OH, OW, Ci)
+            acc = acc + jnp.dot(
+                patch.reshape(bn * oh * ow, ci),
+                w[i, j],
+                preferred_element_type=jnp.float32,
+            )
+    out = acc + b_ref[...][None, :]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out.reshape(bn, oh, ow, co)
+
+
+def _pick_batch_block(n: int, h: int, w: int, ci: int, co: int, oh: int, ow: int) -> int:
+    """Largest batch block whose input+output tiles fit the VMEM budget."""
+    per_img = (h * w * ci + oh * ow * co + oh * ow * ci) * 4
+    bn = max(1, common.VMEM_BUDGET // max(per_img, 1))
+    bn = min(bn, n, 16)
+    # Prefer a divisor of n so the grid is exact (no padding logic needed).
+    while n % bn != 0:
+        bn -= 1
+    return bn
+
+
+def conv2d_fwd(x, w, b, stride: int, relu: bool):
+    """Pallas forward convolution.  Shapes as in ``ref.conv2d``."""
+    n, h, wd, ci = x.shape
+    kh, kw, wci, co = w.shape
+    assert wci == ci, f"channel mismatch {wci} != {ci}"
+    oh = _out_dim(h, kh, stride)
+    ow = _out_dim(wd, kw, stride)
+    bn = _pick_batch_block(n, h, wd, ci, co, oh, ow)
+    kernel = functools.partial(_conv_kernel, stride=stride, oh=oh, ow=ow, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, h, wd, ci), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, ci, co), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((co,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, oh, ow, co), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, co), jnp.float32),
+        interpret=common.INTERPRET,
+    )(x, w, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def conv2d(x, w, b, stride: int, relu: bool):
+    """Convolution with Pallas forward and lax-transpose backward."""
+    return conv2d_fwd(x, w, b, stride, relu)
+
+
+def _conv2d_fwd_rule(x, w, b, stride, relu):
+    out = conv2d_fwd(x, w, b, stride, relu)
+    # Save the post-activation output: for ReLU the mask is out > 0.
+    return out, (x, w, out)
+
+
+def _conv2d_bwd_rule(stride, relu, res, g):
+    x, w, out = res
+    if relu:
+        g = jnp.where(out > 0.0, g, 0.0)
+    n, h, wd, ci = x.shape
+    kh, kw, _, co = w.shape
+
+    db = jnp.sum(g, axis=(0, 1, 2))
+
+    # dx: canonical transposed convolution — dilate the cotangent by the
+    # stride, pad by (k-1), correlate with the flipped filter. Output size
+    # is (OH-1)*s + KH = H - (H-KH) % s; the remainder rows/cols never
+    # contributed to any output and get zero gradient, so pad them back.
+    dx = jax.lax.conv_general_dilated(
+        g,
+        jnp.flip(w, axis=(0, 1)).transpose(0, 1, 3, 2),  # (KH,KW,Co,Ci)
+        window_strides=(1, 1),
+        padding=((kh - 1, kh - 1), (kw - 1, kw - 1)),
+        lhs_dilation=(stride, stride),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    pad_h = h - dx.shape[1]
+    pad_w = wd - dx.shape[2]
+    if pad_h or pad_w:
+        dx = jnp.pad(dx, ((0, 0), (0, pad_h), (0, pad_w), (0, 0)))
+
+    # dw: correlate input with cotangent — a conv with batch as the
+    # contraction dimension.
+    dw = jax.lax.conv_general_dilated(
+        x.transpose(3, 1, 2, 0),      # (Ci, H, W, N): feature <- batch
+        g.transpose(1, 2, 0, 3),      # (OH, OW, N, Co)
+        window_strides=(1, 1),
+        padding="VALID",
+        lhs_dilation=(1, 1),
+        rhs_dilation=(stride, stride),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )                                  # (Ci, KH', KW', Co)
+    # When the stride leaves a remainder, the correlation window slides one
+    # position past the real filter extent; keep only the true KH x KW taps.
+    dw = dw.transpose(1, 2, 0, 3)[:kh, :kw, :, :]
+    return dx, dw, db
+
+
+conv2d.defvjp(_conv2d_fwd_rule, _conv2d_bwd_rule)

@@ -1,0 +1,138 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the *correctness ground truth*: each Pallas kernel in
+``conv2d.py``, ``dense.py``, ``fused_loss.py``, ``rmsprop.py`` and
+``returns.py`` is tested against the function of the same name here via
+``pytest`` + ``hypothesis`` (see ``python/tests/test_kernels.py``).
+
+Everything is plain ``jax.numpy`` with no Pallas, no custom_vjp and no
+cleverness, so that a bug in a kernel cannot be mirrored here.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+def conv2d(x, w, b, stride: int, relu: bool):
+    """NHWC valid-padding strided convolution.
+
+    x: (N, H, W, Ci) float32
+    w: (KH, KW, Ci, Co) float32
+    b: (Co,) float32
+    """
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    out = out + b
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+def dense(x, w, b, relu: bool):
+    """y = x @ w + b, optionally ReLU'd.  x: (M, K), w: (K, N), b: (N,)."""
+    out = x @ w + b
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fused actor-critic loss (paper Eq. 10 + 11)
+# ---------------------------------------------------------------------------
+
+def actor_critic_loss(logits, values, actions, returns, beta, value_coef):
+    """The PAAC loss and its components.
+
+    logits:  (B, A) policy logits
+    values:  (B,)  critic outputs V(s)
+    actions: (B,)  int32 actions taken
+    returns: (B,)  n-step returns R_t (Algorithm 1 lines 11-15)
+    beta:    entropy regularization weight
+    value_coef: coefficient on the squared value error
+
+    Returns (total_loss, (policy_loss, value_loss, entropy)).
+
+    The advantage (R - V) is treated as a constant in the policy term: the
+    value function only receives gradient through the squared error, exactly
+    as in Eq. (10)/(11) of the paper.
+    """
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    p = jnp.exp(logp)
+    onehot = jax.nn.one_hot(actions, logits.shape[-1], dtype=logits.dtype)
+    logp_a = jnp.sum(logp * onehot, axis=-1)
+    adv = jax.lax.stop_gradient(returns - values)
+    policy_loss = -jnp.mean(adv * logp_a)
+    entropy = -jnp.mean(jnp.sum(p * logp, axis=-1))
+    value_loss = value_coef * jnp.mean((returns - values) ** 2)
+    total = policy_loss - beta * entropy + value_loss
+    return total, (policy_loss, value_loss, entropy)
+
+
+# ---------------------------------------------------------------------------
+# RMSProp + global-norm clipping (paper §5.1: alpha=0.0224, rho=0.99,
+# eps=0.1, clip threshold 40)
+# ---------------------------------------------------------------------------
+
+def global_norm(grads):
+    """sqrt(sum of squared elements over a list of arrays)."""
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in grads))
+
+
+def clip_scale(gnorm, clip: float):
+    """Scale factor for clip-by-global-norm: min(1, clip / max(gnorm, tiny))."""
+    return jnp.minimum(1.0, clip / jnp.maximum(gnorm, 1e-12))
+
+
+def rmsprop(param, ms, grad, lr, rho: float, eps: float, scale):
+    """One (TF-convention) RMSProp step on a single tensor.
+
+    ms' = rho * ms + (1 - rho) * (scale*g)^2
+    p'  = p - lr * (scale*g) / sqrt(ms' + eps)
+
+    ``scale`` is the global-norm clip factor (scalar), ``lr`` a scalar.
+    Returns (param', ms').
+    """
+    g = grad * scale
+    ms_new = rho * ms + (1.0 - rho) * g * g
+    param_new = param - lr * g / jnp.sqrt(ms_new + eps)
+    return param_new, ms_new
+
+
+# ---------------------------------------------------------------------------
+# n-step returns (Algorithm 1 lines 11-15)
+# ---------------------------------------------------------------------------
+
+def nstep_returns(rewards, dones, bootstrap, gamma: float):
+    """Discounted n-step returns, computed backwards over time.
+
+    rewards:   (E, T) float32 — r_{t+1} for t = 0..T-1
+    dones:     (E, T) float32 — 1.0 where s_{t+1} is terminal
+    bootstrap: (E,)   float32 — V(s_T); masked by dones inside the recursion
+    gamma:     discount
+
+    R_T = bootstrap; R_t = r_t + gamma * R_{t+1} * (1 - done_t)
+    Returns (E, T).
+    """
+    E, T = rewards.shape
+    del E
+    out = []
+    r_next = bootstrap
+    for t in range(T - 1, -1, -1):
+        r_next = rewards[:, t] + gamma * r_next * (1.0 - dones[:, t])
+        out.append(r_next)
+    return jnp.stack(out[::-1], axis=1)

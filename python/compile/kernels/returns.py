@@ -1,0 +1,55 @@
+"""Pallas n-step return kernel (Algorithm 1, lines 11-15).
+
+Computes the discounted n-step returns
+
+    R_T = V(s_T)                      (bootstrap, zeroed on terminal)
+    R_t = r_t + gamma * R_{t+1} * (1 - done_t)
+
+for all n_e environments at once.  t_max is a compile-time constant (5 in
+the paper), so the backward recursion is fully unrolled in the kernel —
+each step is one fused multiply-add over an (n_e,)-lane vector.
+
+The Rust coordinator computes returns on the host by default
+(``rust/src/algo/returns.rs``); this kernel is the device-side variant
+used by the fused train artifact (obs/rewards in, updated params out, one
+device call per update) and as a cross-check for the host implementation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _returns_kernel(r_ref, d_ref, boot_ref, o_ref, *, gamma, t):
+    r = r_ref[...]      # (E, T)
+    d = d_ref[...]      # (E, T)
+    acc = boot_ref[...]  # (E,)
+    cols = []
+    for k in range(t - 1, -1, -1):
+        acc = r[:, k] + gamma * acc * (1.0 - d[:, k])
+        cols.append(acc)
+    o_ref[...] = jnp.stack(cols[::-1], axis=1)
+
+
+def nstep_returns(rewards, dones, bootstrap, gamma: float):
+    """Shapes as in ``ref.nstep_returns``: (E, T), (E, T), (E,) -> (E, T)."""
+    e, t = rewards.shape
+    kernel = functools.partial(_returns_kernel, gamma=gamma, t=t)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((e, t), lambda i: (0, 0)),
+            pl.BlockSpec((e, t), lambda i: (0, 0)),
+            pl.BlockSpec((e,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((e, t), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, t), jnp.float32),
+        interpret=common.INTERPRET,
+    )(rewards, dones, bootstrap)

@@ -1,0 +1,85 @@
+"""Pallas RMSProp update kernel (TF convention, paper §5.1).
+
+One elementwise kernel updates a parameter tensor and its running
+mean-square in a single pass:
+
+    ms' = rho * ms + (1 - rho) * (scale * g)^2
+    p'  = p  - lr * (scale * g) / sqrt(ms' + eps)
+
+``scale`` is the clip-by-global-norm factor min(1, 40/||g||) computed once
+per step over all gradients (the norm reduction itself is a trivially
+fusable jnp reduction in model.py); ``lr`` is a runtime scalar so the Rust
+coordinator can anneal the learning rate without recompiling artifacts.
+
+Tensors are processed flattened; the grid walks 1-D blocks so the largest
+fc weights (1.6M elements for arch_nature) still respect the VMEM budget
+on a real TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+# Block size cap for the flattened walk (f32 elements): 5 arrays resident
+# (p, ms, g, p', ms') * 256K * 4B = 5 MiB < VMEM_BUDGET.
+_BLOCK_CAP = 256 * 1024
+
+
+def _rmsprop_kernel(p_ref, ms_ref, g_ref, lr_ref, scale_ref, po_ref, mso_ref, *, rho, eps):
+    g = g_ref[...] * scale_ref[...][0]
+    ms_new = rho * ms_ref[...] + (1.0 - rho) * g * g
+    po_ref[...] = p_ref[...] - lr_ref[...][0] * g / jnp.sqrt(ms_new + eps)
+    mso_ref[...] = ms_new
+
+
+def _pick_block(size: int) -> int:
+    """Largest divisor of ``size`` not exceeding the cap."""
+    if size <= _BLOCK_CAP:
+        return size
+    for blk in range(_BLOCK_CAP, 0, -1):
+        if size % blk == 0:
+            return blk
+    return size
+
+
+def rmsprop(param, ms, grad, lr, rho: float, eps: float, scale):
+    """Apply one RMSProp step to a single tensor; returns (param', ms').
+
+    param/ms/grad may have any (identical) shape; lr and scale are scalars.
+    """
+    shape = param.shape
+    size = param.size
+    p = param.reshape(size)
+    m = ms.reshape(size)
+    g = grad.reshape(size)
+    lr1 = jnp.reshape(jnp.asarray(lr, jnp.float32), (1,))
+    sc1 = jnp.reshape(jnp.asarray(scale, jnp.float32), (1,))
+    blk = _pick_block(size)
+    kernel = functools.partial(_rmsprop_kernel, rho=rho, eps=eps)
+    p_new, ms_new = pl.pallas_call(
+        kernel,
+        grid=(size // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((size,), jnp.float32),
+            jax.ShapeDtypeStruct((size,), jnp.float32),
+        ],
+        interpret=common.INTERPRET,
+    )(p, m, g, lr1, sc1)
+    return p_new.reshape(shape), ms_new.reshape(shape)

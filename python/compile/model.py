@@ -1,0 +1,352 @@
+"""L2: the PAAC actor-critic models and training step, in JAX.
+
+Defines the three paper architectures and every entry point that gets
+AOT-lowered to an HLO-text artifact for the Rust coordinator:
+
+  * ``init``        — parameter initialization from an int32 seed
+  * ``forward``     — batched policy evaluation: obs -> (probs, values);
+                      THE paper's core operation (one device call evaluates
+                      pi(.|s) and V(s) for all n_e environments at once)
+  * ``train_step``  — fused n-step A2C update (Eq. 10/11): forward, fused
+                      loss, backward, clip-by-global-norm, RMSProp — one
+                      device call per parameter update
+  * ``grads`` / ``apply_grads`` — the compute/apply split used by the A3C
+                      baseline to reproduce asynchronous staleness
+  * ``nstep_returns`` — device-side variant of Algorithm 1 lines 11-15
+
+All dense/conv/loss/optimizer compute flows through the Pallas kernels in
+``kernels/`` so the lowered HLO carries the L1 structure.  Everything here
+is pure and positional: parameters travel as flat tuples in the order given
+by ``param_specs`` so the HLO parameter numbering is deterministic and
+recorded in the artifact manifest.
+
+Architectures (paper §5.1):
+  arch_tiny   — 10x10xC grid games (this repo's ALE substitute)
+  arch_nips   — the A3C-FF network (Mnih et al. 2013 adapted): conv 16x8x8
+                s4, conv 32x4x4 s2, fc 256
+  arch_nature — the Nature-DQN network: conv 32x8x8 s4, conv 64x4x4 s2,
+                conv 64x3x3 s1, fc 512
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d as k_conv
+from .kernels import dense as k_dense
+from .kernels import fused_loss as k_loss
+from .kernels import returns as k_returns
+from .kernels import rmsprop as k_rms
+
+
+# ---------------------------------------------------------------------------
+# Hyper-parameters baked into the train artifacts (paper §5.1).  The
+# learning rate is deliberately NOT baked: it is a runtime input so the
+# Rust coordinator can anneal it without recompiling.
+# ---------------------------------------------------------------------------
+
+GAMMA = 0.99          # discount
+BETA = 0.01           # entropy regularization weight
+VALUE_COEF = 0.5      # coefficient on the squared value error
+RMSPROP_RHO = 0.99    # RMSProp decay ("discount factor of 0.99 for RMSProp")
+RMSPROP_EPS = 0.1     # RMSProp epsilon
+CLIP_NORM = 40.0      # global-norm gradient clip threshold (Pascanu et al.)
+T_MAX = 5             # n-step rollout length
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """One convolution layer: square kernel/stride, VALID padding, ReLU."""
+
+    kernel: int
+    channels: int
+    stride: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    """A PAAC network architecture."""
+
+    name: str
+    obs_shape: Tuple[int, int, int]  # (H, W, C)
+    convs: Tuple[ConvSpec, ...]
+    fc: int
+    actions: int
+
+    def conv_out_shape(self) -> Tuple[int, int, int]:
+        h, w, c = self.obs_shape
+        for cv in self.convs:
+            h = (h - cv.kernel) // cv.stride + 1
+            w = (w - cv.kernel) // cv.stride + 1
+            c = cv.channels
+        return h, w, c
+
+    def flat_dim(self) -> int:
+        h, w, c = self.conv_out_shape()
+        return h * w * c
+
+
+ARCHS = {
+    "tiny": Arch("tiny", (10, 10, 6), (ConvSpec(3, 16, 1),), 128, 6),
+    "nips": Arch("nips", (84, 84, 4), (ConvSpec(8, 16, 4), ConvSpec(4, 32, 2)), 256, 6),
+    "nature": Arch(
+        "nature",
+        (84, 84, 4),
+        (ConvSpec(8, 32, 4), ConvSpec(4, 64, 2), ConvSpec(3, 64, 1)),
+        512,
+        6,
+    ),
+}
+
+
+def param_specs(arch: Arch) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — the artifact parameter contract."""
+    specs: List[Tuple[str, Tuple[int, ...]]] = []
+    c_in = arch.obs_shape[2]
+    for i, cv in enumerate(arch.convs):
+        specs.append((f"conv{i + 1}/w", (cv.kernel, cv.kernel, c_in, cv.channels)))
+        specs.append((f"conv{i + 1}/b", (cv.channels,)))
+        c_in = cv.channels
+    specs.append(("fc/w", (arch.flat_dim(), arch.fc)))
+    specs.append(("fc/b", (arch.fc,)))
+    specs.append(("pi/w", (arch.fc, arch.actions)))
+    specs.append(("pi/b", (arch.actions,)))
+    specs.append(("v/w", (arch.fc, 1)))
+    specs.append(("v/b", (1,)))
+    return specs
+
+
+def param_count(arch: Arch) -> int:
+    n = 0
+    for _, shape in param_specs(arch):
+        size = 1
+        for d in shape:
+            size *= d
+        n += size
+    return n
+
+
+def forward_flops_per_sample(arch: Arch) -> int:
+    """Multiply-add count of one forward pass (for DESIGN.md roofline)."""
+    flops = 0
+    h, w, c_in = arch.obs_shape
+    for cv in arch.convs:
+        oh = (h - cv.kernel) // cv.stride + 1
+        ow = (w - cv.kernel) // cv.stride + 1
+        flops += 2 * oh * ow * cv.channels * cv.kernel * cv.kernel * c_in
+        h, w, c_in = oh, ow, cv.channels
+    flops += 2 * arch.flat_dim() * arch.fc
+    flops += 2 * arch.fc * (arch.actions + 1)
+    return flops
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _fan_in(shape: Sequence[int]) -> int:
+    if len(shape) == 4:  # (KH, KW, Ci, Co)
+        return shape[0] * shape[1] * shape[2]
+    if len(shape) == 2:  # (K, N)
+        return shape[0]
+    return max(shape[0], 1)
+
+
+def init_params(arch: Arch, seed) -> Tuple[jnp.ndarray, ...]:
+    """He-normal init for the ReLU trunk, scaled-down heads.
+
+    Conv/fc trunk layers get std = sqrt(2 / fan_in) (He et al.), which
+    keeps activation magnitude through depth even for the sparse binary
+    grid observations of the MinAtar-style games (the original fan-in
+    *uniform* init collapsed activations ~100x over three layers there,
+    freezing learning — see DESIGN.md §Perf).  The policy head is scaled
+    down 100x so the initial policy stays near-uniform, and the value
+    head 10x so early advantage estimates are driven by returns; both are
+    standard A2C practice.  Biases start at zero.
+
+    ``seed`` is a traced int32 scalar so the artifact can be re-seeded
+    from Rust without recompilation.
+    """
+    key = jax.random.PRNGKey(jnp.asarray(seed, jnp.uint32))
+    out = []
+    for name, shape in param_specs(arch):
+        key, sub = jax.random.split(key)
+        if name.endswith("/b"):
+            out.append(jnp.zeros(shape, jnp.float32))
+            continue
+        std = jnp.sqrt(2.0 / jnp.float32(_fan_in(shape)))
+        if name.startswith("pi/"):
+            std = std * 0.01
+        elif name.startswith("v/"):
+            std = std * 0.1
+        out.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def forward_logits(arch: Arch, params: Sequence[jnp.ndarray], obs: jnp.ndarray):
+    """obs (B, H, W, C) -> (logits (B, A), values (B,)).
+
+    A single trunk feeds both heads (paper: "a single convolutional network
+    with two separate output layers"), so policy evaluation and value
+    estimation share all conv/fc compute.
+    """
+    i = 0
+    x = obs
+    for cv in arch.convs:
+        x = k_conv.conv2d(x, params[i], params[i + 1], cv.stride, True)
+        i += 2
+    x = x.reshape(x.shape[0], arch.flat_dim())
+    x = k_dense.dense(x, params[i], params[i + 1], True)
+    i += 2
+    logits = k_dense.dense(x, params[i], params[i + 1], False)
+    i += 2
+    values = k_dense.dense(x, params[i], params[i + 1], False)[:, 0]
+    return logits, values
+
+
+def forward(arch: Arch, params: Sequence[jnp.ndarray], obs: jnp.ndarray):
+    """obs -> (probs, values); probs are softmax'd for host-side sampling."""
+    logits, values = forward_logits(arch, params, obs)
+    return jax.nn.softmax(logits, axis=-1), values
+
+
+# ---------------------------------------------------------------------------
+# loss / gradients / update
+# ---------------------------------------------------------------------------
+
+def loss_fn(arch, params, obs, actions, returns):
+    logits, values = forward_logits(arch, params, obs)
+    total, aux = k_loss.actor_critic_loss(
+        logits, values, actions, returns, BETA, VALUE_COEF
+    )
+    return total, aux
+
+
+def compute_grads(arch, params, obs, actions, returns):
+    """Returns (grads tuple, (policy_loss, value_loss, entropy))."""
+    grad_fn = jax.grad(
+        lambda ps: loss_fn(arch, ps, obs, actions, returns), has_aux=True
+    )
+    grads, aux = grad_fn(tuple(params))
+    return grads, aux
+
+
+def global_norm(grads) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in grads)
+    )
+
+
+def apply_rmsprop(params, ms, grads, lr):
+    """Clip by global norm and apply RMSProp via the Pallas kernel.
+
+    Returns (new_params, new_ms, grad_norm).
+    """
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, CLIP_NORM / jnp.maximum(gnorm, 1e-12))
+    new_p = []
+    new_m = []
+    for p, m, g in zip(params, ms, grads):
+        pn, mn = k_rms.rmsprop(p, m, g, lr, RMSPROP_RHO, RMSPROP_EPS, scale)
+        new_p.append(pn)
+        new_m.append(mn)
+    return tuple(new_p), tuple(new_m), gnorm
+
+
+def train_step(arch, params, ms, obs, actions, returns, lr):
+    """One synchronous PAAC update (Algorithm 1 lines 16-18).
+
+    Returns (new_params..., new_ms..., stats[4]) with stats =
+    [policy_loss, value_loss, entropy, pre-clip grad-norm].
+    """
+    grads, (ploss, vloss, entropy) = compute_grads(arch, params, obs, actions, returns)
+    new_p, new_m, gnorm = apply_rmsprop(params, ms, grads, lr)
+    stats = jnp.stack([ploss, vloss, entropy, gnorm])
+    return new_p, new_m, stats
+
+
+def nstep_returns(rewards, dones, bootstrap):
+    """Device-side n-step returns (cross-check for the Rust host variant)."""
+    return k_returns.nstep_returns(rewards, dones, bootstrap, GAMMA)
+
+
+# ---------------------------------------------------------------------------
+# Flat positional wrappers for AOT lowering (aot.py).  HLO artifacts have
+# purely positional parameters; these wrappers pin the order:
+#   params..., [ms...], data inputs..., [lr]
+# ---------------------------------------------------------------------------
+
+def make_init(arch: Arch):
+    def fn(seed):
+        return init_params(arch, seed)
+
+    return fn
+
+
+def make_forward(arch: Arch):
+    n = len(param_specs(arch))
+
+    def fn(*args):
+        params, obs = args[:n], args[n]
+        probs, values = forward(arch, params, obs)
+        return probs, values
+
+    return fn
+
+
+def make_train(arch: Arch):
+    n = len(param_specs(arch))
+
+    def fn(*args):
+        params = args[:n]
+        ms = args[n : 2 * n]
+        obs, actions, returns, lr = args[2 * n : 2 * n + 4]
+        new_p, new_m, stats = train_step(arch, params, ms, obs, actions, returns, lr)
+        return (*new_p, *new_m, stats)
+
+    return fn
+
+
+def make_grads(arch: Arch):
+    n = len(param_specs(arch))
+
+    def fn(*args):
+        params = args[:n]
+        obs, actions, returns = args[n : n + 3]
+        grads, (ploss, vloss, entropy) = compute_grads(
+            arch, params, obs, actions, returns
+        )
+        gnorm = global_norm(grads)
+        stats = jnp.stack([ploss, vloss, entropy, gnorm])
+        return (*grads, stats)
+
+    return fn
+
+
+def make_apply(arch: Arch):
+    n = len(param_specs(arch))
+
+    def fn(*args):
+        params = args[:n]
+        ms = args[n : 2 * n]
+        grads = args[2 * n : 3 * n]
+        lr = args[3 * n]
+        new_p, new_m, _ = apply_rmsprop(params, ms, grads, lr)
+        return (*new_p, *new_m)
+
+    return fn
+
+
+def make_returns():
+    def fn(rewards, dones, bootstrap):
+        return (nstep_returns(rewards, dones, bootstrap),)
+
+    return fn

@@ -1,0 +1,310 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/seeds; assert_allclose against ``kernels/ref.py``.
+This is the core correctness signal for the compute layer: the AOT
+artifacts are lowered from exactly the code under test here.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d, dense, fused_loss, ref, returns, rmsprop
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 6),
+    hw=st.integers(6, 16),
+    ci=st.integers(1, 5),
+    co=st.integers(1, 20),
+    k=st.integers(1, 5),
+    stride=st.integers(1, 4),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_forward_matches_ref(n, hw, ci, co, k, stride, relu, seed):
+    if k > hw:
+        k = hw
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n, hw, hw, ci)
+    w = rand(rng, k, k, ci, co)
+    b = rand(rng, co)
+    got = conv2d.conv2d(x, w, b, stride, relu)
+    want = ref.conv2d(x, w, b, stride, relu)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    hw=st.integers(7, 13),
+    k=st.integers(2, 5),
+    stride=st.integers(1, 3),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_grads_match_ref_autodiff(hw, k, stride, relu, seed):
+    """custom_vjp (dx, dw, db) == jax.grad of the oracle."""
+    rng = np.random.default_rng(seed)
+    n, ci, co = 3, 2, 7
+    x = rand(rng, n, hw, hw, ci)
+    w = rand(rng, k, k, ci, co)
+    b = rand(rng, co)
+    t = rand(rng, *ref.conv2d(x, w, b, stride, relu).shape)
+
+    def f(mod):
+        return lambda x, w, b: jnp.sum((mod.conv2d(x, w, b, stride, relu) - t) ** 2)
+
+    g_kern = jax.grad(f(conv2d), argnums=(0, 1, 2))(x, w, b)
+    g_ref = jax.grad(f(ref), argnums=(0, 1, 2))(x, w, b)
+    for a, c in zip(g_kern, g_ref):
+        np.testing.assert_allclose(a, c, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "n,hw,ci,co,k,s",
+    [
+        (32, 84, 4, 16, 8, 4),   # arch_nips conv1 at n_e=32
+        (4, 20, 16, 32, 4, 2),   # arch_nips conv2
+        (2, 10, 6, 16, 3, 1),    # arch_tiny conv1
+    ],
+)
+def test_conv2d_paper_shapes(n, hw, ci, co, k, s):
+    rng = np.random.default_rng(0)
+    x = rand(rng, n, hw, hw, ci)
+    w = rand(rng, k, k, ci, co, scale=0.1)
+    b = rand(rng, co)
+    np.testing.assert_allclose(
+        conv2d.conv2d(x, w, b, s, True),
+        ref.conv2d(x, w, b, s, True),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 90),
+    n=st.integers(1, 150),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_forward_matches_ref(m, k, n, relu, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+    np.testing.assert_allclose(
+        dense.dense(x, w, b, relu), ref.dense(x, w, b, relu), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(2, 40),
+    k=st.integers(2, 60),
+    n=st.integers(2, 80),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_grads_match_ref_autodiff(m, k, n, relu, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+
+    def f(mod):
+        return lambda x, w, b: jnp.sum(mod.dense(x, w, b, relu) ** 2)
+
+    g_kern = jax.grad(f(dense), argnums=(0, 1, 2))(x, w, b)
+    g_ref = jax.grad(f(ref), argnums=(0, 1, 2))(x, w, b)
+    for a, c in zip(g_kern, g_ref):
+        np.testing.assert_allclose(a, c, rtol=1e-4, atol=1e-4)
+
+
+def test_dense_relu_masks_negative():
+    x = jnp.asarray([[-1.0, 2.0]], jnp.float32)
+    w = jnp.eye(2, dtype=jnp.float32)
+    b = jnp.zeros((2,), jnp.float32)
+    out = dense.dense(x, w, b, True)
+    assert float(out[0, 0]) == 0.0 and float(out[0, 1]) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# fused actor-critic loss
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 200),
+    na=st.integers(2, 18),
+    beta=st.floats(0.0, 0.1),
+    vc=st.floats(0.1, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_loss_forward_matches_ref(b, na, beta, vc, seed):
+    rng = np.random.default_rng(seed)
+    z = rand(rng, b, na, scale=3.0)
+    v = rand(rng, b)
+    a = jnp.asarray(rng.integers(0, na, size=(b,)).astype(np.int32))
+    r = rand(rng, b)
+    tot1, aux1 = fused_loss.actor_critic_loss(z, v, a, r, beta, vc)
+    tot2, aux2 = ref.actor_critic_loss(z, v, a, r, beta, vc)
+    np.testing.assert_allclose(tot1, tot2, rtol=1e-5, atol=1e-5)
+    for p, q in zip(aux1, aux2):
+        np.testing.assert_allclose(p, q, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 80),
+    na=st.integers(2, 12),
+    beta=st.floats(0.0, 0.1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_loss_grads_match_ref_autodiff(b, na, beta, seed):
+    """Analytic bwd kernel == jax.grad of the oracle (logits AND values)."""
+    rng = np.random.default_rng(seed)
+    z = rand(rng, b, na, scale=2.0)
+    v = rand(rng, b)
+    a = jnp.asarray(rng.integers(0, na, size=(b,)).astype(np.int32))
+    r = rand(rng, b)
+
+    def f(mod):
+        return lambda z, v: mod.actor_critic_loss(z, v, a, r, beta, 0.5)[0]
+
+    g1 = jax.grad(f(fused_loss), argnums=(0, 1))(z, v)
+    g2 = jax.grad(f(ref), argnums=(0, 1))(z, v)
+    np.testing.assert_allclose(g1[0], g2[0], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(g1[1], g2[1], rtol=1e-4, atol=1e-5)
+
+
+def test_loss_entropy_is_uniform_log_na():
+    """Uniform policy -> entropy == log(A), zero policy gradient wrt logits
+    modulo the entropy term."""
+    b, na = 16, 6
+    z = jnp.zeros((b, na), jnp.float32)
+    v = jnp.zeros((b,), jnp.float32)
+    a = jnp.zeros((b,), jnp.int32)
+    r = jnp.zeros((b,), jnp.float32)
+    _, (_, _, ent) = fused_loss.actor_critic_loss(z, v, a, r, 0.01, 0.5)
+    np.testing.assert_allclose(ent, np.log(na), rtol=1e-6)
+
+
+def test_loss_advantage_sign_drives_policy_gradient():
+    """Positive advantage must push the taken action's logit up."""
+    b, na = 1, 4
+    z = jnp.zeros((b, na), jnp.float32)
+    v = jnp.zeros((b,), jnp.float32)
+    a = jnp.asarray([2], jnp.int32)
+    r = jnp.asarray([1.0], jnp.float32)  # R - V = +1
+    dz = jax.grad(
+        lambda z: fused_loss.actor_critic_loss(z, v, a, r, 0.0, 0.5)[0]
+    )(z)
+    # Gradient DESCENT direction: -dz must increase logit of action 2.
+    assert float(dz[0, 2]) < 0.0
+    assert all(float(dz[0, j]) > 0.0 for j in range(na) if j != 2)
+
+
+# ---------------------------------------------------------------------------
+# rmsprop
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    size=st.integers(1, 4000),
+    lr=st.floats(1e-5, 0.5),
+    rho=st.floats(0.8, 0.999),
+    scale=st.floats(0.01, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rmsprop_matches_ref(size, lr, rho, scale, seed):
+    rng = np.random.default_rng(seed)
+    p = rand(rng, size)
+    m = jnp.abs(rand(rng, size))
+    g = rand(rng, size)
+    p1, m1 = rmsprop.rmsprop(p, m, g, lr, rho, 0.1, scale)
+    p2, m2 = ref.rmsprop(p, m, g, lr, rho, 0.1, scale)
+    np.testing.assert_allclose(p1, p2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(m1, m2, rtol=1e-5, atol=1e-6)
+
+
+def test_rmsprop_zero_grad_is_identity_on_params():
+    p = jnp.ones((32,), jnp.float32)
+    m = jnp.ones((32,), jnp.float32) * 0.5
+    g = jnp.zeros((32,), jnp.float32)
+    p1, m1 = rmsprop.rmsprop(p, m, g, 0.1, 0.99, 0.1, 1.0)
+    np.testing.assert_allclose(p1, p, rtol=0, atol=0)
+    np.testing.assert_allclose(m1, 0.99 * m, rtol=1e-6)
+
+
+def test_rmsprop_blocked_path_matches_ref():
+    """Exercise the multi-block grid (size > block cap)."""
+    size = 2 ** 19 + 2 ** 18  # 786432 = 3 * 2^18, cap 262144 divides it
+    rng = np.random.default_rng(7)
+    p = rand(rng, size)
+    m = jnp.abs(rand(rng, size))
+    g = rand(rng, size)
+    p1, m1 = rmsprop.rmsprop(p, m, g, 0.01, 0.99, 0.1, 0.5)
+    p2, m2 = ref.rmsprop(p, m, g, 0.01, 0.99, 0.1, 0.5)
+    np.testing.assert_allclose(p1, p2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(m1, m2, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# n-step returns
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    e=st.integers(1, 64),
+    t=st.integers(1, 10),
+    gamma=st.floats(0.5, 0.999),
+    p_done=st.floats(0.0, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_returns_match_ref(e, t, gamma, p_done, seed):
+    rng = np.random.default_rng(seed)
+    r = rand(rng, e, t)
+    d = jnp.asarray((rng.random(size=(e, t)) < p_done).astype(np.float32))
+    boot = rand(rng, e)
+    got = returns.nstep_returns(r, d, boot, gamma)
+    want = ref.nstep_returns(r, d, boot, gamma)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_returns_no_done_is_discounted_sum():
+    """Closed form: R_0 = sum gamma^k r_k + gamma^T * bootstrap."""
+    gamma = 0.9
+    r = jnp.ones((1, 4), jnp.float32)
+    d = jnp.zeros((1, 4), jnp.float32)
+    boot = jnp.asarray([10.0], jnp.float32)
+    got = returns.nstep_returns(r, d, boot, gamma)
+    want0 = sum(gamma**k for k in range(4)) + gamma**4 * 10.0
+    np.testing.assert_allclose(got[0, 0], want0, rtol=1e-6)
+
+
+def test_returns_done_cuts_bootstrap():
+    """A terminal at t stops all credit flowing backward past t."""
+    gamma = 0.99
+    r = jnp.zeros((1, 5), jnp.float32)
+    d = jnp.zeros((1, 5), jnp.float32).at[0, 2].set(1.0)
+    boot = jnp.asarray([100.0], jnp.float32)
+    got = returns.nstep_returns(r, d, boot, gamma)
+    np.testing.assert_allclose(got[0, :3], np.zeros(3), atol=1e-7)
+    np.testing.assert_allclose(got[0, 4], gamma * 100.0, rtol=1e-6)

@@ -1,0 +1,286 @@
+"""L2 correctness: model shapes, init statistics, training dynamics.
+
+These tests run the exact functions that aot.py lowers into the Rust-side
+artifacts, so a green run here certifies the artifact semantics.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _obs(arch, batch, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    h, w, c = arch.obs_shape
+    return jnp.asarray(rng.random(size=(batch, h, w, c)).astype(np.float32) * scale)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return model.init_params(model.ARCHS["tiny"], 42)
+
+
+# ---------------------------------------------------------------------------
+# architecture bookkeeping
+# ---------------------------------------------------------------------------
+
+def test_param_specs_match_paper_shapes_nips():
+    arch = model.ARCHS["nips"]
+    specs = dict(model.param_specs(arch))
+    assert specs["conv1/w"] == (8, 8, 4, 16)
+    assert specs["conv2/w"] == (4, 4, 16, 32)
+    assert specs["fc/w"] == (9 * 9 * 32, 256)
+    assert specs["pi/w"] == (256, 6)
+    assert specs["v/w"] == (256, 1)
+
+
+def test_param_specs_match_paper_shapes_nature():
+    arch = model.ARCHS["nature"]
+    specs = dict(model.param_specs(arch))
+    assert specs["conv1/w"] == (8, 8, 4, 32)
+    assert specs["conv2/w"] == (4, 4, 32, 64)
+    assert specs["conv3/w"] == (3, 3, 64, 64)
+    assert specs["fc/w"] == (7 * 7 * 64, 512)
+
+
+def test_conv_out_shapes():
+    assert model.ARCHS["nips"].conv_out_shape() == (9, 9, 32)
+    assert model.ARCHS["nature"].conv_out_shape() == (7, 7, 64)
+    assert model.ARCHS["tiny"].conv_out_shape() == (8, 8, 16)
+
+
+def test_param_counts_are_plausible():
+    # nature > nips > tiny, and all within expected orders of magnitude
+    counts = {n: model.param_count(a) for n, a in model.ARCHS.items()}
+    assert counts["nature"] > counts["nips"] > counts["tiny"]
+    assert 100_000 < counts["tiny"] < 300_000
+    assert 600_000 < counts["nips"] < 900_000
+    assert 1_500_000 < counts["nature"] < 2_500_000
+
+
+def test_forward_flops_ordering():
+    f = {n: model.forward_flops_per_sample(a) for n, a in model.ARCHS.items()}
+    assert f["nature"] > f["nips"] > f["tiny"]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def test_init_is_seed_deterministic(tiny_params):
+    again = model.init_params(model.ARCHS["tiny"], 42)
+    for a, b in zip(tiny_params, again):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_init_differs_across_seeds(tiny_params):
+    other = model.init_params(model.ARCHS["tiny"], 43)
+    diffs = [float(jnp.max(jnp.abs(a - b))) for a, b in zip(tiny_params, other)]
+    assert max(diffs) > 0.0
+
+
+def test_init_weight_scale_is_he_with_scaled_heads(tiny_params):
+    """Trunk: He-normal std=sqrt(2/fan_in); pi head 100x down, v head 10x
+    down; biases zero (see model.init_params docstring)."""
+    arch = model.ARCHS["tiny"]
+    for (name, shape), p in zip(model.param_specs(arch), tiny_params):
+        if name.endswith("/b"):
+            np.testing.assert_array_equal(p, np.zeros(shape, np.float32))
+            continue
+        want = np.sqrt(2.0 / model._fan_in(shape))
+        if name.startswith("pi/"):
+            want *= 0.01
+        elif name.startswith("v/"):
+            want *= 0.1
+        got = float(jnp.std(p))
+        assert 0.5 * want < got < 1.6 * want, f"{name}: std {got} vs {want}"
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("batch", [1, 4, 32])
+def test_forward_shapes_and_simplex(tiny_params, batch):
+    arch = model.ARCHS["tiny"]
+    probs, values = model.forward(arch, tiny_params, _obs(arch, batch))
+    assert probs.shape == (batch, arch.actions)
+    assert values.shape == (batch,)
+    np.testing.assert_allclose(np.sum(np.asarray(probs), axis=1), 1.0, rtol=1e-5)
+    assert np.all(np.asarray(probs) >= 0.0)
+    assert np.all(np.isfinite(np.asarray(values)))
+
+
+def test_forward_batch_consistency(tiny_params):
+    """Evaluating a batch == evaluating each row alone (the paper's batched
+    master step must not couple environments)."""
+    arch = model.ARCHS["tiny"]
+    obs = _obs(arch, 5, seed=3)
+    probs, values = model.forward(arch, tiny_params, obs)
+    for i in range(5):
+        p1, v1 = model.forward(arch, tiny_params, obs[i : i + 1])
+        np.testing.assert_allclose(p1[0], probs[i], rtol=2e-4, atol=2e-6)
+        np.testing.assert_allclose(v1[0], values[i], rtol=2e-4, atol=2e-6)
+
+
+def test_forward_nips_runs_at_paper_batch():
+    arch = model.ARCHS["nips"]
+    params = model.init_params(arch, 0)
+    probs, values = model.forward(arch, params, _obs(arch, 8))
+    assert probs.shape == (8, 6) and values.shape == (8,)
+    np.testing.assert_allclose(np.sum(np.asarray(probs), axis=1), 1.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# train_step
+# ---------------------------------------------------------------------------
+
+def _fixed_batch(arch, ne=8, t_max=5, seed=0):
+    rng = np.random.default_rng(seed)
+    b = ne * t_max
+    obs = _obs(arch, b, seed=seed)
+    actions = jnp.asarray(rng.integers(0, arch.actions, size=(b,)).astype(np.int32))
+    returns = jnp.asarray(rng.normal(size=(b,)).astype(np.float32))
+    return obs, actions, returns
+
+
+def test_train_step_changes_all_params(tiny_params):
+    arch = model.ARCHS["tiny"]
+    ms = tuple(jnp.zeros_like(p) for p in tiny_params)
+    obs, actions, returns = _fixed_batch(arch)
+    new_p, new_m, stats = model.train_step(
+        arch, tiny_params, ms, obs, actions, returns, jnp.float32(0.01)
+    )
+    assert len(new_p) == len(tiny_params)
+    changed = [float(jnp.max(jnp.abs(a - b))) for a, b in zip(new_p, tiny_params)]
+    assert all(c > 0.0 for c in changed), changed
+    assert np.all(np.isfinite(np.asarray(stats)))
+
+
+def test_train_step_learns_on_fixed_batch(tiny_params):
+    """Minimal end-to-end learning signal for the artifact semantics.
+
+    The *total* A2C loss is not monotone on a fixed batch (as V fits R the
+    advantage shrinks and the negative policy term decays toward zero), so
+    we assert the two signals that must move: the critic regression error
+    falls, and the policy's log-likelihood of positive-advantage actions
+    rises.
+    """
+    arch = model.ARCHS["tiny"]
+    params = tiny_params
+    ms = tuple(jnp.zeros_like(p) for p in params)
+    obs, actions, returns = _fixed_batch(arch, ne=4)
+
+    _, values0 = model.forward(arch, params, obs)
+    mask = np.asarray(returns - values0) > 0  # fixed set of "good" actions
+
+    def diagnostics(ps):
+        probs, values = model.forward(arch, ps, obs)
+        vloss = float(jnp.mean((returns - values) ** 2))
+        pa = np.asarray(probs)[np.arange(len(actions)), np.asarray(actions)]
+        good_logp = float(np.mean(np.log(pa[mask] + 1e-8))) if mask.any() else 0.0
+        return vloss, good_logp
+
+    vloss0, logp0 = diagnostics(params)
+    for _ in range(15):
+        params, ms, _ = model.train_step(
+            arch, params, ms, obs, actions, returns, jnp.float32(0.003)
+        )
+    vloss1, logp1 = diagnostics(params)
+    assert vloss1 < vloss0, (vloss0, vloss1)
+    if mask.any():
+        assert logp1 > logp0, (logp0, logp1)
+
+
+def test_train_step_lr_zero_is_identity(tiny_params):
+    arch = model.ARCHS["tiny"]
+    ms = tuple(jnp.zeros_like(p) for p in tiny_params)
+    obs, actions, returns = _fixed_batch(arch)
+    new_p, _, _ = model.train_step(
+        arch, tiny_params, ms, obs, actions, returns, jnp.float32(0.0)
+    )
+    for a, b in zip(new_p, tiny_params):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_grads_match_apply_composition(tiny_params):
+    """grads + apply (the A3C split) == train_step (the PAAC fused path)."""
+    arch = model.ARCHS["tiny"]
+    ms = tuple(jnp.abs(jnp.ones_like(p) * 0.01) for p in tiny_params)
+    obs, actions, returns = _fixed_batch(arch, ne=1, t_max=5)
+    lr = jnp.float32(0.007)
+
+    fused_p, fused_m, _ = model.train_step(
+        arch, tiny_params, ms, obs, actions, returns, lr
+    )
+    grads, _ = model.compute_grads(arch, tiny_params, obs, actions, returns)
+    split_p, split_m, _ = model.apply_rmsprop(tiny_params, ms, grads, lr)
+    for a, b in zip(fused_p, split_p):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-7)
+    for a, b in zip(fused_m, split_m):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-7)
+
+
+def test_gradient_clipping_engages_on_huge_returns(tiny_params):
+    """Returns far outside the value range force a grad-norm above 40 and
+    the clip scale must kick in (paper: clipping threshold 40)."""
+    arch = model.ARCHS["tiny"]
+    rng = np.random.default_rng(0)
+    b = 40
+    obs = _obs(arch, b)
+    actions = jnp.asarray(rng.integers(0, 6, size=(b,)).astype(np.int32))
+    returns = jnp.asarray(np.full((b,), 1e4, np.float32))
+    grads, _ = model.compute_grads(arch, tiny_params, obs, actions, returns)
+    gnorm = float(model.global_norm(grads))
+    assert gnorm > model.CLIP_NORM
+    # post-clip effective norm == CLIP_NORM
+    scale = min(1.0, model.CLIP_NORM / gnorm)
+    assert scale < 1.0
+
+
+def test_device_returns_match_host_oracle():
+    rng = np.random.default_rng(1)
+    r = jnp.asarray(rng.normal(size=(16, 5)).astype(np.float32))
+    d = jnp.asarray((rng.random(size=(16, 5)) < 0.2).astype(np.float32))
+    boot = jnp.asarray(rng.normal(size=(16,)).astype(np.float32))
+    got = model.nstep_returns(r, d, boot)
+    want = ref.nstep_returns(r, d, boot, model.GAMMA)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flat wrappers (the exact functions aot.py lowers)
+# ---------------------------------------------------------------------------
+
+def test_make_forward_flat_io(tiny_params):
+    arch = model.ARCHS["tiny"]
+    fn = model.make_forward(arch)
+    probs, values = fn(*tiny_params, _obs(arch, 3))
+    assert probs.shape == (3, 6) and values.shape == (3,)
+
+
+def test_make_train_flat_io(tiny_params):
+    arch = model.ARCHS["tiny"]
+    n = len(tiny_params)
+    ms = tuple(jnp.zeros_like(p) for p in tiny_params)
+    obs, actions, returns = _fixed_batch(arch, ne=2)
+    out = model.make_train(arch)(
+        *tiny_params, *ms, obs, actions, returns, jnp.float32(0.01)
+    )
+    assert len(out) == 2 * n + 1
+    assert out[-1].shape == (4,)
+
+
+def test_make_init_flat_io():
+    arch = model.ARCHS["tiny"]
+    out = model.make_init(arch)(jnp.int32(7))
+    assert len(out) == len(model.param_specs(arch))
+    ref_params = model.init_params(arch, 7)
+    for a, b in zip(out, ref_params):
+        np.testing.assert_array_equal(a, b)

@@ -1,0 +1,86 @@
+//! Figure 2 regeneration: time usage in Pong for different n_e.
+//!
+//! The paper plots, per n_e, how the training cycle splits between
+//! environment interaction and action-selection/learning for arch_nips
+//! and arch_nature on GPU and CPU. Our testbed has one backend (XLA-CPU),
+//! so the model-size comparison (nips vs nature via --atari rows at
+//! n_e = 16/32) carries the figure's second axis; the grid-mode rows
+//! sweep the full n_e range.
+//!
+//! Run: cargo bench --bench fig2_time_usage
+//! Env: PAAC_BENCH_FAST=1 shortens; PAAC_FIG2_ATARI=1 adds the (slow)
+//!      84x84x4 arch_nips/arch_nature rows.
+
+use std::sync::Arc;
+
+use paac::benchkit::Table;
+use paac::config::Config;
+use paac::coordinator::master::Trainer;
+use paac::envs::GameId;
+use paac::runtime::Runtime;
+use paac::util::timer::Phase;
+
+fn main() {
+    let fast = std::env::var("PAAC_BENCH_FAST").ok().as_deref() == Some("1");
+    let with_atari = std::env::var("PAAC_FIG2_ATARI").ok().as_deref() == Some("1");
+    let updates: u64 = if fast { 30 } else { 120 };
+    let rt = Arc::new(Runtime::new("artifacts").expect("run `make artifacts` first"));
+
+    let mut table = Table::new(&[
+        "arch",
+        "obs",
+        "n_e",
+        "env %",
+        "action-select %",
+        "learn %",
+        "other %",
+        "timesteps/s",
+    ]);
+
+    let mut cases: Vec<(&str, bool, usize)> = vec![
+        ("tiny", false, 16),
+        ("tiny", false, 32),
+        ("tiny", false, 64),
+        ("tiny", false, 128),
+        ("tiny", false, 256),
+    ];
+    if with_atari {
+        cases.extend([("nips", true, 16), ("nips", true, 32), ("nature", true, 16)]);
+    }
+
+    for (arch, atari, ne) in cases {
+        let mut cfg = Config::preset_paper(GameId::Pong);
+        cfg.arch = arch.to_string();
+        cfg.atari_mode = atari;
+        cfg.n_e = ne;
+        cfg.n_w = cfg.n_w.min(ne);
+        let mut trainer = Trainer::with_runtime(cfg, rt.clone()).unwrap();
+        let n = if atari { updates.min(8) } else { updates };
+        eprintln!("fig2: arch={arch} atari={atari} n_e={ne} ({n} updates)");
+        let (fractions, tps) = trainer.measure_phases(n).unwrap();
+        let get = |p: Phase| {
+            fractions.iter().find(|(q, _)| *q == p).map(|(_, f)| *f).unwrap_or(0.0)
+        };
+        table.row(vec![
+            arch.to_string(),
+            if atari { "84x84x4".into() } else { "10x10x6".to_string() },
+            ne.to_string(),
+            format!("{:.1}", get(Phase::EnvStep) * 100.0),
+            format!("{:.1}", get(Phase::ActionSelect) * 100.0),
+            format!("{:.1}", get(Phase::Learn) * 100.0),
+            format!(
+                "{:.1}",
+                (get(Phase::Batching) + get(Phase::Returns) + get(Phase::Other)) * 100.0
+            ),
+            format!("{:.0}", tps),
+        ]);
+    }
+
+    println!("\n## Figure 2: time usage in Pong vs n_e\n");
+    println!("{}", table.render());
+    println!(
+        "paper reference (arch_nips, GPU, n_e=32): ~50% environment, ~37% \
+         learning+action selection; nature vs nips costs 22% (GPU) / 41% (CPU) \
+         of throughput."
+    );
+}

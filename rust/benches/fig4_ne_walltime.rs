@@ -1,0 +1,73 @@
+//! Figure 4 regeneration: training time and score vs n_e.
+//!
+//! The paper's companion to Figure 3: the same sweep plotted against
+//! wall-clock, showing that larger n_e reaches any given timestep count
+//! significantly faster (better device utilization per batched call).
+//! We report wall-clock to a fixed timestep budget, throughput, and the
+//! final score per n_e.
+//!
+//! Run: cargo bench --bench fig4_ne_walltime
+//! Env: PAAC_BENCH_FAST=1, PAAC_FIG4_GAME=<game>
+
+use std::sync::Arc;
+
+use paac::benchkit::Table;
+use paac::config::Config;
+use paac::coordinator::master::Trainer;
+use paac::envs::GameId;
+use paac::runtime::Runtime;
+
+fn main() {
+    let fast = std::env::var("PAAC_BENCH_FAST").ok().as_deref() == Some("1");
+    let game = GameId::parse(
+        &std::env::var("PAAC_FIG4_GAME").unwrap_or_else(|_| "catch".into()),
+    )
+    .expect("bad PAAC_FIG4_GAME");
+    let budget: u64 = if fast { 30_000 } else { 100_000 };
+    let ne_list: &[usize] = if fast { &[16, 64] } else { &[16, 32, 64, 128, 256] };
+    let rt = Arc::new(Runtime::new("artifacts").expect("run `make artifacts` first"));
+
+    let mut table = Table::new(&[
+        "n_e",
+        "lr",
+        "wall s to budget",
+        "timesteps/s",
+        "speedup vs n_e=16",
+        "final score (EMA)",
+        "diverged",
+    ]);
+
+    let mut base_tps = 0.0f64;
+    for &ne in ne_list {
+        let mut cfg = Config::preset_sweep(game, ne);
+        cfg.max_timesteps = budget;
+        cfg.eval_episodes = 0;
+        cfg.run_name = format!("fig4_{}_ne{}", game.name(), ne);
+        eprintln!("fig4: n_e={ne} ({budget} steps)");
+        let mut trainer = Trainer::with_runtime(cfg.clone(), rt.clone()).unwrap();
+        let r = trainer.run_paac(true).unwrap();
+        if base_tps == 0.0 {
+            base_tps = r.timesteps_per_sec;
+        }
+        table.row(vec![
+            ne.to_string(),
+            format!("{:.4}", cfg.lr),
+            format!("{:.1}", r.wall_secs),
+            format!("{:.0}", r.timesteps_per_sec),
+            format!("{:.2}x", r.timesteps_per_sec / base_tps),
+            r.final_score.map(|s| format!("{s:.2}")).unwrap_or_else(|| "-".into()),
+            if r.diverged { "YES".into() } else { "no".into() },
+        ]);
+    }
+
+    println!(
+        "\n## Figure 4: wall-clock to {}k timesteps on {} vs n_e\n",
+        budget / 1000,
+        game.name()
+    );
+    println!("{}", table.render());
+    println!(
+        "paper's shape: higher n_e reaches a fixed timestep count faster \
+         (batched policy evaluation amortizes per-call overhead)."
+    );
+}

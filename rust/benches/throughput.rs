@@ -1,0 +1,120 @@
+//! Component throughput microbenches (§5.2's supporting numbers).
+//!
+//! Measures each stage of the PAAC cycle in isolation:
+//!   * raw game step rate per game
+//!   * vectorized env step at several (n_e, n_w)
+//!   * the Atari preprocessing pipeline
+//!   * batched forward (the paper's core claim: one batched device call
+//!     amortizes dispatch overhead vs per-env calls)
+//!   * the synchronous train step
+//!
+//! Run: cargo bench --bench throughput   (PAAC_BENCH_FAST=1 to shorten)
+
+use std::sync::Arc;
+
+use paac::benchkit::Bench;
+use paac::envs::{preprocess::AtariPipeline, Env, GameId, ObsMode, VecEnv};
+use paac::model::PolicyModel;
+use paac::runtime::Runtime;
+use paac::util::rng::Pcg32;
+
+fn main() {
+    let mut b = Bench::from_env();
+    let rt = Arc::new(Runtime::new("artifacts").expect("run `make artifacts` first"));
+
+    // ---- raw game stepping ----
+    for game in GameId::ALL {
+        let mut env = Env::new(game, ObsMode::Grid, 1, 0, 10);
+        let mut rng = Pcg32::new(1, 1);
+        b.run(&format!("env-step/{}", game.name()), 1.0, || {
+            env.step(rng.below(6) as usize);
+        });
+    }
+
+    // ---- vectorized stepping ----
+    for (ne, nw) in [(16usize, 1usize), (16, 4), (32, 8), (64, 8), (256, 8)] {
+        let mut venv = VecEnv::new(GameId::Pong, ObsMode::Grid, ne, nw, 1, 10);
+        let mut rng = Pcg32::new(2, 2);
+        let mut actions = vec![0usize; ne];
+        b.run(&format!("vecenv-step/ne{ne}-nw{nw}"), ne as f64, || {
+            for a in actions.iter_mut() {
+                *a = rng.below(6) as usize;
+            }
+            venv.step(&actions);
+        });
+    }
+
+    // ---- Atari preprocessing pipeline (one agent step = 4 frames) ----
+    {
+        let mut game = GameId::Pong.build();
+        let mut rng = Pcg32::new(3, 3);
+        game.reset(&mut rng);
+        let mut pipe = AtariPipeline::new();
+        let mut obs = vec![0.0f32; 84 * 84 * 4];
+        b.run("atari-pipeline/step+obs", 1.0, || {
+            let info = pipe.step(game.as_mut(), 0, &mut rng);
+            pipe.write_obs(&mut obs);
+            if info.done {
+                game.reset(&mut rng);
+                pipe.reset();
+            }
+        });
+    }
+
+    // ---- batched forward vs per-env forward (the batching claim) ----
+    {
+        let mut rng = Pcg32::new(4, 4);
+        for ne in [16usize, 32, 64, 256] {
+            let model = PolicyModel::new(rt.clone(), "tiny", ne, 1).unwrap();
+            let obs: Vec<f32> = (0..ne * 600).map(|_| rng.next_f32()).collect();
+            b.run(&format!("forward-batched/ne{ne}"), ne as f64, || {
+                model.forward(&obs).unwrap();
+            });
+        }
+        // per-env loop at n_e = 32 for the amortization ratio
+        let model = PolicyModel::new(rt.clone(), "tiny", 32, 1).unwrap();
+        let obs: Vec<f32> = (0..32 * 600).map(|_| rng.next_f32()).collect();
+        b.run("forward-per-env-loop/ne32", 32.0, || {
+            for e in 0..32 {
+                model.forward1(&obs[e * 600..(e + 1) * 600]).unwrap();
+            }
+        });
+    }
+
+    // ---- synchronous train step ----
+    {
+        let mut rng = Pcg32::new(5, 5);
+        for ne in [16usize, 32, 64] {
+            let mut model = PolicyModel::new(rt.clone(), "tiny", ne, 1).unwrap();
+            let bsz = ne * 5;
+            let obs: Vec<f32> = (0..bsz * 600).map(|_| rng.next_f32()).collect();
+            let actions: Vec<i32> = (0..bsz).map(|_| rng.below(6) as i32).collect();
+            let returns: Vec<f32> = (0..bsz).map(|_| rng.next_f32()).collect();
+            b.run(&format!("train-step/ne{ne}"), bsz as f64, || {
+                model.train_step(&obs, &actions, &returns, 0.001).unwrap();
+            });
+        }
+    }
+
+    println!("{}", b.report("throughput components"));
+
+    // derived ratio for the batching claim
+    let results = b.results();
+    let batched = results
+        .iter()
+        .find(|s| s.name == "forward-batched/ne32")
+        .map(|s| s.throughput());
+    let per_env = results
+        .iter()
+        .find(|s| s.name == "forward-per-env-loop/ne32")
+        .map(|s| s.throughput());
+    if let (Some(bt), Some(pe)) = (batched, per_env) {
+        println!(
+            "batched-forward speedup at n_e=32: {:.1}x ({:.0} vs {:.0} evals/s) — \
+             the paper's core batching claim",
+            bt / pe,
+            bt,
+            pe
+        );
+    }
+}

@@ -1,0 +1,161 @@
+//! Evaluation protocol — Table 1's caption, reproduced exactly:
+//!
+//! "Scores are measured from the best performing actor out of three, and
+//!  averaged over 30 runs with up to 30 no-op actions start condition."
+//!
+//! Three independent actor streams each play `episodes` episodes by
+//! sampling the trained policy; each actor's score is its mean episode
+//! return; the reported score is the best of the three.
+
+use crate::envs::{Env, GameId, ObsMode};
+use crate::error::Result;
+use crate::model::PolicyModel;
+use crate::util::math;
+use crate::util::rng::Pcg32;
+
+/// Evaluation configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalProtocol {
+    /// Independent actors (paper: 3).
+    pub actors: usize,
+    /// Episodes per actor (paper: 30).
+    pub episodes: usize,
+    /// Max no-op actions at episode start (paper: 30).
+    pub noop_max: u32,
+    /// Safety cap per episode (steps).
+    pub max_steps: u64,
+}
+
+impl Default for EvalProtocol {
+    fn default() -> Self {
+        EvalProtocol { actors: 3, episodes: 30, noop_max: 30, max_steps: 5_000 }
+    }
+}
+
+impl EvalProtocol {
+    /// A shortened protocol for smoke tests and fast benches.
+    pub fn quick() -> Self {
+        EvalProtocol { actors: 2, episodes: 5, noop_max: 30, max_steps: 2_000 }
+    }
+}
+
+/// Evaluation outcome.
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    /// Mean episode return per actor.
+    pub per_actor: Vec<f32>,
+    /// Best actor's mean (the paper's reported score).
+    pub best: f32,
+    /// Mean over all actors (secondary diagnostic).
+    pub mean: f32,
+    pub episodes_played: usize,
+}
+
+/// Run the protocol for a trained model on a game.
+pub fn evaluate(
+    model: &PolicyModel,
+    game: GameId,
+    mode: ObsMode,
+    proto: &EvalProtocol,
+    seed: u64,
+) -> Result<EvalReport> {
+    let mut per_actor = Vec::with_capacity(proto.actors);
+    let mut episodes_played = 0;
+    for actor in 0..proto.actors {
+        let mut env = Env::new(game, mode, seed ^ 0xEEA1, 1000 + actor as u64, proto.noop_max);
+        let mut rng = Pcg32::new(seed.wrapping_add(17 * actor as u64 + 1), 0xE7A1);
+        let mut scores = Vec::with_capacity(proto.episodes);
+        for _ in 0..proto.episodes {
+            let mut total = 0.0f32;
+            let mut steps = 0u64;
+            loop {
+                let fwd = model.forward1(env.obs())?;
+                let a = rng.categorical(&fwd.probs);
+                let info = env.step(a);
+                total += info.reward;
+                steps += 1;
+                if info.done || steps >= proto.max_steps {
+                    break;
+                }
+            }
+            scores.push(total);
+            episodes_played += 1;
+        }
+        per_actor.push(math::mean(&scores));
+    }
+    let best = per_actor.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mean = math::mean(&per_actor);
+    Ok(EvalReport { per_actor, best, mean, episodes_played })
+}
+
+/// Random-policy baseline score (Table 1's implicit "Random" column):
+/// same protocol, uniform action selection, no model involved.
+pub fn random_baseline(game: GameId, proto: &EvalProtocol, seed: u64) -> EvalReport {
+    let mut per_actor = Vec::with_capacity(proto.actors);
+    let mut episodes_played = 0;
+    for actor in 0..proto.actors {
+        let mut env = Env::new(game, ObsMode::Grid, seed ^ 0xBA5E, 2000 + actor as u64, proto.noop_max);
+        let mut rng = Pcg32::new(seed.wrapping_add(31 * actor as u64 + 7), 0xBA5E);
+        let mut scores = Vec::with_capacity(proto.episodes);
+        for _ in 0..proto.episodes {
+            let mut total = 0.0f32;
+            let mut steps = 0u64;
+            loop {
+                let a = rng.below(crate::envs::ACTIONS as u32) as usize;
+                let info = env.step(a);
+                total += info.reward;
+                steps += 1;
+                if info.done || steps >= proto.max_steps {
+                    break;
+                }
+            }
+            scores.push(total);
+            episodes_played += 1;
+        }
+        per_actor.push(math::mean(&scores));
+    }
+    let best = per_actor.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mean = math::mean(&per_actor);
+    EvalReport { per_actor, best, mean, episodes_played }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_protocol_matches_paper_caption() {
+        let p = EvalProtocol::default();
+        assert_eq!(p.actors, 3);
+        assert_eq!(p.episodes, 30);
+        assert_eq!(p.noop_max, 30);
+    }
+
+    #[test]
+    fn random_baseline_runs_all_games() {
+        let proto = EvalProtocol { actors: 2, episodes: 3, noop_max: 10, max_steps: 400 };
+        for game in GameId::ALL {
+            let r = random_baseline(game, &proto, 11);
+            assert_eq!(r.per_actor.len(), 2);
+            assert_eq!(r.episodes_played, 6);
+            assert!(r.best >= r.mean, "{}: best < mean", game.name());
+            assert!(r.best.is_finite());
+        }
+    }
+
+    #[test]
+    fn random_baseline_is_reproducible() {
+        let proto = EvalProtocol::quick();
+        let a = random_baseline(GameId::Catch, &proto, 5);
+        let b = random_baseline(GameId::Catch, &proto, 5);
+        assert_eq!(a.per_actor, b.per_actor);
+    }
+
+    #[test]
+    fn random_catch_is_negative() {
+        // random play on Catch misses most drops: strongly negative score
+        let proto = EvalProtocol { actors: 3, episodes: 10, noop_max: 5, max_steps: 2_000 };
+        let r = random_baseline(GameId::Catch, &proto, 3);
+        assert!(r.mean < 0.0, "random catch mean {}", r.mean);
+    }
+}

@@ -1,0 +1,163 @@
+//! PAAC — Algorithm 1 of the paper, the system's core loop.
+//!
+//! ```text
+//! repeat
+//!   for t = 1 .. t_max:
+//!     sample a_t ~ pi(.|s_t; theta)        (ONE batched device call)
+//!     workers apply a_t to their envs      (n_w parallel workers)
+//!   R_{t_max} = V(s_{t_max})               (bootstrap, masked on done)
+//!   R_t = r_t + gamma R_{t+1}
+//!   synchronous update of the single theta (ONE batched device call)
+//! until N >= N_max
+//! ```
+//!
+//! There is exactly one copy of the parameters; updates are synchronous,
+//! so there are no stale gradients and no HOGWILD write races — the two
+//! failure modes of the A3C/GA3C baselines this repo also implements.
+//! Every phase is charged to a [`Phase`] bucket for the Figure-2 analysis.
+
+use crate::envs::VecEnv;
+use crate::error::Result;
+use crate::model::{PolicyModel, TrainStats};
+use crate::util::rng::Pcg32;
+use crate::util::timer::{Phase, PhaseTimer};
+
+use super::rollout::RolloutBuffer;
+
+/// Outcome of one update cycle (t_max timesteps on all n_e envs).
+#[derive(Clone, Debug)]
+pub struct CycleOut {
+    pub stats: TrainStats,
+    /// Timesteps consumed this cycle = n_e * t_max.
+    pub timesteps: u64,
+    /// Episode returns that completed during the cycle.
+    pub finished_returns: Vec<f32>,
+}
+
+/// The synchronous parallel advantage actor-critic driver.
+pub struct Paac {
+    pub model: PolicyModel,
+    pub venv: VecEnv,
+    rollout: RolloutBuffer,
+    rng: Pcg32,
+    gamma: f32,
+    actions_buf: Vec<usize>,
+    bootstrap_buf: Vec<f32>,
+    pub timer: PhaseTimer,
+}
+
+impl Paac {
+    pub fn new(model: PolicyModel, venv: VecEnv, gamma: f32, seed: u64) -> Paac {
+        let n_e = venv.n_e();
+        assert_eq!(n_e, model.n_e(), "model batch != venv n_e");
+        let t_max = model.t_max();
+        let obs_len = venv.obs_len();
+        Paac {
+            model,
+            venv,
+            rollout: RolloutBuffer::new(n_e, t_max, obs_len),
+            rng: Pcg32::new(seed, 0xAC7),
+            gamma,
+            actions_buf: vec![0; n_e],
+            bootstrap_buf: vec![0.0; n_e],
+            timer: PhaseTimer::new(),
+        }
+    }
+
+    pub fn n_e(&self) -> usize {
+        self.venv.n_e()
+    }
+
+    pub fn t_max(&self) -> usize {
+        self.model.t_max()
+    }
+
+    /// Run one full cycle: t_max rollout steps + one synchronous update.
+    pub fn cycle(&mut self, lr: f32) -> Result<CycleOut> {
+        let n_e = self.venv.n_e();
+        let t_max = self.model.t_max();
+        self.rollout.clear();
+
+        for _ in 0..t_max {
+            // --- batched action selection (Algorithm 1, lines 5-6) ---
+            let fwd = {
+                let venv = &self.venv;
+                let model = &self.model;
+                self.timer
+                    .time(Phase::ActionSelect, || model.forward(venv.obs_batch()))?
+            };
+            for e in 0..n_e {
+                self.actions_buf[e] = self.rng.categorical(fwd.probs_of(e));
+            }
+
+            // --- record s_t, a_t before stepping ---
+            // (buffer assembly charged to Batching)
+            let obs_snapshot: &[f32] = self.venv.obs_batch();
+            // we must push obs BEFORE the step mutates them; rewards/dones
+            // arrive after the step, so stage the push afterwards with the
+            // saved obs. Copy cost is charged to Batching.
+            let t0 = std::time::Instant::now();
+            let obs_copy: Vec<f32> = obs_snapshot.to_vec();
+            self.timer.add(Phase::Batching, t0.elapsed());
+
+            // --- parallel env step (lines 7-10) ---
+            {
+                let actions = &self.actions_buf;
+                let venv = &mut self.venv;
+                self.timer.time(Phase::EnvStep, || venv.step(actions));
+            }
+
+            let t1 = std::time::Instant::now();
+            self.rollout.push_step(
+                &obs_copy,
+                &self.actions_buf,
+                self.venv.rewards(),
+                self.venv.dones(),
+            );
+            self.timer.add(Phase::Batching, t1.elapsed());
+        }
+
+        // --- bootstrap V(s_{t_max}) (lines 11-12) ---
+        let fwd = {
+            let venv = &self.venv;
+            let model = &self.model;
+            self.timer
+                .time(Phase::ActionSelect, || model.forward(venv.obs_batch()))?
+        };
+        self.bootstrap_buf.copy_from_slice(&fwd.values);
+
+        // --- n-step returns (lines 13-15) ---
+        {
+            let rollout = &mut self.rollout;
+            let bootstrap = &self.bootstrap_buf;
+            let gamma = self.gamma;
+            self.timer.time(Phase::Returns, || rollout.finish(bootstrap, gamma));
+        }
+
+        // --- synchronous update (lines 16-18) ---
+        let stats = {
+            let rollout = &self.rollout;
+            let model = &mut self.model;
+            self.timer.time(Phase::Learn, || {
+                model.train_step(rollout.obs(), rollout.actions(), rollout.returns(), lr)
+            })?
+        };
+
+        Ok(CycleOut {
+            stats,
+            timesteps: (n_e * t_max) as u64,
+            finished_returns: self.venv.take_finished_returns(),
+        })
+    }
+
+    /// Mean policy entropy from a fresh forward pass (diagnostics).
+    pub fn current_entropy(&self) -> Result<f32> {
+        let fwd = self.model.forward(self.venv.obs_batch())?;
+        let n = self.venv.n_e();
+        let mut acc = 0.0;
+        for e in 0..n {
+            acc += crate::util::math::entropy(fwd.probs_of(e));
+        }
+        Ok(acc / n as f32)
+    }
+}

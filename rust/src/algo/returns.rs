@@ -1,0 +1,161 @@
+//! n-step return computation — Algorithm 1, lines 11-15 (host variant).
+//!
+//! ```text
+//! R_{t_max} = 0           for terminal  s_{t_max}
+//!             V(s_{t_max}) otherwise
+//! R_t = r_t + gamma * R_{t+1}
+//! ```
+//!
+//! Generalized to mid-rollout terminals exactly like the reference A2C
+//! formulation: a `done` at step t cuts the recursion (the auto-reset
+//! starts a new episode inside the same rollout), implemented as
+//! `R_t = r_t + gamma * R_{t+1} * (1 - done_t)`.
+//!
+//! The device-side Pallas variant (`python/compile/kernels/returns.py`)
+//! computes the identical recursion; the integration suite cross-checks
+//! the two.
+
+/// Compute n-step returns for one environment's rollout slice, writing
+/// into `out[0..t_max]`.
+///
+/// * `rewards[t]` = r_{t+1} observed after acting in s_t
+/// * `dones[t]`   = whether s_{t+1} was terminal
+/// * `bootstrap`  = V(s_{t_max}) from the current critic
+pub fn nstep_returns_into(
+    rewards: &[f32],
+    dones: &[bool],
+    bootstrap: f32,
+    gamma: f32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(rewards.len(), dones.len());
+    debug_assert_eq!(rewards.len(), out.len());
+    let mut acc = bootstrap;
+    for t in (0..rewards.len()).rev() {
+        let mask = if dones[t] { 0.0 } else { 1.0 };
+        acc = rewards[t] + gamma * acc * mask;
+        out[t] = acc;
+    }
+}
+
+/// Batched form over an env-major (n_e, t_max) layout, matching the
+/// train artifact's flat batch ordering (index = e * t_max + t).
+pub fn batch_returns(
+    rewards: &[f32],
+    dones: &[bool],
+    bootstrap: &[f32],
+    n_e: usize,
+    t_max: usize,
+    gamma: f32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(rewards.len(), n_e * t_max);
+    debug_assert_eq!(bootstrap.len(), n_e);
+    debug_assert_eq!(out.len(), n_e * t_max);
+    for e in 0..n_e {
+        let lo = e * t_max;
+        let hi = lo + t_max;
+        nstep_returns_into(
+            &rewards[lo..hi],
+            &dones[lo..hi],
+            bootstrap[e],
+            gamma,
+            &mut out[lo..hi],
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn no_terminal_matches_closed_form() {
+        // R_0 = sum_k gamma^k r_k + gamma^T * bootstrap
+        let gamma = 0.9f32;
+        let rewards = [1.0, 2.0, 3.0, 4.0];
+        let dones = [false; 4];
+        let mut out = [0.0; 4];
+        nstep_returns_into(&rewards, &dones, 10.0, gamma, &mut out);
+        let want0 = 1.0 + 0.9 * 2.0 + 0.81 * 3.0 + 0.729 * 4.0 + 0.6561 * 10.0;
+        assert!((out[0] - want0).abs() < 1e-4, "{} vs {want0}", out[0]);
+        let want3 = 4.0 + 0.9 * 10.0;
+        assert!((out[3] - want3).abs() < 1e-5);
+    }
+
+    #[test]
+    fn terminal_cuts_bootstrap_flow() {
+        let gamma = 0.99f32;
+        let rewards = [0.0, 0.0, 1.0, 0.0, 0.0];
+        let dones = [false, false, true, false, false];
+        let mut out = [0.0; 5];
+        nstep_returns_into(&rewards, &dones, 100.0, gamma, &mut out);
+        // before the terminal: only the +1 at t=2 flows back
+        assert!((out[0] - gamma * gamma).abs() < 1e-5);
+        assert!((out[2] - 1.0).abs() < 1e-6);
+        // after the terminal: bootstrap flows normally
+        assert!((out[4] - gamma * 100.0).abs() < 1e-4);
+        assert!((out[3] - gamma * gamma * 100.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn all_terminal_returns_are_pure_rewards() {
+        let rewards = [1.0, -2.0, 3.0];
+        let dones = [true, true, true];
+        let mut out = [0.0; 3];
+        nstep_returns_into(&rewards, &dones, 55.0, 0.99, &mut out);
+        assert_eq!(out, rewards);
+    }
+
+    #[test]
+    fn property_recursion_equals_forward_simulation() {
+        prop::check("returns-vs-forward-sim", 200, |g| {
+            let t_max = g.usize_in(1, 12);
+            let gamma = g.f32_in(0.5, 0.999);
+            let bootstrap = g.f32_in(-5.0, 5.0);
+            let rewards: Vec<f32> = g.vec_f32(t_max, -2.0, 2.0);
+            let dones: Vec<bool> = (0..t_max).map(|_| g.bool_with(0.3)).collect();
+            let mut got = vec![0.0; t_max];
+            nstep_returns_into(&rewards, &dones, bootstrap, gamma, &mut got);
+            // forward simulation: for each t, roll forward until done/end
+            for t in 0..t_max {
+                let mut want = 0.0;
+                let mut disc = 1.0;
+                let mut cut = false;
+                for k in t..t_max {
+                    want += disc * rewards[k];
+                    if dones[k] {
+                        cut = true;
+                        break;
+                    }
+                    disc *= gamma;
+                }
+                if !cut {
+                    // no terminal reached: disc is now gamma^(t_max - t)
+                    want += disc * bootstrap;
+                }
+                if (got[t] - want).abs() > 1e-3 * want.abs().max(1.0) {
+                    return Err(format!("t={t}: {} vs {}", got[t], want));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_layout_is_env_major() {
+        let n_e = 2;
+        let t_max = 3;
+        let rewards = [1.0, 0.0, 0.0, /* env1 */ 0.0, 0.0, 2.0];
+        let dones = [false; 6];
+        let bootstrap = [0.0, 1.0];
+        let mut out = [0.0; 6];
+        batch_returns(&rewards, &dones, &bootstrap, n_e, t_max, 0.5, &mut out);
+        // env0: R_0 = 1.0, env1: R_2 = 2 + 0.5*1
+        assert!((out[0] - 1.0).abs() < 1e-6);
+        assert!((out[5] - 2.5).abs() < 1e-6);
+        // env boundaries don't leak
+        assert!((out[2] - 0.0).abs() < 1e-6);
+    }
+}

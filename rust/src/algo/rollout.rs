@@ -1,0 +1,209 @@
+//! Experience batching: assembles the n_e x t_max rollout into the flat
+//! batch layout the train artifact expects (index = e * t_max + t).
+//!
+//! This is the "store the observed experiences" half of Figure 1: the
+//! master pushes one (s_t, a_t, r_{t+1}, done) slice per timestep; after
+//! t_max pushes the buffer exposes contiguous obs/action/return tensors.
+
+use super::returns::batch_returns;
+
+/// Pre-allocated rollout storage for one update cycle.
+pub struct RolloutBuffer {
+    n_e: usize,
+    t_max: usize,
+    obs_len: usize,
+    /// (n_e * t_max, obs_len), index (e * t_max + t)
+    obs: Vec<f32>,
+    actions: Vec<i32>,
+    rewards: Vec<f32>,
+    dones: Vec<bool>,
+    returns: Vec<f32>,
+    t: usize,
+}
+
+impl RolloutBuffer {
+    pub fn new(n_e: usize, t_max: usize, obs_len: usize) -> Self {
+        let b = n_e * t_max;
+        RolloutBuffer {
+            n_e,
+            t_max,
+            obs_len,
+            obs: vec![0.0; b * obs_len],
+            actions: vec![0; b],
+            rewards: vec![0.0; b],
+            dones: vec![false; b],
+            returns: vec![0.0; b],
+            t: 0,
+        }
+    }
+
+    pub fn t(&self) -> usize {
+        self.t
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.t == self.t_max
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.n_e * self.t_max
+    }
+
+    /// Begin a new rollout (keeps allocations).
+    pub fn clear(&mut self) {
+        self.t = 0;
+    }
+
+    /// Record timestep `t` for all environments: the observations the
+    /// policy saw, the sampled actions, and the resulting rewards/dones.
+    ///
+    /// `obs_batch` is env-major (n_e, obs_len) as produced by `VecEnv`.
+    pub fn push_step(
+        &mut self,
+        obs_batch: &[f32],
+        actions: &[usize],
+        rewards: &[f32],
+        dones: &[bool],
+    ) {
+        assert!(self.t < self.t_max, "rollout already full");
+        debug_assert_eq!(obs_batch.len(), self.n_e * self.obs_len);
+        debug_assert_eq!(actions.len(), self.n_e);
+        let t = self.t;
+        for e in 0..self.n_e {
+            let flat = e * self.t_max + t;
+            self.obs[flat * self.obs_len..(flat + 1) * self.obs_len]
+                .copy_from_slice(&obs_batch[e * self.obs_len..(e + 1) * self.obs_len]);
+            self.actions[flat] = actions[e] as i32;
+            self.rewards[flat] = rewards[e];
+            self.dones[flat] = dones[e];
+        }
+        self.t += 1;
+    }
+
+    /// Compute the n-step returns given bootstrap values V(s_{t_max}).
+    pub fn finish(&mut self, bootstrap: &[f32], gamma: f32) {
+        assert!(self.is_full(), "rollout incomplete: t={} of {}", self.t, self.t_max);
+        batch_returns(
+            &self.rewards,
+            &self.dones,
+            bootstrap,
+            self.n_e,
+            self.t_max,
+            gamma,
+            &mut self.returns,
+        );
+    }
+
+    pub fn obs(&self) -> &[f32] {
+        &self.obs
+    }
+
+    pub fn actions(&self) -> &[i32] {
+        &self.actions
+    }
+
+    pub fn returns(&self) -> &[f32] {
+        &self.returns
+    }
+
+    pub fn rewards(&self) -> &[f32] {
+        &self.rewards
+    }
+
+    pub fn dones(&self) -> &[bool] {
+        &self.dones
+    }
+
+    /// Rollout slice for one environment (A3C per-actor batches).
+    pub fn env_slice(&self, e: usize) -> (&[f32], &[i32], &[f32]) {
+        let lo = e * self.t_max;
+        let hi = lo + self.t_max;
+        (
+            &self.obs[lo * self.obs_len..hi * self.obs_len],
+            &self.actions[lo..hi],
+            &self.returns[lo..hi],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(n_e: usize, t_max: usize, obs_len: usize) -> RolloutBuffer {
+        let mut rb = RolloutBuffer::new(n_e, t_max, obs_len);
+        for t in 0..t_max {
+            let obs: Vec<f32> = (0..n_e * obs_len)
+                .map(|i| (t * 100 + i) as f32)
+                .collect();
+            let actions: Vec<usize> = (0..n_e).map(|e| (e + t) % 6).collect();
+            let rewards: Vec<f32> = (0..n_e).map(|e| e as f32 + t as f32 * 0.1).collect();
+            let dones: Vec<bool> = (0..n_e).map(|e| e == 1 && t == 1).collect();
+            rb.push_step(&obs, &actions, &rewards, &dones);
+        }
+        rb
+    }
+
+    #[test]
+    fn layout_is_env_major_time_minor() {
+        let rb = filled(3, 4, 2);
+        // env 1, t 2 -> flat 1*4+2 = 6; obs value = t*100 + e*obs_len + j
+        let flat = 6;
+        assert_eq!(rb.obs()[flat * 2], 2.0 * 100.0 + 2.0);
+        assert_eq!(rb.actions()[flat], ((1 + 2) % 6) as i32);
+        assert_eq!(rb.rewards()[flat], 1.0 + 0.2);
+    }
+
+    #[test]
+    fn finish_computes_masked_returns() {
+        let mut rb = filled(3, 4, 2);
+        rb.finish(&[10.0, 10.0, 10.0], 0.5);
+        // env 1 had done at t=1: its return at t=0 must not see bootstrap
+        let r_env1_t0 = rb.returns()[4];
+        let expect = 1.0 + 0.5 * 1.1; // r(1,0) + gamma * r(1,1), then cut
+        assert!((r_env1_t0 - expect).abs() < 1e-5, "{r_env1_t0} vs {expect}");
+        // env 0 never done: bootstrap flows gamma^4
+        let r_env0_t0 = rb.returns()[0];
+        let want = 0.0 + 0.5 * (0.1 + 0.5 * (0.2 + 0.5 * (0.3 + 0.5 * 10.0)));
+        assert!((r_env0_t0 - want).abs() < 1e-5);
+    }
+
+    #[test]
+    #[should_panic(expected = "rollout already full")]
+    fn push_past_capacity_panics() {
+        let mut rb = filled(2, 3, 1);
+        rb.push_step(&[0.0; 2], &[0, 0], &[0.0; 2], &[false; 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "rollout incomplete")]
+    fn finish_before_full_panics() {
+        let mut rb = RolloutBuffer::new(2, 3, 1);
+        rb.push_step(&[0.0; 2], &[0, 0], &[0.0; 2], &[false; 2]);
+        rb.finish(&[0.0, 0.0], 0.99);
+    }
+
+    #[test]
+    fn clear_allows_reuse_without_realloc() {
+        let mut rb = filled(2, 3, 2);
+        let ptr_before = rb.obs().as_ptr();
+        rb.clear();
+        assert_eq!(rb.t(), 0);
+        assert!(!rb.is_full());
+        for _ in 0..3 {
+            rb.push_step(&[1.0; 4], &[0, 1], &[0.0; 2], &[false; 2]);
+        }
+        assert_eq!(rb.obs().as_ptr(), ptr_before);
+    }
+
+    #[test]
+    fn env_slice_extracts_contiguous_rollout() {
+        let mut rb = filled(3, 4, 2);
+        rb.finish(&[0.0; 3], 0.9);
+        let (obs, actions, returns) = rb.env_slice(2);
+        assert_eq!(obs.len(), 4 * 2);
+        assert_eq!(actions.len(), 4);
+        assert_eq!(returns.len(), 4);
+        assert_eq!(actions[0], rb.actions()[2 * 4]);
+    }
+}

@@ -1,0 +1,257 @@
+//! Criterion-like benchmark harness (the offline set has no criterion).
+//!
+//! Every file in `rust/benches/` is a `harness = false` binary that uses
+//! this module: warmup, adaptive iteration count, mean/std/percentiles,
+//! and markdown table output so bench runs regenerate the paper's tables
+//! and figures as readable artifacts (tee'd into `bench_output.txt`).
+
+use std::time::{Duration, Instant};
+
+use crate::util::math;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub std: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    /// Optional throughput numerator (e.g. timesteps per iteration).
+    pub units_per_iter: f64,
+}
+
+impl Sample {
+    /// Units per second (0 when no unit count was configured).
+    pub fn throughput(&self) -> f64 {
+        if self.units_per_iter > 0.0 && self.mean > Duration::ZERO {
+            self.units_per_iter / self.mean.as_secs_f64()
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Benchmark runner with warmup + adaptive iteration budget.
+pub struct Bench {
+    /// Target measurement time per case.
+    pub measure_time: Duration,
+    /// Warmup time per case.
+    pub warmup_time: Duration,
+    /// Hard cap on measured iterations.
+    pub max_iters: u64,
+    results: Vec<Sample>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            measure_time: Duration::from_secs(3),
+            warmup_time: Duration::from_millis(500),
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Short-budget harness for CI-ish runs (used when PAAC_BENCH_FAST=1).
+    pub fn fast() -> Self {
+        Bench {
+            measure_time: Duration::from_millis(600),
+            warmup_time: Duration::from_millis(100),
+            max_iters: 2_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Honors the PAAC_BENCH_FAST environment variable.
+    pub fn from_env() -> Self {
+        if std::env::var("PAAC_BENCH_FAST").ok().as_deref() == Some("1") {
+            Self::fast()
+        } else {
+            Self::new()
+        }
+    }
+
+    /// Measure `f`, charging one `units` count per call (for throughput).
+    pub fn run(&mut self, name: &str, units_per_iter: f64, mut f: impl FnMut()) -> &Sample {
+        // Warmup.
+        let w0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while w0.elapsed() < self.warmup_time {
+            f();
+            warm_iters += 1;
+        }
+        let warm_per_iter = if warm_iters > 0 {
+            w0.elapsed() / warm_iters as u32
+        } else {
+            Duration::from_millis(1)
+        };
+
+        // Batch so that timing overhead stays negligible for fast bodies.
+        let batch = (Duration::from_micros(50).as_nanos() / warm_per_iter.as_nanos().max(1))
+            .clamp(1, 1_000) as u64;
+
+        let mut times: Vec<f32> = Vec::new();
+        let m0 = Instant::now();
+        let mut total_iters = 0u64;
+        while m0.elapsed() < self.measure_time && total_iters < self.max_iters {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let per = t0.elapsed().as_secs_f64() / batch as f64;
+            times.push(per as f32);
+            total_iters += batch;
+        }
+
+        let mean = math::mean(&times) as f64;
+        let sample = Sample {
+            name: name.to_string(),
+            iters: total_iters,
+            mean: Duration::from_secs_f64(mean.max(0.0)),
+            std: Duration::from_secs_f64(math::std_dev(&times) as f64),
+            p50: Duration::from_secs_f64(math::percentile(&times, 50.0) as f64),
+            p95: Duration::from_secs_f64(math::percentile(&times, 95.0) as f64),
+            units_per_iter,
+        };
+        self.results.push(sample);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Sample] {
+        &self.results
+    }
+
+    /// Render all recorded samples as a markdown table.
+    pub fn report(&self, title: &str) -> String {
+        let mut s = format!("\n## {title}\n\n");
+        s.push_str("| case | mean | p50 | p95 | std | iters | throughput |\n");
+        s.push_str("|---|---|---|---|---|---|---|\n");
+        for r in &self.results {
+            let tp = r.throughput();
+            let tp_s = if tp > 0.0 { format!("{tp:.1}/s") } else { "-".into() };
+            s.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {} | {} |\n",
+                r.name,
+                fmt_dur(r.mean),
+                fmt_dur(r.p50),
+                fmt_dur(r.p95),
+                fmt_dur(r.std),
+                r.iters,
+                tp_s
+            ));
+        }
+        s
+    }
+}
+
+/// Human-friendly duration formatting.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1_000.0)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1_000_000.0)
+    } else {
+        format!("{:.2}s", ns as f64 / 1_000_000_000.0)
+    }
+}
+
+/// Markdown table builder used by the figure/table regeneration benches.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        s.push_str(&format!("|{}\n", "---|".repeat(self.header.len())));
+        for r in &self.rows {
+            s.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_and_reports() {
+        let mut b = Bench {
+            measure_time: Duration::from_millis(50),
+            warmup_time: Duration::from_millis(10),
+            max_iters: 100_000,
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        let s = b.run("noop-ish", 1.0, || {
+            acc = acc.wrapping_add(1);
+            std::hint::black_box(acc);
+        });
+        assert!(s.iters > 0);
+        assert!(s.mean > Duration::ZERO);
+        assert!(s.throughput() > 0.0);
+        let rep = b.report("test");
+        assert!(rep.contains("noop-ish"));
+        assert!(rep.contains("| case |"));
+    }
+
+    #[test]
+    fn bench_respects_max_iters() {
+        let mut b = Bench {
+            measure_time: Duration::from_secs(60),
+            warmup_time: Duration::from_millis(1),
+            max_iters: 500,
+            results: Vec::new(),
+        };
+        b.run("capped", 0.0, || {
+            std::hint::black_box(3);
+        });
+        assert!(b.results()[0].iters <= 1_500); // cap + final batch slop
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert_eq!(fmt_dur(Duration::from_nanos(12)), "12ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new(&["game", "score"]);
+        t.row(vec!["pong".into(), "20.6".into()]);
+        let md = t.render();
+        assert!(md.contains("| game | score |"));
+        assert!(md.contains("| pong | 20.6 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new(&["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,296 @@
+//! Command-line argument parsing substrate (no clap in the offline set).
+//!
+//! Declarative flag registry with typed access, `--help` generation and
+//! subcommand support. Used by `rust/src/main.rs`, the examples and the
+//! bench drivers.
+//!
+//! Grammar: `prog [subcommand] [--flag value | --flag=value | --switch]`.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// One registered flag.
+#[derive(Clone, Debug)]
+struct FlagSpec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_switch: bool,
+}
+
+/// Declarative CLI parser.
+#[derive(Clone, Debug)]
+pub struct Cli {
+    prog: &'static str,
+    about: &'static str,
+    subcommands: Vec<(&'static str, &'static str)>,
+    flags: Vec<FlagSpec>,
+}
+
+/// Parse result: chosen subcommand + flag values + positionals.
+#[derive(Clone, Debug)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    values: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(prog: &'static str, about: &'static str) -> Self {
+        Cli { prog, about, subcommands: Vec::new(), flags: Vec::new() }
+    }
+
+    pub fn subcommand(mut self, name: &'static str, help: &'static str) -> Self {
+        self.subcommands.push((name, help));
+        self
+    }
+
+    /// A `--name <value>` flag with an optional default.
+    pub fn flag(mut self, name: &'static str, default: Option<&str>, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: default.map(|s| s.to_string()),
+            is_switch: false,
+        });
+        self
+    }
+
+    /// A boolean `--name` switch.
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None, is_switch: true });
+        self
+    }
+
+    /// Render the help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.prog, self.about, self.prog);
+        if !self.subcommands.is_empty() {
+            s.push_str(" <subcommand>");
+        }
+        s.push_str(" [flags]\n");
+        if !self.subcommands.is_empty() {
+            s.push_str("\nSUBCOMMANDS:\n");
+            for (name, help) in &self.subcommands {
+                s.push_str(&format!("  {name:<16} {help}\n"));
+            }
+        }
+        s.push_str("\nFLAGS:\n");
+        for f in &self.flags {
+            let left = if f.is_switch {
+                format!("--{}", f.name)
+            } else if let Some(d) = &f.default {
+                format!("--{} <{}>", f.name, d)
+            } else {
+                format!("--{} <value>", f.name)
+            };
+            s.push_str(&format!("  {left:<28} {}\n", f.help));
+        }
+        s.push_str("  --help                       show this message\n");
+        s
+    }
+
+    fn spec(&self, name: &str) -> Option<&FlagSpec> {
+        self.flags.iter().find(|f| f.name == name)
+    }
+
+    /// Parse a raw argument vector (without argv[0]).
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut args = Args {
+            subcommand: None,
+            values: BTreeMap::new(),
+            switches: Vec::new(),
+            positional: Vec::new(),
+        };
+        let mut i = 0;
+        // subcommand must come first if declared
+        if !self.subcommands.is_empty() {
+            if let Some(first) = argv.first() {
+                if first == "--help" || first == "-h" {
+                    return Err(Error::Cli(self.help()));
+                }
+                if !first.starts_with("--") {
+                    if !self.subcommands.iter().any(|(n, _)| n == first) {
+                        return Err(Error::Cli(format!(
+                            "unknown subcommand '{first}'\n\n{}",
+                            self.help()
+                        )));
+                    }
+                    args.subcommand = Some(first.clone());
+                    i = 1;
+                }
+            }
+        }
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(Error::Cli(self.help()));
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .spec(name)
+                    .ok_or_else(|| Error::Cli(format!("unknown flag '--{name}'")))?;
+                if spec.is_switch {
+                    if inline.is_some() {
+                        return Err(Error::Cli(format!("switch '--{name}' takes no value")));
+                    }
+                    args.switches.push(name.to_string());
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| {
+                                    Error::Cli(format!("flag '--{name}' needs a value"))
+                                })?
+                        }
+                    };
+                    args.values.insert(name.to_string(), value);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        // fill defaults
+        for f in &self.flags {
+            if !f.is_switch && !args.values.contains_key(f.name) {
+                if let Some(d) = &f.default {
+                    args.values.insert(f.name.to_string(), d.clone());
+                }
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args()` and exit(0)/exit(2) on help/usage errors —
+    /// for use from `main` and example binaries.
+    pub fn parse_or_exit(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&argv) {
+            Ok(a) => a,
+            Err(Error::Cli(msg)) => {
+                let is_help = msg.starts_with(self.prog);
+                eprintln!("{msg}");
+                std::process::exit(if is_help { 0 } else { 2 });
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn str_of(&self, name: &str) -> Result<String> {
+        self.get(name)
+            .map(|s| s.to_string())
+            .ok_or_else(|| Error::Cli(format!("missing required flag '--{name}'")))
+    }
+
+    pub fn usize_of(&self, name: &str) -> Result<usize> {
+        let v = self.str_of(name)?;
+        v.parse().map_err(|_| Error::Cli(format!("flag '--{name}': '{v}' is not an integer")))
+    }
+
+    pub fn u64_of(&self, name: &str) -> Result<u64> {
+        let v = self.str_of(name)?;
+        v.parse().map_err(|_| Error::Cli(format!("flag '--{name}': '{v}' is not an integer")))
+    }
+
+    pub fn f32_of(&self, name: &str) -> Result<f32> {
+        let v = self.str_of(name)?;
+        v.parse().map_err(|_| Error::Cli(format!("flag '--{name}': '{v}' is not a number")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("paac", "test")
+            .subcommand("train", "train a model")
+            .subcommand("eval", "evaluate")
+            .flag("game", Some("catch"), "game id")
+            .flag("n-e", Some("32"), "environments")
+            .flag("lr", None, "learning rate")
+            .switch("verbose", "chatty")
+    }
+
+    fn sv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_and_defaults() {
+        let a = cli().parse(&sv(&["train", "--n-e", "64", "--verbose"])).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("n-e"), Some("64"));
+        assert_eq!(a.get("game"), Some("catch")); // default
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = cli().parse(&sv(&["eval", "--game=pong"])).unwrap();
+        assert_eq!(a.get("game"), Some("pong"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = cli().parse(&sv(&["train", "--lr", "0.01"])).unwrap();
+        assert_eq!(a.usize_of("n-e").unwrap(), 32);
+        assert!((a.f32_of("lr").unwrap() - 0.01).abs() < 1e-9);
+        assert!(a.f32_of("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_flag_and_subcommand() {
+        assert!(cli().parse(&sv(&["train", "--bogus", "1"])).is_err());
+        assert!(cli().parse(&sv(&["fly"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_an_error() {
+        assert!(cli().parse(&sv(&["train", "--lr"])).is_err());
+        assert!(cli().parse(&sv(&["train", "--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn help_lists_everything() {
+        let h = cli().help();
+        for needle in ["train", "eval", "--game", "--n-e", "--verbose", "USAGE"] {
+            assert!(h.contains(needle), "missing {needle} in help");
+        }
+        // --help surfaces as a Cli error carrying the help text
+        match cli().parse(&sv(&["--help"])) {
+            Err(Error::Cli(msg)) => assert!(msg.contains("USAGE")),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn positional_arguments_pass_through() {
+        let a = cli().parse(&sv(&["train", "cfg.toml"])).unwrap();
+        assert_eq!(a.positional, vec!["cfg.toml".to_string()]);
+    }
+}

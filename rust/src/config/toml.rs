@@ -1,0 +1,346 @@
+//! Minimal TOML parser for run configuration files (no `toml` crate in the
+//! offline set).
+//!
+//! Supported subset — everything the `configs/*.toml` files use:
+//! `[table]` and `[table.sub]` headers, `key = value` with strings
+//! (basic, `"..."`), integers, floats, booleans, and homogeneous arrays
+//! of those; `#` comments; blank lines. Unsupported TOML (multiline
+//! strings, dates, inline tables, arrays of tables) is rejected with a
+//! line-numbered error rather than mis-parsed.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Accept ints where floats are expected (TOML `1` vs `1.0`).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A flat map of `table.key -> value` (tables are flattened with dots).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Document {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Document {
+    pub fn parse(src: &str) -> Result<Document> {
+        let mut doc = Document::default();
+        let mut prefix = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = lineno + 1;
+            let text = strip_comment(raw).trim();
+            if text.is_empty() {
+                continue;
+            }
+            if let Some(rest) = text.strip_prefix('[') {
+                if text.starts_with("[[") {
+                    return Err(toml_err("arrays of tables unsupported", line));
+                }
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| toml_err("unterminated table header", line))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(toml_err("empty table name", line));
+                }
+                validate_key_path(name, line)?;
+                prefix = name.to_string();
+                continue;
+            }
+            let eq = text
+                .find('=')
+                .ok_or_else(|| toml_err("expected 'key = value'", line))?;
+            let key = text[..eq].trim();
+            validate_key_path(key, line)?;
+            let value = parse_value(text[eq + 1..].trim(), line)?;
+            let full = if prefix.is_empty() {
+                key.to_string()
+            } else {
+                format!("{prefix}.{key}")
+            };
+            if doc.entries.insert(full.clone(), value).is_some() {
+                return Err(toml_err(&format!("duplicate key '{full}'"), line));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    /// All keys under a table prefix (e.g. `train.` -> `train.lr`, ...).
+    pub fn table(&self, prefix: &str) -> impl Iterator<Item = (&str, &Value)> {
+        let want = format!("{prefix}.");
+        self.entries
+            .iter()
+            .filter(move |(k, _)| k.starts_with(&want))
+            .map(|(k, v)| (k.as_str(), v))
+    }
+
+    // Typed getters with defaults, used by the Config loader.
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn toml_err(msg: &str, line: usize) -> Error {
+    Error::Toml { msg: msg.to_string(), line }
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn validate_key_path(path: &str, line: usize) -> Result<()> {
+    for part in path.split('.') {
+        if part.is_empty()
+            || !part
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+        {
+            return Err(toml_err(&format!("invalid key '{path}'"), line));
+        }
+    }
+    Ok(())
+}
+
+fn parse_value(text: &str, line: usize) -> Result<Value> {
+    if text.is_empty() {
+        return Err(toml_err("missing value", line));
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let body = rest
+            .strip_suffix('"')
+            .ok_or_else(|| toml_err("unterminated string", line))?;
+        return Ok(Value::Str(unescape(body, line)?));
+    }
+    if let Some(body) = text.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| toml_err("unterminated array", line))?;
+        let mut items = Vec::new();
+        for part in split_top_level(body) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part, line)?);
+        }
+        return Ok(Value::Arr(items));
+    }
+    match text {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let clean = text.replace('_', "");
+    if !clean.contains(['.', 'e', 'E']) {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(toml_err(&format!("cannot parse value '{text}'"), line))
+}
+
+/// Split on commas not inside nested brackets or strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let (mut depth, mut in_str, mut start) = (0usize, false, 0usize);
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+fn unescape(s: &str, line: usize) -> Result<String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            _ => return Err(toml_err("unknown escape", line)),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typed_scalars() {
+        let doc = Document::parse(
+            "a = 1\nb = 2.5\nc = \"hi\"\nd = true\ne = -3\nf = 1_000\ng = 1e3\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("a"), Some(&Value::Int(1)));
+        assert_eq!(doc.get("b"), Some(&Value::Float(2.5)));
+        assert_eq!(doc.get("c").unwrap().as_str(), Some("hi"));
+        assert_eq!(doc.get("d").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("e"), Some(&Value::Int(-3)));
+        assert_eq!(doc.get("f"), Some(&Value::Int(1000)));
+        assert_eq!(doc.get("g"), Some(&Value::Float(1000.0)));
+    }
+
+    #[test]
+    fn tables_flatten_with_dots() {
+        let src = "top = 1\n[train]\nlr = 0.001\n[train.sched]\nkind = \"linear\"\n";
+        let doc = Document::parse(src).unwrap();
+        assert_eq!(doc.get("top"), Some(&Value::Int(1)));
+        assert_eq!(doc.f64_or("train.lr", 0.0), 0.001);
+        assert_eq!(doc.str_or("train.sched.kind", ""), "linear");
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let src = "# header\na = 1 # trailing\n\n  # indented comment\nb = \"x # not a comment\"\n";
+        let doc = Document::parse(src).unwrap();
+        assert_eq!(doc.get("a"), Some(&Value::Int(1)));
+        assert_eq!(doc.get("b").unwrap().as_str(), Some("x # not a comment"));
+    }
+
+    #[test]
+    fn arrays_parse_including_nested() {
+        let doc = Document::parse("ne = [16, 32, 64]\nm = [[1, 2], [3]]\n").unwrap();
+        let ne = doc.get("ne").unwrap().as_arr().unwrap();
+        assert_eq!(ne.len(), 3);
+        assert_eq!(ne[2], Value::Int(64));
+        let m = doc.get("m").unwrap().as_arr().unwrap();
+        assert_eq!(m[0].as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn string_escapes() {
+        let doc = Document::parse(r#"s = "a\nb\t\"c\"""#).unwrap();
+        assert_eq!(doc.get("s").unwrap().as_str(), Some("a\nb\t\"c\""));
+    }
+
+    #[test]
+    fn rejects_malformed_with_line_numbers() {
+        for (src, want_line) in [
+            ("a = \n", 1),
+            ("x 1\n", 1),
+            ("a = 1\n[bad\n", 2),
+            ("a = 1\nb = [1, 2\n", 2),
+            ("[[t]]\n", 1),
+            ("a = 1\na = 2\n", 2),
+            ("a = \"unterminated\n", 1),
+            ("bad key = 1\n", 1),
+        ] {
+            match Document::parse(src) {
+                Err(Error::Toml { line, .. }) => assert_eq!(line, want_line, "src={src:?}"),
+                other => panic!("{src:?} -> {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn typed_getters_fall_back() {
+        let doc = Document::parse("x = 5\n").unwrap();
+        assert_eq!(doc.i64_or("x", 0), 5);
+        assert_eq!(doc.i64_or("missing", 7), 7);
+        assert_eq!(doc.f64_or("x", 0.0), 5.0); // int promotes to float
+        assert_eq!(doc.str_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn table_iteration() {
+        let doc = Document::parse("[a]\nx = 1\ny = 2\n[b]\nz = 3\n").unwrap();
+        let keys: Vec<_> = doc.table("a").map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["a.x", "a.y"]);
+    }
+}

@@ -1,0 +1,388 @@
+//! The training master: owns runtime, model, vec-env and metrics, drives
+//! the configured algorithm to the timestep budget, and produces the
+//! artifacts every experiment consumes (score curve CSV, phase-time
+//! breakdown, checkpoint, evaluation report).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::algo::a3c::{train_a3c, A3cConfig};
+use crate::algo::evaluator::{evaluate, EvalProtocol, EvalReport};
+use crate::algo::ga3c::{train_ga3c, Ga3cConfig};
+use crate::algo::paac::Paac;
+use crate::config::{Algo, Config};
+use crate::envs::{ObsMode, VecEnv};
+use crate::error::{Error, Result};
+use crate::metrics::RunLogger;
+use crate::model::PolicyModel;
+use crate::runtime::checkpoint::Checkpoint;
+use crate::runtime::Runtime;
+use crate::util::json::{obj, Json};
+use crate::util::math::Ema;
+use crate::util::timer::Phase;
+
+/// One point of the score curve: (timestep, wall seconds, smoothed score).
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    pub timestep: u64,
+    pub wall_secs: f64,
+    pub score: f32,
+}
+
+/// Summary of a finished training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub algo: Algo,
+    pub game: String,
+    pub timesteps: u64,
+    pub updates: u64,
+    pub wall_secs: f64,
+    pub timesteps_per_sec: f64,
+    pub episodes: usize,
+    /// Smoothed training score at the end of the run.
+    pub final_score: Option<f32>,
+    /// Post-training evaluation under the Table-1 protocol.
+    pub eval: Option<EvalReport>,
+    pub score_curve: Vec<CurvePoint>,
+    /// (phase name, fraction of cycle time) — Figure 2's data.
+    pub phase_fractions: Vec<(&'static str, f64)>,
+    /// Baseline-specific diagnostics (staleness / policy lag).
+    pub staleness: Option<f64>,
+    pub diverged: bool,
+}
+
+/// The run driver.
+pub struct Trainer {
+    cfg: Config,
+    rt: Arc<Runtime>,
+}
+
+impl Trainer {
+    pub fn new(cfg: Config) -> Result<Trainer> {
+        cfg.validate()?;
+        let rt = Arc::new(Runtime::new(&cfg.artifacts_dir)?);
+        // config <-> artifact consistency (gamma / t_max are baked in)
+        let hp = rt.manifest().hyperparams;
+        if (hp.gamma - cfg.gamma).abs() > 1e-6 {
+            return Err(Error::config(format!(
+                "config gamma {} != artifact gamma {} (re-run make artifacts)",
+                cfg.gamma, hp.gamma
+            )));
+        }
+        if hp.t_max != cfg.t_max {
+            return Err(Error::config(format!(
+                "config t_max {} != artifact t_max {}",
+                cfg.t_max, hp.t_max
+            )));
+        }
+        Ok(Trainer { cfg, rt })
+    }
+
+    /// Build a trainer on an already-open runtime (bench drivers share one
+    /// runtime across many runs to amortize artifact compilation).
+    pub fn with_runtime(cfg: Config, rt: Arc<Runtime>) -> Result<Trainer> {
+        cfg.validate()?;
+        Ok(Trainer { cfg, rt })
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    pub fn runtime(&self) -> Arc<Runtime> {
+        self.rt.clone()
+    }
+
+    fn obs_mode(&self) -> ObsMode {
+        if self.cfg.atari_mode {
+            ObsMode::Atari
+        } else {
+            ObsMode::Grid
+        }
+    }
+
+    /// Run the configured algorithm to completion.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        match self.cfg.algo {
+            Algo::Paac => self.run_paac(true),
+            Algo::A3c => self.run_a3c(),
+            Algo::Ga3c => self.run_ga3c(),
+        }
+    }
+
+    /// PAAC (Algorithm 1). `with_logging` controls metric-file output
+    /// (benches switch it off to keep the measured loop clean).
+    pub fn run_paac(&mut self, with_logging: bool) -> Result<TrainReport> {
+        let cfg = &self.cfg;
+        let mode = self.obs_mode();
+        let model = PolicyModel::new(self.rt.clone(), &cfg.arch, cfg.n_e, cfg.seed as i32)?;
+        let venv = VecEnv::new(cfg.game, mode, cfg.n_e, cfg.n_w, cfg.seed, cfg.noop_max);
+        let mut paac = Paac::new(model, venv, cfg.gamma, cfg.seed);
+        let mut logger = if with_logging {
+            Some(RunLogger::create(&cfg.out_dir, &cfg.run_name)?)
+        } else {
+            None
+        };
+
+        let mut timestep = 0u64;
+        let mut update = 0u64;
+        let mut score = Ema::new(0.95);
+        let mut have_score = false;
+        let mut curve = Vec::new();
+        let mut episodes = 0usize;
+        let mut diverged = false;
+        let t0 = Instant::now();
+        let deadline = (cfg.max_wall_secs > 0.0)
+            .then(|| std::time::Duration::from_secs_f64(cfg.max_wall_secs));
+
+        while timestep < cfg.max_timesteps {
+            if let Some(d) = deadline {
+                if t0.elapsed() >= d {
+                    break;
+                }
+            }
+            let lr = cfg.lr_at(timestep);
+            let out = paac.cycle(lr)?;
+            timestep += out.timesteps;
+            update += 1;
+            episodes += out.finished_returns.len();
+            for r in &out.finished_returns {
+                score.push(*r as f64);
+                have_score = true;
+            }
+            if !out.stats.is_finite() {
+                diverged = true;
+                log::warn!("divergence at update {update}: {:?}", out.stats);
+                if cfg.abort_on_divergence {
+                    break;
+                }
+            }
+            if update % cfg.log_interval.max(1) == 0 {
+                let wall = t0.elapsed().as_secs_f64();
+                let s = if have_score { score.get() as f32 } else { f32::NAN };
+                curve.push(CurvePoint { timestep, wall_secs: wall, score: s });
+                if let Some(l) = logger.as_mut() {
+                    l.log_update(
+                        timestep,
+                        update,
+                        wall,
+                        s,
+                        out.stats.policy_loss,
+                        out.stats.value_loss,
+                        out.stats.entropy,
+                        out.stats.grad_norm,
+                    )?;
+                }
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+
+        // final checkpoint
+        if with_logging {
+            let ckpt_path = cfg.out_dir.join(&cfg.run_name).join("final.ckpt");
+            let mut ckpt = Checkpoint::new(cfg.arch.clone(), timestep);
+            let host = paac.model.params.params_to_host()?;
+            for (spec, data) in paac.model.params.specs().iter().zip(host) {
+                ckpt.push(
+                    spec.name.clone(),
+                    spec.shape.iter().map(|&d| d as u64).collect(),
+                    data,
+                );
+            }
+            ckpt.save(&ckpt_path)?;
+        }
+
+        // evaluation under the Table-1 protocol
+        let eval = if cfg.eval_episodes > 0 && !diverged {
+            let proto = EvalProtocol {
+                episodes: cfg.eval_episodes,
+                noop_max: cfg.noop_max,
+                ..EvalProtocol::default()
+            };
+            Some(evaluate(&paac.model, cfg.game, mode, &proto, cfg.seed)?)
+        } else {
+            None
+        };
+
+        let fractions: Vec<(&'static str, f64)> = paac
+            .timer
+            .fractions()
+            .into_iter()
+            .map(|(p, f)| (p.name(), f))
+            .collect();
+
+        if let (Some(l), Some(e)) = (logger.as_mut(), eval.as_ref()) {
+            l.log_event(&obj(vec![
+                ("type", Json::Str("final_eval".into())),
+                ("best", Json::Num(e.best as f64)),
+                ("mean", Json::Num(e.mean as f64)),
+            ]))?;
+        }
+
+        Ok(TrainReport {
+            algo: Algo::Paac,
+            game: cfg.game.name().to_string(),
+            timesteps: timestep,
+            updates: update,
+            wall_secs: wall,
+            timesteps_per_sec: timestep as f64 / wall.max(1e-9),
+            episodes,
+            final_score: have_score.then(|| score.get() as f32),
+            eval,
+            score_curve: curve,
+            phase_fractions: fractions,
+            staleness: None,
+            diverged,
+        })
+    }
+
+    /// Phase-time breakdown access for the Figure-2 bench: runs PAAC for
+    /// a fixed number of updates and returns (fractions, timesteps/sec).
+    pub fn measure_phases(&mut self, updates: u64) -> Result<(Vec<(Phase, f64)>, f64)> {
+        let cfg = &self.cfg;
+        let mode = self.obs_mode();
+        let model = PolicyModel::new(self.rt.clone(), &cfg.arch, cfg.n_e, cfg.seed as i32)?;
+        let venv = VecEnv::new(cfg.game, mode, cfg.n_e, cfg.n_w, cfg.seed, cfg.noop_max);
+        let mut paac = Paac::new(model, venv, cfg.gamma, cfg.seed);
+        // warmup (compile + caches)
+        paac.cycle(cfg.lr)?;
+        paac.timer.reset();
+        let t0 = Instant::now();
+        let mut steps = 0u64;
+        for _ in 0..updates {
+            steps += paac.cycle(cfg.lr)?.timesteps;
+        }
+        let tps = steps as f64 / t0.elapsed().as_secs_f64();
+        Ok((paac.timer.fractions(), tps))
+    }
+
+    fn run_a3c(&mut self) -> Result<TrainReport> {
+        let cfg = &self.cfg;
+        let mode = self.obs_mode();
+        let a3c_cfg = A3cConfig {
+            actors: cfg.n_w,
+            t_max: cfg.t_max,
+            gamma: cfg.gamma,
+            lr: cfg.lr,
+            lr_anneal: matches!(cfg.lr_schedule, crate::config::LrSchedule::LinearToZero),
+            noop_max: cfg.noop_max,
+            seed: cfg.seed,
+            max_wall_secs: cfg.max_wall_secs,
+        };
+        let (report, params) = train_a3c(
+            self.rt.clone(),
+            &cfg.arch,
+            cfg.game,
+            mode,
+            a3c_cfg,
+            cfg.max_timesteps,
+        )?;
+        // evaluation with the trained params
+        let mut model =
+            PolicyModel::new(self.rt.clone(), &cfg.arch, cfg.n_e, cfg.seed as i32)?;
+        model.params = params;
+        let eval = if cfg.eval_episodes > 0 {
+            let proto = EvalProtocol {
+                episodes: cfg.eval_episodes,
+                noop_max: cfg.noop_max,
+                ..EvalProtocol::default()
+            };
+            Some(evaluate(&model, cfg.game, mode, &proto, cfg.seed)?)
+        } else {
+            None
+        };
+        let mean_score = if report.episode_returns.is_empty() {
+            None
+        } else {
+            let tail = &report.episode_returns
+                [report.episode_returns.len().saturating_sub(30)..];
+            Some(crate::util::math::mean(tail))
+        };
+        Ok(TrainReport {
+            algo: Algo::A3c,
+            game: cfg.game.name().to_string(),
+            timesteps: report.timesteps,
+            updates: report.updates,
+            wall_secs: report.wall_secs,
+            timesteps_per_sec: report.timesteps_per_sec,
+            episodes: report.episode_returns.len(),
+            final_score: mean_score,
+            eval,
+            score_curve: Vec::new(),
+            phase_fractions: Vec::new(),
+            staleness: Some(report.mean_staleness),
+            diverged: false,
+        })
+    }
+
+    fn run_ga3c(&mut self) -> Result<TrainReport> {
+        let cfg = &self.cfg;
+        let mode = self.obs_mode();
+        // GA3C's queues need artifacts at their batch sizes; use the
+        // sweep-capable tiny matrix (predict batch = train ne = smallest
+        // available >= 4) when the configured n_e has no artifact.
+        let available = self.rt.manifest().available_ne(&cfg.arch);
+        let train_ne = if available.contains(&cfg.n_e) {
+            cfg.n_e
+        } else {
+            *available.first().ok_or_else(|| {
+                Error::artifact(format!("no train artifacts for arch {}", cfg.arch))
+            })?
+        };
+        let ga3c_cfg = Ga3cConfig {
+            actors: cfg.n_w.max(2),
+            predict_batch: train_ne.min(cfg.n_e),
+            train_ne,
+            t_max: cfg.t_max,
+            gamma: cfg.gamma,
+            lr: cfg.lr,
+            lr_anneal: matches!(cfg.lr_schedule, crate::config::LrSchedule::LinearToZero),
+            noop_max: cfg.noop_max,
+            seed: cfg.seed,
+            max_wall_secs: cfg.max_wall_secs,
+        };
+        let (report, params) = train_ga3c(
+            self.rt.clone(),
+            &cfg.arch,
+            cfg.game,
+            mode,
+            ga3c_cfg,
+            cfg.max_timesteps,
+        )?;
+        let mut model =
+            PolicyModel::new(self.rt.clone(), &cfg.arch, cfg.n_e, cfg.seed as i32)?;
+        model.params = params;
+        let eval = if cfg.eval_episodes > 0 {
+            let proto = EvalProtocol {
+                episodes: cfg.eval_episodes,
+                noop_max: cfg.noop_max,
+                ..EvalProtocol::default()
+            };
+            Some(evaluate(&model, cfg.game, mode, &proto, cfg.seed)?)
+        } else {
+            None
+        };
+        let mean_score = if report.episode_returns.is_empty() {
+            None
+        } else {
+            let tail = &report.episode_returns
+                [report.episode_returns.len().saturating_sub(30)..];
+            Some(crate::util::math::mean(tail))
+        };
+        Ok(TrainReport {
+            algo: Algo::Ga3c,
+            game: cfg.game.name().to_string(),
+            timesteps: report.timesteps,
+            updates: report.updates,
+            wall_secs: report.wall_secs,
+            timesteps_per_sec: report.timesteps_per_sec,
+            episodes: report.episode_returns.len(),
+            final_score: mean_score,
+            eval,
+            score_curve: Vec::new(),
+            phase_fractions: Vec::new(),
+            staleness: Some(report.mean_policy_lag),
+            diverged: false,
+        })
+    }
+}

@@ -1,0 +1,3 @@
+//! Training coordination: the run-level driver above the algorithms.
+
+pub mod master;

@@ -1,0 +1,146 @@
+//! AtariSim renderer: 210x160 RGB frames from game state.
+//!
+//! The paper's agents consume ALE frames (210x160, 3 channels). To
+//! exercise the *exact* preprocessing path (max over frames, grayscale,
+//! 84x84 rescale) we render each grid game to a full-resolution RGB frame:
+//! every grid cell maps to a 21x16 pixel block, entities are colored by
+//! their channel through a fixed palette, and a dark background with a
+//! subtle scanline pattern stands in for Atari's playfield.
+
+use super::{Game, CHANNELS, GRID};
+
+pub const FRAME_H: usize = 210;
+pub const FRAME_W: usize = 160;
+pub const FRAME_LEN: usize = FRAME_H * FRAME_W * 3;
+
+const CELL_H: usize = FRAME_H / GRID; // 21
+const CELL_W: usize = FRAME_W / GRID; // 16
+
+/// Channel palette (approximate Atari hues): player, ball/bullet, enemy,
+/// item, trail/velocity, gauge.
+const PALETTE: [[u8; 3]; CHANNELS] = [
+    [92, 186, 92],   // 0: player — green
+    [236, 236, 236], // 1: ball / projectile — white
+    [200, 72, 72],   // 2: enemy — red
+    [232, 204, 99],  // 3: item / treasure — yellow
+    [84, 138, 210],  // 4: trail / hint — blue
+    [187, 187, 53],  // 5: gauge — olive
+];
+
+const BACKGROUND: [u8; 3] = [28, 28, 44];
+
+/// A reusable 210x160x3 frame buffer.
+#[derive(Clone)]
+pub struct RgbFrame {
+    pub data: Vec<u8>,
+}
+
+impl RgbFrame {
+    pub fn new() -> Self {
+        RgbFrame { data: vec![0; FRAME_LEN] }
+    }
+
+    #[inline]
+    fn put(&mut self, y: usize, x: usize, rgb: [u8; 3]) {
+        let i = (y * FRAME_W + x) * 3;
+        self.data[i] = rgb[0];
+        self.data[i + 1] = rgb[1];
+        self.data[i + 2] = rgb[2];
+    }
+
+    /// Render the game's entity list over the background.
+    pub fn render(&mut self, game: &dyn Game) {
+        // background with faint scanlines (gives the downscaler texture,
+        // like a real TV frame)
+        for y in 0..FRAME_H {
+            let shade = if y % 2 == 0 { 0 } else { 6 };
+            let bg = [
+                BACKGROUND[0].saturating_sub(shade),
+                BACKGROUND[1].saturating_sub(shade),
+                BACKGROUND[2].saturating_sub(shade),
+            ];
+            for x in 0..FRAME_W {
+                self.put(y, x, bg);
+            }
+        }
+        // entities: later channels draw over earlier ones inside a cell;
+        // draw in reverse channel order so low channels (player) win.
+        let mut ents = game.entities();
+        ents.sort_by(|a, b| b.2.cmp(&a.2));
+        for (r, c, ch) in ents {
+            let color = PALETTE[ch];
+            let y0 = r * CELL_H;
+            let x0 = c * CELL_W;
+            // inset by 1px so adjacent entities stay distinguishable
+            for y in y0 + 1..y0 + CELL_H - 1 {
+                for x in x0 + 1..x0 + CELL_W - 1 {
+                    self.put(y, x, color);
+                }
+            }
+        }
+    }
+}
+
+impl Default for RgbFrame {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::GameId;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn frame_dimensions_match_atari() {
+        assert_eq!(FRAME_H, 210);
+        assert_eq!(FRAME_W, 160);
+        assert_eq!(CELL_H * GRID, FRAME_H);
+        assert_eq!(CELL_W * GRID, FRAME_W);
+    }
+
+    #[test]
+    fn render_paints_entities_over_background() {
+        let mut rng = Pcg32::new(1, 0);
+        let mut game = GameId::Catch.build();
+        game.reset(&mut rng);
+        let mut frame = RgbFrame::new();
+        frame.render(game.as_ref());
+        // some pixels must be non-background (paddle is green)
+        let painted = frame
+            .data
+            .chunks(3)
+            .filter(|px| px[0] == PALETTE[0][0] && px[1] == PALETTE[0][1])
+            .count();
+        assert!(painted > 0, "no player pixels rendered");
+    }
+
+    #[test]
+    fn render_is_deterministic_for_same_state() {
+        let mut rng = Pcg32::new(2, 0);
+        let mut game = GameId::Pong.build();
+        game.reset(&mut rng);
+        let mut f1 = RgbFrame::new();
+        let mut f2 = RgbFrame::new();
+        f1.render(game.as_ref());
+        f2.render(game.as_ref());
+        assert_eq!(f1.data, f2.data);
+    }
+
+    #[test]
+    fn moving_state_changes_the_frame() {
+        let mut rng = Pcg32::new(3, 0);
+        let mut game = GameId::Breakout.build();
+        game.reset(&mut rng);
+        let mut f1 = RgbFrame::new();
+        f1.render(game.as_ref());
+        for _ in 0..5 {
+            game.step(0, &mut rng);
+        }
+        let mut f2 = RgbFrame::new();
+        f2.render(game.as_ref());
+        assert_ne!(f1.data, f2.data);
+    }
+}

@@ -1,0 +1,192 @@
+//! Catch: the classic minimal pixel-control game.
+//!
+//! A ball falls from the top row in a random column (with a random
+//! horizontal drift); the agent moves a 3-cell paddle along the bottom
+//! row. Catching scores +1, missing scores -1. An episode is
+//! [`DROPS_PER_EPISODE`] consecutive drops, so the score range is
+//! [-10, +10] and random play scores around -6.
+//!
+//! Channels: 0 = paddle, 1 = ball.
+
+use super::{Action, Game, GameId, StepInfo, A_LEFT, A_RIGHT, CHANNELS, GRID, GRID_OBS_LEN};
+use crate::util::rng::Pcg32;
+
+pub const DROPS_PER_EPISODE: u32 = 10;
+
+pub struct Catch {
+    paddle: i32,
+    ball_r: i32,
+    ball_c: i32,
+    drift: i32,
+    drops_left: u32,
+}
+
+impl Catch {
+    pub fn new() -> Self {
+        Catch { paddle: GRID as i32 / 2, ball_r: 0, ball_c: 0, drift: 0, drops_left: 0 }
+    }
+
+    fn spawn_ball(&mut self, rng: &mut Pcg32) {
+        self.ball_r = 0;
+        self.ball_c = rng.below(GRID as u32) as i32;
+        self.drift = match rng.below(4) {
+            0 => -1,
+            1 => 1,
+            _ => 0,
+        };
+    }
+}
+
+impl Default for Catch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Game for Catch {
+    fn id(&self) -> GameId {
+        GameId::Catch
+    }
+
+    fn reset(&mut self, rng: &mut Pcg32) {
+        self.paddle = GRID as i32 / 2;
+        self.drops_left = DROPS_PER_EPISODE;
+        self.spawn_ball(rng);
+    }
+
+    fn step(&mut self, action: Action, rng: &mut Pcg32) -> StepInfo {
+        match action {
+            A_LEFT => self.paddle = (self.paddle - 1).max(1),
+            A_RIGHT => self.paddle = (self.paddle + 1).min(GRID as i32 - 2),
+            _ => {}
+        }
+        self.ball_r += 1;
+        // drift every other row, bouncing off walls
+        if self.ball_r % 2 == 0 {
+            self.ball_c += self.drift;
+            if self.ball_c < 0 {
+                self.ball_c = 0;
+                self.drift = 1;
+            } else if self.ball_c >= GRID as i32 {
+                self.ball_c = GRID as i32 - 1;
+                self.drift = -1;
+            }
+        }
+        if self.ball_r == GRID as i32 - 1 {
+            let caught = (self.ball_c - self.paddle).abs() <= 1;
+            let reward = if caught { 1.0 } else { -1.0 };
+            self.drops_left -= 1;
+            let done = self.drops_left == 0;
+            if !done {
+                self.spawn_ball(rng);
+            }
+            StepInfo { reward, done }
+        } else {
+            StepInfo::default()
+        }
+    }
+
+    fn render_grid(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), GRID_OBS_LEN);
+        out.fill(0.0);
+        let set = |out: &mut [f32], r: i32, c: i32, ch: usize| {
+            if (0..GRID as i32).contains(&r) && (0..GRID as i32).contains(&c) {
+                out[(r as usize * GRID + c as usize) * CHANNELS + ch] = 1.0;
+            }
+        };
+        for d in -1..=1 {
+            set(out, GRID as i32 - 1, self.paddle + d, 0);
+        }
+        set(out, self.ball_r, self.ball_c, 1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::A_NOOP;
+
+    fn fresh(seed: u64) -> (Catch, Pcg32) {
+        let mut rng = Pcg32::new(seed, 0);
+        let mut g = Catch::new();
+        g.reset(&mut rng);
+        (g, rng)
+    }
+
+    #[test]
+    fn ball_reaches_bottom_in_grid_minus_one_steps() {
+        let (mut g, mut rng) = fresh(1);
+        for t in 0..GRID - 2 {
+            let info = g.step(A_NOOP, &mut rng);
+            assert_eq!(info.reward, 0.0, "premature reward at step {t}");
+        }
+        let info = g.step(A_NOOP, &mut rng);
+        assert!(info.reward == 1.0 || info.reward == -1.0);
+    }
+
+    #[test]
+    fn perfect_play_scores_plus_drops() {
+        // oracle: always move toward the ball column
+        let (mut g, mut rng) = fresh(3);
+        let mut total = 0.0;
+        let mut episodes = 0;
+        while episodes < 1 {
+            let a = if g.ball_c < g.paddle {
+                A_LEFT
+            } else if g.ball_c > g.paddle {
+                A_RIGHT
+            } else {
+                A_NOOP
+            };
+            let info = g.step(a, &mut rng);
+            total += info.reward;
+            if info.done {
+                episodes += 1;
+            }
+        }
+        assert_eq!(total, DROPS_PER_EPISODE as f32);
+    }
+
+    #[test]
+    fn episode_ends_after_fixed_drops() {
+        let (mut g, mut rng) = fresh(9);
+        let mut drops = 0;
+        for _ in 0..10_000 {
+            let info = g.step(A_NOOP, &mut rng);
+            if info.reward != 0.0 {
+                drops += 1;
+            }
+            if info.done {
+                break;
+            }
+        }
+        assert_eq!(drops, DROPS_PER_EPISODE);
+    }
+
+    #[test]
+    fn render_has_one_ball_and_three_paddle_cells() {
+        let (g, _) = fresh(5);
+        let mut obs = vec![0.0; GRID_OBS_LEN];
+        g.render_grid(&mut obs);
+        let count = |ch: usize| -> usize {
+            (0..GRID * GRID)
+                .filter(|i| obs[i * CHANNELS + ch] > 0.0)
+                .count()
+        };
+        assert_eq!(count(0), 3, "paddle");
+        assert_eq!(count(1), 1, "ball");
+    }
+
+    #[test]
+    fn paddle_respects_walls() {
+        let (mut g, mut rng) = fresh(2);
+        for _ in 0..30 {
+            g.step(A_LEFT, &mut rng);
+        }
+        assert_eq!(g.paddle, 1);
+        for _ in 0..30 {
+            g.step(A_RIGHT, &mut rng);
+        }
+        assert_eq!(g.paddle, GRID as i32 - 2);
+    }
+}

@@ -1,0 +1,218 @@
+//! Freeway (MinAtar-style): cross the road, dodge traffic.
+//!
+//! The chicken starts at the bottom and walks up across eight lanes of
+//! cars with fixed per-lane speeds and directions (randomized per
+//! episode). Reaching the top scores +1 and teleports the chicken back to
+//! the start. Getting hit knocks it back one row. Episodes are fixed
+//! length ([`EPISODE_LEN`] frames), like Atari Freeway's 2-minute timer.
+//!
+//! Channels: 0 = chicken, 2 = car (left-moving), 3 = car (right-moving).
+
+use super::{Action, Game, GameId, StepInfo, A_DOWN, A_UP, CHANNELS, GRID, GRID_OBS_LEN};
+use crate::util::rng::Pcg32;
+
+pub const EPISODE_LEN: u64 = 500;
+
+#[derive(Clone, Copy)]
+struct Lane {
+    /// cells per 8 frames (1..=4); sign = direction
+    speed: i32,
+    car_c: i32,
+    /// second car offset by half the road for busier lanes
+    car2_c: Option<i32>,
+}
+
+pub struct Freeway {
+    chicken_r: i32,
+    lanes: [Lane; 8],
+    frame: u64,
+    /// sub-frame accumulators per lane
+    acc: [i32; 8],
+}
+
+const CHICKEN_COL: i32 = GRID as i32 / 2;
+
+impl Freeway {
+    pub fn new() -> Self {
+        Freeway {
+            chicken_r: GRID as i32 - 1,
+            lanes: [Lane { speed: 1, car_c: 0, car2_c: None }; 8],
+            frame: 0,
+            acc: [0; 8],
+        }
+    }
+
+    fn lane_row(i: usize) -> i32 {
+        1 + i as i32 // rows 1..=8; row 0 = goal, row 9 = start
+    }
+}
+
+impl Default for Freeway {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Game for Freeway {
+    fn id(&self) -> GameId {
+        GameId::Freeway
+    }
+
+    fn reset(&mut self, rng: &mut Pcg32) {
+        self.chicken_r = GRID as i32 - 1;
+        self.frame = 0;
+        self.acc = [0; 8];
+        for (i, lane) in self.lanes.iter_mut().enumerate() {
+            let mag = rng.range_inclusive(1, 4) as i32;
+            let dir = if i % 2 == 0 { 1 } else { -1 };
+            lane.speed = mag * dir;
+            lane.car_c = rng.below(GRID as u32) as i32;
+            lane.car2_c = if rng.chance(0.5) {
+                Some((lane.car_c + GRID as i32 / 2) % GRID as i32)
+            } else {
+                None
+            };
+        }
+    }
+
+    fn step(&mut self, action: Action, _rng: &mut Pcg32) -> StepInfo {
+        self.frame += 1;
+        match action {
+            A_UP => self.chicken_r -= 1,
+            A_DOWN => self.chicken_r = (self.chicken_r + 1).min(GRID as i32 - 1),
+            _ => {}
+        }
+
+        // cars advance on a fractional schedule: |speed| cells per 8 frames
+        for i in 0..8 {
+            self.acc[i] += self.lanes[i].speed.abs();
+            while self.acc[i] >= 8 {
+                self.acc[i] -= 8;
+                let dir = self.lanes[i].speed.signum();
+                let m = |c: i32| (c + dir).rem_euclid(GRID as i32);
+                self.lanes[i].car_c = m(self.lanes[i].car_c);
+                if let Some(c2) = self.lanes[i].car2_c {
+                    self.lanes[i].car2_c = Some(m(c2));
+                }
+            }
+        }
+
+        let mut reward = 0.0;
+        // goal
+        if self.chicken_r <= 0 {
+            reward = 1.0;
+            self.chicken_r = GRID as i32 - 1;
+        }
+        // collision: knocked back one row
+        for i in 0..8 {
+            if self.chicken_r == Self::lane_row(i) {
+                let lane = &self.lanes[i];
+                let hit = lane.car_c == CHICKEN_COL
+                    || lane.car2_c.map(|c| c == CHICKEN_COL).unwrap_or(false);
+                if hit {
+                    self.chicken_r = (self.chicken_r + 1).min(GRID as i32 - 1);
+                }
+            }
+        }
+        StepInfo { reward, done: self.frame >= EPISODE_LEN }
+    }
+
+    fn render_grid(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), GRID_OBS_LEN);
+        out.fill(0.0);
+        let set = |out: &mut [f32], r: i32, c: i32, ch: usize| {
+            if (0..GRID as i32).contains(&r) && (0..GRID as i32).contains(&c) {
+                out[(r as usize * GRID + c as usize) * CHANNELS + ch] = 1.0;
+            }
+        };
+        set(out, self.chicken_r, CHICKEN_COL, 0);
+        for (i, lane) in self.lanes.iter().enumerate() {
+            let ch = if lane.speed < 0 { 2 } else { 3 };
+            set(out, Self::lane_row(i), lane.car_c, ch);
+            if let Some(c2) = lane.car2_c {
+                set(out, Self::lane_row(i), c2, ch);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::{A_NOOP, A_UP};
+
+    fn fresh(seed: u64) -> (Freeway, Pcg32) {
+        let mut rng = Pcg32::new(seed, 0);
+        let mut g = Freeway::new();
+        g.reset(&mut rng);
+        (g, rng)
+    }
+
+    #[test]
+    fn episode_is_fixed_length() {
+        let (mut g, mut rng) = fresh(1);
+        let mut steps = 0u64;
+        loop {
+            steps += 1;
+            if g.step(A_NOOP, &mut rng).done {
+                break;
+            }
+        }
+        assert_eq!(steps, EPISODE_LEN);
+    }
+
+    #[test]
+    fn always_up_scores_positive() {
+        let (mut g, mut rng) = fresh(2);
+        let mut total = 0.0;
+        loop {
+            let info = g.step(A_UP, &mut rng);
+            total += info.reward;
+            if info.done {
+                break;
+            }
+        }
+        assert!(total >= 1.0, "always-up scored {total}");
+    }
+
+    #[test]
+    fn noop_never_scores() {
+        let (mut g, mut rng) = fresh(3);
+        let mut total = 0.0;
+        loop {
+            let info = g.step(A_NOOP, &mut rng);
+            total += info.reward;
+            if info.done {
+                break;
+            }
+        }
+        assert_eq!(total, 0.0);
+    }
+
+    #[test]
+    fn collision_knocks_back() {
+        let (mut g, mut rng) = fresh(4);
+        // force a car onto the chicken's next row
+        g.chicken_r = 3;
+        g.lanes[1].car_c = CHICKEN_COL; // lane 1 = row 2
+        g.lanes[1].speed = 0;
+        g.lanes[1].car2_c = None;
+        let before = g.chicken_r;
+        g.step(A_UP, &mut rng); // moves to row 2 where the car sits
+        assert!(g.chicken_r > before - 1, "not knocked back: {}", g.chicken_r);
+    }
+
+    #[test]
+    fn cars_wrap_around() {
+        let (mut g, mut rng) = fresh(5);
+        let before: Vec<i32> = g.lanes.iter().map(|l| l.car_c).collect();
+        for _ in 0..64 {
+            g.step(A_NOOP, &mut rng);
+        }
+        let after: Vec<i32> = g.lanes.iter().map(|l| l.car_c).collect();
+        assert_ne!(before, after);
+        for l in &g.lanes {
+            assert!((0..GRID as i32).contains(&l.car_c));
+        }
+    }
+}

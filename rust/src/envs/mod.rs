@@ -1,0 +1,403 @@
+//! Environment substrate: the ALE substitute (DESIGN.md §1).
+//!
+//! The paper evaluates on Atari 2600 via the Arcade Learning Environment;
+//! ROMs and ALE are unavailable here, so this module implements a
+//! from-scratch suite of eight MinAtar-style games on a 10x10 grid with
+//! multi-channel observations, plus an **AtariSim** mode that renders each
+//! game at 210x160 RGB and runs the paper's exact preprocessing pipeline
+//! (action repeat 4, per-pixel max over the last two frames, grayscale,
+//! 84x84 rescale, 4-frame stacking, 1-30 no-op starts). The RL algorithms
+//! see exactly the interface the paper's agents saw: pixel-ish
+//! observations, episodic dynamics, stochastic starts.
+//!
+//! Layout:
+//! * [`Game`] — the raw game logic trait; one implementation per game.
+//! * [`Env`] — a single environment instance: game + RNG stream +
+//!   observation production (grid or Atari pipeline) + episode bookkeeping.
+//! * [`VecEnv`] — the paper's `n_e` environments stepped by `n_w` workers.
+
+pub mod amidar;
+pub mod asterix;
+pub mod atari;
+pub mod breakout;
+pub mod catch;
+pub mod freeway;
+pub mod pong;
+pub mod preprocess;
+pub mod seaquest;
+pub mod space_invaders;
+pub mod vec_env;
+
+pub use vec_env::VecEnv;
+
+use crate::error::{Error, Result};
+use crate::util::rng::Pcg32;
+
+/// Grid side length for the native observation mode.
+pub const GRID: usize = 10;
+/// Observation channels in the native grid mode (shared across games so a
+/// single network/artifact serves the whole suite).
+pub const CHANNELS: usize = 6;
+/// Size of one native grid observation.
+pub const GRID_OBS_LEN: usize = GRID * GRID * CHANNELS;
+/// Fixed action-set size (like ALE's minimal sets, unioned): see [`Action`].
+pub const ACTIONS: usize = 6;
+
+/// Actions shared by all games. Games ignore actions that do not apply
+/// (as ALE does for games with smaller minimal action sets).
+pub type Action = usize;
+pub const A_NOOP: Action = 0;
+pub const A_UP: Action = 1;
+pub const A_DOWN: Action = 2;
+pub const A_LEFT: Action = 3;
+pub const A_RIGHT: Action = 4;
+pub const A_FIRE: Action = 5;
+
+/// Result of one raw game step.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StepInfo {
+    pub reward: f32,
+    pub done: bool,
+}
+
+/// A raw game: pure state machine on the 10x10 grid.
+///
+/// Implementations must be deterministic given the RNG stream (all
+/// stochasticity flows through the `rng` argument) — the vec-env
+/// serial-equivalence property test relies on it.
+pub trait Game: Send {
+    fn id(&self) -> GameId;
+    /// Reset to a fresh episode.
+    fn reset(&mut self, rng: &mut Pcg32);
+    /// Advance one frame.
+    fn step(&mut self, action: Action, rng: &mut Pcg32) -> StepInfo;
+    /// Write the (GRID, GRID, CHANNELS) observation, HWC layout, values in
+    /// [0, 1], into `out` (length GRID_OBS_LEN).
+    fn render_grid(&self, out: &mut [f32]);
+    /// Entity list for the 210x160 RGB renderer (AtariSim mode):
+    /// (row, col, channel) per occupied cell, channel selects the palette
+    /// color. Default: derive from `render_grid`.
+    fn entities(&self) -> Vec<(usize, usize, usize)> {
+        let mut grid = vec![0.0f32; GRID_OBS_LEN];
+        self.render_grid(&mut grid);
+        let mut out = Vec::new();
+        for r in 0..GRID {
+            for c in 0..GRID {
+                for ch in 0..CHANNELS {
+                    if grid[(r * GRID + c) * CHANNELS + ch] > 0.0 {
+                        out.push((r, c, ch));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Game identifiers — the suite stands in for the paper's 12 Atari games.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GameId {
+    Catch,
+    Pong,
+    Breakout,
+    SpaceInvaders,
+    Seaquest,
+    Freeway,
+    Asterix,
+    Amidar,
+}
+
+impl GameId {
+    pub const ALL: [GameId; 8] = [
+        GameId::Catch,
+        GameId::Pong,
+        GameId::Breakout,
+        GameId::SpaceInvaders,
+        GameId::Seaquest,
+        GameId::Freeway,
+        GameId::Asterix,
+        GameId::Amidar,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GameId::Catch => "catch",
+            GameId::Pong => "pong",
+            GameId::Breakout => "breakout",
+            GameId::SpaceInvaders => "space_invaders",
+            GameId::Seaquest => "seaquest",
+            GameId::Freeway => "freeway",
+            GameId::Asterix => "asterix",
+            GameId::Amidar => "amidar",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<GameId> {
+        GameId::ALL
+            .iter()
+            .copied()
+            .find(|g| g.name() == s)
+            .ok_or_else(|| {
+                Error::Env(format!(
+                    "unknown game '{s}' (one of: {})",
+                    GameId::ALL.map(|g| g.name()).join(", ")
+                ))
+            })
+    }
+
+    /// Instantiate the game logic.
+    pub fn build(self) -> Box<dyn Game> {
+        match self {
+            GameId::Catch => Box::new(catch::Catch::new()),
+            GameId::Pong => Box::new(pong::Pong::new()),
+            GameId::Breakout => Box::new(breakout::Breakout::new()),
+            GameId::SpaceInvaders => Box::new(space_invaders::SpaceInvaders::new()),
+            GameId::Seaquest => Box::new(seaquest::Seaquest::new()),
+            GameId::Freeway => Box::new(freeway::Freeway::new()),
+            GameId::Asterix => Box::new(asterix::Asterix::new()),
+            GameId::Amidar => Box::new(amidar::Amidar::new()),
+        }
+    }
+}
+
+/// Observation production mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObsMode {
+    /// Native (10, 10, 6) grid observation — used with `arch_tiny`.
+    Grid,
+    /// Full Atari pipeline -> (84, 84, 4) — used with `arch_nips`/`nature`.
+    Atari,
+}
+
+impl ObsMode {
+    pub fn dims(self) -> (usize, usize, usize) {
+        match self {
+            ObsMode::Grid => (GRID, GRID, CHANNELS),
+            ObsMode::Atari => (preprocess::OUT, preprocess::OUT, preprocess::STACK),
+        }
+    }
+
+    pub fn obs_len(self) -> usize {
+        let (h, w, c) = self.dims();
+        h * w * c
+    }
+}
+
+/// One environment instance: game + RNG stream + preprocessing +
+/// episode bookkeeping (paper §5.1 protocol).
+pub struct Env {
+    game: Box<dyn Game>,
+    rng: Pcg32,
+    mode: ObsMode,
+    pipeline: Option<preprocess::AtariPipeline>,
+    obs: Vec<f32>,
+    /// Max no-op actions applied after reset (paper: between 1 and 30).
+    noop_max: u32,
+    /// Frames per agent action in grid mode (the Atari pipeline has its
+    /// own action-repeat-4 inside).
+    episode_steps: u64,
+    episode_reward: f32,
+    /// Completed-episode rewards since the last drain (for score curves).
+    finished_returns: Vec<f32>,
+    /// Hard cap on episode length (safety net against non-terminating
+    /// policies; generous relative to each game's natural horizon).
+    max_episode_steps: u64,
+}
+
+impl Env {
+    pub fn new(id: GameId, mode: ObsMode, seed: u64, env_index: u64, noop_max: u32) -> Env {
+        // Stream derivation: (seed, env_index) fully determines the RNG
+        // regardless of worker assignment — the reproducibility invariant.
+        let rng = Pcg32::new(seed ^ 0xE57A_97C3_0000_0000, 0x100 + env_index);
+        let pipeline = match mode {
+            ObsMode::Grid => None,
+            ObsMode::Atari => Some(preprocess::AtariPipeline::new()),
+        };
+        let mut env = Env {
+            game: id.build(),
+            rng,
+            mode,
+            pipeline,
+            obs: vec![0.0; mode.obs_len()],
+            noop_max,
+            episode_steps: 0,
+            episode_reward: 0.0,
+            finished_returns: Vec::new(),
+            max_episode_steps: 10_000,
+        };
+        env.reset();
+        env
+    }
+
+    pub fn mode(&self) -> ObsMode {
+        self.mode
+    }
+
+    pub fn game_id(&self) -> GameId {
+        self.game.id()
+    }
+
+    /// Current observation (refreshed by `reset`/`step`).
+    pub fn obs(&self) -> &[f32] {
+        &self.obs
+    }
+
+    /// Begin a new episode: reset game, apply 1..=noop_max no-ops
+    /// (paper §5.1), produce the first observation.
+    pub fn reset(&mut self) {
+        self.game.reset(&mut self.rng);
+        if let Some(p) = &mut self.pipeline {
+            p.reset();
+        }
+        self.episode_steps = 0;
+        self.episode_reward = 0.0;
+        let noops = if self.noop_max == 0 {
+            0
+        } else {
+            self.rng.range_inclusive(1, self.noop_max)
+        };
+        for _ in 0..noops {
+            let info = self.raw_step(A_NOOP);
+            if info.done {
+                // Pathological but possible; restart cleanly without
+                // recursing into another no-op storm.
+                self.game.reset(&mut self.rng);
+                if let Some(p) = &mut self.pipeline {
+                    p.reset();
+                }
+            }
+        }
+        self.refresh_obs();
+    }
+
+    /// One raw game transition, routed through the pipeline when present.
+    fn raw_step(&mut self, action: Action) -> StepInfo {
+        match &mut self.pipeline {
+            None => self.game.step(action, &mut self.rng),
+            Some(p) => p.step(self.game.as_mut(), action, &mut self.rng),
+        }
+    }
+
+    fn refresh_obs(&mut self) {
+        match &self.pipeline {
+            None => self.game.render_grid(&mut self.obs),
+            Some(p) => p.write_obs(&mut self.obs),
+        }
+    }
+
+    /// One agent step. Auto-resets on terminal (Algorithm 1 semantics:
+    /// "the environment is restarted whenever the final state is
+    /// reached"); the returned `done` flag marks the boundary for the
+    /// n-step return computation.
+    pub fn step(&mut self, action: Action) -> StepInfo {
+        debug_assert!(action < ACTIONS, "action {action} out of range");
+        let mut info = self.raw_step(action);
+        self.episode_steps += 1;
+        self.episode_reward += info.reward;
+        if self.episode_steps >= self.max_episode_steps {
+            info.done = true;
+        }
+        if info.done {
+            self.finished_returns.push(self.episode_reward);
+            self.reset();
+        } else {
+            self.refresh_obs();
+        }
+        info
+    }
+
+    /// Drain the rewards of episodes completed since the last call.
+    pub fn take_finished_returns(&mut self) -> Vec<f32> {
+        std::mem::take(&mut self.finished_returns)
+    }
+
+    pub fn episode_reward(&self) -> f32 {
+        self.episode_reward
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn game_id_parse_roundtrip() {
+        for g in GameId::ALL {
+            assert_eq!(GameId::parse(g.name()).unwrap(), g);
+        }
+        assert!(GameId::parse("qbert").is_err());
+    }
+
+    #[test]
+    fn env_obs_dims_match_mode() {
+        assert_eq!(ObsMode::Grid.dims(), (10, 10, 6));
+        assert_eq!(ObsMode::Atari.dims(), (84, 84, 4));
+        let env = Env::new(GameId::Catch, ObsMode::Grid, 1, 0, 30);
+        assert_eq!(env.obs().len(), GRID_OBS_LEN);
+    }
+
+    #[test]
+    fn env_is_deterministic_per_seed_and_index() {
+        let run = |seed, idx| {
+            let mut env = Env::new(GameId::Breakout, ObsMode::Grid, seed, idx, 30);
+            let mut trace = Vec::new();
+            for t in 0..200 {
+                let info = env.step(t % ACTIONS);
+                trace.push((info.reward, info.done));
+            }
+            (trace, env.obs().to_vec())
+        };
+        assert_eq!(run(7, 3), run(7, 3));
+        assert_ne!(run(7, 3).1, run(7, 4).1);
+    }
+
+    #[test]
+    fn all_games_step_without_panic_and_rewards_bounded() {
+        for id in GameId::ALL {
+            let mut env = Env::new(id, ObsMode::Grid, 42, 0, 30);
+            let mut rng = Pcg32::new(9, 9);
+            let mut total_done = 0;
+            for _ in 0..2_000 {
+                let a = rng.below(ACTIONS as u32) as usize;
+                let info = env.step(a);
+                assert!(
+                    info.reward.abs() <= 10.0,
+                    "{}: unreasonable reward {}",
+                    id.name(),
+                    info.reward
+                );
+                if info.done {
+                    total_done += 1;
+                }
+                for &v in env.obs() {
+                    assert!((0.0..=1.0).contains(&v), "{}: obs out of range", id.name());
+                }
+            }
+            // every game must terminate at least once in 2000 random steps
+            assert!(total_done > 0, "{} never terminated", id.name());
+        }
+    }
+
+    #[test]
+    fn episode_returns_are_collected() {
+        let mut env = Env::new(GameId::Catch, ObsMode::Grid, 3, 0, 5);
+        let mut rng = Pcg32::new(1, 2);
+        for _ in 0..3_000 {
+            env.step(rng.below(ACTIONS as u32) as usize);
+        }
+        let returns = env.take_finished_returns();
+        assert!(!returns.is_empty());
+        assert!(env.take_finished_returns().is_empty()); // drained
+    }
+
+    #[test]
+    fn noop_starts_randomize_initial_state() {
+        // with no-op starts, two resets of the same env generally differ
+        let mut env = Env::new(GameId::Pong, ObsMode::Grid, 5, 0, 30);
+        let first = env.obs().to_vec();
+        env.reset();
+        let second = env.obs().to_vec();
+        // (stochastic; the rng stream continues so these should differ)
+        assert_ne!(first, second);
+    }
+}

@@ -1,0 +1,264 @@
+//! Pong: two-paddle rally against a scripted opponent.
+//!
+//! The agent controls the right paddle (up/down), a tracking opponent with
+//! bounded speed controls the left. The ball bounces off the top/bottom
+//! walls and off paddles (with english: the contact point perturbs the
+//! vertical velocity). Scoring a point is +1, conceding is -1; an episode
+//! ends when either side reaches [`POINTS_TO_WIN`] points, so scores fall
+//! in [-5, +5] like a shortened Atari Pong (paper Table 1: Pong in
+//! [-21, 21]).
+//!
+//! Channels: 0 = agent paddle, 1 = ball, 2 = opponent paddle.
+
+use super::{Action, Game, GameId, StepInfo, A_DOWN, A_UP, CHANNELS, GRID, GRID_OBS_LEN};
+use crate::util::rng::Pcg32;
+
+pub const POINTS_TO_WIN: i32 = 5;
+
+pub struct Pong {
+    agent_r: i32,    // top row of the 3-cell right paddle
+    opp_r: i32,      // top row of the 3-cell left paddle
+    ball_r: i32,
+    ball_c: i32,
+    vel_r: i32,
+    vel_c: i32,
+    agent_score: i32,
+    opp_score: i32,
+    /// Opponent only moves on alternating frames (bounded reaction speed,
+    /// which makes it beatable).
+    frame: u64,
+}
+
+const PADDLE: i32 = 3;
+const AGENT_COL: i32 = GRID as i32 - 1;
+const OPP_COL: i32 = 0;
+
+impl Pong {
+    pub fn new() -> Self {
+        Pong {
+            agent_r: 3,
+            opp_r: 3,
+            ball_r: 4,
+            ball_c: 4,
+            vel_r: 1,
+            vel_c: 1,
+            agent_score: 0,
+            opp_score: 0,
+            frame: 0,
+        }
+    }
+
+    fn serve(&mut self, rng: &mut Pcg32, toward_agent: bool) {
+        self.ball_r = rng.range_inclusive(2, GRID as u32 - 3) as i32;
+        self.ball_c = GRID as i32 / 2;
+        self.vel_r = if rng.chance(0.5) { 1 } else { -1 };
+        self.vel_c = if toward_agent { 1 } else { -1 };
+    }
+
+    fn paddle_hit(paddle_top: i32, ball_r: i32) -> Option<i32> {
+        // returns contact offset -1/0/+1 if the ball is on the paddle
+        let off = ball_r - (paddle_top + 1);
+        if (-1..=1).contains(&off) {
+            Some(off)
+        } else {
+            None
+        }
+    }
+}
+
+impl Default for Pong {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Game for Pong {
+    fn id(&self) -> GameId {
+        GameId::Pong
+    }
+
+    fn reset(&mut self, rng: &mut Pcg32) {
+        self.agent_r = 3;
+        self.opp_r = 3;
+        self.agent_score = 0;
+        self.opp_score = 0;
+        self.frame = 0;
+        let toward_agent = rng.chance(0.5);
+        self.serve(rng, toward_agent);
+    }
+
+    fn step(&mut self, action: Action, rng: &mut Pcg32) -> StepInfo {
+        self.frame += 1;
+        match action {
+            A_UP => self.agent_r = (self.agent_r - 1).max(0),
+            A_DOWN => self.agent_r = (self.agent_r + 1).min(GRID as i32 - PADDLE),
+            _ => {}
+        }
+        // scripted opponent: track the ball at half speed
+        if self.frame % 2 == 0 {
+            let center = self.opp_r + 1;
+            if self.ball_r < center {
+                self.opp_r = (self.opp_r - 1).max(0);
+            } else if self.ball_r > center {
+                self.opp_r = (self.opp_r + 1).min(GRID as i32 - PADDLE);
+            }
+        }
+
+        // ball motion (one cell per axis per frame)
+        self.ball_r += self.vel_r;
+        self.ball_c += self.vel_c;
+
+        // wall bounce
+        if self.ball_r < 0 {
+            self.ball_r = 0;
+            self.vel_r = 1;
+        } else if self.ball_r >= GRID as i32 {
+            self.ball_r = GRID as i32 - 1;
+            self.vel_r = -1;
+        }
+
+        let mut reward = 0.0;
+        // paddle bounce / scoring at the columns
+        if self.ball_c >= AGENT_COL {
+            if let Some(off) = Self::paddle_hit(self.agent_r, self.ball_r) {
+                self.ball_c = AGENT_COL - 1;
+                self.vel_c = -1;
+                // english: contact point perturbs vertical velocity
+                if off != 0 {
+                    self.vel_r = off;
+                }
+            } else {
+                self.opp_score += 1;
+                reward = -1.0;
+                let done = self.opp_score >= POINTS_TO_WIN;
+                if !done {
+                    self.serve(rng, false);
+                }
+                return StepInfo { reward, done };
+            }
+        } else if self.ball_c <= OPP_COL {
+            if let Some(off) = Self::paddle_hit(self.opp_r, self.ball_r) {
+                self.ball_c = OPP_COL + 1;
+                self.vel_c = 1;
+                if off != 0 {
+                    self.vel_r = off;
+                }
+            } else {
+                self.agent_score += 1;
+                reward = 1.0;
+                let done = self.agent_score >= POINTS_TO_WIN;
+                if !done {
+                    self.serve(rng, true);
+                }
+                return StepInfo { reward, done };
+            }
+        }
+        StepInfo { reward, done: false }
+    }
+
+    fn render_grid(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), GRID_OBS_LEN);
+        out.fill(0.0);
+        let set = |out: &mut [f32], r: i32, c: i32, ch: usize| {
+            if (0..GRID as i32).contains(&r) && (0..GRID as i32).contains(&c) {
+                out[(r as usize * GRID + c as usize) * CHANNELS + ch] = 1.0;
+            }
+        };
+        for d in 0..PADDLE {
+            set(out, self.agent_r + d, AGENT_COL, 0);
+            set(out, self.opp_r + d, OPP_COL, 2);
+        }
+        set(out, self.ball_r, self.ball_c, 1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::A_NOOP;
+
+    fn fresh(seed: u64) -> (Pong, Pcg32) {
+        let mut rng = Pcg32::new(seed, 0);
+        let mut g = Pong::new();
+        g.reset(&mut rng);
+        (g, rng)
+    }
+
+    #[test]
+    fn episode_terminates_and_score_bounded() {
+        let (mut g, mut rng) = fresh(1);
+        let mut total = 0.0;
+        let mut steps = 0;
+        loop {
+            let a = rng.below(6) as usize;
+            let info = g.step(a, &mut rng);
+            total += info.reward;
+            steps += 1;
+            assert!(steps < 20_000, "episode never ended");
+            if info.done {
+                break;
+            }
+        }
+        assert!((-(POINTS_TO_WIN as f32)..=POINTS_TO_WIN as f32).contains(&total));
+    }
+
+    #[test]
+    fn tracking_oracle_beats_random() {
+        // An oracle that tracks the ball should outscore pure no-op play.
+        let play = |track: bool, seed: u64| -> f32 {
+            let (mut g, mut rng) = fresh(seed);
+            let mut total = 0.0;
+            for _ in 0..3 {
+                loop {
+                    let a = if track {
+                        let center = g.agent_r + 1;
+                        if g.ball_r < center {
+                            A_UP
+                        } else if g.ball_r > center {
+                            A_DOWN
+                        } else {
+                            A_NOOP
+                        }
+                    } else {
+                        A_NOOP
+                    };
+                    let info = g.step(a, &mut rng);
+                    total += info.reward;
+                    if info.done {
+                        g.reset(&mut rng);
+                        break;
+                    }
+                }
+            }
+            total
+        };
+        assert!(play(true, 11) > play(false, 11));
+    }
+
+    #[test]
+    fn ball_stays_in_bounds() {
+        let (mut g, mut rng) = fresh(2);
+        for _ in 0..5_000 {
+            let a = rng.below(6) as usize;
+            let info = g.step(a, &mut rng);
+            assert!((0..GRID as i32).contains(&g.ball_r));
+            assert!((0..GRID as i32).contains(&g.ball_c));
+            if info.done {
+                g.reset(&mut rng);
+            }
+        }
+    }
+
+    #[test]
+    fn render_channels_are_disjoint_entities() {
+        let (g, _) = fresh(3);
+        let mut obs = vec![0.0; GRID_OBS_LEN];
+        g.render_grid(&mut obs);
+        let count = |ch: usize| -> usize {
+            (0..GRID * GRID).filter(|i| obs[i * CHANNELS + ch] > 0.0).count()
+        };
+        assert_eq!(count(0), PADDLE as usize);
+        assert_eq!(count(2), PADDLE as usize);
+        assert_eq!(count(1), 1);
+    }
+}

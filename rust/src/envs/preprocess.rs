@@ -1,0 +1,325 @@
+//! The paper's Atari preprocessing pipeline (§5.1, after Mnih et al.).
+//!
+//! "Each action is repeated 4 times, and the per-pixel maximum value from
+//!  the two latest frames is kept. The frame is then scaled down from
+//!  210x160 pixels and 3 color channels to 84x84 pixels and a single
+//!  color channel for pixel intensity."  Plus 4-frame stacking (the DQN
+//!  input convention the referenced architectures require).
+//!
+//! Implemented from scratch: luminance grayscale, area-average resampling
+//! (210x160 -> 84x84 with fractional bin edges), frame max, action repeat
+//! with early termination, and the stack buffer.
+
+use super::atari::{RgbFrame, FRAME_H, FRAME_W};
+use super::{Action, Game, StepInfo};
+use crate::util::rng::Pcg32;
+
+/// Output side length (84).
+pub const OUT: usize = 84;
+/// Stacked frames per observation.
+pub const STACK: usize = 4;
+/// Action repeat (each agent action advances the game 4 frames).
+pub const ACTION_REPEAT: usize = 4;
+
+/// Precomputed 1-D area-average resampling plan: for each output index, a
+/// span of (input index, weight) pairs integrating the input over the
+/// output pixel's footprint.
+struct ResamplePlan {
+    spans: Vec<Vec<(usize, f32)>>,
+}
+
+impl ResamplePlan {
+    fn new(input: usize, output: usize) -> Self {
+        let scale = input as f64 / output as f64;
+        let mut spans = Vec::with_capacity(output);
+        for o in 0..output {
+            let start = o as f64 * scale;
+            let end = (o + 1) as f64 * scale;
+            let mut span = Vec::new();
+            let mut i = start.floor() as usize;
+            while (i as f64) < end && i < input {
+                let lo = start.max(i as f64);
+                let hi = end.min((i + 1) as f64);
+                let w = ((hi - lo) / scale) as f32;
+                if w > 0.0 {
+                    span.push((i, w));
+                }
+                i += 1;
+            }
+            spans.push(span);
+        }
+        ResamplePlan { spans }
+    }
+}
+
+/// 210x160 grayscale -> 84x84 area-average resampler with cached plans.
+pub struct Resampler {
+    rows: ResamplePlan,
+    cols: ResamplePlan,
+    /// scratch: row-resampled intermediate (OUT x FRAME_W)
+    tmp: Vec<f32>,
+}
+
+impl Resampler {
+    pub fn new() -> Self {
+        Resampler {
+            rows: ResamplePlan::new(FRAME_H, OUT),
+            cols: ResamplePlan::new(FRAME_W, OUT),
+            tmp: vec![0.0; OUT * FRAME_W],
+        }
+    }
+
+    /// `src` is FRAME_H x FRAME_W grayscale; writes OUT x OUT into `dst`.
+    pub fn resize(&mut self, src: &[f32], dst: &mut [f32]) {
+        debug_assert_eq!(src.len(), FRAME_H * FRAME_W);
+        debug_assert_eq!(dst.len(), OUT * OUT);
+        // rows first
+        for (or, span) in self.rows.spans.iter().enumerate() {
+            let out_row = &mut self.tmp[or * FRAME_W..(or + 1) * FRAME_W];
+            out_row.fill(0.0);
+            for &(ir, w) in span {
+                let in_row = &src[ir * FRAME_W..(ir + 1) * FRAME_W];
+                for (o, &v) in out_row.iter_mut().zip(in_row.iter()) {
+                    *o += w * v;
+                }
+            }
+        }
+        // then columns
+        for or in 0..OUT {
+            let row = &self.tmp[or * FRAME_W..(or + 1) * FRAME_W];
+            for (oc, span) in self.cols.spans.iter().enumerate() {
+                let mut acc = 0.0;
+                for &(ic, w) in span {
+                    acc += w * row[ic];
+                }
+                dst[or * OUT + oc] = acc;
+            }
+        }
+    }
+}
+
+impl Default for Resampler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// ITU-R 601 luma from an RGB frame, scaled to [0, 1].
+pub fn grayscale(rgb: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(rgb.len(), out.len() * 3);
+    for (i, px) in rgb.chunks_exact(3).enumerate() {
+        out[i] = (0.299 * px[0] as f32 + 0.587 * px[1] as f32 + 0.114 * px[2] as f32) / 255.0;
+    }
+}
+
+/// The full per-environment pipeline state.
+pub struct AtariPipeline {
+    frame_a: RgbFrame,
+    frame_b: RgbFrame,
+    gray: Vec<f32>,
+    gray_prev: Vec<f32>,
+    resampler: Resampler,
+    /// Ring of STACK processed 84x84 planes; `head` = most recent.
+    stack: Vec<f32>,
+    head: usize,
+}
+
+impl AtariPipeline {
+    pub fn new() -> Self {
+        AtariPipeline {
+            frame_a: RgbFrame::new(),
+            frame_b: RgbFrame::new(),
+            gray: vec![0.0; FRAME_H * FRAME_W],
+            gray_prev: vec![0.0; FRAME_H * FRAME_W],
+            resampler: Resampler::new(),
+            stack: vec![0.0; STACK * OUT * OUT],
+            head: 0,
+        }
+    }
+
+    /// Clear the stack (start of episode).
+    pub fn reset(&mut self) {
+        self.stack.fill(0.0);
+        self.gray_prev.fill(0.0);
+        self.head = 0;
+    }
+
+    /// One agent step = ACTION_REPEAT game frames; keeps the per-pixel max
+    /// of the two latest frames, grayscales, downsamples and pushes onto
+    /// the stack. Rewards accumulate; `done` short-circuits the repeat.
+    pub fn step(&mut self, game: &mut dyn Game, action: Action, rng: &mut Pcg32) -> StepInfo {
+        let mut total = StepInfo::default();
+        for k in 0..ACTION_REPEAT {
+            let info = game.step(action, rng);
+            total.reward += info.reward;
+            // render the last two frames only (earlier ones are discarded
+            // by the max anyway)
+            if k == ACTION_REPEAT - 2 {
+                self.frame_a.render(game);
+            } else if k == ACTION_REPEAT - 1 || info.done {
+                self.frame_b.render(game);
+            }
+            if info.done {
+                total.done = true;
+                break;
+            }
+        }
+        // per-pixel max of the two latest frames
+        grayscale(&self.frame_b.data, &mut self.gray);
+        grayscale(&self.frame_a.data, &mut self.gray_prev);
+        for (g, p) in self.gray.iter_mut().zip(self.gray_prev.iter()) {
+            *g = g.max(*p);
+        }
+        // downsample into the next stack slot
+        self.head = (self.head + 1) % STACK;
+        let plane_len = OUT * OUT;
+        let dst = &mut self.stack[self.head * plane_len..(self.head + 1) * plane_len];
+        self.resampler.resize(&self.gray, dst);
+        total
+    }
+
+    /// Write the (OUT, OUT, STACK) HWC observation; channel 0 = oldest.
+    pub fn write_obs(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), OUT * OUT * STACK);
+        let plane_len = OUT * OUT;
+        for age in 0..STACK {
+            // channel index: oldest first
+            let slot = (self.head + 1 + age) % STACK;
+            let plane = &self.stack[slot * plane_len..(slot + 1) * plane_len];
+            for (i, &v) in plane.iter().enumerate() {
+                out[i * STACK + age] = v;
+            }
+        }
+    }
+}
+
+impl Default for AtariPipeline {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::GameId;
+    use crate::util::prop;
+
+    #[test]
+    fn resample_preserves_constant_images() {
+        let mut r = Resampler::new();
+        let src = vec![0.7f32; FRAME_H * FRAME_W];
+        let mut dst = vec![0.0; OUT * OUT];
+        r.resize(&src, &mut dst);
+        for &v in &dst {
+            assert!((v - 0.7).abs() < 1e-5, "{v}");
+        }
+    }
+
+    #[test]
+    fn resample_preserves_mean_brightness() {
+        // area averaging is integral-preserving up to fp error
+        let mut r = Resampler::new();
+        let mut rng = crate::util::rng::Pcg32::new(4, 0);
+        let src: Vec<f32> = (0..FRAME_H * FRAME_W).map(|_| rng.next_f32()).collect();
+        let mut dst = vec![0.0; OUT * OUT];
+        r.resize(&src, &mut dst);
+        let mean_in: f32 = src.iter().sum::<f32>() / src.len() as f32;
+        let mean_out: f32 = dst.iter().sum::<f32>() / dst.len() as f32;
+        assert!((mean_in - mean_out).abs() < 1e-3, "{mean_in} vs {mean_out}");
+    }
+
+    #[test]
+    fn resample_plan_weights_sum_to_one() {
+        prop::check("plan-weights", 20, |g| {
+            let input = g.usize_in(20, 400);
+            let output = g.usize_in(5, input);
+            let plan = ResamplePlan::new(input, output);
+            for (o, span) in plan.spans.iter().enumerate() {
+                let sum: f32 = span.iter().map(|&(_, w)| w).sum();
+                if (sum - 1.0).abs() > 1e-4 {
+                    return Err(format!("in={input} out={output} o={o} sum={sum}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn grayscale_matches_luma_coefficients() {
+        let rgb = [255u8, 0, 0, 0, 255, 0, 0, 0, 255];
+        let mut out = [0.0f32; 3];
+        grayscale(&rgb, &mut out);
+        assert!((out[0] - 0.299).abs() < 1e-5);
+        assert!((out[1] - 0.587).abs() < 1e-5);
+        assert!((out[2] - 0.114).abs() < 1e-5);
+    }
+
+    #[test]
+    fn pipeline_produces_stacked_observation() {
+        let mut rng = crate::util::rng::Pcg32::new(7, 0);
+        let mut game = GameId::Pong.build();
+        game.reset(&mut rng);
+        let mut p = AtariPipeline::new();
+        p.reset();
+        let mut obs = vec![0.0; OUT * OUT * STACK];
+        // after one step only the newest channel is populated
+        p.step(game.as_mut(), 0, &mut rng);
+        p.write_obs(&mut obs);
+        let plane_sum = |obs: &[f32], ch: usize| -> f32 {
+            (0..OUT * OUT).map(|i| obs[i * STACK + ch]).sum()
+        };
+        assert!(plane_sum(&obs, STACK - 1) > 0.0, "newest channel empty");
+        assert_eq!(plane_sum(&obs, 0), 0.0, "oldest channel should be zero");
+        // after STACK steps all channels are populated
+        for _ in 0..STACK {
+            p.step(game.as_mut(), 0, &mut rng);
+        }
+        p.write_obs(&mut obs);
+        for ch in 0..STACK {
+            assert!(plane_sum(&obs, ch) > 0.0, "channel {ch} empty");
+        }
+    }
+
+    #[test]
+    fn pipeline_obs_values_in_unit_range() {
+        let mut rng = crate::util::rng::Pcg32::new(8, 0);
+        let mut game = GameId::Breakout.build();
+        game.reset(&mut rng);
+        let mut p = AtariPipeline::new();
+        let mut obs = vec![0.0; OUT * OUT * STACK];
+        for t in 0..20 {
+            let info = p.step(game.as_mut(), t % 6, &mut rng);
+            if info.done {
+                game.reset(&mut rng);
+                p.reset();
+            }
+        }
+        p.write_obs(&mut obs);
+        for &v in &obs {
+            assert!((0.0..=1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn action_repeat_accumulates_reward() {
+        // Catch pays once per drop; with repeat 4 the reward arrives inside
+        // one pipeline step as an accumulated value.
+        let mut rng = crate::util::rng::Pcg32::new(9, 0);
+        let mut game = GameId::Catch.build();
+        game.reset(&mut rng);
+        let mut p = AtariPipeline::new();
+        let mut got_nonzero = false;
+        for _ in 0..200 {
+            let info = p.step(game.as_mut(), 0, &mut rng);
+            if info.reward != 0.0 {
+                got_nonzero = true;
+            }
+            if info.done {
+                game.reset(&mut rng);
+                p.reset();
+            }
+        }
+        assert!(got_nonzero);
+    }
+}

@@ -1,0 +1,306 @@
+//! Space Invaders (MinAtar-style): marching alien grid, player cannon.
+//!
+//! A 4x6 block of aliens marches horizontally, dropping one row at each
+//! wall hit and speeding up as it thins. The player moves along the
+//! bottom and fires (one friendly bullet in flight at a time, gated by a
+//! cooldown); aliens fire back randomly. +1 per alien; clearing the wave
+//! spawns a faster one. Death: player hit, or aliens reach the bottom row.
+//!
+//! Channels: 0 = player, 1 = friendly bullet, 2 = alien, 3 = enemy bullet.
+
+use super::{Action, Game, GameId, StepInfo, A_FIRE, A_LEFT, A_RIGHT, CHANNELS, GRID, GRID_OBS_LEN};
+use crate::util::rng::Pcg32;
+
+pub struct SpaceInvaders {
+    player: i32,
+    shot: Option<(i32, i32)>,
+    shot_cooldown: u32,
+    aliens: [[bool; GRID]; GRID],
+    dir: i32,
+    move_timer: u32,
+    enemy_shots: Vec<(i32, i32)>,
+    wave: u32,
+}
+
+impl SpaceInvaders {
+    pub fn new() -> Self {
+        SpaceInvaders {
+            player: GRID as i32 / 2,
+            shot: None,
+            shot_cooldown: 0,
+            aliens: [[false; GRID]; GRID],
+            dir: 1,
+            move_timer: 0,
+            enemy_shots: Vec::new(),
+            wave: 0,
+        }
+    }
+
+    fn spawn_wave(&mut self) {
+        self.aliens = [[false; GRID]; GRID];
+        for r in 1..5 {
+            for c in 2..8 {
+                self.aliens[r][c] = true;
+            }
+        }
+        self.dir = 1;
+        self.move_timer = 0;
+    }
+
+    fn alien_count(&self) -> usize {
+        self.aliens.iter().flatten().filter(|&&a| a).count()
+    }
+
+    /// Frames between alien moves: faster as the wave thins and deepens.
+    fn move_period(&self) -> u32 {
+        let n = self.alien_count() as u32;
+        (n / 4 + 2).saturating_sub(self.wave.min(2)).max(1)
+    }
+
+    fn alien_bounds(&self) -> Option<(usize, usize, usize)> {
+        // (min_col, max_col, max_row)
+        let mut min_c = GRID;
+        let mut max_c = 0;
+        let mut max_r = 0;
+        let mut any = false;
+        for r in 0..GRID {
+            for c in 0..GRID {
+                if self.aliens[r][c] {
+                    any = true;
+                    min_c = min_c.min(c);
+                    max_c = max_c.max(c);
+                    max_r = max_r.max(r);
+                }
+            }
+        }
+        any.then_some((min_c, max_c, max_r))
+    }
+}
+
+impl Default for SpaceInvaders {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Game for SpaceInvaders {
+    fn id(&self) -> GameId {
+        GameId::SpaceInvaders
+    }
+
+    fn reset(&mut self, _rng: &mut Pcg32) {
+        self.player = GRID as i32 / 2;
+        self.shot = None;
+        self.shot_cooldown = 0;
+        self.enemy_shots.clear();
+        self.wave = 0;
+        self.spawn_wave();
+    }
+
+    fn step(&mut self, action: Action, rng: &mut Pcg32) -> StepInfo {
+        let mut reward = 0.0;
+        match action {
+            A_LEFT => self.player = (self.player - 1).max(0),
+            A_RIGHT => self.player = (self.player + 1).min(GRID as i32 - 1),
+            A_FIRE => {
+                if self.shot.is_none() && self.shot_cooldown == 0 {
+                    self.shot = Some((GRID as i32 - 2, self.player));
+                    self.shot_cooldown = 2;
+                }
+            }
+            _ => {}
+        }
+        self.shot_cooldown = self.shot_cooldown.saturating_sub(1);
+
+        // friendly bullet: two cells per frame, hit test per cell
+        if let Some((mut r, c)) = self.shot.take() {
+            let mut alive = true;
+            for _ in 0..2 {
+                r -= 1;
+                if r < 0 {
+                    alive = false;
+                    break;
+                }
+                if self.aliens[r as usize][c as usize] {
+                    self.aliens[r as usize][c as usize] = false;
+                    reward += 1.0;
+                    alive = false;
+                    break;
+                }
+            }
+            if alive {
+                self.shot = Some((r, c));
+            }
+        }
+
+        // alien march
+        self.move_timer += 1;
+        if self.move_timer >= self.move_period() {
+            self.move_timer = 0;
+            if let Some((min_c, max_c, _)) = self.alien_bounds() {
+                let hits_wall = (self.dir > 0 && max_c + 1 >= GRID)
+                    || (self.dir < 0 && min_c == 0);
+                if hits_wall {
+                    // descend one row, reverse
+                    let mut next = [[false; GRID]; GRID];
+                    for r in (0..GRID - 1).rev() {
+                        for c in 0..GRID {
+                            if self.aliens[r][c] {
+                                next[r + 1][c] = true;
+                            }
+                        }
+                    }
+                    self.aliens = next;
+                    self.dir = -self.dir;
+                } else {
+                    let mut next = [[false; GRID]; GRID];
+                    for r in 0..GRID {
+                        for c in 0..GRID {
+                            if self.aliens[r][c] {
+                                next[r][(c as i32 + self.dir) as usize] = true;
+                            }
+                        }
+                    }
+                    self.aliens = next;
+                }
+            }
+        }
+
+        // aliens reaching the bottom row = game over
+        if let Some((_, _, max_r)) = self.alien_bounds() {
+            if max_r >= GRID - 1 {
+                return StepInfo { reward, done: true };
+            }
+        }
+
+        // alien fire: bottom-most alien of a random column occasionally shoots
+        if self.enemy_shots.len() < 3 && rng.chance(0.08) {
+            let cols: Vec<usize> = (0..GRID)
+                .filter(|&c| (0..GRID).any(|r| self.aliens[r][c]))
+                .collect();
+            if !cols.is_empty() {
+                let c = cols[rng.below(cols.len() as u32) as usize];
+                if let Some(r) = (0..GRID).rev().find(|&r| self.aliens[r][c]) {
+                    self.enemy_shots.push((r as i32 + 1, c as i32));
+                }
+            }
+        }
+
+        // enemy bullets fall
+        let player = self.player;
+        let mut hit = false;
+        self.enemy_shots.retain_mut(|(r, c)| {
+            *r += 1;
+            if *r == GRID as i32 - 1 && *c == player {
+                hit = true;
+            }
+            *r < GRID as i32
+        });
+        if hit {
+            return StepInfo { reward, done: true };
+        }
+
+        // wave cleared -> next, faster wave
+        if self.alien_count() == 0 {
+            self.wave += 1;
+            self.spawn_wave();
+        }
+        StepInfo { reward, done: false }
+    }
+
+    fn render_grid(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), GRID_OBS_LEN);
+        out.fill(0.0);
+        let set = |out: &mut [f32], r: i32, c: i32, ch: usize| {
+            if (0..GRID as i32).contains(&r) && (0..GRID as i32).contains(&c) {
+                out[(r as usize * GRID + c as usize) * CHANNELS + ch] = 1.0;
+            }
+        };
+        set(out, GRID as i32 - 1, self.player, 0);
+        if let Some((r, c)) = self.shot {
+            set(out, r, c, 1);
+        }
+        for r in 0..GRID {
+            for c in 0..GRID {
+                if self.aliens[r][c] {
+                    set(out, r as i32, c as i32, 2);
+                }
+            }
+        }
+        for &(r, c) in &self.enemy_shots {
+            set(out, r, c, 3);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::A_NOOP;
+
+    fn fresh(seed: u64) -> (SpaceInvaders, Pcg32) {
+        let mut rng = Pcg32::new(seed, 0);
+        let mut g = SpaceInvaders::new();
+        g.reset(&mut rng);
+        (g, rng)
+    }
+
+    #[test]
+    fn wave_starts_with_24_aliens() {
+        let (g, _) = fresh(0);
+        assert_eq!(g.alien_count(), 24);
+    }
+
+    #[test]
+    fn firing_kills_aliens_and_rewards() {
+        let (mut g, mut rng) = fresh(1);
+        let mut total = 0.0;
+        for t in 0..600 {
+            let a = if t % 3 == 0 { A_FIRE } else { A_NOOP };
+            let info = g.step(a, &mut rng);
+            total += info.reward;
+            if info.done {
+                g.reset(&mut rng);
+            }
+        }
+        assert!(total > 0.0, "camping fire never scored");
+    }
+
+    #[test]
+    fn aliens_march_and_descend() {
+        let (mut g, mut rng) = fresh(2);
+        let top_before = (0..GRID).find(|&r| (0..GRID).any(|c| g.aliens[r][c])).unwrap();
+        for _ in 0..200 {
+            let info = g.step(A_NOOP, &mut rng);
+            if info.done {
+                return; // descended into the player: also proves descent
+            }
+        }
+        let top_after = (0..GRID).find(|&r| (0..GRID).any(|c| g.aliens[r][c])).unwrap();
+        assert!(top_after > top_before, "aliens never descended");
+    }
+
+    #[test]
+    fn episode_eventually_ends_without_defense() {
+        let (mut g, mut rng) = fresh(3);
+        let mut ended = false;
+        for _ in 0..5_000 {
+            if g.step(A_NOOP, &mut rng).done {
+                ended = true;
+                break;
+            }
+        }
+        assert!(ended);
+    }
+
+    #[test]
+    fn one_friendly_bullet_in_flight() {
+        let (mut g, mut rng) = fresh(4);
+        g.step(A_FIRE, &mut rng);
+        let first = g.shot;
+        g.step(A_FIRE, &mut rng); // second fire ignored while in flight
+        if let (Some(a), Some(b)) = (first, g.shot) {
+            assert_eq!(a.1, b.1, "same column = same bullet");
+        }
+    }
+}

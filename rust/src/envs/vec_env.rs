@@ -1,0 +1,359 @@
+//! The paper's `n_e` environments stepped by `n_w` parallel workers (§3).
+//!
+//! "A set of n_w workers then apply all the actions to their respective
+//!  environments in parallel, and store the observed experiences."
+//!
+//! Each worker thread *owns* a contiguous slice of the environment
+//! instances (ceil-split), so stepping requires no locking on game state.
+//! The master broadcasts the action vector, workers step their slice and
+//! send back (rewards, dones, observations); buffers are recycled between
+//! steps to keep the hot loop allocation-free.
+//!
+//! Reproducibility invariant: each environment's RNG stream depends only
+//! on (run seed, env index) — never on `n_w` — so a run is bit-identical
+//! for any worker count (property-tested below).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::{Action, Env, GameId, ObsMode, StepInfo};
+
+/// Per-worker reply with recycled buffers.
+struct Reply {
+    worker: usize,
+    rewards: Vec<f32>,
+    dones: Vec<bool>,
+    obs: Vec<f32>,
+    /// episode returns finished during this step, (env_global_idx, return)
+    finished: Vec<(usize, f32)>,
+}
+
+enum Cmd {
+    /// Step the worker's envs with actions[range] and report back.
+    Step { actions: Arc<Vec<Action>>, reply_buf: Box<Reply> },
+    /// Re-seed + reset all envs and report observations.
+    Reset { reply_buf: Box<Reply> },
+    Stop,
+}
+
+struct Worker {
+    tx: Sender<Cmd>,
+    handle: Option<JoinHandle<()>>,
+    /// global env index range [start, end)
+    start: usize,
+    end: usize,
+}
+
+/// Vectorized environment: the master-facing batch API of Figure 1.
+pub struct VecEnv {
+    workers: Vec<Worker>,
+    reply_rx: Receiver<Reply>,
+    n_e: usize,
+    obs_len: usize,
+    mode: ObsMode,
+    // assembled batch state
+    obs: Vec<f32>,
+    rewards: Vec<f32>,
+    dones: Vec<bool>,
+    finished_returns: Vec<f32>,
+    /// buffers in flight get recycled through here
+    spare: Vec<Box<Reply>>,
+}
+
+fn split_ranges(n_e: usize, n_w: usize) -> Vec<(usize, usize)> {
+    // ceil-split: first (n_e % n_w) workers get one extra env
+    let base = n_e / n_w;
+    let extra = n_e % n_w;
+    let mut out = Vec::with_capacity(n_w);
+    let mut start = 0;
+    for w in 0..n_w {
+        let len = base + usize::from(w < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+impl VecEnv {
+    pub fn new(game: GameId, mode: ObsMode, n_e: usize, n_w: usize, seed: u64, noop_max: u32) -> Self {
+        assert!(n_e >= 1 && n_w >= 1 && n_w <= n_e, "bad n_e={n_e}/n_w={n_w}");
+        let obs_len = mode.obs_len();
+        let (reply_tx, reply_rx) = channel::<Reply>();
+        let mut workers = Vec::with_capacity(n_w);
+        for (w, (start, end)) in split_ranges(n_e, n_w).into_iter().enumerate() {
+            let (tx, rx) = channel::<Cmd>();
+            let reply_tx = reply_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("paac-env-{w}"))
+                .spawn(move || {
+                    // The worker owns its env slice; env RNG streams are a
+                    // function of (seed, global env index) only.
+                    let mut envs: Vec<Env> = (start..end)
+                        .map(|i| Env::new(game, mode, seed, i as u64, noop_max))
+                        .collect();
+                    while let Ok(cmd) = rx.recv() {
+                        match cmd {
+                            Cmd::Step { actions, mut reply_buf } => {
+                                let r = reply_buf.as_mut();
+                                r.rewards.clear();
+                                r.dones.clear();
+                                r.obs.clear();
+                                r.finished.clear();
+                                r.worker = w;
+                                for (k, env) in envs.iter_mut().enumerate() {
+                                    let info: StepInfo = env.step(actions[start + k]);
+                                    r.rewards.push(info.reward);
+                                    r.dones.push(info.done);
+                                    r.obs.extend_from_slice(env.obs());
+                                    for ret in env.take_finished_returns() {
+                                        r.finished.push((start + k, ret));
+                                    }
+                                }
+                                if reply_tx.send(*reply_buf).is_err() {
+                                    break;
+                                }
+                            }
+                            Cmd::Reset { mut reply_buf } => {
+                                let r = reply_buf.as_mut();
+                                r.rewards.clear();
+                                r.dones.clear();
+                                r.obs.clear();
+                                r.finished.clear();
+                                r.worker = w;
+                                for env in envs.iter_mut() {
+                                    env.reset();
+                                    r.rewards.push(0.0);
+                                    r.dones.push(false);
+                                    r.obs.extend_from_slice(env.obs());
+                                }
+                                if reply_tx.send(*reply_buf).is_err() {
+                                    break;
+                                }
+                            }
+                            Cmd::Stop => break,
+                        }
+                    }
+                })
+                .expect("spawn env worker");
+            workers.push(Worker { tx, handle: Some(handle), start, end });
+        }
+        let spare = (0..n_w)
+            .map(|_| {
+                Box::new(Reply {
+                    worker: 0,
+                    rewards: Vec::new(),
+                    dones: Vec::new(),
+                    obs: Vec::new(),
+                    finished: Vec::new(),
+                })
+            })
+            .collect();
+        let mut ve = VecEnv {
+            workers,
+            reply_rx,
+            n_e,
+            obs_len,
+            mode,
+            obs: vec![0.0; n_e * obs_len],
+            rewards: vec![0.0; n_e],
+            dones: vec![false; n_e],
+            finished_returns: Vec::new(),
+            spare,
+        };
+        ve.reset();
+        ve
+    }
+
+    pub fn n_e(&self) -> usize {
+        self.n_e
+    }
+
+    pub fn mode(&self) -> ObsMode {
+        self.mode
+    }
+
+    pub fn obs_len(&self) -> usize {
+        self.obs_len
+    }
+
+    /// The assembled (n_e, H, W, C) observation batch, env-major.
+    pub fn obs_batch(&self) -> &[f32] {
+        &self.obs
+    }
+
+    pub fn rewards(&self) -> &[f32] {
+        &self.rewards
+    }
+
+    pub fn dones(&self) -> &[bool] {
+        &self.dones
+    }
+
+    /// Episode returns completed since the last drain (for score curves).
+    pub fn take_finished_returns(&mut self) -> Vec<f32> {
+        std::mem::take(&mut self.finished_returns)
+    }
+
+    fn dispatch_and_collect(&mut self, make_cmd: impl Fn(Box<Reply>) -> Cmd) {
+        let n_w = self.workers.len();
+        for w in 0..n_w {
+            let buf = self.spare.pop().expect("spare buffer");
+            self.workers[w]
+                .tx
+                .send(make_cmd(buf))
+                .expect("env worker died");
+        }
+        for _ in 0..n_w {
+            let reply = self.reply_rx.recv().expect("env worker died");
+            let (start, end) = {
+                let w = &self.workers[reply.worker];
+                (w.start, w.end)
+            };
+            let n = end - start;
+            debug_assert_eq!(reply.rewards.len(), n);
+            self.rewards[start..end].copy_from_slice(&reply.rewards);
+            self.dones[start..end].copy_from_slice(&reply.dones);
+            self.obs[start * self.obs_len..end * self.obs_len]
+                .copy_from_slice(&reply.obs);
+            self.finished_returns
+                .extend(reply.finished.iter().map(|&(_, r)| r));
+            self.spare.push(Box::new(reply));
+        }
+    }
+
+    /// Apply one action per environment, in parallel across the workers.
+    /// After return, `obs_batch`/`rewards`/`dones` hold the step results.
+    pub fn step(&mut self, actions: &[Action]) {
+        assert_eq!(actions.len(), self.n_e, "need one action per env");
+        let actions = Arc::new(actions.to_vec());
+        self.dispatch_and_collect(|reply_buf| Cmd::Step { actions: actions.clone(), reply_buf });
+    }
+
+    /// Reset every environment (fresh episodes, new no-op starts).
+    pub fn reset(&mut self) {
+        self.dispatch_and_collect(|reply_buf| Cmd::Reset { reply_buf });
+        self.rewards.fill(0.0);
+        self.dones.fill(false);
+        self.finished_returns.clear();
+    }
+}
+
+impl Drop for VecEnv {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Cmd::Stop);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::{ACTIONS, GRID_OBS_LEN};
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn split_ranges_cover_exactly() {
+        prop::check("split-cover", 50, |g| {
+            let n_e = g.usize_in(1, 300);
+            let n_w = g.usize_in(1, n_e);
+            let ranges = split_ranges(n_e, n_w);
+            if ranges.len() != n_w {
+                return Err("wrong worker count".into());
+            }
+            let mut next = 0;
+            for (s, e) in ranges {
+                if s != next || e < s {
+                    return Err(format!("gap at {s}"));
+                }
+                next = e;
+            }
+            if next != n_e {
+                return Err(format!("covered {next} != {n_e}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_layout_is_env_major() {
+        let ve = VecEnv::new(GameId::Catch, ObsMode::Grid, 4, 2, 1, 0);
+        assert_eq!(ve.obs_batch().len(), 4 * GRID_OBS_LEN);
+        assert_eq!(ve.rewards().len(), 4);
+    }
+
+    #[test]
+    fn serial_equivalence_any_worker_count() {
+        // THE invariant: n_w must not change any env's trajectory.
+        let run = |n_w: usize| {
+            let mut ve = VecEnv::new(GameId::Breakout, ObsMode::Grid, 6, n_w, 42, 10);
+            let mut rng = Pcg32::new(5, 5);
+            let mut reward_trace = Vec::new();
+            for _ in 0..120 {
+                let actions: Vec<Action> =
+                    (0..6).map(|_| rng.below(ACTIONS as u32) as usize).collect();
+                ve.step(&actions);
+                reward_trace.extend_from_slice(ve.rewards());
+            }
+            (reward_trace, ve.obs_batch().to_vec())
+        };
+        let base = run(1);
+        for n_w in [2, 3, 6] {
+            assert_eq!(run(n_w), base, "n_w={n_w} diverged from serial");
+        }
+    }
+
+    #[test]
+    fn dones_trigger_auto_reset_with_fresh_obs() {
+        let mut ve = VecEnv::new(GameId::Catch, ObsMode::Grid, 2, 1, 7, 0);
+        let mut rng = Pcg32::new(8, 8);
+        let mut saw_done = false;
+        for _ in 0..500 {
+            let actions: Vec<Action> =
+                (0..2).map(|_| rng.below(ACTIONS as u32) as usize).collect();
+            ve.step(&actions);
+            if ve.dones().iter().any(|&d| d) {
+                saw_done = true;
+                // obs after done are from the fresh episode: non-degenerate
+                let sum: f32 = ve.obs_batch().iter().sum();
+                assert!(sum > 0.0);
+                break;
+            }
+        }
+        assert!(saw_done);
+    }
+
+    #[test]
+    fn finished_returns_flow_up() {
+        let mut ve = VecEnv::new(GameId::Catch, ObsMode::Grid, 4, 2, 3, 0);
+        let mut rng = Pcg32::new(2, 2);
+        let mut collected = Vec::new();
+        for _ in 0..800 {
+            let actions: Vec<Action> =
+                (0..4).map(|_| rng.below(ACTIONS as u32) as usize).collect();
+            ve.step(&actions);
+            collected.extend(ve.take_finished_returns());
+        }
+        assert!(!collected.is_empty());
+        // catch scores are in [-10, 10]
+        for r in collected {
+            assert!((-10.0..=10.0).contains(&r));
+        }
+    }
+
+    #[test]
+    fn step_panics_on_wrong_action_count() {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut ve = VecEnv::new(GameId::Catch, ObsMode::Grid, 3, 1, 1, 0);
+            ve.step(&[0, 1]); // 2 actions for 3 envs
+        }));
+        assert!(result.is_err());
+    }
+}

@@ -1,0 +1,91 @@
+//! Unified error type for the PAAC crate.
+
+use thiserror::Error;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All failure modes surfaced by the public API.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// PJRT / XLA failures (compile, execute, literal conversion).
+    #[error("xla: {0}")]
+    Xla(String),
+
+    /// Artifact set problems: missing files, manifest/config mismatch.
+    #[error("artifact: {0}")]
+    Artifact(String),
+
+    /// Configuration parse/validation errors.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// JSON parse errors (manifest, metric files).
+    #[error("json: {msg} at byte {pos}")]
+    Json { msg: String, pos: usize },
+
+    /// TOML parse errors (run configs).
+    #[error("toml: {msg} at line {line}")]
+    Toml { msg: String, line: usize },
+
+    /// CLI usage errors.
+    #[error("cli: {0}")]
+    Cli(String),
+
+    /// Checkpoint container corruption / version mismatch.
+    #[error("checkpoint: {0}")]
+    Checkpoint(String),
+
+    /// Environment misuse (acting on a terminal state, bad action id).
+    #[error("env: {0}")]
+    Env(String),
+
+    /// Shape/dtype mismatches crossing the Rust<->artifact boundary.
+    #[error("shape: {0}")]
+    Shape(String),
+
+    /// Training-loop invariant violations (divergence, NaN loss).
+    #[error("train: {0}")]
+    Train(String),
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl Error {
+    /// Helper for config errors.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+
+    /// Helper for artifact errors.
+    pub fn artifact(msg: impl Into<String>) -> Self {
+        Error::Artifact(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display_includes_context() {
+        let e = Error::Json { msg: "unexpected token".into(), pos: 17 };
+        assert_eq!(e.to_string(), "json: unexpected token at byte 17");
+        let e = Error::Toml { msg: "bad value".into(), line: 3 };
+        assert_eq!(e.to_string(), "toml: bad value at line 3");
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,57 @@
+//! # PAAC — Parallel Advantage Actor-Critic
+//!
+//! A from-scratch reproduction of *Efficient Parallel Methods for Deep
+//! Reinforcement Learning* (Clemente, Castejón, Chandra; 2017) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 1/2 (build time)** — the actor-critic networks, fused loss and
+//!   optimizer are authored in JAX + Pallas (`python/compile/`) and
+//!   AOT-lowered to HLO-text artifacts (`make artifacts`).
+//! * **Layer 3 (this crate)** — the paper's contribution: a synchronous
+//!   parallel coordinator that holds the *single* copy of the parameters,
+//!   evaluates the policy for all `n_e` environments in one batched device
+//!   call, steps the environments with `n_w` workers, and applies one
+//!   synchronous n-step advantage actor-critic update per
+//!   `n_e · t_max` experiences ([`algo::paac`], Algorithm 1 of the paper).
+//!
+//! Python never runs on the training path: the Rust binary loads the HLO
+//! artifacts through PJRT ([`runtime`]) and is self-contained afterwards.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use paac::prelude::*;
+//!
+//! let cfg = Config::preset_quickstart();
+//! let mut trainer = Trainer::new(cfg).unwrap();
+//! let report = trainer.run().unwrap();
+//! println!("final score: {:?}", report.final_score);
+//! ```
+//!
+//! See `examples/` for runnable end-to-end drivers and `rust/benches/` for
+//! the regeneration harness of every table and figure in the paper.
+
+pub mod algo;
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod envs;
+pub mod error;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod util;
+
+
+/// Convenience re-exports for downstream users.
+pub mod prelude {
+    pub use crate::algo::evaluator::{EvalProtocol, EvalReport};
+    pub use crate::algo::paac::Paac;
+    pub use crate::config::{Algo, Config};
+    pub use crate::coordinator::master::{TrainReport, Trainer};
+    pub use crate::envs::{Action, Env, GameId, ObsMode, VecEnv};
+    pub use crate::error::{Error, Result};
+    pub use crate::model::PolicyModel;
+    pub use crate::runtime::{Artifacts, ParamSet, Runtime};
+}

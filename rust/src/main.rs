@@ -1,0 +1,275 @@
+//! PAAC command-line interface.
+//!
+//! ```text
+//! paac train   [--config cfg.toml] [--game pong] [--algo paac|a3c|ga3c]
+//!              [--n-e 32] [--n-w 8] [--lr 0.0224] [--steps 1000000] ...
+//! paac eval    --ckpt runs/<name>/final.ckpt [--game pong] [--episodes 30]
+//! paac sweep   [--game breakout] [--steps 200000]       (Figures 3/4 data)
+//! paac inspect [--artifacts artifacts]                  (manifest summary)
+//! ```
+
+use std::sync::Arc;
+
+use paac::algo::evaluator::{evaluate, random_baseline, EvalProtocol};
+use paac::cli::Cli;
+use paac::config::{Algo, Config, LrSchedule};
+use paac::envs::{GameId, ObsMode};
+use paac::error::{Error, Result};
+use paac::model::PolicyModel;
+use paac::runtime::checkpoint::Checkpoint;
+use paac::runtime::{ParamSet, Runtime};
+
+fn cli() -> Cli {
+    Cli::new("paac", "Parallel Advantage Actor-Critic (Clemente et al. 2017)")
+        .subcommand("train", "train an agent (paac | a3c | ga3c)")
+        .subcommand("eval", "evaluate a checkpoint with the Table-1 protocol")
+        .subcommand("sweep", "n_e sweep for the Figure 3/4 analysis")
+        .subcommand("inspect", "print the artifact manifest summary")
+        .flag("config", None, "TOML run config (flags below override it)")
+        .flag("game", None, "game id (catch|pong|breakout|...)")
+        .flag("algo", None, "paac | a3c | ga3c")
+        .flag("arch", None, "tiny | nips | nature")
+        .flag("n-e", None, "environment instances")
+        .flag("n-w", None, "environment workers")
+        .flag("lr", None, "initial learning rate")
+        .flag("steps", None, "timestep budget N_max")
+        .flag("seed", None, "run seed")
+        .flag("run-name", None, "output directory name under runs/")
+        .flag("artifacts", Some("artifacts"), "artifact directory")
+        .flag("ckpt", None, "checkpoint path (eval)")
+        .flag("episodes", Some("30"), "eval episodes per actor")
+        .flag("ne-list", Some("16,32,64,128,256"), "sweep n_e values")
+        .switch("atari", "use the 84x84x4 Atari pipeline (arch nips/nature)")
+        .switch("no-anneal", "constant learning rate")
+        .switch("quiet", "suppress progress output")
+}
+
+fn build_config(args: &paac::cli::Args) -> Result<Config> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::from_toml_file(std::path::Path::new(path))?,
+        None => Config::default(),
+    };
+    if let Some(g) = args.get("game") {
+        cfg.game = GameId::parse(g)?;
+    }
+    if let Some(a) = args.get("algo") {
+        cfg.algo = Algo::parse(a)?;
+    }
+    if let Some(a) = args.get("arch") {
+        cfg.arch = a.to_string();
+    }
+    if args.get("n-e").is_some() {
+        cfg.n_e = args.usize_of("n-e")?;
+        cfg.n_w = cfg.n_w.min(cfg.n_e);
+    }
+    if args.get("n-w").is_some() {
+        cfg.n_w = args.usize_of("n-w")?;
+    }
+    if args.get("lr").is_some() {
+        cfg.lr = args.f32_of("lr")?;
+    }
+    if args.get("steps").is_some() {
+        cfg.max_timesteps = args.u64_of("steps")?;
+    }
+    if args.get("seed").is_some() {
+        cfg.seed = args.u64_of("seed")?;
+    }
+    if let Some(n) = args.get("run-name") {
+        cfg.run_name = n.to_string();
+    }
+    if let Some(a) = args.get("artifacts") {
+        cfg.artifacts_dir = a.into();
+    }
+    if args.has("atari") {
+        cfg.atari_mode = true;
+    }
+    if args.has("no-anneal") {
+        cfg.lr_schedule = LrSchedule::Constant;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &paac::cli::Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let quiet = args.has("quiet");
+    if !quiet {
+        println!(
+            "train: algo={} game={} arch={} n_e={} n_w={} t_max={} lr={} steps={}",
+            cfg.algo.name(),
+            cfg.game.name(),
+            cfg.arch,
+            cfg.n_e,
+            cfg.n_w,
+            cfg.t_max,
+            cfg.lr,
+            cfg.max_timesteps
+        );
+    }
+    let mut trainer = paac::coordinator::master::Trainer::new(cfg)?;
+    let report = trainer.run()?;
+    println!(
+        "done: {} timesteps in {:.1}s ({:.0} steps/s), {} updates, {} episodes",
+        report.timesteps,
+        report.wall_secs,
+        report.timesteps_per_sec,
+        report.updates,
+        report.episodes
+    );
+    if let Some(s) = report.final_score {
+        println!("training score (EMA): {s:.2}");
+    }
+    if let Some(e) = &report.eval {
+        println!(
+            "eval (best of {} actors, {} eps): best={:.2} mean={:.2} per-actor={:?}",
+            e.per_actor.len(),
+            e.episodes_played,
+            e.best,
+            e.mean,
+            e.per_actor
+        );
+    }
+    if let Some(st) = report.staleness {
+        println!("staleness/policy-lag (updates): {st:.2}");
+    }
+    if !report.phase_fractions.is_empty() && !quiet {
+        print!("time usage:");
+        for (name, f) in &report.phase_fractions {
+            print!(" {name}={:.0}%", f * 100.0);
+        }
+        println!();
+    }
+    if report.diverged {
+        println!("WARNING: run diverged (non-finite loss)");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &paac::cli::Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let ckpt_path = args.str_of("ckpt")?;
+    let ckpt = Checkpoint::load(std::path::Path::new(&ckpt_path))?;
+    let rt = Arc::new(Runtime::new(&cfg.artifacts_dir)?);
+    let info = rt.manifest().arch(&ckpt.arch)?.clone();
+    let mut model = PolicyModel::new(rt.clone(), &ckpt.arch, cfg.n_e, cfg.seed as i32)?;
+    // restore parameters from the checkpoint (optimizer state zeroed)
+    let mut params = Vec::new();
+    for spec in &info.params {
+        let (_, dims, data) = ckpt
+            .find(&spec.name)
+            .ok_or_else(|| Error::Checkpoint(format!("tensor '{}' missing", spec.name)))?;
+        let want: Vec<u64> = spec.shape.iter().map(|&d| d as u64).collect();
+        if *dims != want {
+            return Err(Error::Checkpoint(format!("tensor '{}' shape mismatch", spec.name)));
+        }
+        params.push(data.clone());
+    }
+    let zeros: Vec<Vec<f32>> =
+        info.params.iter().map(|s| vec![0.0; s.elem_count()]).collect();
+    model.params = ParamSet::from_host(&info.params, params, zeros)?;
+    let proto = EvalProtocol {
+        episodes: args.usize_of("episodes")?,
+        noop_max: cfg.noop_max,
+        ..EvalProtocol::default()
+    };
+    let mode = if cfg.atari_mode { ObsMode::Atari } else { ObsMode::Grid };
+    let report = evaluate(&model, cfg.game, mode, &proto, cfg.seed)?;
+    let rand = random_baseline(cfg.game, &proto, cfg.seed);
+    println!(
+        "{}: best={:.2} mean={:.2} per-actor={:?} (random baseline: {:.2})",
+        cfg.game.name(),
+        report.best,
+        report.mean,
+        report.per_actor,
+        rand.best
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &paac::cli::Args) -> Result<()> {
+    let base = build_config(args)?;
+    let ne_list: Vec<usize> = args
+        .str_of("ne-list")?
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse().map_err(|_| Error::Cli(format!("bad ne '{s}'"))))
+        .collect::<Result<_>>()?;
+    let rt = Arc::new(Runtime::new(&base.artifacts_dir)?);
+    println!("| n_e | lr | steps/s | updates | score (EMA) | eval best |");
+    println!("|---|---|---|---|---|---|");
+    for ne in ne_list {
+        let mut cfg = Config::preset_sweep(base.game, ne);
+        cfg.max_timesteps = base.max_timesteps;
+        cfg.seed = base.seed;
+        cfg.artifacts_dir = base.artifacts_dir.clone();
+        cfg.out_dir = base.out_dir.clone();
+        cfg.run_name = format!("{}_sweep_ne{}", base.game.name(), ne);
+        let mut trainer =
+            paac::coordinator::master::Trainer::with_runtime(cfg.clone(), rt.clone())?;
+        let r = trainer.run_paac(true)?;
+        println!(
+            "| {} | {:.4} | {:.0} | {} | {} | {} |",
+            ne,
+            cfg.lr,
+            r.timesteps_per_sec,
+            r.updates,
+            r.final_score.map(|s| format!("{s:.2}")).unwrap_or_else(|| "-".into()),
+            r.eval.map(|e| format!("{:.2}", e.best)).unwrap_or_else(|| "-".into()),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &paac::cli::Args) -> Result<()> {
+    let dir = args.str_of("artifacts")?;
+    let rt = Runtime::new(&dir)?;
+    let m = rt.manifest();
+    println!("manifest version {} (jax {})", m.version, m.jax_version);
+    let hp = m.hyperparams;
+    println!(
+        "baked hyperparams: gamma={} beta={} value_coef={} rho={} eps={} clip={} t_max={}",
+        hp.gamma, hp.beta, hp.value_coef, hp.rmsprop_rho, hp.rmsprop_eps, hp.clip_norm, hp.t_max
+    );
+    for (name, a) in &m.archs {
+        println!(
+            "arch {name}: obs={:?} actions={} params={} ({} tensors) fwd={} MFLOP/sample",
+            a.obs_shape,
+            a.actions,
+            a.param_count,
+            a.params.len(),
+            a.forward_flops_per_sample / 1_000_000
+        );
+        println!("  train n_e available: {:?}", m.available_ne(name));
+    }
+    println!("{} entries:", m.entries.len());
+    for e in &m.entries {
+        println!(
+            "  {:30} kind={:?} batch={:?} ne={:?} ({} in / {} out)",
+            e.name,
+            e.kind,
+            e.batch,
+            e.ne,
+            e.inputs.len(),
+            e.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn main() {
+    let args = cli().parse_or_exit();
+    let result = match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("inspect") => cmd_inspect(&args),
+        _ => {
+            eprintln!("{}", cli().help());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

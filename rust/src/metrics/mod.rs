@@ -1,0 +1,169 @@
+//! Metric sinks: CSV score curves + JSONL structured records.
+//!
+//! Every training run writes `runs/<name>/metrics.csv` (one row per log
+//! interval; the data behind Figures 3/4) and `runs/<name>/meta.json`
+//! (config + summary). The writers are plain files — no external deps —
+//! and flush on every record so partial runs remain analyzable.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use crate::error::Result;
+use crate::util::json::Json;
+
+/// Columnar CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: &Path, header: &[&str]) -> Result<CsvWriter> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, columns: header.len() })
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> Result<()> {
+        debug_assert_eq!(cells.len(), self.columns, "csv arity mismatch");
+        writeln!(self.out, "{}", cells.join(","))?;
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// JSON-lines writer for structured records.
+pub struct JsonlWriter {
+    out: BufWriter<File>,
+}
+
+impl JsonlWriter {
+    pub fn create(path: &Path) -> Result<JsonlWriter> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(JsonlWriter { out: BufWriter::new(File::create(path)?) })
+    }
+
+    pub fn record(&mut self, value: &Json) -> Result<()> {
+        writeln!(self.out, "{}", value.to_string_compact())?;
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Per-run metric logger used by the training coordinator.
+pub struct RunLogger {
+    pub dir: PathBuf,
+    csv: CsvWriter,
+    jsonl: JsonlWriter,
+}
+
+impl RunLogger {
+    /// Columns of the per-update CSV record.
+    pub const HEADER: [&'static str; 8] = [
+        "timestep",
+        "update",
+        "wall_secs",
+        "score_mean",
+        "policy_loss",
+        "value_loss",
+        "entropy",
+        "grad_norm",
+    ];
+
+    pub fn create(out_dir: &Path, run_name: &str) -> Result<RunLogger> {
+        let dir = out_dir.join(run_name);
+        std::fs::create_dir_all(&dir)?;
+        let csv = CsvWriter::create(&dir.join("metrics.csv"), &Self::HEADER)?;
+        let jsonl = JsonlWriter::create(&dir.join("events.jsonl"))?;
+        Ok(RunLogger { dir, csv, jsonl })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn log_update(
+        &mut self,
+        timestep: u64,
+        update: u64,
+        wall_secs: f64,
+        score_mean: f32,
+        policy_loss: f32,
+        value_loss: f32,
+        entropy: f32,
+        grad_norm: f32,
+    ) -> Result<()> {
+        self.csv.row(&[
+            timestep.to_string(),
+            update.to_string(),
+            format!("{wall_secs:.3}"),
+            format!("{score_mean:.4}"),
+            format!("{policy_loss:.6}"),
+            format!("{value_loss:.6}"),
+            format!("{entropy:.6}"),
+            format!("{grad_norm:.4}"),
+        ])
+    }
+
+    pub fn log_event(&mut self, event: &Json) -> Result<()> {
+        self.jsonl.record(event)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::obj;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("paac-metrics-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn csv_writes_header_and_rows() {
+        let dir = tmpdir("csv");
+        let path = dir.join("m.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&["1".into(), "2".into()]).unwrap();
+        w.row(&["3".into(), "4".into()]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3,4\n");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn jsonl_records_parse_back() {
+        let dir = tmpdir("jsonl");
+        let path = dir.join("e.jsonl");
+        let mut w = JsonlWriter::create(&path).unwrap();
+        w.record(&obj(vec![("k", Json::Num(1.0))])).unwrap();
+        w.record(&obj(vec![("k", Json::Num(2.0))])).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for l in lines {
+            assert!(Json::parse(l).is_ok());
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn run_logger_creates_run_directory() {
+        let dir = tmpdir("run");
+        let mut rl = RunLogger::create(&dir, "testrun").unwrap();
+        rl.log_update(100, 1, 0.5, -3.0, 0.1, 0.2, 1.7, 12.0).unwrap();
+        rl.log_event(&obj(vec![("type", Json::Str("eval".into()))])).unwrap();
+        assert!(dir.join("testrun/metrics.csv").exists());
+        assert!(dir.join("testrun/events.jsonl").exists());
+        let csv = std::fs::read_to_string(dir.join("testrun/metrics.csv")).unwrap();
+        assert!(csv.starts_with("timestep,update,"));
+        assert!(csv.contains("100,1,"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,290 @@
+//! Model layer: the artifact-backed policy/value network.
+//!
+//! [`PolicyModel`] binds an architecture's artifact set (init / forward /
+//! train / grads / apply) to a [`ParamSet`] and exposes the operations the
+//! algorithms need:
+//!
+//! * [`PolicyModel::forward`] — THE paper's batched policy evaluation:
+//!   one device call returns pi(.|s) and V(s) for all n_e environments.
+//! * [`PolicyModel::train_step`] — one synchronous update on an
+//!   n_e * t_max experience batch (Algorithm 1, lines 16-18).
+//! * [`PolicyModel::grads`] / [`PolicyModel::apply_grads`] — the A3C
+//!   baseline's compute/apply split (stale gradients become possible,
+//!   which is the point of the baseline).
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::runtime::{
+    literal_f32, literal_i32, scalar_f32, EntryKind, Executable, ParamSet, Runtime,
+};
+
+/// Stats emitted by one train step: [policy_loss, value_loss, entropy,
+/// pre-clip grad norm].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TrainStats {
+    pub policy_loss: f32,
+    pub value_loss: f32,
+    pub entropy: f32,
+    pub grad_norm: f32,
+}
+
+impl TrainStats {
+    fn from_literal(lit: &xla::Literal) -> Result<TrainStats> {
+        let v = lit.to_vec::<f32>()?;
+        if v.len() != 4 {
+            return Err(Error::Shape(format!("stats tensor has {} elems", v.len())));
+        }
+        Ok(TrainStats { policy_loss: v[0], value_loss: v[1], entropy: v[2], grad_norm: v[3] })
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.policy_loss.is_finite()
+            && self.value_loss.is_finite()
+            && self.entropy.is_finite()
+            && self.grad_norm.is_finite()
+    }
+}
+
+/// Batched forward output: row-major (batch, actions) probs + values.
+#[derive(Clone, Debug)]
+pub struct ForwardOut {
+    pub probs: Vec<f32>,
+    pub values: Vec<f32>,
+    pub actions: usize,
+}
+
+impl ForwardOut {
+    /// Probability row for environment `i`.
+    pub fn probs_of(&self, i: usize) -> &[f32] {
+        &self.probs[i * self.actions..(i + 1) * self.actions]
+    }
+}
+
+/// The artifact-backed model: executables + the single parameter copy.
+pub struct PolicyModel {
+    rt: Arc<Runtime>,
+    pub arch: String,
+    pub obs_shape: (usize, usize, usize),
+    pub actions: usize,
+    forward_exe: Arc<Executable>,
+    forward1_exe: Arc<Executable>,
+    train_exe: Option<Arc<Executable>>,
+    grads_exe: Option<Arc<Executable>>,
+    apply_exe: Option<Arc<Executable>>,
+    pub params: ParamSet,
+    n_e: usize,
+    t_max: usize,
+}
+
+impl PolicyModel {
+    /// Build for a given (arch, n_e) configuration and initialize
+    /// parameters from the device-side init artifact.
+    pub fn new(rt: Arc<Runtime>, arch: &str, n_e: usize, seed: i32) -> Result<PolicyModel> {
+        let info = rt.manifest().arch(arch)?.clone();
+        let t_max = rt.manifest().hyperparams.t_max;
+        let init_exe = rt.load(arch, EntryKind::Init, None, None)?;
+        let forward_exe = rt.load(arch, EntryKind::Forward, Some(n_e), None)?;
+        let forward1_exe = rt.load(arch, EntryKind::Forward, Some(1), None)?;
+        // train artifact may be absent for pure-eval configs; tolerate it
+        let train_exe = rt.load(arch, EntryKind::Train, None, Some(n_e)).ok();
+        let params = ParamSet::init(&init_exe, &info.params, seed)?;
+        Ok(PolicyModel {
+            rt: rt.clone(),
+            arch: arch.to_string(),
+            obs_shape: info.obs_shape,
+            actions: info.actions,
+            forward_exe,
+            forward1_exe,
+            train_exe,
+            grads_exe: None,
+            apply_exe: None,
+            params,
+            n_e,
+            t_max,
+        })
+    }
+
+    pub fn n_e(&self) -> usize {
+        self.n_e
+    }
+
+    pub fn t_max(&self) -> usize {
+        self.t_max
+    }
+
+    pub fn obs_len(&self) -> usize {
+        let (h, w, c) = self.obs_shape;
+        h * w * c
+    }
+
+    fn obs_literal(&self, obs: &[f32], batch: usize) -> Result<xla::Literal> {
+        let (h, w, c) = self.obs_shape;
+        if obs.len() != batch * h * w * c {
+            return Err(Error::Shape(format!(
+                "obs batch has {} floats, expected {}x{}x{}x{}",
+                obs.len(),
+                batch,
+                h,
+                w,
+                c
+            )));
+        }
+        literal_f32(obs, &[batch, h, w, c])
+    }
+
+    fn run_forward(&self, exe: &Executable, obs_lit: &xla::Literal) -> Result<ForwardOut> {
+        let mut inputs: Vec<&xla::Literal> = self.params.params.iter().collect();
+        inputs.push(obs_lit);
+        let out = exe.run(&inputs)?;
+        let probs = out[0].to_vec::<f32>()?;
+        let values = out[1].to_vec::<f32>()?;
+        Ok(ForwardOut { probs, values, actions: self.actions })
+    }
+
+    /// Batched policy evaluation over the n_e observation batch.
+    pub fn forward(&self, obs_batch: &[f32]) -> Result<ForwardOut> {
+        let lit = self.obs_literal(obs_batch, self.n_e)?;
+        self.run_forward(&self.forward_exe, &lit)
+    }
+
+    /// Single-observation evaluation (evaluator / A3C actors).
+    pub fn forward1(&self, obs: &[f32]) -> Result<ForwardOut> {
+        let lit = self.obs_literal(obs, 1)?;
+        self.run_forward(&self.forward1_exe, &lit)
+    }
+
+    /// Forward with an explicit parameter set (A3C workers sharing params).
+    pub fn forward1_with(&self, params: &ParamSet, obs: &[f32]) -> Result<ForwardOut> {
+        let lit = self.obs_literal(obs, 1)?;
+        let mut inputs: Vec<&xla::Literal> = params.params.iter().collect();
+        inputs.push(&lit);
+        let out = self.forward1_exe.run(&inputs)?;
+        Ok(ForwardOut {
+            probs: out[0].to_vec::<f32>()?,
+            values: out[1].to_vec::<f32>()?,
+            actions: self.actions,
+        })
+    }
+
+    /// One synchronous PAAC update on a flat (n_e * t_max) batch.
+    pub fn train_step(
+        &mut self,
+        obs: &[f32],
+        actions: &[i32],
+        returns: &[f32],
+        lr: f32,
+    ) -> Result<TrainStats> {
+        let exe = self
+            .train_exe
+            .clone()
+            .ok_or_else(|| Error::artifact(format!("no train artifact for ne={}", self.n_e)))?;
+        let b = self.n_e * self.t_max;
+        if actions.len() != b || returns.len() != b {
+            return Err(Error::Shape(format!(
+                "batch arity: {} actions / {} returns, expected {}",
+                actions.len(),
+                returns.len(),
+                b
+            )));
+        }
+        let obs_lit = self.obs_literal(obs, b)?;
+        let act_lit = literal_i32(actions, &[b])?;
+        let ret_lit = literal_f32(returns, &[b])?;
+        let lr_lit = scalar_f32(lr);
+        let mut inputs: Vec<&xla::Literal> =
+            Vec::with_capacity(2 * self.params.n_tensors() + 4);
+        inputs.extend(self.params.params.iter());
+        inputs.extend(self.params.opt.iter());
+        inputs.push(&obs_lit);
+        inputs.push(&act_lit);
+        inputs.push(&ret_lit);
+        inputs.push(&lr_lit);
+        let outputs = exe.run(&inputs)?;
+        let extras = self.params.absorb_update(outputs);
+        TrainStats::from_literal(&extras[0])
+    }
+
+    /// Gradients on a t_max experience batch with explicit (possibly
+    /// stale) parameters — the A3C actor side.
+    pub fn grads(
+        &mut self,
+        params: &ParamSet,
+        obs: &[f32],
+        actions: &[i32],
+        returns: &[f32],
+    ) -> Result<(Vec<xla::Literal>, TrainStats)> {
+        if self.grads_exe.is_none() {
+            self.grads_exe = Some(self.rt.load(&self.arch, EntryKind::Grads, None, None)?);
+        }
+        let exe = self.grads_exe.as_ref().unwrap().clone();
+        let b = self.t_max;
+        let obs_lit = self.obs_literal(obs, b)?;
+        let act_lit = literal_i32(actions, &[b])?;
+        let ret_lit = literal_f32(returns, &[b])?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(params.n_tensors() + 3);
+        inputs.extend(params.params.iter());
+        inputs.push(&obs_lit);
+        inputs.push(&act_lit);
+        inputs.push(&ret_lit);
+        let mut out = exe.run(&inputs)?;
+        let stats_lit =
+            out.pop().ok_or_else(|| Error::Shape("empty grads output".into()))?;
+        let stats = TrainStats::from_literal(&stats_lit)?;
+        Ok((out, stats))
+    }
+
+    /// Apply externally computed gradients to a shared parameter set
+    /// (A3C learner side; HOGWILD-style staleness lives in the caller).
+    pub fn apply_grads(
+        &mut self,
+        shared: &mut ParamSet,
+        grads: &[xla::Literal],
+        lr: f32,
+    ) -> Result<()> {
+        if self.apply_exe.is_none() {
+            self.apply_exe = Some(self.rt.load(&self.arch, EntryKind::Apply, None, None)?);
+        }
+        let exe = self.apply_exe.as_ref().unwrap().clone();
+        let lr_lit = scalar_f32(lr);
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(3 * shared.n_tensors() + 1);
+        inputs.extend(shared.params.iter());
+        inputs.extend(shared.opt.iter());
+        inputs.extend(grads.iter());
+        inputs.push(&lr_lit);
+        let outputs = exe.run(&inputs)?;
+        shared.absorb_update(outputs);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PolicyModel needs compiled artifacts; its end-to-end behaviour is
+    // covered by rust/tests/integration_training.rs. Pure logic tested
+    // here:
+
+    #[test]
+    fn train_stats_parse_and_finite_check() {
+        let lit = literal_f32(&[0.1, 0.2, 1.5, 3.0], &[4]).unwrap();
+        let s = TrainStats::from_literal(&lit).unwrap();
+        assert!((s.entropy - 1.5).abs() < 1e-6);
+        assert!(s.is_finite());
+        let bad = literal_f32(&[f32::NAN, 0.0, 0.0, 0.0], &[4]).unwrap();
+        assert!(!TrainStats::from_literal(&bad).unwrap().is_finite());
+        let wrong = literal_f32(&[1.0; 3], &[3]).unwrap();
+        assert!(TrainStats::from_literal(&wrong).is_err());
+    }
+
+    #[test]
+    fn forward_out_rows() {
+        let out = ForwardOut {
+            probs: vec![0.5, 0.5, 0.9, 0.1],
+            values: vec![1.0, 2.0],
+            actions: 2,
+        };
+        assert_eq!(out.probs_of(1), &[0.9, 0.1]);
+    }
+}

@@ -1,0 +1,253 @@
+//! Checkpoint container: a from-scratch binary tensor format.
+//!
+//! Layout (all little-endian):
+//!
+//! ```text
+//! magic    8B   "PAACCKPT"
+//! version  u32
+//! arch     u32 len + utf8
+//! timestep u64
+//! count    u32                      (tensor records follow)
+//! record:  name u32 len + utf8
+//!          ndims u32, dims u64 x ndims
+//!          data  f32 x prod(dims)
+//! crc32    u32                      (CRC-32 of everything before it)
+//! ```
+//!
+//! Corruption (truncation, bit flips) is detected by the trailing CRC;
+//! version and shape mismatches produce typed errors.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crc32fast::Hasher;
+
+use crate::error::{Error, Result};
+
+const MAGIC: &[u8; 8] = b"PAACCKPT";
+const VERSION: u32 = 1;
+
+/// A checkpoint in memory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub arch: String,
+    pub timestep: u64,
+    pub tensors: Vec<(String, Vec<u64>, Vec<f32>)>,
+}
+
+impl Checkpoint {
+    pub fn new(arch: impl Into<String>, timestep: u64) -> Self {
+        Checkpoint { arch: arch.into(), timestep, tensors: Vec::new() }
+    }
+
+    pub fn push(&mut self, name: impl Into<String>, dims: Vec<u64>, data: Vec<f32>) {
+        debug_assert_eq!(dims.iter().product::<u64>() as usize, data.len());
+        self.tensors.push((name.into(), dims, data));
+    }
+
+    pub fn find(&self, name: &str) -> Option<&(String, Vec<u64>, Vec<f32>)> {
+        self.tensors.iter().find(|(n, _, _)| n == name)
+    }
+
+    /// Serialize to bytes (with trailing CRC).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        write_str(&mut out, &self.arch);
+        out.extend_from_slice(&self.timestep.to_le_bytes());
+        out.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, dims, data) in &self.tensors {
+            write_str(&mut out, name);
+            out.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+            for d in dims {
+                out.extend_from_slice(&d.to_le_bytes());
+            }
+            for v in data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let mut h = Hasher::new();
+        h.update(&out);
+        let crc = h.finalize();
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Parse from bytes, verifying magic, version and CRC.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        if bytes.len() < MAGIC.len() + 4 + 4 {
+            return Err(Error::Checkpoint("file too short".into()));
+        }
+        let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+        let want = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+        let mut h = Hasher::new();
+        h.update(body);
+        if h.finalize() != want {
+            return Err(Error::Checkpoint("CRC mismatch (corrupt checkpoint)".into()));
+        }
+        let mut r = Reader { b: body, i: 0 };
+        let magic = r.take(8)?;
+        if magic != MAGIC {
+            return Err(Error::Checkpoint("bad magic".into()));
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            return Err(Error::Checkpoint(format!(
+                "version {version} != supported {VERSION}"
+            )));
+        }
+        let arch = r.string()?;
+        let timestep = r.u64()?;
+        let count = r.u32()? as usize;
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name = r.string()?;
+            let ndims = r.u32()? as usize;
+            if ndims > 8 {
+                return Err(Error::Checkpoint(format!("{name}: absurd rank {ndims}")));
+            }
+            let mut dims = Vec::with_capacity(ndims);
+            for _ in 0..ndims {
+                dims.push(r.u64()?);
+            }
+            let n = dims.iter().product::<u64>() as usize;
+            let raw = r.take(n * 4)?;
+            let mut data = Vec::with_capacity(n);
+            for chunk in raw.chunks_exact(4) {
+                data.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+            }
+            tensors.push((name, dims, data));
+        }
+        if r.i != body.len() {
+            return Err(Error::Checkpoint("trailing bytes".into()));
+        }
+        Ok(Checkpoint { arch, timestep, tensors })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let bytes = self.to_bytes();
+        // write-then-rename for atomicity
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+        Checkpoint::from_bytes(&bytes)
+    }
+}
+
+fn write_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            return Err(Error::Checkpoint("unexpected EOF".into()));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        if n > 4096 {
+            return Err(Error::Checkpoint("absurd string length".into()));
+        }
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| Error::Checkpoint("non-utf8 string".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        let mut c = Checkpoint::new("tiny", 12345);
+        c.push("conv1/w", vec![2, 2, 1, 3], (0..12).map(|i| i as f32).collect());
+        c.push("conv1/b", vec![3], vec![-1.0, 0.0, 1.0]);
+        c
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let c = sample();
+        let got = Checkpoint::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(got, c);
+        assert_eq!(got.arch, "tiny");
+        assert_eq!(got.timestep, 12345);
+        assert_eq!(got.find("conv1/b").unwrap().2, vec![-1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn detects_corruption_anywhere() {
+        let bytes = sample().to_bytes();
+        for pos in [0, 10, bytes.len() / 2, bytes.len() - 5] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x40;
+            assert!(Checkpoint::from_bytes(&bad).is_err(), "flip at {pos} undetected");
+        }
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let bytes = sample().to_bytes();
+        assert!(Checkpoint::from_bytes(&bytes[..bytes.len() - 9]).is_err());
+        assert!(Checkpoint::from_bytes(&bytes[..4]).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_with_atomic_write() {
+        let dir = std::env::temp_dir().join(format!("paac-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.ckpt");
+        let c = sample();
+        c.save(&path).unwrap();
+        let got = Checkpoint::load(&path).unwrap();
+        assert_eq!(got, c);
+        assert!(!path.with_extension("tmp").exists(), "tmp file left behind");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let mut bytes = sample().to_bytes();
+        // version lives right after magic; bump it and re-CRC
+        bytes[8] = 9;
+        let body_len = bytes.len() - 4;
+        let mut h = Hasher::new();
+        h.update(&bytes[..body_len]);
+        let crc = h.finalize().to_le_bytes();
+        bytes[body_len..].copy_from_slice(&crc);
+        match Checkpoint::from_bytes(&bytes) {
+            Err(Error::Checkpoint(msg)) => assert!(msg.contains("version")),
+            other => panic!("{other:?}"),
+        }
+    }
+}

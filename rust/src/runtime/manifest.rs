@@ -1,0 +1,404 @@
+//! Artifact manifest: the typed contract between `python/compile/aot.py`
+//! and the Rust runtime.
+//!
+//! `make artifacts` writes `artifacts/manifest.json` describing every
+//! lowered HLO entry point (name, file, kind, batch configuration, input
+//! and output shapes) plus the architecture parameter tables and the
+//! hyperparameters baked into the train artifacts. The runtime refuses to
+//! run against a manifest whose version it does not understand, and the
+//! coordinator validates its `Config` against the baked hyperparameters.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Manifest schema version this runtime understands.
+pub const SUPPORTED_VERSION: usize = 3;
+
+/// Element type of an artifact input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => Err(Error::artifact(format!("unsupported dtype '{other}'"))),
+        }
+    }
+}
+
+/// Shape+dtype of one artifact input or output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One named parameter tensor of an architecture.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Architecture description (mirrors `model.Arch` in python).
+#[derive(Clone, Debug)]
+pub struct ArchInfo {
+    pub name: String,
+    pub obs_shape: (usize, usize, usize),
+    pub actions: usize,
+    pub params: Vec<ParamSpec>,
+    pub param_count: usize,
+    pub forward_flops_per_sample: u64,
+}
+
+/// Entry kinds emitted by aot.py.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EntryKind {
+    Init,
+    Forward,
+    Train,
+    Returns,
+    Grads,
+    Apply,
+}
+
+impl EntryKind {
+    fn parse(s: &str) -> Result<EntryKind> {
+        match s {
+            "init" => Ok(EntryKind::Init),
+            "forward" => Ok(EntryKind::Forward),
+            "train" => Ok(EntryKind::Train),
+            "returns" => Ok(EntryKind::Returns),
+            "grads" => Ok(EntryKind::Grads),
+            "apply" => Ok(EntryKind::Apply),
+            other => Err(Error::artifact(format!("unknown entry kind '{other}'"))),
+        }
+    }
+}
+
+/// One lowered HLO entry point.
+#[derive(Clone, Debug)]
+pub struct EntryInfo {
+    pub name: String,
+    pub file: String,
+    pub arch: String,
+    pub kind: EntryKind,
+    /// forward: obs batch; train/grads: flat experience batch.
+    pub batch: Option<usize>,
+    /// train/returns: environments per update.
+    pub ne: Option<usize>,
+    pub t_max: Option<usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Hyperparameters baked into the train artifacts (paper §5.1).
+#[derive(Clone, Copy, Debug)]
+pub struct BakedHyperparams {
+    pub gamma: f32,
+    pub beta: f32,
+    pub value_coef: f32,
+    pub rmsprop_rho: f32,
+    pub rmsprop_eps: f32,
+    pub clip_norm: f32,
+    pub t_max: usize,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: usize,
+    pub jax_version: String,
+    pub hyperparams: BakedHyperparams,
+    pub archs: BTreeMap<String, ArchInfo>,
+    pub entries: Vec<EntryInfo>,
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize> {
+    j.field(key)?
+        .as_usize()
+        .ok_or_else(|| Error::artifact(format!("field '{key}' is not a number")))
+}
+
+fn f32_field(j: &Json, key: &str) -> Result<f32> {
+    Ok(j.field(key)?
+        .as_f64()
+        .ok_or_else(|| Error::artifact(format!("field '{key}' is not a number")))? as f32)
+}
+
+fn str_field(j: &Json, key: &str) -> Result<String> {
+    Ok(j.field(key)?
+        .as_str()
+        .ok_or_else(|| Error::artifact(format!("field '{key}' is not a string")))?
+        .to_string())
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    j.field("shape")?
+        .as_arr()
+        .ok_or_else(|| Error::artifact("shape is not an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| Error::artifact("shape dim not a number")))
+        .collect()
+}
+
+fn tensor_specs(j: &Json, key: &str) -> Result<Vec<TensorSpec>> {
+    j.field(key)?
+        .as_arr()
+        .ok_or_else(|| Error::artifact(format!("'{key}' is not an array")))?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec { dtype: DType::parse(&str_field(t, "dtype")?)?, shape: shape_of(t)? })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path).map_err(|e| {
+            Error::artifact(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            ))
+        })?;
+        Manifest::parse(&src)
+    }
+
+    pub fn parse(src: &str) -> Result<Manifest> {
+        let j = Json::parse(src)?;
+        let version = usize_field(&j, "version")?;
+        if version != SUPPORTED_VERSION {
+            return Err(Error::artifact(format!(
+                "manifest version {version} != supported {SUPPORTED_VERSION}; \
+                 re-run `make artifacts`"
+            )));
+        }
+        let hp = j.field("hyperparams")?;
+        let hyperparams = BakedHyperparams {
+            gamma: f32_field(hp, "gamma")?,
+            beta: f32_field(hp, "beta")?,
+            value_coef: f32_field(hp, "value_coef")?,
+            rmsprop_rho: f32_field(hp, "rmsprop_rho")?,
+            rmsprop_eps: f32_field(hp, "rmsprop_eps")?,
+            clip_norm: f32_field(hp, "clip_norm")?,
+            t_max: usize_field(hp, "t_max")?,
+        };
+
+        let mut archs = BTreeMap::new();
+        for (name, a) in j
+            .field("archs")?
+            .as_obj()
+            .ok_or_else(|| Error::artifact("archs is not an object"))?
+        {
+            let obs = a
+                .field("obs_shape")?
+                .as_arr()
+                .ok_or_else(|| Error::artifact("obs_shape not an array"))?;
+            if obs.len() != 3 {
+                return Err(Error::artifact("obs_shape must be rank 3"));
+            }
+            let params = a
+                .field("params")?
+                .as_arr()
+                .ok_or_else(|| Error::artifact("params not an array"))?
+                .iter()
+                .map(|p| Ok(ParamSpec { name: str_field(p, "name")?, shape: shape_of(p)? }))
+                .collect::<Result<Vec<_>>>()?;
+            archs.insert(
+                name.clone(),
+                ArchInfo {
+                    name: name.clone(),
+                    obs_shape: (
+                        obs[0].as_usize().unwrap_or(0),
+                        obs[1].as_usize().unwrap_or(0),
+                        obs[2].as_usize().unwrap_or(0),
+                    ),
+                    actions: usize_field(a, "actions")?,
+                    param_count: usize_field(a, "param_count")?,
+                    forward_flops_per_sample: usize_field(a, "forward_flops_per_sample")?
+                        as u64,
+                    params,
+                },
+            );
+        }
+
+        let entries = j
+            .field("entries")?
+            .as_arr()
+            .ok_or_else(|| Error::artifact("entries is not an array"))?
+            .iter()
+            .map(|e| {
+                Ok(EntryInfo {
+                    name: str_field(e, "name")?,
+                    file: str_field(e, "file")?,
+                    arch: str_field(e, "arch")?,
+                    kind: EntryKind::parse(&str_field(e, "kind")?)?,
+                    batch: e.get("batch").and_then(|v| v.as_usize()),
+                    ne: e.get("ne").and_then(|v| v.as_usize()),
+                    t_max: e.get("t_max").and_then(|v| v.as_usize()),
+                    inputs: tensor_specs(e, "inputs")?,
+                    outputs: tensor_specs(e, "outputs")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            version,
+            jax_version: str_field(&j, "jax_version").unwrap_or_default(),
+            hyperparams,
+            archs,
+            entries,
+        })
+    }
+
+    pub fn arch(&self, name: &str) -> Result<&ArchInfo> {
+        self.archs.get(name).ok_or_else(|| {
+            Error::artifact(format!(
+                "arch '{name}' not in manifest (have: {})",
+                self.archs.keys().cloned().collect::<Vec<_>>().join(", ")
+            ))
+        })
+    }
+
+    /// Find an entry by kind/arch and optional batch or ne requirement.
+    pub fn find_entry(
+        &self,
+        arch: &str,
+        kind: EntryKind,
+        batch: Option<usize>,
+        ne: Option<usize>,
+    ) -> Result<&EntryInfo> {
+        self.entries
+            .iter()
+            .find(|e| {
+                e.arch == arch
+                    && e.kind == kind
+                    && batch.map(|b| e.batch == Some(b)).unwrap_or(true)
+                    && ne.map(|n| e.ne == Some(n)).unwrap_or(true)
+            })
+            .ok_or_else(|| {
+                Error::artifact(format!(
+                    "no artifact for arch={arch} kind={kind:?} batch={batch:?} ne={ne:?}; \
+                     adjust aot.py's matrix or the run config"
+                ))
+            })
+    }
+
+    /// n_e values with a train artifact for this arch (for sweeps).
+    pub fn available_ne(&self, arch: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.arch == arch && e.kind == EntryKind::Train)
+            .filter_map(|e| e.ne)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest() -> String {
+        r#"{
+          "version": 3,
+          "jax_version": "0.8.2",
+          "hyperparams": {"gamma": 0.99, "beta": 0.01, "value_coef": 0.5,
+                          "rmsprop_rho": 0.99, "rmsprop_eps": 0.1,
+                          "clip_norm": 40.0, "t_max": 5},
+          "archs": {
+            "tiny": {
+              "obs_shape": [10, 10, 6], "actions": 6, "fc": 128,
+              "convs": [{"kernel": 3, "channels": 16, "stride": 1}],
+              "params": [{"name": "conv1/w", "shape": [3, 3, 6, 16]},
+                          {"name": "conv1/b", "shape": [16]}],
+              "param_count": 448,
+              "forward_flops_per_sample": 1000
+            }
+          },
+          "entries": [
+            {"name": "tiny_forward_b4", "file": "tiny_forward_b4.hlo.txt",
+             "arch": "tiny", "kind": "forward", "batch": 4,
+             "inputs": [{"dtype": "float32", "shape": [3, 3, 6, 16]}],
+             "outputs": [{"dtype": "float32", "shape": [4, 6]}]},
+            {"name": "tiny_train_ne4", "file": "tiny_train_ne4.hlo.txt",
+             "arch": "tiny", "kind": "train", "ne": 4, "t_max": 5, "batch": 20,
+             "inputs": [], "outputs": []}
+          ]
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_and_exposes_fields() {
+        let m = Manifest::parse(&mini_manifest()).unwrap();
+        assert_eq!(m.version, 3);
+        assert!((m.hyperparams.gamma - 0.99).abs() < 1e-6);
+        assert_eq!(m.hyperparams.t_max, 5);
+        let tiny = m.arch("tiny").unwrap();
+        assert_eq!(tiny.obs_shape, (10, 10, 6));
+        assert_eq!(tiny.params.len(), 2);
+        assert_eq!(tiny.params[0].elem_count(), 3 * 3 * 6 * 16);
+    }
+
+    #[test]
+    fn find_entry_filters_on_kind_batch_ne() {
+        let m = Manifest::parse(&mini_manifest()).unwrap();
+        let fwd = m.find_entry("tiny", EntryKind::Forward, Some(4), None).unwrap();
+        assert_eq!(fwd.name, "tiny_forward_b4");
+        assert_eq!(fwd.inputs[0].dtype, DType::F32);
+        let train = m.find_entry("tiny", EntryKind::Train, None, Some(4)).unwrap();
+        assert_eq!(train.name, "tiny_train_ne4");
+        assert!(m.find_entry("tiny", EntryKind::Forward, Some(32), None).is_err());
+        assert!(m.find_entry("nips", EntryKind::Forward, None, None).is_err());
+    }
+
+    #[test]
+    fn available_ne_lists_train_entries() {
+        let m = Manifest::parse(&mini_manifest()).unwrap();
+        assert_eq!(m.available_ne("tiny"), vec![4]);
+        assert!(m.available_ne("nature").is_empty());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let bad = mini_manifest().replace("\"version\": 3", "\"version\": 99");
+        match Manifest::parse(&bad) {
+            Err(Error::Artifact(msg)) => assert!(msg.contains("version")),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_dtype_and_kind() {
+        let bad = mini_manifest().replace("float32", "float16");
+        assert!(Manifest::parse(&bad).is_err());
+        let bad = mini_manifest().replace("\"kind\": \"forward\"", "\"kind\": \"magic\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

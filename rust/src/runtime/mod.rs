@@ -1,0 +1,246 @@
+//! PJRT runtime: load AOT artifacts, compile once, execute on the hot path.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1 CPU) exactly as the working
+//! reference does: `PjRtClient::cpu()` -> `HloModuleProto::from_text_file`
+//! -> `client.compile` -> `execute`. HLO **text** is the interchange
+//! format (see `python/compile/aot.py` for why). Executables are compiled
+//! once per entry and cached; tuple outputs are decomposed into per-tensor
+//! literals.
+
+pub mod checkpoint;
+pub mod manifest;
+pub mod params;
+
+pub use manifest::{ArchInfo, DType, EntryInfo, EntryKind, Manifest};
+pub use params::ParamSet;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+
+/// Handle to the artifact set: manifest + lazily compiled executables.
+pub struct Artifacts {
+    dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Artifacts {
+    pub fn open(dir: impl AsRef<Path>) -> Result<Artifacts> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        Ok(Artifacts { dir, manifest })
+    }
+
+    pub fn hlo_path(&self, entry: &EntryInfo) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+/// A compiled artifact entry, ready to execute.
+pub struct Executable {
+    pub info: EntryInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// xla's PJRT handles are thread-safe at the C++ level (the CPU client
+// serializes compilation/execution internally); the Rust wrapper just
+// holds opaque pointers without interior mutability on the Rust side.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with host literals; returns the decomposed output tuple.
+    ///
+    /// aot.py lowers every entry with `return_tuple=True`, so the single
+    /// device output is a tuple literal which we split into per-tensor
+    /// literals for the caller.
+    ///
+    /// NOTE: we deliberately avoid `PjRtLoadedExecutable::execute` — its
+    /// C++ wrapper uploads each input with `BufferFromHostLiteral(..)
+    /// .release()` and never frees the device buffers, leaking the full
+    /// input set on every call (hundreds of GB over a training run).
+    /// Instead we upload through `buffer_from_host_literal` (RAII on the
+    /// Rust side) and run `execute_b`, which borrows the buffers.
+    pub fn run(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.info.inputs.len() {
+            return Err(Error::Shape(format!(
+                "{}: got {} inputs, artifact expects {}",
+                self.info.name,
+                inputs.len(),
+                self.info.inputs.len()
+            )));
+        }
+        let client = self.exe.client();
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|l| client.buffer_from_host_literal(None, l))
+            .collect::<std::result::Result<_, _>>()?;
+        self.run_buffers(&bufs)
+    }
+
+    /// Execute with pre-uploaded device buffers (the hot path can keep
+    /// parameters resident and skip the per-call upload).
+    pub fn run_buffers(&self, inputs: &[xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.info.inputs.len() {
+            return Err(Error::Shape(format!(
+                "{}: got {} buffers, artifact expects {}",
+                self.info.name,
+                inputs.len(),
+                self.info.inputs.len()
+            )));
+        }
+        let outs = self.exe.execute_b::<&xla::PjRtBuffer>(
+            &inputs.iter().collect::<Vec<_>>(),
+        )?;
+        let lit = outs[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        if parts.len() != self.info.outputs.len() {
+            return Err(Error::Shape(format!(
+                "{}: got {} outputs, manifest declares {}",
+                self.info.name,
+                parts.len(),
+                self.info.outputs.len()
+            )));
+        }
+        Ok(parts)
+    }
+
+    /// Upload a literal to the executable's device (helper for callers
+    /// that keep buffers resident across calls).
+    pub fn upload(&self, literal: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.exe.client().buffer_from_host_literal(None, literal)?)
+    }
+}
+
+/// The PJRT runtime: one CPU client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub artifacts: Artifacts,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+// Same argument as for Executable: the underlying PJRT client is
+// internally synchronized; the cache has its own lock.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Create a CPU PJRT client over an artifact directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let artifacts = Artifacts::open(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime { client, artifacts, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.artifacts.manifest
+    }
+
+    /// Compile (or fetch from cache) an entry by name.
+    pub fn load_by_name(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let info = self
+            .manifest()
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| Error::artifact(format!("no entry '{name}' in manifest")))?
+            .clone();
+        let path = self.artifacts.hlo_path(&info);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::artifact("non-utf8 artifact path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        log::debug!("compiled {} in {:.2?}", info.name, t0.elapsed());
+        let exe = Arc::new(Executable { info, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Compile (or fetch) by (arch, kind, batch/ne).
+    pub fn load(
+        &self,
+        arch: &str,
+        kind: EntryKind,
+        batch: Option<usize>,
+        ne: Option<usize>,
+    ) -> Result<Arc<Executable>> {
+        let name = self
+            .manifest()
+            .find_entry(arch, kind, batch, ne)?
+            .name
+            .clone();
+        self.load_by_name(&name)
+    }
+
+    /// Number of compiled entries currently cached.
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// Build an f32 literal of the given logical shape from a flat slice.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an i32 literal of the given logical shape from a flat slice.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Scalar literals.
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need real artifacts live in
+    // rust/tests/integration_runtime.rs (they require `make artifacts`).
+    // Here we test the pieces that don't need a manifest on disk.
+
+    #[test]
+    fn literal_builders_roundtrip() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let shape = l.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+
+        let li = literal_i32(&[7, 8], &[2]).unwrap();
+        assert_eq!(li.to_vec::<i32>().unwrap(), vec![7, 8]);
+    }
+
+    #[test]
+    fn artifacts_open_fails_helpfully_without_manifest() {
+        let msg = match Artifacts::open("/nonexistent-dir") {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("open should fail"),
+        };
+        assert!(msg.contains("make artifacts"), "unhelpful: {msg}");
+    }
+}

@@ -1,0 +1,218 @@
+//! Parameter management: the single copy of theta the paper's master owns.
+//!
+//! A [`ParamSet`] holds the model parameters (and, when training, the
+//! RMSProp mean-square state) as XLA literals ready to feed into the next
+//! device call; the train artifact returns the updated literals which
+//! simply replace the old ones. Host copies are only materialized for
+//! checkpointing and diagnostics.
+
+use std::sync::Arc;
+
+use super::manifest::ParamSpec;
+use super::{literal_f32, scalar_i32, Executable};
+use crate::error::{Error, Result};
+
+/// Named parameter tensors + optional optimizer state.
+pub struct ParamSet {
+    specs: Vec<ParamSpec>,
+    /// model parameters theta
+    pub params: Vec<xla::Literal>,
+    /// RMSProp mean-square accumulators (same shapes as params)
+    pub opt: Vec<xla::Literal>,
+}
+
+// SAFETY: `xla::Literal` owns a heap-allocated XLA literal with no thread
+// affinity; the raw pointer in the wrapper is an ownership handle, not a
+// shared resource. Moving a ParamSet between threads (A3C/GA3C share it
+// behind a Mutex) is sound; concurrent &mut access is prevented by the
+// Mutex at the call sites.
+unsafe impl Send for ParamSet {}
+
+impl ParamSet {
+    /// Initialize from the arch's `init` artifact (device-side init, so
+    /// Rust and Python agree bit-for-bit on initial weights).
+    pub fn init(init_exe: &Executable, specs: &[ParamSpec], seed: i32) -> Result<ParamSet> {
+        let seed_lit = scalar_i32(seed);
+        let params = init_exe.run(&[&seed_lit])?;
+        if params.len() != specs.len() {
+            return Err(Error::Shape(format!(
+                "init returned {} tensors, arch has {}",
+                params.len(),
+                specs.len()
+            )));
+        }
+        let opt = specs
+            .iter()
+            .map(|s| {
+                let zeros = vec![0.0f32; s.elem_count()];
+                literal_f32(&zeros, &s.shape)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ParamSet { specs: specs.to_vec(), params, opt })
+    }
+
+    /// Rebuild from host vectors (checkpoint restore).
+    pub fn from_host(
+        specs: &[ParamSpec],
+        params: Vec<Vec<f32>>,
+        opt: Vec<Vec<f32>>,
+    ) -> Result<ParamSet> {
+        if params.len() != specs.len() || opt.len() != specs.len() {
+            return Err(Error::Checkpoint(format!(
+                "tensor count mismatch: {} params / {} opt vs {} specs",
+                params.len(),
+                opt.len(),
+                specs.len()
+            )));
+        }
+        let build = |vecs: Vec<Vec<f32>>| -> Result<Vec<xla::Literal>> {
+            vecs.into_iter()
+                .zip(specs.iter())
+                .map(|(v, s)| {
+                    if v.len() != s.elem_count() {
+                        return Err(Error::Checkpoint(format!(
+                            "{}: {} elems, expected {}",
+                            s.name,
+                            v.len(),
+                            s.elem_count()
+                        )));
+                    }
+                    literal_f32(&v, &s.shape)
+                })
+                .collect()
+        };
+        Ok(ParamSet { specs: specs.to_vec(), params: build(params)?, opt: build(opt)? })
+    }
+
+    pub fn specs(&self) -> &[ParamSpec] {
+        &self.specs
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.specs.iter().map(|s| s.elem_count()).sum()
+    }
+
+    /// Replace parameters + optimizer state with the literals returned by
+    /// a train/apply artifact (laid out as params..., opt..., [extras]).
+    pub fn absorb_update(&mut self, mut outputs: Vec<xla::Literal>) -> Vec<xla::Literal> {
+        let n = self.specs.len();
+        debug_assert!(outputs.len() >= 2 * n);
+        let rest = outputs.split_off(2 * n);
+        let opt = outputs.split_off(n);
+        self.params = outputs;
+        self.opt = opt;
+        rest
+    }
+
+    /// Host copy of all parameters (checkpoint / diagnostics).
+    pub fn params_to_host(&self) -> Result<Vec<Vec<f32>>> {
+        self.params
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+
+    pub fn opt_to_host(&self) -> Result<Vec<Vec<f32>>> {
+        self.opt
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+
+    /// Deep copy (literals are re-materialized through host memory).
+    pub fn duplicate(&self) -> Result<ParamSet> {
+        ParamSet::from_host(&self.specs, self.params_to_host()?, self.opt_to_host()?)
+    }
+
+    /// Global L2 norm of the parameters (divergence diagnostics).
+    pub fn param_norm(&self) -> Result<f64> {
+        let mut acc = 0.0f64;
+        for l in &self.params {
+            for v in l.to_vec::<f32>()? {
+                acc += (v as f64) * (v as f64);
+            }
+        }
+        Ok(acc.sqrt())
+    }
+}
+
+/// A parameter snapshot shared across A3C actor threads.
+pub type SharedParams = Arc<std::sync::Mutex<ParamSet>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec { name: "w".into(), shape: vec![2, 3] },
+            ParamSpec { name: "b".into(), shape: vec![3] },
+        ]
+    }
+
+    fn host_params() -> Vec<Vec<f32>> {
+        vec![vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![0.1, 0.2, 0.3]]
+    }
+
+    #[test]
+    fn from_host_roundtrips() {
+        let ps = ParamSet::from_host(&specs(), host_params(), vec![vec![0.0; 6], vec![0.0; 3]])
+            .unwrap();
+        assert_eq!(ps.n_tensors(), 2);
+        assert_eq!(ps.param_count(), 9);
+        assert_eq!(ps.params_to_host().unwrap(), host_params());
+    }
+
+    #[test]
+    fn from_host_rejects_bad_shapes() {
+        let bad = vec![vec![1.0; 5], vec![0.0; 3]]; // 5 != 6
+        assert!(
+            ParamSet::from_host(&specs(), bad, vec![vec![0.0; 6], vec![0.0; 3]]).is_err()
+        );
+        assert!(ParamSet::from_host(&specs(), host_params(), vec![vec![0.0; 6]]).is_err());
+    }
+
+    #[test]
+    fn absorb_update_replaces_and_returns_extras() {
+        let mut ps =
+            ParamSet::from_host(&specs(), host_params(), vec![vec![0.0; 6], vec![0.0; 3]])
+                .unwrap();
+        let new_outputs = vec![
+            literal_f32(&[9.0; 6], &[2, 3]).unwrap(),
+            literal_f32(&[8.0; 3], &[3]).unwrap(),
+            literal_f32(&[7.0; 6], &[2, 3]).unwrap(),
+            literal_f32(&[6.0; 3], &[3]).unwrap(),
+            literal_f32(&[1.0, 2.0, 3.0, 4.0], &[4]).unwrap(), // stats
+        ];
+        let extras = ps.absorb_update(new_outputs);
+        assert_eq!(extras.len(), 1);
+        assert_eq!(ps.params_to_host().unwrap()[0], vec![9.0; 6]);
+        assert_eq!(ps.opt_to_host().unwrap()[1], vec![6.0; 3]);
+    }
+
+    #[test]
+    fn param_norm_is_l2() {
+        let ps = ParamSet::from_host(
+            &vec![ParamSpec { name: "w".into(), shape: vec![2] }],
+            vec![vec![3.0, 4.0]],
+            vec![vec![0.0, 0.0]],
+        )
+        .unwrap();
+        assert!((ps.param_norm().unwrap() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn duplicate_is_independent() {
+        let mut ps =
+            ParamSet::from_host(&specs(), host_params(), vec![vec![0.0; 6], vec![0.0; 3]])
+                .unwrap();
+        let dup = ps.duplicate().unwrap();
+        // mutate the original
+        ps.params[0] = literal_f32(&[0.0; 6], &[2, 3]).unwrap();
+        assert_eq!(dup.params_to_host().unwrap()[0], host_params()[0]);
+    }
+}

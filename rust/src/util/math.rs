@@ -1,0 +1,237 @@
+//! Host-side numeric helpers: softmax, stats, running aggregates.
+//!
+//! Device-side math lives in the Pallas kernels; these mirrors are used by
+//! the coordinator for sampling diagnostics, the evaluator, and the test
+//! suite's cross-checks against artifact outputs.
+
+/// Numerically-stable softmax over a slice, in place.
+pub fn softmax_inplace(x: &mut [f32]) {
+    let max = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for v in x.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    if sum > 0.0 {
+        for v in x.iter_mut() {
+            *v /= sum;
+        }
+    } else {
+        let u = 1.0 / x.len() as f32;
+        for v in x.iter_mut() {
+            *v = u;
+        }
+    }
+}
+
+/// Stable log-sum-exp.
+pub fn logsumexp(x: &[f32]) -> f32 {
+    let max = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    if !max.is_finite() {
+        return max;
+    }
+    max + x.iter().map(|v| (v - max).exp()).sum::<f32>().ln()
+}
+
+/// Entropy of a probability vector (nats).
+pub fn entropy(p: &[f32]) -> f32 {
+    -p.iter().filter(|&&v| v > 0.0).map(|&v| v * v.ln()).sum::<f32>()
+}
+
+/// Mean of a slice (0 for empty).
+pub fn mean(x: &[f32]) -> f32 {
+    if x.is_empty() {
+        0.0
+    } else {
+        x.iter().sum::<f32>() / x.len() as f32
+    }
+}
+
+/// Population standard deviation.
+pub fn std_dev(x: &[f32]) -> f32 {
+    if x.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(x);
+    (x.iter().map(|v| (v - m) * (v - m)).sum::<f32>() / x.len() as f32).sqrt()
+}
+
+/// Percentile via linear interpolation on a sorted copy (p in [0, 100]).
+pub fn percentile(x: &[f32], p: f32) -> f32 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f32> = x.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = (p / 100.0) * (v.len() - 1) as f32;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (rank - lo as f32)
+    }
+}
+
+/// Streaming mean/variance (Welford) used by the metric sinks.
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+}
+
+/// Exponential moving average with bias correction (for loss curves).
+#[derive(Clone, Debug)]
+pub struct Ema {
+    alpha: f64,
+    value: f64,
+    steps: u64,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        Ema { alpha, value: 0.0, steps: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) -> f64 {
+        self.steps += 1;
+        self.value = self.alpha * self.value + (1.0 - self.alpha) * x;
+        self.get()
+    }
+
+    pub fn get(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.value / (1.0 - self.alpha.powi(self.steps as i32))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f32, b: f32, tol: f32) -> bool {
+        (a - b).abs() <= tol
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_orders() {
+        let mut x = [1.0f32, 2.0, 3.0];
+        softmax_inplace(&mut x);
+        assert!(close(x.iter().sum::<f32>(), 1.0, 1e-6));
+        assert!(x[2] > x[1] && x[1] > x[0]);
+    }
+
+    #[test]
+    fn softmax_handles_large_logits() {
+        let mut x = [1000.0f32, 1000.0, -1000.0];
+        softmax_inplace(&mut x);
+        assert!(close(x[0], 0.5, 1e-6));
+        assert!(close(x[2], 0.0, 1e-6));
+    }
+
+    #[test]
+    fn logsumexp_matches_naive_for_small_values() {
+        let x = [0.1f32, 0.2, 0.3];
+        let naive = x.iter().map(|v| v.exp()).sum::<f32>().ln();
+        assert!(close(logsumexp(&x), naive, 1e-6));
+    }
+
+    #[test]
+    fn entropy_uniform_is_log_n() {
+        let p = [0.25f32; 4];
+        assert!(close(entropy(&p), (4f32).ln(), 1e-6));
+        assert!(close(entropy(&[1.0, 0.0]), 0.0, 1e-7));
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        assert!(close(percentile(&x, 0.0), 1.0, 1e-6));
+        assert!(close(percentile(&x, 100.0), 4.0, 1e-6));
+        assert!(close(percentile(&x, 50.0), 2.5, 1e-6));
+    }
+
+    #[test]
+    fn running_welford_matches_direct() {
+        let xs = [2.0f64, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut r = Running::new();
+        for &x in &xs {
+            r.push(x);
+        }
+        assert!((r.mean() - 5.0).abs() < 1e-12);
+        assert!((r.min() - 2.0).abs() < 1e-12);
+        assert!((r.max() - 9.0).abs() < 1e-12);
+        // sample variance of the classic Welford example = 32/7
+        assert!((r.var() - 32.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ema_bias_correction_tracks_constant() {
+        let mut e = Ema::new(0.9);
+        for _ in 0..3 {
+            e.push(10.0);
+        }
+        assert!((e.get() - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,9 @@
+//! Substrate utilities built in-tree (the offline crate set has no rand,
+//! serde, rayon or criterion — see DESIGN.md §3).
+
+pub mod json;
+pub mod math;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod timer;

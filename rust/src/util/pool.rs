@@ -1,0 +1,197 @@
+//! Fixed-size worker thread pool (no rayon/crossbeam in the offline set).
+//!
+//! Used by the evaluator (parallel episode rollouts) and the bench
+//! harness. The vectorized environment has its own dedicated worker
+//! threads that *own* their environment slices (the paper's `n_w` workers,
+//! see `envs::vec_env`) — this pool is the general-purpose substrate.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Stop,
+}
+
+/// A completion latch: `run_all` submits N jobs and waits for N signals.
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Latch { remaining: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    fn count_down(&self) {
+        let mut rem = self.remaining.lock().unwrap();
+        *rem -= 1;
+        if *rem == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut rem = self.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = self.cv.wait(rem).unwrap();
+        }
+    }
+}
+
+/// Fixed worker pool with round-robin dispatch.
+pub struct Pool {
+    senders: Vec<Sender<Msg>>,
+    handles: Vec<JoinHandle<()>>,
+    next: AtomicUsize,
+}
+
+impl Pool {
+    /// Spawn `n` workers (n >= 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let mut senders = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for w in 0..n {
+            let (tx, rx) = channel::<Msg>();
+            senders.push(tx);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("paac-pool-{w}"))
+                    .spawn(move || {
+                        while let Ok(msg) = rx.recv() {
+                            match msg {
+                                Msg::Run(job) => job(),
+                                Msg::Stop => break,
+                            }
+                        }
+                    })
+                    .expect("spawn pool worker"),
+            );
+        }
+        Pool { senders, handles, next: AtomicUsize::new(0) }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Fire-and-forget execution on the next worker (round-robin).
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.senders.len();
+        self.senders[i]
+            .send(Msg::Run(Box::new(job)))
+            .expect("pool worker died");
+    }
+
+    /// Run all jobs and block until every one has finished.
+    pub fn run_all(&self, jobs: Vec<Job>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let latch = Arc::new(Latch::new(jobs.len()));
+        for job in jobs {
+            let l = latch.clone();
+            self.execute(move || {
+                job();
+                l.count_down();
+            });
+        }
+        latch.wait();
+    }
+
+    /// Map `f` over `0..n` in parallel, collecting results in index order.
+    pub fn map_indexed<T: Send + 'static>(
+        &self,
+        n: usize,
+        f: impl Fn(usize) -> T + Send + Sync + 'static,
+    ) -> Vec<T> {
+        let f = Arc::new(f);
+        let results: Arc<Mutex<Vec<Option<T>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let jobs: Vec<Job> = (0..n)
+            .map(|i| {
+                let f = f.clone();
+                let results = results.clone();
+                Box::new(move || {
+                    let out = f(i);
+                    results.lock().unwrap()[i] = Some(out);
+                }) as Job
+            })
+            .collect();
+        self.run_all(jobs);
+        Arc::try_unwrap(results)
+            .ok()
+            .expect("all jobs done")
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|o| o.expect("job completed"))
+            .collect()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        for tx in &self.senders {
+            let _ = tx.send(Msg::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_all_completes_every_job() {
+        let pool = Pool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let jobs: Vec<Job> = (0..100)
+            .map(|_| {
+                let c = counter.clone();
+                Box::new(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }) as Job
+            })
+            .collect();
+        pool.run_all(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_indexed_preserves_order() {
+        let pool = Pool::new(3);
+        let out = pool.map_indexed(50, |i| i * i);
+        assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_pool_works() {
+        let pool = Pool::new(1);
+        let out = pool.map_indexed(10, |i| i + 1);
+        assert_eq!(out[9], 10);
+    }
+
+    #[test]
+    fn empty_batch_returns_immediately() {
+        let pool = Pool::new(2);
+        pool.run_all(vec![]); // must not hang
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = Pool::new(2);
+        pool.execute(|| {});
+        drop(pool); // must not hang or panic
+    }
+}

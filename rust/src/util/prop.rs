@@ -1,0 +1,131 @@
+//! Property-testing helper (proptest-lite; the offline crate set has no
+//! proptest/quickcheck).
+//!
+//! `check` runs a property over `cases` randomized inputs drawn through a
+//! [`Gen`] handle seeded deterministically per case, so failures print a
+//! reproducible case number and re-running is stable. On failure it
+//! panics with the case seed and the property's message.
+//!
+//! Used across the crate for coordinator invariants (routing, batching,
+//! returns) — see e.g. `algo::returns` and `envs::vec_env` tests.
+
+use super::rng::Pcg32;
+
+/// Randomized input source handed to each property case.
+pub struct Gen {
+    rng: Pcg32,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below((hi - lo + 1) as u32) as usize
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        ((self.rng.next_u32() as u64) << 32) | self.rng.next_u32() as u64
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    pub fn bool_with(&mut self, p: f32) -> bool {
+        self.rng.chance(p)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize_in(0, items.len() - 1)]
+    }
+}
+
+/// Run `prop` over `cases` randomized cases. The property returns
+/// `Result<(), String>`; an `Err` fails the test with the case index so it
+/// can be reproduced with `check_case`.
+pub fn check(name: &str, cases: u32, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    for case in 0..cases {
+        let mut gen = Gen { rng: Pcg32::new(0x5EED ^ case as u64, case as u64) };
+        if let Err(msg) = prop(&mut gen) {
+            panic!("property '{name}' failed at case {case}: {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by index (debugging aid).
+pub fn check_case(case: u32, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    let mut gen = Gen { rng: Pcg32::new(0x5EED ^ case as u64, case as u64) };
+    prop(&mut gen).expect("case should pass");
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let scale = 1.0f32.max(x.abs()).max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check("counts", 25, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at case 3")]
+    fn check_reports_failing_case() {
+        check("fails-at-3", 10, |g| {
+            let _ = g.u64();
+            // deterministic: case index 3 fails
+            static mut COUNT: u32 = 0;
+            let c = unsafe {
+                COUNT += 1;
+                COUNT - 1
+            };
+            if c == 3 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_case() {
+        let mut first: Vec<u64> = vec![];
+        check("collect", 5, |g| {
+            first.push(g.u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = vec![];
+        check("collect2", 5, |g| {
+            second.push(g.u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn assert_close_detects_mismatch() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3).is_err());
+    }
+}

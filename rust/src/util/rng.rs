@@ -1,0 +1,229 @@
+//! Deterministic, splittable pseudo-random number generation.
+//!
+//! PCG-XSH-RR 64/32 (O'Neill 2014) with a 64-bit state and 64-bit stream.
+//! Each environment instance and worker gets its own stream derived from
+//! the run seed, so a training run is reproducible for any `n_w` (the
+//! worker count never affects the random sequence any environment sees —
+//! an invariant tested in `envs::vec_env`).
+
+/// PCG32 generator (64-bit state, 32-bit output).
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    /// Create a generator from a seed and a stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        rng.state = rng.inc.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive a child generator for a sub-component (env i, worker j, ...).
+    /// Children with distinct tags have independent streams.
+    pub fn split(&mut self, tag: u64) -> Pcg32 {
+        let seed = ((self.next_u32() as u64) << 32) | self.next_u32() as u64;
+        Pcg32::new(seed ^ tag.wrapping_mul(0x9E3779B97F4A7C15), tag)
+    }
+
+    /// Next raw 32 bits.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        // 24 mantissa bits => exact uniform grid in [0,1)
+        (self.next_u32() >> 8) as f32 * (1.0 / 16_777_216.0)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        let hi = (self.next_u32() as u64) << 21;
+        let lo = (self.next_u32() as u64) >> 11;
+        (hi | lo) as f64 * (1.0 / 9_007_199_254_740_992.0)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, n: u32) -> u32 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u32();
+        let mut m = (x as u64).wrapping_mul(n as u64);
+        let mut l = m as u32;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u32();
+                m = (x as u64).wrapping_mul(n as u64);
+                l = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    #[inline]
+    pub fn range_inclusive(&mut self, lo: u32, hi: u32) -> u32 {
+        debug_assert!(hi >= lo);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Bernoulli draw.
+    #[inline]
+    pub fn chance(&mut self, p: f32) -> bool {
+        self.next_f32() < p
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.next_f32().max(1e-12);
+        let u2 = self.next_f32();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Sample an index from an (unnormalized is fine) probability vector.
+    ///
+    /// This is the action sampler of Algorithm 1 line 5: the master samples
+    /// `a_t ~ pi(a|s_t; theta)` per environment from the batched policy
+    /// output. Robust to probs that sum to slightly != 1 after f32 softmax.
+    pub fn categorical(&mut self, probs: &[f32]) -> usize {
+        debug_assert!(!probs.is_empty());
+        let total: f32 = probs.iter().sum();
+        let mut u = self.next_f32() * total;
+        for (i, &p) in probs.iter().enumerate() {
+            u -= p;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        probs.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Pcg32::new(42, 1);
+        let mut b = Pcg32::new(42, 1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn different_streams_diverge() {
+        let mut a = Pcg32::new(42, 1);
+        let mut b = Pcg32::new(42, 2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn split_children_are_independent() {
+        let mut root = Pcg32::new(7, 0);
+        let mut c1 = root.split(1);
+        let mut c2 = root.split(2);
+        let same = (0..64).filter(|_| c1.next_u32() == c2.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_f32_in_range_and_roughly_uniform() {
+        let mut rng = Pcg32::new(3, 9);
+        let n = 20_000;
+        let mut sum = 0.0f64;
+        for _ in 0..n {
+            let x = rng.next_f32();
+            assert!((0.0..1.0).contains(&x));
+            sum += x as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_over_small_n() {
+        let mut rng = Pcg32::new(11, 4);
+        let mut counts = [0u32; 5];
+        let n = 50_000;
+        for _ in 0..n {
+            counts[rng.below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            let expected = n as f32 / 5.0;
+            assert!((c as f32 - expected).abs() < expected * 0.06, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn range_inclusive_hits_endpoints() {
+        let mut rng = Pcg32::new(1, 1);
+        let (mut lo_seen, mut hi_seen) = (false, false);
+        for _ in 0..10_000 {
+            match rng.range_inclusive(1, 30) {
+                1 => lo_seen = true,
+                30 => hi_seen = true,
+                x => assert!((1..=30).contains(&x)),
+            }
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg32::new(5, 5);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = rng.normal() as f64;
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn categorical_matches_probabilities() {
+        let mut rng = Pcg32::new(13, 8);
+        let probs = [0.1f32, 0.2, 0.0, 0.7];
+        let mut counts = [0u32; 4];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[rng.categorical(&probs)] += 1;
+        }
+        assert_eq!(counts[2], 0);
+        for (i, &p) in probs.iter().enumerate() {
+            let got = counts[i] as f32 / n as f32;
+            assert!((got - p).abs() < 0.01, "i={i} got={got} want={p}");
+        }
+    }
+
+    #[test]
+    fn categorical_degenerate_vector_returns_valid_index() {
+        let mut rng = Pcg32::new(0, 0);
+        // all-zero probs (can happen after underflow): must not panic
+        let idx = rng.categorical(&[0.0, 0.0, 0.0]);
+        assert!(idx < 3);
+        let idx = rng.categorical(&[1.0]);
+        assert_eq!(idx, 0);
+    }
+}

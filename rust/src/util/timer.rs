@@ -1,0 +1,190 @@
+//! Phase timing for the Figure-2 breakdown and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A simple scope timer.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates wall-clock time per named phase.
+///
+/// This is the instrumentation behind the paper's Figure 2 ("time usage in
+/// the game of Pong for different n_e"): the master loop charges each slice
+/// of the training cycle to one of the [`Phase`] buckets and the bench
+/// harness reports the fractions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Batched policy evaluation (device forward call).
+    ActionSelect,
+    /// Environment stepping across the n_w workers.
+    EnvStep,
+    /// Observation batch assembly + literal conversion.
+    Batching,
+    /// n-step return computation (host).
+    Returns,
+    /// Synchronous parameter update (device train call).
+    Learn,
+    /// Everything else (logging, bookkeeping).
+    Other,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 6] = [
+        Phase::ActionSelect,
+        Phase::EnvStep,
+        Phase::Batching,
+        Phase::Returns,
+        Phase::Learn,
+        Phase::Other,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::ActionSelect => "action_select",
+            Phase::EnvStep => "env_step",
+            Phase::Batching => "batching",
+            Phase::Returns => "returns",
+            Phase::Learn => "learn",
+            Phase::Other => "other",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Phase::ActionSelect => 0,
+            Phase::EnvStep => 1,
+            Phase::Batching => 2,
+            Phase::Returns => 3,
+            Phase::Learn => 4,
+            Phase::Other => 5,
+        }
+    }
+}
+
+/// Per-phase accumulated durations.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimer {
+    acc: [Duration; 6],
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure, charging its duration to `phase`.
+    pub fn time<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.acc[phase.index()] += t0.elapsed();
+        out
+    }
+
+    /// Charge an externally measured duration.
+    pub fn add(&mut self, phase: Phase, d: Duration) {
+        self.acc[phase.index()] += d;
+    }
+
+    pub fn get(&self, phase: Phase) -> Duration {
+        self.acc[phase.index()]
+    }
+
+    pub fn total(&self) -> Duration {
+        self.acc.iter().sum()
+    }
+
+    /// Fraction of total time per phase; zeros when nothing was recorded.
+    pub fn fractions(&self) -> Vec<(Phase, f64)> {
+        let total = self.total().as_secs_f64();
+        Phase::ALL
+            .iter()
+            .map(|&p| {
+                let f = if total > 0.0 {
+                    self.get(p).as_secs_f64() / total
+                } else {
+                    0.0
+                };
+                (p, f)
+            })
+            .collect()
+    }
+
+    pub fn reset(&mut self) {
+        self.acc = Default::default();
+    }
+
+    /// Merge another timer's accumulations into this one.
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (a, b) in self.acc.iter_mut().zip(other.acc.iter()) {
+            *a += *b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_accumulate_and_fraction() {
+        let mut t = PhaseTimer::new();
+        t.add(Phase::EnvStep, Duration::from_millis(30));
+        t.add(Phase::Learn, Duration::from_millis(10));
+        t.add(Phase::EnvStep, Duration::from_millis(30));
+        assert_eq!(t.get(Phase::EnvStep), Duration::from_millis(60));
+        assert_eq!(t.total(), Duration::from_millis(70));
+        let fr: std::collections::HashMap<_, _> = t.fractions().into_iter().collect();
+        assert!((fr[&Phase::EnvStep] - 6.0 / 7.0).abs() < 1e-9);
+        assert!((fr[&Phase::Other]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_closure_charges_phase() {
+        let mut t = PhaseTimer::new();
+        let out = t.time(Phase::Learn, || {
+            std::thread::sleep(Duration::from_millis(2));
+            7
+        });
+        assert_eq!(out, 7);
+        assert!(t.get(Phase::Learn) >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn merge_adds_up() {
+        let mut a = PhaseTimer::new();
+        let mut b = PhaseTimer::new();
+        a.add(Phase::Batching, Duration::from_millis(5));
+        b.add(Phase::Batching, Duration::from_millis(7));
+        a.merge(&b);
+        assert_eq!(a.get(Phase::Batching), Duration::from_millis(12));
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut t = PhaseTimer::new();
+        t.add(Phase::Other, Duration::from_millis(1));
+        t.reset();
+        assert_eq!(t.total(), Duration::ZERO);
+    }
+}

@@ -1,0 +1,113 @@
+//! Integration: the A3C and GA3C baselines (needs artifacts).
+//!
+//! Verifies the *mechanisms* the paper contrasts against: asynchronous
+//! staleness for A3C, queue-induced policy lag for GA3C, and that both
+//! produce finite parameters and episode returns on a real game.
+
+use std::sync::Arc;
+
+use paac::algo::a3c::{train_a3c, A3cConfig};
+use paac::algo::ga3c::{train_ga3c, Ga3cConfig};
+use paac::envs::{GameId, ObsMode};
+use paac::runtime::Runtime;
+
+fn runtime() -> Arc<Runtime> {
+    Runtime::new("artifacts")
+        .expect("run `make artifacts` before cargo test")
+        .into()
+}
+
+#[test]
+fn a3c_trains_and_reports_staleness() {
+    let rt = runtime();
+    let cfg = A3cConfig {
+        actors: 3,
+        lr: 0.05,
+        lr_anneal: false,
+        seed: 5,
+        noop_max: 5,
+        ..A3cConfig::default()
+    };
+    let (report, params) =
+        train_a3c(rt, "tiny", GameId::Catch, ObsMode::Grid, cfg, 1_500).unwrap();
+    assert!(report.timesteps >= 1_500);
+    assert!(report.updates > 0);
+    // with 3 concurrent actors, some update must land between another
+    // actor's snapshot and apply — the staleness the paper eliminates
+    assert!(
+        report.mean_staleness > 0.0,
+        "3 async actors produced zero staleness?"
+    );
+    // parameters stay finite
+    for t in params.params_to_host().unwrap() {
+        assert!(t.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn a3c_single_actor_has_no_staleness() {
+    let rt = runtime();
+    let cfg = A3cConfig {
+        actors: 1,
+        lr: 0.05,
+        lr_anneal: false,
+        seed: 6,
+        noop_max: 5,
+        ..A3cConfig::default()
+    };
+    let (report, _) =
+        train_a3c(rt, "tiny", GameId::Catch, ObsMode::Grid, cfg, 400).unwrap();
+    assert_eq!(report.mean_staleness, 0.0);
+}
+
+#[test]
+fn ga3c_trains_and_reports_policy_lag() {
+    let rt = runtime();
+    let cfg = Ga3cConfig {
+        actors: 6,
+        predict_batch: 4,
+        train_ne: 4,
+        lr: 0.05,
+        lr_anneal: false,
+        seed: 7,
+        noop_max: 5,
+        ..Ga3cConfig::default()
+    };
+    let (report, params) =
+        train_ga3c(rt, "tiny", GameId::Catch, ObsMode::Grid, cfg, 2_000).unwrap();
+    assert!(report.timesteps >= 2_000);
+    assert!(report.updates > 0, "trainer never assembled a batch");
+    assert!(report.predict_utilization > 0.0 && report.predict_utilization <= 1.0);
+    // queue lag: experiences generated k updates before training
+    assert!(report.mean_policy_lag >= 0.0);
+    for t in params.params_to_host().unwrap() {
+        assert!(t.iter().all(|v| v.is_finite()));
+    }
+    assert!(!report.episode_returns.is_empty(), "no episodes finished");
+}
+
+#[test]
+fn ga3c_collects_finished_episodes() {
+    let rt = runtime();
+    let cfg = Ga3cConfig {
+        actors: 4,
+        predict_batch: 4,
+        train_ne: 4,
+        lr: 0.03,
+        lr_anneal: false,
+        seed: 8,
+        noop_max: 5,
+        ..Ga3cConfig::default()
+    };
+    let (report, _) =
+        train_ga3c(rt, "tiny", GameId::Catch, ObsMode::Grid, cfg, 3_000).unwrap();
+    // catch episodes last ~90 steps: 3000 steps over 4 actors must finish some
+    assert!(
+        report.episode_returns.len() >= 4,
+        "only {} episodes",
+        report.episode_returns.len()
+    );
+    for r in &report.episode_returns {
+        assert!((-10.0..=10.0).contains(r));
+    }
+}

@@ -1,0 +1,177 @@
+//! Integration: PJRT runtime vs real artifacts (needs `make artifacts`).
+//!
+//! Covers the L2->L3 contract: manifest loading, HLO compile, init
+//! determinism, forward semantics (simplex, batch consistency), the
+//! device-vs-host returns cross-check and checkpoint round-trips through
+//! a ParamSet.
+
+use std::sync::Arc;
+
+use paac::envs::{GameId, ObsMode};
+use paac::model::PolicyModel;
+use paac::runtime::{checkpoint::Checkpoint, EntryKind, ParamSet, Runtime};
+use paac::util::rng::Pcg32;
+
+fn runtime() -> Arc<Runtime> {
+    Runtime::new("artifacts")
+        .expect("run `make artifacts` before cargo test")
+        .into()
+}
+
+fn random_obs(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    (0..n * 10 * 10 * 6).map(|_| rng.next_f32()).collect()
+}
+
+#[test]
+fn manifest_covers_all_archs_and_kinds() {
+    let rt = runtime();
+    let m = rt.manifest();
+    for arch in ["tiny", "nips", "nature"] {
+        assert!(m.archs.contains_key(arch), "missing arch {arch}");
+    }
+    assert!(m.available_ne("tiny").contains(&16));
+    assert!(m.available_ne("tiny").contains(&256));
+    let hp = m.hyperparams;
+    assert!((hp.gamma - 0.99).abs() < 1e-6);
+    assert_eq!(hp.t_max, 5);
+}
+
+#[test]
+fn init_is_seed_deterministic_across_calls() {
+    let rt = runtime();
+    let exe = rt.load("tiny", EntryKind::Init, None, None).unwrap();
+    let specs = &rt.manifest().arch("tiny").unwrap().params;
+    let a = ParamSet::init(&exe, specs, 7).unwrap();
+    let b = ParamSet::init(&exe, specs, 7).unwrap();
+    let c = ParamSet::init(&exe, specs, 8).unwrap();
+    assert_eq!(a.params_to_host().unwrap(), b.params_to_host().unwrap());
+    assert_ne!(a.params_to_host().unwrap(), c.params_to_host().unwrap());
+    assert_eq!(a.param_count(), rt.manifest().arch("tiny").unwrap().param_count);
+}
+
+#[test]
+fn forward_outputs_are_probability_simplex() {
+    let rt = runtime();
+    let model = PolicyModel::new(rt, "tiny", 4, 3).unwrap();
+    let mut rng = Pcg32::new(1, 1);
+    let obs = random_obs(&mut rng, 4);
+    let out = model.forward(&obs).unwrap();
+    assert_eq!(out.probs.len(), 4 * 6);
+    assert_eq!(out.values.len(), 4);
+    for e in 0..4 {
+        let row = out.probs_of(e);
+        let sum: f32 = row.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "row {e} sums to {sum}");
+        assert!(row.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+    assert!(out.values.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn forward_batch_consistent_with_forward1() {
+    let rt = runtime();
+    let model = PolicyModel::new(rt, "tiny", 4, 9).unwrap();
+    let mut rng = Pcg32::new(2, 2);
+    let obs = random_obs(&mut rng, 4);
+    let batch = model.forward(&obs).unwrap();
+    for e in 0..4 {
+        let single = model.forward1(&obs[e * 600..(e + 1) * 600]).unwrap();
+        for (a, b) in single.probs.iter().zip(batch.probs_of(e)) {
+            assert!((a - b).abs() < 2e-4, "env {e}: {a} vs {b}");
+        }
+        assert!((single.values[0] - batch.values[e]).abs() < 2e-3);
+    }
+}
+
+#[test]
+fn device_returns_artifact_matches_host_returns() {
+    let rt = runtime();
+    let exe = rt.load("tiny", EntryKind::Returns, None, Some(4)).unwrap();
+    let mut rng = Pcg32::new(3, 3);
+    let ne = 4;
+    let t = 5;
+    let rewards: Vec<f32> = (0..ne * t).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    let done_flags: Vec<bool> = (0..ne * t).map(|_| rng.chance(0.2)).collect();
+    let dones_f: Vec<f32> = done_flags.iter().map(|&d| if d { 1.0 } else { 0.0 }).collect();
+    let bootstrap: Vec<f32> = (0..ne).map(|_| rng.next_f32()).collect();
+
+    let r_lit = paac::runtime::literal_f32(&rewards, &[ne, t]).unwrap();
+    let d_lit = paac::runtime::literal_f32(&dones_f, &[ne, t]).unwrap();
+    let b_lit = paac::runtime::literal_f32(&bootstrap, &[ne]).unwrap();
+    let out = exe.run(&[&r_lit, &d_lit, &b_lit]).unwrap();
+    let device: Vec<f32> = out[0].to_vec().unwrap();
+
+    let mut host = vec![0.0f32; ne * t];
+    paac::algo::returns::batch_returns(
+        &rewards, &done_flags, &bootstrap, ne, t, 0.99, &mut host,
+    );
+    for (i, (d, h)) in device.iter().zip(host.iter()).enumerate() {
+        assert!((d - h).abs() < 1e-4, "elem {i}: device {d} vs host {h}");
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_through_paramset() {
+    let rt = runtime();
+    let exe = rt.load("tiny", EntryKind::Init, None, None).unwrap();
+    let specs = rt.manifest().arch("tiny").unwrap().params.clone();
+    let ps = ParamSet::init(&exe, &specs, 42).unwrap();
+
+    let mut ckpt = Checkpoint::new("tiny", 999);
+    for (spec, data) in specs.iter().zip(ps.params_to_host().unwrap()) {
+        ckpt.push(spec.name.clone(), spec.shape.iter().map(|&d| d as u64).collect(), data);
+    }
+    let dir = std::env::temp_dir().join(format!("paac-int-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t.ckpt");
+    ckpt.save(&path).unwrap();
+
+    let loaded = Checkpoint::load(&path).unwrap();
+    assert_eq!(loaded.arch, "tiny");
+    let restored: Vec<Vec<f32>> = specs
+        .iter()
+        .map(|s| loaded.find(&s.name).unwrap().2.clone())
+        .collect();
+    assert_eq!(restored, ps.params_to_host().unwrap());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn executable_rejects_wrong_arity() {
+    let rt = runtime();
+    let exe = rt.load("tiny", EntryKind::Init, None, None).unwrap();
+    let lit = paac::runtime::scalar_i32(1);
+    assert!(exe.run(&[&lit, &lit]).is_err());
+}
+
+#[test]
+fn executables_are_cached() {
+    let rt = runtime();
+    let before = rt.cached_count();
+    let _a = rt.load("tiny", EntryKind::Init, None, None).unwrap();
+    let mid = rt.cached_count();
+    let _b = rt.load("tiny", EntryKind::Init, None, None).unwrap();
+    assert_eq!(rt.cached_count(), mid);
+    assert!(mid >= before);
+}
+
+#[test]
+fn obs_mode_matches_manifest_shapes() {
+    let rt = runtime();
+    let tiny = rt.manifest().arch("tiny").unwrap();
+    assert_eq!(
+        (tiny.obs_shape.0, tiny.obs_shape.1, tiny.obs_shape.2),
+        ObsMode::Grid.dims()
+    );
+    let nips = rt.manifest().arch("nips").unwrap();
+    assert_eq!(
+        (nips.obs_shape.0, nips.obs_shape.1, nips.obs_shape.2),
+        ObsMode::Atari.dims()
+    );
+    // games provide those observations
+    let env = paac::envs::Env::new(GameId::Pong, ObsMode::Grid, 1, 0, 5);
+    assert_eq!(
+        env.obs().len(),
+        tiny.obs_shape.0 * tiny.obs_shape.1 * tiny.obs_shape.2
+    );
+}

@@ -1,0 +1,171 @@
+//! Integration: end-to-end PAAC training semantics (needs artifacts).
+//!
+//! The heavyweight learning validation (hundreds of updates) lives in
+//! examples/quickstart.rs and EXPERIMENTS.md; these tests verify the
+//! training *mechanics* quickly: parameter movement, determinism,
+//! divergence handling, lr=0 identity, phase accounting, and that a short
+//! PAAC run on Catch already beats the random baseline.
+
+use std::sync::Arc;
+
+use paac::algo::evaluator::{evaluate, random_baseline, EvalProtocol};
+use paac::algo::paac::Paac;
+use paac::config::{Algo, Config, LrSchedule};
+use paac::coordinator::master::Trainer;
+use paac::envs::{GameId, ObsMode, VecEnv};
+use paac::model::PolicyModel;
+use paac::runtime::Runtime;
+use paac::util::timer::Phase;
+
+fn runtime() -> Arc<Runtime> {
+    Runtime::new("artifacts")
+        .expect("run `make artifacts` before cargo test")
+        .into()
+}
+
+fn mk_paac(rt: Arc<Runtime>, game: GameId, ne: usize, seed: u64) -> Paac {
+    let model = PolicyModel::new(rt, "tiny", ne, seed as i32).unwrap();
+    let venv = VecEnv::new(game, ObsMode::Grid, ne, 2.min(ne), seed, 10);
+    Paac::new(model, venv, 0.99, seed)
+}
+
+#[test]
+fn train_step_changes_parameters() {
+    let rt = runtime();
+    let mut paac = mk_paac(rt, GameId::Catch, 4, 1);
+    let before = paac.model.params.params_to_host().unwrap();
+    let out = paac.cycle(0.01).unwrap();
+    assert!(out.stats.is_finite(), "{:?}", out.stats);
+    assert_eq!(out.timesteps, 4 * 5);
+    let after = paac.model.params.params_to_host().unwrap();
+    let mut changed = 0;
+    for (a, b) in before.iter().zip(after.iter()) {
+        if a != b {
+            changed += 1;
+        }
+    }
+    assert_eq!(changed, before.len(), "every tensor should move");
+}
+
+#[test]
+fn lr_zero_cycle_is_parameter_identity() {
+    let rt = runtime();
+    let mut paac = mk_paac(rt, GameId::Pong, 4, 2);
+    let before = paac.model.params.params_to_host().unwrap();
+    paac.cycle(0.0).unwrap();
+    let after = paac.model.params.params_to_host().unwrap();
+    assert_eq!(before, after);
+}
+
+#[test]
+fn training_is_deterministic_for_fixed_seed() {
+    let run = |seed: u64| {
+        let rt = runtime();
+        let mut paac = mk_paac(rt, GameId::Breakout, 4, seed);
+        let mut stats = Vec::new();
+        for _ in 0..3 {
+            let o = paac.cycle(0.005).unwrap();
+            stats.push((
+                o.stats.policy_loss.to_bits(),
+                o.stats.value_loss.to_bits(),
+                o.stats.grad_norm.to_bits(),
+            ));
+        }
+        stats
+    };
+    assert_eq!(run(11), run(11));
+    assert_ne!(run(11), run(12));
+}
+
+#[test]
+fn entropy_starts_near_uniform() {
+    // fresh policy should be close to uniform over 6 actions: H ~ ln 6
+    let rt = runtime();
+    let paac = mk_paac(rt, GameId::Catch, 4, 5);
+    let h = paac.current_entropy().unwrap();
+    assert!(
+        (h - (6.0f32).ln()).abs() < 0.15,
+        "fresh entropy {h} too far from ln6={}",
+        (6.0f32).ln()
+    );
+}
+
+#[test]
+fn phase_timer_accounts_full_cycle() {
+    let rt = runtime();
+    let mut paac = mk_paac(rt, GameId::Pong, 4, 3);
+    paac.cycle(0.005).unwrap();
+    let total = paac.timer.total();
+    assert!(total.as_micros() > 0);
+    // every instrumented phase must be visited
+    for phase in [Phase::ActionSelect, Phase::EnvStep, Phase::Batching, Phase::Returns, Phase::Learn]
+    {
+        assert!(
+            paac.timer.get(phase).as_nanos() > 0,
+            "phase {phase:?} unvisited"
+        );
+    }
+}
+
+#[test]
+fn short_catch_run_beats_random_baseline() {
+    // 1000 updates of n_e=16 on Catch at constant lr: not converged
+    // (quickstart's 200k-step run reaches ~8/10) but clearly past the
+    // learning onset — must beat random play by a wide margin.
+    let rt = runtime();
+    let model = PolicyModel::new(rt.clone(), "tiny", 16, 7).unwrap();
+    let venv = VecEnv::new(GameId::Catch, ObsMode::Grid, 16, 4, 7, 10);
+    let mut paac = Paac::new(model, venv, 0.99, 7);
+    let mut steps = 0u64;
+    while steps < 80_000 {
+        let out = paac.cycle(0.1).unwrap();
+        assert!(out.stats.is_finite());
+        steps += out.timesteps;
+    }
+    let proto = EvalProtocol::quick();
+    let trained = evaluate(&paac.model, GameId::Catch, ObsMode::Grid, &proto, 100).unwrap();
+    let random = random_baseline(GameId::Catch, &proto, 100);
+    assert!(
+        trained.best > random.best + 1.5,
+        "trained {:.2} vs random {:.2}: no learning signal",
+        trained.best,
+        random.best
+    );
+}
+
+#[test]
+fn trainer_rejects_mismatched_gamma() {
+    let cfg = Config { gamma: 0.5, ..Config::default() };
+    match Trainer::new(cfg) {
+        Err(e) => assert!(e.to_string().contains("gamma")),
+        Ok(_) => panic!("gamma mismatch accepted"),
+    }
+}
+
+#[test]
+fn trainer_runs_all_algos_briefly() {
+    let rt = runtime();
+    for algo in [Algo::Paac, Algo::A3c, Algo::Ga3c] {
+        let cfg = Config {
+            game: GameId::Catch,
+            algo,
+            n_e: 4,
+            n_w: 2,
+            lr: 0.05,
+            lr_schedule: LrSchedule::Constant,
+            max_timesteps: 600,
+            seed: 3,
+            eval_episodes: 0,
+            out_dir: std::env::temp_dir().join("paac-itest-runs"),
+            run_name: format!("itest_{}", algo.name()),
+            ..Config::default()
+        };
+        let mut trainer = Trainer::with_runtime(cfg, rt.clone()).unwrap();
+        let report = trainer.run().unwrap();
+        assert!(report.timesteps >= 600, "{}: {}", algo.name(), report.timesteps);
+        assert!(!report.diverged, "{} diverged", algo.name());
+        if algo != Algo::Paac {
+            assert!(report.staleness.is_some());
+        }
+    }
+}
