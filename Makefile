@@ -1,0 +1,32 @@
+# Repo-level entry points. `make verify` mirrors the tier-1 gate.
+
+CARGO_DIR := rust
+
+.PHONY: verify build test fmt fmt-check artifacts bench-serve clean
+
+# Tier-1 gate, exactly: cargo build --release && cargo test -q.
+verify: build test
+
+build:
+	cd $(CARGO_DIR) && cargo build --release
+
+test:
+	cd $(CARGO_DIR) && cargo test -q
+
+fmt:
+	cd $(CARGO_DIR) && cargo fmt
+
+fmt-check:
+	cd $(CARGO_DIR) && cargo fmt --check
+
+# AOT-lower the JAX/Pallas entry points to HLO-text artifacts (needs jax;
+# the Rust side runs without this until a PJRT-backed xla crate is linked).
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+# Serving throughput curve (batched vs unbatched micro-batching).
+bench-serve:
+	cd $(CARGO_DIR) && cargo bench --bench serve_throughput
+
+clean:
+	cd $(CARGO_DIR) && cargo clean

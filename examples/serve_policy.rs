@@ -1,0 +1,117 @@
+//! Serve a checkpointed policy end-to-end.
+//!
+//! The full inference lifecycle: load `runs/<name>/final.ckpt` (written
+//! by a training run, e.g. `cargo run --release --example quickstart`),
+//! restore the parameters into an artifact-backed model, stand the
+//! dynamic micro-batching server up over it, and drive concurrent
+//! synthetic clients — each a stateful session playing real episodes
+//! through the served policy. When no PJRT backend or checkpoint is
+//! available the demo falls back to the deterministic synthetic policy,
+//! so the serving path always runs:
+//!
+//!   cargo run --release --example serve_policy \
+//!       [-- --ckpt runs/quickstart/final.ckpt --clients 8 --queries 500]
+
+use std::time::{Duration, Instant};
+
+use paac::cli::Cli;
+use paac::envs::{GameId, ObsMode, ACTIONS};
+use paac::error::Result;
+use paac::serve::{run_clients, ModelBackend, PolicyServer, ServeConfig, SyntheticBackend};
+
+fn main() -> Result<()> {
+    let args = Cli::new("serve_policy", "serve a checkpointed policy to synthetic clients")
+        .flag("ckpt", Some("runs/quickstart/final.ckpt"), "checkpoint to serve")
+        .flag("artifacts", Some("artifacts"), "artifact directory")
+        .flag("game", Some("catch"), "game the clients play")
+        .flag("clients", Some("8"), "concurrent client sessions")
+        .flag("queries", Some("500"), "queries per client")
+        .flag("batch", Some("32"), "max coalesced batch width")
+        .flag("deadline-us", Some("1500"), "coalescing deadline in µs")
+        .flag("seed", Some("1"), "run seed")
+        .parse_or_exit();
+
+    let game = GameId::parse(&args.str_of("game")?)?;
+    let mode = ObsMode::Grid;
+    let obs_len = mode.obs_len();
+    let clients = args.usize_of("clients")?.max(1);
+    let queries = args.usize_of("queries")?.max(1);
+    let batch = args.usize_of("batch")?.max(1);
+    let seed = args.u64_of("seed")?;
+    let cfg = ServeConfig {
+        max_batch: batch,
+        max_delay: Duration::from_secs_f64(args.f64_of("deadline-us")?.max(0.0) / 1e6),
+    };
+
+    println!("== PAAC serve: train -> checkpoint -> serve ==");
+
+    // Prefer the real checkpointed model; fall back to the synthetic
+    // policy when the device backend or the checkpoint is missing.
+    let ckpt_path = args.str_of("ckpt")?;
+    let artifacts = args.str_of("artifacts")?;
+    let server = if paac::runtime::pjrt_available() {
+        match ModelBackend::from_checkpoint(
+            std::path::Path::new(&ckpt_path),
+            std::path::Path::new(&artifacts),
+            batch,
+            seed as i32,
+            obs_len,
+        ) {
+            Ok((backend, timestep)) => {
+                println!(
+                    "backend: checkpoint {ckpt_path} (arch {}, trained {timestep} steps, {} params)",
+                    backend.model().arch,
+                    backend.model().params.param_count()
+                );
+                PolicyServer::start(backend, cfg)
+            }
+            Err(e) => {
+                println!("backend: cannot serve {ckpt_path} ({e}); using synthetic policy");
+                PolicyServer::start(SyntheticBackend::new(batch, obs_len, ACTIONS, seed), cfg)
+            }
+        }
+    } else {
+        println!("backend: PJRT unavailable (stub xla crate); using synthetic policy");
+        PolicyServer::start(SyntheticBackend::new(batch, obs_len, ACTIONS, seed), cfg)
+    };
+
+    println!(
+        "serving {} to {clients} clients, {queries} queries each \
+         (batch width {}, deadline {:?})",
+        game.name(),
+        server.max_batch(),
+        cfg.max_delay
+    );
+
+    let t0 = Instant::now();
+    let reports = run_clients(&server, game, mode, seed, 30, clients, queries)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let mut episodes = 0usize;
+    let mut returns = Vec::new();
+    for report in &reports {
+        episodes += report.episodes;
+        if report.episodes > 0 {
+            returns.push(report.mean_return);
+        }
+        println!(
+            "  session {:>2}: {} queries, {} episodes, mean return {:+.2}, mean V {:+.3}",
+            report.session, report.queries, report.episodes, report.mean_return, report.mean_value
+        );
+    }
+    let snap = server.shutdown()?;
+
+    println!();
+    println!(
+        "end-to-end: {} queries in {wall:.2}s ({:.0} q/s)",
+        snap.queries,
+        snap.queries as f64 / wall.max(1e-9)
+    );
+    println!("{}", snap.summary());
+    if !returns.is_empty() {
+        println!(
+            "served policy score over {episodes} episodes: {:+.2}",
+            paac::util::math::mean(&returns)
+        );
+    }
+    Ok(())
+}

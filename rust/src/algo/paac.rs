@@ -91,13 +91,12 @@ impl Paac {
             }
 
             // --- record s_t, a_t before stepping ---
-            // (buffer assembly charged to Batching)
-            let obs_snapshot: &[f32] = self.venv.obs_batch();
-            // we must push obs BEFORE the step mutates them; rewards/dones
-            // arrive after the step, so stage the push afterwards with the
-            // saved obs. Copy cost is charged to Batching.
+            // obs must land in the rollout BEFORE the step mutates them;
+            // stage_step copies straight from the venv batch into the
+            // rollout's preallocated storage (no per-step heap allocation).
+            // Copy cost is charged to Batching.
             let t0 = std::time::Instant::now();
-            let obs_copy: Vec<f32> = obs_snapshot.to_vec();
+            self.rollout.stage_step(self.venv.obs_batch(), &self.actions_buf);
             self.timer.add(Phase::Batching, t0.elapsed());
 
             // --- parallel env step (lines 7-10) ---
@@ -107,13 +106,10 @@ impl Paac {
                 self.timer.time(Phase::EnvStep, || venv.step(actions));
             }
 
+            // rewards/dones arrive after the step; commit completes the
+            // staged timestep.
             let t1 = std::time::Instant::now();
-            self.rollout.push_step(
-                &obs_copy,
-                &self.actions_buf,
-                self.venv.rewards(),
-                self.venv.dones(),
-            );
+            self.rollout.commit_step(self.venv.rewards(), self.venv.dones());
             self.timer.add(Phase::Batching, t1.elapsed());
         }
 

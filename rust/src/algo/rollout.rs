@@ -54,17 +54,15 @@ impl RolloutBuffer {
         self.t = 0;
     }
 
-    /// Record timestep `t` for all environments: the observations the
-    /// policy saw, the sampled actions, and the resulting rewards/dones.
+    /// Stage timestep `t`'s pre-step data: copy the observations the
+    /// policy saw and the sampled actions straight out of the vec-env
+    /// buffers into this buffer's storage — the master's hot loop has no
+    /// other per-step copy or allocation.
     ///
     /// `obs_batch` is env-major (n_e, obs_len) as produced by `VecEnv`.
-    pub fn push_step(
-        &mut self,
-        obs_batch: &[f32],
-        actions: &[usize],
-        rewards: &[f32],
-        dones: &[bool],
-    ) {
+    /// Must be followed by [`RolloutBuffer::commit_step`] once the step's
+    /// rewards/dones are known; re-staging before the commit overwrites.
+    pub fn stage_step(&mut self, obs_batch: &[f32], actions: &[usize]) {
         assert!(self.t < self.t_max, "rollout already full");
         debug_assert_eq!(obs_batch.len(), self.n_e * self.obs_len);
         debug_assert_eq!(actions.len(), self.n_e);
@@ -74,10 +72,36 @@ impl RolloutBuffer {
             self.obs[flat * self.obs_len..(flat + 1) * self.obs_len]
                 .copy_from_slice(&obs_batch[e * self.obs_len..(e + 1) * self.obs_len]);
             self.actions[flat] = actions[e] as i32;
+        }
+    }
+
+    /// Record the staged timestep's outcome (rewards/dones arrive after
+    /// the env step mutates the observations) and advance to the next
+    /// timestep.
+    pub fn commit_step(&mut self, rewards: &[f32], dones: &[bool]) {
+        assert!(self.t < self.t_max, "rollout already full");
+        debug_assert_eq!(rewards.len(), self.n_e);
+        debug_assert_eq!(dones.len(), self.n_e);
+        let t = self.t;
+        for e in 0..self.n_e {
+            let flat = e * self.t_max + t;
             self.rewards[flat] = rewards[e];
             self.dones[flat] = dones[e];
         }
         self.t += 1;
+    }
+
+    /// Record timestep `t` for all environments in one call (stage +
+    /// commit) — for callers that already hold a pre-step obs snapshot.
+    pub fn push_step(
+        &mut self,
+        obs_batch: &[f32],
+        actions: &[usize],
+        rewards: &[f32],
+        dones: &[bool],
+    ) {
+        self.stage_step(obs_batch, actions);
+        self.commit_step(rewards, dones);
     }
 
     /// Compute the n-step returns given bootstrap values V(s_{t_max}).
@@ -194,6 +218,26 @@ mod tests {
             rb.push_step(&[1.0; 4], &[0, 1], &[0.0; 2], &[false; 2]);
         }
         assert_eq!(rb.obs().as_ptr(), ptr_before);
+    }
+
+    #[test]
+    fn staged_push_equals_combined_push() {
+        let (n_e, t_max, obs_len) = (3, 4, 2);
+        let combined = filled(n_e, t_max, obs_len);
+        let mut staged = RolloutBuffer::new(n_e, t_max, obs_len);
+        for t in 0..t_max {
+            let obs: Vec<f32> = (0..n_e * obs_len).map(|i| (t * 100 + i) as f32).collect();
+            let actions: Vec<usize> = (0..n_e).map(|e| (e + t) % 6).collect();
+            let rewards: Vec<f32> = (0..n_e).map(|e| e as f32 + t as f32 * 0.1).collect();
+            let dones: Vec<bool> = (0..n_e).map(|e| e == 1 && t == 1).collect();
+            staged.stage_step(&obs, &actions);
+            staged.commit_step(&rewards, &dones);
+        }
+        assert_eq!(staged.obs(), combined.obs());
+        assert_eq!(staged.actions(), combined.actions());
+        assert_eq!(staged.rewards(), combined.rewards());
+        assert_eq!(staged.dones(), combined.dones());
+        assert!(staged.is_full());
     }
 
     #[test]

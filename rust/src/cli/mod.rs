@@ -205,19 +205,28 @@ impl Args {
             .ok_or_else(|| Error::Cli(format!("missing required flag '--{name}'")))
     }
 
-    pub fn usize_of(&self, name: &str) -> Result<usize> {
+    /// Shared parse-or-usage-error body of the typed accessors; `kind`
+    /// names the expected form in the error message.
+    fn num_of<T: std::str::FromStr>(&self, name: &str, kind: &str) -> Result<T> {
         let v = self.str_of(name)?;
-        v.parse().map_err(|_| Error::Cli(format!("flag '--{name}': '{v}' is not an integer")))
+        v.parse()
+            .map_err(|_| Error::Cli(format!("flag '--{name}': '{v}' is not {kind}")))
+    }
+
+    pub fn usize_of(&self, name: &str) -> Result<usize> {
+        self.num_of(name, "an integer")
     }
 
     pub fn u64_of(&self, name: &str) -> Result<u64> {
-        let v = self.str_of(name)?;
-        v.parse().map_err(|_| Error::Cli(format!("flag '--{name}': '{v}' is not an integer")))
+        self.num_of(name, "an integer")
     }
 
     pub fn f32_of(&self, name: &str) -> Result<f32> {
-        let v = self.str_of(name)?;
-        v.parse().map_err(|_| Error::Cli(format!("flag '--{name}': '{v}' is not a number")))
+        self.num_of(name, "a number")
+    }
+
+    pub fn f64_of(&self, name: &str) -> Result<f64> {
+        self.num_of(name, "a number")
     }
 }
 
@@ -260,7 +269,9 @@ mod tests {
         let a = cli().parse(&sv(&["train", "--lr", "0.01"])).unwrap();
         assert_eq!(a.usize_of("n-e").unwrap(), 32);
         assert!((a.f32_of("lr").unwrap() - 0.01).abs() < 1e-9);
+        assert!((a.f64_of("lr").unwrap() - 0.01).abs() < 1e-9);
         assert!(a.f32_of("missing").is_err());
+        assert!(a.f64_of("missing").is_err());
     }
 
     #[test]

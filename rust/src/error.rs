@@ -1,55 +1,84 @@
 //! Unified error type for the PAAC crate.
+//!
+//! Hand-rolled `Display`/`Error` impls — the offline crate set has no
+//! thiserror, and the enum is small enough that the derive buys nothing.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// All failure modes surfaced by the public API.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// PJRT / XLA failures (compile, execute, literal conversion).
-    #[error("xla: {0}")]
     Xla(String),
 
     /// Artifact set problems: missing files, manifest/config mismatch.
-    #[error("artifact: {0}")]
     Artifact(String),
 
     /// Configuration parse/validation errors.
-    #[error("config: {0}")]
     Config(String),
 
     /// JSON parse errors (manifest, metric files).
-    #[error("json: {msg} at byte {pos}")]
     Json { msg: String, pos: usize },
 
     /// TOML parse errors (run configs).
-    #[error("toml: {msg} at line {line}")]
     Toml { msg: String, line: usize },
 
     /// CLI usage errors.
-    #[error("cli: {0}")]
     Cli(String),
 
     /// Checkpoint container corruption / version mismatch.
-    #[error("checkpoint: {0}")]
     Checkpoint(String),
 
     /// Environment misuse (acting on a terminal state, bad action id).
-    #[error("env: {0}")]
     Env(String),
 
     /// Shape/dtype mismatches crossing the Rust<->artifact boundary.
-    #[error("shape: {0}")]
     Shape(String),
 
     /// Training-loop invariant violations (divergence, NaN loss).
-    #[error("train: {0}")]
     Train(String),
 
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    /// Inference-serving failures (shutdown races, dead batcher).
+    Serve(String),
+
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(m) => write!(f, "xla: {m}"),
+            Error::Artifact(m) => write!(f, "artifact: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Json { msg, pos } => write!(f, "json: {msg} at byte {pos}"),
+            Error::Toml { msg, line } => write!(f, "toml: {msg} at line {line}"),
+            Error::Cli(m) => write!(f, "cli: {m}"),
+            Error::Checkpoint(m) => write!(f, "checkpoint: {m}"),
+            Error::Env(m) => write!(f, "env: {m}"),
+            Error::Shape(m) => write!(f, "shape: {m}"),
+            Error::Train(m) => write!(f, "train: {m}"),
+            Error::Serve(m) => write!(f, "serve: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -68,6 +97,11 @@ impl Error {
     pub fn artifact(msg: impl Into<String>) -> Self {
         Error::Artifact(msg.into())
     }
+
+    /// Helper for serving errors.
+    pub fn serve(msg: impl Into<String>) -> Self {
+        Error::Serve(msg.into())
+    }
 }
 
 #[cfg(test)]
@@ -80,6 +114,8 @@ mod tests {
         assert_eq!(e.to_string(), "json: unexpected token at byte 17");
         let e = Error::Toml { msg: "bad value".into(), line: 3 };
         assert_eq!(e.to_string(), "toml: bad value at line 3");
+        let e = Error::serve("queue closed");
+        assert_eq!(e.to_string(), "serve: queue closed");
     }
 
     #[test]

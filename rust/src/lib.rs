@@ -17,6 +17,20 @@
 //! Python never runs on the training path: the Rust binary loads the HLO
 //! artifacts through PJRT ([`runtime`]) and is self-contained afterwards.
 //!
+//! ## Training and serving
+//!
+//! The crate covers both halves of the policy lifecycle:
+//!
+//! * **Train** — [`coordinator::master::Trainer`] drives PAAC (or the
+//!   A3C/GA3C baselines) to a timestep budget and writes a checkpoint
+//!   (`runs/<name>/final.ckpt`, the [`runtime::checkpoint`] container).
+//! * **Serve** — [`serve`] loads a checkpointed [`model::PolicyModel`]
+//!   (or a deterministic synthetic stand-in) behind a dynamic
+//!   micro-batching inference server: many concurrent client sessions,
+//!   one batched device call per coalescing window, p50/p99 latency and
+//!   throughput accounting. The `paac serve` subcommand and
+//!   `examples/serve_policy.rs` drive it end-to-end.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -29,7 +43,17 @@
 //! ```
 //!
 //! See `examples/` for runnable end-to-end drivers and `rust/benches/` for
-//! the regeneration harness of every table and figure in the paper.
+//! the regeneration harness of every table and figure in the paper plus
+//! the serving throughput curve (`benches/serve_throughput.rs`).
+//!
+//! ## Offline builds
+//!
+//! The only dependencies are the stub crates vendored under
+//! `rust/vendor/`; `vendor/xla` implements the host-side literal API and
+//! reports the device side as unavailable
+//! ([`runtime::pjrt_available`] returns `false`), under which
+//! artifact-dependent tests skip and the serve stack falls back to its
+//! synthetic backend.
 
 pub mod algo;
 pub mod benchkit;
@@ -41,6 +65,7 @@ pub mod error;
 pub mod metrics;
 pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 
@@ -54,4 +79,5 @@ pub mod prelude {
     pub use crate::error::{Error, Result};
     pub use crate::model::PolicyModel;
     pub use crate::runtime::{Artifacts, ParamSet, Runtime};
+    pub use crate::serve::{PolicyServer, ServeConfig, Session, StatsSnapshot};
 }

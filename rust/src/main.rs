@@ -6,18 +6,23 @@
 //! paac eval    --ckpt runs/<name>/final.ckpt [--game pong] [--episodes 30]
 //! paac sweep   [--game breakout] [--steps 200000]       (Figures 3/4 data)
 //! paac inspect [--artifacts artifacts]                  (manifest summary)
+//! paac serve   [--ckpt runs/<name>/final.ckpt] [--clients 8] [--queries 200]
+//!              [--batch 32] [--deadline-us 2000]        (micro-batched serving)
 //! ```
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use paac::algo::evaluator::{evaluate, random_baseline, EvalProtocol};
 use paac::cli::Cli;
 use paac::config::{Algo, Config, LrSchedule};
 use paac::envs::{GameId, ObsMode};
 use paac::error::{Error, Result};
+use paac::metrics::JsonlWriter;
 use paac::model::PolicyModel;
 use paac::runtime::checkpoint::Checkpoint;
-use paac::runtime::{ParamSet, Runtime};
+use paac::runtime::Runtime;
+use paac::serve::{ModelBackend, PolicyServer, ServeConfig, SyntheticBackend};
 
 fn cli() -> Cli {
     Cli::new("paac", "Parallel Advantage Actor-Critic (Clemente et al. 2017)")
@@ -25,6 +30,7 @@ fn cli() -> Cli {
         .subcommand("eval", "evaluate a checkpoint with the Table-1 protocol")
         .subcommand("sweep", "n_e sweep for the Figure 3/4 analysis")
         .subcommand("inspect", "print the artifact manifest summary")
+        .subcommand("serve", "serve a policy to concurrent clients via the micro-batcher")
         .flag("config", None, "TOML run config (flags below override it)")
         .flag("game", None, "game id (catch|pong|breakout|...)")
         .flag("algo", None, "paac | a3c | ga3c")
@@ -39,6 +45,10 @@ fn cli() -> Cli {
         .flag("ckpt", None, "checkpoint path (eval)")
         .flag("episodes", Some("30"), "eval episodes per actor")
         .flag("ne-list", Some("16,32,64,128,256"), "sweep n_e values")
+        .flag("clients", Some("8"), "concurrent synthetic clients (serve)")
+        .flag("queries", Some("200"), "queries per client (serve)")
+        .flag("batch", Some("32"), "max coalesced batch width (serve)")
+        .flag("deadline-us", Some("2000"), "batch coalescing deadline in µs (serve)")
         .switch("atari", "use the 84x84x4 Atari pipeline (arch nips/nature)")
         .switch("no-anneal", "constant learning rate")
         .switch("quiet", "suppress progress output")
@@ -153,20 +163,7 @@ fn cmd_eval(args: &paac::cli::Args) -> Result<()> {
     let info = rt.manifest().arch(&ckpt.arch)?.clone();
     let mut model = PolicyModel::new(rt.clone(), &ckpt.arch, cfg.n_e, cfg.seed as i32)?;
     // restore parameters from the checkpoint (optimizer state zeroed)
-    let mut params = Vec::new();
-    for spec in &info.params {
-        let (_, dims, data) = ckpt
-            .find(&spec.name)
-            .ok_or_else(|| Error::Checkpoint(format!("tensor '{}' missing", spec.name)))?;
-        let want: Vec<u64> = spec.shape.iter().map(|&d| d as u64).collect();
-        if *dims != want {
-            return Err(Error::Checkpoint(format!("tensor '{}' shape mismatch", spec.name)));
-        }
-        params.push(data.clone());
-    }
-    let zeros: Vec<Vec<f32>> =
-        info.params.iter().map(|s| vec![0.0; s.elem_count()]).collect();
-    model.params = ParamSet::from_host(&info.params, params, zeros)?;
+    model.params = ckpt.to_param_set(&info.params)?;
     let proto = EvalProtocol {
         episodes: args.usize_of("episodes")?,
         noop_max: cfg.noop_max,
@@ -256,6 +253,96 @@ fn cmd_inspect(args: &paac::cli::Args) -> Result<()> {
     Ok(())
 }
 
+/// Synthetic-client load generator over the serve subsystem: stand the
+/// micro-batching server up (checkpointed model when `--ckpt` is given
+/// and a PJRT backend is linked, deterministic synthetic policy
+/// otherwise), run `--clients` concurrent sessions for `--queries` steps
+/// each, and report throughput + latency percentiles.
+fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
+    let game = GameId::parse(args.get("game").unwrap_or("catch"))?;
+    let mode = if args.has("atari") { ObsMode::Atari } else { ObsMode::Grid };
+    let obs_len = mode.obs_len();
+    let clients = args.usize_of("clients")?.max(1);
+    let queries = args.usize_of("queries")?.max(1);
+    let batch = args.usize_of("batch")?.max(1);
+    // fractional µs allowed (e.g. --deadline-us 0.5)
+    let deadline = Duration::from_secs_f64(args.f64_of("deadline-us")?.max(0.0) / 1e6);
+    let seed = args.get("seed").map(|_| args.u64_of("seed")).transpose()?.unwrap_or(1);
+    let quiet = args.has("quiet");
+    let cfg = ServeConfig { max_batch: batch, max_delay: deadline };
+
+    let server = match args.get("ckpt") {
+        Some(ckpt_path) if paac::runtime::pjrt_available() => {
+            let artifacts = args.str_of("artifacts")?;
+            let (backend, timestep) = ModelBackend::from_checkpoint(
+                std::path::Path::new(ckpt_path),
+                std::path::Path::new(&artifacts),
+                batch,
+                seed as i32,
+                obs_len,
+            )?;
+            if !quiet {
+                println!(
+                    "serve: checkpoint {} (arch {}, step {})",
+                    ckpt_path,
+                    backend.model().arch,
+                    timestep
+                );
+            }
+            PolicyServer::start(backend, cfg)
+        }
+        maybe_ckpt => {
+            if !quiet {
+                match maybe_ckpt {
+                    Some(p) => println!(
+                        "serve: PJRT backend unavailable; ignoring --ckpt {p} and \
+                         using the deterministic synthetic policy"
+                    ),
+                    None => println!("serve: no --ckpt given; using the synthetic policy"),
+                }
+            }
+            PolicyServer::start(
+                SyntheticBackend::new(batch, obs_len, paac::envs::ACTIONS, seed),
+                cfg,
+            )
+        }
+    };
+
+    if !quiet {
+        println!(
+            "serve: game={} mode={:?} clients={clients} queries/client={queries} \
+             max_batch={} deadline={deadline:?}",
+            game.name(),
+            mode,
+            server.max_batch()
+        );
+    }
+
+    let t0 = Instant::now();
+    let reports = paac::serve::run_clients(&server, game, mode, seed, 30, clients, queries)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = server.shutdown()?;
+
+    let total_queries: u64 = reports.iter().map(|r| r.queries).sum();
+    let episodes: usize = reports.iter().map(|r| r.episodes).sum();
+    println!(
+        "served {total_queries} queries from {clients} clients in {wall:.2}s \
+         ({:.0} q/s end-to-end)",
+        total_queries as f64 / wall.max(1e-9)
+    );
+    println!("{}", snap.summary());
+    println!("clients finished {episodes} episodes");
+    if let Some(run_name) = args.get("run-name") {
+        let dir = std::path::Path::new("runs").join(run_name);
+        let mut sink = JsonlWriter::create(&dir.join("serve.jsonl"))?;
+        snap.log_to(&mut sink)?;
+        if !quiet {
+            println!("stats written to {}", dir.join("serve.jsonl").display());
+        }
+    }
+    Ok(())
+}
+
 fn main() {
     let args = cli().parse_or_exit();
     let result = match args.subcommand.as_deref() {
@@ -263,6 +350,7 @@ fn main() {
         Some("eval") => cmd_eval(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("inspect") => cmd_inspect(&args),
+        Some("serve") => cmd_serve(&args),
         _ => {
             eprintln!("{}", cli().help());
             std::process::exit(2);

@@ -22,6 +22,8 @@ use std::path::Path;
 
 use crc32fast::Hasher;
 
+use super::manifest::ParamSpec;
+use super::params::ParamSet;
 use crate::error::{Error, Result};
 
 const MAGIC: &[u8; 8] = b"PAACCKPT";
@@ -143,6 +145,28 @@ impl Checkpoint {
         std::fs::File::open(path)?.read_to_end(&mut bytes)?;
         Checkpoint::from_bytes(&bytes)
     }
+
+    /// Rebuild a [`ParamSet`] for the given architecture specs, validating
+    /// tensor presence and shapes. Optimizer state is zeroed — restored
+    /// checkpoints serve inference (eval / serve), not training resumption.
+    pub fn to_param_set(&self, specs: &[ParamSpec]) -> Result<ParamSet> {
+        let mut params = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let (_, dims, data) = self.find(&spec.name).ok_or_else(|| {
+                Error::Checkpoint(format!("tensor '{}' missing from checkpoint", spec.name))
+            })?;
+            let want: Vec<u64> = spec.shape.iter().map(|&d| d as u64).collect();
+            if *dims != want {
+                return Err(Error::Checkpoint(format!(
+                    "tensor '{}': shape {dims:?} != arch {want:?}",
+                    spec.name
+                )));
+            }
+            params.push(data.clone());
+        }
+        let opt: Vec<Vec<f32>> = specs.iter().map(|s| vec![0.0; s.elem_count()]).collect();
+        ParamSet::from_host(specs, params, opt)
+    }
 }
 
 fn write_str(out: &mut Vec<u8>, s: &str) {
@@ -233,6 +257,24 @@ mod tests {
         assert_eq!(got, c);
         assert!(!path.with_extension("tmp").exists(), "tmp file left behind");
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn to_param_set_validates_and_restores() {
+        let c = sample();
+        let specs = vec![
+            ParamSpec { name: "conv1/w".into(), shape: vec![2, 2, 1, 3] },
+            ParamSpec { name: "conv1/b".into(), shape: vec![3] },
+        ];
+        let ps = c.to_param_set(&specs).unwrap();
+        assert_eq!(ps.n_tensors(), 2);
+        assert_eq!(ps.params_to_host().unwrap()[1], vec![-1.0, 0.0, 1.0]);
+        assert_eq!(ps.opt_to_host().unwrap()[0], vec![0.0; 12]);
+
+        let missing = vec![ParamSpec { name: "fc/w".into(), shape: vec![3] }];
+        assert!(c.to_param_set(&missing).is_err());
+        let wrong_shape = vec![ParamSpec { name: "conv1/b".into(), shape: vec![4] }];
+        assert!(c.to_param_set(&wrong_shape).is_err());
     }
 
     #[test]

@@ -20,6 +20,14 @@ use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
 
+/// Whether the linked `xla` crate can actually compile and execute HLO
+/// (false under the vendored stub). Artifact-dependent tests and tools
+/// probe this to skip or degrade gracefully instead of erroring deep
+/// inside a device call.
+pub fn pjrt_available() -> bool {
+    xla::backend_available()
+}
+
 /// Handle to the artifact set: manifest + lazily compiled executables.
 pub struct Artifacts {
     dir: PathBuf,

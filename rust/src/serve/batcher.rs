@@ -1,0 +1,491 @@
+//! The dynamic micro-batcher: coalesce, pad, one device call, fan out.
+//!
+//! A single batcher thread drains the submission queue (up to the
+//! artifact's batch width or the coalescing deadline, whichever first),
+//! copies the live observations into a persistent staging buffer, zero-
+//! pads the dead rows — the same padding/masking idiom as the GA3C
+//! predictor in [`crate::algo::ga3c`] — runs **one** batched forward, and
+//! fans each live row's policy/value back to its requester. Padding
+//! correctness (a live row's output never depends on the fill level) is
+//! property-tested below against the backend's row-independence.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::model::{ForwardOut, PolicyModel};
+use crate::runtime::checkpoint::Checkpoint;
+use crate::runtime::Runtime;
+use crate::util::math::softmax_inplace;
+use crate::util::rng::Pcg32;
+
+use super::queue::{Reply, SubmissionQueue};
+use super::stats::ServeStats;
+
+/// A policy-evaluation backend serving fixed-width batched queries.
+///
+/// Implementations must be **row-independent**: output row `i` is a pure
+/// function of input row `i`. The batcher relies on this to zero-pad
+/// partial batches without masking the outputs.
+pub trait InferBackend: Send {
+    /// The fixed batch width of one device call (the padding target).
+    fn batch_width(&self) -> usize;
+    /// Flattened observation length per row.
+    fn obs_len(&self) -> usize;
+    /// Action-set size.
+    fn actions(&self) -> usize;
+    /// Evaluate exactly `batch_width` rows (`obs.len() == batch_width *
+    /// obs_len`); rows past the live fill are zero padding.
+    fn infer(&self, obs: &[f32]) -> Result<ForwardOut>;
+}
+
+/// Backend over an artifact-backed [`PolicyModel`]: the trainer's batched
+/// forward pass (one PJRT call for the whole batch), generalized to
+/// serving. Batch width = the model's compiled `n_e`.
+pub struct ModelBackend {
+    model: PolicyModel,
+}
+
+impl ModelBackend {
+    pub fn new(model: PolicyModel) -> ModelBackend {
+        ModelBackend { model }
+    }
+
+    /// The full checkpoint-serving bootstrap in one place: load the
+    /// checkpoint, open the artifact runtime, build the model at `batch`
+    /// width, restore the parameters, and check that the architecture's
+    /// observation length matches what the clients will submit. Returns
+    /// the backend plus the checkpoint's training timestep (for status
+    /// output). Used by `paac serve` and `examples/serve_policy.rs`.
+    pub fn from_checkpoint(
+        ckpt_path: &Path,
+        artifacts_dir: &Path,
+        batch: usize,
+        seed: i32,
+        expect_obs_len: usize,
+    ) -> Result<(ModelBackend, u64)> {
+        let ckpt = Checkpoint::load(ckpt_path)?;
+        let rt = Arc::new(Runtime::new(artifacts_dir)?);
+        let info = rt.manifest().arch(&ckpt.arch)?.clone();
+        let mut model = PolicyModel::new(rt, &ckpt.arch, batch, seed)?;
+        model.params = ckpt.to_param_set(&info.params)?;
+        if model.obs_len() != expect_obs_len {
+            return Err(Error::config(format!(
+                "arch '{}' expects {} obs floats but the serving mode produces {}",
+                ckpt.arch,
+                model.obs_len(),
+                expect_obs_len
+            )));
+        }
+        Ok((ModelBackend { model }, ckpt.timestep))
+    }
+
+    pub fn model(&self) -> &PolicyModel {
+        &self.model
+    }
+}
+
+impl InferBackend for ModelBackend {
+    fn batch_width(&self) -> usize {
+        self.model.n_e()
+    }
+
+    fn obs_len(&self) -> usize {
+        self.model.obs_len()
+    }
+
+    fn actions(&self) -> usize {
+        self.model.actions
+    }
+
+    fn infer(&self, obs: &[f32]) -> Result<ForwardOut> {
+        self.model.forward(obs)
+    }
+}
+
+/// Deterministic pure-Rust backend: a seeded random linear-softmax policy
+/// plus a linear value head. Row-independent by construction, so batched
+/// and single-query evaluation agree **bitwise** — exactly the property
+/// the batcher's padding must preserve. Lets the whole serve path (tests,
+/// bench, load generator) run without compiled artifacts; an optional
+/// synthetic dispatch cost emulates the per-call overhead that makes
+/// batching pay off on real devices.
+pub struct SyntheticBackend {
+    batch: usize,
+    obs_len: usize,
+    actions: usize,
+    /// (obs_len, actions) policy weights.
+    w: Vec<f32>,
+    /// (obs_len,) value weights.
+    v: Vec<f32>,
+    /// Fixed per-call cost (busy-wait, emulating kernel dispatch).
+    dispatch: Duration,
+    /// Additional cost per batch row.
+    per_row: Duration,
+}
+
+impl SyntheticBackend {
+    pub fn new(batch: usize, obs_len: usize, actions: usize, seed: u64) -> SyntheticBackend {
+        assert!(batch >= 1 && obs_len >= 1 && actions >= 1);
+        let mut rng = Pcg32::new(seed, 0x5E7E);
+        let w = (0..obs_len * actions).map(|_| rng.normal() * 0.05).collect();
+        let v = (0..obs_len).map(|_| rng.normal() * 0.05).collect();
+        SyntheticBackend {
+            batch,
+            obs_len,
+            actions,
+            w,
+            v,
+            dispatch: Duration::ZERO,
+            per_row: Duration::ZERO,
+        }
+    }
+
+    /// Attach an emulated device cost model (used by the serve bench).
+    pub fn with_cost(mut self, dispatch: Duration, per_row: Duration) -> SyntheticBackend {
+        self.dispatch = dispatch;
+        self.per_row = per_row;
+        self
+    }
+
+    fn burn(d: Duration) {
+        if d.is_zero() {
+            return;
+        }
+        let t0 = Instant::now();
+        while t0.elapsed() < d {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+impl InferBackend for SyntheticBackend {
+    fn batch_width(&self) -> usize {
+        self.batch
+    }
+
+    fn obs_len(&self) -> usize {
+        self.obs_len
+    }
+
+    fn actions(&self) -> usize {
+        self.actions
+    }
+
+    fn infer(&self, obs: &[f32]) -> Result<ForwardOut> {
+        if obs.len() != self.batch * self.obs_len {
+            return Err(Error::Shape(format!(
+                "synthetic backend: {} floats, expected {}x{}",
+                obs.len(),
+                self.batch,
+                self.obs_len
+            )));
+        }
+        Self::burn(self.dispatch + self.per_row * self.batch as u32);
+        let mut probs = vec![0.0f32; self.batch * self.actions];
+        let mut values = vec![0.0f32; self.batch];
+        for b in 0..self.batch {
+            let x = &obs[b * self.obs_len..(b + 1) * self.obs_len];
+            let row = &mut probs[b * self.actions..(b + 1) * self.actions];
+            for (a, slot) in row.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for (i, &xi) in x.iter().enumerate() {
+                    acc += xi * self.w[i * self.actions + a];
+                }
+                *slot = acc;
+            }
+            softmax_inplace(row);
+            let mut val = 0.0f32;
+            for (i, &xi) in x.iter().enumerate() {
+                val += xi * self.v[i];
+            }
+            values[b] = val;
+        }
+        Ok(ForwardOut { probs, values, actions: self.actions })
+    }
+}
+
+/// The batching loop: one instance, one thread, one backend.
+pub struct Batcher<B: InferBackend> {
+    backend: B,
+    queue: Arc<SubmissionQueue>,
+    stats: Arc<ServeStats>,
+    max_batch: usize,
+    max_delay: Duration,
+    /// Persistent staging buffer, batch_width x obs_len.
+    obs_buf: Vec<f32>,
+    /// Scratch for per-request latencies (reused across batches).
+    lat_buf: Vec<Duration>,
+}
+
+impl<B: InferBackend> Batcher<B> {
+    /// `max_batch` is clamped to `[1, backend.batch_width()]`.
+    pub fn new(
+        backend: B,
+        queue: Arc<SubmissionQueue>,
+        stats: Arc<ServeStats>,
+        max_batch: usize,
+        max_delay: Duration,
+    ) -> Batcher<B> {
+        let width = backend.batch_width();
+        let obs_buf = vec![0.0; width * backend.obs_len()];
+        Batcher {
+            max_batch: max_batch.clamp(1, width),
+            backend,
+            queue,
+            stats,
+            max_delay,
+            obs_buf,
+            lat_buf: Vec::new(),
+        }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Process one batch. `Ok(false)` signals orderly shutdown (queue
+    /// closed and drained); errors are backend failures and fatal.
+    pub fn step(&mut self) -> Result<bool> {
+        let mut reqs = match self.queue.next_batch(self.max_batch, self.max_delay) {
+            None => return Ok(false),
+            Some(r) => r,
+        };
+        let obs_len = self.backend.obs_len();
+        // drop malformed payloads (the public handle validates, but the
+        // queue is an open type); one bad client must not kill the server
+        reqs.retain(|r| {
+            let ok = r.obs.len() == obs_len;
+            if !ok {
+                self.stats.record_rejected();
+            }
+            ok
+        });
+        if reqs.is_empty() {
+            return Ok(true);
+        }
+        // stage live rows, zero-pad the dead tail (GA3C predictor idiom)
+        for (i, r) in reqs.iter().enumerate() {
+            self.obs_buf[i * obs_len..(i + 1) * obs_len].copy_from_slice(&r.obs);
+        }
+        self.obs_buf[reqs.len() * obs_len..].fill(0.0);
+
+        let out = self.backend.infer(&self.obs_buf)?;
+        let now = Instant::now();
+        self.lat_buf.clear();
+        for (i, r) in reqs.iter().enumerate() {
+            let reply = Reply { probs: out.probs_of(i).to_vec(), value: out.values[i] };
+            // a client that hung up mid-flight is not a server error
+            let _ = r.reply.send(reply);
+            self.lat_buf.push(now.saturating_duration_since(r.enqueued));
+        }
+        self.stats.record_batch(reqs.len(), self.max_batch, &self.lat_buf);
+        Ok(true)
+    }
+
+    /// Serve until shutdown (the batcher thread's entry point).
+    ///
+    /// On exit — orderly or on a backend error — the queue is closed so
+    /// subsequent client queries fail fast ("server is shut down"), and
+    /// the backlog is dropped, which disconnects each in-flight request's
+    /// per-query reply channel so its waiting client errors immediately.
+    pub fn run(mut self) -> Result<()> {
+        let result = loop {
+            match self.step() {
+                Ok(true) => {}
+                Ok(false) => break Ok(()),
+                Err(e) => break Err(e),
+            }
+        };
+        self.queue.close();
+        while self
+            .queue
+            .next_batch(self.max_batch, Duration::ZERO)
+            .is_some()
+        {}
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::queue::Request;
+    use crate::util::prop;
+    use std::sync::mpsc::{channel, Receiver};
+
+    fn submit(queue: &SubmissionQueue, session: u64, obs: Vec<f32>) -> Receiver<Reply> {
+        let (tx, rx) = channel();
+        assert!(queue.push(Request {
+            session,
+            obs,
+            enqueued: Instant::now(),
+            reply: tx,
+        }));
+        rx
+    }
+
+    fn recv_reply(rx: &Receiver<Reply>) -> Reply {
+        rx.recv().expect("reply")
+    }
+
+    fn mk_batcher(width: usize, obs_len: usize, seed: u64) -> Batcher<SyntheticBackend> {
+        Batcher::new(
+            SyntheticBackend::new(width, obs_len, 6, seed),
+            Arc::new(SubmissionQueue::new()),
+            Arc::new(ServeStats::new()),
+            width,
+            Duration::ZERO,
+        )
+    }
+
+    #[test]
+    fn property_full_batch_bitwise_equals_sequential_singles() {
+        // THE padding/masking property: B concurrent requests answered
+        // through one padded batch produce bit-identical replies to the
+        // same B observations served one at a time (each padded B-1 deep).
+        prop::check("batch-vs-sequential", 20, |g| {
+            let width = g.usize_in(2, 16);
+            let obs_len = g.usize_in(1, 40);
+            let seed = g.u64();
+            let obs: Vec<Vec<f32>> =
+                (0..width).map(|_| g.vec_f32(obs_len, -2.0, 2.0)).collect();
+
+            // batched: all width requests coalesce into one full batch
+            let mut b = mk_batcher(width, obs_len, seed);
+            let rxs: Vec<Receiver<Reply>> = obs
+                .iter()
+                .enumerate()
+                .map(|(i, o)| submit(&b.queue, i as u64, o.clone()))
+                .collect();
+            b.step().map_err(|e| e.to_string())?;
+            let batched: Vec<Reply> = rxs.iter().map(recv_reply).collect();
+
+            // sequential: one request per step, fill = 1 of width
+            let mut s = mk_batcher(width, obs_len, seed);
+            for (i, (o, want)) in obs.iter().zip(batched.iter()).enumerate() {
+                let rx = submit(&s.queue, i as u64, o.clone());
+                s.step().map_err(|e| e.to_string())?;
+                let got = recv_reply(&rx);
+                if got != *want {
+                    return Err(format!(
+                        "row {i} of {width}: batched {want:?} != sequential {got:?}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deadline_flush_serves_partial_batches() {
+        let queue = Arc::new(SubmissionQueue::new());
+        let stats = Arc::new(ServeStats::new());
+        let mut b = Batcher::new(
+            SyntheticBackend::new(8, 4, 6, 3),
+            queue.clone(),
+            stats.clone(),
+            8,
+            Duration::from_millis(30),
+        );
+        let rx = submit(&queue, 0, vec![0.5; 4]);
+        let t0 = Instant::now();
+        assert!(b.step().unwrap());
+        assert!(t0.elapsed() >= Duration::from_millis(20), "flushed before the deadline");
+        let reply = recv_reply(&rx);
+        assert_eq!(reply.probs.len(), 6);
+        let snap = stats.snapshot();
+        assert_eq!(snap.queries, 1);
+        assert_eq!(snap.batches, 1);
+        assert!((snap.mean_batch_fill - 1.0 / 8.0).abs() < 1e-9);
+        assert_eq!(snap.full_batch_frac, 0.0, "a 1/8 batch is a deadline flush");
+    }
+
+    #[test]
+    fn replies_are_valid_distributions() {
+        let mut b = mk_batcher(4, 10, 9);
+        let rxs: Vec<Receiver<Reply>> =
+            (0..3).map(|i| submit(&b.queue, i, vec![0.1 * i as f32; 10])).collect();
+        b.step().unwrap();
+        for rx in rxs {
+            let r = recv_reply(&rx);
+            let sum: f32 = r.probs.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4, "probs sum {sum}");
+            assert!(r.probs.iter().all(|&p| (0.0..=1.0).contains(&p)));
+            assert!(r.value.is_finite());
+        }
+    }
+
+    #[test]
+    fn malformed_requests_are_rejected_not_fatal() {
+        let mut b = mk_batcher(4, 10, 1);
+        let bad_rx = submit(&b.queue, 0, vec![1.0; 3]); // wrong length
+        let good_rx = submit(&b.queue, 1, vec![1.0; 10]);
+        assert!(b.step().unwrap());
+        assert!(good_rx.recv().is_ok());
+        assert!(bad_rx.try_recv().is_err(), "malformed request must get no reply");
+        assert_eq!(b.stats.snapshot().rejected, 1);
+    }
+
+    #[test]
+    fn shutdown_ends_the_loop() {
+        let mut b = mk_batcher(2, 4, 5);
+        b.queue.close();
+        assert!(!b.step().unwrap());
+    }
+
+    struct FailingBackend;
+
+    impl InferBackend for FailingBackend {
+        fn batch_width(&self) -> usize {
+            2
+        }
+        fn obs_len(&self) -> usize {
+            2
+        }
+        fn actions(&self) -> usize {
+            2
+        }
+        fn infer(&self, _obs: &[f32]) -> crate::error::Result<ForwardOut> {
+            Err(crate::error::Error::Train("device fell over".into()))
+        }
+    }
+
+    #[test]
+    fn backend_failure_closes_the_queue() {
+        let queue = Arc::new(SubmissionQueue::new());
+        let b = Batcher::new(
+            FailingBackend,
+            queue.clone(),
+            Arc::new(ServeStats::new()),
+            2,
+            Duration::ZERO,
+        );
+        let _rx = submit(&queue, 0, vec![0.0; 2]);
+        assert!(b.run().is_err(), "backend error must surface from run()");
+        // the dead batcher must not leave clients submitting into a void
+        let (tx, _rx2) = channel();
+        let accepted = queue.push(Request {
+            session: 1,
+            obs: vec![0.0; 2],
+            enqueued: Instant::now(),
+            reply: tx,
+        });
+        assert!(!accepted, "queue must be closed after the batcher dies");
+    }
+
+    #[test]
+    fn max_batch_clamps_to_backend_width() {
+        let b = mk_batcher(4, 4, 2);
+        assert_eq!(b.max_batch(), 4);
+        let wide = Batcher::new(
+            SyntheticBackend::new(4, 4, 6, 2),
+            Arc::new(SubmissionQueue::new()),
+            Arc::new(ServeStats::new()),
+            64,
+            Duration::ZERO,
+        );
+        assert_eq!(wide.max_batch(), 4);
+    }
+}

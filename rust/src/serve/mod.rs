@@ -1,0 +1,55 @@
+//! Policy inference serving: the paper's batched forward pass, turned
+//! into a standalone subsystem.
+//!
+//! Training (PAAC) gets its throughput from evaluating the policy for
+//! all `n_e` environments in **one** batched device call; GA3C showed
+//! the same lever works for *asynchronous* clients via a prediction
+//! queue. This module generalizes both into a serving stack for trained
+//! checkpoints:
+//!
+//! * [`queue`] — lock-light submission queue between clients and the
+//!   batcher (producers push O(1); the consumer drains whole batches).
+//! * [`batcher`] — the dynamic micro-batcher: coalesce up to the
+//!   artifact's batch width or a configurable deadline, zero-pad the
+//!   remainder, one device call, fan the rows back out. Backends plug in
+//!   through [`InferBackend`]: [`ModelBackend`] serves a real
+//!   artifact-backed [`crate::model::PolicyModel`]; [`SyntheticBackend`]
+//!   is a deterministic pure-Rust policy for tests, benches and
+//!   artifact-free load generation.
+//! * [`session`] — per-client state: environment, frame-stacking
+//!   preprocessing (Atari mode) and the client-side action sampler.
+//! * [`server`] — the facade: spawn ([`PolicyServer::start`]), connect
+//!   ([`PolicyServer::connect`]), shut down; plus [`ServeConfig`].
+//! * [`stats`] — latency (p50/p95/p99) and throughput accounting,
+//!   renderable into the [`crate::metrics`] JSONL/CSV sinks.
+//!
+//! ```no_run
+//! use std::time::Duration;
+//! use paac::envs::{GameId, ObsMode, ACTIONS};
+//! use paac::serve::{PolicyServer, ServeConfig, Session, SyntheticBackend};
+//!
+//! let backend = SyntheticBackend::new(32, ObsMode::Grid.obs_len(), ACTIONS, 1);
+//! let server = PolicyServer::start(
+//!     backend,
+//!     ServeConfig { max_batch: 32, max_delay: Duration::from_millis(1) },
+//! );
+//! let mut client = Session::new(server.connect(), GameId::Catch, ObsMode::Grid, 1, 30);
+//! let report = client.run(1_000).unwrap();
+//! println!("{} queries, {}", report.queries, server.shutdown().unwrap().summary());
+//! ```
+//!
+//! The `paac serve` CLI subcommand drives this end-to-end with many
+//! concurrent synthetic clients; `benches/serve_throughput.rs` measures
+//! the batched-vs-unbatched throughput curve.
+
+pub mod batcher;
+pub mod queue;
+pub mod server;
+pub mod session;
+pub mod stats;
+
+pub use batcher::{Batcher, InferBackend, ModelBackend, SyntheticBackend};
+pub use queue::{Reply, Request, SubmissionQueue};
+pub use server::{ClientHandle, PolicyServer, ServeConfig};
+pub use session::{run_clients, Session, SessionReport};
+pub use stats::{ServeStats, StatsSnapshot};

@@ -1,0 +1,238 @@
+//! The submission queue between client sessions and the batcher.
+//!
+//! Lock-light by construction: producers take the mutex only for an O(1)
+//! `push_back`, and the single consumer (the batcher thread) amortizes
+//! one lock acquisition over a whole batch drain. The dynamic-batching
+//! policy lives in [`SubmissionQueue::next_batch`]: block for the first
+//! pending request, then wait at most `max_delay` for stragglers before
+//! flushing whatever has accumulated — the classic "batch width OR
+//! deadline, whichever first" rule (GA3C's predictor queue, generalized
+//! with an explicit coalescing deadline).
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One inference request travelling from a client session to the batcher.
+pub struct Request {
+    /// Originating session id (stable per client connection).
+    pub session: u64,
+    /// Flattened (H, W, C) observation.
+    pub obs: Vec<f32>,
+    /// Submission timestamp (the latency clock starts here and anchors
+    /// the coalescing deadline).
+    pub enqueued: Instant,
+    /// Where the batcher delivers the result. One channel **per query**:
+    /// a timed-out query's late reply lands on an abandoned receiver
+    /// (never misattributed to a later observation), and dropping an
+    /// undeliverable request — batcher death, shutdown drain —
+    /// disconnects the receiver so the waiting client fails immediately
+    /// instead of burning its full timeout.
+    pub reply: Sender<Reply>,
+}
+
+/// The batcher's answer: the full policy row and the value estimate for
+/// the submitted observation. Action *sampling* is deliberately left to
+/// the client session (each session owns its RNG stream), which keeps the
+/// server deterministic: a given observation always yields bit-identical
+/// replies, batched or not.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Reply {
+    /// pi(.|s) over the action set.
+    pub probs: Vec<f32>,
+    /// V(s).
+    pub value: f32,
+}
+
+#[derive(Default)]
+struct State {
+    q: VecDeque<Request>,
+    closed: bool,
+    peak_depth: usize,
+}
+
+/// Multi-producer, single-consumer batch-draining queue.
+pub struct SubmissionQueue {
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+impl SubmissionQueue {
+    pub fn new() -> SubmissionQueue {
+        SubmissionQueue { state: Mutex::new(State::default()), cv: Condvar::new() }
+    }
+
+    /// Enqueue a request. Returns `false` (dropping the request) once the
+    /// queue is closed for shutdown.
+    pub fn push(&self, req: Request) -> bool {
+        {
+            let mut s = self.state.lock().unwrap();
+            if s.closed {
+                return false;
+            }
+            s.q.push_back(req);
+            s.peak_depth = s.peak_depth.max(s.q.len());
+        }
+        self.cv.notify_one();
+        true
+    }
+
+    /// Close the queue: subsequent pushes fail, and `next_batch` returns
+    /// `None` once the backlog is drained.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Current backlog (diagnostics).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Deepest backlog observed so far (diagnostics).
+    pub fn peak_depth(&self) -> usize {
+        self.state.lock().unwrap().peak_depth
+    }
+
+    /// Blocking batch drain.
+    ///
+    /// Waits (indefinitely) for the first pending request, then keeps
+    /// waiting for stragglers until the batch fills to `max_batch` or
+    /// until `max_delay` has elapsed since the oldest pending request was
+    /// **enqueued** — so a request that already aged in the queue while a
+    /// previous batch was on-device flushes immediately rather than
+    /// waiting a second window. Returns as soon as the batch is full, the
+    /// deadline passes, or the queue closes; `None` means
+    /// closed-and-drained (shutdown).
+    pub fn next_batch(&self, max_batch: usize, max_delay: Duration) -> Option<Vec<Request>> {
+        assert!(max_batch >= 1, "max_batch must be >= 1");
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if !s.q.is_empty() {
+                break;
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.cv.wait(s).unwrap();
+        }
+        if s.q.len() < max_batch && !max_delay.is_zero() {
+            // the deadline anchors on the oldest request's submission
+            // time, so a request that already aged in the queue while the
+            // previous batch was on-device is not held a second window
+            let deadline = match s.q.front() {
+                Some(first) => first.enqueued + max_delay,
+                None => Instant::now(),
+            };
+            while s.q.len() < max_batch && !s.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (next, timeout) = self.cv.wait_timeout(s, deadline - now).unwrap();
+                s = next;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+        }
+        let n = s.q.len().min(max_batch);
+        Some(s.q.drain(..n).collect())
+    }
+}
+
+impl Default for SubmissionQueue {
+    fn default() -> Self {
+        SubmissionQueue::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn req(session: u64) -> (Request, std::sync::mpsc::Receiver<Reply>) {
+        let (tx, rx) = channel();
+        (
+            Request { session, obs: vec![session as f32], enqueued: Instant::now(), reply: tx },
+            rx,
+        )
+    }
+
+    #[test]
+    fn drains_up_to_max_batch_and_preserves_fifo_order() {
+        let q = SubmissionQueue::new();
+        let mut rxs = Vec::new();
+        for i in 0..5 {
+            let (r, rx) = req(i);
+            assert!(q.push(r));
+            rxs.push(rx);
+        }
+        let batch = q.next_batch(3, Duration::ZERO).unwrap();
+        assert_eq!(batch.iter().map(|r| r.session).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(q.len(), 2);
+        let rest = q.next_batch(3, Duration::ZERO).unwrap();
+        assert_eq!(rest.len(), 2);
+        assert!(q.is_empty());
+        assert_eq!(q.peak_depth(), 5);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batches() {
+        let q = SubmissionQueue::new();
+        let (r, _rx) = req(9);
+        q.push(r);
+        let t0 = Instant::now();
+        let batch = q.next_batch(8, Duration::from_millis(40)).unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(batch.len(), 1, "partial batch must flush at the deadline");
+        assert!(waited >= Duration::from_millis(25), "flushed too early: {waited:?}");
+        assert!(waited < Duration::from_secs(5), "deadline overshot: {waited:?}");
+    }
+
+    #[test]
+    fn full_batch_skips_the_deadline_wait() {
+        let q = SubmissionQueue::new();
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            let (r, rx) = req(i);
+            q.push(r);
+            rxs.push(rx);
+        }
+        let t0 = Instant::now();
+        let batch = q.next_batch(4, Duration::from_secs(10)).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert!(t0.elapsed() < Duration::from_secs(2), "waited despite a full batch");
+    }
+
+    #[test]
+    fn close_rejects_pushes_and_drains_backlog() {
+        let q = SubmissionQueue::new();
+        let (r, _rx) = req(1);
+        q.push(r);
+        q.close();
+        let (r2, _rx2) = req(2);
+        assert!(!q.push(r2), "push after close must fail");
+        // backlog still drains...
+        let batch = q.next_batch(4, Duration::ZERO).unwrap();
+        assert_eq!(batch.len(), 1);
+        // ...then the consumer sees shutdown
+        assert!(q.next_batch(4, Duration::ZERO).is_none());
+    }
+
+    #[test]
+    fn close_wakes_a_blocked_consumer() {
+        let q = std::sync::Arc::new(SubmissionQueue::new());
+        let qc = q.clone();
+        let h = std::thread::spawn(move || qc.next_batch(4, Duration::from_secs(30)));
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap().is_none());
+    }
+}

@@ -1,0 +1,325 @@
+//! The serving facade: queue + stats + batcher thread behind one handle.
+//!
+//! [`PolicyServer::start`] spawns the batcher over any [`InferBackend`]
+//! and hands out [`ClientHandle`]s — one per client connection, each with
+//! its own session id and reply channel. There is no network dependency:
+//! a handle is the transport, and the synthetic-client load generator
+//! (`paac serve`, `benches/serve_throughput.rs`) exercises the same
+//! submit/reply path a socket frontend would.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+
+use super::batcher::{Batcher, InferBackend};
+use super::queue::{Reply, Request, SubmissionQueue};
+use super::stats::{ServeStats, StatsSnapshot};
+
+/// Serving configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Coalesce at most this many requests per device call (clamped to
+    /// the backend's batch width; `usize::MAX` means "the full width").
+    pub max_batch: usize,
+    /// How long the batcher holds a partial batch for stragglers after
+    /// the first request arrives.
+    pub max_delay: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_batch: usize::MAX, max_delay: Duration::from_millis(2) }
+    }
+}
+
+/// A running inference server.
+/// Slack added on top of the coalescing deadline for the default
+/// per-query reply timeout (device time + scheduling headroom).
+const REPLY_TIMEOUT_SLACK: Duration = Duration::from_secs(30);
+
+pub struct PolicyServer {
+    queue: Arc<SubmissionQueue>,
+    stats: Arc<ServeStats>,
+    batcher: Option<JoinHandle<Result<()>>>,
+    next_session: AtomicU64,
+    obs_len: usize,
+    actions: usize,
+    max_batch: usize,
+    max_delay: Duration,
+}
+
+impl PolicyServer {
+    /// Stand the server up over a backend and start the batcher thread.
+    pub fn start<B: InferBackend + 'static>(backend: B, cfg: ServeConfig) -> PolicyServer {
+        let queue = Arc::new(SubmissionQueue::new());
+        let stats = Arc::new(ServeStats::new());
+        let obs_len = backend.obs_len();
+        let actions = backend.actions();
+        let batcher =
+            Batcher::new(backend, queue.clone(), stats.clone(), cfg.max_batch, cfg.max_delay);
+        let max_batch = batcher.max_batch();
+        let handle = std::thread::Builder::new()
+            .name("paac-serve-batcher".into())
+            .spawn(move || batcher.run())
+            .expect("spawn serve batcher");
+        PolicyServer {
+            queue,
+            stats,
+            batcher: Some(handle),
+            next_session: AtomicU64::new(0),
+            obs_len,
+            actions,
+            max_batch,
+            max_delay: cfg.max_delay,
+        }
+    }
+
+    pub fn obs_len(&self) -> usize {
+        self.obs_len
+    }
+
+    pub fn actions(&self) -> usize {
+        self.actions
+    }
+
+    /// Effective per-call coalescing width after clamping.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Point-in-time serving stats.
+    pub fn stats(&self) -> StatsSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Current submission backlog (diagnostics).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Open a client connection with a fresh session id. The handle's
+    /// default reply timeout covers the server's coalescing deadline, so
+    /// even extreme `max_delay` settings cannot time every query out.
+    pub fn connect(&self) -> ClientHandle {
+        ClientHandle {
+            session: self.next_session.fetch_add(1, Ordering::Relaxed),
+            queue: self.queue.clone(),
+            obs_len: self.obs_len,
+            actions: self.actions,
+            default_timeout: self.max_delay.saturating_add(REPLY_TIMEOUT_SLACK),
+        }
+    }
+
+    /// Orderly shutdown: close the queue, drain, join the batcher, and
+    /// return the final stats.
+    pub fn shutdown(mut self) -> Result<StatsSnapshot> {
+        self.queue.close();
+        if let Some(handle) = self.batcher.take() {
+            handle
+                .join()
+                .map_err(|_| Error::serve("batcher thread panicked"))??;
+        }
+        Ok(self.stats.snapshot())
+    }
+}
+
+impl Drop for PolicyServer {
+    fn drop(&mut self) {
+        self.queue.close();
+        if let Some(handle) = self.batcher.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// A client-side connection handle.
+///
+/// One request is in flight per handle at a time — a policy client is
+/// inherently sequential (the next observation depends on the previous
+/// action) — so a plain blocking `query` is the whole API. Handles are
+/// `Send`; give each client thread its own via [`PolicyServer::connect`].
+pub struct ClientHandle {
+    session: u64,
+    queue: Arc<SubmissionQueue>,
+    obs_len: usize,
+    actions: usize,
+    /// Coalescing deadline + slack (see [`REPLY_TIMEOUT_SLACK`]).
+    default_timeout: Duration,
+}
+
+impl ClientHandle {
+    pub fn session(&self) -> u64 {
+        self.session
+    }
+
+    pub fn obs_len(&self) -> usize {
+        self.obs_len
+    }
+
+    pub fn actions(&self) -> usize {
+        self.actions
+    }
+
+    /// Submit one observation and block for the policy/value reply.
+    pub fn query(&self, obs: &[f32]) -> Result<Reply> {
+        self.query_timeout(obs, self.default_timeout)
+    }
+
+    /// `query` with an explicit reply timeout.
+    pub fn query_timeout(&self, obs: &[f32], timeout: Duration) -> Result<Reply> {
+        if obs.len() != self.obs_len {
+            return Err(Error::Shape(format!(
+                "session {}: observation has {} floats, server expects {}",
+                self.session,
+                obs.len(),
+                self.obs_len
+            )));
+        }
+        // One channel per query: a timed-out query's late reply lands on
+        // this (abandoned) receiver instead of a later query's, and if
+        // the batcher dies and drops the request, the disconnect fails
+        // the wait immediately rather than after the full timeout.
+        let (reply_tx, reply_rx) = channel();
+        let accepted = self.queue.push(Request {
+            session: self.session,
+            obs: obs.to_vec(),
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        });
+        if !accepted {
+            return Err(Error::serve("server is shut down"));
+        }
+        match reply_rx.recv_timeout(timeout) {
+            Ok(reply) => Ok(reply),
+            Err(RecvTimeoutError::Timeout) => {
+                Err(Error::serve(format!("no reply within {timeout:?}")))
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(Error::serve("request dropped: batcher is gone (server shutting down?)"))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::batcher::SyntheticBackend;
+
+    fn synthetic_server(width: usize, obs_len: usize, delay: Duration) -> PolicyServer {
+        PolicyServer::start(
+            SyntheticBackend::new(width, obs_len, 6, 42),
+            ServeConfig { max_batch: width, max_delay: delay },
+        )
+    }
+
+    #[test]
+    fn single_client_roundtrip() {
+        let server = synthetic_server(4, 8, Duration::from_micros(200));
+        let client = server.connect();
+        let reply = client.query(&vec![0.25; 8]).unwrap();
+        assert_eq!(reply.probs.len(), 6);
+        assert!(reply.value.is_finite());
+        let snap = server.shutdown().unwrap();
+        assert_eq!(snap.queries, 1);
+    }
+
+    #[test]
+    fn many_concurrent_clients_all_get_served() {
+        let clients = 8;
+        let queries = 25;
+        let server = synthetic_server(clients, 8, Duration::from_micros(500));
+        let threads: Vec<_> = (0..clients)
+            .map(|_| {
+                let handle = server.connect();
+                std::thread::spawn(move || {
+                    let mut obs = vec![0.0f32; 8];
+                    for q in 0..queries {
+                        obs.fill(q as f32 * 0.01 + handle.session() as f32);
+                        handle.query(&obs).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let snap = server.shutdown().unwrap();
+        assert_eq!(snap.queries, (clients * queries) as u64);
+        assert!(snap.batches >= queries as u64, "coalescing cannot shrink below per-round");
+        assert!(snap.mean_batch_fill > 1.0 / clients as f64 - 1e-9);
+        assert!(snap.p99_ms >= snap.p50_ms);
+    }
+
+    #[test]
+    fn sessions_get_distinct_ids() {
+        let server = synthetic_server(2, 4, Duration::ZERO);
+        let a = server.connect();
+        let b = server.connect();
+        assert_ne!(a.session(), b.session());
+    }
+
+    #[test]
+    fn query_validates_observation_length() {
+        let server = synthetic_server(2, 4, Duration::ZERO);
+        let client = server.connect();
+        assert!(matches!(client.query(&[1.0; 3]), Err(Error::Shape(_))));
+    }
+
+    #[test]
+    fn query_after_shutdown_errors() {
+        let server = synthetic_server(2, 4, Duration::ZERO);
+        let client = server.connect();
+        server.shutdown().unwrap();
+        match client.query(&[0.0; 4]) {
+            Err(Error::Serve(msg)) => assert!(msg.contains("shut down")),
+            other => panic!("expected serve error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stale_reply_from_timed_out_query_is_discarded() {
+        // a backend slow enough that the first query's reply arrives
+        // after its timeout — the next query must not inherit it
+        let slow = SyntheticBackend::new(2, 4, 6, 8)
+            .with_cost(Duration::from_millis(80), Duration::ZERO);
+        let server =
+            PolicyServer::start(slow, ServeConfig { max_batch: 2, max_delay: Duration::ZERO });
+        let client = server.connect();
+        let obs_a = vec![0.9; 4];
+        let obs_b = vec![-0.4; 4];
+        assert!(client.query_timeout(&obs_a, Duration::from_millis(5)).is_err());
+        let got = client.query(&obs_b).unwrap();
+        // reference: obs_b on an identical (but fast) backend
+        let fast = PolicyServer::start(
+            SyntheticBackend::new(2, 4, 6, 8),
+            ServeConfig { max_batch: 2, max_delay: Duration::ZERO },
+        );
+        let want = fast.connect().query(&obs_b).unwrap();
+        assert_eq!(got, want, "late reply was attributed to the wrong observation");
+    }
+
+    #[test]
+    fn identical_observations_get_identical_replies_across_fills() {
+        // end-to-end determinism: the same observation answered alone and
+        // answered alongside other traffic yields the same reply bits
+        let server = synthetic_server(4, 6, Duration::from_micros(300));
+        let client = server.connect();
+        let obs = vec![0.7; 6];
+        let solo = client.query(&obs).unwrap();
+        let noise = server.connect();
+        let noisy = std::thread::spawn(move || {
+            for i in 0..50 {
+                noise.query(&vec![0.01 * i as f32; 6]).unwrap();
+            }
+        });
+        for _ in 0..50 {
+            assert_eq!(client.query(&obs).unwrap(), solo);
+        }
+        noisy.join().unwrap();
+    }
+}

@@ -1,0 +1,214 @@
+//! Per-client stateful sessions: the synthetic-client load generator.
+//!
+//! Each session owns a full environment instance — including, in Atari
+//! mode, the per-client frame-stacking preprocessing state from
+//! [`crate::envs::preprocess`] (action-repeat-4, max-of-2-frames,
+//! grayscale, 84x84 rescale, 4-frame stack) that a real streaming client
+//! would keep server-side — plus its own deterministic RNG stream for
+//! action sampling. The session loop is exactly a deployed policy
+//! client's: send the current observation, receive pi(.|s)/V(s), sample
+//! an action locally, advance the environment.
+//!
+//! Sampling client-side (stream derived from the session id, mirroring
+//! the trainer's per-env discipline) keeps the server a pure function of
+//! the observation, which is what makes batched serving testable
+//! bit-for-bit against sequential serving.
+
+use crate::envs::{Env, GameId, ObsMode};
+use crate::error::{Error, Result};
+use crate::util::math;
+use crate::util::rng::Pcg32;
+
+use super::queue::Reply;
+use super::server::{ClientHandle, PolicyServer};
+
+/// The synthetic-client load generator: `clients` concurrent sessions
+/// (one thread each) playing `game` against the server for `queries`
+/// steps apiece. Used by `paac serve`, `examples/serve_policy.rs` and
+/// the serve bench; reports come back in spawn order.
+pub fn run_clients(
+    server: &PolicyServer,
+    game: GameId,
+    mode: ObsMode,
+    seed: u64,
+    noop_max: u32,
+    clients: usize,
+    queries: usize,
+) -> Result<Vec<SessionReport>> {
+    let workers: Vec<_> = (0..clients)
+        .map(|_| {
+            let mut session = Session::new(server.connect(), game, mode, seed, noop_max);
+            std::thread::spawn(move || session.run(queries))
+        })
+        .collect();
+    let mut reports = Vec::with_capacity(clients);
+    for w in workers {
+        reports.push(w.join().map_err(|_| Error::serve("client thread panicked"))??);
+    }
+    Ok(reports)
+}
+
+/// Summary of one session's run.
+#[derive(Clone, Debug, Default)]
+pub struct SessionReport {
+    pub session: u64,
+    pub queries: u64,
+    /// Episodes completed during the run.
+    pub episodes: usize,
+    /// Mean return over completed episodes (0 when none finished).
+    pub mean_return: f32,
+    /// Mean served value estimate (diagnostic).
+    pub mean_value: f32,
+}
+
+/// A synthetic client: environment + preprocessing + sampler + handle.
+pub struct Session {
+    handle: ClientHandle,
+    env: Env,
+    rng: Pcg32,
+    finished: Vec<f32>,
+    queries: u64,
+    value_sum: f64,
+}
+
+impl Session {
+    /// Build a session over an open connection. The environment's RNG
+    /// stream and the action sampler both derive from (seed, session id),
+    /// so a load-generation run is reproducible for any client count.
+    pub fn new(
+        handle: ClientHandle,
+        game: GameId,
+        mode: ObsMode,
+        seed: u64,
+        noop_max: u32,
+    ) -> Session {
+        let id = handle.session();
+        Session {
+            env: Env::new(game, mode, seed, id, noop_max),
+            rng: Pcg32::new(seed ^ 0x5E55_0000, id),
+            handle,
+            finished: Vec::new(),
+            queries: 0,
+            value_sum: 0.0,
+        }
+    }
+
+    pub fn session(&self) -> u64 {
+        self.handle.session()
+    }
+
+    /// One client step: query the server with the current observation,
+    /// sample an action from the returned policy row, advance the env.
+    pub fn step(&mut self) -> Result<Reply> {
+        let reply = self.handle.query(self.env.obs())?;
+        let action = self.rng.categorical(&reply.probs);
+        self.env.step(action);
+        self.finished.extend(self.env.take_finished_returns());
+        self.queries += 1;
+        self.value_sum += reply.value as f64;
+        Ok(reply)
+    }
+
+    /// Drive `steps` queries and summarize.
+    pub fn run(&mut self, steps: usize) -> Result<SessionReport> {
+        for _ in 0..steps {
+            self.step()?;
+        }
+        Ok(self.report())
+    }
+
+    pub fn report(&self) -> SessionReport {
+        SessionReport {
+            session: self.handle.session(),
+            queries: self.queries,
+            episodes: self.finished.len(),
+            mean_return: math::mean(&self.finished),
+            mean_value: if self.queries > 0 {
+                (self.value_sum / self.queries as f64) as f32
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::batcher::SyntheticBackend;
+    use crate::serve::server::{PolicyServer, ServeConfig};
+    use std::time::Duration;
+
+    fn grid_server(width: usize) -> PolicyServer {
+        PolicyServer::start(
+            SyntheticBackend::new(width, ObsMode::Grid.obs_len(), crate::envs::ACTIONS, 17),
+            ServeConfig { max_batch: width, max_delay: Duration::from_micros(300) },
+        )
+    }
+
+    #[test]
+    fn session_plays_full_episodes_through_the_server() {
+        let server = grid_server(4);
+        let mut session =
+            Session::new(server.connect(), GameId::Catch, ObsMode::Grid, 3, 5);
+        let report = session.run(600).unwrap();
+        assert_eq!(report.queries, 600);
+        assert!(report.episodes > 0, "600 catch steps must finish episodes");
+        assert!((-10.0..=10.0).contains(&report.mean_return));
+        assert!(report.mean_value.is_finite());
+        let snap = server.shutdown().unwrap();
+        assert_eq!(snap.queries, 600);
+    }
+
+    #[test]
+    fn concurrent_sessions_are_reproducible_per_seed() {
+        // same (seed, session-id) => same trajectory, regardless of how
+        // requests interleave in the batcher
+        let run = || {
+            let server = grid_server(2);
+            let mut a = Session::new(server.connect(), GameId::Pong, ObsMode::Grid, 9, 5);
+            let mut b = Session::new(server.connect(), GameId::Pong, ObsMode::Grid, 9, 5);
+            let ta = std::thread::spawn(move || {
+                a.run(200).unwrap();
+                a.env_fingerprint()
+            });
+            let tb = std::thread::spawn(move || {
+                b.run(200).unwrap();
+                b.env_fingerprint()
+            });
+            (ta.join().unwrap(), tb.join().unwrap())
+        };
+        let (a1, b1) = run();
+        let (a2, b2) = run();
+        assert_eq!(a1, a2, "session 0 diverged across runs");
+        assert_eq!(b1, b2, "session 1 diverged across runs");
+        assert_ne!(a1, b1, "distinct sessions should see distinct streams");
+    }
+
+    #[test]
+    fn atari_mode_sessions_stack_frames_per_client() {
+        let server = PolicyServer::start(
+            SyntheticBackend::new(2, ObsMode::Atari.obs_len(), crate::envs::ACTIONS, 5),
+            ServeConfig { max_batch: 2, max_delay: Duration::from_micros(200) },
+        );
+        let mut session =
+            Session::new(server.connect(), GameId::Breakout, ObsMode::Atari, 1, 5);
+        let report = session.run(12).unwrap();
+        assert_eq!(report.queries, 12);
+        let obs = session.env.obs();
+        assert_eq!(obs.len(), 84 * 84 * 4, "session must stream stacked 84x84x4 frames");
+        // the newest stacked channel always holds the latest rendered
+        // frame (channel STACK-1), and the pipeline keeps values in [0,1]
+        let newest: f32 = (0..84 * 84).map(|i| obs[i * 4 + 3]).sum();
+        assert!(newest > 0.0, "newest stacked channel empty");
+        assert!(obs.iter().all(|v| (0.0..=1.0).contains(v)));
+    }
+}
+
+#[cfg(test)]
+impl Session {
+    /// Test helper: a cheap trajectory fingerprint.
+    fn env_fingerprint(&self) -> Vec<u32> {
+        self.env.obs().iter().map(|v| v.to_bits()).collect()
+    }
+}

@@ -1,0 +1,256 @@
+//! Serving telemetry: per-request latency and per-batch fill accounting.
+//!
+//! The batcher thread is the only writer; counters are atomics and the
+//! latency reservoir sits behind a mutex the hot path touches once per
+//! batch. Snapshots integrate with the [`crate::metrics`] sinks: a
+//! [`StatsSnapshot`] renders to the crate's JSON value for JSONL records
+//! (`runs/<name>/serve.jsonl` via `paac serve --run-name`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::error::Result;
+use crate::metrics::JsonlWriter;
+use crate::util::json::{obj, Json};
+use crate::util::math;
+use crate::util::rng::Pcg32;
+
+/// Retained latency samples; past this the recorder switches to
+/// uniform reservoir sampling (Algorithm R) so a long-lived server's
+/// memory and snapshot cost stay bounded.
+const LATENCY_RESERVOIR: usize = 65_536;
+
+struct LatencyReservoir {
+    samples: Vec<f32>,
+    /// Total observations ever offered (>= samples.len()).
+    seen: u64,
+    /// True maximum over ALL observations, not just retained ones.
+    max_ms: f32,
+    rng: Pcg32,
+}
+
+impl LatencyReservoir {
+    fn new() -> LatencyReservoir {
+        LatencyReservoir {
+            samples: Vec::new(),
+            seen: 0,
+            max_ms: 0.0,
+            rng: Pcg32::new(0x57A7, 7),
+        }
+    }
+
+    fn push(&mut self, ms: f32) {
+        self.seen += 1;
+        self.max_ms = self.max_ms.max(ms);
+        if self.samples.len() < LATENCY_RESERVOIR {
+            self.samples.push(ms);
+        } else {
+            // keep each of the `seen` observations with equal probability
+            let j = (self.rng.next_f64() * self.seen as f64) as u64;
+            if (j as usize) < self.samples.len() {
+                self.samples[j as usize] = ms;
+            }
+        }
+    }
+}
+
+/// Shared counters updated by the batcher.
+pub struct ServeStats {
+    queries: AtomicU64,
+    batches: AtomicU64,
+    /// Sum of per-batch capacities (fill denominator).
+    capacity_slots: AtomicU64,
+    /// Batches that flushed at full width (vs. deadline flushes).
+    full_batches: AtomicU64,
+    /// Malformed requests dropped before inference.
+    rejected: AtomicU64,
+    /// Per-request submit->reply latency, milliseconds (bounded).
+    latencies_ms: Mutex<LatencyReservoir>,
+    started: Instant,
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats {
+            queries: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            capacity_slots: AtomicU64::new(0),
+            full_batches: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            latencies_ms: Mutex::new(LatencyReservoir::new()),
+            started: Instant::now(),
+        }
+    }
+
+    /// Record one executed batch: `fill` live rows out of `capacity`
+    /// slots, plus each live request's queue->reply latency.
+    pub fn record_batch(&self, fill: usize, capacity: usize, latencies: &[Duration]) {
+        debug_assert_eq!(fill, latencies.len());
+        self.queries.fetch_add(fill as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.capacity_slots.fetch_add(capacity as u64, Ordering::Relaxed);
+        if fill == capacity {
+            self.full_batches.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut lat = self.latencies_ms.lock().unwrap();
+        for d in latencies {
+            lat.push(d.as_secs_f64() as f32 * 1e3);
+        }
+    }
+
+    /// Record a request dropped for a malformed payload.
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Consistent point-in-time view (sorts a copy of the latencies).
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let queries = self.queries.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let capacity = self.capacity_slots.load(Ordering::Relaxed);
+        let full = self.full_batches.load(Ordering::Relaxed);
+        let (lat, max_ms) = {
+            let guard = self.latencies_ms.lock().unwrap();
+            (guard.samples.clone(), guard.max_ms)
+        };
+        let wall_secs = self.started.elapsed().as_secs_f64();
+        StatsSnapshot {
+            queries,
+            batches,
+            rejected: self.rejected.load(Ordering::Relaxed),
+            qps: queries as f64 / wall_secs.max(1e-9),
+            mean_batch_fill: if capacity > 0 {
+                queries as f64 / capacity as f64
+            } else {
+                0.0
+            },
+            full_batch_frac: if batches > 0 { full as f64 / batches as f64 } else { 0.0 },
+            p50_ms: math::percentile(&lat, 50.0) as f64,
+            p95_ms: math::percentile(&lat, 95.0) as f64,
+            p99_ms: math::percentile(&lat, 99.0) as f64,
+            max_ms: max_ms as f64,
+            wall_secs,
+        }
+    }
+}
+
+impl Default for ServeStats {
+    fn default() -> Self {
+        ServeStats::new()
+    }
+}
+
+/// Immutable stats view, ready for reporting.
+#[derive(Clone, Debug)]
+pub struct StatsSnapshot {
+    pub queries: u64,
+    pub batches: u64,
+    pub rejected: u64,
+    /// Queries per second over the server's lifetime so far.
+    pub qps: f64,
+    /// Mean live-rows / capacity over all executed batches.
+    pub mean_batch_fill: f64,
+    /// Fraction of batches that flushed full (the rest hit the deadline).
+    pub full_batch_frac: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    pub wall_secs: f64,
+}
+
+impl StatsSnapshot {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("type", Json::Str("serve_stats".into())),
+            ("queries", Json::Num(self.queries as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("qps", Json::Num(self.qps)),
+            ("mean_batch_fill", Json::Num(self.mean_batch_fill)),
+            ("full_batch_frac", Json::Num(self.full_batch_frac)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p95_ms", Json::Num(self.p95_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("max_ms", Json::Num(self.max_ms)),
+            ("wall_secs", Json::Num(self.wall_secs)),
+        ])
+    }
+
+    /// Append this snapshot to a JSONL metrics sink.
+    pub fn log_to(&self, sink: &mut JsonlWriter) -> Result<()> {
+        sink.record(&self.to_json())
+    }
+
+    /// Human-oriented one-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} queries in {} batches | {:.0} q/s | fill {:.0}% (full {:.0}%) | \
+             latency p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms",
+            self.queries,
+            self.batches,
+            self.qps,
+            self.mean_batch_fill * 100.0,
+            self.full_batch_frac * 100.0,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_accumulate_into_snapshot() {
+        let s = ServeStats::new();
+        s.record_batch(4, 4, &[Duration::from_millis(2); 4]);
+        s.record_batch(1, 4, &[Duration::from_millis(10)]);
+        s.record_rejected();
+        let snap = s.snapshot();
+        assert_eq!(snap.queries, 5);
+        assert_eq!(snap.batches, 2);
+        assert_eq!(snap.rejected, 1);
+        assert!((snap.mean_batch_fill - 5.0 / 8.0).abs() < 1e-9);
+        assert!((snap.full_batch_frac - 0.5).abs() < 1e-9);
+        assert!(snap.p50_ms >= 2.0 - 1e-3 && snap.p50_ms <= 10.0 + 1e-3);
+        assert!(snap.max_ms >= 10.0 - 1e-3);
+        assert!(snap.qps > 0.0);
+    }
+
+    #[test]
+    fn empty_stats_are_well_defined() {
+        let snap = ServeStats::new().snapshot();
+        assert_eq!(snap.queries, 0);
+        assert_eq!(snap.mean_batch_fill, 0.0);
+        assert_eq!(snap.full_batch_frac, 0.0);
+    }
+
+    #[test]
+    fn latency_reservoir_stays_bounded() {
+        let mut r = LatencyReservoir::new();
+        let total = LATENCY_RESERVOIR as u64 + 10_000;
+        for i in 0..total {
+            r.push(i as f32 * 0.001);
+        }
+        assert_eq!(r.samples.len(), LATENCY_RESERVOIR, "reservoir must cap retention");
+        assert_eq!(r.seen, total);
+        // the true max survives sampling even if its sample was evicted
+        assert!((r.max_ms - (total - 1) as f32 * 0.001).abs() < 1e-2);
+    }
+
+    #[test]
+    fn snapshot_serializes_to_json() {
+        let s = ServeStats::new();
+        s.record_batch(2, 4, &[Duration::from_millis(1), Duration::from_millis(3)]);
+        let snap = s.snapshot();
+        let j = snap.to_json().to_string_compact();
+        assert!(j.contains("\"type\":\"serve_stats\""));
+        assert!(j.contains("\"queries\":2"));
+        assert!(crate::util::json::Json::parse(&j).is_ok());
+        assert!(snap.summary().contains("2 queries"));
+    }
+}

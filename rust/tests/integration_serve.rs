@@ -1,0 +1,74 @@
+//! Integration: the serve subsystem end-to-end over the synthetic
+//! backend (runs on a clean checkout — no compiled artifacts needed).
+//!
+//! Covers the cross-module contract the unit tests can't: many threaded
+//! client sessions against one live server, stats consistency with the
+//! client-side view, and the batched-vs-sequential equivalence through
+//! the full public API (server + handle, not just the batcher).
+
+use std::time::Duration;
+
+use paac::envs::{GameId, ObsMode, ACTIONS};
+use paac::serve::{run_clients, PolicyServer, ServeConfig, Session, SyntheticBackend};
+
+fn server(width: usize, delay_us: u64, seed: u64) -> PolicyServer {
+    PolicyServer::start(
+        SyntheticBackend::new(width, ObsMode::Grid.obs_len(), ACTIONS, seed),
+        ServeConfig { max_batch: width, max_delay: Duration::from_micros(delay_us) },
+    )
+}
+
+#[test]
+fn concurrent_sessions_stats_match_client_counts() {
+    let clients = 6;
+    let queries = 120;
+    let srv = server(clients, 400, 21);
+    let reports =
+        run_clients(&srv, GameId::Catch, ObsMode::Grid, 4, 10, clients, queries).unwrap();
+    let snap = srv.shutdown().unwrap();
+
+    let client_side: u64 = reports.iter().map(|r| r.queries).sum();
+    assert_eq!(client_side, (clients * queries) as u64);
+    assert_eq!(snap.queries, client_side, "server and clients disagree on query count");
+    assert_eq!(snap.rejected, 0);
+    assert!(snap.batches > 0 && snap.batches <= snap.queries);
+    assert!(snap.mean_batch_fill > 0.0 && snap.mean_batch_fill <= 1.0);
+    assert!(snap.p50_ms <= snap.p95_ms && snap.p95_ms <= snap.p99_ms);
+    // sessions play real episodes through the served policy
+    assert!(reports.iter().any(|r| r.episodes > 0), "no client finished an episode");
+}
+
+#[test]
+fn batched_serving_is_equivalent_to_width_one_serving() {
+    // the same client workload answered by a width-8 coalescing server
+    // and a width-1 (unbatched) server must produce identical trajectories:
+    // padding and fan-out add nothing but latency
+    let trajectory = |width: usize| {
+        let srv = server(width, 300, 33);
+        let mut s = Session::new(srv.connect(), GameId::Pong, ObsMode::Grid, 8, 10);
+        let mut value_bits = Vec::new();
+        for _ in 0..150 {
+            let reply = s.step().unwrap();
+            value_bits.push(reply.value.to_bits());
+        }
+        value_bits
+    };
+    assert_eq!(trajectory(8), trajectory(1), "batch width changed served outputs");
+}
+
+#[test]
+fn deadline_keeps_single_client_latency_bounded() {
+    // one client can never fill a 32-wide batch; only the deadline flush
+    // keeps it served
+    let srv = server(32, 200, 9);
+    let mut s = Session::new(srv.connect(), GameId::Catch, ObsMode::Grid, 2, 10);
+    s.run(40).unwrap();
+    let snap = srv.shutdown().unwrap();
+    assert_eq!(snap.queries, 40);
+    assert_eq!(snap.full_batch_frac, 0.0, "a lone client cannot fill the batch");
+    assert!(
+        (snap.mean_batch_fill - 1.0 / 32.0).abs() < 1e-9,
+        "fill {} != 1/32",
+        snap.mean_batch_fill
+    );
+}

@@ -1,0 +1,60 @@
+//! Minimal drop-in for the `log` facade (the offline crate set has none).
+//!
+//! `error!`/`warn!` always write to stderr; `info!`/`debug!`/`trace!`
+//! only when the `PAAC_LOG` environment variable is set. No levels, no
+//! pluggable loggers — just enough surface for the host crate's call
+//! sites to compile and stay useful.
+
+use std::sync::OnceLock;
+
+static VERBOSE: OnceLock<bool> = OnceLock::new();
+
+/// Whether verbose (info/debug/trace) output is enabled.
+pub fn verbose() -> bool {
+    *VERBOSE.get_or_init(|| std::env::var_os("PAAC_LOG").is_some())
+}
+
+#[doc(hidden)]
+pub fn __log(level: &str, always: bool, args: std::fmt::Arguments<'_>) {
+    if always || verbose() {
+        eprintln!("[{level}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::__log("ERROR", true, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::__log("WARN", true, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::__log("INFO", false, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::__log("DEBUG", false, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::__log("TRACE", false, format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_expand_and_run() {
+        // smoke: none of these may panic regardless of verbosity
+        crate::error!("e {}", 1);
+        crate::warn!("w {}", 2);
+        crate::info!("i {}", 3);
+        crate::debug!("d {}", 4);
+        crate::trace!("t {}", 5);
+    }
+}

@@ -1,0 +1,302 @@
+//! Offline stand-in for the `xla` crate (xla_extension 0.5.1 bindings).
+//!
+//! The build environment has no XLA/PJRT toolchain, so this crate
+//! reimplements the **host-side** subset of the API the `paac` crate
+//! uses — literals, shapes, tuple decomposition — in pure Rust, and
+//! stubs the device-side entry points (`PjRtClient::compile`,
+//! `PjRtLoadedExecutable::execute_b`) with a descriptive error. Code
+//! paths that never reach a device call (checkpointing, manifests,
+//! rollout bookkeeping, the serve subsystem's synthetic backend, every
+//! unit test) run unchanged; paths that need a real device fail with a
+//! single clear message instead of a link error.
+//!
+//! To run compiled HLO artifacts, replace this path dependency in
+//! `rust/Cargo.toml` with the real crate; `backend_available()` is the
+//! one extension point the host crate probes (the real bindings are
+//! detected via a wrapper returning `true`).
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Message returned by every device-side entry point.
+pub const BACKEND_UNAVAILABLE: &str =
+    "PJRT backend unavailable: the vendored `xla` stub cannot compile or execute HLO \
+     artifacts (link the real xla crate in rust/Cargo.toml to enable device execution)";
+
+/// Whether a real PJRT backend is linked (always `false` for the stub).
+pub fn backend_available() -> bool {
+    false
+}
+
+/// Error type mirroring the real crate's.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+// ---------------------------------------------------------------------------
+// Literals
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host-resident tensor (or tuple of tensors) with a logical shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+/// Array shape handle (`dims` in row-major order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Element types the stub supports (the artifact contract is f32/i32).
+pub trait NativeType: Copy {
+    fn vec1(data: &[Self]) -> Literal;
+    fn scalar(v: Self) -> Literal;
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn vec1(data: &[f32]) -> Literal {
+        Literal { data: Data::F32(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    fn scalar(v: f32) -> Literal {
+        Literal { data: Data::F32(vec![v]), dims: Vec::new() }
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<f32>> {
+        match &lit.data {
+            Data::F32(v) => Ok(v.clone()),
+            Data::I32(_) => Err(Error("literal holds i32, asked for f32".into())),
+            Data::Tuple(_) => Err(Error("literal is a tuple, asked for f32 array".into())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn vec1(data: &[i32]) -> Literal {
+        Literal { data: Data::I32(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    fn scalar(v: i32) -> Literal {
+        Literal { data: Data::I32(vec![v]), dims: Vec::new() }
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<i32>> {
+        match &lit.data {
+            Data::I32(v) => Ok(v.clone()),
+            Data::F32(_) => Err(Error("literal holds f32, asked for i32".into())),
+            Data::Tuple(_) => Err(Error("literal is a tuple, asked for i32 array".into())),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a flat slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::vec1(data)
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        T::scalar(v)
+    }
+
+    /// Tuple literal (what artifact executions return).
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal { data: Data::Tuple(elements), dims: Vec::new() }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(_) => 0,
+        }
+    }
+
+    /// Reinterpret under a new logical shape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.data, Data::Tuple(_)) {
+            return Err(Error("cannot reshape a tuple literal".into()));
+        }
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape to {:?} ({} elems) from {} elems",
+                dims,
+                want,
+                self.element_count()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Flat host copy of the elements.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        if matches!(self.data, Data::Tuple(_)) {
+            return Err(Error("tuple literal has no array shape".into()));
+        }
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(v) => Ok(v),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT plumbing (device side: stubbed)
+// ---------------------------------------------------------------------------
+
+/// Parsed HLO module (the stub only retains the text).
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        std::fs::read_to_string(path)
+            .map(|text| HloModuleProto { text })
+            .map_err(|e| Error(format!("{path}: {e}")))
+    }
+}
+
+/// Computation handle built from a proto.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer: a host literal in the stub.
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// The PJRT client handle.
+#[derive(Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer { literal: literal.clone() })
+    }
+
+    /// Device compilation is where the stub stops.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(BACKEND_UNAVAILABLE.to_string()))
+    }
+}
+
+/// Loaded executable (never constructed by the stub; methods exist so the
+/// host crate's call sites type-check identically against both crates).
+pub struct PjRtLoadedExecutable {
+    client: PjRtClient,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn client(&self) -> PjRtClient {
+        self.client.clone()
+    }
+
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(&self, _args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(BACKEND_UNAVAILABLE.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_shape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.array_shape().unwrap().dims(), &[2, 2]);
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_and_tuple() {
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
+        assert!(s.array_shape().unwrap().dims().is_empty());
+        let t = Literal::tuple(vec![Literal::scalar(1.0f32), Literal::scalar(2i32)]);
+        assert!(t.array_shape().is_err());
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].to_vec::<f32>().unwrap(), vec![1.0]);
+    }
+
+    #[test]
+    fn device_paths_error_cleanly() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.device_count(), 1);
+        let buf = client
+            .buffer_from_host_literal(None, &Literal::scalar(1.0f32))
+            .unwrap();
+        assert_eq!(buf.to_literal_sync().unwrap(), Literal::scalar(1.0f32));
+        let err = client.compile(&XlaComputation).unwrap_err();
+        assert!(err.to_string().contains("PJRT backend unavailable"));
+        assert!(!backend_available());
+    }
+}
