@@ -2,7 +2,7 @@
 
 CARGO_DIR := rust
 
-.PHONY: verify build test fmt fmt-check artifacts bench-serve clean
+.PHONY: verify build test fmt fmt-check docs artifacts bench-serve clean
 
 # Tier-1 gate, exactly: cargo build --release && cargo test -q.
 verify: build test
@@ -18,6 +18,10 @@ fmt:
 
 fmt-check:
 	cd $(CARGO_DIR) && cargo fmt --check
+
+# Rustdoc API reference (warnings are errors, mirroring CI).
+docs:
+	cd $(CARGO_DIR) && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 # AOT-lower the JAX/Pallas entry points to HLO-text artifacts (needs jax;
 # the Rust side runs without this until a PJRT-backed xla crate is linked).

@@ -10,14 +10,17 @@
 //! so the serving path always runs:
 //!
 //!   cargo run --release --example serve_policy \
-//!       [-- --ckpt runs/quickstart/final.ckpt --clients 8 --queries 500]
+//!       [-- --ckpt runs/quickstart/final.ckpt --clients 8 --queries 500 \
+//!           --shards 4 --small-batch 4]
 
 use std::time::{Duration, Instant};
 
 use paac::cli::Cli;
 use paac::envs::{GameId, ObsMode, ACTIONS};
 use paac::error::Result;
-use paac::serve::{run_clients, ModelBackend, PolicyServer, ServeConfig, SyntheticBackend};
+use paac::serve::{
+    run_clients, ModelBackendFactory, PolicyServer, ServeConfig, SyntheticFactory,
+};
 
 fn main() -> Result<()> {
     let args = Cli::new("serve_policy", "serve a checkpointed policy to synthetic clients")
@@ -28,6 +31,8 @@ fn main() -> Result<()> {
         .flag("queries", Some("500"), "queries per client")
         .flag("batch", Some("32"), "max coalesced batch width")
         .flag("deadline-us", Some("1500"), "coalescing deadline in µs")
+        .flag("shards", Some("1"), "batcher shards draining the queue")
+        .flag("small-batch", Some("0"), "small-batch fast-path shard width (0 = off)")
         .flag("seed", Some("1"), "run seed")
         .parse_or_exit();
 
@@ -38,10 +43,12 @@ fn main() -> Result<()> {
     let queries = args.usize_of("queries")?.max(1);
     let batch = args.usize_of("batch")?.max(1);
     let seed = args.u64_of("seed")?;
-    let cfg = ServeConfig {
-        max_batch: batch,
-        max_delay: Duration::from_secs_f64(args.f64_of("deadline-us")?.max(0.0) / 1e6),
-    };
+    let cfg = ServeConfig::new(
+        batch,
+        Duration::from_secs_f64(args.f64_of("deadline-us")?.max(0.0) / 1e6),
+    )
+    .with_shards(args.usize_of("shards")?)
+    .with_small_batch(args.usize_of("small-batch")?);
 
     println!("== PAAC serve: train -> checkpoint -> serve ==");
 
@@ -49,36 +56,39 @@ fn main() -> Result<()> {
     // policy when the device backend or the checkpoint is missing.
     let ckpt_path = args.str_of("ckpt")?;
     let artifacts = args.str_of("artifacts")?;
+    let synthetic = || {
+        let factory = SyntheticFactory::new(obs_len, ACTIONS, seed);
+        PolicyServer::start_pool(&factory, cfg)
+    };
     let server = if paac::runtime::pjrt_available() {
-        match ModelBackend::from_checkpoint(
+        match ModelBackendFactory::from_checkpoint(
             std::path::Path::new(&ckpt_path),
             std::path::Path::new(&artifacts),
-            batch,
             seed as i32,
             obs_len,
         ) {
-            Ok((backend, timestep)) => {
+            Ok((factory, timestep)) => {
                 println!(
-                    "backend: checkpoint {ckpt_path} (arch {}, trained {timestep} steps, {} params)",
-                    backend.model().arch,
-                    backend.model().params.param_count()
+                    "backend: checkpoint {ckpt_path} (arch {}, trained {timestep} steps)",
+                    factory.arch()
                 );
-                PolicyServer::start(backend, cfg)
+                PolicyServer::start_pool(&factory, cfg)?
             }
             Err(e) => {
                 println!("backend: cannot serve {ckpt_path} ({e}); using synthetic policy");
-                PolicyServer::start(SyntheticBackend::new(batch, obs_len, ACTIONS, seed), cfg)
+                synthetic()?
             }
         }
     } else {
         println!("backend: PJRT unavailable (stub xla crate); using synthetic policy");
-        PolicyServer::start(SyntheticBackend::new(batch, obs_len, ACTIONS, seed), cfg)
+        synthetic()?
     };
 
     println!(
         "serving {} to {clients} clients, {queries} queries each \
-         (batch width {}, deadline {:?})",
+         ({} shard(s), widest batch {}, deadline {:?})",
         game.name(),
+        server.shards(),
         server.max_batch(),
         cfg.max_delay
     );
@@ -107,6 +117,10 @@ fn main() -> Result<()> {
         snap.queries as f64 / wall.max(1e-9)
     );
     println!("{}", snap.summary());
+    let shard_lines = snap.shard_summary();
+    if !shard_lines.is_empty() {
+        println!("{shard_lines}");
+    }
     if !returns.is_empty() {
         println!(
             "served policy score over {episodes} episodes: {:+.2}",

@@ -1,16 +1,18 @@
-//! Serving throughput: batched vs unbatched inference across client
-//! counts.
+//! Serving throughput: batched vs unbatched inference, and a single
+//! batcher vs a shard pool, across client counts.
 //!
 //! Drives the serve subsystem with concurrent synthetic clients against
 //! a backend that charges a fixed per-call dispatch cost plus a small
 //! per-row cost — the cost shape of a real accelerator, where one
-//! batched call amortizes dispatch over the whole batch. For each client
-//! count the bench reports:
+//! batched call amortizes dispatch over the whole batch. Two tables:
 //!
-//! * batched queries/sec (micro-batcher at width 32, 500µs deadline)
-//! * p50/p99 request latency and mean batch fill
-//! * unbatched queries/sec (batch width 1: one device call per query)
-//! * the batched/unbatched speedup
+//! 1. **Micro-batching** — batched queries/sec (width 32, 500µs
+//!    deadline) vs the unbatched baseline (width 1: one device call per
+//!    query), with p50/p99 request latency and mean batch fill.
+//! 2. **Sharding** — shards=1 vs shards=4 (one small-batch fast-path
+//!    shard @4 + three wide shards @32) on the same workload: the pool
+//!    overlaps device calls across shards and serves straggler windows
+//!    with a narrow (cheaper) call.
 //!
 //! Run: cargo bench --bench serve_throughput  (PAAC_BENCH_FAST=1 to shorten)
 
@@ -18,23 +20,16 @@ use std::time::{Duration, Instant};
 
 use paac::benchkit::Table;
 use paac::envs::{GameId, ObsMode, ACTIONS};
-use paac::serve::{run_clients, PolicyServer, ServeConfig, StatsSnapshot, SyntheticBackend};
+use paac::serve::{run_clients, PolicyServer, ServeConfig, StatsSnapshot, SyntheticFactory};
 
 /// Emulated device: fixed dispatch overhead + linear per-row cost.
 const DISPATCH: Duration = Duration::from_micros(150);
 const PER_ROW: Duration = Duration::from_micros(2);
 
-fn run_load(
-    clients: usize,
-    queries_per_client: usize,
-    width: usize,
-    max_delay: Duration,
-) -> (f64, StatsSnapshot) {
+fn run_load(clients: usize, queries_per_client: usize, cfg: ServeConfig) -> (f64, StatsSnapshot) {
     let obs_len = ObsMode::Grid.obs_len();
-    let backend =
-        SyntheticBackend::new(width, obs_len, ACTIONS, 7).with_cost(DISPATCH, PER_ROW);
-    let server =
-        PolicyServer::start(backend, ServeConfig { max_batch: width, max_delay });
+    let factory = SyntheticFactory::new(obs_len, ACTIONS, 7).with_cost(DISPATCH, PER_ROW);
+    let server = PolicyServer::start_pool(&factory, cfg).expect("start shard pool");
     let t0 = Instant::now();
     run_clients(&server, GameId::Catch, ObsMode::Grid, 11, 10, clients, queries_per_client)
         .expect("load generation");
@@ -48,6 +43,9 @@ fn main() {
     let queries = if fast { 150 } else { 1_500 };
     let width = 32;
     let deadline = Duration::from_micros(500);
+    let client_counts = [1usize, 2, 4, 8, 16, 32];
+
+    // -- table 1: micro-batching vs per-query dispatch --
 
     let mut table = Table::new(&[
         "clients",
@@ -64,11 +62,17 @@ fn main() {
          dispatch={DISPATCH:?} per-row={PER_ROW:?} ({queries} queries/client)"
     );
     let mut scaling: Vec<(usize, f64)> = Vec::new();
-    for clients in [1usize, 2, 4, 8, 16, 32] {
-        let (batched_qps, snap) = run_load(clients, queries, width, deadline);
+    // (clients, qps, snapshot) of each shards=1 run, reused by table 2
+    let mut single_runs: Vec<(usize, f64, StatsSnapshot)> = Vec::new();
+    for clients in client_counts {
+        let (batched_qps, snap) = run_load(clients, queries, ServeConfig::new(width, deadline));
         // unbatched baseline: width 1 = one dispatch per query; fewer
         // queries keep the (slow) baseline affordable — qps is rate-based
-        let (unbatched_qps, _) = run_load(clients, (queries / 8).max(30), 1, Duration::ZERO);
+        let (unbatched_qps, _) = run_load(
+            clients,
+            (queries / 8).max(30),
+            ServeConfig::new(1, Duration::ZERO),
+        );
         scaling.push((clients, batched_qps));
         table.row(vec![
             clients.to_string(),
@@ -79,6 +83,7 @@ fn main() {
             format!("{unbatched_qps:.0}"),
             format!("{:.2}x", batched_qps / unbatched_qps.max(1e-9)),
         ]);
+        single_runs.push((clients, batched_qps, snap));
     }
 
     println!("\n## Serving throughput: dynamic micro-batching vs per-query dispatch\n");
@@ -92,5 +97,55 @@ fn main() {
          fixed dispatch cost amortizes (the paper's n_e batching argument, \
          applied to inference)",
         hi / lo.max(1e-9)
+    );
+
+    // -- table 2: single batcher vs shard pool --
+
+    let shards = 4;
+    let small = 4;
+    let sharded_cfg = ServeConfig::new(width, deadline)
+        .with_shards(shards)
+        .with_small_batch(small);
+    let sharded_col = format!("shards={shards} q/s");
+    let mut shard_table = Table::new(&[
+        "clients",
+        "shards=1 q/s",
+        "s1 p50 ms",
+        &sharded_col,
+        "sN p50 ms",
+        "small-shard share",
+        "speedup",
+    ]);
+    // the shards=1 side reuses the batched runs measured for table 1
+    for (clients, single_qps, single_snap) in &single_runs {
+        let (pool_qps, pool_snap) = run_load(*clients, queries, sharded_cfg);
+        let small_share = pool_snap
+            .shards
+            .iter()
+            .filter(|s| s.small)
+            .map(|s| s.queries)
+            .sum::<u64>() as f64
+            / pool_snap.queries.max(1) as f64;
+        shard_table.row(vec![
+            clients.to_string(),
+            format!("{single_qps:.0}"),
+            format!("{:.3}", single_snap.p50_ms),
+            format!("{pool_qps:.0}"),
+            format!("{:.3}", pool_snap.p50_ms),
+            format!("{:.0}%", small_share * 100.0),
+            format!("{:.2}x", pool_qps / single_qps.max(1e-9)),
+        ]);
+    }
+
+    println!(
+        "\n## Shard pool: shards=1 vs shards={shards} \
+         (1 small @{small} + {} wide @{width})\n",
+        shards - 1
+    );
+    println!("{}", shard_table.render());
+    println!(
+        "low client counts ride the small-batch fast path (narrow, cheaper \
+         device calls at the deadline); high client counts overlap full-window \
+         device calls across the wide shards"
     );
 }

@@ -28,8 +28,12 @@
 //!   (or a deterministic synthetic stand-in) behind a dynamic
 //!   micro-batching inference server: many concurrent client sessions,
 //!   one batched device call per coalescing window, p50/p99 latency and
-//!   throughput accounting. The `paac serve` subcommand and
-//!   `examples/serve_policy.rs` drive it end-to-end.
+//!   throughput accounting. The server scales across **batcher shards**
+//!   (`--shards`): N shards drain one queue, each with its own backend
+//!   at its own batch width, with an optional narrow small-batch
+//!   fast-path shard (`--small-batch`) for straggler windows. The
+//!   `paac serve` subcommand and `examples/serve_policy.rs` drive it
+//!   end-to-end.
 //!
 //! ## Quick start
 //!

@@ -8,6 +8,7 @@
 //! paac inspect [--artifacts artifacts]                  (manifest summary)
 //! paac serve   [--ckpt runs/<name>/final.ckpt] [--clients 8] [--queries 200]
 //!              [--batch 32] [--deadline-us 2000]        (micro-batched serving)
+//!              [--shards 1] [--small-batch 0]           (batcher shard pool)
 //! ```
 
 use std::sync::Arc;
@@ -22,7 +23,7 @@ use paac::metrics::JsonlWriter;
 use paac::model::PolicyModel;
 use paac::runtime::checkpoint::Checkpoint;
 use paac::runtime::Runtime;
-use paac::serve::{ModelBackend, PolicyServer, ServeConfig, SyntheticBackend};
+use paac::serve::{ModelBackendFactory, PolicyServer, ServeConfig, SyntheticFactory};
 
 fn cli() -> Cli {
     Cli::new("paac", "Parallel Advantage Actor-Critic (Clemente et al. 2017)")
@@ -49,6 +50,8 @@ fn cli() -> Cli {
         .flag("queries", Some("200"), "queries per client (serve)")
         .flag("batch", Some("32"), "max coalesced batch width (serve)")
         .flag("deadline-us", Some("2000"), "batch coalescing deadline in µs (serve)")
+        .flag("shards", Some("1"), "batcher shards draining the queue (serve)")
+        .flag("small-batch", Some("0"), "small-batch fast-path shard width, 0=off (serve)")
         .switch("atari", "use the 84x84x4 Atari pipeline (arch nips/nature)")
         .switch("no-anneal", "constant learning rate")
         .switch("quiet", "suppress progress output")
@@ -254,10 +257,11 @@ fn cmd_inspect(args: &paac::cli::Args) -> Result<()> {
 }
 
 /// Synthetic-client load generator over the serve subsystem: stand the
-/// micro-batching server up (checkpointed model when `--ckpt` is given
-/// and a PJRT backend is linked, deterministic synthetic policy
+/// micro-batching shard pool up (checkpointed model when `--ckpt` is
+/// given and a PJRT backend is linked, deterministic synthetic policy
 /// otherwise), run `--clients` concurrent sessions for `--queries` steps
-/// each, and report throughput + latency percentiles.
+/// each, and report throughput + latency percentiles (per shard when
+/// `--shards` > 1).
 fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
     let game = GameId::parse(args.get("game").unwrap_or("catch"))?;
     let mode = if args.has("atari") { ObsMode::Atari } else { ObsMode::Grid };
@@ -269,27 +273,26 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
     let deadline = Duration::from_secs_f64(args.f64_of("deadline-us")?.max(0.0) / 1e6);
     let seed = args.get("seed").map(|_| args.u64_of("seed")).transpose()?.unwrap_or(1);
     let quiet = args.has("quiet");
-    let cfg = ServeConfig { max_batch: batch, max_delay: deadline };
+    let cfg = ServeConfig::new(batch, deadline)
+        .with_shards(args.usize_of("shards")?)
+        .with_small_batch(args.usize_of("small-batch")?);
 
     let server = match args.get("ckpt") {
         Some(ckpt_path) if paac::runtime::pjrt_available() => {
             let artifacts = args.str_of("artifacts")?;
-            let (backend, timestep) = ModelBackend::from_checkpoint(
+            let (factory, timestep) = ModelBackendFactory::from_checkpoint(
                 std::path::Path::new(ckpt_path),
                 std::path::Path::new(&artifacts),
-                batch,
                 seed as i32,
                 obs_len,
             )?;
             if !quiet {
                 println!(
-                    "serve: checkpoint {} (arch {}, step {})",
-                    ckpt_path,
-                    backend.model().arch,
-                    timestep
+                    "serve: checkpoint {ckpt_path} (arch {}, step {timestep})",
+                    factory.arch()
                 );
             }
-            PolicyServer::start(backend, cfg)
+            PolicyServer::start_pool(&factory, cfg)?
         }
         maybe_ckpt => {
             if !quiet {
@@ -301,20 +304,26 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
                     None => println!("serve: no --ckpt given; using the synthetic policy"),
                 }
             }
-            PolicyServer::start(
-                SyntheticBackend::new(batch, obs_len, paac::envs::ACTIONS, seed),
-                cfg,
-            )
+            let factory = SyntheticFactory::new(obs_len, paac::envs::ACTIONS, seed);
+            PolicyServer::start_pool(&factory, cfg)?
         }
     };
 
     if !quiet {
+        let pool = match server.small_batch() {
+            Some(sw) => format!(
+                "{} (1 small @{sw} + {} wide @{})",
+                server.shards(),
+                server.shards() - 1,
+                server.max_batch()
+            ),
+            None => format!("{} wide @{}", server.shards(), server.max_batch()),
+        };
         println!(
             "serve: game={} mode={:?} clients={clients} queries/client={queries} \
-             max_batch={} deadline={deadline:?}",
+             shards={pool} deadline={deadline:?}",
             game.name(),
             mode,
-            server.max_batch()
         );
     }
 
@@ -331,6 +340,10 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
         total_queries as f64 / wall.max(1e-9)
     );
     println!("{}", snap.summary());
+    let shard_lines = snap.shard_summary();
+    if !shard_lines.is_empty() {
+        println!("{shard_lines}");
+    }
     println!("clients finished {episodes} episodes");
     if let Some(run_name) = args.get("run-name") {
         let dir = std::path::Path::new("runs").join(run_name);

@@ -306,6 +306,20 @@ impl Manifest {
             })
     }
 
+    /// Batch widths with a compiled forward artifact for this arch,
+    /// ascending — the candidate per-shard widths for serving.
+    pub fn forward_widths(&self, arch: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.arch == arch && e.kind == EntryKind::Forward)
+            .filter_map(|e| e.batch)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
     /// n_e values with a train artifact for this arch (for sweeps).
     pub fn available_ne(&self, arch: &str) -> Vec<usize> {
         let mut v: Vec<usize> = self
@@ -383,6 +397,13 @@ mod tests {
         let m = Manifest::parse(&mini_manifest()).unwrap();
         assert_eq!(m.available_ne("tiny"), vec![4]);
         assert!(m.available_ne("nature").is_empty());
+    }
+
+    #[test]
+    fn forward_widths_lists_forward_batches() {
+        let m = Manifest::parse(&mini_manifest()).unwrap();
+        assert_eq!(m.forward_widths("tiny"), vec![4]);
+        assert!(m.forward_widths("nature").is_empty());
     }
 
     #[test]

@@ -1,13 +1,25 @@
 //! The dynamic micro-batcher: coalesce, pad, one device call, fan out.
 //!
-//! A single batcher thread drains the submission queue (up to the
-//! artifact's batch width or the coalescing deadline, whichever first),
-//! copies the live observations into a persistent staging buffer, zero-
-//! pads the dead rows — the same padding/masking idiom as the GA3C
-//! predictor in [`crate::algo::ga3c`] — runs **one** batched forward, and
-//! fans each live row's policy/value back to its requester. Padding
-//! correctness (a live row's output never depends on the fill level) is
-//! property-tested below against the backend's row-independence.
+//! Each batcher shard thread drains the shared submission queue (up to
+//! its own batch width or the coalescing deadline, whichever first — see
+//! [`crate::serve::queue::ShardClass`] for how windows are routed between
+//! shards), copies the live observations into a persistent staging
+//! buffer, zero-pads the dead rows — the same padding/masking idiom as
+//! the GA3C predictor in [`crate::algo::ga3c`] — runs **one** batched
+//! forward, and fans each live row's policy/value back to its requester.
+//! Padding correctness (a live row's output never depends on the fill
+//! level) is property-tested below against the backend's
+//! row-independence.
+//!
+//! Shards own their backends: a [`BackendFactory`] builds one
+//! [`InferBackend`] instance **per shard**, each at its own batch width,
+//! which is what gives the small-batch fast-path shard a genuinely
+//! smaller (cheaper) device call rather than a wide call at low fill.
+//! [`SyntheticFactory`] stamps out seed-identical [`SyntheticBackend`]s
+//! (the served policy is bitwise independent of the shard width), and
+//! [`ModelBackendFactory`] builds checkpoint-restored [`ModelBackend`]s,
+//! snapping each requested width to the nearest compiled forward
+//! artifact.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -20,7 +32,7 @@ use crate::runtime::Runtime;
 use crate::util::math::softmax_inplace;
 use crate::util::rng::Pcg32;
 
-use super::queue::{Reply, SubmissionQueue};
+use super::queue::{Reply, ShardClass, SubmissionQueue};
 use super::stats::ServeStats;
 
 /// A policy-evaluation backend serving fixed-width batched queries.
@@ -53,11 +65,15 @@ impl ModelBackend {
     }
 
     /// The full checkpoint-serving bootstrap in one place: load the
-    /// checkpoint, open the artifact runtime, build the model at `batch`
-    /// width, restore the parameters, and check that the architecture's
-    /// observation length matches what the clients will submit. Returns
-    /// the backend plus the checkpoint's training timestep (for status
-    /// output). Used by `paac serve` and `examples/serve_policy.rs`.
+    /// checkpoint, open the artifact runtime, build the model at exactly
+    /// `batch` width, restore the parameters, and check that the
+    /// architecture's observation length matches what the clients will
+    /// submit. Returns the backend plus the checkpoint's training
+    /// timestep (for status output). Single-backend convenience over
+    /// [`ModelBackendFactory`], which is what shard pools use directly;
+    /// unlike the factory (which snaps widths), this errors when no
+    /// forward artifact exists at the requested width rather than
+    /// silently serving a different one.
     pub fn from_checkpoint(
         ckpt_path: &Path,
         artifacts_dir: &Path,
@@ -65,20 +81,17 @@ impl ModelBackend {
         seed: i32,
         expect_obs_len: usize,
     ) -> Result<(ModelBackend, u64)> {
-        let ckpt = Checkpoint::load(ckpt_path)?;
-        let rt = Arc::new(Runtime::new(artifacts_dir)?);
-        let info = rt.manifest().arch(&ckpt.arch)?.clone();
-        let mut model = PolicyModel::new(rt, &ckpt.arch, batch, seed)?;
-        model.params = ckpt.to_param_set(&info.params)?;
-        if model.obs_len() != expect_obs_len {
-            return Err(Error::config(format!(
-                "arch '{}' expects {} obs floats but the serving mode produces {}",
-                ckpt.arch,
-                model.obs_len(),
-                expect_obs_len
+        let (factory, timestep) =
+            ModelBackendFactory::from_checkpoint(ckpt_path, artifacts_dir, seed, expect_obs_len)?;
+        if factory.snap_width(batch) != batch {
+            return Err(Error::artifact(format!(
+                "no compiled forward artifact at width {batch} for arch '{}' \
+                 (available: {:?}); use ModelBackendFactory for width snapping",
+                factory.arch(),
+                factory.forward_widths()
             )));
         }
-        Ok((ModelBackend { model }, ckpt.timestep))
+        Ok((factory.build(batch, 0)?, timestep))
     }
 
     pub fn model(&self) -> &PolicyModel {
@@ -206,11 +219,207 @@ impl InferBackend for SyntheticBackend {
     }
 }
 
-/// The batching loop: one instance, one thread, one backend.
+/// Builds one [`InferBackend`] instance per batcher shard, each at its
+/// own batch width.
+///
+/// The factory is what lets a shard pool mix widths: the designated
+/// small-batch shard gets a narrow (cheap) backend while the wide shards
+/// get full-width ones. Implementations must be **width-transparent**:
+/// for a fixed observation, backends built at different widths return
+/// bitwise-identical rows (the served policy must not depend on which
+/// shard answered). [`SyntheticFactory`] guarantees this by seeding every
+/// instance identically; [`ModelBackendFactory`] by restoring the same
+/// checkpoint parameters into every instance.
+pub trait BackendFactory {
+    type Backend: InferBackend + 'static;
+
+    /// Flattened observation length per row (all shards agree).
+    fn obs_len(&self) -> usize;
+
+    /// Action-set size (all shards agree).
+    fn actions(&self) -> usize;
+
+    /// The width a pool should use when the config asks for "the full
+    /// width" (`ServeConfig::max_batch == usize::MAX`): the widest
+    /// device call this factory can sensibly build.
+    fn native_width(&self) -> usize;
+
+    /// Build the backend for shard `shard` at (or near) `width` rows per
+    /// device call. Implementations may snap `width` to what they can
+    /// actually evaluate (e.g. the available compiled artifact widths);
+    /// the batcher re-reads the real width off the built instance.
+    fn build(&self, width: usize, shard: usize) -> Result<Self::Backend>;
+}
+
+/// Wide-shard width a [`SyntheticFactory`] pool defaults to when the
+/// config leaves `max_batch` unset (the synthetic backend can evaluate
+/// any width, so this mirrors the CLI's `--batch` default).
+pub const SYNTHETIC_NATIVE_WIDTH: usize = 32;
+
+/// Factory stamping out seed-identical [`SyntheticBackend`]s.
+#[derive(Clone, Copy, Debug)]
+pub struct SyntheticFactory {
+    obs_len: usize,
+    actions: usize,
+    seed: u64,
+    dispatch: Duration,
+    per_row: Duration,
+}
+
+impl SyntheticFactory {
+    pub fn new(obs_len: usize, actions: usize, seed: u64) -> SyntheticFactory {
+        SyntheticFactory {
+            obs_len,
+            actions,
+            seed,
+            dispatch: Duration::ZERO,
+            per_row: Duration::ZERO,
+        }
+    }
+
+    /// Attach an emulated device cost model to every built backend.
+    pub fn with_cost(mut self, dispatch: Duration, per_row: Duration) -> SyntheticFactory {
+        self.dispatch = dispatch;
+        self.per_row = per_row;
+        self
+    }
+}
+
+impl BackendFactory for SyntheticFactory {
+    type Backend = SyntheticBackend;
+
+    fn obs_len(&self) -> usize {
+        self.obs_len
+    }
+
+    fn actions(&self) -> usize {
+        self.actions
+    }
+
+    fn native_width(&self) -> usize {
+        SYNTHETIC_NATIVE_WIDTH
+    }
+
+    fn build(&self, width: usize, _shard: usize) -> Result<SyntheticBackend> {
+        // same seed at every width: the policy weights do not depend on
+        // the batch dimension, so all shards serve the same policy
+        Ok(SyntheticBackend::new(width.max(1), self.obs_len, self.actions, self.seed)
+            .with_cost(self.dispatch, self.per_row))
+    }
+}
+
+/// Factory building checkpoint-restored [`ModelBackend`]s, one per shard.
+///
+/// Each build snaps the requested width to the nearest compiled forward
+/// artifact (smallest available width that fits the request, else the
+/// widest available) — the manifest's forward widths are the shard
+/// widths the hardware actually supports.
+pub struct ModelBackendFactory {
+    rt: Arc<Runtime>,
+    ckpt: Checkpoint,
+    seed: i32,
+    obs_len: usize,
+    actions: usize,
+    /// Compiled forward widths for the checkpoint's arch, ascending.
+    widths: Vec<usize>,
+}
+
+impl ModelBackendFactory {
+    /// Load the checkpoint, open the artifact runtime and validate the
+    /// architecture against the serving mode, without building any
+    /// backend yet. Returns the factory plus the checkpoint's training
+    /// timestep (for status output).
+    pub fn from_checkpoint(
+        ckpt_path: &Path,
+        artifacts_dir: &Path,
+        seed: i32,
+        expect_obs_len: usize,
+    ) -> Result<(ModelBackendFactory, u64)> {
+        let ckpt = Checkpoint::load(ckpt_path)?;
+        let rt = Arc::new(Runtime::new(artifacts_dir)?);
+        let info = rt.manifest().arch(&ckpt.arch)?.clone();
+        let (h, w, c) = info.obs_shape;
+        let obs_len = h * w * c;
+        if obs_len != expect_obs_len {
+            return Err(Error::config(format!(
+                "arch '{}' expects {} obs floats but the serving mode produces {}",
+                ckpt.arch, obs_len, expect_obs_len
+            )));
+        }
+        let widths = rt.manifest().forward_widths(&ckpt.arch);
+        if widths.is_empty() {
+            return Err(Error::artifact(format!(
+                "arch '{}' has no compiled forward artifacts to serve",
+                ckpt.arch
+            )));
+        }
+        let timestep = ckpt.timestep;
+        Ok((
+            ModelBackendFactory { rt, actions: info.actions, ckpt, seed, obs_len, widths },
+            timestep,
+        ))
+    }
+
+    /// The checkpoint's architecture name.
+    pub fn arch(&self) -> &str {
+        &self.ckpt.arch
+    }
+
+    /// Compiled forward widths available for this arch, ascending.
+    pub fn forward_widths(&self) -> &[usize] {
+        &self.widths
+    }
+
+    /// The width the factory will actually build for a requested width:
+    /// the smallest compiled forward width >= the request, else the
+    /// widest one available.
+    pub fn snap_width(&self, width: usize) -> usize {
+        self.widths
+            .iter()
+            .copied()
+            .find(|&w| w >= width)
+            .unwrap_or_else(|| *self.widths.last().expect("non-empty by construction"))
+    }
+}
+
+impl BackendFactory for ModelBackendFactory {
+    type Backend = ModelBackend;
+
+    fn obs_len(&self) -> usize {
+        self.obs_len
+    }
+
+    fn actions(&self) -> usize {
+        self.actions
+    }
+
+    fn native_width(&self) -> usize {
+        *self.widths.last().expect("non-empty by construction")
+    }
+
+    fn build(&self, width: usize, _shard: usize) -> Result<ModelBackend> {
+        let info = self.rt.manifest().arch(&self.ckpt.arch)?.clone();
+        let mut model = PolicyModel::new(
+            self.rt.clone(),
+            &self.ckpt.arch,
+            self.snap_width(width),
+            self.seed,
+        )?;
+        // every shard restores the same parameters: width-transparent
+        model.params = self.ckpt.to_param_set(&info.params)?;
+        Ok(ModelBackend { model })
+    }
+}
+
+/// The batching loop: one instance, one shard thread, one backend.
 pub struct Batcher<B: InferBackend> {
     backend: B,
     queue: Arc<SubmissionQueue>,
     stats: Arc<ServeStats>,
+    /// This shard's id (index into the stats rollups).
+    shard: usize,
+    /// Routing class for the multi-consumer queue drain.
+    class: ShardClass,
     max_batch: usize,
     max_delay: Duration,
     /// Persistent staging buffer, batch_width x obs_len.
@@ -220,11 +429,36 @@ pub struct Batcher<B: InferBackend> {
 }
 
 impl<B: InferBackend> Batcher<B> {
-    /// `max_batch` is clamped to `[1, backend.batch_width()]`.
+    /// A standalone single-consumer batcher (shard 0, claims every
+    /// window): the PR 1 shape. `max_batch` is clamped to
+    /// `[1, backend.batch_width()]`.
     pub fn new(
         backend: B,
         queue: Arc<SubmissionQueue>,
         stats: Arc<ServeStats>,
+        max_batch: usize,
+        max_delay: Duration,
+    ) -> Batcher<B> {
+        Batcher::for_shard(
+            backend,
+            queue,
+            stats,
+            0,
+            ShardClass::Wide { leave_to_small: None },
+            max_batch,
+            max_delay,
+        )
+    }
+
+    /// A pool member: shard `shard` draining the shared queue under the
+    /// routing policy of `class`. `max_batch` is clamped to
+    /// `[1, backend.batch_width()]`.
+    pub fn for_shard(
+        backend: B,
+        queue: Arc<SubmissionQueue>,
+        stats: Arc<ServeStats>,
+        shard: usize,
+        class: ShardClass,
         max_batch: usize,
         max_delay: Duration,
     ) -> Batcher<B> {
@@ -235,6 +469,8 @@ impl<B: InferBackend> Batcher<B> {
             backend,
             queue,
             stats,
+            shard,
+            class,
             max_delay,
             obs_buf,
             lat_buf: Vec::new(),
@@ -245,10 +481,16 @@ impl<B: InferBackend> Batcher<B> {
         self.max_batch
     }
 
+    /// This shard's id within its pool.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
     /// Process one batch. `Ok(false)` signals orderly shutdown (queue
     /// closed and drained); errors are backend failures and fatal.
     pub fn step(&mut self) -> Result<bool> {
-        let mut reqs = match self.queue.next_batch(self.max_batch, self.max_delay) {
+        let mut reqs = match self.queue.claim_window(self.max_batch, self.max_delay, self.class)
+        {
             None => return Ok(false),
             Some(r) => r,
         };
@@ -280,7 +522,7 @@ impl<B: InferBackend> Batcher<B> {
             let _ = r.reply.send(reply);
             self.lat_buf.push(now.saturating_duration_since(r.enqueued));
         }
-        self.stats.record_batch(reqs.len(), self.max_batch, &self.lat_buf);
+        self.stats.record_batch(self.shard, reqs.len(), self.max_batch, &self.lat_buf);
         Ok(true)
     }
 
@@ -473,6 +715,54 @@ mod tests {
             reply: tx,
         });
         assert!(!accepted, "queue must be closed after the batcher dies");
+    }
+
+    #[test]
+    fn synthetic_factory_builds_width_transparent_backends() {
+        // the same observation answered by a narrow and a wide shard
+        // backend must produce bitwise-identical rows — the property that
+        // makes shard routing invisible to clients
+        let f = SyntheticFactory::new(6, 4, 11);
+        let narrow = f.build(2, 0).unwrap();
+        let wide = f.build(8, 1).unwrap();
+        assert_eq!(narrow.batch_width(), 2);
+        assert_eq!(wide.batch_width(), 8);
+        let obs: Vec<f32> = (0..6).map(|i| 0.3 * i as f32 - 0.7).collect();
+        let mut nb = vec![0.0; 2 * 6];
+        nb[..6].copy_from_slice(&obs);
+        let mut wb = vec![0.0; 8 * 6];
+        wb[..6].copy_from_slice(&obs);
+        let n = narrow.infer(&nb).unwrap();
+        let w = wide.infer(&wb).unwrap();
+        assert_eq!(n.probs_of(0), w.probs_of(0), "policy row depends on shard width");
+        assert_eq!(n.values[0].to_bits(), w.values[0].to_bits());
+    }
+
+    #[test]
+    fn shard_batcher_records_under_its_own_id() {
+        use crate::serve::stats::ShardSpec;
+        let stats = Arc::new(ServeStats::for_shards(&[
+            ShardSpec { width: 2, small: true },
+            ShardSpec { width: 4, small: false },
+        ]));
+        let queue = Arc::new(SubmissionQueue::new());
+        let mut small = Batcher::for_shard(
+            SyntheticBackend::new(2, 3, 4, 1),
+            queue.clone(),
+            stats.clone(),
+            0,
+            ShardClass::Small,
+            2,
+            Duration::ZERO,
+        );
+        assert_eq!(small.shard(), 0);
+        let rx = submit(&queue, 0, vec![0.1; 3]);
+        assert!(small.step().unwrap());
+        recv_reply(&rx);
+        let snap = stats.snapshot();
+        assert_eq!(snap.shards[0].queries, 1, "small shard must book its own query");
+        assert_eq!(snap.shards[1].queries, 0);
+        assert!(snap.shards[0].small);
     }
 
     #[test]

@@ -8,39 +8,63 @@
 //! checkpoints:
 //!
 //! * [`queue`] — lock-light submission queue between clients and the
-//!   batcher (producers push O(1); the consumer drains whole batches).
-//! * [`batcher`] — the dynamic micro-batcher: coalesce up to the
-//!   artifact's batch width or a configurable deadline, zero-pad the
-//!   remainder, one device call, fan the rows back out. Backends plug in
-//!   through [`InferBackend`]: [`ModelBackend`] serves a real
-//!   artifact-backed [`crate::model::PolicyModel`]; [`SyntheticBackend`]
-//!   is a deterministic pure-Rust policy for tests, benches and
-//!   artifact-free load generation.
+//!   batcher shards (producers push O(1); consumers drain whole
+//!   windows). Multi-consumer since PR 2: [`ShardClass`] encodes the
+//!   routing policy that partitions windows between shards.
+//! * [`batcher`] — the dynamic micro-batcher: coalesce up to the shard's
+//!   batch width or a configurable deadline, zero-pad the remainder, one
+//!   device call, fan the rows back out. Backends plug in through
+//!   [`InferBackend`]: [`ModelBackend`] serves a real artifact-backed
+//!   [`crate::model::PolicyModel`]; [`SyntheticBackend`] is a
+//!   deterministic pure-Rust policy for tests, benches and artifact-free
+//!   load generation. A [`BackendFactory`] ([`SyntheticFactory`],
+//!   [`ModelBackendFactory`]) stamps out one backend per shard, each at
+//!   its own width.
 //! * [`session`] — per-client state: environment, frame-stacking
 //!   preprocessing (Atari mode) and the client-side action sampler.
-//! * [`server`] — the facade: spawn ([`PolicyServer::start`]), connect
+//! * [`server`] — the facade: spawn one batcher
+//!   ([`PolicyServer::start`]) or a shard pool
+//!   ([`PolicyServer::start_pool`]), connect
 //!   ([`PolicyServer::connect`]), shut down; plus [`ServeConfig`].
-//! * [`stats`] — latency (p50/p95/p99) and throughput accounting,
-//!   renderable into the [`crate::metrics`] JSONL/CSV sinks.
+//! * [`stats`] — latency (p50/p95/p99), throughput and per-shard rollup
+//!   accounting, renderable into the [`crate::metrics`] JSONL/CSV sinks.
+//!
+//! # Sharded micro-batching
+//!
+//! A pool ([`ServeConfig::shards`] > 1) runs N batcher shards over one
+//! queue, each owning a **private backend at its own batch width**.
+//! With [`ServeConfig::small_batch`] set, shard 0 is the designated
+//! small-batch fast path: it claims straggler windows (deadline flushes
+//! that fit its narrow width) so light traffic pays a narrow padded
+//! device call, while the wide shards claim full windows and absorb
+//! bursts — the same sampler/optimizer parallelism split that
+//! *Accelerated Methods for Deep RL* applies to training, pointed at
+//! inference. Routing is deterministic (see
+//! [`queue::ShardClass::Small`] vs [`queue::ShardClass::Wide`]), and
+//! `shards = 1` reproduces the single-batcher server exactly.
 //!
 //! ```no_run
 //! use std::time::Duration;
 //! use paac::envs::{GameId, ObsMode, ACTIONS};
-//! use paac::serve::{PolicyServer, ServeConfig, Session, SyntheticBackend};
+//! use paac::serve::{PolicyServer, ServeConfig, Session, SyntheticFactory};
 //!
-//! let backend = SyntheticBackend::new(32, ObsMode::Grid.obs_len(), ACTIONS, 1);
-//! let server = PolicyServer::start(
-//!     backend,
-//!     ServeConfig { max_batch: 32, max_delay: Duration::from_millis(1) },
-//! );
+//! // 4 shards: one narrow fast-path shard + three wide shards
+//! let factory = SyntheticFactory::new(ObsMode::Grid.obs_len(), ACTIONS, 1);
+//! let cfg = ServeConfig::new(32, Duration::from_millis(1))
+//!     .with_shards(4)
+//!     .with_small_batch(4);
+//! let server = PolicyServer::start_pool(&factory, cfg).unwrap();
 //! let mut client = Session::new(server.connect(), GameId::Catch, ObsMode::Grid, 1, 30);
 //! let report = client.run(1_000).unwrap();
-//! println!("{} queries, {}", report.queries, server.shutdown().unwrap().summary());
+//! let stats = server.shutdown().unwrap();
+//! println!("{} queries, {}", report.queries, stats.summary());
+//! println!("{}", stats.shard_summary());
 //! ```
 //!
 //! The `paac serve` CLI subcommand drives this end-to-end with many
-//! concurrent synthetic clients; `benches/serve_throughput.rs` measures
-//! the batched-vs-unbatched throughput curve.
+//! concurrent synthetic clients (`--shards`, `--small-batch`);
+//! `benches/serve_throughput.rs` measures the batched-vs-unbatched and
+//! sharded-vs-single throughput curves.
 
 pub mod batcher;
 pub mod queue;
@@ -48,8 +72,11 @@ pub mod server;
 pub mod session;
 pub mod stats;
 
-pub use batcher::{Batcher, InferBackend, ModelBackend, SyntheticBackend};
-pub use queue::{Reply, Request, SubmissionQueue};
+pub use batcher::{
+    BackendFactory, Batcher, InferBackend, ModelBackend, ModelBackendFactory, SyntheticBackend,
+    SyntheticFactory,
+};
+pub use queue::{Reply, Request, ShardClass, SubmissionQueue};
 pub use server::{ClientHandle, PolicyServer, ServeConfig};
 pub use session::{run_clients, Session, SessionReport};
-pub use stats::{ServeStats, StatsSnapshot};
+pub use stats::{ServeStats, ShardSnapshot, ShardSpec, StatsSnapshot};

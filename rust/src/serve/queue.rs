@@ -1,13 +1,27 @@
-//! The submission queue between client sessions and the batcher.
+//! The submission queue between client sessions and the batcher shards.
 //!
 //! Lock-light by construction: producers take the mutex only for an O(1)
-//! `push_back`, and the single consumer (the batcher thread) amortizes
-//! one lock acquisition over a whole batch drain. The dynamic-batching
-//! policy lives in [`SubmissionQueue::next_batch`]: block for the first
+//! `push_back`, and each consumer (a batcher shard thread) amortizes one
+//! lock acquisition over a whole window drain. The dynamic-batching
+//! policy lives in [`SubmissionQueue::claim_window`]: block for the first
 //! pending request, then wait at most `max_delay` for stragglers before
 //! flushing whatever has accumulated — the classic "batch width OR
 //! deadline, whichever first" rule (GA3C's predictor queue, generalized
 //! with an explicit coalescing deadline).
+//!
+//! Since PR 2 the queue is **multi-consumer**: several shards drain the
+//! same queue concurrently, and [`ShardClass`] encodes the routing policy
+//! that partitions windows between them. A [`ShardClass::Wide`] shard
+//! claims full windows eagerly and, at the deadline, any remainder too
+//! big for the small-batch fast path; the designated [`ShardClass::Small`]
+//! shard claims deadline windows that fit its own (small) width, so a
+//! lightly loaded server pays a small padded device call instead of a
+//! wide one. The two deadline conditions are disjoint (`pending >
+//! small_width` vs `pending <= small_width`), which makes the routing
+//! deterministic and unit-testable. A pool of wide shards with no small
+//! shard degenerates to plain work sharing, and a single
+//! `Wide { leave_to_small: None }` consumer reproduces the PR 1
+//! single-batcher behavior exactly ([`SubmissionQueue::next_batch`]).
 
 use std::collections::VecDeque;
 use std::sync::mpsc::Sender;
@@ -45,6 +59,54 @@ pub struct Reply {
     pub value: f32,
 }
 
+/// How a consumer shard participates in the multi-consumer drain: the
+/// routing policy that decides which pending window each shard may claim.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardClass {
+    /// A full-width shard. Claims a full window (`width` requests) as
+    /// soon as one is available; at the coalescing deadline it claims
+    /// whatever is pending — unless the remainder fits the designated
+    /// small-batch shard (`leave_to_small`), which serves it with less
+    /// padding.
+    Wide {
+        /// Width of the small-batch fast-path shard, when the pool has
+        /// one. `None` (no fast path) makes this consumer claim every
+        /// deadline window, which is exactly the single-batcher policy.
+        leave_to_small: Option<usize>,
+    },
+    /// The small-batch fast path: claims deadline windows of at most its
+    /// own width and leaves anything larger to the wide shards.
+    Small,
+}
+
+impl ShardClass {
+    /// Number of requests a `width`-wide consumer of this class may drain
+    /// right now, or `None` if it must keep waiting.
+    fn claimable(&self, pending: usize, width: usize, deadline_passed: bool) -> Option<usize> {
+        if pending == 0 {
+            return None;
+        }
+        match *self {
+            ShardClass::Wide { leave_to_small } => {
+                if pending >= width {
+                    Some(width)
+                } else if deadline_passed && leave_to_small.map_or(true, |sw| pending > sw) {
+                    Some(pending)
+                } else {
+                    None
+                }
+            }
+            ShardClass::Small => {
+                if deadline_passed && pending <= width {
+                    Some(pending)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
 #[derive(Default)]
 struct State {
     q: VecDeque<Request>,
@@ -52,7 +114,11 @@ struct State {
     peak_depth: usize,
 }
 
-/// Multi-producer, single-consumer batch-draining queue.
+/// Multi-producer, multi-consumer window-claiming queue.
+///
+/// Producers ([`SubmissionQueue::push`]) are client sessions; consumers
+/// ([`SubmissionQueue::claim_window`]) are batcher shards, each draining
+/// whole windows under the routing policy of its [`ShardClass`].
 pub struct SubmissionQueue {
     state: Mutex<State>,
     cv: Condvar,
@@ -74,7 +140,12 @@ impl SubmissionQueue {
             s.q.push_back(req);
             s.peak_depth = s.peak_depth.max(s.q.len());
         }
-        self.cv.notify_one();
+        // notify_all, not notify_one: with routed multi-consumer draining
+        // the woken shard may be the one whose class must *leave* this
+        // window to another shard. The spurious wakeups this costs are
+        // bounded by the (small) shard count; a condvar per shard class
+        // is the upgrade path if pools ever grow past a handful.
+        self.cv.notify_all();
         true
     }
 
@@ -99,50 +170,67 @@ impl SubmissionQueue {
         self.state.lock().unwrap().peak_depth
     }
 
-    /// Blocking batch drain.
+    /// Blocking single-consumer batch drain (the PR 1 policy).
     ///
-    /// Waits (indefinitely) for the first pending request, then keeps
-    /// waiting for stragglers until the batch fills to `max_batch` or
-    /// until `max_delay` has elapsed since the oldest pending request was
-    /// **enqueued** — so a request that already aged in the queue while a
-    /// previous batch was on-device flushes immediately rather than
-    /// waiting a second window. Returns as soon as the batch is full, the
-    /// deadline passes, or the queue closes; `None` means
-    /// closed-and-drained (shutdown).
+    /// Equivalent to [`SubmissionQueue::claim_window`] as a
+    /// `Wide { leave_to_small: None }` consumer: wait for the first
+    /// pending request, keep waiting for stragglers until the batch fills
+    /// to `max_batch` or `max_delay` has elapsed since the oldest pending
+    /// request was enqueued, then flush. `None` means closed-and-drained
+    /// (shutdown).
     pub fn next_batch(&self, max_batch: usize, max_delay: Duration) -> Option<Vec<Request>> {
-        assert!(max_batch >= 1, "max_batch must be >= 1");
+        self.claim_window(max_batch, max_delay, ShardClass::Wide { leave_to_small: None })
+    }
+
+    /// Blocking routed window claim (the multi-shard drain).
+    ///
+    /// Waits until this consumer's [`ShardClass`] is entitled to a window
+    /// and drains it in FIFO order. The coalescing deadline anchors on the
+    /// oldest pending request's **enqueue** time, so a request that aged
+    /// in the queue while a previous batch was on-device flushes
+    /// immediately rather than waiting a second window. A claim that
+    /// leaves requests behind re-notifies the other consumers (the
+    /// remainder may belong to a different shard class). Returns `None`
+    /// once the queue is closed **and** drained; while closed-but-backlogged,
+    /// routing is suspended and any consumer drains up to its width so
+    /// shutdown cannot strand requests.
+    pub fn claim_window(
+        &self,
+        width: usize,
+        max_delay: Duration,
+        class: ShardClass,
+    ) -> Option<Vec<Request>> {
+        assert!(width >= 1, "max_batch must be >= 1");
         let mut s = self.state.lock().unwrap();
         loop {
-            if !s.q.is_empty() {
-                break;
-            }
-            if s.closed {
-                return None;
-            }
-            s = self.cv.wait(s).unwrap();
-        }
-        if s.q.len() < max_batch && !max_delay.is_zero() {
-            // the deadline anchors on the oldest request's submission
-            // time, so a request that already aged in the queue while the
-            // previous batch was on-device is not held a second window
-            let deadline = match s.q.front() {
-                Some(first) => first.enqueued + max_delay,
-                None => Instant::now(),
+            let now = Instant::now();
+            let deadline = s.q.front().map(|first| first.enqueued + max_delay);
+            let deadline_passed = deadline.map_or(false, |d| now >= d);
+            let claim = if s.closed {
+                // shutdown drain: routing no longer matters
+                match s.q.len() {
+                    0 => return None,
+                    n => Some(n.min(width)),
+                }
+            } else {
+                class.claimable(s.q.len(), width, deadline_passed)
             };
-            while s.q.len() < max_batch && !s.closed {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
+            if let Some(n) = claim {
+                let batch: Vec<Request> = s.q.drain(..n).collect();
+                if !s.q.is_empty() {
+                    self.cv.notify_all();
                 }
-                let (next, timeout) = self.cv.wait_timeout(s, deadline - now).unwrap();
-                s = next;
-                if timeout.timed_out() {
-                    break;
-                }
+                return Some(batch);
             }
+            s = match deadline {
+                // still coalescing: sleep until the window's deadline
+                Some(d) if now < d => self.cv.wait_timeout(s, d - now).unwrap().0,
+                // empty queue, or this class is deliberately leaving the
+                // pending window to another shard: sleep until a push,
+                // drain, or close changes the picture
+                _ => self.cv.wait(s).unwrap(),
+            };
         }
-        let n = s.q.len().min(max_batch);
-        Some(s.q.drain(..n).collect())
     }
 }
 
@@ -234,5 +322,106 @@ mod tests {
         std::thread::sleep(Duration::from_millis(20));
         q.close();
         assert!(h.join().unwrap().is_none());
+    }
+
+    // -- routing policy (ShardClass::claimable is the whole decision) --
+
+    #[test]
+    fn wide_shard_claims_full_windows_eagerly_and_tails_at_deadline() {
+        let wide = ShardClass::Wide { leave_to_small: None };
+        assert_eq!(wide.claimable(8, 8, false), Some(8), "full window claims immediately");
+        assert_eq!(wide.claimable(11, 8, false), Some(8), "over-full clamps to width");
+        assert_eq!(wide.claimable(3, 8, false), None, "partials coalesce until deadline");
+        assert_eq!(wide.claimable(3, 8, true), Some(3), "deadline flushes the tail");
+        assert_eq!(wide.claimable(0, 8, true), None);
+    }
+
+    #[test]
+    fn wide_shard_leaves_small_deadline_windows_to_the_fast_path() {
+        let wide = ShardClass::Wide { leave_to_small: Some(4) };
+        assert_eq!(wide.claimable(4, 8, true), None, "<= small width: small shard's window");
+        assert_eq!(wide.claimable(5, 8, true), Some(5), "> small width: wide takes it");
+        assert_eq!(wide.claimable(8, 8, false), Some(8), "full windows unaffected");
+        assert_eq!(wide.claimable(4, 8, false), None);
+    }
+
+    #[test]
+    fn small_shard_claims_only_deadline_windows_within_its_width() {
+        let small = ShardClass::Small;
+        assert_eq!(small.claimable(3, 4, false), None, "waits for the deadline");
+        assert_eq!(small.claimable(3, 4, true), Some(3));
+        assert_eq!(small.claimable(4, 4, true), Some(4));
+        assert_eq!(small.claimable(5, 4, true), None, "too big: wide shard's window");
+    }
+
+    #[test]
+    fn routed_claims_partition_small_and_full_windows() {
+        let q = std::sync::Arc::new(SubmissionQueue::new());
+        // generous deadline: the full-window burst below must finish
+        // enqueueing well inside it even on a loaded CI machine
+        let delay = Duration::from_millis(150);
+        let qw = q.clone();
+        let wide = std::thread::spawn(move || {
+            let mut claims = Vec::new();
+            let class = ShardClass::Wide { leave_to_small: Some(4) };
+            while let Some(batch) = qw.claim_window(8, delay, class) {
+                claims.push(batch.len());
+            }
+            claims
+        });
+        let qs = q.clone();
+        let small = std::thread::spawn(move || {
+            let mut claims = Vec::new();
+            while let Some(batch) = qs.claim_window(4, delay, ShardClass::Small) {
+                claims.push(batch.len());
+            }
+            claims
+        });
+        let wait_empty = |q: &SubmissionQueue| {
+            let t0 = Instant::now();
+            while !q.is_empty() && t0.elapsed() < Duration::from_secs(10) {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        };
+        // a straggler window of 2: only the small shard may take it
+        let mut rxs = Vec::new();
+        for i in 0..2 {
+            let (r, rx) = req(i);
+            q.push(r);
+            rxs.push(rx);
+        }
+        wait_empty(&q);
+        assert!(q.is_empty(), "straggler window not claimed");
+        // a full window of 8: the wide shard takes it before the deadline
+        for i in 10..18 {
+            let (r, rx) = req(i);
+            q.push(r);
+            rxs.push(rx);
+        }
+        wait_empty(&q);
+        q.close();
+        let wide_claims = wide.join().unwrap();
+        let small_claims = small.join().unwrap();
+        assert!(small_claims.contains(&2), "small window missed the fast path: {small_claims:?}");
+        assert!(wide_claims.contains(&8), "full window missed the wide shard: {wide_claims:?}");
+        let total: usize = wide_claims.iter().chain(&small_claims).sum();
+        assert_eq!(total, 10, "requests lost or double-claimed");
+    }
+
+    #[test]
+    fn closed_queue_drains_ignoring_routing() {
+        let q = SubmissionQueue::new();
+        let mut rxs = Vec::new();
+        for i in 0..3 {
+            let (r, rx) = req(i);
+            q.push(r);
+            rxs.push(rx);
+        }
+        q.close();
+        // routing is suspended on shutdown so no consumer class strands work
+        assert_eq!(q.claim_window(2, Duration::ZERO, ShardClass::Small).unwrap().len(), 2);
+        let wide = ShardClass::Wide { leave_to_small: Some(2) };
+        assert_eq!(q.claim_window(2, Duration::ZERO, wide).unwrap().len(), 1);
+        assert!(q.claim_window(2, Duration::ZERO, ShardClass::Small).is_none());
     }
 }

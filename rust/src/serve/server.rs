@@ -1,7 +1,14 @@
-//! The serving facade: queue + stats + batcher thread behind one handle.
+//! The serving facade: queue + stats + batcher shard pool behind one
+//! handle.
 //!
-//! [`PolicyServer::start`] spawns the batcher over any [`InferBackend`]
-//! and hands out [`ClientHandle`]s — one per client connection, each with
+//! [`PolicyServer::start`] spawns a single batcher over any prebuilt
+//! [`InferBackend`]; [`PolicyServer::start_pool`] spawns a **shard
+//! pool** — [`ServeConfig::shards`] batcher threads draining one queue,
+//! each owning its own backend instance built by a
+//! [`BackendFactory`](super::batcher::BackendFactory), with
+//! [`ServeConfig::small_batch`] optionally dedicating shard 0 as the
+//! narrow fast-path shard for straggler windows. Either way the server
+//! hands out [`ClientHandle`]s — one per client connection, each with
 //! its own session id and reply channel. There is no network dependency:
 //! a handle is the transport, and the synthetic-client load generator
 //! (`paac serve`, `benches/serve_throughput.rs`) exercises the same
@@ -15,24 +22,56 @@ use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 
-use super::batcher::{Batcher, InferBackend};
-use super::queue::{Reply, Request, SubmissionQueue};
-use super::stats::{ServeStats, StatsSnapshot};
+use super::batcher::{BackendFactory, Batcher, InferBackend};
+use super::queue::{Reply, Request, ShardClass, SubmissionQueue};
+use super::stats::{ServeStats, ShardSpec, StatsSnapshot};
 
 /// Serving configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeConfig {
-    /// Coalesce at most this many requests per device call (clamped to
-    /// the backend's batch width; `usize::MAX` means "the full width").
+    /// Coalesce at most this many requests per device call on a wide
+    /// shard (clamped to the backend's batch width; `usize::MAX` means
+    /// "the full width").
     pub max_batch: usize,
-    /// How long the batcher holds a partial batch for stragglers after
-    /// the first request arrives.
+    /// How long a shard holds a partial batch for stragglers after the
+    /// first request arrives.
     pub max_delay: Duration,
+    /// Batcher shards draining the queue ([`PolicyServer::start_pool`]).
+    /// 1 reproduces the single-batcher server exactly.
+    pub shards: usize,
+    /// Width of the dedicated small-batch fast-path shard; 0 disables
+    /// the fast path. Takes effect only with `shards >= 2` (the pool
+    /// must also have a wide shard to leave full windows to).
+    pub small_batch: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_batch: usize::MAX, max_delay: Duration::from_millis(2) }
+        ServeConfig {
+            max_batch: usize::MAX,
+            max_delay: Duration::from_millis(2),
+            shards: 1,
+            small_batch: 0,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// The PR 1 two-knob configuration: one shard, no fast path.
+    pub fn new(max_batch: usize, max_delay: Duration) -> ServeConfig {
+        ServeConfig { max_batch, max_delay, ..ServeConfig::default() }
+    }
+
+    /// Set the shard-pool size (see [`PolicyServer::start_pool`]).
+    pub fn with_shards(mut self, shards: usize) -> ServeConfig {
+        self.shards = shards.max(1);
+        self
+    }
+
+    /// Dedicate a small-batch fast-path shard of this width (0 disables).
+    pub fn with_small_batch(mut self, width: usize) -> ServeConfig {
+        self.small_batch = width;
+        self
     }
 }
 
@@ -44,7 +83,10 @@ const REPLY_TIMEOUT_SLACK: Duration = Duration::from_secs(30);
 pub struct PolicyServer {
     queue: Arc<SubmissionQueue>,
     stats: Arc<ServeStats>,
-    batcher: Option<JoinHandle<Result<()>>>,
+    /// Batcher shard threads, shard-id order.
+    batchers: Vec<JoinHandle<Result<()>>>,
+    /// Shape of each spawned shard (width + fast-path flag), id order.
+    shard_specs: Vec<ShardSpec>,
     next_session: AtomicU64,
     obs_len: usize,
     actions: usize,
@@ -53,10 +95,17 @@ pub struct PolicyServer {
 }
 
 impl PolicyServer {
-    /// Stand the server up over a backend and start the batcher thread.
+    /// Stand the server up over one prebuilt backend: a single batcher
+    /// shard, regardless of [`ServeConfig::shards`] (a pool needs a
+    /// [`BackendFactory`] to build one backend per shard — see
+    /// [`PolicyServer::start_pool`]).
     pub fn start<B: InferBackend + 'static>(backend: B, cfg: ServeConfig) -> PolicyServer {
         let queue = Arc::new(SubmissionQueue::new());
-        let stats = Arc::new(ServeStats::new());
+        // prefill the real width so telemetry matches start_pool's even
+        // before the first batch lands (Batcher::new applies this clamp)
+        let width = cfg.max_batch.clamp(1, backend.batch_width());
+        let stats =
+            Arc::new(ServeStats::for_shards(&[ShardSpec { width, small: false }]));
         let obs_len = backend.obs_len();
         let actions = backend.actions();
         let batcher =
@@ -69,13 +118,112 @@ impl PolicyServer {
         PolicyServer {
             queue,
             stats,
-            batcher: Some(handle),
+            batchers: vec![handle],
+            shard_specs: vec![ShardSpec { width: max_batch, small: false }],
             next_session: AtomicU64::new(0),
             obs_len,
             actions,
             max_batch,
             max_delay: cfg.max_delay,
         }
+    }
+
+    /// Stand a shard pool up: `cfg.shards` batcher threads over one
+    /// queue, each owning its own backend built by `factory`.
+    ///
+    /// With `cfg.small_batch > 0` and at least two shards, shard 0 is
+    /// the designated small-batch fast path: a narrow backend (width
+    /// `min(small_batch, max_batch)`) that claims straggler windows at
+    /// the deadline, while the remaining wide shards claim full windows.
+    /// Otherwise every shard is wide and the pool degenerates to plain
+    /// work sharing; `shards == 1` reproduces [`PolicyServer::start`].
+    ///
+    /// All backends are built before any thread spawns, so a factory
+    /// error aborts cleanly.
+    pub fn start_pool<F: BackendFactory>(factory: &F, cfg: ServeConfig) -> Result<PolicyServer> {
+        let shards = cfg.shards.max(1);
+        // usize::MAX means "the full width", which only the factory can
+        // resolve (a prebuilt backend resolves it in `start`)
+        let wide_width = if cfg.max_batch == usize::MAX {
+            factory.native_width().max(1)
+        } else {
+            cfg.max_batch.max(1)
+        };
+        let small_width = if shards >= 2 && cfg.small_batch > 0 {
+            Some(cfg.small_batch.min(wide_width))
+        } else {
+            None
+        };
+
+        // plan the pool and build every backend up front (no thread has
+        // spawned yet, so a factory error aborts cleanly). The wide
+        // shards' leave-to-small threshold uses the small shard's
+        // EFFECTIVE width — a factory may snap the requested width to
+        // what its artifacts support, and a threshold above what the
+        // small shard can actually claim would strand mid-size windows.
+        let mut backends: Vec<F::Backend> = Vec::with_capacity(shards);
+        let mut plan: Vec<(usize, ShardClass)> = Vec::with_capacity(shards);
+        if let Some(sw) = small_width {
+            let small_backend = factory.build(sw, 0)?;
+            let sw_eff = sw.clamp(1, small_backend.batch_width());
+            backends.push(small_backend);
+            plan.push((sw_eff, ShardClass::Small));
+            for shard in 1..shards {
+                backends.push(factory.build(wide_width, shard)?);
+                plan.push((wide_width, ShardClass::Wide { leave_to_small: Some(sw_eff) }));
+            }
+        } else {
+            for shard in 0..shards {
+                backends.push(factory.build(wide_width, shard)?);
+                plan.push((wide_width, ShardClass::Wide { leave_to_small: None }));
+            }
+        }
+        let specs: Vec<ShardSpec> = backends
+            .iter()
+            .zip(&plan)
+            .map(|(b, (width, class))| ShardSpec {
+                width: (*width).clamp(1, b.batch_width()),
+                small: *class == ShardClass::Small,
+            })
+            .collect();
+
+        let queue = Arc::new(SubmissionQueue::new());
+        let stats = Arc::new(ServeStats::for_shards(&specs));
+        let obs_len = factory.obs_len();
+        let actions = factory.actions();
+        let mut batchers = Vec::with_capacity(shards);
+        for (shard, (backend, (width, class))) in
+            backends.into_iter().zip(plan).enumerate()
+        {
+            // Batcher::for_shard applies the same width clamp as `specs`
+            let batcher = Batcher::for_shard(
+                backend,
+                queue.clone(),
+                stats.clone(),
+                shard,
+                class,
+                width,
+                cfg.max_delay,
+            );
+            debug_assert_eq!(batcher.max_batch(), specs[shard].width);
+            let handle = std::thread::Builder::new()
+                .name(format!("paac-serve-shard{shard}"))
+                .spawn(move || batcher.run())
+                .expect("spawn serve batcher shard");
+            batchers.push(handle);
+        }
+        let max_batch = specs.iter().map(|s| s.width).max().unwrap_or(1);
+        Ok(PolicyServer {
+            queue,
+            stats,
+            batchers,
+            shard_specs: specs,
+            next_session: AtomicU64::new(0),
+            obs_len,
+            actions,
+            max_batch,
+            max_delay: cfg.max_delay,
+        })
     }
 
     pub fn obs_len(&self) -> usize {
@@ -86,9 +234,25 @@ impl PolicyServer {
         self.actions
     }
 
-    /// Effective per-call coalescing width after clamping.
+    /// Effective per-call coalescing width after clamping (the widest
+    /// shard's width in a pool).
     pub fn max_batch(&self) -> usize {
         self.max_batch
+    }
+
+    /// Number of batcher shards draining the queue.
+    pub fn shards(&self) -> usize {
+        self.batchers.len()
+    }
+
+    /// Width of the small-batch fast-path shard, if the pool has one.
+    pub fn small_batch(&self) -> Option<usize> {
+        self.shard_specs.iter().find(|s| s.small).map(|s| s.width)
+    }
+
+    /// Shape of each spawned shard, shard-id order.
+    pub fn shard_specs(&self) -> &[ShardSpec] {
+        &self.shard_specs
     }
 
     /// Point-in-time serving stats.
@@ -114,23 +278,29 @@ impl PolicyServer {
         }
     }
 
-    /// Orderly shutdown: close the queue, drain, join the batcher, and
-    /// return the final stats.
+    /// Orderly shutdown: close the queue, drain, join every batcher
+    /// shard, and return the final stats. Joins all shards even if one
+    /// failed, then reports the first error.
     pub fn shutdown(mut self) -> Result<StatsSnapshot> {
         self.queue.close();
-        if let Some(handle) = self.batcher.take() {
-            handle
-                .join()
-                .map_err(|_| Error::serve("batcher thread panicked"))??;
+        let mut first_err: Option<Error> = None;
+        for handle in self.batchers.drain(..) {
+            match handle.join().map_err(|_| Error::serve("batcher thread panicked")) {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) | Err(e) => first_err = first_err.or(Some(e)),
+            }
         }
-        Ok(self.stats.snapshot())
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(self.stats.snapshot()),
+        }
     }
 }
 
 impl Drop for PolicyServer {
     fn drop(&mut self) {
         self.queue.close();
-        if let Some(handle) = self.batcher.take() {
+        for handle in self.batchers.drain(..) {
             let _ = handle.join();
         }
     }
@@ -147,7 +317,7 @@ pub struct ClientHandle {
     queue: Arc<SubmissionQueue>,
     obs_len: usize,
     actions: usize,
-    /// Coalescing deadline + slack (see [`REPLY_TIMEOUT_SLACK`]).
+    /// Coalescing deadline + slack (see `REPLY_TIMEOUT_SLACK`).
     default_timeout: Duration,
 }
 
@@ -208,12 +378,12 @@ impl ClientHandle {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::serve::batcher::SyntheticBackend;
+    use crate::serve::batcher::{SyntheticBackend, SyntheticFactory};
 
     fn synthetic_server(width: usize, obs_len: usize, delay: Duration) -> PolicyServer {
         PolicyServer::start(
             SyntheticBackend::new(width, obs_len, 6, 42),
-            ServeConfig { max_batch: width, max_delay: delay },
+            ServeConfig::new(width, delay),
         )
     }
 
@@ -287,8 +457,7 @@ mod tests {
         // after its timeout — the next query must not inherit it
         let slow = SyntheticBackend::new(2, 4, 6, 8)
             .with_cost(Duration::from_millis(80), Duration::ZERO);
-        let server =
-            PolicyServer::start(slow, ServeConfig { max_batch: 2, max_delay: Duration::ZERO });
+        let server = PolicyServer::start(slow, ServeConfig::new(2, Duration::ZERO));
         let client = server.connect();
         let obs_a = vec![0.9; 4];
         let obs_b = vec![-0.4; 4];
@@ -297,10 +466,88 @@ mod tests {
         // reference: obs_b on an identical (but fast) backend
         let fast = PolicyServer::start(
             SyntheticBackend::new(2, 4, 6, 8),
-            ServeConfig { max_batch: 2, max_delay: Duration::ZERO },
+            ServeConfig::new(2, Duration::ZERO),
         );
         let want = fast.connect().query(&obs_b).unwrap();
         assert_eq!(got, want, "late reply was attributed to the wrong observation");
+    }
+
+    #[test]
+    fn pool_with_one_shard_matches_the_single_batcher_server() {
+        let factory = SyntheticFactory::new(8, 6, 42);
+        let pool = PolicyServer::start_pool(&factory, ServeConfig::new(4, Duration::ZERO))
+            .unwrap();
+        assert_eq!(pool.shards(), 1);
+        assert_eq!(pool.small_batch(), None);
+        assert_eq!(pool.max_batch(), 4);
+        let single = synthetic_server(4, 8, Duration::ZERO);
+        let obs = vec![0.25; 8];
+        let a = pool.connect().query(&obs).unwrap();
+        let b = single.connect().query(&obs).unwrap();
+        assert_eq!(a, b, "shards=1 must reproduce the single-batcher replies");
+        pool.shutdown().unwrap();
+        single.shutdown().unwrap();
+    }
+
+    #[test]
+    fn small_windows_land_on_the_small_shard() {
+        // 1 small (width 2) + 1 wide (width 8) shard; a lone client's
+        // straggler queries must be served by shard 0, the fast path
+        let factory = SyntheticFactory::new(4, 6, 7);
+        let cfg = ServeConfig::new(8, Duration::from_micros(200))
+            .with_shards(2)
+            .with_small_batch(2);
+        let server = PolicyServer::start_pool(&factory, cfg).unwrap();
+        assert_eq!(server.shards(), 2);
+        assert_eq!(server.small_batch(), Some(2));
+        let client = server.connect();
+        for _ in 0..20 {
+            client.query(&vec![0.5; 4]).unwrap();
+        }
+        let snap = server.shutdown().unwrap();
+        assert_eq!(snap.queries, 20);
+        let small = &snap.shards[0];
+        let wide = &snap.shards[1];
+        assert!(small.small && !wide.small);
+        assert_eq!(small.queries, 20, "straggler windows must route to the fast path");
+        assert_eq!(wide.queries, 0, "the wide shard must not claim small windows");
+    }
+
+    #[test]
+    fn full_windows_land_on_wide_shards() {
+        // burst traffic from `width` concurrent clients fills windows, so
+        // the wide shards must serve (nearly) all of it
+        let width = 8;
+        let factory = SyntheticFactory::new(4, 6, 9);
+        let cfg = ServeConfig::new(width, Duration::from_millis(2))
+            .with_shards(3)
+            .with_small_batch(2);
+        let server = PolicyServer::start_pool(&factory, cfg).unwrap();
+        let threads: Vec<_> = (0..width)
+            .map(|_| {
+                let handle = server.connect();
+                std::thread::spawn(move || {
+                    for q in 0..40 {
+                        handle.query(&vec![q as f32 * 0.01; 4]).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let snap = server.shutdown().unwrap();
+        assert_eq!(snap.queries, (width * 40) as u64);
+        let wide_queries: u64 =
+            snap.shards.iter().filter(|s| !s.small).map(|s| s.queries).sum();
+        assert!(
+            wide_queries > snap.queries / 2,
+            "wide shards served only {wide_queries}/{} queries",
+            snap.queries
+        );
+        // every query got an answer regardless of which shard claimed it
+        let shard_total: u64 = snap.shards.iter().map(|s| s.queries).sum();
+        assert_eq!(shard_total, snap.queries);
     }
 
     #[test]

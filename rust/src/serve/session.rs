@@ -12,7 +12,10 @@
 //! Sampling client-side (stream derived from the session id, mirroring
 //! the trainer's per-env discipline) keeps the server a pure function of
 //! the observation, which is what makes batched serving testable
-//! bit-for-bit against sequential serving.
+//! bit-for-bit against sequential serving — and, since backends are
+//! width-transparent, sessions are also **shard-agnostic**: a client
+//! cannot tell (except by latency) whether a reply came from the
+//! small-batch fast-path shard or a wide shard.
 
 use crate::envs::{Env, GameId, ObsMode};
 use crate::error::{Error, Result};
@@ -142,7 +145,7 @@ mod tests {
     fn grid_server(width: usize) -> PolicyServer {
         PolicyServer::start(
             SyntheticBackend::new(width, ObsMode::Grid.obs_len(), crate::envs::ACTIONS, 17),
-            ServeConfig { max_batch: width, max_delay: Duration::from_micros(300) },
+            ServeConfig::new(width, Duration::from_micros(300)),
         )
     }
 
@@ -189,7 +192,7 @@ mod tests {
     fn atari_mode_sessions_stack_frames_per_client() {
         let server = PolicyServer::start(
             SyntheticBackend::new(2, ObsMode::Atari.obs_len(), crate::envs::ACTIONS, 5),
-            ServeConfig { max_batch: 2, max_delay: Duration::from_micros(200) },
+            ServeConfig::new(2, Duration::from_micros(200)),
         );
         let mut session =
             Session::new(server.connect(), GameId::Breakout, ObsMode::Atari, 1, 5);

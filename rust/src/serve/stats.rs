@@ -1,9 +1,19 @@
-//! Serving telemetry: per-request latency and per-batch fill accounting.
+//! Serving telemetry: per-request latency, per-batch fill, and per-shard
+//! rollup accounting.
 //!
-//! The batcher thread is the only writer; counters are atomics and the
-//! latency reservoir sits behind a mutex the hot path touches once per
-//! batch. Snapshots integrate with the [`crate::metrics`] sinks: a
-//! [`StatsSnapshot`] renders to the crate's JSON value for JSONL records
+//! Batcher shard threads are the only writers; counters are atomics and
+//! the latency reservoirs sit behind mutexes the hot path touches once
+//! per batch. Accounting is two-level: the **global** view (every query
+//! through the server, whichever shard served it) backs
+//! [`StatsSnapshot`]'s headline numbers, while one [`ShardSnapshot`] per
+//! batcher shard breaks throughput, batch fill and latency down by shard
+//! — which is what makes the small-batch fast path observable (the small
+//! shard should show near-1.0 fill on straggler traffic while the wide
+//! shards absorb the full windows).
+//!
+//! Snapshots integrate with the [`crate::metrics`] sinks: a
+//! [`StatsSnapshot`] renders to the crate's JSON value — including a
+//! `shards` array of per-shard rollups — for JSONL records
 //! (`runs/<name>/serve.jsonl` via `paac serve --run-name`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -16,9 +26,9 @@ use crate::util::json::{obj, Json};
 use crate::util::math;
 use crate::util::rng::Pcg32;
 
-/// Retained latency samples; past this the recorder switches to
-/// uniform reservoir sampling (Algorithm R) so a long-lived server's
-/// memory and snapshot cost stay bounded.
+/// Retained latency samples per reservoir; past this the recorder
+/// switches to uniform reservoir sampling (Algorithm R) so a long-lived
+/// server's memory and snapshot cost stay bounded.
 const LATENCY_RESERVOIR: usize = 65_536;
 
 struct LatencyReservoir {
@@ -31,12 +41,12 @@ struct LatencyReservoir {
 }
 
 impl LatencyReservoir {
-    fn new() -> LatencyReservoir {
+    fn new(stream: u64) -> LatencyReservoir {
         LatencyReservoir {
             samples: Vec::new(),
             seen: 0,
             max_ms: 0.0,
-            rng: Pcg32::new(0x57A7, 7),
+            rng: Pcg32::new(0x57A7, stream),
         }
     }
 
@@ -55,7 +65,43 @@ impl LatencyReservoir {
     }
 }
 
-/// Shared counters updated by the batcher.
+/// Identity and shape of one batcher shard, as reported in stats.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardSpec {
+    /// The shard's batch width (padding target of its device calls). May
+    /// be 0 at construction, in which case the recorded batch capacities
+    /// fill it in.
+    pub width: usize,
+    /// Whether this is the designated small-batch fast-path shard.
+    pub small: bool,
+}
+
+/// Per-shard counters (one writer: that shard's batcher thread).
+struct ShardCell {
+    width: AtomicU64,
+    small: bool,
+    queries: AtomicU64,
+    batches: AtomicU64,
+    capacity_slots: AtomicU64,
+    full_batches: AtomicU64,
+    latencies_ms: Mutex<LatencyReservoir>,
+}
+
+impl ShardCell {
+    fn new(spec: ShardSpec, stream: u64) -> ShardCell {
+        ShardCell {
+            width: AtomicU64::new(spec.width as u64),
+            small: spec.small,
+            queries: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            capacity_slots: AtomicU64::new(0),
+            full_batches: AtomicU64::new(0),
+            latencies_ms: Mutex::new(LatencyReservoir::new(stream)),
+        }
+    }
+}
+
+/// Shared counters updated by the batcher shards.
 pub struct ServeStats {
     queries: AtomicU64,
     batches: AtomicU64,
@@ -67,25 +113,50 @@ pub struct ServeStats {
     rejected: AtomicU64,
     /// Per-request submit->reply latency, milliseconds (bounded).
     latencies_ms: Mutex<LatencyReservoir>,
+    /// One rollup cell per batcher shard.
+    shards: Vec<ShardCell>,
     started: Instant,
 }
 
 impl ServeStats {
+    /// Stats for a single-shard server (the PR 1 shape).
     pub fn new() -> ServeStats {
+        ServeStats::for_shards(&[ShardSpec::default()])
+    }
+
+    /// Stats for a shard pool: one rollup cell per entry of `specs`,
+    /// indexed by the shard id passed to [`ServeStats::record_batch`].
+    pub fn for_shards(specs: &[ShardSpec]) -> ServeStats {
         ServeStats {
             queries: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             capacity_slots: AtomicU64::new(0),
             full_batches: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
-            latencies_ms: Mutex::new(LatencyReservoir::new()),
+            latencies_ms: Mutex::new(LatencyReservoir::new(7)),
+            shards: specs
+                .iter()
+                .enumerate()
+                .map(|(i, s)| ShardCell::new(*s, 101 + i as u64))
+                .collect(),
             started: Instant::now(),
         }
     }
 
-    /// Record one executed batch: `fill` live rows out of `capacity`
-    /// slots, plus each live request's queue->reply latency.
-    pub fn record_batch(&self, fill: usize, capacity: usize, latencies: &[Duration]) {
+    /// Number of shard rollup cells.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Record one executed batch on shard `shard`: `fill` live rows out
+    /// of `capacity` slots, plus each live request's queue->reply latency.
+    pub fn record_batch(
+        &self,
+        shard: usize,
+        fill: usize,
+        capacity: usize,
+        latencies: &[Duration],
+    ) {
         debug_assert_eq!(fill, latencies.len());
         self.queries.fetch_add(fill as u64, Ordering::Relaxed);
         self.batches.fetch_add(1, Ordering::Relaxed);
@@ -93,9 +164,29 @@ impl ServeStats {
         if fill == capacity {
             self.full_batches.fetch_add(1, Ordering::Relaxed);
         }
-        let mut lat = self.latencies_ms.lock().unwrap();
-        for d in latencies {
-            lat.push(d.as_secs_f64() as f32 * 1e3);
+        {
+            let mut lat = self.latencies_ms.lock().unwrap();
+            for d in latencies {
+                lat.push(d.as_secs_f64() as f32 * 1e3);
+            }
+        }
+        if let Some(cell) = self.shards.get(shard) {
+            cell.width.fetch_max(capacity as u64, Ordering::Relaxed);
+            cell.queries.fetch_add(fill as u64, Ordering::Relaxed);
+            cell.batches.fetch_add(1, Ordering::Relaxed);
+            cell.capacity_slots.fetch_add(capacity as u64, Ordering::Relaxed);
+            if fill == capacity {
+                cell.full_batches.fetch_add(1, Ordering::Relaxed);
+            }
+            // a lone shard's reservoir would duplicate the global one;
+            // skip the second lock+sample on that (hottest) path and let
+            // snapshot() alias the global percentiles instead
+            if self.shards.len() > 1 {
+                let mut lat = cell.latencies_ms.lock().unwrap();
+                for d in latencies {
+                    lat.push(d.as_secs_f64() as f32 * 1e3);
+                }
+            }
         }
     }
 
@@ -115,6 +206,37 @@ impl ServeStats {
             (guard.samples.clone(), guard.max_ms)
         };
         let wall_secs = self.started.elapsed().as_secs_f64();
+        let shards = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, cell)| {
+                let q = cell.queries.load(Ordering::Relaxed);
+                let b = cell.batches.load(Ordering::Relaxed);
+                let cap = cell.capacity_slots.load(Ordering::Relaxed);
+                let f = cell.full_batches.load(Ordering::Relaxed);
+                let (slat, smax) = if self.shards.len() == 1 {
+                    // single shard: its latency stream IS the global one
+                    (lat.clone(), max_ms)
+                } else {
+                    let guard = cell.latencies_ms.lock().unwrap();
+                    (guard.samples.clone(), guard.max_ms)
+                };
+                ShardSnapshot {
+                    shard: i,
+                    width: cell.width.load(Ordering::Relaxed) as usize,
+                    small: cell.small,
+                    queries: q,
+                    batches: b,
+                    qps: q as f64 / wall_secs.max(1e-9),
+                    mean_batch_fill: if cap > 0 { q as f64 / cap as f64 } else { 0.0 },
+                    full_batch_frac: if b > 0 { f as f64 / b as f64 } else { 0.0 },
+                    p50_ms: math::percentile(&slat, 50.0) as f64,
+                    p99_ms: math::percentile(&slat, 99.0) as f64,
+                    max_ms: smax as f64,
+                }
+            })
+            .collect();
         StatsSnapshot {
             queries,
             batches,
@@ -131,6 +253,7 @@ impl ServeStats {
             p99_ms: math::percentile(&lat, 99.0) as f64,
             max_ms: max_ms as f64,
             wall_secs,
+            shards,
         }
     }
 }
@@ -138,6 +261,63 @@ impl ServeStats {
 impl Default for ServeStats {
     fn default() -> Self {
         ServeStats::new()
+    }
+}
+
+/// One shard's rollup inside a [`StatsSnapshot`].
+#[derive(Clone, Debug)]
+pub struct ShardSnapshot {
+    /// Shard id (index in spawn order; the small shard, if any, is 0).
+    pub shard: usize,
+    /// The shard's batch width (its padding target).
+    pub width: usize,
+    /// Whether this is the small-batch fast-path shard.
+    pub small: bool,
+    pub queries: u64,
+    pub batches: u64,
+    /// This shard's queries per second over the server lifetime.
+    pub qps: f64,
+    /// Mean live-rows / capacity over this shard's batches.
+    pub mean_batch_fill: f64,
+    /// Fraction of this shard's batches that flushed full.
+    pub full_batch_frac: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl ShardSnapshot {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("shard", Json::Num(self.shard as f64)),
+            ("width", Json::Num(self.width as f64)),
+            ("small", Json::Bool(self.small)),
+            ("queries", Json::Num(self.queries as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("qps", Json::Num(self.qps)),
+            ("mean_batch_fill", Json::Num(self.mean_batch_fill)),
+            ("full_batch_frac", Json::Num(self.full_batch_frac)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("max_ms", Json::Num(self.max_ms)),
+        ])
+    }
+
+    /// Human-oriented one-line summary (shard-table row).
+    pub fn summary(&self) -> String {
+        format!(
+            "shard {} [{}w{}]: {} queries in {} batches | {:.0} q/s | fill {:.0}% | \
+             p50 {:.2}ms p99 {:.2}ms",
+            self.shard,
+            self.width,
+            if self.small { " small" } else { "" },
+            self.queries,
+            self.batches,
+            self.qps,
+            self.mean_batch_fill * 100.0,
+            self.p50_ms,
+            self.p99_ms
+        )
     }
 }
 
@@ -158,6 +338,8 @@ pub struct StatsSnapshot {
     pub p99_ms: f64,
     pub max_ms: f64,
     pub wall_secs: f64,
+    /// Per-shard rollups (one entry per batcher shard, id order).
+    pub shards: Vec<ShardSnapshot>,
 }
 
 impl StatsSnapshot {
@@ -175,6 +357,7 @@ impl StatsSnapshot {
             ("p99_ms", Json::Num(self.p99_ms)),
             ("max_ms", Json::Num(self.max_ms)),
             ("wall_secs", Json::Num(self.wall_secs)),
+            ("shards", Json::Arr(self.shards.iter().map(|s| s.to_json()).collect())),
         ])
     }
 
@@ -198,6 +381,18 @@ impl StatsSnapshot {
             self.p99_ms
         )
     }
+
+    /// Multi-line per-shard breakdown (empty string for one shard).
+    pub fn shard_summary(&self) -> String {
+        if self.shards.len() < 2 {
+            return String::new();
+        }
+        self.shards
+            .iter()
+            .map(|s| s.summary())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
 }
 
 #[cfg(test)]
@@ -207,8 +402,8 @@ mod tests {
     #[test]
     fn batches_accumulate_into_snapshot() {
         let s = ServeStats::new();
-        s.record_batch(4, 4, &[Duration::from_millis(2); 4]);
-        s.record_batch(1, 4, &[Duration::from_millis(10)]);
+        s.record_batch(0, 4, 4, &[Duration::from_millis(2); 4]);
+        s.record_batch(0, 1, 4, &[Duration::from_millis(10)]);
         s.record_rejected();
         let snap = s.snapshot();
         assert_eq!(snap.queries, 5);
@@ -219,6 +414,10 @@ mod tests {
         assert!(snap.p50_ms >= 2.0 - 1e-3 && snap.p50_ms <= 10.0 + 1e-3);
         assert!(snap.max_ms >= 10.0 - 1e-3);
         assert!(snap.qps > 0.0);
+        // the single default shard mirrors the global rollup
+        assert_eq!(snap.shards.len(), 1);
+        assert_eq!(snap.shards[0].queries, 5);
+        assert_eq!(snap.shards[0].width, 4, "width inferred from recorded capacity");
     }
 
     #[test]
@@ -227,11 +426,40 @@ mod tests {
         assert_eq!(snap.queries, 0);
         assert_eq!(snap.mean_batch_fill, 0.0);
         assert_eq!(snap.full_batch_frac, 0.0);
+        assert_eq!(snap.shards.len(), 1);
+        assert_eq!(snap.shards[0].queries, 0);
+    }
+
+    #[test]
+    fn per_shard_rollups_split_by_shard_id() {
+        let s = ServeStats::for_shards(&[
+            ShardSpec { width: 4, small: true },
+            ShardSpec { width: 32, small: false },
+        ]);
+        // the small shard serves two deadline windows, the wide one a full window
+        s.record_batch(0, 2, 4, &[Duration::from_millis(1); 2]);
+        s.record_batch(0, 3, 4, &[Duration::from_millis(1); 3]);
+        s.record_batch(1, 32, 32, &[Duration::from_millis(4); 32]);
+        let snap = s.snapshot();
+        assert_eq!(snap.queries, 37, "global view sums all shards");
+        assert_eq!(snap.batches, 3);
+        assert_eq!(snap.shards.len(), 2);
+        let small = &snap.shards[0];
+        let wide = &snap.shards[1];
+        assert!(small.small && !wide.small);
+        assert_eq!((small.width, wide.width), (4, 32));
+        assert_eq!((small.queries, small.batches), (5, 2));
+        assert_eq!((wide.queries, wide.batches), (32, 1));
+        assert!((small.mean_batch_fill - 5.0 / 8.0).abs() < 1e-9);
+        assert_eq!(wide.full_batch_frac, 1.0);
+        assert_eq!(small.full_batch_frac, 0.0);
+        assert!(small.p99_ms <= wide.p50_ms, "fast path must show its latency win here");
+        assert!(snap.shard_summary().lines().count() == 2);
     }
 
     #[test]
     fn latency_reservoir_stays_bounded() {
-        let mut r = LatencyReservoir::new();
+        let mut r = LatencyReservoir::new(3);
         let total = LATENCY_RESERVOIR as u64 + 10_000;
         for i in 0..total {
             r.push(i as f32 * 0.001);
@@ -245,11 +473,13 @@ mod tests {
     #[test]
     fn snapshot_serializes_to_json() {
         let s = ServeStats::new();
-        s.record_batch(2, 4, &[Duration::from_millis(1), Duration::from_millis(3)]);
+        s.record_batch(0, 2, 4, &[Duration::from_millis(1), Duration::from_millis(3)]);
         let snap = s.snapshot();
         let j = snap.to_json().to_string_compact();
         assert!(j.contains("\"type\":\"serve_stats\""));
         assert!(j.contains("\"queries\":2"));
+        assert!(j.contains("\"shards\":["), "per-shard rollups missing from JSON");
+        assert!(j.contains("\"small\":false"));
         assert!(crate::util::json::Json::parse(&j).is_ok());
         assert!(snap.summary().contains("2 queries"));
     }

@@ -9,13 +9,23 @@
 use std::time::Duration;
 
 use paac::envs::{GameId, ObsMode, ACTIONS};
-use paac::serve::{run_clients, PolicyServer, ServeConfig, Session, SyntheticBackend};
+use paac::serve::{
+    run_clients, PolicyServer, ServeConfig, Session, SyntheticBackend, SyntheticFactory,
+};
 
 fn server(width: usize, delay_us: u64, seed: u64) -> PolicyServer {
     PolicyServer::start(
         SyntheticBackend::new(width, ObsMode::Grid.obs_len(), ACTIONS, seed),
-        ServeConfig { max_batch: width, max_delay: Duration::from_micros(delay_us) },
+        ServeConfig::new(width, Duration::from_micros(delay_us)),
     )
+}
+
+fn pool(width: usize, shards: usize, small: usize, delay_us: u64, seed: u64) -> PolicyServer {
+    let factory = SyntheticFactory::new(ObsMode::Grid.obs_len(), ACTIONS, seed);
+    let cfg = ServeConfig::new(width, Duration::from_micros(delay_us))
+        .with_shards(shards)
+        .with_small_batch(small);
+    PolicyServer::start_pool(&factory, cfg).expect("start shard pool")
 }
 
 #[test]
@@ -54,6 +64,53 @@ fn batched_serving_is_equivalent_to_width_one_serving() {
         value_bits
     };
     assert_eq!(trajectory(8), trajectory(1), "batch width changed served outputs");
+}
+
+#[test]
+fn sharded_pool_produces_identical_episode_returns() {
+    // the acceptance gate for sharding: the same client workload served
+    // by --shards 4 (1 small + 3 wide) and by --shards 1 must play out
+    // identically — same episodes, same returns, bit for bit. Sessions
+    // are deterministic per (seed, session id) and backends are
+    // width-transparent, so shard routing must be invisible.
+    let clients = 6;
+    let queries = 200;
+    let run = |srv: PolicyServer| {
+        let reports =
+            run_clients(&srv, GameId::Catch, ObsMode::Grid, 13, 10, clients, queries).unwrap();
+        srv.shutdown().unwrap();
+        reports
+            .iter()
+            .map(|r| (r.session, r.queries, r.episodes, r.mean_return.to_bits()))
+            .collect::<Vec<_>>()
+    };
+    let sharded = run(pool(8, 4, 2, 300, 33));
+    let single = run(pool(8, 1, 0, 300, 33));
+    assert_eq!(sharded, single, "shard routing changed served trajectories");
+}
+
+#[test]
+fn pool_snapshot_carries_per_shard_rollups() {
+    let clients = 5;
+    let queries = 80;
+    let srv = pool(8, 3, 2, 300, 17);
+    assert_eq!(srv.shards(), 3);
+    assert_eq!(srv.small_batch(), Some(2));
+    let reports =
+        run_clients(&srv, GameId::Catch, ObsMode::Grid, 4, 10, clients, queries).unwrap();
+    let snap = srv.shutdown().unwrap();
+
+    let client_side: u64 = reports.iter().map(|r| r.queries).sum();
+    assert_eq!(snap.queries, client_side);
+    assert_eq!(snap.shards.len(), 3, "one rollup per shard");
+    assert_eq!(snap.shards.iter().filter(|s| s.small).count(), 1);
+    let shard_total: u64 = snap.shards.iter().map(|s| s.queries).sum();
+    assert_eq!(shard_total, snap.queries, "shard rollups must partition the queries");
+    let shard_batches: u64 = snap.shards.iter().map(|s| s.batches).sum();
+    assert_eq!(shard_batches, snap.batches);
+    // the JSONL record carries the same breakdown
+    let json = snap.to_json().to_string_compact();
+    assert!(json.contains("\"shards\":["), "serve.jsonl record lost the shard rollups");
 }
 
 #[test]
