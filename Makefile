@@ -2,7 +2,7 @@
 
 CARGO_DIR := rust
 
-.PHONY: verify build test fmt fmt-check docs artifacts bench-serve clean
+.PHONY: verify build test fmt fmt-check lint docs artifacts bench-serve clean
 
 # Tier-1 gate, exactly: cargo build --release && cargo test -q.
 verify: build test
@@ -18,6 +18,10 @@ fmt:
 
 fmt-check:
 	cd $(CARGO_DIR) && cargo fmt --check
+
+# Clippy over every target (lib, bin, tests, benches, examples), mirroring CI.
+lint:
+	cd $(CARGO_DIR) && cargo clippy --all-targets -- -D warnings
 
 # Rustdoc API reference (warnings are errors, mirroring CI).
 docs:

@@ -13,6 +13,9 @@
 //!    shard @4 + three wide shards @32) on the same workload: the pool
 //!    overlaps device calls across shards and serves straggler windows
 //!    with a narrow (cheaper) call.
+//! 3. **Transport** — the same workload through in-process handles vs
+//!    the TCP loopback frontend (`--listen`/`RemoteHandle`): what the
+//!    wire protocol + socket hop cost on top of the batcher.
 //!
 //! Run: cargo bench --bench serve_throughput  (PAAC_BENCH_FAST=1 to shorten)
 
@@ -20,7 +23,10 @@ use std::time::{Duration, Instant};
 
 use paac::benchkit::Table;
 use paac::envs::{GameId, ObsMode, ACTIONS};
-use paac::serve::{run_clients, PolicyServer, ServeConfig, StatsSnapshot, SyntheticFactory};
+use paac::serve::{
+    run_clients, PolicyServer, RemoteHandle, ServeConfig, Session, StatsSnapshot,
+    SyntheticFactory, TcpFrontend,
+};
 
 /// Emulated device: fixed dispatch overhead + linear per-row cost.
 const DISPATCH: Duration = Duration::from_micros(150);
@@ -147,5 +153,78 @@ fn main() {
         "low client counts ride the small-batch fast path (narrow, cheaper \
          device calls at the deadline); high client counts overlap full-window \
          device calls across the wide shards"
+    );
+
+    // -- table 3: transport overhead (in-process handles vs TCP loopback) --
+
+    let t_clients = 8usize;
+    let t_cfg = ServeConfig::new(width, deadline);
+    // the in-process side reuses the clients=8 run measured for table 1
+    // (identical config and workload)
+    let (inproc_qps, inproc_snap) = single_runs
+        .iter()
+        .find(|(c, _, _)| *c == t_clients)
+        .map(|(_, qps, snap)| (*qps, snap.clone()))
+        .expect("table 1 measured the clients=8 run");
+    let (tcp_qps, tcp_snap) = {
+        let obs_len = ObsMode::Grid.obs_len();
+        let factory = SyntheticFactory::new(obs_len, ACTIONS, 7).with_cost(DISPATCH, PER_ROW);
+        let server = PolicyServer::start_pool(&factory, t_cfg).expect("start shard pool");
+        let frontend =
+            TcpFrontend::bind("127.0.0.1:0", server.connector(), None).expect("bind loopback");
+        let addr = frontend.local_addr().to_string();
+        // connect + handshake outside the timed region: the table charges
+        // the wire with per-query cost, not accept-loop setup latency
+        let sessions: Vec<_> = (0..t_clients)
+            .map(|_| {
+                let handle = RemoteHandle::connect(&addr).expect("connect loopback");
+                Session::new(handle, GameId::Catch, ObsMode::Grid, 11, 10)
+            })
+            .collect();
+        let t0 = Instant::now();
+        let workers: Vec<_> = sessions
+            .into_iter()
+            .map(|mut s| std::thread::spawn(move || s.run(queries).expect("remote session")))
+            .collect();
+        for w in workers {
+            w.join().expect("remote client thread");
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        frontend.shutdown().expect("frontend shutdown");
+        let snap = server.shutdown().expect("shutdown");
+        ((t_clients * queries) as f64 / wall.max(1e-9), snap)
+    };
+
+    let mut transport_table =
+        Table::new(&["transport", "q/s", "p50 ms", "p99 ms", "batch fill", "slowdown"]);
+    transport_table.row(vec![
+        "in-process".to_string(),
+        format!("{inproc_qps:.0}"),
+        format!("{:.3}", inproc_snap.p50_ms),
+        format!("{:.3}", inproc_snap.p99_ms),
+        format!("{:.0}%", inproc_snap.mean_batch_fill * 100.0),
+        "1.00x".to_string(),
+    ]);
+    transport_table.row(vec![
+        "tcp loopback".to_string(),
+        format!("{tcp_qps:.0}"),
+        format!("{:.3}", tcp_snap.p50_ms),
+        format!("{:.3}", tcp_snap.p99_ms),
+        format!("{:.0}%", tcp_snap.mean_batch_fill * 100.0),
+        format!("{:.2}x", inproc_qps / tcp_qps.max(1e-9)),
+    ]);
+    println!(
+        "\n## Transport: in-process handles vs the TCP loopback frontend \
+         ({t_clients} clients)\n"
+    );
+    println!("{}", transport_table.render());
+    println!(
+        "tcp run: {} connections, {} frames in / {} out, {} wire errors; the \
+         p50/p99 columns are the server-side queue->reply path, so the socket \
+         hop shows up in end-to-end q/s rather than in server latency",
+        tcp_snap.transport.connections,
+        tcp_snap.transport.frames_rx,
+        tcp_snap.transport.frames_tx,
+        tcp_snap.transport.wire_errors
     );
 }

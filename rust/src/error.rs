@@ -44,6 +44,10 @@ pub enum Error {
     /// Inference-serving failures (shutdown races, dead batcher).
     Serve(String),
 
+    /// Transport wire-protocol violations (bad magic, unknown frame
+    /// type, truncated/oversized/malformed frames).
+    Wire(String),
+
     Io(std::io::Error),
 }
 
@@ -61,6 +65,7 @@ impl fmt::Display for Error {
             Error::Shape(m) => write!(f, "shape: {m}"),
             Error::Train(m) => write!(f, "train: {m}"),
             Error::Serve(m) => write!(f, "serve: {m}"),
+            Error::Wire(m) => write!(f, "wire: {m}"),
             Error::Io(e) => write!(f, "io: {e}"),
         }
     }
@@ -101,6 +106,11 @@ impl Error {
     /// Helper for serving errors.
     pub fn serve(msg: impl Into<String>) -> Self {
         Error::Serve(msg.into())
+    }
+
+    /// Helper for wire-protocol errors.
+    pub fn wire(msg: impl Into<String>) -> Self {
+        Error::Wire(msg.into())
     }
 }
 

@@ -31,9 +31,12 @@
 //!   throughput accounting. The server scales across **batcher shards**
 //!   (`--shards`): N shards drain one queue, each with its own backend
 //!   at its own batch width, with an optional narrow small-batch
-//!   fast-path shard (`--small-batch`) for straggler windows. The
-//!   `paac serve` subcommand and `examples/serve_policy.rs` drive it
-//!   end-to-end.
+//!   fast-path shard (`--small-batch`) for straggler windows, and can
+//!   put the client boundary on the network: `paac serve --listen`
+//!   starts a zero-dependency TCP frontend ([`serve::transport`]) and
+//!   `paac client --connect` drives remote sessions against it with
+//!   bit-identical results. The `paac serve` subcommand and
+//!   `examples/serve_policy.rs` drive it end-to-end.
 //!
 //! ## Quick start
 //!

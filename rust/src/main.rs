@@ -9,6 +9,9 @@
 //! paac serve   [--ckpt runs/<name>/final.ckpt] [--clients 8] [--queries 200]
 //!              [--batch 32] [--deadline-us 2000]        (micro-batched serving)
 //!              [--shards 1] [--small-batch 0]           (batcher shard pool)
+//!              [--listen 127.0.0.1:4700] [--conns 0]    (TCP transport frontend)
+//! paac client  --connect HOST:PORT [--clients 8] [--queries 200]
+//!              [--game catch] [--atari]                 (remote synthetic clients)
 //! ```
 
 use std::sync::Arc;
@@ -23,7 +26,10 @@ use paac::metrics::JsonlWriter;
 use paac::model::PolicyModel;
 use paac::runtime::checkpoint::Checkpoint;
 use paac::runtime::Runtime;
-use paac::serve::{ModelBackendFactory, PolicyServer, ServeConfig, SyntheticFactory};
+use paac::serve::{
+    run_remote_clients, ModelBackendFactory, PolicyServer, ServeConfig, StatsSnapshot,
+    SyntheticFactory, TcpFrontend,
+};
 
 fn cli() -> Cli {
     Cli::new("paac", "Parallel Advantage Actor-Critic (Clemente et al. 2017)")
@@ -32,6 +38,7 @@ fn cli() -> Cli {
         .subcommand("sweep", "n_e sweep for the Figure 3/4 analysis")
         .subcommand("inspect", "print the artifact manifest summary")
         .subcommand("serve", "serve a policy to concurrent clients via the micro-batcher")
+        .subcommand("client", "run synthetic sessions against a remote `paac serve --listen`")
         .flag("config", None, "TOML run config (flags below override it)")
         .flag("game", None, "game id (catch|pong|breakout|...)")
         .flag("algo", None, "paac | a3c | ga3c")
@@ -52,6 +59,9 @@ fn cli() -> Cli {
         .flag("deadline-us", Some("2000"), "batch coalescing deadline in µs (serve)")
         .flag("shards", Some("1"), "batcher shards draining the queue (serve)")
         .flag("small-batch", Some("0"), "small-batch fast-path shard width, 0=off (serve)")
+        .flag("listen", None, "serve over TCP on this address, e.g. 127.0.0.1:0 (serve)")
+        .flag("conns", Some("0"), "with --listen: exit after N connections, 0=forever (serve)")
+        .flag("connect", None, "server address to run sessions against (client)")
         .switch("atari", "use the 84x84x4 Atari pipeline (arch nips/nature)")
         .switch("no-anneal", "constant learning rate")
         .switch("quiet", "suppress progress output")
@@ -256,12 +266,32 @@ fn cmd_inspect(args: &paac::cli::Args) -> Result<()> {
     Ok(())
 }
 
-/// Synthetic-client load generator over the serve subsystem: stand the
-/// micro-batching shard pool up (checkpointed model when `--ckpt` is
-/// given and a PJRT backend is linked, deterministic synthetic policy
-/// otherwise), run `--clients` concurrent sessions for `--queries` steps
-/// each, and report throughput + latency percentiles (per shard when
-/// `--shards` > 1).
+/// Write the final snapshot to `runs/<run-name>/serve.jsonl` when
+/// `--run-name` was given (shared by the load-gen and `--listen` modes).
+fn write_serve_record(args: &paac::cli::Args, snap: &StatsSnapshot, quiet: bool) -> Result<()> {
+    if let Some(run_name) = args.get("run-name") {
+        let dir = std::path::Path::new("runs").join(run_name);
+        let mut sink = JsonlWriter::create(&dir.join("serve.jsonl"))?;
+        snap.log_to(&mut sink)?;
+        if !quiet {
+            println!("stats written to {}", dir.join("serve.jsonl").display());
+        }
+    }
+    Ok(())
+}
+
+/// The serve subsystem's entry point, in one of two modes:
+///
+/// * **load generation** (default): stand the micro-batching shard pool
+///   up (checkpointed model when `--ckpt` is given and a PJRT backend is
+///   linked, deterministic synthetic policy otherwise), run `--clients`
+///   concurrent in-process sessions for `--queries` steps each, report
+///   throughput + latency percentiles (per shard when `--shards` > 1).
+/// * **network server** (`--listen ADDR`): same server, but clients
+///   arrive over TCP (see `paac client --connect`). Prints the bound
+///   address as `listening on HOST:PORT` (port 0 picks one), serves
+///   until killed — or, with `--conns N`, until N connections have come
+///   and gone, which is what the CI loopback smoke test drives.
 fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
     let game = GameId::parse(args.get("game").unwrap_or("catch"))?;
     let mode = if args.has("atari") { ObsMode::Atari } else { ObsMode::Grid };
@@ -320,13 +350,47 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
             None => format!("{} wide @{}", server.shards(), server.max_batch()),
         };
         println!(
-            "serve: game={} mode={:?} clients={clients} queries/client={queries} \
-             shards={pool} deadline={deadline:?}",
+            "serve: game={} mode={:?} shards={pool} deadline={deadline:?}",
             game.name(),
             mode,
         );
     }
 
+    // network-server mode: clients arrive over TCP, not from this process
+    if let Some(listen_addr) = args.get("listen") {
+        let conns = args.u64_of("conns")?;
+        let budget = if conns == 0 { None } else { Some(conns) };
+        let frontend = TcpFrontend::bind(listen_addr, server.connector(), budget)?;
+        // exact format matters: the CI smoke harness scrapes this line
+        // for the resolved ephemeral port
+        println!("listening on {}", frontend.local_addr());
+        if !quiet {
+            match budget {
+                Some(n) => println!("serving until {n} connection(s) have come and gone"),
+                None => println!("serving until killed (ctrl-c)"),
+            }
+        }
+        if budget.is_none() && args.get("run-name").is_some() && !quiet {
+            println!(
+                "warning: --run-name stats are written on orderly exit, but with \
+                 --conns 0 this server only exits by being killed — serve.jsonl \
+                 will not be written (set --conns to get a record)"
+            );
+        }
+        frontend.join()?;
+        let snap = server.shutdown()?;
+        println!("{}", snap.summary());
+        println!("{}", snap.transport.summary());
+        let shard_lines = snap.shard_summary();
+        if !shard_lines.is_empty() {
+            println!("{shard_lines}");
+        }
+        return write_serve_record(args, &snap, quiet);
+    }
+
+    if !quiet {
+        println!("serve: clients={clients} queries/client={queries} (in-process)");
+    }
     let t0 = Instant::now();
     let reports = paac::serve::run_clients(&server, game, mode, seed, 30, clients, queries)?;
     let wall = t0.elapsed().as_secs_f64();
@@ -345,14 +409,47 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
         println!("{shard_lines}");
     }
     println!("clients finished {episodes} episodes");
-    if let Some(run_name) = args.get("run-name") {
-        let dir = std::path::Path::new("runs").join(run_name);
-        let mut sink = JsonlWriter::create(&dir.join("serve.jsonl"))?;
-        snap.log_to(&mut sink)?;
-        if !quiet {
-            println!("stats written to {}", dir.join("serve.jsonl").display());
+    write_serve_record(args, &snap, quiet)
+}
+
+/// The network twin of the serve load generator: `--clients` concurrent
+/// synthetic sessions, each owning its environment + sampler locally and
+/// querying the remote server at `--connect` for every step.
+fn cmd_client(args: &paac::cli::Args) -> Result<()> {
+    let addr = args.str_of("connect")?;
+    let game = GameId::parse(args.get("game").unwrap_or("catch"))?;
+    let mode = if args.has("atari") { ObsMode::Atari } else { ObsMode::Grid };
+    let clients = args.usize_of("clients")?.max(1);
+    let queries = args.usize_of("queries")?.max(1);
+    let seed = args.get("seed").map(|_| args.u64_of("seed")).transpose()?.unwrap_or(1);
+    let quiet = args.has("quiet");
+
+    if !quiet {
+        println!(
+            "client: {clients} session(s) -> {addr} (game={} mode={mode:?}, \
+             {queries} queries each)",
+            game.name()
+        );
+    }
+    let t0 = Instant::now();
+    let reports = run_remote_clients(&addr, game, mode, seed, 30, clients, queries)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    if !quiet {
+        for r in &reports {
+            println!(
+                "  session {:>2}: {} queries, {} episodes, mean return {:+.2}, mean V {:+.3}",
+                r.session, r.queries, r.episodes, r.mean_return, r.mean_value
+            );
         }
     }
+    let total_queries: u64 = reports.iter().map(|r| r.queries).sum();
+    let episodes: usize = reports.iter().map(|r| r.episodes).sum();
+    println!(
+        "completed {total_queries} queries over TCP in {wall:.2}s ({:.0} q/s end-to-end), \
+         {episodes} episodes finished",
+        total_queries as f64 / wall.max(1e-9)
+    );
     Ok(())
 }
 
@@ -364,6 +461,7 @@ fn main() {
         Some("sweep") => cmd_sweep(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
         _ => {
             eprintln!("{}", cli().help());
             std::process::exit(2);

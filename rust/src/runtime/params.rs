@@ -197,7 +197,7 @@ mod tests {
     #[test]
     fn param_norm_is_l2() {
         let ps = ParamSet::from_host(
-            &vec![ParamSpec { name: "w".into(), shape: vec![2] }],
+            &[ParamSpec { name: "w".into(), shape: vec![2] }],
             vec![vec![3.0, 4.0]],
             vec![vec![0.0, 0.0]],
         )

@@ -26,8 +26,16 @@
 //!   ([`PolicyServer::start`]) or a shard pool
 //!   ([`PolicyServer::start_pool`]), connect
 //!   ([`PolicyServer::connect`]), shut down; plus [`ServeConfig`].
-//! * [`stats`] — latency (p50/p95/p99), throughput and per-shard rollup
-//!   accounting, renderable into the [`crate::metrics`] JSONL/CSV sinks.
+//! * [`stats`] — latency (p50/p95/p99), throughput, per-shard rollup and
+//!   transport (connection/frame) accounting, renderable into the
+//!   [`crate::metrics`] JSONL/CSV sinks.
+//! * [`transport`] — the network frontend: a zero-dependency
+//!   (`std::net`) TCP server ([`TcpFrontend`]) speaking a versioned,
+//!   length-prefixed little-endian wire protocol ([`transport::wire`]),
+//!   and the matching [`RemoteHandle`] client. Sessions are generic over
+//!   [`QueryTransport`], so the same client code runs in-process or
+//!   against `paac serve --listen` on another machine — with
+//!   bit-identical results (tested over loopback).
 //!
 //! # Sharded micro-batching
 //!
@@ -71,12 +79,14 @@ pub mod queue;
 pub mod server;
 pub mod session;
 pub mod stats;
+pub mod transport;
 
 pub use batcher::{
     BackendFactory, Batcher, InferBackend, ModelBackend, ModelBackendFactory, SyntheticBackend,
     SyntheticFactory,
 };
 pub use queue::{Reply, Request, ShardClass, SubmissionQueue};
-pub use server::{ClientHandle, PolicyServer, ServeConfig};
+pub use server::{ClientHandle, Connector, PolicyServer, ServeConfig};
 pub use session::{run_clients, Session, SessionReport};
-pub use stats::{ServeStats, ShardSnapshot, ShardSpec, StatsSnapshot};
+pub use stats::{ServeStats, ShardSnapshot, ShardSpec, StatsSnapshot, TransportSnapshot};
+pub use transport::{run_remote_clients, QueryTransport, RemoteHandle, TcpFrontend};

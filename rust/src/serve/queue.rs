@@ -90,7 +90,7 @@ impl ShardClass {
             ShardClass::Wide { leave_to_small } => {
                 if pending >= width {
                     Some(width)
-                } else if deadline_passed && leave_to_small.map_or(true, |sw| pending > sw) {
+                } else if deadline_passed && leave_to_small.is_none_or(|sw| pending > sw) {
                     Some(pending)
                 } else {
                     None
@@ -162,7 +162,7 @@ impl SubmissionQueue {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.state.lock().unwrap().q.is_empty()
     }
 
     /// Deepest backlog observed so far (diagnostics).
@@ -205,7 +205,7 @@ impl SubmissionQueue {
         loop {
             let now = Instant::now();
             let deadline = s.q.front().map(|first| first.enqueued + max_delay);
-            let deadline_passed = deadline.map_or(false, |d| now >= d);
+            let deadline_passed = deadline.is_some_and(|d| now >= d);
             let claim = if s.closed {
                 // shutdown drain: routing no longer matters
                 match s.q.len() {

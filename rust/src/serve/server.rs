@@ -9,10 +9,14 @@
 //! [`ServeConfig::small_batch`] optionally dedicating shard 0 as the
 //! narrow fast-path shard for straggler windows. Either way the server
 //! hands out [`ClientHandle`]s — one per client connection, each with
-//! its own session id and reply channel. There is no network dependency:
-//! a handle is the transport, and the synthetic-client load generator
-//! (`paac serve`, `benches/serve_throughput.rs`) exercises the same
-//! submit/reply path a socket frontend would.
+//! its own session id and reply channel. A handle is the in-process
+//! transport; [`PolicyServer::connector`] exposes the same minting
+//! machinery to the TCP frontend
+//! ([`TcpFrontend`](crate::serve::TcpFrontend)), whose per-connection
+//! bridges drive one handle each — so the socket path and the
+//! synthetic-client load generator (`paac serve`,
+//! `benches/serve_throughput.rs`) exercise the identical submit/reply
+//! path.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, RecvTimeoutError};
@@ -87,7 +91,9 @@ pub struct PolicyServer {
     batchers: Vec<JoinHandle<Result<()>>>,
     /// Shape of each spawned shard (width + fast-path flag), id order.
     shard_specs: Vec<ShardSpec>,
-    next_session: AtomicU64,
+    /// Shared with every [`Connector`] so transport frontends mint
+    /// session ids from the same sequence as in-process `connect` calls.
+    next_session: Arc<AtomicU64>,
     obs_len: usize,
     actions: usize,
     max_batch: usize,
@@ -120,7 +126,7 @@ impl PolicyServer {
             stats,
             batchers: vec![handle],
             shard_specs: vec![ShardSpec { width: max_batch, small: false }],
-            next_session: AtomicU64::new(0),
+            next_session: Arc::new(AtomicU64::new(0)),
             obs_len,
             actions,
             max_batch,
@@ -218,7 +224,7 @@ impl PolicyServer {
             stats,
             batchers,
             shard_specs: specs,
-            next_session: AtomicU64::new(0),
+            next_session: Arc::new(AtomicU64::new(0)),
             obs_len,
             actions,
             max_batch,
@@ -269,9 +275,20 @@ impl PolicyServer {
     /// default reply timeout covers the server's coalescing deadline, so
     /// even extreme `max_delay` settings cannot time every query out.
     pub fn connect(&self) -> ClientHandle {
-        ClientHandle {
-            session: self.next_session.fetch_add(1, Ordering::Relaxed),
+        self.connector().connect()
+    }
+
+    /// The slice of the server a transport frontend needs to admit
+    /// clients: a cloneable, `'static` handle-minter over the same
+    /// queue, stats and session-id sequence as [`PolicyServer::connect`].
+    /// Connectors outliving the server are safe — their handles' queries
+    /// fail with a clean "server is shut down" error once the queue
+    /// closes.
+    pub fn connector(&self) -> Connector {
+        Connector {
             queue: self.queue.clone(),
+            stats: self.stats.clone(),
+            next_session: self.next_session.clone(),
             obs_len: self.obs_len,
             actions: self.actions,
             default_timeout: self.max_delay.saturating_add(REPLY_TIMEOUT_SLACK),
@@ -303,6 +320,53 @@ impl Drop for PolicyServer {
         for handle in self.batchers.drain(..) {
             let _ = handle.join();
         }
+    }
+}
+
+/// Mints [`ClientHandle`]s without borrowing the server.
+///
+/// A [`TcpFrontend`](crate::serve::TcpFrontend) hands one of these to
+/// its accept thread, so every inbound connection gets a real in-process
+/// handle — same queue, same stats, same session-id sequence — while the
+/// `PolicyServer` itself stays owned by (and shut down from) the main
+/// thread.
+#[derive(Clone)]
+pub struct Connector {
+    queue: Arc<SubmissionQueue>,
+    stats: Arc<ServeStats>,
+    next_session: Arc<AtomicU64>,
+    obs_len: usize,
+    actions: usize,
+    default_timeout: Duration,
+}
+
+impl Connector {
+    /// Open a client connection with a fresh server-assigned session id.
+    pub fn connect(&self) -> ClientHandle {
+        ClientHandle {
+            session: self.next_session.fetch_add(1, Ordering::Relaxed),
+            queue: self.queue.clone(),
+            obs_len: self.obs_len,
+            actions: self.actions,
+            default_timeout: self.default_timeout,
+        }
+    }
+
+    /// Observation length served (what [`Connector::connect`] handles
+    /// will validate queries against).
+    pub fn obs_len(&self) -> usize {
+        self.obs_len
+    }
+
+    /// Action-set size of the served policy.
+    pub fn actions(&self) -> usize {
+        self.actions
+    }
+
+    /// The shared stats sink (transport frontends book their
+    /// connection/frame counters here).
+    pub(crate) fn stats(&self) -> &ServeStats {
+        &self.stats
     }
 }
 
@@ -391,7 +455,7 @@ mod tests {
     fn single_client_roundtrip() {
         let server = synthetic_server(4, 8, Duration::from_micros(200));
         let client = server.connect();
-        let reply = client.query(&vec![0.25; 8]).unwrap();
+        let reply = client.query(&[0.25; 8]).unwrap();
         assert_eq!(reply.probs.len(), 6);
         assert!(reply.value.is_finite());
         let snap = server.shutdown().unwrap();
@@ -459,8 +523,8 @@ mod tests {
             .with_cost(Duration::from_millis(80), Duration::ZERO);
         let server = PolicyServer::start(slow, ServeConfig::new(2, Duration::ZERO));
         let client = server.connect();
-        let obs_a = vec![0.9; 4];
-        let obs_b = vec![-0.4; 4];
+        let obs_a = [0.9f32; 4];
+        let obs_b = [-0.4f32; 4];
         assert!(client.query_timeout(&obs_a, Duration::from_millis(5)).is_err());
         let got = client.query(&obs_b).unwrap();
         // reference: obs_b on an identical (but fast) backend
@@ -481,7 +545,7 @@ mod tests {
         assert_eq!(pool.small_batch(), None);
         assert_eq!(pool.max_batch(), 4);
         let single = synthetic_server(4, 8, Duration::ZERO);
-        let obs = vec![0.25; 8];
+        let obs = [0.25f32; 8];
         let a = pool.connect().query(&obs).unwrap();
         let b = single.connect().query(&obs).unwrap();
         assert_eq!(a, b, "shards=1 must reproduce the single-batcher replies");
@@ -502,7 +566,7 @@ mod tests {
         assert_eq!(server.small_batch(), Some(2));
         let client = server.connect();
         for _ in 0..20 {
-            client.query(&vec![0.5; 4]).unwrap();
+            client.query(&[0.5; 4]).unwrap();
         }
         let snap = server.shutdown().unwrap();
         assert_eq!(snap.queries, 20);
@@ -528,7 +592,7 @@ mod tests {
                 let handle = server.connect();
                 std::thread::spawn(move || {
                     for q in 0..40 {
-                        handle.query(&vec![q as f32 * 0.01; 4]).unwrap();
+                        handle.query(&[q as f32 * 0.01; 4]).unwrap();
                     }
                 })
             })
@@ -556,12 +620,12 @@ mod tests {
         // answered alongside other traffic yields the same reply bits
         let server = synthetic_server(4, 6, Duration::from_micros(300));
         let client = server.connect();
-        let obs = vec![0.7; 6];
+        let obs = [0.7f32; 6];
         let solo = client.query(&obs).unwrap();
         let noise = server.connect();
         let noisy = std::thread::spawn(move || {
             for i in 0..50 {
-                noise.query(&vec![0.01 * i as f32; 6]).unwrap();
+                noise.query(&[0.01 * i as f32; 6]).unwrap();
             }
         });
         for _ in 0..50 {

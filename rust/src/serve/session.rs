@@ -16,6 +16,13 @@
 //! width-transparent, sessions are also **shard-agnostic**: a client
 //! cannot tell (except by latency) whether a reply came from the
 //! small-batch fast-path shard or a wide shard.
+//!
+//! Sessions are also **transport-agnostic**: [`Session`] is generic over
+//! [`QueryTransport`], so the identical session code drives an
+//! in-process [`ClientHandle`] or a
+//! [`RemoteHandle`](crate::serve::RemoteHandle) on the far side of a TCP
+//! socket — the loopback integration tests pin the two down as
+//! bit-for-bit equivalent.
 
 use crate::envs::{Env, GameId, ObsMode};
 use crate::error::{Error, Result};
@@ -24,6 +31,7 @@ use crate::util::rng::Pcg32;
 
 use super::queue::Reply;
 use super::server::{ClientHandle, PolicyServer};
+use super::transport::QueryTransport;
 
 /// The synthetic-client load generator: `clients` concurrent sessions
 /// (one thread each) playing `game` against the server for `queries`
@@ -65,8 +73,12 @@ pub struct SessionReport {
 }
 
 /// A synthetic client: environment + preprocessing + sampler + handle.
-pub struct Session {
-    handle: ClientHandle,
+///
+/// Generic over the [`QueryTransport`] — an in-process
+/// [`ClientHandle`] (the default) or a remote handle — because nothing
+/// in the session loop cares where the reply came from.
+pub struct Session<T: QueryTransport = ClientHandle> {
+    handle: T,
     env: Env,
     rng: Pcg32,
     finished: Vec<f32>,
@@ -74,17 +86,19 @@ pub struct Session {
     value_sum: f64,
 }
 
-impl Session {
+impl<T: QueryTransport> Session<T> {
     /// Build a session over an open connection. The environment's RNG
     /// stream and the action sampler both derive from (seed, session id),
-    /// so a load-generation run is reproducible for any client count.
+    /// so a load-generation run is reproducible for any client count —
+    /// and for any transport, since the session id comes from the server
+    /// either way.
     pub fn new(
-        handle: ClientHandle,
+        handle: T,
         game: GameId,
         mode: ObsMode,
         seed: u64,
         noop_max: u32,
-    ) -> Session {
+    ) -> Session<T> {
         let id = handle.session();
         Session {
             env: Env::new(game, mode, seed, id, noop_max),

@@ -13,8 +13,15 @@
 //!
 //! Snapshots integrate with the [`crate::metrics`] sinks: a
 //! [`StatsSnapshot`] renders to the crate's JSON value — including a
-//! `shards` array of per-shard rollups — for JSONL records
-//! (`runs/<name>/serve.jsonl` via `paac serve --run-name`).
+//! `shards` array of per-shard rollups and a `transport` object — for
+//! JSONL records (`runs/<name>/serve.jsonl` via `paac serve --run-name`).
+//!
+//! Since PR 3 the stats also carry **transport counters**: the TCP
+//! frontend's bridge threads book connections (total + currently
+//! active), frames in/out and wire-protocol violations here, so a
+//! network deployment is observable through the same snapshot as the
+//! batcher shards. An in-process-only server reports all-zero transport
+//! counters.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -101,6 +108,22 @@ impl ShardCell {
     }
 }
 
+/// Transport-frontend counters (written by the accept/bridge threads;
+/// all zero while clients are in-process only).
+#[derive(Default)]
+struct TransportCell {
+    /// Connections ever accepted.
+    connections: AtomicU64,
+    /// Connections currently open (gauge).
+    active: AtomicU64,
+    /// Frames read off the wire (handshake + queries).
+    frames_rx: AtomicU64,
+    /// Frames written to the wire (handshake + replies + errors).
+    frames_tx: AtomicU64,
+    /// Wire-protocol violations (bad magic/version, malformed frames).
+    wire_errors: AtomicU64,
+}
+
 /// Shared counters updated by the batcher shards.
 pub struct ServeStats {
     queries: AtomicU64,
@@ -115,6 +138,8 @@ pub struct ServeStats {
     latencies_ms: Mutex<LatencyReservoir>,
     /// One rollup cell per batcher shard.
     shards: Vec<ShardCell>,
+    /// Network-frontend counters (zero without a transport).
+    transport: TransportCell,
     started: Instant,
 }
 
@@ -139,6 +164,7 @@ impl ServeStats {
                 .enumerate()
                 .map(|(i, s)| ShardCell::new(*s, 101 + i as u64))
                 .collect(),
+            transport: TransportCell::default(),
             started: Instant::now(),
         }
     }
@@ -195,6 +221,35 @@ impl ServeStats {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Book a transport connection opening (bridge thread start).
+    pub fn record_conn_open(&self) {
+        self.transport.connections.fetch_add(1, Ordering::Relaxed);
+        self.transport.active.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Book a transport connection closing. Must pair with
+    /// [`ServeStats::record_conn_open`] (the bridge wrapper guarantees
+    /// this), or the active gauge underflows.
+    pub fn record_conn_close(&self) {
+        self.transport.active.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Book one frame read off the wire.
+    pub fn record_frame_rx(&self) {
+        self.transport.frames_rx.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Book one frame written to the wire.
+    pub fn record_frame_tx(&self) {
+        self.transport.frames_tx.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Book a wire-protocol violation (the connection it arrived on is
+    /// dead, but the server is not).
+    pub fn record_wire_error(&self) {
+        self.transport.wire_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Consistent point-in-time view (sorts a copy of the latencies).
     pub fn snapshot(&self) -> StatsSnapshot {
         let queries = self.queries.load(Ordering::Relaxed);
@@ -240,6 +295,13 @@ impl ServeStats {
         StatsSnapshot {
             queries,
             batches,
+            transport: TransportSnapshot {
+                connections: self.transport.connections.load(Ordering::Relaxed),
+                active: self.transport.active.load(Ordering::Relaxed),
+                frames_rx: self.transport.frames_rx.load(Ordering::Relaxed),
+                frames_tx: self.transport.frames_tx.load(Ordering::Relaxed),
+                wire_errors: self.transport.wire_errors.load(Ordering::Relaxed),
+            },
             rejected: self.rejected.load(Ordering::Relaxed),
             qps: queries as f64 / wall_secs.max(1e-9),
             mean_batch_fill: if capacity > 0 {
@@ -321,11 +383,50 @@ impl ShardSnapshot {
     }
 }
 
+/// Transport-frontend counters inside a [`StatsSnapshot`] (all zero for
+/// a purely in-process server).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransportSnapshot {
+    /// Connections ever accepted.
+    pub connections: u64,
+    /// Connections open at snapshot time.
+    pub active: u64,
+    /// Frames read off the wire.
+    pub frames_rx: u64,
+    /// Frames written to the wire.
+    pub frames_tx: u64,
+    /// Wire-protocol violations observed.
+    pub wire_errors: u64,
+}
+
+impl TransportSnapshot {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("connections", Json::Num(self.connections as f64)),
+            ("active", Json::Num(self.active as f64)),
+            ("frames_rx", Json::Num(self.frames_rx as f64)),
+            ("frames_tx", Json::Num(self.frames_tx as f64)),
+            ("wire_errors", Json::Num(self.wire_errors as f64)),
+        ])
+    }
+
+    /// Human-oriented one-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "transport: {} connection(s) ({} active) | {} frames in / {} out | \
+             {} wire error(s)",
+            self.connections, self.active, self.frames_rx, self.frames_tx, self.wire_errors
+        )
+    }
+}
+
 /// Immutable stats view, ready for reporting.
 #[derive(Clone, Debug)]
 pub struct StatsSnapshot {
     pub queries: u64,
     pub batches: u64,
+    /// Network-frontend counters (zero without a transport).
+    pub transport: TransportSnapshot,
     pub rejected: u64,
     /// Queries per second over the server's lifetime so far.
     pub qps: f64,
@@ -358,6 +459,7 @@ impl StatsSnapshot {
             ("max_ms", Json::Num(self.max_ms)),
             ("wall_secs", Json::Num(self.wall_secs)),
             ("shards", Json::Arr(self.shards.iter().map(|s| s.to_json()).collect())),
+            ("transport", self.transport.to_json()),
         ])
     }
 
@@ -480,7 +582,32 @@ mod tests {
         assert!(j.contains("\"queries\":2"));
         assert!(j.contains("\"shards\":["), "per-shard rollups missing from JSON");
         assert!(j.contains("\"small\":false"));
+        assert!(j.contains("\"transport\":{"), "transport counters missing from JSON");
+        assert!(j.contains("\"frames_rx\":0"));
         assert!(crate::util::json::Json::parse(&j).is_ok());
         assert!(snap.summary().contains("2 queries"));
+    }
+
+    #[test]
+    fn transport_counters_accumulate_and_pair_up() {
+        let s = ServeStats::new();
+        assert_eq!(s.snapshot().transport, TransportSnapshot::default());
+        s.record_conn_open();
+        s.record_conn_open();
+        s.record_frame_rx();
+        s.record_frame_rx();
+        s.record_frame_tx();
+        s.record_wire_error();
+        let mid = s.snapshot().transport;
+        assert_eq!(mid.connections, 2);
+        assert_eq!(mid.active, 2);
+        assert_eq!((mid.frames_rx, mid.frames_tx), (2, 1));
+        assert_eq!(mid.wire_errors, 1);
+        s.record_conn_close();
+        s.record_conn_close();
+        let done = s.snapshot().transport;
+        assert_eq!(done.connections, 2, "total survives closes");
+        assert_eq!(done.active, 0, "gauge returns to zero");
+        assert!(done.summary().contains("2 connection(s) (0 active)"));
     }
 }

@@ -1,0 +1,77 @@
+//! Transport frontends: putting the client/server boundary on the wire.
+//!
+//! The serve stack was transport-shaped from the start — a
+//! [`ClientHandle`] is "the protocol" (submit one observation, block for
+//! one reply) spoken in-process. This module makes that boundary
+//! literal, the Gorila move applied to our GA3C-style predictor queue:
+//! actors scale beyond one process once the query path crosses a socket.
+//!
+//! * [`wire`] — the frame format: length-prefixed little-endian frames
+//!   with a versioned `Hello`/`HelloAck` handshake, `Query`/`Reply`
+//!   payloads as raw f32 bits (bit-identical across the wire), and
+//!   defensive decoding (malformed frames are [`Error::Wire`](crate::error::Error)
+//!   values, never panics).
+//! * [`tcp`] — the `std::net`-only frontend: an accept loop plus one
+//!   bridge thread per connection, each owning an in-process
+//!   [`ClientHandle`] and pumping frames; and [`RemoteHandle`], the
+//!   client twin that speaks the same `query(&[f32]) -> Reply` surface
+//!   over a socket.
+//!
+//! [`QueryTransport`] is the seam: [`Session`](crate::serve::Session) is
+//! generic over it, so the same session code — environment,
+//! preprocessing, sampler — drives an in-process server or a remote one,
+//! and the loopback integration tests assert the two are bit-for-bit
+//! identical.
+
+pub mod tcp;
+pub mod wire;
+
+pub use tcp::{run_remote_clients, RemoteHandle, TcpFrontend};
+pub use wire::{Frame, WIRE_VERSION};
+
+use crate::error::Result;
+
+use super::queue::Reply;
+use super::server::ClientHandle;
+
+/// The client-side query surface a [`Session`](crate::serve::Session)
+/// drives: one blocking request in flight at a time, plus the connection
+/// metadata the session derives its RNG streams from.
+///
+/// Implemented by the in-process [`ClientHandle`] and the network
+/// [`RemoteHandle`]; a correct implementation returns replies that are a
+/// pure function of the observation, so sessions cannot tell transports
+/// apart except by latency. `query` takes `&mut self` for the benefit of
+/// stateful (socket-owning) transports; the in-process handle simply
+/// ignores the exclusivity.
+pub trait QueryTransport: Send {
+    /// Server-assigned session id (stable for the connection's life).
+    fn session(&self) -> u64;
+
+    /// Flattened observation length the server expects per query.
+    fn obs_len(&self) -> usize;
+
+    /// Action-set size of the served policy.
+    fn actions(&self) -> usize;
+
+    /// Submit one observation and block for the policy/value reply.
+    fn query(&mut self, obs: &[f32]) -> Result<Reply>;
+}
+
+impl QueryTransport for ClientHandle {
+    fn session(&self) -> u64 {
+        ClientHandle::session(self)
+    }
+
+    fn obs_len(&self) -> usize {
+        ClientHandle::obs_len(self)
+    }
+
+    fn actions(&self) -> usize {
+        ClientHandle::actions(self)
+    }
+
+    fn query(&mut self, obs: &[f32]) -> Result<Reply> {
+        ClientHandle::query(self, obs)
+    }
+}

@@ -1,0 +1,616 @@
+//! TCP transport over the wire protocol: the server-side frontend and
+//! the client-side remote handle.
+//!
+//! [`TcpFrontend`] turns a running
+//! [`PolicyServer`](crate::serve::PolicyServer) into a network
+//! service with nothing but `std::net`: an accept thread polls a
+//! non-blocking listener, and every accepted connection gets a **bridge
+//! thread** that owns one in-process
+//! [`ClientHandle`](crate::serve::ClientHandle) and pumps frames —
+//! `Hello`/`HelloAck` handshake, then `Query` → `handle.query()` →
+//! `Reply` until the client hangs up. The bridge is deliberately thin:
+//! every batching/routing/stats decision stays in the existing
+//! queue/shard-pool machinery, so the TCP path and the in-process path
+//! are the same server with a different first hop.
+//!
+//! [`RemoteHandle`] is the matching client: it speaks the handshake,
+//! then exposes the same blocking `query(&[f32]) -> Reply` surface as
+//! the in-process handle (both implement
+//! [`QueryTransport`](super::QueryTransport)), so a
+//! [`Session`](crate::serve::Session) — environment, preprocessing,
+//! sampler and all — runs unmodified against a server on the other end
+//! of a socket. [`run_remote_clients`] is the network twin of
+//! [`run_clients`](crate::serve::run_clients).
+//!
+//! Shutdown is cooperative and bounded: [`TcpFrontend::shutdown`] stops
+//! the accept loop and force-closes live sockets (blocked bridge reads
+//! see EOF), while a connection budget ([`TcpFrontend::bind`]'s
+//! `max_conns`) lets a server process drain naturally and exit — which
+//! is what the CI loopback smoke test relies on.
+
+use std::io::{BufReader, ErrorKind};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::envs::{GameId, ObsMode};
+use crate::error::{Error, Result};
+use crate::serve::queue::Reply;
+use crate::serve::server::Connector;
+use crate::serve::session::{Session, SessionReport};
+use crate::serve::stats::ServeStats;
+
+use super::wire::{read_frame, read_frame_or_eof, write_frame, write_query, Frame, WIRE_VERSION};
+use super::QueryTransport;
+
+/// How often the accept loop re-checks the stop flag / reaps finished
+/// bridge threads while the listener has nothing to accept.
+const ACCEPT_POLL: Duration = Duration::from_millis(20);
+
+/// Socket read timeout on a [`RemoteHandle`]: a remote query must be
+/// bounded like an in-process one (whose default timeout is the server's
+/// coalescing deadline + 30s slack), so a wedged or partitioned server
+/// turns into a clean error instead of a client that hangs forever.
+/// Comfortably above the server-side reply timeout, so the server always
+/// answers (or errors) first.
+const REMOTE_REPLY_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// The TCP frontend: accept loop + one bridge thread per connection.
+pub struct TcpFrontend {
+    local: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl TcpFrontend {
+    /// Bind `addr` (port 0 picks an ephemeral port — read it back via
+    /// [`TcpFrontend::local_addr`]) and start accepting connections,
+    /// minting one [`ClientHandle`](crate::serve::ClientHandle) per
+    /// connection through `connector`.
+    ///
+    /// With `max_conns = Some(n)` the accept loop stops after admitting
+    /// `n` connections and [`TcpFrontend::join`] returns once they have
+    /// all disconnected — the "serve a fixed amount of traffic, then
+    /// exit" mode the CI smoke test drives. The budget counts *accepted*
+    /// connections (a port probe that connects and hangs up spends a
+    /// slot), so it is a test/drain mechanism, not an admission policy;
+    /// long-running deployments want `None`, which serves until
+    /// [`TcpFrontend::shutdown`] (or drop).
+    ///
+    /// Known limitation: bridge reads are blocking with no idle timeout,
+    /// so a wedged client (half-open connection, stopped process) holds
+    /// its bridge — and a `max_conns` drain — open until `shutdown`
+    /// force-closes it. Drive the budgeted mode under an external
+    /// timeout (the CI smoke step does) or call `shutdown` from a
+    /// supervisor.
+    pub fn bind<A: ToSocketAddrs>(
+        addr: A,
+        connector: Connector,
+        max_conns: Option<u64>,
+    ) -> Result<TcpFrontend> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("paac-serve-accept".into())
+                .spawn(move || accept_loop(listener, connector, stop, max_conns))
+                .map_err(|e| Error::serve(format!("spawn accept thread: {e}")))?
+        };
+        Ok(TcpFrontend { local, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves `--listen 127.0.0.1:0`'s real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Block until the accept loop exits on its own — i.e. until the
+    /// `max_conns` budget is spent and every bridge has drained. An
+    /// unbounded (`max_conns = None`) frontend never exits on its own:
+    /// use [`TcpFrontend::shutdown`] for that case.
+    pub fn join(mut self) -> Result<()> {
+        match self.accept.take() {
+            Some(h) => h.join().map_err(|_| Error::serve("accept thread panicked")),
+            None => Ok(()),
+        }
+    }
+
+    /// Stop accepting, force-close live connections (blocked bridge
+    /// reads see EOF), join every bridge thread, and return.
+    pub fn shutdown(self) -> Result<()> {
+        self.stop.store(true, Ordering::SeqCst);
+        self.join()
+    }
+}
+
+impl Drop for TcpFrontend {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    connector: Connector,
+    stop: Arc<AtomicBool>,
+    max_conns: Option<u64>,
+) {
+    // (bridge thread, raw socket clone for forced shutdown)
+    let mut bridges: Vec<(JoinHandle<()>, TcpStream)> = Vec::new();
+    let mut accepted: u64 = 0;
+    while !stop.load(Ordering::SeqCst) && max_conns.is_none_or(|m| accepted < m) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // reap here too: back-to-back connections can keep accept()
+                // ready so the WouldBlock branch (the other reap site) never
+                // runs, and each finished bridge would otherwise pin a
+                // duplicated socket fd until shutdown
+                bridges.retain(|(h, _)| !h.is_finished());
+                // no clone, no admission: the clone is what shutdown()
+                // force-closes, and a bridge without one could park in a
+                // blocking read forever and hang the drain below
+                let raw = match stream.try_clone() {
+                    Ok(raw) => raw,
+                    Err(_) => continue, // drops the stream: connection refused
+                };
+                accepted += 1;
+                let conn = connector.clone();
+                if let Ok(h) = std::thread::Builder::new()
+                    .name(format!("paac-serve-bridge{accepted}"))
+                    .spawn(move || bridge(stream, conn))
+                {
+                    bridges.push((h, raw));
+                }
+                // spawn failure drops the stream, closing the connection
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                // finished bridges have already run to completion; drop
+                // their handles so the vec stays bounded
+                bridges.retain(|(h, _)| !h.is_finished());
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+    // budget spent or stop requested: close the listener first so late
+    // connects are refused outright instead of parking in its backlog
+    // with no bridge ever coming, then wait the live bridges out. A stop
+    // request force-closes their sockets so blocked reads return EOF.
+    drop(listener);
+    loop {
+        bridges.retain(|(h, _)| !h.is_finished());
+        if bridges.is_empty() {
+            break;
+        }
+        if stop.load(Ordering::SeqCst) {
+            for (_, raw) in &bridges {
+                let _ = raw.shutdown(Shutdown::Both);
+            }
+            for (h, _) in bridges.drain(..) {
+                let _ = h.join();
+            }
+            break;
+        }
+        std::thread::sleep(ACCEPT_POLL);
+    }
+}
+
+/// One connection's bridge: handshake, then pump Query/Reply frames,
+/// with connection/frame/wire-error accounting around the inner loop.
+fn bridge(stream: TcpStream, connector: Connector) {
+    let stats = connector.stats();
+    stats.record_conn_open();
+    if let Err(e) = bridge_conn(stream, &connector) {
+        if matches!(e, Error::Wire(_)) {
+            stats.record_wire_error();
+        }
+    }
+    stats.record_conn_close();
+}
+
+fn bridge_conn(stream: TcpStream, connector: &Connector) -> Result<()> {
+    let stats = connector.stats();
+    // accepted sockets inherit O_NONBLOCK from the nonblocking listener
+    // on the BSDs/macOS (not Linux); the bridge needs blocking reads
+    stream.set_nonblocking(false)?;
+    let _ = stream.set_nodelay(true); // latency over throughput; best-effort
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+
+    // handshake: exactly one version-checked Hello. EOF before any byte
+    // is a port probe / health check hanging up, not a protocol crime —
+    // close cleanly without booking a wire error.
+    let hello = match read_frame_or_eof(&mut reader) {
+        Ok(None) => return Ok(()),
+        Ok(Some(f)) => {
+            stats.record_frame_rx();
+            f
+        }
+        Err(e) => {
+            send_error(&mut writer, stats, &e.to_string());
+            return Err(e);
+        }
+    };
+    let version = match hello {
+        Frame::Hello { version } => version,
+        other => {
+            let msg = format!("expected Hello to open the connection, got {}", other.name());
+            send_error(&mut writer, stats, &msg);
+            return Err(Error::wire(msg));
+        }
+    };
+    if version != WIRE_VERSION {
+        let msg =
+            format!("protocol version {version} unsupported (server speaks {WIRE_VERSION})");
+        send_error(&mut writer, stats, &msg);
+        return Err(Error::wire(msg));
+    }
+    let handle = connector.connect();
+    write_frame(
+        &mut writer,
+        &Frame::HelloAck {
+            version: WIRE_VERSION,
+            session: handle.session(),
+            obs_len: handle.obs_len() as u32,
+            actions: handle.actions() as u32,
+        },
+    )?;
+    stats.record_frame_tx();
+
+    // steady state: one Query in flight at a time
+    loop {
+        let frame = match read_frame_or_eof(&mut reader) {
+            Ok(None) => return Ok(()), // client hung up cleanly
+            Ok(Some(f)) => {
+                stats.record_frame_rx();
+                f
+            }
+            Err(e) => {
+                send_error(&mut writer, stats, &e.to_string());
+                return Err(e);
+            }
+        };
+        match frame {
+            Frame::Query { obs } => match handle.query(&obs) {
+                Ok(reply) => {
+                    write_frame(
+                        &mut writer,
+                        &Frame::Reply { probs: reply.probs, value: reply.value },
+                    )?;
+                    stats.record_frame_tx();
+                }
+                // a failed query (bad shape, timeout, server shutting
+                // down) is reported, not fatal to the connection: the
+                // client decides whether to hang up
+                Err(e) => send_error(&mut writer, stats, &e.to_string()),
+            },
+            other => {
+                let msg = format!("unexpected {} frame mid-session", other.name());
+                send_error(&mut writer, stats, &msg);
+                return Err(Error::wire(msg));
+            }
+        }
+    }
+}
+
+/// Best-effort Error frame (the peer may already be gone).
+fn send_error(w: &mut TcpStream, stats: &ServeStats, message: &str) {
+    if write_frame(w, &Frame::Error { message: message.to_string() }).is_ok() {
+        stats.record_frame_tx();
+    }
+}
+
+/// Client-side frame read with the socket timeout mapped to a clean
+/// serve error. After a timeout the stream may hold a partial frame, so
+/// the handle is not safely reusable — reconnect instead.
+fn read_timed<R: std::io::Read>(r: &mut R, waiting_for: &str) -> Result<Frame> {
+    match read_frame(r) {
+        Err(Error::Io(e))
+            if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+        {
+            Err(Error::serve(format!(
+                "no {waiting_for} from the server within {REMOTE_REPLY_TIMEOUT:?} \
+                 (wedged server or dead network path?); reconnect to recover"
+            )))
+        }
+        other => other,
+    }
+}
+
+/// Client side of the wire protocol: the network twin of
+/// [`ClientHandle`](crate::serve::ClientHandle).
+///
+/// Connecting performs the handshake, so an open handle always knows the
+/// server-assigned session id and the served observation/action shape.
+/// Like the in-process handle it is strictly one-request-in-flight;
+/// unlike it, `query` takes `&mut self` because the socket is stateful —
+/// which is exactly the [`QueryTransport`] contract.
+pub struct RemoteHandle {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+    session: u64,
+    obs_len: usize,
+    actions: usize,
+}
+
+impl RemoteHandle {
+    /// Connect and handshake. Fails on version mismatch, on a server
+    /// `Error` frame, or on anything malformed.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<RemoteHandle> {
+        let mut writer = TcpStream::connect(addr)?;
+        let _ = writer.set_nodelay(true);
+        // SO_RCVTIMEO is per socket, shared with the reader clone below
+        writer.set_read_timeout(Some(REMOTE_REPLY_TIMEOUT))?;
+        let mut reader = BufReader::new(writer.try_clone()?);
+        write_frame(&mut writer, &Frame::Hello { version: WIRE_VERSION })?;
+        match read_timed(&mut reader, "handshake")? {
+            Frame::HelloAck { version, session, obs_len, actions } => {
+                if version != WIRE_VERSION {
+                    return Err(Error::wire(format!(
+                        "server answered with protocol version {version}, \
+                         this client speaks {WIRE_VERSION}"
+                    )));
+                }
+                Ok(RemoteHandle {
+                    writer,
+                    reader,
+                    session,
+                    obs_len: obs_len as usize,
+                    actions: actions as usize,
+                })
+            }
+            Frame::Error { message } => {
+                Err(Error::serve(format!("server rejected connection: {message}")))
+            }
+            other => Err(Error::wire(format!(
+                "expected HelloAck to answer the handshake, got {}",
+                other.name()
+            ))),
+        }
+    }
+
+    /// Server-assigned session id (from the handshake).
+    pub fn session(&self) -> u64 {
+        self.session
+    }
+
+    /// Observation length the server expects per query.
+    pub fn obs_len(&self) -> usize {
+        self.obs_len
+    }
+
+    /// Action-set size of the served policy.
+    pub fn actions(&self) -> usize {
+        self.actions
+    }
+
+    /// Submit one observation and block for the policy/value reply —
+    /// the same surface as the in-process handle, over the socket.
+    pub fn query(&mut self, obs: &[f32]) -> Result<Reply> {
+        if obs.len() != self.obs_len {
+            return Err(Error::Shape(format!(
+                "session {}: observation has {} floats, server expects {}",
+                self.session,
+                obs.len(),
+                self.obs_len
+            )));
+        }
+        write_query(&mut self.writer, obs)?;
+        match read_timed(&mut self.reader, "reply")? {
+            Frame::Reply { probs, value } => Ok(Reply { probs, value }),
+            Frame::Error { message } => Err(Error::serve(format!("server error: {message}"))),
+            other => Err(Error::wire(format!(
+                "expected Reply to answer a query, got {}",
+                other.name()
+            ))),
+        }
+    }
+}
+
+impl QueryTransport for RemoteHandle {
+    fn session(&self) -> u64 {
+        RemoteHandle::session(self)
+    }
+
+    fn obs_len(&self) -> usize {
+        RemoteHandle::obs_len(self)
+    }
+
+    fn actions(&self) -> usize {
+        RemoteHandle::actions(self)
+    }
+
+    fn query(&mut self, obs: &[f32]) -> Result<Reply> {
+        RemoteHandle::query(self, obs)
+    }
+}
+
+/// The network twin of [`run_clients`](crate::serve::run_clients):
+/// `clients` concurrent synthetic sessions (one thread each) playing
+/// `game` against the server at `addr` for `queries` steps apiece.
+///
+/// Connections are opened **sequentially before any thread spawns**, so
+/// session ids arrive in client order — which is what makes a remote
+/// load-generation run bit-for-bit comparable to an in-process
+/// `run_clients` run with the same seed.
+pub fn run_remote_clients(
+    addr: &str,
+    game: GameId,
+    mode: ObsMode,
+    seed: u64,
+    noop_max: u32,
+    clients: usize,
+    queries: usize,
+) -> Result<Vec<SessionReport>> {
+    let mut handles = Vec::with_capacity(clients);
+    for _ in 0..clients {
+        let handle = RemoteHandle::connect(addr)?;
+        if handle.obs_len() != mode.obs_len() {
+            return Err(Error::config(format!(
+                "server at {addr} serves {}-float observations but mode {mode:?} \
+                 produces {} (is the server running the same --game/--atari mode?)",
+                handle.obs_len(),
+                mode.obs_len()
+            )));
+        }
+        handles.push(handle);
+    }
+    let workers: Vec<_> = handles
+        .into_iter()
+        .map(|handle| {
+            let mut session = Session::new(handle, game, mode, seed, noop_max);
+            std::thread::spawn(move || session.run(queries))
+        })
+        .collect();
+    let mut reports = Vec::with_capacity(clients);
+    for w in workers {
+        reports.push(w.join().map_err(|_| Error::serve("remote client thread panicked"))??);
+    }
+    Ok(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::ACTIONS;
+    use crate::serve::batcher::SyntheticFactory;
+    use crate::serve::server::{PolicyServer, ServeConfig};
+    use std::io::{Read, Write};
+
+    fn loopback(
+        obs_len: usize,
+        width: usize,
+        delay: Duration,
+        max_conns: Option<u64>,
+    ) -> (PolicyServer, TcpFrontend, String) {
+        let factory = SyntheticFactory::new(obs_len, ACTIONS, 42);
+        let server =
+            PolicyServer::start_pool(&factory, ServeConfig::new(width, delay)).unwrap();
+        let frontend =
+            TcpFrontend::bind("127.0.0.1:0", server.connector(), max_conns).unwrap();
+        let addr = frontend.local_addr().to_string();
+        (server, frontend, addr)
+    }
+
+    #[test]
+    fn handshake_carries_session_id_and_served_shape() {
+        let (server, frontend, addr) = loopback(8, 4, Duration::ZERO, None);
+        let a = RemoteHandle::connect(&addr).unwrap();
+        let b = RemoteHandle::connect(&addr).unwrap();
+        assert_eq!(a.obs_len(), 8);
+        assert_eq!(a.actions(), ACTIONS);
+        assert_ne!(a.session(), b.session(), "sessions must get distinct ids");
+        drop(a);
+        drop(b);
+        frontend.shutdown().unwrap();
+        let snap = server.shutdown().unwrap();
+        assert_eq!(snap.transport.connections, 2);
+        assert_eq!(snap.transport.active, 0);
+    }
+
+    #[test]
+    fn remote_query_is_bitwise_identical_to_in_process() {
+        let (server, frontend, addr) = loopback(6, 4, Duration::ZERO, None);
+        let obs: Vec<f32> = (0..6).map(|i| 0.25 * i as f32 - 0.6).collect();
+        let local = server.connect().query(&obs).unwrap();
+        let mut remote_handle = RemoteHandle::connect(&addr).unwrap();
+        let remote = remote_handle.query(&obs).unwrap();
+        assert_eq!(remote, local, "the wire changed the served reply");
+        let local_bits: Vec<u32> = local.probs.iter().map(|p| p.to_bits()).collect();
+        let remote_bits: Vec<u32> = remote.probs.iter().map(|p| p.to_bits()).collect();
+        assert_eq!(remote_bits, local_bits);
+        assert_eq!(remote.value.to_bits(), local.value.to_bits());
+        drop(remote_handle);
+        frontend.shutdown().unwrap();
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn bad_length_query_gets_an_error_frame_and_the_connection_survives() {
+        let (server, frontend, addr) = loopback(4, 2, Duration::ZERO, None);
+        let mut handle = RemoteHandle::connect(&addr).unwrap();
+        // client-side validation catches it first
+        assert!(matches!(handle.query(&[1.0; 3]), Err(Error::Shape(_))));
+        // force a bad query past the client check via a raw frame
+        write_frame(&mut handle.writer, &Frame::Query { obs: vec![1.0; 3] }).unwrap();
+        match read_frame(&mut handle.reader).unwrap() {
+            Frame::Error { message } => {
+                assert!(message.contains("observation has 3"), "{message}")
+            }
+            other => panic!("expected Error frame, got {other:?}"),
+        }
+        // the same connection still serves well-formed queries
+        let reply = handle.query(&[0.5; 4]).unwrap();
+        assert_eq!(reply.probs.len(), ACTIONS);
+        drop(handle);
+        frontend.shutdown().unwrap();
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected_with_an_error_frame() {
+        let (server, frontend, addr) = loopback(4, 2, Duration::ZERO, None);
+        let mut raw = TcpStream::connect(&addr).unwrap();
+        write_frame(&mut raw, &Frame::Hello { version: WIRE_VERSION + 9 }).unwrap();
+        let mut reader = BufReader::new(raw.try_clone().unwrap());
+        match read_frame(&mut reader).unwrap() {
+            Frame::Error { message } => assert!(message.contains("version"), "{message}"),
+            other => panic!("expected Error frame, got {other:?}"),
+        }
+        drop((raw, reader));
+        frontend.shutdown().unwrap();
+        let snap = server.shutdown().unwrap();
+        assert!(snap.transport.wire_errors >= 1, "version mismatch must book a wire error");
+    }
+
+    #[test]
+    fn garbage_on_the_wire_is_counted_and_does_not_kill_the_server() {
+        let (server, frontend, addr) = loopback(4, 2, Duration::ZERO, None);
+        {
+            let mut raw = TcpStream::connect(&addr).unwrap();
+            raw.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+            let _ = raw.shutdown(Shutdown::Write);
+            let mut sink = Vec::new();
+            let _ = raw.read_to_end(&mut sink); // server answers Error (or closes)
+        }
+        // a well-formed client still gets served afterwards
+        let mut handle = RemoteHandle::connect(&addr).unwrap();
+        assert_eq!(handle.query(&[0.1; 4]).unwrap().probs.len(), ACTIONS);
+        drop(handle);
+        frontend.shutdown().unwrap();
+        let snap = server.shutdown().unwrap();
+        assert!(snap.transport.wire_errors >= 1, "garbage must book a wire error");
+        assert_eq!(snap.transport.connections, 2);
+    }
+
+    #[test]
+    fn shutdown_force_closes_an_idle_connection() {
+        let (server, frontend, addr) = loopback(4, 2, Duration::ZERO, None);
+        let mut handle = RemoteHandle::connect(&addr).unwrap();
+        // the bridge is parked in a blocking read; shutdown must not hang
+        frontend.shutdown().unwrap();
+        assert!(handle.query(&[0.0; 4]).is_err(), "socket should be closed");
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn connection_budget_ends_the_accept_loop() {
+        let (server, frontend, addr) = loopback(4, 2, Duration::ZERO, Some(1));
+        {
+            let mut handle = RemoteHandle::connect(&addr).unwrap();
+            handle.query(&[0.2; 4]).unwrap();
+        } // disconnect: the budget is spent
+        frontend.join().unwrap(); // returns because max_conns = 1
+        let snap = server.shutdown().unwrap();
+        assert_eq!(snap.transport.connections, 1);
+        assert_eq!(snap.queries, 1);
+    }
+}

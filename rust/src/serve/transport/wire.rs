@@ -1,0 +1,487 @@
+//! The serve wire protocol: length-prefixed little-endian frames.
+//!
+//! Every frame is a fixed 9-byte header followed by a typed payload, all
+//! integers and floats little-endian:
+//!
+//! ```text
+//!  0         4    5         9
+//!  ┌─────────┬────┬─────────┬──────────────────────┐
+//!  │  magic  │type│ pay_len │ payload (pay_len B)  │
+//!  │ "PAAC"  │ u8 │   u32   │                      │
+//!  └─────────┴────┴─────────┴──────────────────────┘
+//! ```
+//!
+//! A connection opens with a versioned handshake — the client sends
+//! [`Frame::Hello`], the server answers [`Frame::HelloAck`] carrying the
+//! assigned session id and the served observation/action shape — and then
+//! alternates [`Frame::Query`] / [`Frame::Reply`] (or [`Frame::Error`])
+//! strictly one request in flight at a time, which is all a policy client
+//! needs (the next observation depends on the previous action).
+//!
+//! Observations and policy rows travel as raw little-endian `f32` bits,
+//! so a remote query is **bit-identical** to an in-process one — the
+//! property the loopback integration tests pin down.
+//!
+//! Decoding is defensive end to end: bad magic, unknown frame types,
+//! oversized declared payloads, truncation, count/length mismatches and
+//! non-UTF-8 error messages all surface as [`Error::Wire`] values — never
+//! panics — because the peer is an arbitrary network endpoint.
+
+use std::io::{ErrorKind, Read, Write};
+
+use crate::error::{Error, Result};
+
+/// Leading magic of every frame (the bytes `b"PAAC"`, read little-endian).
+pub const WIRE_MAGIC: u32 = u32::from_le_bytes(*b"PAAC");
+
+/// Protocol version spoken by this build, carried in Hello/HelloAck.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Frame header size: magic (4) + frame type (1) + payload length (4).
+pub const HEADER_LEN: usize = 9;
+
+/// Hard cap on a frame's declared payload length. Far above any real
+/// observation (an Atari query is ~113 KiB) but small enough that a
+/// malicious length prefix cannot drive an allocation of gigabytes.
+pub const MAX_PAYLOAD: u32 = 1 << 24;
+
+/// One protocol frame, either direction.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Client → server: connection handshake.
+    Hello { version: u16 },
+    /// Server → client: handshake accept, carrying the server-assigned
+    /// session id and the served observation/action shape.
+    HelloAck { version: u16, session: u64, obs_len: u32, actions: u32 },
+    /// Client → server: one flattened observation.
+    Query { obs: Vec<f32> },
+    /// Server → client: the policy row and value estimate for the last
+    /// query (raw f32 bits — bit-identical to the in-process reply).
+    Reply { probs: Vec<f32>, value: f32 },
+    /// Server → client: the last query (or the handshake) failed; the
+    /// message is the server-side error rendering.
+    Error { message: String },
+}
+
+impl Frame {
+    /// Wire type id (the header's `type` byte).
+    pub fn type_id(&self) -> u8 {
+        match self {
+            Frame::Hello { .. } => 1,
+            Frame::HelloAck { .. } => 2,
+            Frame::Query { .. } => 3,
+            Frame::Reply { .. } => 4,
+            Frame::Error { .. } => 5,
+        }
+    }
+
+    /// Human-readable frame name (error messages).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "Hello",
+            Frame::HelloAck { .. } => "HelloAck",
+            Frame::Query { .. } => "Query",
+            Frame::Reply { .. } => "Reply",
+            Frame::Error { .. } => "Error",
+        }
+    }
+
+    /// Serialize to one contiguous wire frame (header + payload).
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Frame::Hello { version } => {
+                assemble(self.type_id(), 2, |b| b.extend_from_slice(&version.to_le_bytes()))
+            }
+            Frame::HelloAck { version, session, obs_len, actions } => {
+                assemble(self.type_id(), 2 + 8 + 4 + 4, |b| {
+                    b.extend_from_slice(&version.to_le_bytes());
+                    b.extend_from_slice(&session.to_le_bytes());
+                    b.extend_from_slice(&obs_len.to_le_bytes());
+                    b.extend_from_slice(&actions.to_le_bytes());
+                })
+            }
+            Frame::Query { obs } => encode_query(obs),
+            Frame::Reply { probs, value } => {
+                assemble(self.type_id(), 4 + 4 * probs.len() + 4, |b| {
+                    b.extend_from_slice(&(probs.len() as u32).to_le_bytes());
+                    for v in probs {
+                        b.extend_from_slice(&v.to_le_bytes());
+                    }
+                    b.extend_from_slice(&value.to_le_bytes());
+                })
+            }
+            Frame::Error { message } => {
+                let bytes = message.as_bytes();
+                assemble(self.type_id(), 4 + bytes.len(), |b| {
+                    b.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+                    b.extend_from_slice(bytes);
+                })
+            }
+        }
+    }
+
+    /// Parse one frame off the front of `buf`; returns the frame and the
+    /// number of bytes consumed. Malformed input is an [`Error::Wire`],
+    /// never a panic.
+    pub fn decode(buf: &[u8]) -> Result<(Frame, usize)> {
+        if buf.len() < HEADER_LEN {
+            return Err(Error::wire(format!(
+                "truncated frame header: {} of {HEADER_LEN} bytes",
+                buf.len()
+            )));
+        }
+        let header: &[u8; HEADER_LEN] =
+            buf[..HEADER_LEN].try_into().expect("HEADER_LEN-byte slice");
+        let (ty, len) = parse_header(header)?;
+        if buf.len() < HEADER_LEN + len {
+            return Err(Error::wire(format!(
+                "truncated frame: payload declares {len} bytes, {} available",
+                buf.len() - HEADER_LEN
+            )));
+        }
+        let frame = decode_payload(ty, &buf[HEADER_LEN..HEADER_LEN + len])?;
+        Ok((frame, HEADER_LEN + len))
+    }
+}
+
+/// Assemble one frame: validated header, then `payload_len` bytes
+/// written by `fill` — the single place the header layout is encoded.
+fn assemble(ty: u8, payload_len: usize, fill: impl FnOnce(&mut Vec<u8>)) -> Vec<u8> {
+    debug_assert!(payload_len as u64 <= MAX_PAYLOAD as u64);
+    let mut buf = Vec::with_capacity(HEADER_LEN + payload_len);
+    buf.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
+    buf.push(ty);
+    buf.extend_from_slice(&(payload_len as u32).to_le_bytes());
+    let payload_at = buf.len();
+    fill(&mut buf);
+    debug_assert_eq!(buf.len() - payload_at, payload_len, "declared/written payload mismatch");
+    buf
+}
+
+/// Encode a `Query` frame straight from a borrowed observation — the
+/// client hot path: no intermediate [`Frame`] (which owns its floats)
+/// and no staging payload buffer. `Frame::encode` delegates here, so
+/// the two paths cannot drift.
+pub fn encode_query(obs: &[f32]) -> Vec<u8> {
+    assemble(3, 4 + 4 * obs.len(), |b| {
+        b.extend_from_slice(&(obs.len() as u32).to_le_bytes());
+        for v in obs {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+    })
+}
+
+/// Validate the fixed 9-byte header; returns (frame type, payload
+/// length). Shared by the buffer-based and `Read`-based decoders so the
+/// magic/cap rules cannot desync.
+fn parse_header(header: &[u8; HEADER_LEN]) -> Result<(u8, usize)> {
+    let magic = u32::from_le_bytes(header[0..4].try_into().expect("4-byte slice"));
+    if magic != WIRE_MAGIC {
+        return Err(Error::wire(format!(
+            "bad magic {magic:#010x} (expected {WIRE_MAGIC:#010x})"
+        )));
+    }
+    let declared = u32::from_le_bytes(header[5..9].try_into().expect("4-byte slice"));
+    if declared > MAX_PAYLOAD {
+        return Err(Error::wire(format!(
+            "declared payload of {declared} bytes exceeds the {MAX_PAYLOAD}-byte cap"
+        )));
+    }
+    Ok((header[4], declared as usize))
+}
+
+/// Bounds-checked little-endian reader over a payload slice.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::wire(format!(
+                "payload truncated reading {what}: need {n} bytes, {} left",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().expect("2-byte slice")))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().expect("4-byte slice")))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().expect("8-byte slice")))
+    }
+
+    fn f32(&mut self, what: &str) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4, what)?.try_into().expect("4-byte slice")))
+    }
+
+    /// A `u32` count followed by that many raw little-endian f32s.
+    fn f32_vec(&mut self, what: &str) -> Result<Vec<f32>> {
+        let n = self.u32(what)? as usize;
+        let bytes = n
+            .checked_mul(4)
+            .ok_or_else(|| Error::wire(format!("{what}: count {n} overflows")))?;
+        let raw = self.take(bytes, what)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+            .collect())
+    }
+
+    /// Assert the payload was consumed exactly.
+    fn finish(self, what: &str) -> Result<()> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(Error::wire(format!("{what} payload has {} trailing bytes", self.remaining())))
+        }
+    }
+}
+
+fn decode_payload(ty: u8, payload: &[u8]) -> Result<Frame> {
+    let mut c = Cursor::new(payload);
+    let frame = match ty {
+        1 => Frame::Hello { version: c.u16("Hello version")? },
+        2 => Frame::HelloAck {
+            version: c.u16("HelloAck version")?,
+            session: c.u64("HelloAck session")?,
+            obs_len: c.u32("HelloAck obs_len")?,
+            actions: c.u32("HelloAck actions")?,
+        },
+        3 => Frame::Query { obs: c.f32_vec("Query observation")? },
+        4 => Frame::Reply {
+            probs: c.f32_vec("Reply probs")?,
+            value: c.f32("Reply value")?,
+        },
+        5 => {
+            let n = c.u32("Error length")? as usize;
+            let bytes = c.take(n, "Error message")?;
+            let message = std::str::from_utf8(bytes)
+                .map_err(|_| Error::wire("Error frame message is not UTF-8"))?
+                .to_string();
+            Frame::Error { message }
+        }
+        other => return Err(Error::wire(format!("unknown frame type {other}"))),
+    };
+    c.finish(frame.name())?;
+    Ok(frame)
+}
+
+/// Write one frame and flush.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
+    w.write_all(&frame.encode())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// [`write_frame`] for a `Query`, minus the owned observation copy a
+/// [`Frame::Query`] would force (the client hot path).
+pub fn write_query<W: Write>(w: &mut W, obs: &[f32]) -> Result<()> {
+    w.write_all(&encode_query(obs))?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame, treating EOF *between* frames as a clean close
+/// (`Ok(None)`). EOF mid-frame is a truncation error: the peer died (or
+/// lied about a length) partway through a frame.
+pub fn read_frame_or_eof<R: Read>(r: &mut R) -> Result<Option<Frame>> {
+    let mut header = [0u8; HEADER_LEN];
+    let mut filled = 0;
+    while filled < HEADER_LEN {
+        match r.read(&mut header[filled..]) {
+            Ok(0) if filled == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(Error::wire(format!(
+                    "connection closed mid-header: {filled} of {HEADER_LEN} bytes"
+                )))
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let (ty, len) = parse_header(&header)?;
+    let mut payload = vec![0u8; len];
+    if let Err(e) = r.read_exact(&mut payload) {
+        return Err(if e.kind() == ErrorKind::UnexpectedEof {
+            Error::wire(format!("connection closed mid-frame ({len}-byte payload)"))
+        } else {
+            e.into()
+        });
+    }
+    decode_payload(ty, &payload).map(Some)
+}
+
+/// Read one frame; EOF anywhere is an error (use [`read_frame_or_eof`]
+/// where a clean close is expected).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
+    read_frame_or_eof(r)?.ok_or_else(|| Error::wire("connection closed"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(frame: Frame) {
+        let bytes = frame.encode();
+        let (decoded, consumed) = Frame::decode(&bytes).expect("decode");
+        assert_eq!(consumed, bytes.len(), "partial consume on {}", frame.name());
+        assert_eq!(decoded, frame);
+        // and through the Read-based path
+        let streamed = read_frame(&mut bytes.as_slice()).expect("read_frame");
+        assert_eq!(streamed, frame);
+    }
+
+    #[test]
+    fn every_frame_type_round_trips() {
+        roundtrip(Frame::Hello { version: WIRE_VERSION });
+        roundtrip(Frame::HelloAck { version: 7, session: u64::MAX, obs_len: 1600, actions: 6 });
+        roundtrip(Frame::Query { obs: vec![0.0, -1.5, f32::MIN_POSITIVE, 3.25e7] });
+        roundtrip(Frame::Query { obs: Vec::new() });
+        roundtrip(Frame::Reply { probs: vec![0.25; 6], value: -0.75 });
+        roundtrip(Frame::Error { message: "backend fell over: ünïcode".into() });
+        roundtrip(Frame::Error { message: String::new() });
+    }
+
+    #[test]
+    fn borrowed_query_encoder_produces_a_decodable_query_frame() {
+        // pins encode_query's hardcoded frame type to the Query variant
+        let obs = vec![1.5f32, -2.25, 0.0];
+        let bytes = encode_query(&obs);
+        let (frame, used) = Frame::decode(&bytes).expect("decode");
+        assert_eq!(used, bytes.len());
+        assert_eq!(frame, Frame::Query { obs });
+    }
+
+    #[test]
+    fn floats_survive_bit_for_bit() {
+        // NaN payloads and signed zero must cross the wire unchanged:
+        // the loopback equivalence guarantee is bitwise, not approximate
+        let odd = vec![f32::NAN, -0.0, f32::INFINITY, f32::NEG_INFINITY, 1e-42];
+        let bytes = Frame::Query { obs: odd.clone() }.encode();
+        match Frame::decode(&bytes).unwrap().0 {
+            Frame::Query { obs } => {
+                let got: Vec<u32> = obs.iter().map(|v| v.to_bits()).collect();
+                let want: Vec<u32> = odd.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(got, want);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_consumes_exactly_one_frame_from_a_stream() {
+        let mut stream = Frame::Hello { version: 1 }.encode();
+        stream.extend(Frame::Query { obs: vec![1.0, 2.0] }.encode());
+        let (first, used) = Frame::decode(&stream).unwrap();
+        assert_eq!(first, Frame::Hello { version: 1 });
+        let (second, _) = Frame::decode(&stream[used..]).unwrap();
+        assert_eq!(second, Frame::Query { obs: vec![1.0, 2.0] });
+    }
+
+    #[test]
+    fn truncated_frames_error_without_panicking() {
+        let full = Frame::Reply { probs: vec![0.5, 0.5], value: 1.0 }.encode();
+        for cut in 0..full.len() {
+            let err = Frame::decode(&full[..cut]).expect_err("truncation must error");
+            assert!(matches!(err, crate::error::Error::Wire(_)), "cut={cut}: {err:?}");
+        }
+        // mid-frame EOF through the Read path is a wire error too
+        let err = read_frame(&mut &full[..full.len() - 1]).expect_err("eof mid-frame");
+        assert!(matches!(err, crate::error::Error::Wire(_)));
+        // EOF at a frame boundary is a clean close
+        let mut empty: &[u8] = &[];
+        assert!(read_frame_or_eof(&mut empty).unwrap().is_none());
+    }
+
+    #[test]
+    fn bad_magic_is_rejected() {
+        let mut bytes = Frame::Hello { version: 1 }.encode();
+        bytes[0] = b'H'; // "HAAC"
+        let err = Frame::decode(&bytes).expect_err("bad magic must error");
+        assert!(err.to_string().contains("bad magic"), "{err}");
+        // an HTTP request aimed at the port dies on the magic check
+        let err = read_frame(&mut b"GET / HTTP/1.1\r\n\r\n".as_slice()).expect_err("http");
+        assert!(err.to_string().contains("bad magic"), "{err}");
+    }
+
+    #[test]
+    fn unknown_frame_type_is_rejected() {
+        let mut bytes = Frame::Hello { version: 1 }.encode();
+        bytes[4] = 99;
+        let err = Frame::decode(&bytes).expect_err("unknown type must error");
+        assert!(err.to_string().contains("unknown frame type 99"), "{err}");
+    }
+
+    #[test]
+    fn oversized_declared_payload_is_rejected_before_allocation() {
+        let mut bytes = Frame::Hello { version: 1 }.encode();
+        bytes[5..9].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = Frame::decode(&bytes).expect_err("oversized must error");
+        assert!(err.to_string().contains("exceeds"), "{err}");
+        let err = read_frame(&mut bytes.as_slice()).expect_err("oversized must error");
+        assert!(err.to_string().contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn count_and_length_mismatches_are_rejected() {
+        // declared f32 count larger than the actual payload
+        let mut bytes = Frame::Query { obs: vec![1.0, 2.0] }.encode();
+        let count_at = HEADER_LEN;
+        bytes[count_at..count_at + 4].copy_from_slice(&3u32.to_le_bytes());
+        // keep header length honest so the header check passes
+        assert!(Frame::decode(&bytes).is_err(), "over-count must error");
+        // trailing garbage after a well-formed payload
+        let mut bytes = Frame::Hello { version: 1 }.encode();
+        bytes.push(0xFF);
+        bytes[5..9].copy_from_slice(&3u32.to_le_bytes()); // payload now 3 bytes
+        let err = Frame::decode(&bytes).expect_err("trailing bytes must error");
+        assert!(err.to_string().contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn non_utf8_error_message_is_rejected() {
+        let mut bytes = Frame::Error { message: "ab".into() }.encode();
+        let msg_at = HEADER_LEN + 4;
+        bytes[msg_at] = 0xC0; // invalid UTF-8 lead byte
+        let err = Frame::decode(&bytes).expect_err("bad utf-8 must error");
+        assert!(err.to_string().contains("UTF-8"), "{err}");
+    }
+
+    #[test]
+    fn arbitrary_garbage_never_panics() {
+        // deterministic pseudo-random byte soup through the decoder
+        let mut x = 0x2545_F491u32;
+        for len in 0..64 {
+            let bytes: Vec<u8> = (0..len)
+                .map(|_| {
+                    x ^= x << 13;
+                    x ^= x >> 17;
+                    x ^= x << 5;
+                    x as u8
+                })
+                .collect();
+            let _ = Frame::decode(&bytes); // must return, not panic
+            let _ = read_frame_or_eof(&mut bytes.as_slice());
+        }
+    }
+}

@@ -10,7 +10,8 @@ use std::time::Duration;
 
 use paac::envs::{GameId, ObsMode, ACTIONS};
 use paac::serve::{
-    run_clients, PolicyServer, ServeConfig, Session, SyntheticBackend, SyntheticFactory,
+    run_clients, run_remote_clients, PolicyServer, RemoteHandle, ServeConfig, Session,
+    SessionReport, SyntheticBackend, SyntheticFactory, TcpFrontend,
 };
 
 fn server(width: usize, delay_us: u64, seed: u64) -> PolicyServer {
@@ -111,6 +112,99 @@ fn pool_snapshot_carries_per_shard_rollups() {
     // the JSONL record carries the same breakdown
     let json = snap.to_json().to_string_compact();
     assert!(json.contains("\"shards\":["), "serve.jsonl record lost the shard rollups");
+}
+
+/// Everything a trajectory depends on, bit-exact.
+fn fingerprints(reports: &[SessionReport]) -> Vec<(u64, u64, usize, u32, u32)> {
+    reports
+        .iter()
+        .map(|r| {
+            (r.session, r.queries, r.episodes, r.mean_return.to_bits(), r.mean_value.to_bits())
+        })
+        .collect()
+}
+
+#[test]
+fn tcp_loopback_clients_match_in_process_clients_bit_for_bit() {
+    // the acceptance gate for the transport frontend: the same client
+    // workload played through `RemoteHandle`s over a loopback socket and
+    // through in-process `ClientHandle`s must produce identical episodes
+    // — same session ids, same returns, same served values, bit for bit.
+    let clients = 4;
+    let queries = 150;
+    let in_process = {
+        let srv = pool(8, 1, 0, 300, 33);
+        let reports =
+            run_clients(&srv, GameId::Catch, ObsMode::Grid, 13, 10, clients, queries).unwrap();
+        srv.shutdown().unwrap();
+        fingerprints(&reports)
+    };
+    let over_tcp = {
+        let srv = pool(8, 1, 0, 300, 33);
+        let frontend = TcpFrontend::bind("127.0.0.1:0", srv.connector(), None).unwrap();
+        let addr = frontend.local_addr().to_string();
+        let reports =
+            run_remote_clients(&addr, GameId::Catch, ObsMode::Grid, 13, 10, clients, queries)
+                .unwrap();
+        frontend.shutdown().unwrap();
+        let snap = srv.shutdown().unwrap();
+        // transport accounting: one Hello + `queries` Querys in, one
+        // HelloAck + `queries` Replys out, per connection
+        assert_eq!(snap.transport.connections, clients as u64);
+        assert_eq!(snap.transport.active, 0, "all connections must have closed");
+        assert_eq!(snap.transport.frames_rx, (clients * (queries + 1)) as u64);
+        assert_eq!(snap.transport.frames_tx, (clients * (queries + 1)) as u64);
+        assert_eq!(snap.transport.wire_errors, 0);
+        assert_eq!(snap.queries, (clients * queries) as u64);
+        fingerprints(&reports)
+    };
+    assert_eq!(over_tcp, in_process, "the TCP transport changed served trajectories");
+}
+
+#[test]
+fn tcp_frontend_serves_the_sharded_pool_transparently() {
+    // transport and sharding compose: remote clients against a 3-shard
+    // pool (1 small + 2 wide) finish the same workload with per-shard
+    // and transport rollups agreeing with the client-side view
+    let clients = 5;
+    let queries = 80;
+    let srv = pool(8, 3, 2, 300, 17);
+    let frontend = TcpFrontend::bind("127.0.0.1:0", srv.connector(), None).unwrap();
+    let addr = frontend.local_addr().to_string();
+    let reports =
+        run_remote_clients(&addr, GameId::Catch, ObsMode::Grid, 4, 10, clients, queries)
+            .unwrap();
+    frontend.shutdown().unwrap();
+    let snap = srv.shutdown().unwrap();
+    let client_side: u64 = reports.iter().map(|r| r.queries).sum();
+    assert_eq!(client_side, (clients * queries) as u64);
+    assert_eq!(snap.queries, client_side);
+    let shard_total: u64 = snap.shards.iter().map(|s| s.queries).sum();
+    assert_eq!(shard_total, snap.queries, "shard rollups must partition remote queries");
+    assert_eq!(snap.transport.connections, clients as u64);
+    // the serve.jsonl record carries the transport rollup too
+    let json = snap.to_json().to_string_compact();
+    assert!(json.contains("\"transport\":{"), "serve.jsonl record lost transport counters");
+}
+
+#[test]
+fn remote_handle_reports_server_shape_and_survives_reconnects() {
+    let srv = pool(4, 1, 0, 200, 5);
+    let frontend = TcpFrontend::bind("127.0.0.1:0", srv.connector(), None).unwrap();
+    let addr = frontend.local_addr().to_string();
+    for round in 0..3u64 {
+        let mut handle = RemoteHandle::connect(&addr).unwrap();
+        assert_eq!(handle.obs_len(), ObsMode::Grid.obs_len());
+        assert_eq!(handle.actions(), ACTIONS);
+        assert_eq!(handle.session(), round, "session ids must keep advancing");
+        let reply = handle.query(&vec![0.25; ObsMode::Grid.obs_len()]).unwrap();
+        assert_eq!(reply.probs.len(), ACTIONS);
+        assert!(reply.value.is_finite());
+    }
+    frontend.shutdown().unwrap();
+    let snap = srv.shutdown().unwrap();
+    assert_eq!(snap.transport.connections, 3);
+    assert_eq!(snap.queries, 3);
 }
 
 #[test]

@@ -4,6 +4,11 @@
 //! the same digests as the real crate, so checkpoints written against
 //! either implementation verify against the other.
 
+
+// Vendored stand-in for an external crate: lint policy follows the
+// upstream API surface, not this workspace's clippy bar.
+#![allow(clippy::all)]
+
 const TABLE: [u32; 256] = {
     let mut table = [0u32; 256];
     let mut i = 0;
