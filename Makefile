@@ -2,7 +2,7 @@
 
 CARGO_DIR := rust
 
-.PHONY: verify build test fmt fmt-check lint docs artifacts bench-serve clean
+.PHONY: verify build test fmt fmt-check lint docs artifacts bench-serve bench-replay clean
 
 # Tier-1 gate, exactly: cargo build --release && cargo test -q.
 verify: build test
@@ -33,8 +33,14 @@ artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
 
 # Serving throughput curve (batched vs unbatched micro-batching).
+# Writes rust/BENCH_serve.json next to the printed tables.
 bench-serve:
 	cd $(CARGO_DIR) && cargo bench --bench serve_throughput
+
+# Replay-store push/sample rates, uniform vs prioritized.
+# Writes rust/BENCH_replay.json next to the printed tables.
+bench-replay:
+	cd $(CARGO_DIR) && cargo bench --bench replay_throughput
 
 clean:
 	cd $(CARGO_DIR) && cargo clean

@@ -1,0 +1,184 @@
+//! Replay-store throughput: push and sample rates, uniform vs
+//! prioritized, across actor counts.
+//!
+//! The off-policy learner's hot path adds two host-side stages to the
+//! PAAC cycle — pushing every vec-env frame into the transition store
+//! and gathering a sampled minibatch back out — so both must run far
+//! above the env-step rate to stay invisible in the Figure-2 breakdown.
+//! Three measurements, at grid-game observation size (600 floats):
+//!
+//! 1. **push** — frames/sec through stage/commit (assembly included),
+//!    for n_e in {8, 32, 128}.
+//! 2. **sample** — transitions/sec gathering a train batch
+//!    (n_e * t_max rows), uniform vs prioritized.
+//! 3. **priority update** — sum-tree refreshes/sec after a TD pass.
+//!
+//! A machine-readable summary lands in `BENCH_replay.json` next to the
+//! printed tables (the start of the perf trajectory the ROADMAP asks
+//! for). Run: cargo bench --bench replay_throughput (PAAC_BENCH_FAST=1
+//! to shorten).
+
+use paac::benchkit::{Bench, JsonReport, Table};
+use paac::envs::GRID_OBS_LEN;
+use paac::replay::{ReplayBuffer, SampleBatch, SamplerKind};
+use paac::util::rng::Pcg32;
+
+const N_STEP: usize = 5;
+const T_MAX: usize = 5;
+const GAMMA: f32 = 0.99;
+
+/// Build a store and keep it warm: capacity ~64k transitions, obs data
+/// deterministic but non-constant, occasional episode boundaries.
+struct Driver {
+    buf: ReplayBuffer,
+    obs: Vec<f32>,
+    actions: Vec<usize>,
+    rewards: Vec<f32>,
+    dones: Vec<bool>,
+    rng: Pcg32,
+    n_e: usize,
+    step: u64,
+}
+
+impl Driver {
+    fn new(n_e: usize, kind: SamplerKind) -> Driver {
+        let capacity = 65_536;
+        let buf = ReplayBuffer::new(capacity, n_e, GRID_OBS_LEN, N_STEP, GAMMA, kind, 7);
+        Driver {
+            buf,
+            obs: vec![0.0; n_e * GRID_OBS_LEN],
+            actions: vec![0; n_e],
+            rewards: vec![0.0; n_e],
+            dones: vec![false; n_e],
+            rng: Pcg32::new(11, 3),
+            n_e,
+            step: 0,
+        }
+    }
+
+    /// One vec-env-shaped step into the store.
+    fn push(&mut self) {
+        self.step += 1;
+        for e in 0..self.n_e {
+            // cheap obs churn: rotate one float per env per step
+            let idx = e * GRID_OBS_LEN + (self.step as usize % GRID_OBS_LEN);
+            self.obs[idx] = (self.step % 255) as f32 / 255.0;
+            self.actions[e] = (self.step as usize + e) % 6;
+            self.rewards[e] = if self.rng.chance(0.05) { 1.0 } else { 0.0 };
+            self.dones[e] = self.rng.chance(0.01);
+        }
+        self.buf.stage(&self.obs, &self.actions);
+        self.buf.commit(&self.rewards, &self.dones);
+    }
+
+    fn warm(&mut self, steps: usize) {
+        for _ in 0..steps {
+            self.push();
+        }
+    }
+}
+
+fn main() {
+    let mut bench = Bench::from_env();
+    let mut report = JsonReport::new("replay_throughput");
+
+    println!(
+        "replay bench: obs_len={GRID_OBS_LEN} n_step={N_STEP} gamma={GAMMA} \
+         capacity=65536 transitions"
+    );
+
+    // -- table 1: push throughput across actor counts --
+    let mut push_table = Table::new(&["n_e", "frames/s", "mean/step", "p95/step"]);
+    for n_e in [8usize, 32, 128] {
+        let mut d = Driver::new(n_e, SamplerKind::Uniform);
+        d.warm(64);
+        let s = bench
+            .run(&format!("push ne={n_e}"), n_e as f64, || d.push())
+            .clone();
+        push_table.row(vec![
+            n_e.to_string(),
+            format!("{:.0}", s.throughput()),
+            paac::benchkit::fmt_dur(s.mean),
+            paac::benchkit::fmt_dur(s.p95),
+        ]);
+    }
+    println!("\n## Replay push throughput (stage + commit + n-step assembly)\n");
+    println!("{}", push_table.render());
+
+    // -- table 2: sample throughput, uniform vs prioritized --
+    let mut sample_table = Table::new(&[
+        "n_e",
+        "batch",
+        "uniform samples/s",
+        "prioritized samples/s",
+        "per overhead",
+    ]);
+    for n_e in [8usize, 32, 128] {
+        let batch_size = n_e * T_MAX;
+        let mut uni = Driver::new(n_e, SamplerKind::Uniform);
+        let mut pri = Driver::new(n_e, SamplerKind::Prioritized { alpha: 0.6, beta: 0.4 });
+        // warm well past one batch of assembled transitions per lane
+        let warm_steps = (batch_size / n_e).max(1) * 8 + N_STEP + 4;
+        uni.warm(warm_steps);
+        pri.warm(warm_steps);
+        let mut ub = SampleBatch::new(batch_size, GRID_OBS_LEN);
+        let mut pb = SampleBatch::new(batch_size, GRID_OBS_LEN);
+        let su = bench
+            .run(&format!("sample-uniform ne={n_e}"), batch_size as f64, || {
+                assert!(uni.buf.sample(&mut ub, batch_size));
+            })
+            .clone();
+        let sp = bench
+            .run(&format!("sample-per ne={n_e}"), batch_size as f64, || {
+                assert!(pri.buf.sample(&mut pb, batch_size));
+            })
+            .clone();
+        sample_table.row(vec![
+            n_e.to_string(),
+            batch_size.to_string(),
+            format!("{:.0}", su.throughput()),
+            format!("{:.0}", sp.throughput()),
+            format!("{:.2}x", su.throughput() / sp.throughput().max(1e-9)),
+        ]);
+    }
+    println!("\n## Replay sample throughput (gather into the train batch)\n");
+    println!("{}", sample_table.render());
+
+    // -- table 3: priority refresh rate --
+    let mut upd_table = Table::new(&["batch", "updates/s"]);
+    {
+        let n_e = 32;
+        let batch_size = n_e * T_MAX;
+        let mut d = Driver::new(n_e, SamplerKind::Prioritized { alpha: 0.6, beta: 0.4 });
+        d.warm(64);
+        let mut b = SampleBatch::new(batch_size, GRID_OBS_LEN);
+        assert!(d.buf.sample(&mut b, batch_size));
+        let slots = b.slots[..batch_size].to_vec();
+        let tds: Vec<f32> = (0..batch_size).map(|i| (i as f32 * 0.37).sin()).collect();
+        let s = bench
+            .run("priority-update b=160", batch_size as f64, || {
+                d.buf.update_priorities(&slots, &tds);
+            })
+            .clone();
+        upd_table.row(vec![batch_size.to_string(), format!("{:.0}", s.throughput())]);
+    }
+    println!("\n## Prioritized sum-tree refresh\n");
+    println!("{}", upd_table.render());
+
+    println!(
+        "push cost is dominated by the obs copy (one {GRID_OBS_LEN}-float row \
+         per env per step); prioritized sampling adds the sum-tree descent \
+         and IS-weight math on top of the uniform gather"
+    );
+
+    // -- machine-readable summary --
+    report.add_samples("samples", &bench);
+    report.add_table("push_rates", &push_table);
+    report.add_table("sample_rates", &sample_table);
+    report.add_table("priority_updates", &upd_table);
+    report.add_num("obs_len", GRID_OBS_LEN as f64);
+    report.add_num("n_step", N_STEP as f64);
+    let out = std::path::Path::new("BENCH_replay.json");
+    report.write(out).expect("write BENCH_replay.json");
+    println!("\nmachine-readable summary written to {}", out.display());
+}

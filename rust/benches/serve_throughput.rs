@@ -21,7 +21,7 @@
 
 use std::time::{Duration, Instant};
 
-use paac::benchkit::Table;
+use paac::benchkit::{JsonReport, Table};
 use paac::envs::{GameId, ObsMode, ACTIONS};
 use paac::serve::{
     run_clients, PolicyServer, RemoteHandle, ServeConfig, Session, StatsSnapshot,
@@ -227,4 +227,18 @@ fn main() {
         tcp_snap.transport.frames_tx,
         tcp_snap.transport.wire_errors
     );
+
+    // -- machine-readable summary (the serve perf trajectory) --
+    let mut report = JsonReport::new("serve_throughput");
+    report.add_table("micro_batching", &table);
+    report.add_table("shard_pool", &shard_table);
+    report.add_table("transport", &transport_table);
+    report.add_num("queries_per_client", queries as f64);
+    report.add_num("scaling_low_qps", lo);
+    report.add_num("scaling_high_qps", hi);
+    report.add_num("tcp_qps", tcp_qps);
+    report.add_num("inproc_qps", inproc_qps);
+    let out = std::path::Path::new("BENCH_serve.json");
+    report.write(out).expect("write BENCH_serve.json");
+    println!("\nmachine-readable summary written to {}", out.display());
 }

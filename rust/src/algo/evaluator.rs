@@ -51,14 +51,21 @@ pub struct EvalReport {
     pub episodes_played: usize,
 }
 
-/// Run the protocol for a trained model on a game.
-pub fn evaluate(
-    model: &PolicyModel,
+/// Run the protocol for an arbitrary policy: `policy(rng, obs)` returns
+/// the action for one observation. This is the protocol core shared by
+/// the actor-critic path ([`evaluate`]) and the off-policy Q path
+/// (`algo::nstep_q::evaluate_q`); the actor/env RNG streams depend only
+/// on (seed, actor index), never on the policy.
+pub fn evaluate_policy<F>(
     game: GameId,
     mode: ObsMode,
     proto: &EvalProtocol,
     seed: u64,
-) -> Result<EvalReport> {
+    mut policy: F,
+) -> Result<EvalReport>
+where
+    F: FnMut(&mut Pcg32, &[f32]) -> Result<usize>,
+{
     let mut per_actor = Vec::with_capacity(proto.actors);
     let mut episodes_played = 0;
     for actor in 0..proto.actors {
@@ -69,8 +76,7 @@ pub fn evaluate(
             let mut total = 0.0f32;
             let mut steps = 0u64;
             loop {
-                let fwd = model.forward1(env.obs())?;
-                let a = rng.categorical(&fwd.probs);
+                let a = policy(&mut rng, env.obs())?;
                 let info = env.step(a);
                 total += info.reward;
                 steps += 1;
@@ -86,6 +92,21 @@ pub fn evaluate(
     let best = per_actor.iter().copied().fold(f32::NEG_INFINITY, f32::max);
     let mean = math::mean(&per_actor);
     Ok(EvalReport { per_actor, best, mean, episodes_played })
+}
+
+/// Run the protocol for a trained model on a game (actions sampled from
+/// the policy head, as in training).
+pub fn evaluate(
+    model: &PolicyModel,
+    game: GameId,
+    mode: ObsMode,
+    proto: &EvalProtocol,
+    seed: u64,
+) -> Result<EvalReport> {
+    evaluate_policy(game, mode, proto, seed, |rng, obs| {
+        let fwd = model.forward1(obs)?;
+        Ok(rng.categorical(&fwd.probs))
+    })
 }
 
 /// Random-policy baseline score (Table 1's implicit "Random" column):
@@ -149,6 +170,23 @@ mod tests {
         let a = random_baseline(GameId::Catch, &proto, 5);
         let b = random_baseline(GameId::Catch, &proto, 5);
         assert_eq!(a.per_actor, b.per_actor);
+    }
+
+    #[test]
+    fn evaluate_policy_is_reproducible_and_policy_sensitive() {
+        let proto = EvalProtocol { actors: 2, episodes: 4, noop_max: 5, max_steps: 300 };
+        let fixed = |_: &mut Pcg32, _: &[f32]| Ok(crate::envs::A_NOOP);
+        let a = evaluate_policy(GameId::Catch, ObsMode::Grid, &proto, 9, fixed).unwrap();
+        let b = evaluate_policy(GameId::Catch, ObsMode::Grid, &proto, 9, fixed).unwrap();
+        assert_eq!(a.per_actor, b.per_actor);
+        assert_eq!(a.episodes_played, 8);
+        // the random policy sees different trajectories than noop
+        let rand =
+            evaluate_policy(GameId::Catch, ObsMode::Grid, &proto, 9, |rng, _| {
+                Ok(rng.below(crate::envs::ACTIONS as u32) as usize)
+            })
+            .unwrap();
+        assert!(rand.best.is_finite());
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! RL algorithm layer: the paper's PAAC plus the two baselines it is
-//! evaluated against, the shared rollout/return machinery, and the
+//! evaluated against, the off-policy n-step Q-learner built on the
+//! replay subsystem, the shared rollout/return machinery, and the
 //! Table-1 evaluation protocol.
 
 pub mod a3c;
 pub mod evaluator;
 pub mod ga3c;
+pub mod nstep_q;
 pub mod paac;
 pub mod returns;
 pub mod rollout;

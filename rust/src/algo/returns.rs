@@ -144,6 +144,74 @@ mod tests {
     }
 
     #[test]
+    fn gamma_zero_returns_equal_rewards_exactly() {
+        // gamma = 0 kills both the recursion and the bootstrap: R_t = r_t
+        // bit for bit, regardless of the done pattern
+        prop::check("returns-gamma-zero", 60, |g| {
+            let t_max = g.usize_in(1, 16);
+            let rewards: Vec<f32> = g.vec_f32(t_max, -3.0, 3.0);
+            let dones: Vec<bool> = (0..t_max).map(|_| g.bool_with(0.4)).collect();
+            let mut out = vec![1.0; t_max];
+            nstep_returns_into(&rewards, &dones, g.f32_in(-10.0, 10.0), 0.0, &mut out);
+            if out != rewards {
+                return Err(format!("{out:?} != {rewards:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn all_done_rollouts_are_pure_rewards_any_gamma() {
+        prop::check("returns-all-done", 60, |g| {
+            let t_max = g.usize_in(1, 16);
+            let gamma = g.f32_in(0.0, 0.999);
+            let rewards: Vec<f32> = g.vec_f32(t_max, -3.0, 3.0);
+            let dones = vec![true; t_max];
+            let mut out = vec![0.0; t_max];
+            nstep_returns_into(&rewards, &dones, 1e6, gamma, &mut out);
+            if out != rewards {
+                return Err(format!("gamma={gamma}: {out:?} != {rewards:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    /// Brute-force cross-check: the single backward recursion must agree,
+    /// at every t, with an independent per-step recompute that restarts
+    /// the recursion from scratch on the suffix `[t..]` — including
+    /// mid-rollout terminals, gamma = 0 and all-done rollouts. The replay
+    /// assembler is property-tested against the same recursion on its
+    /// windows (`replay::ring`), so the two stores cannot drift apart on
+    /// shared cases.
+    #[test]
+    fn property_per_step_recompute_matches_single_pass() {
+        prop::check("returns-suffix-recompute", 150, |g| {
+            let t_max = g.usize_in(1, 14);
+            let gamma = *g.pick(&[0.0, 0.3, 0.9, 0.99]);
+            let bootstrap = g.f32_in(-5.0, 5.0);
+            let rewards: Vec<f32> = g.vec_f32(t_max, -2.0, 2.0);
+            let all_done = g.bool_with(0.15);
+            let dones: Vec<bool> = (0..t_max)
+                .map(|_| all_done || g.bool_with(0.35))
+                .collect();
+            let mut full = vec![0.0; t_max];
+            nstep_returns_into(&rewards, &dones, bootstrap, gamma, &mut full);
+            for t in 0..t_max {
+                // fresh recursion over the suffix only
+                let mut suffix = vec![0.0; t_max - t];
+                nstep_returns_into(&rewards[t..], &dones[t..], bootstrap, gamma, &mut suffix);
+                if full[t].to_bits() != suffix[0].to_bits() {
+                    return Err(format!(
+                        "t={t}: full pass {} != suffix recompute {}",
+                        full[t], suffix[0]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn batch_layout_is_env_major() {
         let n_e = 2;
         let t_max = 3;

@@ -4,9 +4,16 @@
 //! this module: warmup, adaptive iteration count, mean/std/percentiles,
 //! and markdown table output so bench runs regenerate the paper's tables
 //! and figures as readable artifacts (tee'd into `bench_output.txt`).
+//! Benches that track a perf trajectory additionally write a
+//! machine-readable [`JsonReport`] next to their printed tables (e.g.
+//! `BENCH_replay.json` / `BENCH_serve.json`), so runs accumulate into a
+//! diffable history instead of scrollback.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
+use crate::error::Result;
+use crate::util::json::{obj, Json};
 use crate::util::math;
 
 /// Result of one benchmark case.
@@ -30,6 +37,19 @@ impl Sample {
         } else {
             0.0
         }
+    }
+
+    /// Machine-readable form (durations in nanoseconds).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_ns", Json::Num(self.mean.as_nanos() as f64)),
+            ("p50_ns", Json::Num(self.p50.as_nanos() as f64)),
+            ("p95_ns", Json::Num(self.p95.as_nanos() as f64)),
+            ("std_ns", Json::Num(self.std.as_nanos() as f64)),
+            ("throughput_per_sec", Json::Num(self.throughput())),
+        ])
     }
 }
 
@@ -129,6 +149,11 @@ impl Bench {
         &self.results
     }
 
+    /// All recorded samples as a JSON array (see [`Sample::to_json`]).
+    pub fn json(&self) -> Json {
+        Json::Arr(self.results.iter().map(Sample::to_json).collect())
+    }
+
     /// Render all recorded samples as a markdown table.
     pub fn report(&self, title: &str) -> String {
         let mut s = format!("\n## {title}\n\n");
@@ -190,6 +215,82 @@ impl Table {
             s.push_str(&format!("| {} |\n", r.join(" | ")));
         }
         s
+    }
+
+    /// Lossless machine-readable form: `{"header": [...], "rows": [[..]]}`
+    /// (cells stay the formatted strings the printed table shows).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            (
+                "header",
+                Json::Arr(self.header.iter().map(|h| Json::Str(h.clone())).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// A machine-readable bench summary: named tables, sample arrays and
+/// scalars collected while a bench prints its human tables, then written
+/// as one JSON file (`BENCH_<name>.json`) so successive runs build a
+/// perf trajectory.
+pub struct JsonReport {
+    name: String,
+    fields: Vec<(String, Json)>,
+}
+
+impl JsonReport {
+    pub fn new(name: &str) -> JsonReport {
+        JsonReport { name: name.to_string(), fields: Vec::new() }
+    }
+
+    /// Attach an arbitrary JSON value under `key`.
+    pub fn add(&mut self, key: &str, value: Json) {
+        self.fields.push((key.to_string(), value));
+    }
+
+    /// Attach a rendered table (see [`Table::to_json`]).
+    pub fn add_table(&mut self, key: &str, table: &Table) {
+        self.add(key, table.to_json());
+    }
+
+    /// Attach a bench harness's recorded samples.
+    pub fn add_samples(&mut self, key: &str, bench: &Bench) {
+        self.add(key, bench.json());
+    }
+
+    /// Attach a scalar metric.
+    pub fn add_num(&mut self, key: &str, value: f64) {
+        self.add(key, Json::Num(value));
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![("bench", Json::Str(self.name.clone()))];
+        for (k, v) in &self.fields {
+            fields.push((k.as_str(), v.clone()));
+        }
+        obj(fields)
+    }
+
+    /// Write the summary to `path` (pretty enough: one compact record).
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut text = self.to_json().to_string_compact();
+        text.push('\n');
+        std::fs::write(path, text)?;
+        Ok(())
     }
 }
 
@@ -253,5 +354,54 @@ mod tests {
     fn table_rejects_bad_rows() {
         let mut t = Table::new(&["a"]);
         t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn json_report_round_trips_tables_and_samples() {
+        let mut b = Bench {
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(5),
+            max_iters: 10_000,
+            results: Vec::new(),
+        };
+        b.run("case-a", 4.0, || {
+            std::hint::black_box(1 + 1);
+        });
+        let mut t = Table::new(&["n_e", "push/s"]);
+        t.row(vec!["32".into(), "1e6".into()]);
+
+        let mut rep = JsonReport::new("replay_throughput");
+        rep.add_samples("samples", &b);
+        rep.add_table("push_rates", &t);
+        rep.add_num("n_e_max", 128.0);
+
+        let parsed = Json::parse(&rep.to_json().to_string_compact()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("replay_throughput"));
+        let samples = parsed.get("samples").unwrap().as_arr().unwrap();
+        assert_eq!(samples[0].get("name").unwrap().as_str(), Some("case-a"));
+        assert!(samples[0].get("throughput_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(samples[0].get("mean_ns").unwrap().as_f64().unwrap() > 0.0);
+        let table = parsed.get("push_rates").unwrap();
+        assert_eq!(table.field("header").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(
+            table.field("rows").unwrap().as_arr().unwrap()[0].as_arr().unwrap()[0].as_str(),
+            Some("32")
+        );
+        assert_eq!(parsed.get("n_e_max").unwrap().as_usize(), Some(128));
+    }
+
+    #[test]
+    fn json_report_writes_a_parseable_file() {
+        let dir = std::env::temp_dir().join(format!("paac-benchkit-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let mut rep = JsonReport::new("t");
+        rep.add_num("x", 1.5);
+        rep.write(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(text.trim()).unwrap();
+        assert_eq!(parsed.get("x").unwrap().as_f64(), Some(1.5));
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

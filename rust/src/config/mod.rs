@@ -20,15 +20,31 @@ pub enum Algo {
     /// Queue-based baseline in the style of GA3C (Babaeizadeh et al.
     /// 2016): predictor/trainer queues, policy lag.
     Ga3c,
+    /// Off-policy value-based learner: synchronous parallel n-step
+    /// Q-learning (Mnih et al. 2016's async variant on the paper's
+    /// batched loop) over the experience-replay subsystem
+    /// (Nair et al. 2015). Epsilon-greedy actors, uniform or
+    /// prioritized sampling, target-network syncs.
+    NstepQ,
 }
 
 impl Algo {
+    /// Every supported algorithm, in CLI-help order.
+    pub const ALL: [Algo; 4] = [Algo::Paac, Algo::A3c, Algo::Ga3c, Algo::NstepQ];
+
     pub fn parse(s: &str) -> Result<Algo> {
         match s {
             "paac" => Ok(Algo::Paac),
             "a3c" => Ok(Algo::A3c),
             "ga3c" => Ok(Algo::Ga3c),
-            _ => Err(Error::config(format!("unknown algo '{s}' (paac|a3c|ga3c)"))),
+            "nstep-q" | "nstepq" => Ok(Algo::NstepQ),
+            _ => {
+                let valid: Vec<&str> = Self::ALL.iter().map(|a| a.name()).collect();
+                Err(Error::config(format!(
+                    "unknown algo '{s}' (valid: {})",
+                    valid.join("|")
+                )))
+            }
         }
     }
 
@@ -37,6 +53,7 @@ impl Algo {
             Algo::Paac => "paac",
             Algo::A3c => "a3c",
             Algo::Ga3c => "ga3c",
+            Algo::NstepQ => "nstep-q",
         }
     }
 }
@@ -98,6 +115,28 @@ pub struct Config {
     /// framing); whichever of the two budgets hits first stops the run.
     pub max_wall_secs: f64,
 
+    // -- off-policy / replay (algo = nstep-q) --
+    /// n-step return horizon of the replay assembler.
+    pub n_step: usize,
+    /// Replay capacity in transitions (split into n_e per-env lanes).
+    pub replay_capacity: usize,
+    /// Minimum stored transitions before learning starts (clamped up to
+    /// one train batch at runtime).
+    pub replay_min: usize,
+    /// Epsilon-greedy exploration schedule: linear from `eps_start` to
+    /// `eps_end` over `eps_decay_steps` timesteps (0 = half the budget).
+    pub eps_start: f32,
+    pub eps_end: f32,
+    pub eps_decay_steps: u64,
+    /// Learner updates between target-network parameter copies.
+    pub target_sync: u64,
+    /// Proportional prioritized replay instead of uniform sampling.
+    pub per: bool,
+    /// PER priority exponent alpha (0 = uniform, 1 = fully proportional).
+    pub per_alpha: f32,
+    /// PER importance-sampling exponent beta.
+    pub per_beta: f32,
+
     // -- evaluation / logging --
     /// Episodes per evaluation pass.
     pub eval_episodes: usize,
@@ -135,6 +174,16 @@ impl Default for Config {
             gamma: 0.99,
             max_timesteps: 1_000_000,
             max_wall_secs: 0.0,
+            n_step: 5,
+            replay_capacity: 20_000,
+            replay_min: 2_000,
+            eps_start: 1.0,
+            eps_end: 0.1,
+            eps_decay_steps: 0,
+            target_sync: 100,
+            per: false,
+            per_alpha: 0.6,
+            per_beta: 0.4,
             eval_episodes: 30,
             eval_interval: 0,
             log_interval: 50,
@@ -217,6 +266,16 @@ impl Config {
             gamma: doc.f64_or("train.gamma", d.gamma as f64) as f32,
             max_timesteps: doc.i64_or("train.max_timesteps", d.max_timesteps as i64) as u64,
             max_wall_secs: doc.f64_or("train.max_wall_secs", d.max_wall_secs),
+            n_step: doc.i64_or("replay.n_step", d.n_step as i64) as usize,
+            replay_capacity: doc.i64_or("replay.capacity", d.replay_capacity as i64) as usize,
+            replay_min: doc.i64_or("replay.min", d.replay_min as i64) as usize,
+            eps_start: doc.f64_or("replay.eps_start", d.eps_start as f64) as f32,
+            eps_end: doc.f64_or("replay.eps_end", d.eps_end as f64) as f32,
+            eps_decay_steps: doc.i64_or("replay.eps_decay_steps", d.eps_decay_steps as i64) as u64,
+            target_sync: doc.i64_or("replay.target_sync", d.target_sync as i64) as u64,
+            per: doc.bool_or("replay.per", d.per),
+            per_alpha: doc.f64_or("replay.per_alpha", d.per_alpha as f64) as f32,
+            per_beta: doc.f64_or("replay.per_beta", d.per_beta as f64) as f32,
             eval_episodes: doc.i64_or("eval.episodes", d.eval_episodes as i64) as usize,
             eval_interval: doc.i64_or("eval.interval", d.eval_interval as i64) as u64,
             log_interval: doc.i64_or("train.log_interval", d.log_interval as i64) as u64,
@@ -254,6 +313,50 @@ impl Config {
         }
         if !(self.max_wall_secs >= 0.0) {
             return Err(Error::config("max_wall_secs must be >= 0"));
+        }
+        if self.n_step == 0 || self.n_step > 255 {
+            // the store packs window lengths into a u8
+            return Err(Error::config("replay n_step must be in 1..=255"));
+        }
+        // lane geometry only binds when the replay store will be built
+        if self.algo == Algo::NstepQ {
+            let lane = self.replay_capacity / self.n_e;
+            if lane <= self.n_step + 1 {
+                return Err(Error::config(format!(
+                    "replay capacity {} too small for n_e={} at n_step={}: each env lane \
+                     must hold more than one n-step window (capacity > n_e * (n_step + 2))",
+                    self.replay_capacity, self.n_e, self.n_step
+                )));
+            }
+            // the assembler's window lag means only n_e * (lane - n_step)
+            // transitions are guaranteed sampleable at once; below the
+            // learner warmup the run would never update
+            let usable = self.n_e * (lane - self.n_step);
+            let need = self.replay_min.max(self.batch_size());
+            if usable < need {
+                return Err(Error::config(format!(
+                    "replay capacity {} holds at most {usable} sampleable transitions, \
+                     below the learner warmup of {need} (max of replay.min and \
+                     n_e * t_max); raise --replay-cap or lower replay.min",
+                    self.replay_capacity
+                )));
+            }
+        }
+        if !(0.0..=1.0).contains(&self.eps_end)
+            || !(0.0..=1.0).contains(&self.eps_start)
+            || self.eps_end > self.eps_start
+        {
+            return Err(Error::config(format!(
+                "epsilon schedule must satisfy 0 <= eps_end <= eps_start <= 1 \
+                 (got {} -> {})",
+                self.eps_start, self.eps_end
+            )));
+        }
+        if self.target_sync == 0 {
+            return Err(Error::config("target_sync must be >= 1 update"));
+        }
+        if !(0.0..=1.0).contains(&self.per_alpha) || !(0.0..=1.0).contains(&self.per_beta) {
+            return Err(Error::config("per_alpha and per_beta must be in [0, 1]"));
         }
         if !matches!(self.arch.as_str(), "tiny" | "nips" | "nature") {
             return Err(Error::config(format!(
@@ -373,9 +476,80 @@ mod tests {
 
     #[test]
     fn algo_parse_roundtrip() {
-        for a in [Algo::Paac, Algo::A3c, Algo::Ga3c] {
+        for a in Algo::ALL {
             assert_eq!(Algo::parse(a.name()).unwrap(), a);
         }
+        assert_eq!(Algo::parse("nstepq").unwrap(), Algo::NstepQ);
         assert!(Algo::parse("dqn").is_err());
+    }
+
+    #[test]
+    fn algo_parse_error_enumerates_valid_names() {
+        let msg = Algo::parse("dqn").unwrap_err().to_string();
+        for a in Algo::ALL {
+            assert!(msg.contains(a.name()), "'{msg}' missing '{}'", a.name());
+        }
+    }
+
+    #[test]
+    fn replay_toml_overrides_apply() {
+        let doc = Document::parse(
+            "[train]\nalgo = \"nstep-q\"\n\
+             [replay]\ncapacity = 50000\nn_step = 3\nper = true\n\
+             per_alpha = 0.7\ntarget_sync = 250\neps_end = 0.05\n",
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert_eq!(c.algo, Algo::NstepQ);
+        assert_eq!(c.replay_capacity, 50_000);
+        assert_eq!(c.n_step, 3);
+        assert!(c.per);
+        assert!((c.per_alpha - 0.7).abs() < 1e-6);
+        assert_eq!(c.target_sync, 250);
+        assert!((c.eps_end - 0.05).abs() < 1e-6);
+        // untouched knobs keep their defaults
+        assert_eq!(c.replay_min, Config::default().replay_min);
+    }
+
+    #[test]
+    fn validation_rejects_bad_replay_configs() {
+        let mut c = Config::default();
+        c.algo = Algo::NstepQ;
+        c.replay_capacity = 100; // 100/32 = 3 slots/lane <= n_step+1
+        assert!(c.validate().is_err());
+
+        let mut c = Config::default();
+        c.eps_end = 0.5;
+        c.eps_start = 0.1; // end > start
+        assert!(c.validate().is_err());
+
+        let mut c = Config::default();
+        c.per_alpha = 1.5;
+        assert!(c.validate().is_err());
+
+        let mut c = Config::default();
+        c.target_sync = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = Config::default();
+        c.n_step = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = Config::default();
+        c.n_step = 300; // the store packs lengths into a u8
+        assert!(c.validate().is_err());
+
+        // a store that can never reach the learner warmup is rejected
+        let mut c = Config::default();
+        c.algo = Algo::NstepQ;
+        c.replay_capacity = 1_500; // usable < replay_min = 2000
+        assert!(c.validate().is_err());
+        c.replay_min = 500;
+        c.validate().unwrap();
+
+        // the same tiny capacity is fine for on-policy algos (no store)
+        let mut c = Config::default();
+        c.replay_capacity = 100;
+        c.validate().unwrap();
     }
 }

@@ -9,6 +9,7 @@ use std::time::Instant;
 use crate::algo::a3c::{train_a3c, A3cConfig};
 use crate::algo::evaluator::{evaluate, EvalProtocol, EvalReport};
 use crate::algo::ga3c::{train_ga3c, Ga3cConfig};
+use crate::algo::nstep_q::{evaluate_q, ArtifactQ, NstepQ, NstepQOpts, QBackend, EVAL_EPSILON};
 use crate::algo::paac::Paac;
 use crate::config::{Algo, Config};
 use crate::envs::{ObsMode, VecEnv};
@@ -54,26 +55,50 @@ pub struct TrainReport {
 /// The run driver.
 pub struct Trainer {
     cfg: Config,
-    rt: Arc<Runtime>,
+    /// `None` only in host-fallback mode: `algo = nstep-q` with no PJRT
+    /// backend linked, where the learner runs on `HostLinearQ` and never
+    /// touches an artifact.
+    rt: Option<Arc<Runtime>>,
 }
 
 impl Trainer {
     pub fn new(cfg: Config) -> Result<Trainer> {
         cfg.validate()?;
-        let rt = Arc::new(Runtime::new(&cfg.artifacts_dir)?);
-        // config <-> artifact consistency (gamma / t_max are baked in)
-        let hp = rt.manifest().hyperparams;
-        if (hp.gamma - cfg.gamma).abs() > 1e-6 {
-            return Err(Error::config(format!(
-                "config gamma {} != artifact gamma {} (re-run make artifacts)",
-                cfg.gamma, hp.gamma
-            )));
-        }
-        if hp.t_max != cfg.t_max {
-            return Err(Error::config(format!(
-                "config t_max {} != artifact t_max {}",
-                cfg.t_max, hp.t_max
-            )));
+        let rt = match Runtime::new(&cfg.artifacts_dir) {
+            Ok(rt) => Some(Arc::new(rt)),
+            Err(e) => {
+                // the off-policy learner has a host backend and can run
+                // without artifacts; every other algo needs them
+                if cfg.algo == Algo::NstepQ && !crate::runtime::pjrt_available() {
+                    log::info!(
+                        "artifacts unavailable ({e}); nstep-q falls back to the \
+                         host linear-Q backend"
+                    );
+                    None
+                } else {
+                    return Err(e);
+                }
+            }
+        };
+        // config <-> artifact consistency (gamma / t_max are baked in).
+        // Skipped when the run will take the host-fallback path anyway
+        // (nstep-q without PJRT never touches the artifacts, even if an
+        // artifact dir happens to be present).
+        let uses_artifacts = cfg.algo != Algo::NstepQ || crate::runtime::pjrt_available();
+        if let (Some(rt), true) = (&rt, uses_artifacts) {
+            let hp = rt.manifest().hyperparams;
+            if (hp.gamma - cfg.gamma).abs() > 1e-6 {
+                return Err(Error::config(format!(
+                    "config gamma {} != artifact gamma {} (re-run make artifacts)",
+                    cfg.gamma, hp.gamma
+                )));
+            }
+            if hp.t_max != cfg.t_max {
+                return Err(Error::config(format!(
+                    "config t_max {} != artifact t_max {}",
+                    cfg.t_max, hp.t_max
+                )));
+            }
         }
         Ok(Trainer { cfg, rt })
     }
@@ -82,15 +107,25 @@ impl Trainer {
     /// runtime across many runs to amortize artifact compilation).
     pub fn with_runtime(cfg: Config, rt: Arc<Runtime>) -> Result<Trainer> {
         cfg.validate()?;
-        Ok(Trainer { cfg, rt })
+        Ok(Trainer { cfg, rt: Some(rt) })
     }
 
     pub fn config(&self) -> &Config {
         &self.cfg
     }
 
-    pub fn runtime(&self) -> Arc<Runtime> {
+    pub fn runtime(&self) -> Option<Arc<Runtime>> {
         self.rt.clone()
+    }
+
+    /// The artifact runtime, or a typed error in host-fallback mode.
+    fn rt(&self) -> Result<Arc<Runtime>> {
+        self.rt.clone().ok_or_else(|| {
+            Error::artifact(
+                "this run has no artifact runtime (host-fallback mode); \
+                 only `--algo nstep-q` can train without artifacts",
+            )
+        })
     }
 
     fn obs_mode(&self) -> ObsMode {
@@ -107,15 +142,17 @@ impl Trainer {
             Algo::Paac => self.run_paac(true),
             Algo::A3c => self.run_a3c(),
             Algo::Ga3c => self.run_ga3c(),
+            Algo::NstepQ => self.run_nstep_q(true),
         }
     }
 
     /// PAAC (Algorithm 1). `with_logging` controls metric-file output
     /// (benches switch it off to keep the measured loop clean).
     pub fn run_paac(&mut self, with_logging: bool) -> Result<TrainReport> {
+        let rt = self.rt()?;
         let cfg = &self.cfg;
         let mode = self.obs_mode();
-        let model = PolicyModel::new(self.rt.clone(), &cfg.arch, cfg.n_e, cfg.seed as i32)?;
+        let model = PolicyModel::new(rt, &cfg.arch, cfg.n_e, cfg.seed as i32)?;
         let venv = VecEnv::new(cfg.game, mode, cfg.n_e, cfg.n_w, cfg.seed, cfg.noop_max);
         let mut paac = Paac::new(model, venv, cfg.gamma, cfg.seed);
         let mut logger = if with_logging {
@@ -239,9 +276,10 @@ impl Trainer {
     /// Phase-time breakdown access for the Figure-2 bench: runs PAAC for
     /// a fixed number of updates and returns (fractions, timesteps/sec).
     pub fn measure_phases(&mut self, updates: u64) -> Result<(Vec<(Phase, f64)>, f64)> {
+        let rt = self.rt()?;
         let cfg = &self.cfg;
         let mode = self.obs_mode();
-        let model = PolicyModel::new(self.rt.clone(), &cfg.arch, cfg.n_e, cfg.seed as i32)?;
+        let model = PolicyModel::new(rt, &cfg.arch, cfg.n_e, cfg.seed as i32)?;
         let venv = VecEnv::new(cfg.game, mode, cfg.n_e, cfg.n_w, cfg.seed, cfg.noop_max);
         let mut paac = Paac::new(model, venv, cfg.gamma, cfg.seed);
         // warmup (compile + caches)
@@ -256,7 +294,156 @@ impl Trainer {
         Ok((paac.timer.fractions(), tps))
     }
 
+    /// Off-policy n-step Q-learning over the replay subsystem. Uses the
+    /// artifact-backed backend when a PJRT runtime is available and the
+    /// deterministic host linear-Q backend otherwise, so the off-policy
+    /// path (train → checkpoint → eval → serve) runs on every checkout.
+    pub fn run_nstep_q(&mut self, with_logging: bool) -> Result<TrainReport> {
+        let cfg = &self.cfg;
+        let mode = self.obs_mode();
+        let opts = NstepQOpts::from_config(cfg);
+        match (&self.rt, crate::runtime::pjrt_available()) {
+            (Some(rt), true) => {
+                let model = PolicyModel::new(rt.clone(), &cfg.arch, cfg.n_e, cfg.seed as i32)?;
+                let venv = VecEnv::new(cfg.game, mode, cfg.n_e, cfg.n_w, cfg.seed, cfg.noop_max);
+                let backend = ArtifactQ::new(model)?;
+                let q = NstepQ::new(backend, venv, opts);
+                self.drive_nstep_q(q, mode, with_logging)
+            }
+            _ => {
+                log::info!("nstep-q: no PJRT backend; using the host linear-Q fallback");
+                let q = crate::algo::nstep_q::host_nstep_q(cfg, mode);
+                self.drive_nstep_q(q, mode, with_logging)
+            }
+        }
+    }
+
+    /// The shared off-policy run loop: cycles to the budget, score curve,
+    /// replay counters, checkpoint, Table-1 eval — the same artifacts
+    /// `run_paac` produces, so downstream tooling works unchanged.
+    fn drive_nstep_q<B: QBackend>(
+        &self,
+        mut q: NstepQ<B>,
+        mode: ObsMode,
+        with_logging: bool,
+    ) -> Result<TrainReport> {
+        let cfg = &self.cfg;
+        let mut logger = if with_logging {
+            Some(RunLogger::create(&cfg.out_dir, &cfg.run_name)?)
+        } else {
+            None
+        };
+
+        let mut timestep = 0u64;
+        let mut update = 0u64;
+        let mut score = Ema::new(0.95);
+        let mut have_score = false;
+        let mut curve = Vec::new();
+        let mut episodes = 0usize;
+        let mut diverged = false;
+        let t0 = Instant::now();
+        let deadline = (cfg.max_wall_secs > 0.0)
+            .then(|| std::time::Duration::from_secs_f64(cfg.max_wall_secs));
+
+        while timestep < cfg.max_timesteps {
+            if let Some(d) = deadline {
+                if t0.elapsed() >= d {
+                    break;
+                }
+            }
+            let lr = cfg.lr_at(timestep);
+            let out = q.cycle(lr)?;
+            timestep += out.timesteps;
+            update += 1;
+            episodes += out.finished_returns.len();
+            for r in &out.finished_returns {
+                score.push(*r as f64);
+                have_score = true;
+            }
+            if !out.stats.is_finite() {
+                diverged = true;
+                log::warn!("divergence at update {update}: {:?}", out.stats);
+                if cfg.abort_on_divergence {
+                    break;
+                }
+            }
+            if update % cfg.log_interval.max(1) == 0 {
+                let wall = t0.elapsed().as_secs_f64();
+                let s = if have_score { score.get() as f32 } else { f32::NAN };
+                curve.push(CurvePoint { timestep, wall_secs: wall, score: s });
+                if let Some(l) = logger.as_mut() {
+                    l.log_update(
+                        timestep,
+                        update,
+                        wall,
+                        s,
+                        out.stats.policy_loss,
+                        out.stats.value_loss,
+                        out.stats.entropy,
+                        out.stats.grad_norm,
+                    )?;
+                    l.log_replay(timestep, &q.replay_stats(), q.epsilon())?;
+                }
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+
+        // final checkpoint (same container + location as PAAC's)
+        if with_logging {
+            let ckpt_path = cfg.out_dir.join(&cfg.run_name).join("final.ckpt");
+            let mut ckpt = Checkpoint::new(q.backend.ckpt_arch(), timestep);
+            for (name, dims, data) in q.backend.ckpt_tensors()? {
+                ckpt.push(name, dims, data);
+            }
+            ckpt.save(&ckpt_path)?;
+        }
+
+        // evaluation under the Table-1 protocol (near-greedy actors)
+        let eval = if cfg.eval_episodes > 0 && !diverged {
+            let proto = EvalProtocol {
+                episodes: cfg.eval_episodes,
+                noop_max: cfg.noop_max,
+                ..EvalProtocol::default()
+            };
+            Some(evaluate_q(&q.backend, cfg.game, mode, &proto, cfg.seed, EVAL_EPSILON)?)
+        } else {
+            None
+        };
+
+        let fractions: Vec<(&'static str, f64)> = q
+            .timer
+            .fractions()
+            .into_iter()
+            .map(|(p, f)| (p.name(), f))
+            .collect();
+
+        if let (Some(l), Some(e)) = (logger.as_mut(), eval.as_ref()) {
+            l.log_event(&obj(vec![
+                ("type", Json::Str("final_eval".into())),
+                ("best", Json::Num(e.best as f64)),
+                ("mean", Json::Num(e.mean as f64)),
+            ]))?;
+        }
+
+        Ok(TrainReport {
+            algo: Algo::NstepQ,
+            game: cfg.game.name().to_string(),
+            timesteps: timestep,
+            updates: update,
+            wall_secs: wall,
+            timesteps_per_sec: timestep as f64 / wall.max(1e-9),
+            episodes,
+            final_score: have_score.then(|| score.get() as f32),
+            eval,
+            score_curve: curve,
+            phase_fractions: fractions,
+            staleness: None,
+            diverged,
+        })
+    }
+
     fn run_a3c(&mut self) -> Result<TrainReport> {
+        let rt = self.rt()?;
         let cfg = &self.cfg;
         let mode = self.obs_mode();
         let a3c_cfg = A3cConfig {
@@ -270,7 +457,7 @@ impl Trainer {
             max_wall_secs: cfg.max_wall_secs,
         };
         let (report, params) = train_a3c(
-            self.rt.clone(),
+            rt.clone(),
             &cfg.arch,
             cfg.game,
             mode,
@@ -278,8 +465,7 @@ impl Trainer {
             cfg.max_timesteps,
         )?;
         // evaluation with the trained params
-        let mut model =
-            PolicyModel::new(self.rt.clone(), &cfg.arch, cfg.n_e, cfg.seed as i32)?;
+        let mut model = PolicyModel::new(rt, &cfg.arch, cfg.n_e, cfg.seed as i32)?;
         model.params = params;
         let eval = if cfg.eval_episodes > 0 {
             let proto = EvalProtocol {
@@ -316,12 +502,13 @@ impl Trainer {
     }
 
     fn run_ga3c(&mut self) -> Result<TrainReport> {
+        let rt = self.rt()?;
         let cfg = &self.cfg;
         let mode = self.obs_mode();
         // GA3C's queues need artifacts at their batch sizes; use the
         // sweep-capable tiny matrix (predict batch = train ne = smallest
         // available >= 4) when the configured n_e has no artifact.
-        let available = self.rt.manifest().available_ne(&cfg.arch);
+        let available = rt.manifest().available_ne(&cfg.arch);
         let train_ne = if available.contains(&cfg.n_e) {
             cfg.n_e
         } else {
@@ -342,15 +529,14 @@ impl Trainer {
             max_wall_secs: cfg.max_wall_secs,
         };
         let (report, params) = train_ga3c(
-            self.rt.clone(),
+            rt.clone(),
             &cfg.arch,
             cfg.game,
             mode,
             ga3c_cfg,
             cfg.max_timesteps,
         )?;
-        let mut model =
-            PolicyModel::new(self.rt.clone(), &cfg.arch, cfg.n_e, cfg.seed as i32)?;
+        let mut model = PolicyModel::new(rt, &cfg.arch, cfg.n_e, cfg.seed as i32)?;
         model.params = params;
         let eval = if cfg.eval_episodes > 0 {
             let proto = EvalProtocol {

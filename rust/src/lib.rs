@@ -22,7 +22,9 @@
 //! The crate covers both halves of the policy lifecycle:
 //!
 //! * **Train** — [`coordinator::master::Trainer`] drives PAAC (or the
-//!   A3C/GA3C baselines) to a timestep budget and writes a checkpoint
+//!   A3C/GA3C baselines, or the off-policy n-step Q-learner
+//!   [`algo::nstep_q`] over the experience-[`replay`] subsystem) to a
+//!   timestep budget and writes a checkpoint
 //!   (`runs/<name>/final.ckpt`, the [`runtime::checkpoint`] container).
 //! * **Serve** — [`serve`] loads a checkpointed [`model::PolicyModel`]
 //!   (or a deterministic synthetic stand-in) behind a dynamic
@@ -71,6 +73,7 @@ pub mod envs;
 pub mod error;
 pub mod metrics;
 pub mod model;
+pub mod replay;
 pub mod runtime;
 pub mod serve;
 pub mod util;
@@ -79,12 +82,14 @@ pub mod util;
 /// Convenience re-exports for downstream users.
 pub mod prelude {
     pub use crate::algo::evaluator::{EvalProtocol, EvalReport};
+    pub use crate::algo::nstep_q::{HostLinearQ, NstepQ, QBackend};
     pub use crate::algo::paac::Paac;
     pub use crate::config::{Algo, Config};
     pub use crate::coordinator::master::{TrainReport, Trainer};
     pub use crate::envs::{Action, Env, GameId, ObsMode, VecEnv};
     pub use crate::error::{Error, Result};
     pub use crate::model::PolicyModel;
+    pub use crate::replay::{ReplayBuffer, SampleBatch, SamplerKind};
     pub use crate::runtime::{Artifacts, ParamSet, Runtime};
     pub use crate::serve::{PolicyServer, ServeConfig, Session, StatsSnapshot};
 }

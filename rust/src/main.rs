@@ -1,8 +1,9 @@
 //! PAAC command-line interface.
 //!
 //! ```text
-//! paac train   [--config cfg.toml] [--game pong] [--algo paac|a3c|ga3c]
+//! paac train   [--config cfg.toml] [--game pong] [--algo paac|a3c|ga3c|nstep-q]
 //!              [--n-e 32] [--n-w 8] [--lr 0.0224] [--steps 1000000] ...
+//!              [--replay-cap 20000] [--per] [--n-step 5] [--target-sync 100]
 //! paac eval    --ckpt runs/<name>/final.ckpt [--game pong] [--episodes 30]
 //! paac sweep   [--game breakout] [--steps 200000]       (Figures 3/4 data)
 //! paac inspect [--artifacts artifacts]                  (manifest summary)
@@ -18,6 +19,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use paac::algo::evaluator::{evaluate, random_baseline, EvalProtocol};
+use paac::algo::nstep_q;
 use paac::cli::Cli;
 use paac::config::{Algo, Config, LrSchedule};
 use paac::envs::{GameId, ObsMode};
@@ -27,8 +29,8 @@ use paac::model::PolicyModel;
 use paac::runtime::checkpoint::Checkpoint;
 use paac::runtime::Runtime;
 use paac::serve::{
-    run_remote_clients, ModelBackendFactory, PolicyServer, ServeConfig, StatsSnapshot,
-    SyntheticFactory, TcpFrontend,
+    run_remote_clients, LinearQFactory, ModelBackendFactory, PolicyServer, ServeConfig,
+    StatsSnapshot, SyntheticFactory, TcpFrontend,
 };
 
 fn cli() -> Cli {
@@ -41,7 +43,7 @@ fn cli() -> Cli {
         .subcommand("client", "run synthetic sessions against a remote `paac serve --listen`")
         .flag("config", None, "TOML run config (flags below override it)")
         .flag("game", None, "game id (catch|pong|breakout|...)")
-        .flag("algo", None, "paac | a3c | ga3c")
+        .flag("algo", None, "paac | a3c | ga3c | nstep-q")
         .flag("arch", None, "tiny | nips | nature")
         .flag("n-e", None, "environment instances")
         .flag("n-w", None, "environment workers")
@@ -62,6 +64,10 @@ fn cli() -> Cli {
         .flag("listen", None, "serve over TCP on this address, e.g. 127.0.0.1:0 (serve)")
         .flag("conns", Some("0"), "with --listen: exit after N connections, 0=forever (serve)")
         .flag("connect", None, "server address to run sessions against (client)")
+        .flag("replay-cap", None, "replay capacity in transitions (nstep-q)")
+        .flag("n-step", None, "n-step return horizon of the replay assembler (nstep-q)")
+        .flag("target-sync", None, "updates between target-network copies (nstep-q)")
+        .switch("per", "prioritized replay sampling instead of uniform (nstep-q)")
         .switch("atari", "use the 84x84x4 Atari pipeline (arch nips/nature)")
         .switch("no-anneal", "constant learning rate")
         .switch("quiet", "suppress progress output")
@@ -109,6 +115,18 @@ fn build_config(args: &paac::cli::Args) -> Result<Config> {
     if args.has("no-anneal") {
         cfg.lr_schedule = LrSchedule::Constant;
     }
+    if args.get("replay-cap").is_some() {
+        cfg.replay_capacity = args.usize_of("replay-cap")?;
+    }
+    if args.get("n-step").is_some() {
+        cfg.n_step = args.usize_of("n-step")?;
+    }
+    if args.get("target-sync").is_some() {
+        cfg.target_sync = args.u64_of("target-sync")?;
+    }
+    if args.has("per") {
+        cfg.per = true;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -128,6 +146,17 @@ fn cmd_train(args: &paac::cli::Args) -> Result<()> {
             cfg.lr,
             cfg.max_timesteps
         );
+        if cfg.algo == Algo::NstepQ {
+            println!(
+                "replay: cap={} n_step={} sampler={} eps={}->{} target-sync={}",
+                cfg.replay_capacity,
+                cfg.n_step,
+                if cfg.per { "prioritized" } else { "uniform" },
+                cfg.eps_start,
+                cfg.eps_end,
+                cfg.target_sync
+            );
+        }
     }
     let mut trainer = paac::coordinator::master::Trainer::new(cfg)?;
     let report = trainer.run()?;
@@ -172,6 +201,39 @@ fn cmd_eval(args: &paac::cli::Args) -> Result<()> {
     let cfg = build_config(args)?;
     let ckpt_path = args.str_of("ckpt")?;
     let ckpt = Checkpoint::load(std::path::Path::new(&ckpt_path))?;
+    // host linear-Q checkpoints (off-policy training without a PJRT
+    // backend) evaluate without artifacts or a runtime
+    if ckpt.arch == nstep_q::HOST_LINEAR_ARCH {
+        let q = nstep_q::HostLinearQ::from_checkpoint(&ckpt)?;
+        let mode = if cfg.atari_mode { ObsMode::Atari } else { ObsMode::Grid };
+        if q.obs_len() != mode.obs_len() {
+            return Err(Error::config(format!(
+                "checkpoint serves {} obs floats but mode {:?} produces {}",
+                q.obs_len(),
+                mode,
+                mode.obs_len()
+            )));
+        }
+        let proto = EvalProtocol {
+            episodes: args.usize_of("episodes")?,
+            noop_max: cfg.noop_max,
+            ..EvalProtocol::default()
+        };
+        let report =
+            nstep_q::evaluate_q(&q, cfg.game, mode, &proto, cfg.seed, nstep_q::EVAL_EPSILON)?;
+        let rand = random_baseline(cfg.game, &proto, cfg.seed);
+        println!(
+            "{} (linear-q, step {}): best={:.2} mean={:.2} per-actor={:?} \
+             (random baseline: {:.2})",
+            cfg.game.name(),
+            ckpt.timestep,
+            report.best,
+            report.mean,
+            report.per_actor,
+            rand.best
+        );
+        return Ok(());
+    }
     let rt = Arc::new(Runtime::new(&cfg.artifacts_dir)?);
     let info = rt.manifest().arch(&ckpt.arch)?.clone();
     let mut model = PolicyModel::new(rt.clone(), &ckpt.arch, cfg.n_e, cfg.seed as i32)?;
@@ -307,11 +369,37 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
         .with_shards(args.usize_of("shards")?)
         .with_small_batch(args.usize_of("small-batch")?);
 
-    let server = match args.get("ckpt") {
-        Some(ckpt_path) if paac::runtime::pjrt_available() => {
+    // host linear-Q checkpoints serve without artifacts; load once and
+    // dispatch on the arch tag
+    let loaded_ckpt = match args.get("ckpt") {
+        Some(p) => Some(Checkpoint::load(std::path::Path::new(p))?),
+        None => None,
+    };
+    let is_host = loaded_ckpt
+        .as_ref()
+        .is_some_and(|c| c.arch == nstep_q::HOST_LINEAR_ARCH);
+    let server = match (args.get("ckpt"), loaded_ckpt) {
+        (Some(ckpt_path), Some(ckpt)) if is_host => {
+            let factory = LinearQFactory::from_checkpoint(&ckpt)?;
+            if factory.obs_len() != obs_len {
+                return Err(Error::config(format!(
+                    "checkpoint serves {} obs floats but mode {mode:?} produces {obs_len}",
+                    factory.obs_len()
+                )));
+            }
+            if !quiet {
+                println!(
+                    "serve: checkpoint {ckpt_path} (arch {}, step {})",
+                    nstep_q::HOST_LINEAR_ARCH,
+                    factory.timestep
+                );
+            }
+            PolicyServer::start_pool(&factory, cfg)?
+        }
+        (Some(ckpt_path), Some(ckpt)) if paac::runtime::pjrt_available() => {
             let artifacts = args.str_of("artifacts")?;
-            let (factory, timestep) = ModelBackendFactory::from_checkpoint(
-                std::path::Path::new(ckpt_path),
+            let (factory, timestep) = ModelBackendFactory::from_parts(
+                ckpt,
                 std::path::Path::new(&artifacts),
                 seed as i32,
                 obs_len,
@@ -324,7 +412,7 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
             }
             PolicyServer::start_pool(&factory, cfg)?
         }
-        maybe_ckpt => {
+        (maybe_ckpt, _) => {
             if !quiet {
                 match maybe_ckpt {
                     Some(p) => println!(

@@ -10,7 +10,8 @@ use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
 
 use crate::error::Result;
-use crate::util::json::Json;
+use crate::replay::ReplayStats;
+use crate::util::json::{obj, Json};
 
 /// Columnar CSV writer with a fixed header.
 pub struct CsvWriter {
@@ -111,6 +112,25 @@ impl RunLogger {
     pub fn log_event(&mut self, event: &Json) -> Result<()> {
         self.jsonl.record(event)
     }
+
+    /// Replay-store counters (occupancy, throughput, sample age) plus the
+    /// current exploration rate — one `"replay"` record in `events.jsonl`
+    /// per log interval of an off-policy run.
+    pub fn log_replay(&mut self, timestep: u64, stats: &ReplayStats, epsilon: f32) -> Result<()> {
+        self.jsonl.record(&obj(vec![
+            ("type", Json::Str("replay".into())),
+            ("timestep", Json::Num(timestep as f64)),
+            ("occupancy", Json::Num(stats.occupancy as f64)),
+            ("capacity", Json::Num(stats.capacity as f64)),
+            ("fill", Json::Num(stats.fill())),
+            ("frames_pushed", Json::Num(stats.frames_pushed as f64)),
+            ("transitions", Json::Num(stats.transitions_assembled as f64)),
+            ("samples_drawn", Json::Num(stats.samples_drawn as f64)),
+            ("last_mean_age", Json::Num(stats.last_mean_age)),
+            ("mean_age", Json::Num(stats.mean_age)),
+            ("epsilon", Json::Num(epsilon as f64)),
+        ]))
+    }
 }
 
 #[cfg(test)]
@@ -150,6 +170,30 @@ mod tests {
         for l in lines {
             assert!(Json::parse(l).is_ok());
         }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn replay_record_round_trips_with_counters() {
+        let dir = tmpdir("replay");
+        let mut rl = RunLogger::create(&dir, "qrun").unwrap();
+        let stats = ReplayStats {
+            occupancy: 128,
+            capacity: 1024,
+            frames_pushed: 640,
+            transitions_assembled: 500,
+            samples_drawn: 160,
+            last_mean_age: 12.5,
+            mean_age: 10.0,
+        };
+        rl.log_replay(3200, &stats, 0.7).unwrap();
+        let text = std::fs::read_to_string(dir.join("qrun/events.jsonl")).unwrap();
+        let rec = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(rec.get("type").unwrap().as_str(), Some("replay"));
+        assert_eq!(rec.get("occupancy").unwrap().as_usize(), Some(128));
+        assert_eq!(rec.get("fill").unwrap().as_f64(), Some(0.125));
+        assert_eq!(rec.get("samples_drawn").unwrap().as_usize(), Some(160));
+        assert!((rec.get("epsilon").unwrap().as_f64().unwrap() - 0.7).abs() < 1e-6);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

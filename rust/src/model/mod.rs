@@ -148,6 +148,20 @@ impl PolicyModel {
         self.run_forward(&self.forward_exe, &lit)
     }
 
+    /// Batched evaluation with an explicit parameter set (the n-step
+    /// Q-learner's target network bootstrap).
+    pub fn forward_with(&self, params: &ParamSet, obs_batch: &[f32]) -> Result<ForwardOut> {
+        let lit = self.obs_literal(obs_batch, self.n_e)?;
+        let mut inputs: Vec<&xla::Literal> = params.params.iter().collect();
+        inputs.push(&lit);
+        let out = self.forward_exe.run(&inputs)?;
+        Ok(ForwardOut {
+            probs: out[0].to_vec::<f32>()?,
+            values: out[1].to_vec::<f32>()?,
+            actions: self.actions,
+        })
+    }
+
     /// Single-observation evaluation (evaluator / A3C actors).
     pub fn forward1(&self, obs: &[f32]) -> Result<ForwardOut> {
         let lit = self.obs_literal(obs, 1)?;

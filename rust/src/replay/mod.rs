@@ -1,0 +1,66 @@
+//! Experience replay — the off-policy half of the paper's
+//! "algorithm-agnostic" claim.
+//!
+//! The PAAC trainer consumes each `n_e x t_max` rollout once and discards
+//! it. This subsystem retains the same batched vec-env step stream in a
+//! fixed-capacity **transition store** and lets a learner revisit it:
+//!
+//! ```text
+//!  VecEnv step stream (obs, a, r, done per env, per step)
+//!        │ stage / commit (same rhythm as RolloutBuffer)
+//!        ▼
+//!  ReplayRing ── per-env frame lanes (obs stored once per step) ──┐
+//!        │ n-step assembler: (s_t, a_t, R_t^(n), s_{t+len}, done) │
+//!        ▼                                                        │
+//!  sampler ── Uniform | Prioritized (sum tree, IS weights) ◀──────┘
+//!        │ SampleBatch (flat train-artifact layout)
+//!        ▼
+//!  n-step Q learner (algo::nstep_q) — target net, epsilon-greedy actors
+//! ```
+//!
+//! The architecture follows Nair et al. 2015 (*Massively Parallel Methods
+//! for Deep Reinforcement Learning*): parallel actors feed one replay
+//! memory, a single synchronous learner samples from it. Assembly
+//! truncates n-step windows at episode boundaries with exactly the
+//! semantics of [`crate::algo::returns::nstep_returns_into`]
+//! (property-tested against it), and prioritized sampling implements
+//! proportional PER (Schaul et al. 2016) over a [`sumtree::SumTree`].
+
+pub mod ring;
+pub mod sampler;
+pub mod sumtree;
+
+pub use ring::{ReplayRing, TransitionMeta};
+pub use sampler::{ReplayBuffer, SampleBatch, SamplerKind};
+pub use sumtree::SumTree;
+
+/// Occupancy / throughput / sample-age counters, logged to the run's
+/// `events.jsonl` by the coordinator (see `metrics::RunLogger`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ReplayStats {
+    /// Currently sampleable transitions.
+    pub occupancy: usize,
+    /// Total transition slots (n_e * lane capacity).
+    pub capacity: usize,
+    /// Frames ever pushed (monotone).
+    pub frames_pushed: u64,
+    /// Transitions ever assembled (monotone).
+    pub transitions_assembled: u64,
+    /// Transitions ever sampled (monotone).
+    pub samples_drawn: u64,
+    /// Mean sample age (frames between record and draw) of the last batch.
+    pub last_mean_age: f64,
+    /// Running mean sample age over the whole run.
+    pub mean_age: f64,
+}
+
+impl ReplayStats {
+    /// Occupancy as a fraction of capacity.
+    pub fn fill(&self) -> f64 {
+        if self.capacity == 0 {
+            0.0
+        } else {
+            self.occupancy as f64 / self.capacity as f64
+        }
+    }
+}

@@ -1,0 +1,513 @@
+//! The transition store: a fixed-capacity ring buffer of environment
+//! frames with contiguous per-env lanes, plus the n-step assembler that
+//! turns the frame stream into Q-learning transitions.
+//!
+//! ## Layout
+//!
+//! Each of the `n_e` environments owns a contiguous **lane** of
+//! `lane_cap` frame slots; frame `t` of env `e` lives at slot
+//! `e * lane_cap + (t % lane_cap)`. A frame is exactly what the PAAC
+//! rollout records per timestep: the observation the policy saw, the
+//! action taken, and the reward/done observed after the step. Because
+//! consecutive frames of one env share a lane, an n-step window is `n+1`
+//! adjacent slots — the (frame-stacked) observations are stored **once**,
+//! not duplicated per window.
+//!
+//! ## Assembly
+//!
+//! The assembler is the off-policy twin of [`crate::algo::returns`]: as
+//! frames arrive it emits one transition per frame `t`,
+//!
+//! ```text
+//! (s_t, a_t, R_t^{(n)}, s_{t+len}, done, len)
+//! R_t^{(n)} = sum_{i=0}^{len-1} gamma^i r_{t+i}
+//! ```
+//!
+//! where `len = n` and `done = false` when frames `t..t+n` complete
+//! without a terminal (target `R + gamma^n * V(s_{t+n})`), or the window
+//! truncates at an episode boundary: a done at frame `t+k` (k < n) emits
+//! `len = k+1`, `done = true`, and no bootstrap — exactly the
+//! `R_t = r_t + gamma * R_{t+1} * (1 - done_t)` recursion of
+//! [`crate::algo::returns::nstep_returns_into`], property-tested against
+//! it below.
+//!
+//! ## Eviction
+//!
+//! Overwriting frame `t` (the ring wrapped) invalidates the transition
+//! that starts at `t`; the store reports the freed slot so a prioritized
+//! sampler can zero its mass. Valid transitions per lane therefore form
+//! the contiguous window `[pushed - lane_cap, frontier)`.
+
+/// Per-transition metadata returned by [`ReplayRing::read`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TransitionMeta {
+    pub action: i32,
+    /// n-step discounted reward sum `R_t^{(len)}`.
+    pub reward: f32,
+    /// Effective window length (== n_step unless episode-truncated).
+    pub len: usize,
+    /// Whether the episode ended inside the window (masks the bootstrap).
+    pub done: bool,
+}
+
+/// Fixed-capacity per-env-lane frame ring + n-step transition assembler.
+pub struct ReplayRing {
+    n_e: usize,
+    obs_len: usize,
+    n_step: usize,
+    gamma: f32,
+    lane_cap: usize,
+    // -- frame ring, lane-major: slot = e * lane_cap + (t % lane_cap) --
+    obs: Vec<f32>,
+    actions: Vec<i32>,
+    rewards: Vec<f32>,
+    dones: Vec<bool>,
+    /// Frames pushed per lane (monotone; the next frame index).
+    pushed: Vec<u64>,
+    staged: bool,
+    // -- assembled transitions, same slot addressing (dense in t) --
+    t_reward: Vec<f32>,
+    t_len: Vec<u8>,
+    t_done: Vec<bool>,
+    /// Transitions assembled per lane (every t < frontier has one).
+    frontier: Vec<u64>,
+    // -- events from the last stage/commit pair --
+    emitted: Vec<usize>,
+    evicted: Vec<usize>,
+    frames_total: u64,
+    transitions_total: u64,
+}
+
+impl ReplayRing {
+    /// `capacity` is the total transition capacity; each env lane gets
+    /// `capacity / n_e` slots and must fit more than one full n-step
+    /// window.
+    pub fn new(capacity: usize, n_e: usize, obs_len: usize, n_step: usize, gamma: f32) -> Self {
+        assert!(n_e >= 1 && obs_len >= 1 && n_step >= 1);
+        // window lengths are stored as u8
+        assert!(n_step <= u8::MAX as usize, "n_step {n_step} exceeds 255");
+        assert!((0.0..=1.0).contains(&gamma));
+        let lane_cap = capacity / n_e;
+        assert!(
+            lane_cap > n_step + 1,
+            "replay capacity {capacity} too small: n_e={n_e} lanes of {lane_cap} \
+             cannot hold an n_step={n_step} window (need capacity > n_e * (n_step + 2))"
+        );
+        let slots = n_e * lane_cap;
+        ReplayRing {
+            n_e,
+            obs_len,
+            n_step,
+            gamma,
+            lane_cap,
+            obs: vec![0.0; slots * obs_len],
+            actions: vec![0; slots],
+            rewards: vec![0.0; slots],
+            dones: vec![false; slots],
+            pushed: vec![0; n_e],
+            staged: false,
+            t_reward: vec![0.0; slots],
+            t_len: vec![0; slots],
+            t_done: vec![false; slots],
+            frontier: vec![0; n_e],
+            emitted: Vec::new(),
+            evicted: Vec::new(),
+            frames_total: 0,
+            transitions_total: 0,
+        }
+    }
+
+    pub fn n_e(&self) -> usize {
+        self.n_e
+    }
+
+    pub fn obs_len(&self) -> usize {
+        self.obs_len
+    }
+
+    pub fn n_step(&self) -> usize {
+        self.n_step
+    }
+
+    pub fn lane_cap(&self) -> usize {
+        self.lane_cap
+    }
+
+    /// Total transition slots (n_e * lane_cap; <= requested capacity).
+    pub fn capacity(&self) -> usize {
+        self.n_e * self.lane_cap
+    }
+
+    /// Global slot index of lane `e`'s frame/transition `t` — the ONE
+    /// place the lane-addressing formula lives (the sampler layer maps
+    /// sum-tree slots through this too).
+    pub(crate) fn slot(&self, e: usize, t: u64) -> usize {
+        e * self.lane_cap + (t % self.lane_cap as u64) as usize
+    }
+
+    /// Stage the pre-step half of one vec-env timestep: the observation
+    /// batch the policy saw (env-major, as produced by `VecEnv`) and the
+    /// actions chosen from it. Must be followed by [`ReplayRing::commit`]
+    /// once the step's rewards/dones are known — the same stage/commit
+    /// rhythm as `RolloutBuffer`, so the learner consumes the identical
+    /// step stream PAAC does.
+    pub fn stage(&mut self, obs_batch: &[f32], actions: &[usize]) {
+        assert!(!self.staged, "stage called twice without a commit");
+        debug_assert_eq!(obs_batch.len(), self.n_e * self.obs_len);
+        debug_assert_eq!(actions.len(), self.n_e);
+        self.emitted.clear();
+        self.evicted.clear();
+        let cap = self.lane_cap as u64;
+        for e in 0..self.n_e {
+            let t = self.pushed[e];
+            // the frame about to be overwritten carries the transition
+            // occupying the same slot out of the valid window
+            if t >= cap {
+                let old_t = t - cap;
+                if old_t < self.frontier[e] {
+                    let s = self.slot(e, old_t);
+                    self.evicted.push(s);
+                }
+            }
+            let s = self.slot(e, t);
+            self.obs[s * self.obs_len..(s + 1) * self.obs_len]
+                .copy_from_slice(&obs_batch[e * self.obs_len..(e + 1) * self.obs_len]);
+            self.actions[s] = actions[e] as i32;
+        }
+        self.staged = true;
+    }
+
+    /// Record the staged timestep's outcome and run the assembler.
+    pub fn commit(&mut self, rewards: &[f32], dones: &[bool]) {
+        assert!(self.staged, "commit without a staged timestep");
+        debug_assert_eq!(rewards.len(), self.n_e);
+        debug_assert_eq!(dones.len(), self.n_e);
+        for e in 0..self.n_e {
+            let t = self.pushed[e];
+            let s = self.slot(e, t);
+            self.rewards[s] = rewards[e];
+            self.dones[s] = dones[e];
+            self.pushed[e] = t + 1;
+            self.frames_total += 1;
+            self.assemble(e, dones[e]);
+        }
+        self.staged = false;
+    }
+
+    fn assemble(&mut self, e: usize, done_now: bool) {
+        let n = self.n_step as u64;
+        // full windows: frames t .. t+n all present, no terminal inside
+        // (a terminal would have advanced the frontier past t already)
+        while self.frontier[e] + n < self.pushed[e] {
+            self.emit(e, self.n_step, false);
+        }
+        // an episode boundary truncates every still-open window
+        if done_now {
+            while self.frontier[e] < self.pushed[e] {
+                let len = (self.pushed[e] - self.frontier[e]) as usize;
+                self.emit(e, len.min(self.n_step), true);
+            }
+        }
+    }
+
+    fn emit(&mut self, e: usize, len: usize, done: bool) {
+        let t = self.frontier[e];
+        let mut r = 0.0f32;
+        let mut disc = 1.0f32;
+        for i in 0..len as u64 {
+            r += disc * self.rewards[self.slot(e, t + i)];
+            disc *= self.gamma;
+        }
+        let s = self.slot(e, t);
+        self.t_reward[s] = r;
+        self.t_len[s] = len as u8;
+        self.t_done[s] = done;
+        self.frontier[e] = t + 1;
+        self.transitions_total += 1;
+        self.emitted.push(s);
+    }
+
+    /// Slots whose transitions were assembled by the last commit.
+    pub fn emitted_slots(&self) -> &[usize] {
+        &self.emitted
+    }
+
+    /// Slots whose transitions were invalidated by the last stage.
+    pub fn evicted_slots(&self) -> &[usize] {
+        &self.evicted
+    }
+
+    /// The valid transition window `[lo, hi)` of lane `e`.
+    pub fn lane_window(&self, e: usize) -> (u64, u64) {
+        let lo = self.pushed[e].saturating_sub(self.lane_cap as u64);
+        (lo, self.frontier[e])
+    }
+
+    /// Number of currently sampleable transitions.
+    pub fn len(&self) -> usize {
+        (0..self.n_e)
+            .map(|e| {
+                let (lo, hi) = self.lane_window(e);
+                (hi - lo) as usize
+            })
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn frames_pushed(&self) -> u64 {
+        self.frames_total
+    }
+
+    pub fn transitions_assembled(&self) -> u64 {
+        self.transitions_total
+    }
+
+    /// Frames pushed into lane `e` (the lane's logical clock; sample age
+    /// of transition `t` is `pushed - t`).
+    pub fn lane_clock(&self, e: usize) -> u64 {
+        self.pushed[e]
+    }
+
+    /// Resolve a global slot back to the `(env, t)` of its current
+    /// occupant, or `None` if the slot holds no valid transition.
+    pub fn occupant(&self, slot: usize) -> Option<(usize, u64)> {
+        let e = slot / self.lane_cap;
+        if e >= self.n_e {
+            return None;
+        }
+        let residue = (slot % self.lane_cap) as u64;
+        let (lo, hi) = self.lane_window(e);
+        if hi == 0 {
+            return None;
+        }
+        let cap = self.lane_cap as u64;
+        let last = hi - 1;
+        // largest t < hi with t % cap == residue
+        let rem = ((last % cap) + cap - residue) % cap;
+        if rem > last {
+            return None;
+        }
+        let t = last - rem;
+        (t >= lo).then_some((e, t))
+    }
+
+    /// Copy transition `(e, t)`'s observations into the caller's batch
+    /// rows and return its metadata. `t` must lie in the lane's valid
+    /// window. For episode-truncated transitions the next-state row is a
+    /// copy of `s_t` — its bootstrap is masked by `done`, and the slot
+    /// `t + len` may belong to the next episode.
+    pub fn read(
+        &self,
+        e: usize,
+        t: u64,
+        obs_out: &mut [f32],
+        next_out: &mut [f32],
+    ) -> TransitionMeta {
+        let (lo, hi) = self.lane_window(e);
+        debug_assert!(t >= lo && t < hi, "transition ({e}, {t}) outside [{lo}, {hi})");
+        debug_assert_eq!(obs_out.len(), self.obs_len);
+        debug_assert_eq!(next_out.len(), self.obs_len);
+        let s = self.slot(e, t);
+        let meta = TransitionMeta {
+            action: self.actions[s],
+            reward: self.t_reward[s],
+            len: self.t_len[s] as usize,
+            done: self.t_done[s],
+        };
+        obs_out.copy_from_slice(&self.obs[s * self.obs_len..(s + 1) * self.obs_len]);
+        let next_t = if meta.done { t } else { t + meta.len as u64 };
+        let ns = self.slot(e, next_t);
+        next_out.copy_from_slice(&self.obs[ns * self.obs_len..(ns + 1) * self.obs_len]);
+        meta
+    }
+
+    /// Discount to apply to the bootstrap of transition meta:
+    /// `gamma^len`, zeroed by an in-window terminal.
+    pub fn bootstrap_discount(&self, meta: &TransitionMeta) -> f32 {
+        if meta.done {
+            0.0
+        } else {
+            self.gamma.powi(meta.len as i32)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::returns::nstep_returns_into;
+    use crate::util::prop;
+
+    /// Drive a single-env, obs_len-1 ring with a scripted (rewards,
+    /// dones) stream; obs for frame t encodes t so reads can be verified.
+    fn push_stream(ring: &mut ReplayRing, rewards: &[f32], dones: &[bool]) {
+        assert_eq!(ring.n_e(), 1);
+        assert_eq!(ring.obs_len(), 1);
+        for (t, (&r, &d)) in rewards.iter().zip(dones.iter()).enumerate() {
+            ring.stage(&[t as f32], &[t % 6]);
+            ring.commit(&[r], &[d]);
+        }
+    }
+
+    #[test]
+    fn full_windows_assemble_with_bootstrap_discount() {
+        let mut ring = ReplayRing::new(16, 1, 2, 3, 0.5);
+        let rewards = [1.0, 2.0, 4.0, 8.0, 16.0];
+        for (t, &r) in rewards.iter().enumerate() {
+            ring.stage(&[t as f32, (t * t) as f32], &[t % 6]);
+            ring.commit(&[r], &[false]);
+        }
+        // frames 0..=4 pushed; windows complete for t=0 (needs frame 3)
+        // and t=1 (needs frame 4)
+        let (lo, hi) = ring.lane_window(0);
+        assert_eq!((lo, hi), (0, 2));
+        let (mut obs, mut next) = (vec![0.0; 2], vec![0.0; 2]);
+        let m = ring.read(0, 0, &mut obs, &mut next);
+        assert_eq!(m.len, 3);
+        assert!(!m.done);
+        // R = 1 + 0.5*2 + 0.25*4 = 3
+        assert!((m.reward - 3.0).abs() < 1e-6);
+        assert_eq!(obs, vec![0.0, 0.0]);
+        assert_eq!(next, vec![3.0, 9.0]); // s_{t+3}
+        assert!((ring.bootstrap_discount(&m) - 0.125).abs() < 1e-7);
+    }
+
+    #[test]
+    fn episode_boundary_truncates_open_windows() {
+        let mut ring = ReplayRing::new(16, 1, 1, 3, 0.5);
+        // done at frame 2: transitions 0..=2 all emit immediately
+        push_stream(&mut ring, &[1.0, 2.0, 4.0], &[false, false, true]);
+        let (_, hi) = ring.lane_window(0);
+        assert_eq!(hi, 3);
+        let (mut o, mut n) = (vec![0.0], vec![0.0]);
+        let m0 = ring.read(0, 0, &mut o, &mut n);
+        assert!(m0.done);
+        assert_eq!(m0.len, 3);
+        assert!((m0.reward - (1.0 + 0.5 * 2.0 + 0.25 * 4.0)).abs() < 1e-6);
+        assert_eq!(ring.bootstrap_discount(&m0), 0.0);
+        let m2 = ring.read(0, 2, &mut o, &mut n);
+        assert_eq!(m2.len, 1);
+        assert!((m2.reward - 4.0).abs() < 1e-6);
+        // truncated transition's next row is its own obs (masked anyway)
+        assert_eq!(o, n);
+    }
+
+    #[test]
+    fn eviction_slides_the_valid_window() {
+        let mut ring = ReplayRing::new(8, 1, 1, 2, 0.9); // lane_cap 8
+        push_stream(&mut ring, &[1.0; 20], &[false; 20]);
+        let (lo, hi) = ring.lane_window(0);
+        assert_eq!(lo, 20 - 8);
+        assert_eq!(hi, 18); // frontier lags by n_step
+        assert_eq!(ring.len(), 6);
+        // pushing one more frame evicts exactly transition t=12's slot
+        let expected_slot = 12 % 8;
+        ring.stage(&[20.0], &[0]);
+        assert_eq!(ring.evicted_slots(), &[expected_slot]);
+        ring.commit(&[1.0], &[false]);
+        assert_eq!(ring.lane_window(0).0, 13);
+    }
+
+    #[test]
+    fn occupant_inverts_slot_addressing() {
+        let mut ring = ReplayRing::new(8, 2, 1, 2, 0.9); // lane_cap 4
+        for t in 0..11 {
+            ring.stage(&[t as f32, -(t as f32)], &[0, 1]);
+            ring.commit(&[0.0, 0.0], &[false, false]);
+        }
+        for e in 0..2 {
+            let (lo, hi) = ring.lane_window(e);
+            for t in lo..hi {
+                let slot = e * 4 + (t % 4) as usize;
+                assert_eq!(ring.occupant(slot), Some((e, t)), "e={e} t={t}");
+            }
+        }
+        // a young ring has unoccupied slots
+        let young = ReplayRing::new(8, 2, 1, 2, 0.9);
+        assert_eq!(young.occupant(0), None);
+        assert_eq!(young.occupant(100), None);
+    }
+
+    #[test]
+    fn counters_track_pushes_and_assembly() {
+        let mut ring = ReplayRing::new(32, 2, 1, 3, 0.99);
+        for t in 0..10 {
+            ring.stage(&[t as f32, t as f32], &[0, 0]);
+            // env 1 terminates at t = 4
+            ring.commit(&[1.0, 1.0], &[false, t == 4]);
+        }
+        assert_eq!(ring.frames_pushed(), 20);
+        // env 0: frontier 10 - 3 = 7; env 1: done at 4 flushed 0..=4,
+        // then frames 5..9 give frontier 7 as well
+        assert_eq!(ring.transitions_assembled(), 14);
+        assert_eq!(ring.lane_clock(0), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "stage called twice")]
+    fn double_stage_panics() {
+        let mut ring = ReplayRing::new(16, 1, 1, 2, 0.9);
+        ring.stage(&[0.0], &[0]);
+        ring.stage(&[0.0], &[0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "too small")]
+    fn undersized_capacity_panics() {
+        let _ = ReplayRing::new(8, 4, 1, 3, 0.9); // 2 slots/lane < n+2
+    }
+
+    /// THE correspondence property (ISSUE acceptance): every assembled
+    /// transition's target decomposition agrees with
+    /// `nstep_returns_into` run over the same window — including
+    /// mid-rollout terminals, gamma = 0, and all-done streams.
+    #[test]
+    fn assembly_matches_nstep_returns_into() {
+        prop::check("replay-assembler-vs-returns", 120, |g| {
+            let t_total = g.usize_in(6, 40);
+            let n = g.usize_in(1, 5);
+            // exercise the degenerate discounts too
+            let gamma = *g.pick(&[0.0, 0.5, 0.95, 0.99]);
+            let all_done = g.bool_with(0.1);
+            let rewards: Vec<f32> = g.vec_f32(t_total, -2.0, 2.0);
+            let dones: Vec<bool> = (0..t_total)
+                .map(|_| all_done || g.bool_with(0.25))
+                .collect();
+            let mut ring = ReplayRing::new(t_total + n + 2, 1, 1, n, gamma);
+            push_stream(&mut ring, &rewards, &dones);
+            let (lo, hi) = ring.lane_window(0);
+            let (mut o, mut nx) = (vec![0.0], vec![0.0]);
+            for t in lo..hi {
+                let m = ring.read(0, t, &mut o, &mut nx);
+                let t = t as usize;
+                let win = m.len;
+                // reference: the recursion over the same window, with a
+                // bootstrap of 1.0 so the gamma^len factor is observable
+                let mut out = vec![0.0; win];
+                nstep_returns_into(
+                    &rewards[t..t + win],
+                    &dones[t..t + win],
+                    1.0,
+                    gamma,
+                    &mut out,
+                );
+                let want = out[0];
+                let got = m.reward + ring.bootstrap_discount(&m);
+                if (got - want).abs() > 1e-4 * want.abs().max(1.0) {
+                    return Err(format!(
+                        "t={t} len={win} done={}: assembler {got} vs returns {want}",
+                        m.done
+                    ));
+                }
+                // a non-truncated window must be terminal-free and full
+                if !m.done && (win != n || dones[t..t + win].iter().any(|&d| d)) {
+                    return Err(format!("t={t}: bad full window"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

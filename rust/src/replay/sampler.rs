@@ -1,0 +1,470 @@
+//! Sampling over the transition store: uniform and proportional
+//! prioritized replay (sum-tree backed), plus the batch gather buffers
+//! the learner feeds straight into the train artifact.
+
+use crate::util::rng::Pcg32;
+
+use super::ring::ReplayRing;
+use super::sumtree::SumTree;
+use super::ReplayStats;
+
+/// Which sampling distribution a [`ReplayBuffer`] uses.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SamplerKind {
+    /// Every valid transition is equally likely.
+    Uniform,
+    /// Proportional prioritized replay (Schaul et al. 2016):
+    /// `P(i) ∝ (|td_i| + eps)^alpha`, corrected by importance weights
+    /// `w_i = (N * P(i))^-beta`, max-normalized per batch.
+    Prioritized { alpha: f32, beta: f32 },
+}
+
+/// Additive priority floor so zero-TD transitions stay sampleable.
+const PRIORITY_EPS: f64 = 1e-3;
+
+/// Preallocated gather buffers for one sampled minibatch, laid out
+/// exactly like the flat train batch (row i = transition i).
+pub struct SampleBatch {
+    pub obs: Vec<f32>,
+    pub actions: Vec<i32>,
+    /// n-step discounted reward sums `R_t^{(len)}`.
+    pub rewards: Vec<f32>,
+    /// Bootstrap discounts `gamma^len * (1 - done)` — multiply the
+    /// target-network value of `next_obs` and add to `rewards` to get
+    /// the full Q target.
+    pub discounts: Vec<f32>,
+    pub next_obs: Vec<f32>,
+    /// Importance-sampling weights (all 1.0 under uniform sampling).
+    pub weights: Vec<f32>,
+    /// Global store slots, for priority updates after the TD pass.
+    pub slots: Vec<usize>,
+    len: usize,
+    obs_len: usize,
+}
+
+impl SampleBatch {
+    pub fn new(capacity: usize, obs_len: usize) -> SampleBatch {
+        SampleBatch {
+            obs: vec![0.0; capacity * obs_len],
+            actions: vec![0; capacity],
+            rewards: vec![0.0; capacity],
+            discounts: vec![0.0; capacity],
+            next_obs: vec![0.0; capacity * obs_len],
+            weights: vec![1.0; capacity],
+            slots: vec![0; capacity],
+            len: 0,
+            obs_len,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// The experience-replay store: ring + assembler + sampler + counters.
+pub struct ReplayBuffer {
+    ring: ReplayRing,
+    kind: SamplerKind,
+    tree: Option<SumTree>,
+    /// Priority assigned to fresh transitions (max p^alpha seen so far),
+    /// so new experience is sampled at least once before being ranked.
+    max_priority: f64,
+    rng: Pcg32,
+    samples_drawn: u64,
+    age_sum: f64,
+    last_mean_age: f64,
+}
+
+impl ReplayBuffer {
+    pub fn new(
+        capacity: usize,
+        n_e: usize,
+        obs_len: usize,
+        n_step: usize,
+        gamma: f32,
+        kind: SamplerKind,
+        seed: u64,
+    ) -> ReplayBuffer {
+        if let SamplerKind::Prioritized { alpha, beta } = kind {
+            assert!((0.0..=1.0).contains(&alpha), "per alpha out of [0,1]");
+            assert!((0.0..=1.0).contains(&beta), "per beta out of [0,1]");
+        }
+        let ring = ReplayRing::new(capacity, n_e, obs_len, n_step, gamma);
+        let tree = matches!(kind, SamplerKind::Prioritized { .. })
+            .then(|| SumTree::new(ring.capacity()));
+        ReplayBuffer {
+            ring,
+            kind,
+            tree,
+            max_priority: 1.0,
+            rng: Pcg32::new(seed, 0x0FFB),
+            samples_drawn: 0,
+            age_sum: 0.0,
+            last_mean_age: 0.0,
+        }
+    }
+
+    pub fn kind(&self) -> SamplerKind {
+        self.kind
+    }
+
+    pub fn ring(&self) -> &ReplayRing {
+        &self.ring
+    }
+
+    /// Number of currently sampleable transitions.
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Stage the pre-step half of a vec-env timestep (see
+    /// [`ReplayRing::stage`]).
+    pub fn stage(&mut self, obs_batch: &[f32], actions: &[usize]) {
+        self.ring.stage(obs_batch, actions);
+    }
+
+    /// Commit the step outcome, assemble transitions, and keep the
+    /// priority mass in sync with assembly/eviction.
+    pub fn commit(&mut self, rewards: &[f32], dones: &[bool]) {
+        self.ring.commit(rewards, dones);
+        if let Some(tree) = &mut self.tree {
+            for &s in self.ring.evicted_slots() {
+                tree.set(s, 0.0);
+            }
+            let fresh = self.max_priority;
+            for &s in self.ring.emitted_slots() {
+                tree.set(s, fresh);
+            }
+        }
+    }
+
+    /// Draw `size` transitions into `batch`. Returns `false` (and leaves
+    /// `batch` empty) when the store holds fewer than `size` valid
+    /// transitions. Sampling is a pure function of the seed and the push
+    /// history — two identically-seeded buffers fed the same stream draw
+    /// the same batches.
+    pub fn sample(&mut self, batch: &mut SampleBatch, size: usize) -> bool {
+        assert!(size * batch.obs_len <= batch.obs.len(), "batch capacity too small");
+        batch.len = 0;
+        if self.ring.len() < size {
+            return false;
+        }
+        let mut age_acc = 0.0f64;
+        match self.kind {
+            SamplerKind::Uniform => self.sample_uniform(batch, size, &mut age_acc),
+            SamplerKind::Prioritized { beta, .. } => {
+                self.sample_prioritized(batch, size, beta, &mut age_acc)
+            }
+        }
+        batch.len = size;
+        self.samples_drawn += size as u64;
+        self.last_mean_age = age_acc / size as f64;
+        self.age_sum += age_acc;
+        true
+    }
+
+    /// Per-lane cumulative transition counts (lanes stay within one
+    /// n-step window of each other, so a count-weighted lane pick is a
+    /// near-uniform split).
+    fn lane_cum(&self) -> (Vec<u64>, u64) {
+        let n_e = self.ring.n_e();
+        let mut cum: Vec<u64> = Vec::with_capacity(n_e);
+        let mut total = 0u64;
+        for e in 0..n_e {
+            let (lo, hi) = self.ring.lane_window(e);
+            total += hi - lo;
+            cum.push(total);
+        }
+        debug_assert!(total <= u32::MAX as u64, "replay too large for u32 draw");
+        (cum, total)
+    }
+
+    /// One uniform draw over the valid windows described by `lane_cum`.
+    fn pick_uniform(&mut self, cum: &[u64], total: u64) -> (usize, u64) {
+        let u = self.rng.below(total as u32) as u64;
+        let e = cum.partition_point(|&c| c <= u);
+        let lane_lo = if e == 0 { 0 } else { cum[e - 1] };
+        let (lo, _) = self.ring.lane_window(e);
+        (e, lo + (u - lane_lo))
+    }
+
+    fn sample_uniform(&mut self, batch: &mut SampleBatch, size: usize, age_acc: &mut f64) {
+        let (cum, total) = self.lane_cum();
+        for i in 0..size {
+            let (e, t) = self.pick_uniform(&cum, total);
+            self.gather(batch, i, e, t, 1.0);
+            *age_acc += (self.ring.lane_clock(e) - t) as f64;
+        }
+    }
+
+    fn sample_prioritized(
+        &mut self,
+        batch: &mut SampleBatch,
+        size: usize,
+        beta: f32,
+        age_acc: &mut f64,
+    ) {
+        let total_n = self.ring.len() as f64;
+        let total_mass = self.tree.as_ref().map(|t| t.total()).unwrap_or(0.0);
+        let mut w_max = 0.0f32;
+        for i in 0..size {
+            // stratified draw: segment i of the total mass
+            let seg = total_mass / size as f64;
+            let mass = (i as f64 + self.rng.next_f64()) * seg;
+            let pick = self
+                .tree
+                .as_ref()
+                .map(|t| t.find(mass))
+                .and_then(|slot| self.ring.occupant(slot).map(|(e, t)| (slot, e, t)));
+            let (e, t, prob) = match pick {
+                Some((slot, e, t))
+                    if self.tree.as_ref().is_some_and(|t| t.get(slot) > 0.0) =>
+                {
+                    let p = self.tree.as_ref().map(|t| t.get(slot)).unwrap_or(0.0);
+                    (e, t, p / total_mass)
+                }
+                // floating-point edge or zero mass: fall back to a
+                // uniform draw so the batch always fills — weighted as
+                // the uniform draw it actually was
+                _ => {
+                    let (e, t) = self.uniform_one();
+                    (e, t, 1.0 / total_n)
+                }
+            };
+            let w = ((total_n * prob.max(1e-12)).powf(-beta as f64)) as f32;
+            self.gather(batch, i, e, t, w);
+            w_max = w_max.max(w);
+            *age_acc += (self.ring.lane_clock(e) - t) as f64;
+        }
+        // max-normalize so weights only scale updates down
+        if w_max > 0.0 {
+            for w in &mut batch.weights[..size] {
+                *w /= w_max;
+            }
+        }
+    }
+
+    /// Rare-path single uniform draw (the prioritized sampler's
+    /// floating-point-edge fallback).
+    fn uniform_one(&mut self) -> (usize, u64) {
+        let (cum, total) = self.lane_cum();
+        self.pick_uniform(&cum, total)
+    }
+
+    fn gather(&self, batch: &mut SampleBatch, i: usize, e: usize, t: u64, weight: f32) {
+        let ol = batch.obs_len;
+        let meta = self.ring.read(
+            e,
+            t,
+            &mut batch.obs[i * ol..(i + 1) * ol],
+            &mut batch.next_obs[i * ol..(i + 1) * ol],
+        );
+        batch.actions[i] = meta.action;
+        batch.rewards[i] = meta.reward;
+        batch.discounts[i] = self.ring.bootstrap_discount(&meta);
+        batch.weights[i] = weight;
+        batch.slots[i] = self.ring.slot(e, t);
+    }
+
+    /// Refresh sampled transitions' priorities from their TD errors
+    /// (no-op under uniform sampling). Slots evicted since the draw keep
+    /// their zero mass.
+    pub fn update_priorities(&mut self, slots: &[usize], td_errors: &[f32]) {
+        let SamplerKind::Prioritized { alpha, .. } = self.kind else {
+            return;
+        };
+        let Some(tree) = &mut self.tree else { return };
+        debug_assert_eq!(slots.len(), td_errors.len());
+        for (&s, &td) in slots.iter().zip(td_errors.iter()) {
+            if tree.get(s) <= 0.0 {
+                continue; // evicted or never filled: stay unsampleable
+            }
+            let p = (td.abs() as f64 + PRIORITY_EPS).powf(alpha as f64);
+            tree.set(s, p);
+            self.max_priority = self.max_priority.max(p);
+        }
+    }
+
+    /// Occupancy / throughput / sample-age counters for the metrics log.
+    pub fn stats(&self) -> ReplayStats {
+        ReplayStats {
+            occupancy: self.ring.len(),
+            capacity: self.ring.capacity(),
+            frames_pushed: self.ring.frames_pushed(),
+            transitions_assembled: self.ring.transitions_assembled(),
+            samples_drawn: self.samples_drawn,
+            last_mean_age: self.last_mean_age,
+            mean_age: if self.samples_drawn > 0 {
+                self.age_sum / self.samples_drawn as f64
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(kind: SamplerKind, seed: u64) -> ReplayBuffer {
+        // 2 envs, obs_len 2, n_step 2, gamma 0.5
+        let mut buf = ReplayBuffer::new(64, 2, 2, 2, 0.5, kind, seed);
+        for t in 0..20u64 {
+            let tf = t as f32;
+            buf.stage(&[tf, tf + 0.5, -tf, -tf - 0.5], &[(t % 6) as usize, ((t + 1) % 6) as usize]);
+            // env 1 terminates every 7th step
+            buf.commit(&[1.0, -1.0], &[false, t % 7 == 6]);
+        }
+        buf
+    }
+
+    #[test]
+    fn uniform_sampling_is_seed_deterministic() {
+        let mut a = filled(SamplerKind::Uniform, 42);
+        let mut b = filled(SamplerKind::Uniform, 42);
+        let mut c = filled(SamplerKind::Uniform, 43);
+        let mut ba = SampleBatch::new(16, 2);
+        let mut bb = SampleBatch::new(16, 2);
+        let mut bc = SampleBatch::new(16, 2);
+        for _ in 0..5 {
+            assert!(a.sample(&mut ba, 16));
+            assert!(b.sample(&mut bb, 16));
+            assert!(c.sample(&mut bc, 16));
+            assert_eq!(ba.slots, bb.slots);
+            assert_eq!(ba.obs, bb.obs);
+            assert_eq!(ba.rewards, bb.rewards);
+        }
+        // a different seed draws a different stream
+        assert_ne!(ba.slots, bc.slots);
+    }
+
+    #[test]
+    fn sample_reports_underfill() {
+        let mut buf = ReplayBuffer::new(64, 2, 2, 2, 0.5, SamplerKind::Uniform, 1);
+        let mut batch = SampleBatch::new(8, 2);
+        assert!(!buf.sample(&mut batch, 8));
+        assert!(batch.is_empty());
+        // push 3 steps: 2 transitions assembled per lane minus window lag
+        for t in 0..3u64 {
+            let tf = t as f32;
+            buf.stage(&[tf, tf, tf, tf], &[0, 0]);
+            buf.commit(&[0.0, 0.0], &[false, false]);
+        }
+        assert_eq!(buf.len(), 2); // frontier = 3 - n_step per lane
+        assert!(!buf.sample(&mut batch, 8));
+        assert!(buf.sample(&mut batch, 2));
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn uniform_weights_are_one_and_targets_decompose() {
+        let mut buf = filled(SamplerKind::Uniform, 3);
+        let mut batch = SampleBatch::new(32, 2);
+        assert!(buf.sample(&mut batch, 32));
+        for i in 0..32 {
+            assert_eq!(batch.weights[i], 1.0);
+            let d = batch.discounts[i];
+            // gamma=0.5, n=2: full windows discount 0.25, truncated 0
+            assert!(d == 0.25 || d == 0.0, "discount {d}");
+            // env 0 never terminates and always rewards +1: R = 1.5
+            if batch.rewards[i] > 0.0 {
+                assert!((batch.rewards[i] - 1.5).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn prioritized_draws_follow_priorities() {
+        let kind = SamplerKind::Prioritized { alpha: 1.0, beta: 0.0 };
+        let mut buf = filled(kind, 7);
+        // crank one slot's priority way up
+        let mut batch = SampleBatch::new(8, 2);
+        assert!(buf.sample(&mut batch, 8));
+        let hot = batch.slots[0];
+        buf.update_priorities(&[hot], &[1000.0]);
+        let mut hot_hits = 0usize;
+        let mut draws = 0usize;
+        for _ in 0..200 {
+            assert!(buf.sample(&mut batch, 8));
+            for i in 0..8 {
+                draws += 1;
+                if batch.slots[i] == hot {
+                    hot_hits += 1;
+                }
+            }
+        }
+        // the hot slot holds ~97% of the mass (1000 vs ~35 * ~1)
+        assert!(
+            hot_hits as f64 / draws as f64 > 0.5,
+            "hot slot drawn {hot_hits}/{draws}"
+        );
+    }
+
+    #[test]
+    fn prioritized_weights_are_max_normalized_and_favor_rare() {
+        let kind = SamplerKind::Prioritized { alpha: 1.0, beta: 1.0 };
+        let mut buf = filled(kind, 11);
+        let mut batch = SampleBatch::new(16, 2);
+        assert!(buf.sample(&mut batch, 16));
+        let hot = batch.slots[0];
+        buf.update_priorities(&[hot], &[50.0]);
+        assert!(buf.sample(&mut batch, 16));
+        let mut w_max = 0.0f32;
+        for i in 0..16 {
+            assert!(batch.weights[i] > 0.0 && batch.weights[i] <= 1.0 + 1e-6);
+            w_max = w_max.max(batch.weights[i]);
+            if batch.slots[i] == hot {
+                // the over-sampled transition gets the smallest weight
+                assert!(batch.weights[i] < 0.5, "hot weight {}", batch.weights[i]);
+            }
+        }
+        assert!((w_max - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn evicted_slots_lose_their_mass() {
+        let kind = SamplerKind::Prioritized { alpha: 0.6, beta: 0.4 };
+        // tiny store: 2 lanes of 8
+        let mut buf = ReplayBuffer::new(16, 2, 1, 2, 0.9, kind, 5);
+        for t in 0..40u64 {
+            buf.stage(&[t as f32, t as f32], &[0, 0]);
+            buf.commit(&[1.0, 1.0], &[false, false]);
+        }
+        // every live slot maps back to a valid occupant; sampling only
+        // returns transitions inside the valid windows
+        let mut batch = SampleBatch::new(8, 1);
+        for _ in 0..50 {
+            assert!(buf.sample(&mut batch, 8));
+            for i in 0..8 {
+                let (e, t) = buf.ring().occupant(batch.slots[i]).expect("sampled slot live");
+                let (lo, hi) = buf.ring().lane_window(e);
+                assert!(t >= lo && t < hi);
+            }
+        }
+    }
+
+    #[test]
+    fn stats_count_age_and_volume() {
+        let mut buf = filled(SamplerKind::Uniform, 9);
+        let s0 = buf.stats();
+        assert_eq!(s0.frames_pushed, 40);
+        assert!(s0.occupancy > 0 && s0.occupancy <= s0.capacity);
+        assert_eq!(s0.samples_drawn, 0);
+        let mut batch = SampleBatch::new(8, 2);
+        assert!(buf.sample(&mut batch, 8));
+        let s1 = buf.stats();
+        assert_eq!(s1.samples_drawn, 8);
+        assert!(s1.last_mean_age >= 1.0, "age {}", s1.last_mean_age);
+        assert!(s1.mean_age > 0.0);
+    }
+}

@@ -1,0 +1,152 @@
+//! Sum tree — the sampling structure behind proportional prioritized
+//! replay (Schaul et al. 2016, "Prioritized Experience Replay").
+//!
+//! A complete binary tree whose leaves hold per-slot priorities and whose
+//! internal nodes hold subtree sums; sampling a prefix mass descends from
+//! the root in O(log n), and updating one leaf refreshes its ancestor
+//! path in O(log n). Priorities are stored as `f64` so millions of
+//! small-float updates cannot drift the root total far from the true sum.
+
+/// Fixed-capacity sum tree over `n` slots (leaves padded to a power of
+/// two; padding leaves stay at priority zero and are never returned).
+pub struct SumTree {
+    /// Number of addressable slots.
+    n: usize,
+    /// Leaf count, `n` rounded up to a power of two.
+    size: usize,
+    /// 1-indexed heap layout: `tree[1]` is the root, leaf `i` lives at
+    /// `size + i`.
+    tree: Vec<f64>,
+}
+
+impl SumTree {
+    pub fn new(n: usize) -> SumTree {
+        assert!(n >= 1, "sum tree needs at least one slot");
+        let size = n.next_power_of_two();
+        SumTree { n, size, tree: vec![0.0; 2 * size] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Total priority mass (the root).
+    pub fn total(&self) -> f64 {
+        self.tree[1]
+    }
+
+    /// Priority currently stored at `slot`.
+    pub fn get(&self, slot: usize) -> f64 {
+        debug_assert!(slot < self.n);
+        self.tree[self.size + slot]
+    }
+
+    /// Set `slot`'s priority and refresh the ancestor sums.
+    pub fn set(&mut self, slot: usize, priority: f64) {
+        debug_assert!(slot < self.n, "slot {slot} out of range {}", self.n);
+        debug_assert!(priority >= 0.0 && priority.is_finite());
+        let mut pos = self.size + slot;
+        self.tree[pos] = priority;
+        pos /= 2;
+        while pos >= 1 {
+            self.tree[pos] = self.tree[2 * pos] + self.tree[2 * pos + 1];
+            if pos == 1 {
+                break;
+            }
+            pos /= 2;
+        }
+    }
+
+    /// Find the slot whose cumulative-priority interval contains `mass`
+    /// (`0 <= mass < total()`). Out-of-range masses clamp to the last
+    /// slot; callers should still treat a zero-priority result as a miss
+    /// (possible through floating-point edge rounding).
+    pub fn find(&self, mass: f64) -> usize {
+        let mut mass = mass.max(0.0);
+        let mut pos = 1usize;
+        while pos < self.size {
+            let left = 2 * pos;
+            if mass < self.tree[left] {
+                pos = left;
+            } else {
+                mass -= self.tree[left];
+                pos = left + 1;
+            }
+        }
+        (pos - self.size).min(self.n - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn totals_track_updates() {
+        let mut t = SumTree::new(5);
+        assert_eq!(t.total(), 0.0);
+        t.set(0, 1.0);
+        t.set(3, 2.5);
+        assert!((t.total() - 3.5).abs() < 1e-12);
+        t.set(0, 0.0);
+        assert!((t.total() - 2.5).abs() < 1e-12);
+        assert_eq!(t.get(3), 2.5);
+        assert_eq!(t.get(1), 0.0);
+    }
+
+    #[test]
+    fn find_maps_mass_to_intervals() {
+        let mut t = SumTree::new(4);
+        t.set(0, 1.0);
+        t.set(1, 2.0);
+        t.set(2, 0.0);
+        t.set(3, 3.0);
+        assert_eq!(t.find(0.5), 0);
+        assert_eq!(t.find(1.5), 1);
+        assert_eq!(t.find(2.999), 1);
+        assert_eq!(t.find(3.0), 3); // slot 2 has zero mass: skipped
+        assert_eq!(t.find(5.9), 3);
+        // clamped past the end
+        assert_eq!(t.find(1e9), 3);
+    }
+
+    #[test]
+    fn sampling_is_proportional() {
+        let mut t = SumTree::new(8);
+        let priorities = [1.0, 0.0, 4.0, 2.0, 0.0, 0.5, 1.5, 1.0];
+        for (i, &p) in priorities.iter().enumerate() {
+            t.set(i, p);
+        }
+        let mut rng = Pcg32::new(9, 9);
+        let mut counts = [0u32; 8];
+        let draws = 100_000;
+        for _ in 0..draws {
+            counts[t.find(rng.next_f64() * t.total())] += 1;
+        }
+        let total: f64 = priorities.iter().sum();
+        for (i, &p) in priorities.iter().enumerate() {
+            let want = p / total;
+            let got = counts[i] as f64 / draws as f64;
+            assert!(
+                (got - want).abs() < 0.01,
+                "slot {i}: got {got:.4}, want {want:.4}"
+            );
+        }
+        assert_eq!(counts[1], 0);
+        assert_eq!(counts[4], 0);
+    }
+
+    #[test]
+    fn non_power_of_two_capacity_clamps() {
+        let mut t = SumTree::new(3);
+        t.set(2, 1.0);
+        assert_eq!(t.find(0.5), 2);
+        // padding leaves (index 3 of the size-4 tree) are unreachable
+        assert_eq!(t.find(100.0), 2);
+    }
+}

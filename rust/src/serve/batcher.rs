@@ -336,6 +336,18 @@ impl ModelBackendFactory {
         expect_obs_len: usize,
     ) -> Result<(ModelBackendFactory, u64)> {
         let ckpt = Checkpoint::load(ckpt_path)?;
+        Self::from_parts(ckpt, artifacts_dir, seed, expect_obs_len)
+    }
+
+    /// Like [`ModelBackendFactory::from_checkpoint`] but over an
+    /// already-loaded container (callers that sniffed the arch tag need
+    /// not parse the tensor payload twice).
+    pub fn from_parts(
+        ckpt: Checkpoint,
+        artifacts_dir: &Path,
+        seed: i32,
+        expect_obs_len: usize,
+    ) -> Result<(ModelBackendFactory, u64)> {
         let rt = Arc::new(Runtime::new(artifacts_dir)?);
         let info = rt.manifest().arch(&ckpt.arch)?.clone();
         let (h, w, c) = info.obs_shape;
@@ -408,6 +420,97 @@ impl BackendFactory for ModelBackendFactory {
         // every shard restores the same parameters: width-transparent
         model.params = self.ckpt.to_param_set(&info.params)?;
         Ok(ModelBackend { model })
+    }
+}
+
+/// Backend over a [`HostLinearQ`](crate::algo::nstep_q::HostLinearQ)
+/// checkpoint (the `host-linear-q` arch written by
+/// `paac train --algo nstep-q` without a PJRT backend): the served
+/// policy is the softmax over the action values, the value output is
+/// `max_a Q(s, a)`. Pure host math, any batch width, row-independent —
+/// so, like [`SyntheticBackend`], it is width-transparent by
+/// construction and the trained off-policy checkpoint serves on every
+/// checkout.
+pub struct LinearQBackend {
+    q: crate::algo::nstep_q::HostLinearQ,
+    batch: usize,
+}
+
+impl InferBackend for LinearQBackend {
+    fn batch_width(&self) -> usize {
+        self.batch
+    }
+
+    fn obs_len(&self) -> usize {
+        self.q.obs_len()
+    }
+
+    fn actions(&self) -> usize {
+        self.q.actions()
+    }
+
+    fn infer(&self, obs: &[f32]) -> Result<ForwardOut> {
+        let (ol, na) = (self.q.obs_len(), self.q.actions());
+        if obs.len() != self.batch * ol {
+            return Err(Error::Shape(format!(
+                "linear-q backend: {} floats, expected {}x{}",
+                obs.len(),
+                self.batch,
+                ol
+            )));
+        }
+        let mut probs = vec![0.0f32; self.batch * na];
+        let mut values = vec![0.0f32; self.batch];
+        for (i, row) in obs.chunks_exact(ol).enumerate() {
+            let out = &mut probs[i * na..(i + 1) * na];
+            self.q.q_into(row, out);
+            values[i] = out.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            softmax_inplace(out);
+        }
+        Ok(ForwardOut { probs, values, actions: na })
+    }
+}
+
+/// Factory stamping out [`LinearQBackend`]s that all serve the same
+/// restored linear-Q parameters.
+pub struct LinearQFactory {
+    q: crate::algo::nstep_q::HostLinearQ,
+    /// Training timestep recorded in the checkpoint (status output).
+    pub timestep: u64,
+}
+
+impl LinearQFactory {
+    pub fn from_checkpoint(ckpt: &Checkpoint) -> Result<LinearQFactory> {
+        let q = crate::algo::nstep_q::HostLinearQ::from_checkpoint(ckpt)?;
+        Ok(LinearQFactory { q, timestep: ckpt.timestep })
+    }
+
+    /// Flattened observation length per served row (inherent mirror of
+    /// the `BackendFactory` accessor, so callers need not import the
+    /// trait).
+    pub fn obs_len(&self) -> usize {
+        self.q.obs_len()
+    }
+}
+
+impl BackendFactory for LinearQFactory {
+    type Backend = LinearQBackend;
+
+    fn obs_len(&self) -> usize {
+        self.q.obs_len()
+    }
+
+    fn actions(&self) -> usize {
+        self.q.actions()
+    }
+
+    fn native_width(&self) -> usize {
+        SYNTHETIC_NATIVE_WIDTH
+    }
+
+    fn build(&self, width: usize, _shard: usize) -> Result<LinearQBackend> {
+        // the same parameters at every width: width-transparent
+        Ok(LinearQBackend { q: self.q.clone(), batch: width.max(1) })
     }
 }
 
@@ -777,5 +880,51 @@ mod tests {
             Duration::ZERO,
         );
         assert_eq!(wide.max_batch(), 4);
+    }
+
+    #[test]
+    fn linear_q_backend_is_width_transparent() {
+        use crate::algo::nstep_q::{HostLinearQ, QBackend, HOST_LINEAR_ARCH};
+        let mut q = HostLinearQ::new(5, 3, 21);
+        // move the weights off init so the test sees trained parameters
+        q.train(&[1.0, -0.5, 0.0, 2.0, 0.3], &[1], &[4.0], 0.3).unwrap();
+        let mut ckpt = Checkpoint::new(HOST_LINEAR_ARCH, 77);
+        for (name, dims, data) in q.to_tensors() {
+            ckpt.push(name, dims, data);
+        }
+        let factory = LinearQFactory::from_checkpoint(&ckpt).unwrap();
+        assert_eq!(factory.timestep, 77);
+        assert_eq!(factory.obs_len(), 5);
+        assert_eq!(factory.actions(), 3);
+
+        let obs: Vec<f32> = (0..5).map(|i| 0.25 * i as f32 - 0.5).collect();
+        // width 1 and width 8 (zero-padded) agree bitwise on the live row
+        let narrow = factory.build(1, 0).unwrap();
+        let wide = factory.build(8, 1).unwrap();
+        let single = narrow.infer(&obs).unwrap();
+        let mut padded = obs.clone();
+        padded.resize(8 * 5, 0.0);
+        let batched = wide.infer(&padded).unwrap();
+        assert_eq!(single.probs, batched.probs[0..3].to_vec());
+        assert_eq!(single.values[0], batched.values[0]);
+        // probs are a softmax: normalized and positive
+        let sum: f32 = single.probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        assert!(single.probs.iter().all(|&p| p > 0.0));
+        // the trained action dominates on its training observation
+        let trained = wide.infer(&{
+            let mut o = vec![1.0, -0.5, 0.0, 2.0, 0.3];
+            o.resize(8 * 5, 0.0);
+            o
+        })
+        .unwrap();
+        assert_eq!(
+            trained.probs[0..3]
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i),
+            Some(1)
+        );
     }
 }

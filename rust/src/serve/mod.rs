@@ -82,8 +82,8 @@ pub mod stats;
 pub mod transport;
 
 pub use batcher::{
-    BackendFactory, Batcher, InferBackend, ModelBackend, ModelBackendFactory, SyntheticBackend,
-    SyntheticFactory,
+    BackendFactory, Batcher, InferBackend, LinearQBackend, LinearQFactory, ModelBackend,
+    ModelBackendFactory, SyntheticBackend, SyntheticFactory,
 };
 pub use queue::{Reply, Request, ShardClass, SubmissionQueue};
 pub use server::{ClientHandle, Connector, PolicyServer, ServeConfig};

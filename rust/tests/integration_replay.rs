@@ -1,0 +1,168 @@
+//! Integration: the off-policy path end to end — `--algo nstep-q`
+//! training through the coordinator on the host linear-Q backend, the
+//! checkpoint lifecycle (train → checkpoint → eval → serve), and
+//! determinism of the whole loop.
+//!
+//! Unlike the artifact-dependent suites, these tests exercise the host
+//! fallback backend and therefore run on a clean checkout (and in CI,
+//! where the vendored stub `xla` crate is linked). When a real PJRT
+//! backend is present the coordinator would pick the artifact backend
+//! instead, so the host-specific assertions skip.
+
+use std::path::PathBuf;
+
+use paac::algo::evaluator::EvalProtocol;
+use paac::algo::nstep_q::{evaluate_q, HostLinearQ, HOST_LINEAR_ARCH};
+use paac::config::{Algo, Config, LrSchedule};
+use paac::coordinator::master::Trainer;
+use paac::envs::{GameId, ObsMode};
+use paac::runtime::checkpoint::Checkpoint;
+use paac::serve::{run_clients, LinearQFactory, PolicyServer, ServeConfig};
+
+fn host_mode() -> bool {
+    if paac::runtime::pjrt_available() {
+        eprintln!("skipping: PJRT backend linked — host-fallback path not in use");
+        return false;
+    }
+    true
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("paac-replay-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A small host-mode run config: missing artifacts dir forces the
+/// fallback, budget sized for seconds not minutes.
+fn small_cfg(out_dir: &PathBuf, steps: u64, per: bool) -> Config {
+    Config {
+        run_name: "qrun".into(),
+        algo: Algo::NstepQ,
+        game: GameId::Catch,
+        n_e: 8,
+        n_w: 2,
+        seed: 3,
+        lr: 0.02,
+        lr_schedule: LrSchedule::Constant,
+        max_timesteps: steps,
+        replay_capacity: 4_000,
+        replay_min: 400,
+        eps_decay_steps: steps / 2,
+        target_sync: 20,
+        per,
+        log_interval: 10,
+        eval_episodes: 5,
+        artifacts_dir: out_dir.join("no-artifacts-here"),
+        out_dir: out_dir.clone(),
+        ..Config::default()
+    }
+}
+
+#[test]
+fn nstep_q_trains_checkpoints_and_evaluates_end_to_end() {
+    if !host_mode() {
+        return;
+    }
+    let dir = tmpdir("e2e");
+    let cfg = small_cfg(&dir, 8_000, false);
+    let mut trainer = Trainer::new(cfg).expect("host fallback trainer");
+    let report = trainer.run().expect("nstep-q run");
+
+    assert_eq!(report.algo, Algo::NstepQ);
+    assert!(report.timesteps >= 8_000);
+    assert!(report.updates > 0);
+    assert!(!report.diverged, "host linear-q diverged");
+    assert!(report.episodes > 0, "catch episodes should finish");
+    // curve has points (log_interval 10 over 200 cycles)
+    assert!(!report.score_curve.is_empty());
+    // every instrumented phase was visited
+    let names: Vec<&str> = report.phase_fractions.iter().map(|(n, _)| *n).collect();
+    for want in ["action_select", "env_step", "batching", "returns", "learn"] {
+        assert!(names.contains(&want), "missing phase {want}");
+    }
+    let eval = report.eval.expect("eval ran");
+    assert!(eval.best.is_finite());
+
+    // -- artifacts on disk --
+    let run_dir = dir.join("qrun");
+    let csv = std::fs::read_to_string(run_dir.join("metrics.csv")).expect("curve csv");
+    assert!(csv.lines().count() >= 2, "metrics.csv has no data rows:\n{csv}");
+    let events = std::fs::read_to_string(run_dir.join("events.jsonl")).expect("events");
+    assert!(events.contains("\"type\":\"replay\""), "no replay records:\n{events}");
+    assert!(events.contains("\"occupancy\""));
+
+    // -- checkpoint loads and evaluates --
+    let ckpt = Checkpoint::load(&run_dir.join("final.ckpt")).expect("checkpoint");
+    assert_eq!(ckpt.arch, HOST_LINEAR_ARCH);
+    assert_eq!(ckpt.timestep, report.timesteps);
+    let q = HostLinearQ::from_checkpoint(&ckpt).expect("restore linear-q");
+    let proto = EvalProtocol::quick();
+    let r = evaluate_q(&q, GameId::Catch, ObsMode::Grid, &proto, 3, 0.05).unwrap();
+    assert!(r.best.is_finite());
+
+    // -- and the same checkpoint serves through the shard pool --
+    let factory = LinearQFactory::from_checkpoint(&ckpt).expect("serve factory");
+    let server = PolicyServer::start_pool(
+        &factory,
+        ServeConfig::new(8, std::time::Duration::from_micros(200)),
+    )
+    .expect("start server");
+    let reports =
+        run_clients(&server, GameId::Catch, ObsMode::Grid, 5, 10, 2, 40).expect("clients");
+    let snap = server.shutdown().expect("shutdown");
+    assert_eq!(reports.iter().map(|r| r.queries).sum::<u64>(), 80);
+    assert_eq!(snap.queries, 80);
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn nstep_q_host_runs_are_bit_deterministic() {
+    if !host_mode() {
+        return;
+    }
+    let run = |tag: &str| {
+        let dir = tmpdir(tag);
+        let cfg = small_cfg(&dir, 4_000, false);
+        let mut trainer = Trainer::new(cfg).unwrap();
+        let report = trainer.run().unwrap();
+        let ckpt = Checkpoint::load(&dir.join("qrun/final.ckpt")).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+        (report.timesteps, report.updates, report.episodes, ckpt)
+    };
+    let (t1, u1, e1, c1) = run("det-a");
+    let (t2, u2, e2, c2) = run("det-b");
+    assert_eq!((t1, u1, e1), (t2, u2, e2));
+    // the checkpoint containers are tensor-for-tensor identical
+    assert_eq!(c1, c2, "host nstep-q runs diverged across identical seeds");
+}
+
+#[test]
+fn nstep_q_prioritized_variant_runs() {
+    if !host_mode() {
+        return;
+    }
+    let dir = tmpdir("per");
+    let cfg = small_cfg(&dir, 4_000, true);
+    let mut trainer = Trainer::new(cfg).unwrap();
+    let report = trainer.run().expect("per run");
+    assert!(report.updates > 0);
+    assert!(!report.diverged);
+    assert!(dir.join("qrun/final.ckpt").exists());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn other_algos_still_require_artifacts() {
+    if !host_mode() {
+        return;
+    }
+    let dir = tmpdir("need-artifacts");
+    let mut cfg = small_cfg(&dir, 1_000, false);
+    cfg.algo = Algo::Paac;
+    // PAAC has no host fallback: a missing artifact dir is a hard error
+    assert!(Trainer::new(cfg).is_err());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
