@@ -2,7 +2,8 @@
 
 CARGO_DIR := rust
 
-.PHONY: verify build test fmt fmt-check lint docs artifacts bench-serve bench-replay clean
+.PHONY: verify build test fmt fmt-check lint docs artifacts bench-serve bench-replay \
+        bench-serve-smoke clean
 
 # Tier-1 gate, exactly: cargo build --release && cargo test -q.
 verify: build test
@@ -41,6 +42,13 @@ bench-serve:
 # Writes rust/BENCH_replay.json next to the printed tables.
 bench-replay:
 	cd $(CARGO_DIR) && cargo bench --bench replay_throughput
+
+# CI-sized smoke of BOTH perf-trajectory benches (tiny query counts):
+# still writes real BENCH_serve.json + BENCH_replay.json, which CI
+# uploads as workflow artifacts so the perf trajectory accumulates.
+bench-serve-smoke:
+	cd $(CARGO_DIR) && PAAC_BENCH_FAST=1 cargo bench --bench serve_throughput
+	cd $(CARGO_DIR) && PAAC_BENCH_FAST=1 cargo bench --bench replay_throughput
 
 clean:
 	cd $(CARGO_DIR) && cargo clean

@@ -33,6 +33,8 @@ fn main() -> Result<()> {
         .flag("deadline-us", Some("1500"), "coalescing deadline in µs")
         .flag("shards", Some("1"), "batcher shards draining the queue")
         .flag("small-batch", Some("0"), "small-batch fast-path shard width (0 = off)")
+        .flag("cache", Some("0"), "response-cache capacity in entries (0 = off)")
+        .switch("no-dedup", "disable in-flight dedup of identical observations")
         .flag("seed", Some("1"), "run seed")
         .parse_or_exit();
 
@@ -48,7 +50,9 @@ fn main() -> Result<()> {
         Duration::from_secs_f64(args.f64_of("deadline-us")?.max(0.0) / 1e6),
     )
     .with_shards(args.usize_of("shards")?)
-    .with_small_batch(args.usize_of("small-batch")?);
+    .with_small_batch(args.usize_of("small-batch")?)
+    .with_cache(args.usize_of("cache")?)
+    .with_no_dedup(args.has("no-dedup"));
 
     println!("== PAAC serve: train -> checkpoint -> serve ==");
 
@@ -111,12 +115,15 @@ fn main() -> Result<()> {
     let snap = server.shutdown()?;
 
     println!();
+    let served = snap.queries + snap.cache.hits;
     println!(
-        "end-to-end: {} queries in {wall:.2}s ({:.0} q/s)",
-        snap.queries,
-        snap.queries as f64 / wall.max(1e-9)
+        "end-to-end: {served} queries in {wall:.2}s ({:.0} q/s)",
+        served as f64 / wall.max(1e-9)
     );
     println!("{}", snap.summary());
+    if snap.cache.hits + snap.cache.misses + snap.cache.coalesced_slots > 0 {
+        println!("{}", snap.cache.summary());
+    }
     let shard_lines = snap.shard_summary();
     if !shard_lines.is_empty() {
         println!("{shard_lines}");

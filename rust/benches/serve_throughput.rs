@@ -4,7 +4,7 @@
 //! Drives the serve subsystem with concurrent synthetic clients against
 //! a backend that charges a fixed per-call dispatch cost plus a small
 //! per-row cost — the cost shape of a real accelerator, where one
-//! batched call amortizes dispatch over the whole batch. Two tables:
+//! batched call amortizes dispatch over the whole batch. Four tables:
 //!
 //! 1. **Micro-batching** — batched queries/sec (width 32, 500µs
 //!    deadline) vs the unbatched baseline (width 1: one device call per
@@ -16,6 +16,12 @@
 //! 3. **Transport** — the same workload through in-process handles vs
 //!    the TCP loopback frontend (`--listen`/`RemoteHandle`): what the
 //!    wire protocol + socket hop cost on top of the batcher.
+//! 4. **Dedup + cache** — a duplicate-heavy workload (8 clients drawing
+//!    observations from a Zipf-distributed pool, the shape of Atari
+//!    reset/frozen frames) served with the redundancy eliminator off
+//!    (`--cache 0 --no-dedup`), with dedup only, and with dedup + a
+//!    response cache: queries/sec, cache hit rate and coalesced slots
+//!    vs the no-cache baseline.
 //!
 //! Run: cargo bench --bench serve_throughput  (PAAC_BENCH_FAST=1 to shorten)
 
@@ -27,6 +33,7 @@ use paac::serve::{
     run_clients, PolicyServer, RemoteHandle, ServeConfig, Session, StatsSnapshot,
     SyntheticFactory, TcpFrontend,
 };
+use paac::util::rng::Pcg32;
 
 /// Emulated device: fixed dispatch overhead + linear per-row cost.
 const DISPATCH: Duration = Duration::from_micros(150);
@@ -42,6 +49,81 @@ fn run_load(clients: usize, queries_per_client: usize, cfg: ServeConfig) -> (f64
     let wall = t0.elapsed().as_secs_f64();
     let snap = server.shutdown().expect("shutdown");
     ((clients * queries_per_client) as f64 / wall.max(1e-9), snap)
+}
+
+/// Duplicate-heavy load: `clients` threads each drawing `queries`
+/// observations from a shared pool of `pool_size` distinct observations
+/// under a Zipf(1.0) rank distribution (rank r drawn with probability
+/// proportional to 1/r — a few hot observations dominate, the tail stays
+/// warm), querying raw handles. Returns end-to-end q/s + the snapshot.
+fn run_dup_load(
+    clients: usize,
+    queries_per_client: usize,
+    pool_size: usize,
+    cfg: ServeConfig,
+) -> (f64, StatsSnapshot) {
+    let obs_len = ObsMode::Grid.obs_len();
+    let factory = SyntheticFactory::new(obs_len, ACTIONS, 7).with_cost(DISPATCH, PER_ROW);
+    let server = PolicyServer::start_pool(&factory, cfg).expect("start shard pool");
+    // the observation pool and the Zipf CDF over its ranks, shared read-only
+    let mut pool_rng = Pcg32::new(99, 0x0B5);
+    let pool: std::sync::Arc<Vec<Vec<f32>>> = std::sync::Arc::new(
+        (0..pool_size)
+            .map(|_| (0..obs_len).map(|_| pool_rng.normal()).collect())
+            .collect(),
+    );
+    let cdf: std::sync::Arc<Vec<f64>> = std::sync::Arc::new({
+        let mut acc = 0.0f64;
+        let weights: Vec<f64> = (1..=pool_size).map(|r| 1.0 / r as f64).collect();
+        let total: f64 = weights.iter().sum();
+        weights
+            .iter()
+            .map(|w| {
+                acc += w / total;
+                acc
+            })
+            .collect()
+    });
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..clients)
+        .map(|c| {
+            let handle = server.connect();
+            let pool = pool.clone();
+            let cdf = cdf.clone();
+            std::thread::spawn(move || {
+                let mut rng = Pcg32::new(31, c as u64);
+                for _ in 0..queries_per_client {
+                    let u = rng.next_f64();
+                    let idx = cdf.partition_point(|&p| p < u).min(pool.len() - 1);
+                    handle.query(&pool[idx]).expect("dup-load query");
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().expect("dup-load client thread");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = server.shutdown().expect("shutdown");
+    ((clients * queries_per_client) as f64 / wall.max(1e-9), snap)
+}
+
+/// One row of the dedup/cache table: throughput, device-rows-per-query
+/// (forward slots paid per query answered; 1.0 with the eliminator off,
+/// lower is better), hit rate and coalesced slots, vs the baseline.
+fn dup_row(table: &mut Table, label: &str, qps: f64, snap: &StatsSnapshot, base_qps: f64) {
+    let total = snap.queries + snap.cache.hits;
+    let rows_per_query =
+        snap.queries.saturating_sub(snap.cache.coalesced_slots) as f64 / total.max(1) as f64;
+    table.row(vec![
+        label.to_string(),
+        format!("{qps:.0}"),
+        format!("{rows_per_query:.2}"),
+        format!("{:.0}%", snap.cache.hit_rate * 100.0),
+        snap.cache.coalesced_slots.to_string(),
+        format!("{:.3}", snap.p50_ms),
+        format!("{:.2}x", qps / base_qps.max(1e-9)),
+    ]);
 }
 
 fn main() {
@@ -228,16 +310,61 @@ fn main() {
         tcp_snap.transport.wire_errors
     );
 
+    // -- table 4: the redundancy eliminator on duplicate-heavy traffic --
+
+    let dup_clients = 8usize;
+    let dup_pool = 32usize;
+    let dup_cfg = ServeConfig::new(width, deadline);
+    let mut dup_table = Table::new(&[
+        "config",
+        "q/s",
+        "device rows/query",
+        "hit rate",
+        "coalesced",
+        "p50 ms",
+        "speedup",
+    ]);
+    let (base_qps, base_snap) =
+        run_dup_load(dup_clients, queries, dup_pool, dup_cfg.with_no_dedup(true));
+    let (dedup_qps, dedup_snap) = run_dup_load(dup_clients, queries, dup_pool, dup_cfg);
+    let (cached_qps, cached_snap) =
+        run_dup_load(dup_clients, queries, dup_pool, dup_cfg.with_cache(1024));
+    dup_row(&mut dup_table, "baseline (--cache 0 --no-dedup)", base_qps, &base_snap, base_qps);
+    dup_row(&mut dup_table, "dedup only", dedup_qps, &dedup_snap, base_qps);
+    dup_row(&mut dup_table, "dedup + cache 1024", cached_qps, &cached_snap, base_qps);
+
+    println!(
+        "\n## Redundancy eliminator: Zipf({dup_pool}-obs pool) duplicate-heavy \
+         workload ({dup_clients} clients)\n"
+    );
+    println!("{}", dup_table.render());
+    println!(
+        "cached run: {} hits / {} misses ({:.0}% hit rate), {} in-flight \
+         duplicates coalesced; identical queries cost one forward — the cache \
+         answers repeats without touching the queue, dedup collapses the \
+         concurrent ones that slip through",
+        cached_snap.cache.hits,
+        cached_snap.cache.misses,
+        cached_snap.cache.hit_rate * 100.0,
+        cached_snap.cache.coalesced_slots
+    );
+
     // -- machine-readable summary (the serve perf trajectory) --
     let mut report = JsonReport::new("serve_throughput");
     report.add_table("micro_batching", &table);
     report.add_table("shard_pool", &shard_table);
     report.add_table("transport", &transport_table);
+    report.add_table("dedup_cache", &dup_table);
     report.add_num("queries_per_client", queries as f64);
     report.add_num("scaling_low_qps", lo);
     report.add_num("scaling_high_qps", hi);
     report.add_num("tcp_qps", tcp_qps);
     report.add_num("inproc_qps", inproc_qps);
+    report.add_num("dup_baseline_qps", base_qps);
+    report.add_num("dup_dedup_qps", dedup_qps);
+    report.add_num("dup_cached_qps", cached_qps);
+    report.add_num("dup_cache_hit_rate", cached_snap.cache.hit_rate);
+    report.add_num("dup_coalesced_slots", cached_snap.cache.coalesced_slots as f64);
     let out = std::path::Path::new("BENCH_serve.json");
     report.write(out).expect("write BENCH_serve.json");
     println!("\nmachine-readable summary written to {}", out.display());

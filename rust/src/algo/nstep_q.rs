@@ -540,6 +540,10 @@ pub struct NstepQ<B: QBackend> {
     rng: Pcg32,
     greedy_buf: Vec<usize>,
     actions_buf: Vec<usize>,
+    /// Gather buffers allocated ONCE here and refilled in place by
+    /// `ReplayBuffer::sample` every update — the flat train-layout Vecs
+    /// are never rebuilt (same pattern as `RolloutBuffer`'s staging; the
+    /// sampler's lane scratch is reused the same way).
     batch: SampleBatch,
     boot_buf: Vec<f32>,
     online_buf: Vec<f32>,

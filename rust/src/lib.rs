@@ -37,7 +37,13 @@
 //!   put the client boundary on the network: `paac serve --listen`
 //!   starts a zero-dependency TCP frontend ([`serve::transport`]) and
 //!   `paac client --connect` drives remote sessions against it with
-//!   bit-identical results. The `paac serve` subcommand and
+//!   bit-identical results. A two-level redundancy eliminator squeezes
+//!   duplicate work out of the hot path: bit-identical in-flight
+//!   observations coalesce into one backend slot (dedup, default on)
+//!   and a versioned response cache ([`serve::cache`], `--cache N`)
+//!   answers repeat queries without touching the queue — both
+//!   semantically transparent because backends are deterministic per
+//!   observation. The `paac serve` subcommand and
 //!   `examples/serve_policy.rs` drive it end-to-end.
 //!
 //! ## Quick start
@@ -91,5 +97,5 @@ pub mod prelude {
     pub use crate::model::PolicyModel;
     pub use crate::replay::{ReplayBuffer, SampleBatch, SamplerKind};
     pub use crate::runtime::{Artifacts, ParamSet, Runtime};
-    pub use crate::serve::{PolicyServer, ServeConfig, Session, StatsSnapshot};
+    pub use crate::serve::{PolicyServer, ResponseCache, ServeConfig, Session, StatsSnapshot};
 }

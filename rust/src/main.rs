@@ -10,6 +10,7 @@
 //! paac serve   [--ckpt runs/<name>/final.ckpt] [--clients 8] [--queries 200]
 //!              [--batch 32] [--deadline-us 2000]        (micro-batched serving)
 //!              [--shards 1] [--small-batch 0]           (batcher shard pool)
+//!              [--cache 0] [--no-dedup]                 (redundancy eliminator)
 //!              [--listen 127.0.0.1:4700] [--conns 0]    (TCP transport frontend)
 //! paac client  --connect HOST:PORT [--clients 8] [--queries 200]
 //!              [--game catch] [--atari]                 (remote synthetic clients)
@@ -61,6 +62,8 @@ fn cli() -> Cli {
         .flag("deadline-us", Some("2000"), "batch coalescing deadline in µs (serve)")
         .flag("shards", Some("1"), "batcher shards draining the queue (serve)")
         .flag("small-batch", Some("0"), "small-batch fast-path shard width, 0=off (serve)")
+        .flag("cache", Some("0"), "response-cache capacity in entries, 0=off (serve)")
+        .switch("no-dedup", "disable in-flight dedup of identical observations (serve)")
         .flag("listen", None, "serve over TCP on this address, e.g. 127.0.0.1:0 (serve)")
         .flag("conns", Some("0"), "with --listen: exit after N connections, 0=forever (serve)")
         .flag("connect", None, "server address to run sessions against (client)")
@@ -367,7 +370,9 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
     let quiet = args.has("quiet");
     let cfg = ServeConfig::new(batch, deadline)
         .with_shards(args.usize_of("shards")?)
-        .with_small_batch(args.usize_of("small-batch")?);
+        .with_small_batch(args.usize_of("small-batch")?)
+        .with_cache(args.usize_of("cache")?)
+        .with_no_dedup(args.has("no-dedup"));
 
     // host linear-Q checkpoints serve without artifacts; load once and
     // dispatch on the arch tag
@@ -437,8 +442,14 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
             ),
             None => format!("{} wide @{}", server.shards(), server.max_batch()),
         };
+        let redundancy = match (server.cache_capacity(), cfg.no_dedup) {
+            (Some(n), false) => format!("cache={n} dedup=on"),
+            (Some(n), true) => format!("cache={n} dedup=off"),
+            (None, false) => "cache=off dedup=on".to_string(),
+            (None, true) => "cache=off dedup=off".to_string(),
+        };
         println!(
-            "serve: game={} mode={:?} shards={pool} deadline={deadline:?}",
+            "serve: game={} mode={:?} shards={pool} deadline={deadline:?} {redundancy}",
             game.name(),
             mode,
         );
@@ -469,6 +480,10 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
         let snap = server.shutdown()?;
         println!("{}", snap.summary());
         println!("{}", snap.transport.summary());
+        let c = snap.cache;
+        if c.hits + c.misses + c.coalesced_slots > 0 {
+            println!("{}", c.summary());
+        }
         let shard_lines = snap.shard_summary();
         if !shard_lines.is_empty() {
             println!("{shard_lines}");
@@ -492,6 +507,10 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
         total_queries as f64 / wall.max(1e-9)
     );
     println!("{}", snap.summary());
+    let c = snap.cache;
+    if c.hits + c.misses + c.coalesced_slots > 0 {
+        println!("{}", c.summary());
+    }
     let shard_lines = snap.shard_summary();
     if !shard_lines.is_empty() {
         println!("{shard_lines}");

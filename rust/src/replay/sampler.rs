@@ -75,6 +75,10 @@ pub struct ReplayBuffer {
     /// so new experience is sampled at least once before being ranked.
     max_priority: f64,
     rng: Pcg32,
+    /// Per-lane cumulative transition counts, refreshed per sample call
+    /// and reused across updates — with the driver-owned [`SampleBatch`]
+    /// this makes the whole sample→gather hot path allocation-free.
+    cum_scratch: Vec<u64>,
     samples_drawn: u64,
     age_sum: f64,
     last_mean_age: f64,
@@ -103,6 +107,7 @@ impl ReplayBuffer {
             tree,
             max_priority: 1.0,
             rng: Pcg32::new(seed, 0x0FFB),
+            cum_scratch: Vec::with_capacity(n_e),
             samples_drawn: 0,
             age_sum: 0.0,
             last_mean_age: 0.0,
@@ -172,35 +177,39 @@ impl ReplayBuffer {
         true
     }
 
-    /// Per-lane cumulative transition counts (lanes stay within one
-    /// n-step window of each other, so a count-weighted lane pick is a
-    /// near-uniform split).
-    fn lane_cum(&self) -> (Vec<u64>, u64) {
+    /// Refresh the per-lane cumulative transition counts into the reused
+    /// scratch buffer and return the total (lanes stay within one n-step
+    /// window of each other, so a count-weighted lane pick is a
+    /// near-uniform split). Reusing the scratch keeps the per-update
+    /// sample path allocation-free — the sampler-side twin of the driver
+    /// allocating its [`SampleBatch`] once and gathering into it.
+    fn refresh_lane_cum(&mut self) -> u64 {
         let n_e = self.ring.n_e();
-        let mut cum: Vec<u64> = Vec::with_capacity(n_e);
+        self.cum_scratch.clear();
         let mut total = 0u64;
         for e in 0..n_e {
             let (lo, hi) = self.ring.lane_window(e);
             total += hi - lo;
-            cum.push(total);
+            self.cum_scratch.push(total);
         }
         debug_assert!(total <= u32::MAX as u64, "replay too large for u32 draw");
-        (cum, total)
+        total
     }
 
-    /// One uniform draw over the valid windows described by `lane_cum`.
-    fn pick_uniform(&mut self, cum: &[u64], total: u64) -> (usize, u64) {
+    /// One uniform draw over the valid windows described by the (fresh)
+    /// scratch from `refresh_lane_cum`.
+    fn pick_uniform(&mut self, total: u64) -> (usize, u64) {
         let u = self.rng.below(total as u32) as u64;
-        let e = cum.partition_point(|&c| c <= u);
-        let lane_lo = if e == 0 { 0 } else { cum[e - 1] };
+        let e = self.cum_scratch.partition_point(|&c| c <= u);
+        let lane_lo = if e == 0 { 0 } else { self.cum_scratch[e - 1] };
         let (lo, _) = self.ring.lane_window(e);
         (e, lo + (u - lane_lo))
     }
 
     fn sample_uniform(&mut self, batch: &mut SampleBatch, size: usize, age_acc: &mut f64) {
-        let (cum, total) = self.lane_cum();
+        let total = self.refresh_lane_cum();
         for i in 0..size {
-            let (e, t) = self.pick_uniform(&cum, total);
+            let (e, t) = self.pick_uniform(total);
             self.gather(batch, i, e, t, 1.0);
             *age_acc += (self.ring.lane_clock(e) - t) as f64;
         }
@@ -256,8 +265,8 @@ impl ReplayBuffer {
     /// Rare-path single uniform draw (the prioritized sampler's
     /// floating-point-edge fallback).
     fn uniform_one(&mut self) -> (usize, u64) {
-        let (cum, total) = self.lane_cum();
-        self.pick_uniform(&cum, total)
+        let total = self.refresh_lane_cum();
+        self.pick_uniform(total)
     }
 
     fn gather(&self, batch: &mut SampleBatch, i: usize, e: usize, t: u64, weight: f32) {
@@ -451,6 +460,49 @@ mod tests {
                 assert!(t >= lo && t < hi);
             }
         }
+    }
+
+    #[test]
+    fn sample_reuses_gather_buffers_across_updates() {
+        // the driver's rhythm: one SampleBatch allocated up front, many
+        // stage/commit/sample cycles — none of the flat train-layout Vecs
+        // may reallocate after the first sample (the gather writes in
+        // place), and the sampler's own lane scratch is reused too
+        let mut buf = filled(SamplerKind::Uniform, 17);
+        let mut batch = SampleBatch::new(16, 2);
+        let ptrs = (
+            batch.obs.as_ptr(),
+            batch.next_obs.as_ptr(),
+            batch.actions.as_ptr(),
+            batch.rewards.as_ptr(),
+            batch.discounts.as_ptr(),
+            batch.weights.as_ptr(),
+            batch.slots.as_ptr(),
+        );
+        assert!(buf.sample(&mut batch, 16));
+        let scratch_ptr = buf.cum_scratch.as_ptr();
+        for t in 20..60u64 {
+            let tf = t as f32;
+            buf.stage(&[tf, tf, -tf, -tf], &[0, 1]);
+            buf.commit(&[0.5, -0.5], &[false, t % 9 == 8]);
+            assert!(buf.sample(&mut batch, 16));
+            assert_eq!(batch.len(), 16);
+        }
+        assert_eq!(
+            buf.cum_scratch.as_ptr(),
+            scratch_ptr,
+            "lane scratch must be reused, not reallocated per sample"
+        );
+        let after = (
+            batch.obs.as_ptr(),
+            batch.next_obs.as_ptr(),
+            batch.actions.as_ptr(),
+            batch.rewards.as_ptr(),
+            batch.discounts.as_ptr(),
+            batch.weights.as_ptr(),
+            batch.slots.as_ptr(),
+        );
+        assert_eq!(after, ptrs, "gather buffers must be reused, not rebuilt");
     }
 
     #[test]

@@ -1,15 +1,31 @@
-//! The dynamic micro-batcher: coalesce, pad, one device call, fan out.
+//! The dynamic micro-batcher: coalesce, dedup, pad, one device call,
+//! fan out.
 //!
 //! Each batcher shard thread drains the shared submission queue (up to
-//! its own batch width or the coalescing deadline, whichever first — see
+//! its own batch width — measured in *unique* observations — or the
+//! coalescing deadline, whichever first; see
 //! [`crate::serve::queue::ShardClass`] for how windows are routed between
-//! shards), copies the live observations into a persistent staging
-//! buffer, zero-pads the dead rows — the same padding/masking idiom as
-//! the GA3C predictor in [`crate::algo::ga3c`] — runs **one** batched
-//! forward, and fans each live row's policy/value back to its requester.
-//! Padding correctness (a live row's output never depends on the fill
-//! level) is property-tested below against the backend's
-//! row-independence.
+//! shards), **collapses bit-identical observations into one backend
+//! input slot** (hash first, exact bit equality second — a collision
+//! costs a slot, never a wrong reply), copies the unique observations
+//! into a persistent staging buffer, zero-pads the dead rows — the same
+//! padding/masking idiom as the GA3C predictor in [`crate::algo::ga3c`]
+//! — runs **one** batched forward, and fans each unique row's
+//! policy/value out to *every* request that submitted that observation.
+//! Because backends are deterministic per observation, the fan-out is
+//! semantically invisible: each duplicate receives exactly the reply it
+//! would have received from its own slot, bit for bit. Padding
+//! correctness (a live row's output never depends on the fill level) is
+//! property-tested below against the backend's row-independence.
+//!
+//! The window hot path recycles its buffers: each claimed request's
+//! observation `Vec` (already staged) goes back to the producers through
+//! the queue's [`BufPool`](crate::util::pool::BufPool)
+//! ([`SubmissionQueue::obs_pool`]) so client handles stop allocating per
+//! query, and the claimed-window vector itself is reused across windows
+//! ([`crate::serve::queue::SubmissionQueue::claim_window_into`]). Reply
+//! probs `Vec`s are the one allocation that must remain — they ship to
+//! the client — and they are exactly actions-sized.
 //!
 //! Shards own their backends: a [`BackendFactory`] builds one
 //! [`InferBackend`] instance **per shard**, each at its own batch width,
@@ -32,7 +48,7 @@ use crate::runtime::Runtime;
 use crate::util::math::softmax_inplace;
 use crate::util::rng::Pcg32;
 
-use super::queue::{Reply, ShardClass, SubmissionQueue};
+use super::queue::{Reply, Request, ShardClass, SubmissionQueue};
 use super::stats::ServeStats;
 
 /// A policy-evaluation backend serving fixed-width batched queries.
@@ -523,12 +539,23 @@ pub struct Batcher<B: InferBackend> {
     shard: usize,
     /// Routing class for the multi-consumer queue drain.
     class: ShardClass,
+    /// Collapse bit-identical observations into shared input slots
+    /// (inherited from the queue so the claim policy and the grouping
+    /// always agree).
+    dedup: bool,
     max_batch: usize,
     max_delay: Duration,
     /// Persistent staging buffer, batch_width x obs_len.
     obs_buf: Vec<f32>,
     /// Scratch for per-request latencies (reused across batches).
     lat_buf: Vec<Duration>,
+    /// The claimed window, recycled across batches.
+    win: Vec<Request>,
+    /// uniq_of[i] = index of the unique row serving window request i.
+    uniq_of: Vec<usize>,
+    /// uniq_first[u] = index of the first window request of unique row u
+    /// (the one whose observation gets staged).
+    uniq_first: Vec<usize>,
 }
 
 impl<B: InferBackend> Batcher<B> {
@@ -567,6 +594,7 @@ impl<B: InferBackend> Batcher<B> {
     ) -> Batcher<B> {
         let width = backend.batch_width();
         let obs_buf = vec![0.0; width * backend.obs_len()];
+        let dedup = queue.dedup();
         Batcher {
             max_batch: max_batch.clamp(1, width),
             backend,
@@ -574,9 +602,13 @@ impl<B: InferBackend> Batcher<B> {
             stats,
             shard,
             class,
+            dedup,
             max_delay,
             obs_buf,
             lat_buf: Vec::new(),
+            win: Vec::new(),
+            uniq_of: Vec::new(),
+            uniq_first: Vec::new(),
         }
     }
 
@@ -592,40 +624,96 @@ impl<B: InferBackend> Batcher<B> {
     /// Process one batch. `Ok(false)` signals orderly shutdown (queue
     /// closed and drained); errors are backend failures and fatal.
     pub fn step(&mut self) -> Result<bool> {
-        let mut reqs = match self.queue.claim_window(self.max_batch, self.max_delay, self.class)
+        if !self
+            .queue
+            .claim_window_into(self.max_batch, self.max_delay, self.class, &mut self.win)
         {
-            None => return Ok(false),
-            Some(r) => r,
-        };
+            return Ok(false);
+        }
         let obs_len = self.backend.obs_len();
         // drop malformed payloads (the public handle validates, but the
         // queue is an open type); one bad client must not kill the server
-        reqs.retain(|r| {
+        let stats = &self.stats;
+        self.win.retain(|r| {
             let ok = r.obs.len() == obs_len;
             if !ok {
-                self.stats.record_rejected();
+                stats.record_rejected();
             }
             ok
         });
-        if reqs.is_empty() {
+        if self.win.is_empty() {
             return Ok(true);
         }
-        // stage live rows, zero-pad the dead tail (GA3C predictor idiom)
-        for (i, r) in reqs.iter().enumerate() {
-            self.obs_buf[i * obs_len..(i + 1) * obs_len].copy_from_slice(&r.obs);
-        }
-        self.obs_buf[reqs.len() * obs_len..].fill(0.0);
 
-        let out = self.backend.infer(&self.obs_buf)?;
-        let now = Instant::now();
-        self.lat_buf.clear();
-        for (i, r) in reqs.iter().enumerate() {
-            let reply = Reply { probs: out.probs_of(i).to_vec(), value: out.values[i] };
-            // a client that hung up mid-flight is not a server error
-            let _ = r.reply.send(reply);
-            self.lat_buf.push(now.saturating_duration_since(r.enqueued));
+        // group bit-identical observations into shared input slots: hash
+        // first, exact bit equality second, so a 64-bit collision costs a
+        // slot (two uniques) instead of ever sharing a wrong reply
+        self.uniq_of.clear();
+        self.uniq_first.clear();
+        if self.dedup {
+            for i in 0..self.win.len() {
+                let mut u = self.uniq_first.len();
+                for (j, &f) in self.uniq_first.iter().enumerate() {
+                    if self.win[f].obs_hash == self.win[i].obs_hash
+                        && self.win[f].obs == self.win[i].obs
+                    {
+                        u = j;
+                        break;
+                    }
+                }
+                if u == self.uniq_first.len() {
+                    self.uniq_first.push(i);
+                }
+                self.uniq_of.push(u);
+            }
+            let coalesced = self.win.len() - self.uniq_first.len();
+            if coalesced > 0 {
+                self.stats.record_coalesced(coalesced);
+            }
+        } else {
+            self.uniq_of.extend(0..self.win.len());
+            self.uniq_first.extend(0..self.win.len());
         }
-        self.stats.record_batch(self.shard, reqs.len(), self.max_batch, &self.lat_buf);
+
+        // stage the unique rows, zero-pad the dead tail (GA3C predictor
+        // idiom), run the device call, fan each row out to its waiters.
+        // One chunk in the common case — the dedup-aware claim keeps
+        // uniques <= width — with the loop covering the shutdown-drain
+        // and hash-collision over-claims
+        let n_uniq = self.uniq_first.len();
+        let mut off = 0;
+        while off < n_uniq {
+            let chunk = (n_uniq - off).min(self.max_batch);
+            for (slot, &first) in self.uniq_first[off..off + chunk].iter().enumerate() {
+                self.obs_buf[slot * obs_len..(slot + 1) * obs_len]
+                    .copy_from_slice(&self.win[first].obs);
+            }
+            self.obs_buf[chunk * obs_len..].fill(0.0);
+
+            let out = self.backend.infer(&self.obs_buf)?;
+            let now = Instant::now();
+            self.lat_buf.clear();
+            for i in 0..self.win.len() {
+                let u = self.uniq_of[i];
+                if u < off || u >= off + chunk {
+                    continue; // this waiter's row is in another chunk
+                }
+                // the staged observation buffer goes back to the
+                // producers through the queue's pool (client handles
+                // reuse it for their next query); the probs Vec must
+                // ship to the client, so it stays an actions-sized alloc
+                let r = &mut self.win[i];
+                self.queue.obs_pool().put(std::mem::take(&mut r.obs));
+                let reply =
+                    Reply { probs: out.probs_of(u - off).to_vec(), value: out.values[u - off] };
+                // a client that hung up mid-flight is not a server error
+                let _ = r.reply.send(reply);
+                self.lat_buf.push(now.saturating_duration_since(r.enqueued));
+            }
+            self.stats.record_batch(self.shard, chunk, self.max_batch, &self.lat_buf);
+            off += chunk;
+        }
+        self.win.clear();
         Ok(true)
     }
 
@@ -662,12 +750,7 @@ mod tests {
 
     fn submit(queue: &SubmissionQueue, session: u64, obs: Vec<f32>) -> Receiver<Reply> {
         let (tx, rx) = channel();
-        assert!(queue.push(Request {
-            session,
-            obs,
-            enqueued: Instant::now(),
-            reply: tx,
-        }));
+        assert!(queue.push(Request::new(session, obs, tx)));
         rx
     }
 
@@ -811,12 +894,7 @@ mod tests {
         assert!(b.run().is_err(), "backend error must surface from run()");
         // the dead batcher must not leave clients submitting into a void
         let (tx, _rx2) = channel();
-        let accepted = queue.push(Request {
-            session: 1,
-            obs: vec![0.0; 2],
-            enqueued: Instant::now(),
-            reply: tx,
-        });
+        let accepted = queue.push(Request::new(1, vec![0.0; 2], tx));
         assert!(!accepted, "queue must be closed after the batcher dies");
     }
 
@@ -866,6 +944,88 @@ mod tests {
         assert_eq!(snap.shards[0].queries, 1, "small shard must book its own query");
         assert_eq!(snap.shards[1].queries, 0);
         assert!(snap.shards[0].small);
+    }
+
+    #[test]
+    fn identical_inflight_observations_coalesce_into_one_slot() {
+        // 4 copies of obs A + 1 each of B and C, claimed as one window:
+        // the device sees 3 unique rows, every waiter gets a bitwise copy
+        // of its row's reply, and the coalescing is booked in the stats
+        let mut b = mk_batcher(8, 5, 13);
+        let a_obs = vec![0.5f32, -1.0, 0.25, 2.0, 0.0];
+        let b_obs = vec![1.0f32; 5];
+        let c_obs = vec![-0.5f32; 5];
+        let a_rxs: Vec<Receiver<Reply>> =
+            (0..4).map(|i| submit(&b.queue, i, a_obs.clone())).collect();
+        let b_rx = submit(&b.queue, 4, b_obs.clone());
+        let c_rx = submit(&b.queue, 5, c_obs.clone());
+        assert!(b.step().unwrap());
+        let a_replies: Vec<Reply> = a_rxs.iter().map(recv_reply).collect();
+        for r in &a_replies[1..] {
+            assert_eq!(*r, a_replies[0], "fan-out must be bitwise identical");
+        }
+        let (b_reply, c_reply) = (recv_reply(&b_rx), recv_reply(&c_rx));
+        assert_ne!(b_reply, a_replies[0]);
+        assert_ne!(c_reply, b_reply);
+        // the shared reply matches what a dedicated slot would produce
+        let mut solo = mk_batcher(8, 5, 13);
+        let solo_rx = submit(&solo.queue, 9, a_obs.clone());
+        solo.step().unwrap();
+        assert_eq!(recv_reply(&solo_rx), a_replies[0], "dedup changed the served bits");
+        let snap = b.stats.snapshot();
+        assert_eq!(snap.queries, 6, "all six waiters count as served queries");
+        assert_eq!(snap.batches, 1, "one device call for the whole window");
+        assert_eq!(snap.cache.coalesced_slots, 3, "4 dupes of A collapse into 1 slot");
+        assert!((snap.mean_batch_fill - 3.0 / 8.0).abs() < 1e-9, "fill counts unique rows");
+        // the staged observation buffers were recycled to the queue pool
+        assert_eq!(b.queue.obs_pool().idle(), 6, "every claimed obs Vec must be recycled");
+    }
+
+    #[test]
+    fn dedup_serves_more_queries_than_the_device_width() {
+        // width 2, five requests over two distinct observations: the
+        // dedup-aware claim takes all five into ONE full window
+        let mut b = mk_batcher(2, 3, 7);
+        let x = vec![0.1f32; 3];
+        let y = vec![0.9f32; 3];
+        let rxs: Vec<Receiver<Reply>> = [&x, &x, &y, &x, &y]
+            .iter()
+            .enumerate()
+            .map(|(i, o)| submit(&b.queue, i as u64, (*o).clone()))
+            .collect();
+        assert!(b.step().unwrap());
+        for rx in &rxs {
+            recv_reply(rx);
+        }
+        let snap = b.stats.snapshot();
+        assert_eq!(snap.queries, 5, "five queries through a width-2 forward");
+        assert_eq!(snap.batches, 1);
+        assert_eq!(snap.cache.coalesced_slots, 3);
+        assert_eq!(snap.full_batch_frac, 1.0, "2 unique rows fill the width-2 batch");
+    }
+
+    #[test]
+    fn no_dedup_batcher_stages_every_request() {
+        let queue = Arc::new(SubmissionQueue::without_dedup());
+        let stats = Arc::new(ServeStats::new());
+        let mut b = Batcher::new(
+            SyntheticBackend::new(4, 3, 6, 2),
+            queue.clone(),
+            stats.clone(),
+            4,
+            Duration::ZERO,
+        );
+        let rxs: Vec<Receiver<Reply>> =
+            (0..4).map(|i| submit(&queue, i, vec![0.5; 3])).collect();
+        assert!(b.step().unwrap());
+        let replies: Vec<Reply> = rxs.iter().map(recv_reply).collect();
+        for r in &replies[1..] {
+            assert_eq!(*r, replies[0], "identical obs still get identical replies");
+        }
+        let snap = stats.snapshot();
+        assert_eq!(snap.queries, 4);
+        assert_eq!(snap.cache.coalesced_slots, 0, "--no-dedup must not coalesce");
+        assert_eq!(snap.full_batch_frac, 1.0, "all 4 requests staged as 4 rows");
     }
 
     #[test]

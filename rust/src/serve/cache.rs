@@ -1,0 +1,443 @@
+//! The versioned response cache: answer repeat queries without touching
+//! the submission queue at all.
+//!
+//! Every serve backend is **deterministic per observation** (the
+//! row-independence + width-transparency contracts in
+//! [`crate::serve::batcher`]), which makes a response cache semantically
+//! transparent: for a fixed parameter set, a cached reply is bit-identical
+//! to the reply the batcher would have produced. The cache is therefore a
+//! pure throughput lever — the integration tests pin episodes down as
+//! bit-for-bit identical with the cache on and off.
+//!
+//! Two safety properties are load-bearing:
+//!
+//! * **Exact match only.** Keys are the FNV-1a hash of the observation's
+//!   raw f32 bits ([`obs_fnv1a`]) — no quantization, no tolerance — and a
+//!   probe additionally compares the stored observation bit for bit, so a
+//!   hash collision degrades to a miss, never to a wrong reply.
+//! * **Versioning.** Every entry is keyed under the `params_version` it
+//!   was computed at. [`ResponseCache::bump_version`] (the hook a
+//!   checkpoint restore must call) moves the cache to a fresh version and
+//!   evicts every prior entry, so a reloaded model can never serve stale
+//!   logits.
+//!
+//! The store is a fixed-capacity LRU: a seeded-hash map (seeding keeps
+//! the bucket distribution independent of attacker-chosen observation
+//! bits) over an intrusive recency list, O(1) probe/insert/evict, one
+//! mutex around the whole structure. The hot path takes the lock once per
+//! query, which is strictly cheaper than the queue push + condvar wakeup
+//! + reply channel roundtrip it replaces.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasher, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::queue::Reply;
+
+/// FNV-1a 64-bit offset basis.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over the raw little-endian f32 bits of an observation — the
+/// shared content hash of the dedup + cache layer. Exact-match only by
+/// construction: `-0.0` and `0.0` (different bit patterns) hash apart,
+/// as do NaN payloads, so two observations share a hash only if a real
+/// 64-bit collision occurs (and every consumer re-checks equality).
+pub fn obs_fnv1a(obs: &[f32]) -> u64 {
+    obs_fnv1a_seeded(obs, 0)
+}
+
+/// Seeded `obs_fnv1a` (the cache's bucket hash folds its per-instance
+/// seed in through here).
+fn obs_fnv1a_seeded(obs: &[f32], seed: u64) -> u64 {
+    let mut h = FNV_OFFSET ^ seed;
+    for &v in obs {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// Cache key: the parameter-set version the reply was computed under,
+/// plus the observation content hash.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct Key {
+    version: u64,
+    obs_hash: u64,
+}
+
+/// Seeded FNV-1a `BuildHasher` for the bucket map: two caches with
+/// different seeds place the same keys in different buckets.
+#[derive(Clone, Copy)]
+struct SeededFnv {
+    seed: u64,
+}
+
+impl BuildHasher for SeededFnv {
+    type Hasher = FnvHasher;
+
+    fn build_hasher(&self) -> FnvHasher {
+        FnvHasher { h: FNV_OFFSET ^ self.seed }
+    }
+}
+
+struct FnvHasher {
+    h: u64,
+}
+
+impl Hasher for FnvHasher {
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.h ^= b as u64;
+            self.h = self.h.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.h
+    }
+}
+
+/// Sentinel for "no neighbor" in the intrusive recency list.
+const NIL: usize = usize::MAX;
+
+/// One cached reply plus its recency-list links (slab slot).
+struct Entry {
+    key: Key,
+    /// The exact observation the reply answers (collision guard).
+    obs: Vec<f32>,
+    reply: Reply,
+    prev: usize,
+    next: usize,
+}
+
+/// The LRU core (everything behind the one mutex).
+struct Lru {
+    map: HashMap<Key, usize, SeededFnv>,
+    slab: Vec<Entry>,
+    /// Most-recently-used slab slot.
+    head: usize,
+    /// Least-recently-used slab slot (the eviction candidate).
+    tail: usize,
+}
+
+impl Lru {
+    /// Unlink `idx` from the recency list (it must be linked).
+    fn unlink(&mut self, idx: usize) {
+        let (prev, next) = (self.slab[idx].prev, self.slab[idx].next);
+        match prev {
+            NIL => self.head = next,
+            p => self.slab[p].next = next,
+        }
+        match next {
+            NIL => self.tail = prev,
+            n => self.slab[n].prev = prev,
+        }
+    }
+
+    /// Link `idx` at the head (most recently used).
+    fn link_front(&mut self, idx: usize) {
+        self.slab[idx].prev = NIL;
+        self.slab[idx].next = self.head;
+        match self.head {
+            NIL => self.tail = idx,
+            h => self.slab[h].prev = idx,
+        }
+        self.head = idx;
+    }
+
+    fn touch(&mut self, idx: usize) {
+        if self.head != idx {
+            self.unlink(idx);
+            self.link_front(idx);
+        }
+    }
+}
+
+/// Fixed-capacity, versioned LRU over `(params_version, obs_hash)`.
+///
+/// Shared by every [`ClientHandle`](crate::serve::ClientHandle) of a
+/// server (in-process and TCP-bridged alike): a probe that hits returns
+/// the reply without the queue, the batcher, or a device call ever
+/// seeing the query.
+pub struct ResponseCache {
+    inner: Mutex<Lru>,
+    version: AtomicU64,
+    capacity: usize,
+}
+
+impl ResponseCache {
+    /// A cache holding at most `capacity` replies (>= 1), with `seed`
+    /// diversifying the bucket hash.
+    pub fn new(capacity: usize, seed: u64) -> ResponseCache {
+        let capacity = capacity.max(1);
+        ResponseCache {
+            inner: Mutex::new(Lru {
+                map: HashMap::with_capacity_and_hasher(capacity, SeededFnv { seed }),
+                slab: Vec::with_capacity(capacity),
+                head: NIL,
+                tail: NIL,
+            }),
+            version: AtomicU64::new(0),
+            capacity,
+        }
+    }
+
+    /// Maximum retained entries.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Entries currently cached (all under the current version).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The parameter-set version entries are currently keyed under.
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Relaxed)
+    }
+
+    /// Move to a fresh parameter version and evict every prior entry.
+    /// MUST be called whenever the served parameters change (checkpoint
+    /// restore); returns the new version.
+    pub fn bump_version(&self) -> u64 {
+        let mut lru = self.inner.lock().unwrap();
+        lru.map.clear();
+        lru.slab.clear();
+        lru.head = NIL;
+        lru.tail = NIL;
+        // under the lock: a probe can never see the old version's map
+        self.version.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Probe for a reply to `obs` (whose precomputed [`obs_fnv1a`] hash
+    /// is `obs_hash`) under the current version. A hit refreshes the
+    /// entry's recency and returns a clone of the stored reply — which is
+    /// bit-identical to what the backend produced when it was inserted.
+    pub fn get(&self, obs: &[f32], obs_hash: u64) -> Option<Reply> {
+        let key = Key { version: self.version(), obs_hash };
+        let mut lru = self.inner.lock().unwrap();
+        let idx = *lru.map.get(&key)?;
+        if lru.slab[idx].obs != obs {
+            return None; // 64-bit hash collision: a miss, never a lie
+        }
+        lru.touch(idx);
+        Some(lru.slab[idx].reply.clone())
+    }
+
+    /// Insert (or refresh) the reply for `obs`, computed under parameter
+    /// version `version` — captured by the caller **at probe time**,
+    /// before the backend ran. The insert is dropped when the cache has
+    /// since moved past that version: a reply computed under old
+    /// parameters must never be filed under the new version, which is
+    /// the race a put keyed off the *current* version would lose against
+    /// [`ResponseCache::bump_version`]. Evicts the least-recently-used
+    /// entry at capacity. Concurrent inserts of the same key are
+    /// idempotent (deterministic backends produce identical replies).
+    pub fn put(&self, version: u64, obs: &[f32], obs_hash: u64, reply: &Reply) {
+        let key = Key { version, obs_hash };
+        let mut lru = self.inner.lock().unwrap();
+        // checked under the lock: bump_version bumps while holding it,
+        // so a stale insert can never slip past this guard
+        if self.version.load(Ordering::Relaxed) != version {
+            return;
+        }
+        if let Some(&idx) = lru.map.get(&key) {
+            // refresh; on a hash collision the newer observation wins
+            // (the older one simply misses from now on)
+            if lru.slab[idx].obs != obs {
+                lru.slab[idx].obs.clear();
+                lru.slab[idx].obs.extend_from_slice(obs);
+            }
+            lru.slab[idx].reply = reply.clone();
+            lru.touch(idx);
+            return;
+        }
+        let idx = if lru.slab.len() < self.capacity {
+            lru.slab.push(Entry {
+                key,
+                obs: obs.to_vec(),
+                reply: reply.clone(),
+                prev: NIL,
+                next: NIL,
+            });
+            lru.slab.len() - 1
+        } else {
+            // reuse the LRU tail's slot
+            let idx = lru.tail;
+            debug_assert_ne!(idx, NIL, "capacity >= 1 and map is full");
+            self_evict(&mut lru, idx);
+            lru.slab[idx].key = key;
+            lru.slab[idx].obs.clear();
+            lru.slab[idx].obs.extend_from_slice(obs);
+            lru.slab[idx].reply = reply.clone();
+            idx
+        };
+        lru.map.insert(key, idx);
+        lru.link_front(idx);
+    }
+}
+
+/// Drop the entry in slab slot `idx` from the map and the recency list
+/// (the slot itself is reused by the caller).
+fn self_evict(lru: &mut Lru, idx: usize) {
+    let key = lru.slab[idx].key;
+    lru.map.remove(&key);
+    lru.unlink(idx);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reply(tag: f32) -> Reply {
+        Reply { probs: vec![tag, 1.0 - tag], value: tag * 10.0 }
+    }
+
+    fn put_obs(c: &ResponseCache, obs: &[f32], tag: f32) {
+        c.put(c.version(), obs, obs_fnv1a(obs), &reply(tag));
+    }
+
+    fn get_obs(c: &ResponseCache, obs: &[f32]) -> Option<Reply> {
+        c.get(obs, obs_fnv1a(obs))
+    }
+
+    #[test]
+    fn hit_returns_the_inserted_reply_bit_for_bit() {
+        let c = ResponseCache::new(8, 42);
+        let obs = [0.25f32, -1.5, 3.0];
+        assert!(get_obs(&c, &obs).is_none(), "cold cache must miss");
+        put_obs(&c, &obs, 0.125);
+        let got = get_obs(&c, &obs).expect("warm cache must hit");
+        assert_eq!(got, reply(0.125));
+        let bits: Vec<u32> = got.probs.iter().map(|p| p.to_bits()).collect();
+        let want: Vec<u32> = reply(0.125).probs.iter().map(|p| p.to_bits()).collect();
+        assert_eq!(bits, want);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn exact_match_only_negative_zero_and_nearby_floats_miss() {
+        let c = ResponseCache::new(8, 0);
+        put_obs(&c, &[0.0f32, 1.0], 0.5);
+        assert!(get_obs(&c, &[-0.0f32, 1.0]).is_none(), "-0.0 must not match 0.0");
+        assert!(get_obs(&c, &[1e-7f32, 1.0]).is_none(), "no quantization tolerance");
+        assert!(get_obs(&c, &[0.0f32, 1.0]).is_some());
+    }
+
+    #[test]
+    fn version_bump_evicts_all_prior_entries() {
+        // the checkpoint-restore contract: after a params_version bump a
+        // reloaded model can never serve a stale reply
+        let c = ResponseCache::new(16, 7);
+        for i in 0..10 {
+            put_obs(&c, &[i as f32], 0.01 * i as f32);
+        }
+        assert_eq!(c.len(), 10);
+        assert_eq!(c.version(), 0);
+        let v = c.bump_version();
+        assert_eq!(v, 1);
+        assert_eq!(c.version(), 1);
+        assert_eq!(c.len(), 0, "bump must evict every prior entry");
+        for i in 0..10 {
+            assert!(
+                get_obs(&c, &[i as f32]).is_none(),
+                "entry {i} survived a version bump"
+            );
+        }
+        // the new version caches independently
+        put_obs(&c, &[3.0f32], 0.9);
+        assert_eq!(get_obs(&c, &[3.0f32]).unwrap(), reply(0.9));
+    }
+
+    #[test]
+    fn insert_from_before_a_version_bump_is_dropped() {
+        // the checkpoint-restore race: a reply computed under the old
+        // parameters finishes AFTER bump_version — its insert (keyed with
+        // the probe-time version) must be dropped, not filed under the
+        // new version as stale logits
+        let c = ResponseCache::new(8, 2);
+        let obs = [0.5f32, 1.5];
+        let probe_version = c.version();
+        c.bump_version(); // parameters restored while the query was in flight
+        c.put(probe_version, &obs, obs_fnv1a(&obs), &reply(0.4));
+        assert!(c.is_empty(), "stale-version insert must be dropped");
+        assert!(get_obs(&c, &obs).is_none());
+        // a probe-and-put under the new version works normally
+        put_obs(&c, &obs, 0.6);
+        assert_eq!(get_obs(&c, &obs).unwrap(), reply(0.6));
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_entry_at_capacity() {
+        let c = ResponseCache::new(3, 1);
+        put_obs(&c, &[1.0f32], 0.1);
+        put_obs(&c, &[2.0f32], 0.2);
+        put_obs(&c, &[3.0f32], 0.3);
+        // touch 1.0 so 2.0 becomes the LRU
+        assert!(get_obs(&c, &[1.0f32]).is_some());
+        put_obs(&c, &[4.0f32], 0.4);
+        assert_eq!(c.len(), 3, "capacity must hold");
+        assert!(get_obs(&c, &[2.0f32]).is_none(), "LRU entry must be evicted");
+        assert!(get_obs(&c, &[1.0f32]).is_some());
+        assert!(get_obs(&c, &[3.0f32]).is_some());
+        assert!(get_obs(&c, &[4.0f32]).is_some());
+    }
+
+    #[test]
+    fn hash_collisions_degrade_to_misses_not_wrong_replies() {
+        // force a collision by lying about the hash: two different
+        // observations filed under the same obs_hash
+        let c = ResponseCache::new(4, 9);
+        let (a, b) = ([1.0f32, 2.0], [9.0f32, 8.0]);
+        c.put(c.version(), &a, 77, &reply(0.1));
+        assert!(c.get(&b, 77).is_none(), "collision must miss, not serve a's reply");
+        assert_eq!(c.get(&a, 77).unwrap(), reply(0.1));
+        // the colliding insert takes the slot over; the old obs misses
+        c.put(c.version(), &b, 77, &reply(0.2));
+        assert!(c.get(&a, 77).is_none());
+        assert_eq!(c.get(&b, 77).unwrap(), reply(0.2));
+        assert_eq!(c.len(), 1, "colliding keys share one slot");
+    }
+
+    #[test]
+    fn refresh_updates_recency_and_reply() {
+        let c = ResponseCache::new(2, 3);
+        put_obs(&c, &[1.0f32], 0.1);
+        put_obs(&c, &[2.0f32], 0.2);
+        put_obs(&c, &[1.0f32], 0.15); // refresh: 2.0 is now the LRU
+        put_obs(&c, &[3.0f32], 0.3);
+        assert!(get_obs(&c, &[2.0f32]).is_none());
+        assert_eq!(get_obs(&c, &[1.0f32]).unwrap(), reply(0.15));
+    }
+
+    #[test]
+    fn fnv_hash_is_seed_and_content_sensitive() {
+        let a = [0.5f32, 1.5, -2.0];
+        let b = [0.5f32, 1.5, -2.0000002];
+        assert_eq!(obs_fnv1a(&a), obs_fnv1a(&a), "hash must be deterministic");
+        assert_ne!(obs_fnv1a(&a), obs_fnv1a(&b));
+        assert_ne!(obs_fnv1a_seeded(&a, 1), obs_fnv1a_seeded(&a, 2));
+        // the reference FNV-1a vector: hashing nothing is the offset basis
+        assert_eq!(obs_fnv1a(&[]), FNV_OFFSET);
+    }
+
+    #[test]
+    fn capacity_one_cache_works() {
+        let c = ResponseCache::new(1, 5);
+        put_obs(&c, &[1.0f32], 0.1);
+        put_obs(&c, &[2.0f32], 0.2);
+        assert_eq!(c.len(), 1);
+        assert!(get_obs(&c, &[1.0f32]).is_none());
+        assert_eq!(get_obs(&c, &[2.0f32]).unwrap(), reply(0.2));
+    }
+}

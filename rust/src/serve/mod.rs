@@ -10,16 +10,24 @@
 //! * [`queue`] — lock-light submission queue between clients and the
 //!   batcher shards (producers push O(1); consumers drain whole
 //!   windows). Multi-consumer since PR 2: [`ShardClass`] encodes the
-//!   routing policy that partitions windows between shards.
+//!   routing policy that partitions windows between shards. Dedup-aware
+//!   since PR 5: windows are measured in *unique* observations, so
+//!   bit-identical duplicates ride along free.
 //! * [`batcher`] — the dynamic micro-batcher: coalesce up to the shard's
-//!   batch width or a configurable deadline, zero-pad the remainder, one
-//!   device call, fan the rows back out. Backends plug in through
-//!   [`InferBackend`]: [`ModelBackend`] serves a real artifact-backed
-//!   [`crate::model::PolicyModel`]; [`SyntheticBackend`] is a
-//!   deterministic pure-Rust policy for tests, benches and artifact-free
-//!   load generation. A [`BackendFactory`] ([`SyntheticFactory`],
-//!   [`ModelBackendFactory`]) stamps out one backend per shard, each at
-//!   its own width.
+//!   batch width or a configurable deadline, collapse bit-identical
+//!   observations into shared input slots, zero-pad the remainder, one
+//!   device call, fan each row back out to every waiter. Backends plug
+//!   in through [`InferBackend`]: [`ModelBackend`] serves a real
+//!   artifact-backed [`crate::model::PolicyModel`]; [`SyntheticBackend`]
+//!   is a deterministic pure-Rust policy for tests, benches and
+//!   artifact-free load generation. A [`BackendFactory`]
+//!   ([`SyntheticFactory`], [`ModelBackendFactory`]) stamps out one
+//!   backend per shard, each at its own width.
+//! * [`cache`] — the versioned response cache: a fixed-capacity,
+//!   seeded-hash LRU keyed by `(params_version, obs_hash)` that answers
+//!   repeat queries without touching the queue at all. Deterministic
+//!   backends make it semantically transparent; version bumps on
+//!   checkpoint restore make stale hits impossible.
 //! * [`session`] — per-client state: environment, frame-stacking
 //!   preprocessing (Atari mode) and the client-side action sampler.
 //! * [`server`] — the facade: spawn one batcher
@@ -75,6 +83,7 @@
 //! sharded-vs-single throughput curves.
 
 pub mod batcher;
+pub mod cache;
 pub mod queue;
 pub mod server;
 pub mod session;
@@ -85,8 +94,11 @@ pub use batcher::{
     BackendFactory, Batcher, InferBackend, LinearQBackend, LinearQFactory, ModelBackend,
     ModelBackendFactory, SyntheticBackend, SyntheticFactory,
 };
+pub use cache::{obs_fnv1a, ResponseCache};
 pub use queue::{Reply, Request, ShardClass, SubmissionQueue};
 pub use server::{ClientHandle, Connector, PolicyServer, ServeConfig};
 pub use session::{run_clients, Session, SessionReport};
-pub use stats::{ServeStats, ShardSnapshot, ShardSpec, StatsSnapshot, TransportSnapshot};
+pub use stats::{
+    CacheSnapshot, ServeStats, ShardSnapshot, ShardSpec, StatsSnapshot, TransportSnapshot,
+};
 pub use transport::{run_remote_clients, QueryTransport, RemoteHandle, TcpFrontend};

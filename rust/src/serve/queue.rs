@@ -16,17 +16,45 @@
 //! big for the small-batch fast path; the designated [`ShardClass::Small`]
 //! shard claims deadline windows that fit its own (small) width, so a
 //! lightly loaded server pays a small padded device call instead of a
-//! wide one. The two deadline conditions are disjoint (`pending >
-//! small_width` vs `pending <= small_width`), which makes the routing
+//! wide one. The two deadline conditions are disjoint (`uniques >
+//! small_width` vs `uniques <= small_width`), which makes the routing
 //! deterministic and unit-testable. A pool of wide shards with no small
 //! shard degenerates to plain work sharing, and a single
 //! `Wide { leave_to_small: None }` consumer reproduces the PR 1
 //! single-batcher behavior exactly ([`SubmissionQueue::next_batch`]).
+//!
+//! Since PR 5 window claiming is **dedup-aware**: every request carries
+//! the FNV-1a hash of its observation bits
+//! ([`Request::obs_hash`], computed by the producer, outside the lock),
+//! and a window's size against a shard's width is measured in **unique
+//! observations**, not raw requests. Bit-identical duplicates collapse
+//! into one backend input slot downstream (see
+//! [`crate::serve::batcher`]), so they ride along free: a full-window
+//! claim takes the prefix covering `width` distinct hashes *plus any
+//! trailing duplicates of them*, which is how more queries than the
+//! device width fit into one forward pass. The routing conditions above
+//! switch from raw counts to unique counts with the same deadline
+//! disjointness; in addition, a **raw-full** backlog (`width` pending
+//! requests collapsing to fewer uniques) flushes to a wide shard
+//! *before* the deadline — still one forward — so duplicate bursts
+//! never wait it out, without competing with the small shard (which
+//! only ever claims at the deadline).
+//! [`SubmissionQueue::without_dedup`] restores raw-count claiming (the
+//! `--no-dedup` escape hatch and the PR 1 comparison baseline).
 
 use std::collections::VecDeque;
 use std::sync::mpsc::Sender;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+use crate::util::pool::BufPool;
+
+use super::cache::obs_fnv1a;
+
+/// Spare observation buffers the queue's recycling pool retains (see
+/// [`SubmissionQueue::obs_pool`]); bounds idle memory at
+/// `OBS_POOL_IDLE * obs_len * 4` bytes.
+const OBS_POOL_IDLE: usize = 64;
 
 /// One inference request travelling from a client session to the batcher.
 pub struct Request {
@@ -34,6 +62,11 @@ pub struct Request {
     pub session: u64,
     /// Flattened (H, W, C) observation.
     pub obs: Vec<f32>,
+    /// [`obs_fnv1a`] of `obs` — the dedup identity. Producers compute it
+    /// outside the queue lock; [`Request::new`] is the canonical way.
+    /// May be 0 on a raw-count ([`SubmissionQueue::without_dedup`])
+    /// queue with no response cache, where nothing consumes it.
+    pub obs_hash: u64,
     /// Submission timestamp (the latency clock starts here and anchors
     /// the coalescing deadline).
     pub enqueued: Instant,
@@ -46,11 +79,21 @@ pub struct Request {
     pub reply: Sender<Reply>,
 }
 
+impl Request {
+    /// Build a request, stamping the enqueue time and the observation's
+    /// dedup hash.
+    pub fn new(session: u64, obs: Vec<f32>, reply: Sender<Reply>) -> Request {
+        let obs_hash = obs_fnv1a(&obs);
+        Request { session, obs, obs_hash, enqueued: Instant::now(), reply }
+    }
+}
+
 /// The batcher's answer: the full policy row and the value estimate for
 /// the submitted observation. Action *sampling* is deliberately left to
 /// the client session (each session owns its RNG stream), which keeps the
 /// server deterministic: a given observation always yields bit-identical
-/// replies, batched or not.
+/// replies, batched or not — the property the dedup fan-out and the
+/// response cache ([`crate::serve::cache`]) both lean on.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Reply {
     /// pi(.|s) over the action set.
@@ -63,11 +106,11 @@ pub struct Reply {
 /// routing policy that decides which pending window each shard may claim.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ShardClass {
-    /// A full-width shard. Claims a full window (`width` requests) as
-    /// soon as one is available; at the coalescing deadline it claims
-    /// whatever is pending — unless the remainder fits the designated
-    /// small-batch shard (`leave_to_small`), which serves it with less
-    /// padding.
+    /// A full-width shard. Claims a full window (`width` unique
+    /// observations) as soon as one is available; at the coalescing
+    /// deadline it claims whatever is pending — unless the remainder fits
+    /// the designated small-batch shard (`leave_to_small`), which serves
+    /// it with less padding.
     Wide {
         /// Width of the small-batch fast-path shard, when the pool has
         /// one. `None` (no fast path) makes this consumer claim every
@@ -75,36 +118,122 @@ pub enum ShardClass {
         leave_to_small: Option<usize>,
     },
     /// The small-batch fast path: claims deadline windows of at most its
-    /// own width and leaves anything larger to the wide shards.
+    /// own width (in unique observations) and leaves anything larger to
+    /// the wide shards.
     Small,
 }
 
+/// What a routed claim is entitled to drain right now.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Claim {
+    /// A full window: the prefix covering `width` unique observations
+    /// plus any trailing duplicates of them (`WindowShape::full_take`).
+    Full,
+    /// A deadline flush: the whole pending backlog.
+    Tail,
+}
+
 impl ShardClass {
-    /// Number of requests a `width`-wide consumer of this class may drain
-    /// right now, or `None` if it must keep waiting.
-    fn claimable(&self, pending: usize, width: usize, deadline_passed: bool) -> Option<usize> {
+    /// Cheap pre-scan gate: whether this class could possibly claim
+    /// right now, decidable from the raw pending count alone — so a
+    /// consumer parked mid-coalesce never pays the O(pending * width)
+    /// dedup scan on every push wakeup. MUST stay a superset of
+    /// [`ShardClass::claimable`]'s triggers (every condition there is
+    /// implied by one here); the two live side by side so they evolve
+    /// together.
+    fn may_claim(&self, pending: usize, width: usize, deadline_passed: bool) -> bool {
         if pending == 0 {
+            return false;
+        }
+        match *self {
+            // Full and raw-full both require pending >= width (uniques
+            // can never exceed pending); every Tail requires the deadline
+            ShardClass::Wide { .. } => pending >= width || deadline_passed,
+            ShardClass::Small => deadline_passed,
+        }
+    }
+
+    /// Routing decision for a `width`-wide consumer of this class, given
+    /// `uniques` distinct pending observations (saturating at
+    /// `width + 1` — the decisions below never need more resolution).
+    ///
+    /// At the deadline the conditions stay disjoint in unique counts
+    /// (`uniques > sw` wide vs `uniques <= sw` small), so exactly one
+    /// class is entitled to any backlog at any instant: the
+    /// uniques-independent raw-full trigger fires only **before** the
+    /// deadline, when the small shard never competes.
+    fn claimable(
+        &self,
+        uniques: usize,
+        pending: usize,
+        width: usize,
+        deadline_passed: bool,
+    ) -> Option<Claim> {
+        if uniques == 0 {
             return None;
         }
         match *self {
             ShardClass::Wide { leave_to_small } => {
-                if pending >= width {
-                    Some(width)
-                } else if deadline_passed && leave_to_small.is_none_or(|sw| pending > sw) {
-                    Some(pending)
+                if uniques >= width {
+                    Some(Claim::Full)
+                } else if pending >= width && !deadline_passed {
+                    // raw-full: `width` requests are pending but they fit
+                    // fewer than `width` unique rows — flush them all now
+                    // (still one forward); duplicate-heavy bursts must
+                    // not sit out the coalescing deadline. Pre-deadline
+                    // only, to preserve deadline-routing disjointness
+                    Some(Claim::Tail)
+                } else if deadline_passed && leave_to_small.is_none_or(|sw| uniques > sw) {
+                    Some(Claim::Tail)
                 } else {
                     None
                 }
             }
             ShardClass::Small => {
-                if deadline_passed && pending <= width {
-                    Some(pending)
+                if deadline_passed && uniques <= width {
+                    Some(Claim::Tail)
                 } else {
                     None
                 }
             }
         }
     }
+}
+
+/// The pending backlog, measured the way a dedup-aware consumer sees it.
+struct WindowShape {
+    /// Distinct observation hashes among pending requests, saturating at
+    /// `width + 1` (enough to resolve every routing comparison).
+    uniques: usize,
+    /// Length of the prefix covering exactly `width` distinct hashes plus
+    /// any trailing duplicates of them; the whole backlog when fewer than
+    /// `width + 1` distinct hashes are pending.
+    full_take: usize,
+}
+
+/// Measure the backlog. With `dedup` off this degenerates to raw counts
+/// (uniques = pending, full windows cap at `width` requests).
+fn window_shape(q: &VecDeque<Request>, width: usize, dedup: bool) -> WindowShape {
+    if !dedup {
+        return WindowShape { uniques: q.len().min(width + 1), full_take: q.len().min(width) };
+    }
+    let mut seen: Vec<u64> = Vec::with_capacity(width.saturating_add(1).min(q.len()));
+    let mut full_take = q.len();
+    for (i, r) in q.iter().enumerate() {
+        if seen.contains(&r.obs_hash) {
+            continue; // a duplicate rides along free
+        }
+        if seen.len() == width {
+            // the (width + 1)-th distinct observation: the full window
+            // ends just before it (count it so `uniques` saturates past
+            // `width`, which is all the routing comparisons need)
+            full_take = i;
+            seen.push(r.obs_hash);
+            break;
+        }
+        seen.push(r.obs_hash);
+    }
+    WindowShape { uniques: seen.len(), full_take }
 }
 
 #[derive(Default)]
@@ -122,11 +251,51 @@ struct State {
 pub struct SubmissionQueue {
     state: Mutex<State>,
     cv: Condvar,
+    /// Window sizes are measured in unique observations (see the module
+    /// docs); `false` restores raw-count claiming.
+    dedup: bool,
+    /// Recycles request observation buffers between the two ends of the
+    /// queue: producers `take` a buffer before pushing, the batcher
+    /// `put`s it back once the row is staged — so the submit hot path is
+    /// allocation-free in steady state, with buffer capacities that
+    /// match the observation length exactly.
+    obs_pool: BufPool<f32>,
 }
 
 impl SubmissionQueue {
+    /// A dedup-aware queue (the default since PR 5).
     pub fn new() -> SubmissionQueue {
-        SubmissionQueue { state: Mutex::new(State::default()), cv: Condvar::new() }
+        SubmissionQueue::with_dedup(true)
+    }
+
+    /// A queue with explicit dedup policy (`with_dedup(false)` ==
+    /// [`SubmissionQueue::without_dedup`]).
+    pub fn with_dedup(dedup: bool) -> SubmissionQueue {
+        SubmissionQueue {
+            state: Mutex::new(State::default()),
+            cv: Condvar::new(),
+            dedup,
+            obs_pool: BufPool::new(OBS_POOL_IDLE),
+        }
+    }
+
+    /// A raw-count queue: windows are measured in requests, exactly the
+    /// PR 1–4 behavior (`paac serve --no-dedup`).
+    pub fn without_dedup() -> SubmissionQueue {
+        SubmissionQueue::with_dedup(false)
+    }
+
+    /// Whether window claiming (and the batcher draining this queue)
+    /// collapses bit-identical observations.
+    pub fn dedup(&self) -> bool {
+        self.dedup
+    }
+
+    /// The shared observation-buffer recycling pool: producers `take` a
+    /// buffer to build [`Request::obs`], the batcher `put`s it back after
+    /// staging the row (see `Batcher::step`).
+    pub fn obs_pool(&self) -> &BufPool<f32> {
+        &self.obs_pool
     }
 
     /// Enqueue a request. Returns `false` (dropping the request) once the
@@ -175,52 +344,80 @@ impl SubmissionQueue {
     /// Equivalent to [`SubmissionQueue::claim_window`] as a
     /// `Wide { leave_to_small: None }` consumer: wait for the first
     /// pending request, keep waiting for stragglers until the batch fills
-    /// to `max_batch` or `max_delay` has elapsed since the oldest pending
-    /// request was enqueued, then flush. `None` means closed-and-drained
-    /// (shutdown).
+    /// to `max_batch` (unique observations) or `max_delay` has elapsed
+    /// since the oldest pending request was enqueued, then flush. `None`
+    /// means closed-and-drained (shutdown).
     pub fn next_batch(&self, max_batch: usize, max_delay: Duration) -> Option<Vec<Request>> {
         self.claim_window(max_batch, max_delay, ShardClass::Wide { leave_to_small: None })
     }
 
-    /// Blocking routed window claim (the multi-shard drain).
-    ///
-    /// Waits until this consumer's [`ShardClass`] is entitled to a window
-    /// and drains it in FIFO order. The coalescing deadline anchors on the
-    /// oldest pending request's **enqueue** time, so a request that aged
-    /// in the queue while a previous batch was on-device flushes
-    /// immediately rather than waiting a second window. A claim that
-    /// leaves requests behind re-notifies the other consumers (the
-    /// remainder may belong to a different shard class). Returns `None`
-    /// once the queue is closed **and** drained; while closed-but-backlogged,
-    /// routing is suspended and any consumer drains up to its width so
-    /// shutdown cannot strand requests.
+    /// [`SubmissionQueue::claim_window_into`], allocating the window
+    /// vector (tests and one-shot consumers; the batcher hot loop reuses
+    /// its own buffer instead).
     pub fn claim_window(
         &self,
         width: usize,
         max_delay: Duration,
         class: ShardClass,
     ) -> Option<Vec<Request>> {
+        let mut out = Vec::new();
+        self.claim_window_into(width, max_delay, class, &mut out).then_some(out)
+    }
+
+    /// Blocking routed window claim (the multi-shard drain), draining
+    /// into a caller-owned (recycled) buffer.
+    ///
+    /// Waits until this consumer's [`ShardClass`] is entitled to a window
+    /// and drains it in FIFO order into `out` (cleared first). The
+    /// coalescing deadline anchors on the oldest pending request's
+    /// **enqueue** time, so a request that aged in the queue while a
+    /// previous batch was on-device flushes immediately rather than
+    /// waiting a second window. A claim that leaves requests behind
+    /// re-notifies the other consumers (the remainder may belong to a
+    /// different shard class). Returns `false` (leaving `out` empty) once
+    /// the queue is closed **and** drained; while closed-but-backlogged,
+    /// routing and dedup are suspended and any consumer drains up to its
+    /// width so shutdown cannot strand requests.
+    pub fn claim_window_into(
+        &self,
+        width: usize,
+        max_delay: Duration,
+        class: ShardClass,
+        out: &mut Vec<Request>,
+    ) -> bool {
         assert!(width >= 1, "max_batch must be >= 1");
+        out.clear();
         let mut s = self.state.lock().unwrap();
         loop {
             let now = Instant::now();
             let deadline = s.q.front().map(|first| first.enqueued + max_delay);
             let deadline_passed = deadline.is_some_and(|d| now >= d);
-            let claim = if s.closed {
-                // shutdown drain: routing no longer matters
+            let take = if s.closed {
+                // shutdown drain: routing and dedup no longer matter
                 match s.q.len() {
-                    0 => return None,
+                    0 => return false,
                     n => Some(n.min(width)),
                 }
             } else {
-                class.claimable(s.q.len(), width, deadline_passed)
+                let pending = s.q.len();
+                if !class.may_claim(pending, width, deadline_passed) {
+                    None
+                } else {
+                    let shape = window_shape(&s.q, width, self.dedup);
+                    class
+                        .claimable(shape.uniques, pending, width, deadline_passed)
+                        .map(|c| match c {
+                            Claim::Full => shape.full_take,
+                            Claim::Tail => pending,
+                        })
+                }
             };
-            if let Some(n) = claim {
-                let batch: Vec<Request> = s.q.drain(..n).collect();
+            if let Some(n) = take {
+                out.extend(s.q.drain(..n));
                 if !s.q.is_empty() {
                     self.cv.notify_all();
                 }
-                return Some(batch);
+                return true;
             }
             s = match deadline {
                 // still coalescing: sleep until the window's deadline
@@ -247,10 +444,24 @@ mod tests {
 
     fn req(session: u64) -> (Request, std::sync::mpsc::Receiver<Reply>) {
         let (tx, rx) = channel();
-        (
-            Request { session, obs: vec![session as f32], enqueued: Instant::now(), reply: tx },
-            rx,
-        )
+        (Request::new(session, vec![session as f32], tx), rx)
+    }
+
+    /// A request whose observation (and therefore dedup hash) is chosen
+    /// by the test, independent of the session id.
+    fn req_obs(session: u64, obs: Vec<f32>) -> (Request, std::sync::mpsc::Receiver<Reply>) {
+        let (tx, rx) = channel();
+        (Request::new(session, obs, tx), rx)
+    }
+
+    #[test]
+    fn request_new_stamps_the_observation_hash() {
+        let (a, _rxa) = req_obs(0, vec![1.0, 2.0]);
+        let (b, _rxb) = req_obs(1, vec![1.0, 2.0]);
+        let (c, _rxc) = req_obs(2, vec![1.0, 2.5]);
+        assert_eq!(a.obs_hash, b.obs_hash, "identical obs must share a hash");
+        assert_ne!(a.obs_hash, c.obs_hash);
+        assert_eq!(a.obs_hash, obs_fnv1a(&a.obs));
     }
 
     #[test]
@@ -300,6 +511,81 @@ mod tests {
     }
 
     #[test]
+    fn duplicates_ride_along_with_a_full_window() {
+        // 3 distinct observations fill a width-3 window; the interleaved
+        // and trailing duplicates of them are claimed in the same window
+        // (they will collapse into the same backend slots), and the next
+        // distinct observation is left behind
+        let q = SubmissionQueue::new();
+        let obs = [vec![1.0f32], vec![2.0f32], vec![1.0f32], vec![3.0f32], vec![2.0f32]];
+        let mut rxs = Vec::new();
+        for (i, o) in obs.iter().enumerate() {
+            let (r, rx) = req_obs(i as u64, o.clone());
+            q.push(r);
+            rxs.push(rx);
+        }
+        let (r, rx) = req_obs(9, vec![4.0]); // 4th distinct: next window
+        q.push(r);
+        rxs.push(rx);
+        let batch = q.next_batch(3, Duration::from_secs(10)).unwrap();
+        assert_eq!(
+            batch.iter().map(|r| r.session).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3, 4],
+            "the full window must include every duplicate of its 3 uniques"
+        );
+        assert_eq!(q.len(), 1, "the 4th distinct observation starts the next window");
+    }
+
+    #[test]
+    fn all_duplicate_backlog_claims_in_one_window() {
+        let q = SubmissionQueue::new();
+        let mut rxs = Vec::new();
+        for i in 0..10 {
+            let (r, rx) = req_obs(i, vec![7.0]);
+            q.push(r);
+            rxs.push(rx);
+        }
+        // one unique observation: no full window at width 4, but the
+        // raw-full trigger (and the expired deadline) flushes all 10
+        // requests as one window
+        let batch = q.next_batch(4, Duration::ZERO).unwrap();
+        assert_eq!(batch.len(), 10, "duplicates must not be split across windows");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn duplicate_backlog_flushes_eagerly_at_raw_width() {
+        // a width-deep backlog of ONE unique observation must not wait
+        // out the coalescing deadline: the raw-full trigger flushes it
+        let q = SubmissionQueue::new();
+        let mut rxs = Vec::new();
+        for i in 0..6 {
+            let (r, rx) = req_obs(i, vec![7.0]);
+            q.push(r);
+            rxs.push(rx);
+        }
+        let t0 = Instant::now();
+        let batch = q.next_batch(4, Duration::from_secs(10)).unwrap();
+        assert_eq!(batch.len(), 6, "the whole duplicate backlog is one window");
+        assert!(t0.elapsed() < Duration::from_secs(2), "raw-full must skip the deadline");
+    }
+
+    #[test]
+    fn without_dedup_claims_cap_at_width_in_requests() {
+        let q = SubmissionQueue::without_dedup();
+        assert!(!q.dedup());
+        let mut rxs = Vec::new();
+        for i in 0..6 {
+            let (r, rx) = req_obs(i, vec![7.0]); // all identical
+            q.push(r);
+            rxs.push(rx);
+        }
+        let batch = q.next_batch(4, Duration::ZERO).unwrap();
+        assert_eq!(batch.len(), 4, "raw-count claiming must cap at width");
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
     fn close_rejects_pushes_and_drains_backlog() {
         let q = SubmissionQueue::new();
         let (r, _rx) = req(1);
@@ -329,29 +615,107 @@ mod tests {
     #[test]
     fn wide_shard_claims_full_windows_eagerly_and_tails_at_deadline() {
         let wide = ShardClass::Wide { leave_to_small: None };
-        assert_eq!(wide.claimable(8, 8, false), Some(8), "full window claims immediately");
-        assert_eq!(wide.claimable(11, 8, false), Some(8), "over-full clamps to width");
-        assert_eq!(wide.claimable(3, 8, false), None, "partials coalesce until deadline");
-        assert_eq!(wide.claimable(3, 8, true), Some(3), "deadline flushes the tail");
-        assert_eq!(wide.claimable(0, 8, true), None);
+        assert_eq!(wide.claimable(8, 8, 8, false), Some(Claim::Full), "full window is eager");
+        assert_eq!(wide.claimable(9, 11, 8, false), Some(Claim::Full), "over-full still full");
+        assert_eq!(wide.claimable(3, 3, 8, false), None, "partials coalesce until deadline");
+        assert_eq!(
+            wide.claimable(3, 3, 8, true),
+            Some(Claim::Tail),
+            "deadline flushes the tail"
+        );
+        assert_eq!(wide.claimable(0, 0, 8, true), None);
+    }
+
+    #[test]
+    fn wide_shard_flushes_raw_full_duplicate_backlogs_eagerly() {
+        // width requests pending but fewer uniques: still one forward, so
+        // duplicates must not sit out the coalescing deadline
+        let wide = ShardClass::Wide { leave_to_small: None };
+        assert_eq!(wide.claimable(1, 8, 8, false), Some(Claim::Tail), "all-duplicate burst");
+        assert_eq!(wide.claimable(3, 10, 8, false), Some(Claim::Tail));
+        assert_eq!(wide.claimable(3, 7, 8, false), None, "below raw width: keep coalescing");
+        // pre-deadline the raw-full trigger outranks leave_to_small
+        // (the small shard never competes before the deadline)...
+        let routed = ShardClass::Wide { leave_to_small: Some(4) };
+        assert_eq!(routed.claimable(2, 9, 8, false), Some(Claim::Tail));
+        // ...but at the deadline the disjoint unique-count routing takes
+        // over: <= small width is the small shard's window, so exactly
+        // one class is ever entitled to a backlog
+        assert_eq!(routed.claimable(2, 9, 8, true), None, "deadline: small's window");
+        assert_eq!(wide.claimable(1, 8, 8, true), Some(Claim::Tail), "no small shard: wide");
+    }
+
+    #[test]
+    fn may_claim_gate_is_a_superset_of_claimable() {
+        // the cheap gate must never block an entitled claim: sweep the
+        // decision space (uniques <= pending) and check the implication
+        for &class in &[
+            ShardClass::Wide { leave_to_small: None },
+            ShardClass::Wide { leave_to_small: Some(2) },
+            ShardClass::Small,
+        ] {
+            for width in 1..=5usize {
+                for pending in 0..=8usize {
+                    for uniques in 0..=pending.min(width + 1) {
+                        for deadline in [false, true] {
+                            if class.claimable(uniques, pending, width, deadline).is_some() {
+                                assert!(
+                                    class.may_claim(pending, width, deadline),
+                                    "gate blocked an entitled claim: {class:?} u={uniques} \
+                                     p={pending} w={width} d={deadline}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]
     fn wide_shard_leaves_small_deadline_windows_to_the_fast_path() {
         let wide = ShardClass::Wide { leave_to_small: Some(4) };
-        assert_eq!(wide.claimable(4, 8, true), None, "<= small width: small shard's window");
-        assert_eq!(wide.claimable(5, 8, true), Some(5), "> small width: wide takes it");
-        assert_eq!(wide.claimable(8, 8, false), Some(8), "full windows unaffected");
-        assert_eq!(wide.claimable(4, 8, false), None);
+        assert_eq!(wide.claimable(4, 4, 8, true), None, "<= small width: small's window");
+        assert_eq!(
+            wide.claimable(5, 5, 8, true),
+            Some(Claim::Tail),
+            "> small width: wide takes it"
+        );
+        assert_eq!(wide.claimable(8, 8, 8, false), Some(Claim::Full), "full unaffected");
+        assert_eq!(wide.claimable(4, 4, 8, false), None);
     }
 
     #[test]
     fn small_shard_claims_only_deadline_windows_within_its_width() {
         let small = ShardClass::Small;
-        assert_eq!(small.claimable(3, 4, false), None, "waits for the deadline");
-        assert_eq!(small.claimable(3, 4, true), Some(3));
-        assert_eq!(small.claimable(4, 4, true), Some(4));
-        assert_eq!(small.claimable(5, 4, true), None, "too big: wide shard's window");
+        assert_eq!(small.claimable(3, 3, 4, false), None, "waits for the deadline");
+        assert_eq!(small.claimable(3, 3, 4, true), Some(Claim::Tail));
+        assert_eq!(small.claimable(4, 6, 4, true), Some(Claim::Tail), "dupes ride along");
+        assert_eq!(small.claimable(5, 5, 4, true), None, "too big: wide shard's window");
+    }
+
+    #[test]
+    fn window_shape_measures_uniques_and_the_full_prefix() {
+        let mk = |obs: &[f32]| {
+            let mut q = VecDeque::new();
+            let mut rxs = Vec::new();
+            for (i, &o) in obs.iter().enumerate() {
+                let (r, rx) = req_obs(i as u64, vec![o]);
+                rxs.push(rx);
+                q.push_back(r);
+            }
+            (q, rxs)
+        };
+        let (q, _rxs) = mk(&[1.0, 2.0, 1.0, 3.0, 2.0, 4.0]);
+        let s = window_shape(&q, 3, true);
+        assert_eq!(s.uniques, 4, "must saturate at width + 1");
+        assert_eq!(s.full_take, 5, "prefix covers 3 uniques + trailing duplicates");
+        let s2 = window_shape(&q, 8, true);
+        assert_eq!(s2.uniques, 4);
+        assert_eq!(s2.full_take, 6, "under-full backlog: the whole queue");
+        let raw = window_shape(&q, 3, false);
+        assert_eq!(raw.uniques, 4, "raw counts saturate at width + 1 too");
+        assert_eq!(raw.full_take, 3, "raw full windows cap at width requests");
     }
 
     #[test]
@@ -392,7 +756,8 @@ mod tests {
         }
         wait_empty(&q);
         assert!(q.is_empty(), "straggler window not claimed");
-        // a full window of 8: the wide shard takes it before the deadline
+        // a full window of 8 distinct obs: the wide shard takes it before
+        // the deadline
         for i in 10..18 {
             let (r, rx) = req(i);
             q.push(r);
@@ -423,5 +788,24 @@ mod tests {
         let wide = ShardClass::Wide { leave_to_small: Some(2) };
         assert_eq!(q.claim_window(2, Duration::ZERO, wide).unwrap().len(), 1);
         assert!(q.claim_window(2, Duration::ZERO, ShardClass::Small).is_none());
+    }
+
+    #[test]
+    fn claim_window_into_recycles_the_buffer() {
+        let q = SubmissionQueue::new();
+        let mut buf: Vec<Request> = Vec::new();
+        for round in 0..3u64 {
+            for i in 0..4 {
+                let (r, _rx) = req(round * 10 + i);
+                q.push(r);
+            }
+            let class = ShardClass::Wide { leave_to_small: None };
+            assert!(q.claim_window_into(4, Duration::ZERO, class, &mut buf));
+            assert_eq!(buf.len(), 4, "round {round}");
+        }
+        q.close();
+        let class = ShardClass::Wide { leave_to_small: None };
+        assert!(!q.claim_window_into(4, Duration::ZERO, class, &mut buf));
+        assert!(buf.is_empty(), "a shutdown claim must leave the buffer empty");
     }
 }

@@ -17,6 +17,16 @@
 //! synthetic-client load generator (`paac serve`,
 //! `benches/serve_throughput.rs`) exercise the identical submit/reply
 //! path.
+//!
+//! Since PR 5 the query path is **cache-first**: with
+//! [`ServeConfig::cache`] > 0 every handle probes a shared versioned
+//! [`ResponseCache`](super::cache::ResponseCache) before touching the
+//! queue, so a repeat observation costs one lock instead of a queue
+//! round trip and a backend slot. Misses fall through to the queue and
+//! insert their reply on the way back. The cache is keyed under the
+//! server's `params_version` ([`PolicyServer::bump_params_version`] —
+//! the hook any future checkpoint-hot-reload path must call), which
+//! makes a stale hit impossible by construction.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, RecvTimeoutError};
@@ -27,15 +37,21 @@ use std::time::{Duration, Instant};
 use crate::error::{Error, Result};
 
 use super::batcher::{BackendFactory, Batcher, InferBackend};
+use super::cache::{obs_fnv1a, ResponseCache};
 use super::queue::{Reply, Request, ShardClass, SubmissionQueue};
 use super::stats::{ServeStats, ShardSpec, StatsSnapshot};
+
+/// Bucket-hash seed of the server-owned response cache (any fixed value
+/// works; per-deployment seeding is a `ResponseCache::new` parameter).
+const CACHE_SEED: u64 = 0x9E37_79B9_7F4A_7C15;
 
 /// Serving configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeConfig {
     /// Coalesce at most this many requests per device call on a wide
     /// shard (clamped to the backend's batch width; `usize::MAX` means
-    /// "the full width").
+    /// "the full width"). With dedup on, the width counts *unique*
+    /// observations — duplicates ride along free.
     pub max_batch: usize,
     /// How long a shard holds a partial batch for stragglers after the
     /// first request arrives.
@@ -47,6 +63,12 @@ pub struct ServeConfig {
     /// the fast path. Takes effect only with `shards >= 2` (the pool
     /// must also have a wide shard to leave full windows to).
     pub small_batch: usize,
+    /// Response-cache capacity in entries; 0 disables the cache (every
+    /// query goes through the queue).
+    pub cache: usize,
+    /// Disable in-flight dedup of bit-identical observations (restores
+    /// the PR 1–4 raw-count batching exactly).
+    pub no_dedup: bool,
 }
 
 impl Default for ServeConfig {
@@ -56,6 +78,8 @@ impl Default for ServeConfig {
             max_delay: Duration::from_millis(2),
             shards: 1,
             small_batch: 0,
+            cache: 0,
+            no_dedup: false,
         }
     }
 }
@@ -77,6 +101,28 @@ impl ServeConfig {
         self.small_batch = width;
         self
     }
+
+    /// Cache up to `entries` responses (0 disables the cache).
+    pub fn with_cache(mut self, entries: usize) -> ServeConfig {
+        self.cache = entries;
+        self
+    }
+
+    /// Toggle in-flight dedup off (`true` = `--no-dedup`).
+    pub fn with_no_dedup(mut self, no_dedup: bool) -> ServeConfig {
+        self.no_dedup = no_dedup;
+        self
+    }
+
+    /// The queue this config calls for (dedup policy baked in).
+    fn build_queue(&self) -> Arc<SubmissionQueue> {
+        Arc::new(SubmissionQueue::with_dedup(!self.no_dedup))
+    }
+
+    /// The response cache this config calls for (None when disabled).
+    fn build_cache(&self) -> Option<Arc<ResponseCache>> {
+        (self.cache > 0).then(|| Arc::new(ResponseCache::new(self.cache, CACHE_SEED)))
+    }
 }
 
 /// A running inference server.
@@ -87,6 +133,8 @@ const REPLY_TIMEOUT_SLACK: Duration = Duration::from_secs(30);
 pub struct PolicyServer {
     queue: Arc<SubmissionQueue>,
     stats: Arc<ServeStats>,
+    /// The shared response cache (None with `ServeConfig::cache == 0`).
+    cache: Option<Arc<ResponseCache>>,
     /// Batcher shard threads, shard-id order.
     batchers: Vec<JoinHandle<Result<()>>>,
     /// Shape of each spawned shard (width + fast-path flag), id order.
@@ -106,7 +154,7 @@ impl PolicyServer {
     /// [`BackendFactory`] to build one backend per shard — see
     /// [`PolicyServer::start_pool`]).
     pub fn start<B: InferBackend + 'static>(backend: B, cfg: ServeConfig) -> PolicyServer {
-        let queue = Arc::new(SubmissionQueue::new());
+        let queue = cfg.build_queue();
         // prefill the real width so telemetry matches start_pool's even
         // before the first batch lands (Batcher::new applies this clamp)
         let width = cfg.max_batch.clamp(1, backend.batch_width());
@@ -124,6 +172,7 @@ impl PolicyServer {
         PolicyServer {
             queue,
             stats,
+            cache: cfg.build_cache(),
             batchers: vec![handle],
             shard_specs: vec![ShardSpec { width: max_batch, small: false }],
             next_session: Arc::new(AtomicU64::new(0)),
@@ -193,7 +242,7 @@ impl PolicyServer {
             })
             .collect();
 
-        let queue = Arc::new(SubmissionQueue::new());
+        let queue = cfg.build_queue();
         let stats = Arc::new(ServeStats::for_shards(&specs));
         let obs_len = factory.obs_len();
         let actions = factory.actions();
@@ -222,6 +271,7 @@ impl PolicyServer {
         Ok(PolicyServer {
             queue,
             stats,
+            cache: cfg.build_cache(),
             batchers,
             shard_specs: specs,
             next_session: Arc::new(AtomicU64::new(0)),
@@ -261,6 +311,31 @@ impl PolicyServer {
         &self.shard_specs
     }
 
+    /// Response-cache capacity in entries (None when the cache is off).
+    pub fn cache_capacity(&self) -> Option<usize> {
+        self.cache.as_ref().map(|c| c.capacity())
+    }
+
+    /// Entries currently cached (0 when the cache is off).
+    pub fn cache_len(&self) -> usize {
+        self.cache.as_ref().map_or(0, |c| c.len())
+    }
+
+    /// The parameter-set version cached replies are keyed under (0 when
+    /// the cache is off or the parameters never changed).
+    pub fn params_version(&self) -> u64 {
+        self.cache.as_ref().map_or(0, |c| c.version())
+    }
+
+    /// Declare that the served parameters changed (checkpoint restore):
+    /// every cached reply is evicted and future inserts key under a
+    /// fresh version, so a reloaded model can never serve stale logits.
+    /// Returns the new version. Any future hot-reload path MUST call
+    /// this after swapping the backend parameters.
+    pub fn bump_params_version(&self) -> u64 {
+        self.cache.as_ref().map_or(0, |c| c.bump_version())
+    }
+
     /// Point-in-time serving stats.
     pub fn stats(&self) -> StatsSnapshot {
         self.stats.snapshot()
@@ -288,6 +363,7 @@ impl PolicyServer {
         Connector {
             queue: self.queue.clone(),
             stats: self.stats.clone(),
+            cache: self.cache.clone(),
             next_session: self.next_session.clone(),
             obs_len: self.obs_len,
             actions: self.actions,
@@ -334,6 +410,7 @@ impl Drop for PolicyServer {
 pub struct Connector {
     queue: Arc<SubmissionQueue>,
     stats: Arc<ServeStats>,
+    cache: Option<Arc<ResponseCache>>,
     next_session: Arc<AtomicU64>,
     obs_len: usize,
     actions: usize,
@@ -346,6 +423,8 @@ impl Connector {
         ClientHandle {
             session: self.next_session.fetch_add(1, Ordering::Relaxed),
             queue: self.queue.clone(),
+            stats: self.stats.clone(),
+            cache: self.cache.clone(),
             obs_len: self.obs_len,
             actions: self.actions,
             default_timeout: self.default_timeout,
@@ -376,9 +455,16 @@ impl Connector {
 /// inherently sequential (the next observation depends on the previous
 /// action) — so a plain blocking `query` is the whole API. Handles are
 /// `Send`; give each client thread its own via [`PolicyServer::connect`].
+///
+/// The query path is cache-first when the server has a response cache:
+/// probe, and only on a miss pay the queue round trip (inserting the
+/// reply on the way back). TCP bridges drive these same handles, so
+/// remote clients get the cache for free.
 pub struct ClientHandle {
     session: u64,
     queue: Arc<SubmissionQueue>,
+    stats: Arc<ServeStats>,
+    cache: Option<Arc<ResponseCache>>,
     obs_len: usize,
     actions: usize,
     /// Coalescing deadline + slack (see `REPLY_TIMEOUT_SLACK`).
@@ -413,14 +499,42 @@ impl ClientHandle {
                 self.obs_len
             )));
         }
+        // cache-first: a hit answers without the queue, the batcher, or a
+        // device call ever seeing the query (bit-identical by the
+        // backends' determinism-per-observation contract). The hash is
+        // skipped entirely when nothing consumes it (--no-dedup, no
+        // cache), so the eliminator-off baseline pays zero overhead.
+        let obs_hash = if self.cache.is_some() || self.queue.dedup() {
+            obs_fnv1a(obs)
+        } else {
+            0
+        };
+        // the version the eventual reply is computed under, captured at
+        // probe time: an insert racing a checkpoint restore
+        // (bump_params_version) must never file old-parameter logits
+        // under the new version, so the put below passes this through
+        let mut probe_version = 0;
+        if let Some(cache) = &self.cache {
+            probe_version = cache.version();
+            if let Some(reply) = cache.get(obs, obs_hash) {
+                self.stats.record_cache_hit();
+                return Ok(reply);
+            }
+            self.stats.record_cache_miss();
+        }
         // One channel per query: a timed-out query's late reply lands on
         // this (abandoned) receiver instead of a later query's, and if
         // the batcher dies and drops the request, the disconnect fails
         // the wait immediately rather than after the full timeout.
         let (reply_tx, reply_rx) = channel();
+        // observation buffers are recycled through the queue's pool (the
+        // batcher returns them once the row is staged)
+        let mut obs_buf = self.queue.obs_pool().take();
+        obs_buf.extend_from_slice(obs);
         let accepted = self.queue.push(Request {
             session: self.session,
-            obs: obs.to_vec(),
+            obs: obs_buf,
+            obs_hash,
             enqueued: Instant::now(),
             reply: reply_tx,
         });
@@ -428,7 +542,12 @@ impl ClientHandle {
             return Err(Error::serve("server is shut down"));
         }
         match reply_rx.recv_timeout(timeout) {
-            Ok(reply) => Ok(reply),
+            Ok(reply) => {
+                if let Some(cache) = &self.cache {
+                    cache.put(probe_version, obs, obs_hash, &reply);
+                }
+                Ok(reply)
+            }
             Err(RecvTimeoutError::Timeout) => {
                 Err(Error::serve(format!("no reply within {timeout:?}")))
             }
@@ -591,8 +710,12 @@ mod tests {
             .map(|_| {
                 let handle = server.connect();
                 std::thread::spawn(move || {
+                    // per-session distinct observations: identical ones
+                    // would coalesce into one slot (see the dedup tests)
+                    // and deliberately NOT fill windows
+                    let base = handle.session() as f32;
                     for q in 0..40 {
-                        handle.query(&[q as f32 * 0.01; 4]).unwrap();
+                        handle.query(&[q as f32 * 0.01 + base; 4]).unwrap();
                     }
                 })
             })
@@ -612,6 +735,69 @@ mod tests {
         // every query got an answer regardless of which shard claimed it
         let shard_total: u64 = snap.shards.iter().map(|s| s.queries).sum();
         assert_eq!(shard_total, snap.queries);
+    }
+
+    #[test]
+    fn cache_hits_skip_the_queue_and_stay_bitwise() {
+        let server = PolicyServer::start(
+            SyntheticBackend::new(2, 4, 6, 11),
+            ServeConfig::new(2, Duration::ZERO).with_cache(64),
+        );
+        assert_eq!(server.cache_capacity(), Some(64));
+        let client = server.connect();
+        let obs = [0.3f32, -0.7, 1.5, 0.0];
+        let first = client.query(&obs).unwrap();
+        let second = client.query(&obs).unwrap();
+        assert_eq!(second, first);
+        let bits = |r: &crate::serve::Reply| -> Vec<u32> {
+            r.probs.iter().map(|p| p.to_bits()).chain([r.value.to_bits()]).collect()
+        };
+        assert_eq!(bits(&second), bits(&first), "a cached reply must be bit-identical");
+        assert_eq!(server.cache_len(), 1);
+        let snap = server.shutdown().unwrap();
+        assert_eq!(snap.queries, 1, "the repeat query must never reach the batcher");
+        assert_eq!(snap.cache.hits, 1);
+        assert_eq!(snap.cache.misses, 1);
+        assert!((snap.cache.hit_rate - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn params_version_bump_evicts_cached_replies() {
+        let server = PolicyServer::start(
+            SyntheticBackend::new(2, 4, 6, 3),
+            ServeConfig::new(2, Duration::ZERO).with_cache(16),
+        );
+        let client = server.connect();
+        let obs = [0.9f32; 4];
+        let before = client.query(&obs).unwrap();
+        assert_eq!(server.cache_len(), 1);
+        assert_eq!(server.params_version(), 0);
+        // the checkpoint-restore contract: bump evicts everything
+        assert_eq!(server.bump_params_version(), 1);
+        assert_eq!(server.cache_len(), 0);
+        assert_eq!(server.params_version(), 1);
+        // the re-query recomputes (a fresh miss) and re-caches under v1;
+        // the backend is unchanged, so the bits still agree
+        let after = client.query(&obs).unwrap();
+        assert_eq!(after, before);
+        assert_eq!(server.cache_len(), 1);
+        let snap = server.shutdown().unwrap();
+        assert_eq!(snap.queries, 2, "both queries paid a forward after the bump");
+        assert_eq!(snap.cache.hits, 0);
+        assert_eq!(snap.cache.misses, 2);
+    }
+
+    #[test]
+    fn cache_off_server_reports_zero_cache_activity() {
+        let server = synthetic_server(2, 4, Duration::ZERO);
+        assert_eq!(server.cache_capacity(), None);
+        let client = server.connect();
+        client.query(&[0.5; 4]).unwrap();
+        client.query(&[0.5; 4]).unwrap();
+        let snap = server.shutdown().unwrap();
+        assert_eq!(snap.queries, 2);
+        assert_eq!(snap.cache.hits, 0);
+        assert_eq!(snap.cache.misses, 0, "no cache, no probes booked");
     }
 
     #[test]

@@ -15,7 +15,12 @@
 //! bit-for-bit against sequential serving — and, since backends are
 //! width-transparent, sessions are also **shard-agnostic**: a client
 //! cannot tell (except by latency) whether a reply came from the
-//! small-batch fast-path shard or a wide shard.
+//! small-batch fast-path shard or a wide shard. The same purity makes
+//! sessions **cache- and dedup-agnostic**: a reply answered from the
+//! response cache ([`crate::serve::cache`]) or fanned out from a
+//! coalesced backend slot is bit-identical to a dedicated forward, so
+//! episodes play out the same with the redundancy eliminator on or off
+//! (integration-tested in-process and over TCP).
 //!
 //! Sessions are also **transport-agnostic**: [`Session`] is generic over
 //! [`QueryTransport`], so the identical session code drives an

@@ -22,6 +22,17 @@
 //! network deployment is observable through the same snapshot as the
 //! batcher shards. An in-process-only server reports all-zero transport
 //! counters.
+//!
+//! Since PR 5 the stats also make the **redundancy eliminator**
+//! observable: client handles book response-cache hits and misses, the
+//! batcher books coalesced slots (duplicate requests answered from a
+//! shared backend input slot), and the snapshot carries a
+//! [`CacheSnapshot`] — rendered as a `"cache"` object in `serve.jsonl`
+//! records. Batch accounting distinguishes **device rows** (unique
+//! observations staged into the backend, the fill numerator) from
+//! **queries** (replies fanned out), so with dedup a batch can serve
+//! more queries than its width; without dedup the two coincide and every
+//! pre-PR 5 number is unchanged.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -89,6 +100,8 @@ struct ShardCell {
     small: bool,
     queries: AtomicU64,
     batches: AtomicU64,
+    /// Live device rows staged (unique observations; fill numerator).
+    row_slots: AtomicU64,
     capacity_slots: AtomicU64,
     full_batches: AtomicU64,
     latencies_ms: Mutex<LatencyReservoir>,
@@ -101,11 +114,25 @@ impl ShardCell {
             small: spec.small,
             queries: AtomicU64::new(0),
             batches: AtomicU64::new(0),
+            row_slots: AtomicU64::new(0),
             capacity_slots: AtomicU64::new(0),
             full_batches: AtomicU64::new(0),
             latencies_ms: Mutex::new(LatencyReservoir::new(stream)),
         }
     }
+}
+
+/// Redundancy-eliminator counters (cache probes from the client handles,
+/// coalesced slots from the batcher shards).
+#[derive(Default)]
+struct CacheCell {
+    /// Queries answered straight from the response cache (never queued).
+    hits: AtomicU64,
+    /// Cache probes that fell through to the queue (cache enabled only).
+    misses: AtomicU64,
+    /// Duplicate in-flight requests answered from a shared backend input
+    /// slot instead of their own (queries minus device rows).
+    coalesced: AtomicU64,
 }
 
 /// Transport-frontend counters (written by the accept/bridge threads;
@@ -128,6 +155,9 @@ struct TransportCell {
 pub struct ServeStats {
     queries: AtomicU64,
     batches: AtomicU64,
+    /// Sum of live device rows staged (fill numerator; == queries
+    /// without dedup).
+    row_slots: AtomicU64,
     /// Sum of per-batch capacities (fill denominator).
     capacity_slots: AtomicU64,
     /// Batches that flushed at full width (vs. deadline flushes).
@@ -140,6 +170,8 @@ pub struct ServeStats {
     shards: Vec<ShardCell>,
     /// Network-frontend counters (zero without a transport).
     transport: TransportCell,
+    /// Redundancy-eliminator counters (zero with cache + dedup off).
+    cache: CacheCell,
     started: Instant,
 }
 
@@ -155,6 +187,7 @@ impl ServeStats {
         ServeStats {
             queries: AtomicU64::new(0),
             batches: AtomicU64::new(0),
+            row_slots: AtomicU64::new(0),
             capacity_slots: AtomicU64::new(0),
             full_batches: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
@@ -165,6 +198,7 @@ impl ServeStats {
                 .map(|(i, s)| ShardCell::new(*s, 101 + i as u64))
                 .collect(),
             transport: TransportCell::default(),
+            cache: CacheCell::default(),
             started: Instant::now(),
         }
     }
@@ -174,20 +208,24 @@ impl ServeStats {
         self.shards.len()
     }
 
-    /// Record one executed batch on shard `shard`: `fill` live rows out
-    /// of `capacity` slots, plus each live request's queue->reply latency.
+    /// Record one executed batch on shard `shard`: `rows` live device
+    /// rows (unique observations) out of `capacity` slots, plus each
+    /// served request's queue->reply latency — one entry per reply fanned
+    /// out, so with dedup `latencies.len() >= rows`.
     pub fn record_batch(
         &self,
         shard: usize,
-        fill: usize,
+        rows: usize,
         capacity: usize,
         latencies: &[Duration],
     ) {
-        debug_assert_eq!(fill, latencies.len());
-        self.queries.fetch_add(fill as u64, Ordering::Relaxed);
+        debug_assert!(rows <= latencies.len(), "every staged row answers >= 1 request");
+        let queries = latencies.len() as u64;
+        self.queries.fetch_add(queries, Ordering::Relaxed);
         self.batches.fetch_add(1, Ordering::Relaxed);
+        self.row_slots.fetch_add(rows as u64, Ordering::Relaxed);
         self.capacity_slots.fetch_add(capacity as u64, Ordering::Relaxed);
-        if fill == capacity {
+        if rows == capacity {
             self.full_batches.fetch_add(1, Ordering::Relaxed);
         }
         {
@@ -198,10 +236,11 @@ impl ServeStats {
         }
         if let Some(cell) = self.shards.get(shard) {
             cell.width.fetch_max(capacity as u64, Ordering::Relaxed);
-            cell.queries.fetch_add(fill as u64, Ordering::Relaxed);
+            cell.queries.fetch_add(queries, Ordering::Relaxed);
             cell.batches.fetch_add(1, Ordering::Relaxed);
+            cell.row_slots.fetch_add(rows as u64, Ordering::Relaxed);
             cell.capacity_slots.fetch_add(capacity as u64, Ordering::Relaxed);
-            if fill == capacity {
+            if rows == capacity {
                 cell.full_batches.fetch_add(1, Ordering::Relaxed);
             }
             // a lone shard's reservoir would duplicate the global one;
@@ -219,6 +258,22 @@ impl ServeStats {
     /// Record a request dropped for a malformed payload.
     pub fn record_rejected(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Book one query answered straight from the response cache.
+    pub fn record_cache_hit(&self) {
+        self.cache.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Book one cache probe that fell through to the queue.
+    pub fn record_cache_miss(&self) {
+        self.cache.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Book `n` duplicate in-flight requests coalesced into already
+    /// staged backend slots (the batcher's dedup win for one window).
+    pub fn record_coalesced(&self, n: usize) {
+        self.cache.coalesced.fetch_add(n as u64, Ordering::Relaxed);
     }
 
     /// Book a transport connection opening (bridge thread start).
@@ -254,6 +309,7 @@ impl ServeStats {
     pub fn snapshot(&self) -> StatsSnapshot {
         let queries = self.queries.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
+        let rows = self.row_slots.load(Ordering::Relaxed);
         let capacity = self.capacity_slots.load(Ordering::Relaxed);
         let full = self.full_batches.load(Ordering::Relaxed);
         let (lat, max_ms) = {
@@ -268,6 +324,7 @@ impl ServeStats {
             .map(|(i, cell)| {
                 let q = cell.queries.load(Ordering::Relaxed);
                 let b = cell.batches.load(Ordering::Relaxed);
+                let r = cell.row_slots.load(Ordering::Relaxed);
                 let cap = cell.capacity_slots.load(Ordering::Relaxed);
                 let f = cell.full_batches.load(Ordering::Relaxed);
                 let (slat, smax) = if self.shards.len() == 1 {
@@ -284,7 +341,7 @@ impl ServeStats {
                     queries: q,
                     batches: b,
                     qps: q as f64 / wall_secs.max(1e-9),
-                    mean_batch_fill: if cap > 0 { q as f64 / cap as f64 } else { 0.0 },
+                    mean_batch_fill: if cap > 0 { r as f64 / cap as f64 } else { 0.0 },
                     full_batch_frac: if b > 0 { f as f64 / b as f64 } else { 0.0 },
                     p50_ms: math::percentile(&slat, 50.0) as f64,
                     p99_ms: math::percentile(&slat, 99.0) as f64,
@@ -292,6 +349,8 @@ impl ServeStats {
                 }
             })
             .collect();
+        let hits = self.cache.hits.load(Ordering::Relaxed);
+        let misses = self.cache.misses.load(Ordering::Relaxed);
         StatsSnapshot {
             queries,
             batches,
@@ -302,10 +361,20 @@ impl ServeStats {
                 frames_tx: self.transport.frames_tx.load(Ordering::Relaxed),
                 wire_errors: self.transport.wire_errors.load(Ordering::Relaxed),
             },
+            cache: CacheSnapshot {
+                hits,
+                misses,
+                hit_rate: if hits + misses > 0 {
+                    hits as f64 / (hits + misses) as f64
+                } else {
+                    0.0
+                },
+                coalesced_slots: self.cache.coalesced.load(Ordering::Relaxed),
+            },
             rejected: self.rejected.load(Ordering::Relaxed),
             qps: queries as f64 / wall_secs.max(1e-9),
             mean_batch_fill: if capacity > 0 {
-                queries as f64 / capacity as f64
+                rows as f64 / capacity as f64
             } else {
                 0.0
             },
@@ -420,6 +489,44 @@ impl TransportSnapshot {
     }
 }
 
+/// Redundancy-eliminator counters inside a [`StatsSnapshot`] (all zero
+/// with the cache and dedup both off).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheSnapshot {
+    /// Queries answered straight from the response cache (these never
+    /// reach the queue, so they are NOT part of `queries`).
+    pub hits: u64,
+    /// Cache probes that fell through to the queue.
+    pub misses: u64,
+    /// hits / (hits + misses); 0 when the cache never probed.
+    pub hit_rate: f64,
+    /// Duplicate in-flight requests served from a shared backend input
+    /// slot (queries minus device rows, summed over batches).
+    pub coalesced_slots: u64,
+}
+
+impl CacheSnapshot {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("hits", Json::Num(self.hits as f64)),
+            ("misses", Json::Num(self.misses as f64)),
+            ("hit_rate", Json::Num(self.hit_rate)),
+            ("coalesced_slots", Json::Num(self.coalesced_slots as f64)),
+        ])
+    }
+
+    /// Human-oriented one-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "cache: {} hit(s) / {} miss(es) ({:.0}% hit rate) | {} coalesced slot(s)",
+            self.hits,
+            self.misses,
+            self.hit_rate * 100.0,
+            self.coalesced_slots
+        )
+    }
+}
+
 /// Immutable stats view, ready for reporting.
 #[derive(Clone, Debug)]
 pub struct StatsSnapshot {
@@ -427,6 +534,8 @@ pub struct StatsSnapshot {
     pub batches: u64,
     /// Network-frontend counters (zero without a transport).
     pub transport: TransportSnapshot,
+    /// Response-cache + in-flight-dedup counters.
+    pub cache: CacheSnapshot,
     pub rejected: u64,
     /// Queries per second over the server's lifetime so far.
     pub qps: f64,
@@ -460,6 +569,7 @@ impl StatsSnapshot {
             ("wall_secs", Json::Num(self.wall_secs)),
             ("shards", Json::Arr(self.shards.iter().map(|s| s.to_json()).collect())),
             ("transport", self.transport.to_json()),
+            ("cache", self.cache.to_json()),
         ])
     }
 
@@ -584,8 +694,44 @@ mod tests {
         assert!(j.contains("\"small\":false"));
         assert!(j.contains("\"transport\":{"), "transport counters missing from JSON");
         assert!(j.contains("\"frames_rx\":0"));
+        assert!(j.contains("\"cache\":{"), "cache counters missing from JSON");
+        assert!(j.contains("\"coalesced_slots\":0"));
         assert!(crate::util::json::Json::parse(&j).is_ok());
         assert!(snap.summary().contains("2 queries"));
+    }
+
+    #[test]
+    fn cache_counters_accumulate_and_rate_is_well_defined() {
+        let s = ServeStats::new();
+        assert_eq!(s.snapshot().cache, CacheSnapshot::default());
+        s.record_cache_hit();
+        s.record_cache_hit();
+        s.record_cache_hit();
+        s.record_cache_miss();
+        s.record_coalesced(5);
+        s.record_coalesced(2);
+        let c = s.snapshot().cache;
+        assert_eq!((c.hits, c.misses), (3, 1));
+        assert!((c.hit_rate - 0.75).abs() < 1e-9);
+        assert_eq!(c.coalesced_slots, 7);
+        assert!(c.summary().contains("3 hit(s)"));
+        let j = s.snapshot().to_json().to_string_compact();
+        assert!(j.contains("\"hits\":3"));
+        assert!(j.contains("\"coalesced_slots\":7"));
+    }
+
+    #[test]
+    fn dedup_batches_serve_more_queries_than_device_rows() {
+        // one batch: 2 unique rows out of 4 slots fanned out to 6 requests
+        let s = ServeStats::new();
+        s.record_batch(0, 2, 4, &[Duration::from_millis(1); 6]);
+        let snap = s.snapshot();
+        assert_eq!(snap.queries, 6, "every fanned-out reply is a served query");
+        assert_eq!(snap.batches, 1);
+        assert!((snap.mean_batch_fill - 0.5).abs() < 1e-9, "fill counts device rows");
+        assert_eq!(snap.full_batch_frac, 0.0, "2/4 rows is not a full batch");
+        assert_eq!(snap.shards[0].queries, 6);
+        assert!((snap.shards[0].mean_batch_fill - 0.5).abs() < 1e-9);
     }
 
     #[test]

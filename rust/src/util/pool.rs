@@ -1,14 +1,66 @@
-//! Fixed-size worker thread pool (no rayon/crossbeam in the offline set).
+//! Fixed-size worker thread pool and buffer recycling (no
+//! rayon/crossbeam in the offline set).
 //!
-//! Used by the evaluator (parallel episode rollouts) and the bench
-//! harness. The vectorized environment has its own dedicated worker
+//! [`Pool`] is used by the evaluator (parallel episode rollouts) and the
+//! bench harness. The vectorized environment has its own dedicated worker
 //! threads that *own* their environment slices (the paper's `n_w` workers,
 //! see `envs::vec_env`) — this pool is the general-purpose substrate.
+//!
+//! [`BufPool`] is the general-purpose sibling of the `VecEnv`
+//! reply-buffer recycling: a capacity-bounded stash of `Vec<T>`s so hot
+//! loops reuse allocations instead of minting fresh `Vec`s per batch.
+//! Its consumer is the serve submission queue (`SubmissionQueue::
+//! obs_pool`), which round-trips request *observation* buffers between
+//! client handles and the batcher — reply probs buffers are NOT pooled,
+//! since they ship to (and are consumed by) the client.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+
+/// A recycling pool of `Vec<T>` buffers.
+///
+/// `take` hands out an empty vector (reusing a stashed allocation when
+/// one is available); `put` clears a spent vector and stashes it for the
+/// next `take`, dropping it instead once `max_idle` buffers are already
+/// waiting — so a traffic burst cannot pin its peak memory forever.
+/// Buffers keep their capacity across the round trip, which is the whole
+/// point: a steady-state consumer that `put`s as often as it `take`s
+/// allocates nothing.
+pub struct BufPool<T> {
+    bufs: Mutex<Vec<Vec<T>>>,
+    max_idle: usize,
+}
+
+impl<T> BufPool<T> {
+    /// A pool retaining at most `max_idle` spare buffers.
+    pub fn new(max_idle: usize) -> BufPool<T> {
+        BufPool { bufs: Mutex::new(Vec::new()), max_idle }
+    }
+
+    /// An empty buffer, recycled when possible.
+    pub fn take(&self) -> Vec<T> {
+        self.bufs.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Return a spent buffer (cleared here) for reuse.
+    pub fn put(&self, mut buf: Vec<T>) {
+        buf.clear();
+        if buf.capacity() == 0 {
+            return; // nothing worth stashing
+        }
+        let mut bufs = self.bufs.lock().unwrap();
+        if bufs.len() < self.max_idle {
+            bufs.push(buf);
+        }
+    }
+
+    /// Spare buffers currently stashed (diagnostics).
+    pub fn idle(&self) -> usize {
+        self.bufs.lock().unwrap().len()
+    }
+}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -193,5 +245,33 @@ mod tests {
         let pool = Pool::new(2);
         pool.execute(|| {});
         drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn buf_pool_recycles_capacity() {
+        let pool: BufPool<f32> = BufPool::new(4);
+        let mut a = pool.take();
+        assert!(a.is_empty());
+        a.extend_from_slice(&[1.0, 2.0, 3.0]);
+        let ptr = a.as_ptr();
+        let cap = a.capacity();
+        pool.put(a);
+        assert_eq!(pool.idle(), 1);
+        let b = pool.take();
+        assert!(b.is_empty(), "recycled buffers must come back cleared");
+        assert_eq!(b.as_ptr(), ptr, "take must reuse the stashed allocation");
+        assert!(b.capacity() >= cap);
+        assert_eq!(pool.idle(), 0);
+    }
+
+    #[test]
+    fn buf_pool_bounds_idle_buffers() {
+        let pool: BufPool<u8> = BufPool::new(2);
+        for _ in 0..5 {
+            pool.put(Vec::with_capacity(16));
+        }
+        assert_eq!(pool.idle(), 2, "idle stash must cap at max_idle");
+        pool.put(Vec::new()); // capacity-0 buffers are not worth stashing
+        assert_eq!(pool.idle(), 2);
     }
 }

@@ -29,6 +29,11 @@ fn pool(width: usize, shards: usize, small: usize, delay_us: u64, seed: u64) -> 
     PolicyServer::start_pool(&factory, cfg).expect("start shard pool")
 }
 
+fn pool_cfg(cfg: ServeConfig, seed: u64) -> PolicyServer {
+    let factory = SyntheticFactory::new(ObsMode::Grid.obs_len(), ACTIONS, seed);
+    PolicyServer::start_pool(&factory, cfg).expect("start shard pool")
+}
+
 #[test]
 fn concurrent_sessions_stats_match_client_counts() {
     let clients = 6;
@@ -205,6 +210,121 @@ fn remote_handle_reports_server_shape_and_survives_reconnects() {
     let snap = srv.shutdown().unwrap();
     assert_eq!(snap.transport.connections, 3);
     assert_eq!(snap.queries, 3);
+}
+
+#[test]
+fn cache_and_dedup_leave_in_process_episodes_bit_identical() {
+    // the acceptance gate for the redundancy eliminator: the same client
+    // workload served with the response cache + dedup on, with only
+    // dedup, and with both off must play out identically — same
+    // episodes, same returns, same served values, bit for bit. Backends
+    // are deterministic per observation, so a cached or fanned-out reply
+    // is indistinguishable from a dedicated forward.
+    let clients = 6;
+    let queries = 200;
+    let base = ServeConfig::new(8, Duration::from_micros(300));
+    let run = |cfg: ServeConfig| {
+        let srv = pool_cfg(cfg, 33);
+        let reports =
+            run_clients(&srv, GameId::Catch, ObsMode::Grid, 13, 10, clients, queries).unwrap();
+        let snap = srv.shutdown().unwrap();
+        (fingerprints(&reports), snap)
+    };
+    let (eliminated, snap_on) = run(base.with_cache(1024));
+    let (dedup_only, _) = run(base);
+    let (plain, snap_off) = run(base.with_no_dedup(true));
+    assert_eq!(eliminated, plain, "cache+dedup changed served trajectories");
+    assert_eq!(dedup_only, plain, "dedup changed served trajectories");
+    // accounting stays conservation-exact: every client query is either
+    // a cache hit or a batcher-served query
+    let total = (clients * queries) as u64;
+    assert_eq!(snap_on.queries + snap_on.cache.hits, total);
+    assert_eq!(snap_on.cache.hits + snap_on.cache.misses, total);
+    assert_eq!(snap_off.queries, total);
+    assert_eq!(snap_off.cache.hits + snap_off.cache.misses, 0);
+    assert_eq!(snap_off.cache.coalesced_slots, 0);
+}
+
+#[test]
+fn tcp_loopback_cache_on_matches_cache_off_bit_for_bit() {
+    // the --cache 1024 vs --cache 0 gate, over the real wire: remote
+    // episodes must be bit-identical whether the server answers from the
+    // cache-first path or pays a forward per query
+    let clients = 4;
+    let queries = 150;
+    let cfg = ServeConfig::new(8, Duration::from_micros(300));
+    let run = |cfg: ServeConfig| {
+        let srv = pool_cfg(cfg, 33);
+        let frontend = TcpFrontend::bind("127.0.0.1:0", srv.connector(), None).unwrap();
+        let addr = frontend.local_addr().to_string();
+        let reports =
+            run_remote_clients(&addr, GameId::Catch, ObsMode::Grid, 13, 10, clients, queries)
+                .unwrap();
+        frontend.shutdown().unwrap();
+        let snap = srv.shutdown().unwrap();
+        (fingerprints(&reports), snap)
+    };
+    let (cached, snap_on) = run(cfg.with_cache(1024));
+    let (uncached, snap_off) = run(cfg);
+    assert_eq!(cached, uncached, "the response cache changed remote trajectories");
+    // every remote query is either a hit or a batcher query; the wire
+    // sees the identical frame traffic either way
+    let total = (clients * queries) as u64;
+    assert_eq!(snap_on.queries + snap_on.cache.hits, total);
+    assert_eq!(snap_on.transport.frames_rx, (clients * (queries + 1)) as u64);
+    assert_eq!(snap_on.transport.frames_rx, snap_off.transport.frames_rx);
+    assert_eq!(snap_off.cache.hits, 0);
+}
+
+#[test]
+fn duplicate_heavy_clients_get_served_with_nonzero_savings() {
+    // many clients submitting the SAME observation concurrently: the
+    // eliminator must answer all of them (cache hits, coalesced slots,
+    // or plain forwards) with bitwise-equal replies, and the stats must
+    // show real savings (strictly fewer device rows than queries)
+    let clients = 8;
+    let per_client = 50;
+    let srv = pool_cfg(
+        ServeConfig::new(8, Duration::from_micros(500)).with_cache(64),
+        21,
+    );
+    let obs = vec![0.625f32; ObsMode::Grid.obs_len()];
+    let threads: Vec<_> = (0..clients)
+        .map(|_| {
+            let handle = srv.connect();
+            let obs = obs.clone();
+            std::thread::spawn(move || {
+                let mut bits = Vec::new();
+                for _ in 0..per_client {
+                    let r = handle.query(&obs).unwrap();
+                    bits.push((
+                        r.probs.iter().map(|p| p.to_bits()).collect::<Vec<_>>(),
+                        r.value.to_bits(),
+                    ));
+                }
+                bits
+            })
+        })
+        .collect();
+    let all: Vec<_> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+    let first = &all[0][0];
+    for (c, client_bits) in all.iter().enumerate() {
+        for (q, b) in client_bits.iter().enumerate() {
+            assert_eq!(b, first, "client {c} query {q} got different bits");
+        }
+    }
+    let snap = srv.shutdown().unwrap();
+    let total = (clients * per_client) as u64;
+    assert_eq!(snap.queries + snap.cache.hits, total);
+    assert!(snap.cache.hits > 0, "repeat queries must hit the cache");
+    // one observation total: at most a handful of misses raced the first
+    // insert; everything else must have been eliminated
+    assert!(
+        snap.cache.hits + snap.cache.coalesced_slots > total / 2,
+        "eliminator saved only {} + {} of {total} queries",
+        snap.cache.hits,
+        snap.cache.coalesced_slots
+    );
 }
 
 #[test]
