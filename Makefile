@@ -3,7 +3,7 @@
 CARGO_DIR := rust
 
 .PHONY: verify build test fmt fmt-check lint docs artifacts bench-serve bench-replay \
-        bench-serve-smoke clean
+        bench-trace bench-serve-smoke trace-smoke clean
 
 # Tier-1 gate, exactly: cargo build --release && cargo test -q.
 verify: build test
@@ -43,12 +43,34 @@ bench-serve:
 bench-replay:
 	cd $(CARGO_DIR) && cargo bench --bench replay_throughput
 
-# CI-sized smoke of BOTH perf-trajectory benches (tiny query counts):
-# still writes real BENCH_serve.json + BENCH_replay.json, which CI
-# uploads as workflow artifacts so the perf trajectory accumulates.
+# Span-recorder overhead (off / armed-idle / recording); asserts the
+# disabled path stays within 5% and writes rust/BENCH_trace.json.
+bench-trace:
+	cd $(CARGO_DIR) && cargo bench --bench trace_overhead
+
+# CI-sized smoke of the perf-trajectory benches (tiny query counts):
+# still writes real BENCH_serve.json + BENCH_replay.json +
+# BENCH_trace.json, which CI uploads as workflow artifacts so the perf
+# trajectory accumulates.
 bench-serve-smoke:
 	cd $(CARGO_DIR) && PAAC_BENCH_FAST=1 cargo bench --bench serve_throughput
 	cd $(CARGO_DIR) && PAAC_BENCH_FAST=1 cargo bench --bench replay_throughput
+	cd $(CARGO_DIR) && PAAC_BENCH_FAST=1 cargo bench --bench trace_overhead
+
+# End-to-end --trace smoke: a tiny train run and a tiny serve run each
+# record a Perfetto trace, then the trace_check example re-parses the
+# files with the crate's own JSON parser and runs the structural
+# validator (no jq). Covers the CLI path, the run-dir trace.json
+# artifact, and the emitted span taxonomy.
+trace-smoke:
+	cd $(CARGO_DIR) && cargo build --release --bin paac --example trace_check
+	cd $(CARGO_DIR) && ./target/release/paac train --algo nstep-q --game catch \
+		--steps 400 --n-e 8 --n-w 4 --lr 0.02 --replay-cap 4000 \
+		--run-name trace-smoke --trace trace-train.json --quiet
+	cd $(CARGO_DIR) && ./target/release/paac serve --clients 4 --queries 50 \
+		--trace trace-serve.json --quiet
+	cd $(CARGO_DIR) && ./target/release/examples/trace_check \
+		trace-train.json runs/trace-smoke/trace.json trace-serve.json
 
 clean:
 	cd $(CARGO_DIR) && cargo clean

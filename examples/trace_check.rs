@@ -1,0 +1,47 @@
+//! Validate Perfetto trace files emitted by `--trace` (the CI
+//! trace-smoke gate).
+//!
+//! For every path given on the command line: parse the file with the
+//! crate's own JSON parser, run the [`paac::trace::validate`] structural
+//! checks (array root, well-formed `ph:"X"`/`ph:"M"` events, per-track
+//! `ts` monotonicity), and print a one-line summary per file. Exits
+//! nonzero on the first file that fails, so `make trace-smoke` can gate
+//! on it without jq.
+//!
+//! Run: cargo run --example trace_check -- trace.json [more.json ...]
+
+use paac::trace;
+use paac::util::json::Json;
+
+fn check(path: &str) -> Result<(), String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read: {e}"))?;
+    let json = Json::parse(&text).map_err(|e| format!("parse: {e}"))?;
+    let summary = trace::validate(&json)?;
+    if summary.spans == 0 {
+        return Err("trace contains no spans".into());
+    }
+    let mut names: Vec<&str> = summary.count_by_name.keys().map(|s| s.as_str()).collect();
+    names.sort_unstable();
+    println!(
+        "{path}: ok — {} spans on {} track(s), names: {}",
+        summary.spans,
+        summary.tracks,
+        names.join(", ")
+    );
+    Ok(())
+}
+
+fn main() {
+    let paths: Vec<String> = std::env::args().skip(1).collect();
+    if paths.is_empty() {
+        eprintln!("usage: trace_check FILE.json [FILE.json ...]");
+        std::process::exit(2);
+    }
+    for path in &paths {
+        if let Err(e) = check(path) {
+            eprintln!("{path}: FAILED — {e}");
+            std::process::exit(1);
+        }
+    }
+    println!("{} trace file(s) validated", paths.len());
+}

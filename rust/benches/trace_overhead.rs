@@ -1,0 +1,139 @@
+//! Tracing overhead on the serve path: what the span recorder costs.
+//!
+//! Drives the same synthetic-device serve workload three times:
+//!
+//! 1. **off** — the recorder is disarmed; every span site costs one
+//!    relaxed atomic load. This is the price of *shipping* the tracing
+//!    subsystem, paid on every production run.
+//! 2. **armed-idle** — a recording is live but the per-thread buffers
+//!    cap at zero events: the span sites take the full enabled path
+//!    (two `Instant::now()` calls + a thread-local lookup per span)
+//!    without memory growth.
+//! 3. **recording** — a real recording, rendered and validated after
+//!    each run.
+//!
+//! The bench asserts the disabled path stays within 5% of the best mode
+//! (so a regression that puts work on the off path fails CI) and writes
+//! `BENCH_trace.json` so successive runs build a perf trajectory.
+//!
+//! Run: cargo bench --bench trace_overhead  (PAAC_BENCH_FAST=1 to shorten)
+
+use std::time::{Duration, Instant};
+
+use paac::benchkit::{JsonReport, Table};
+use paac::envs::{GameId, ObsMode, ACTIONS};
+use paac::serve::{run_clients, PolicyServer, ServeConfig, SyntheticFactory};
+use paac::trace;
+
+/// Emulated device: fixed dispatch overhead + linear per-row cost (the
+/// same shape serve_throughput uses, so q/s numbers are comparable).
+const DISPATCH: Duration = Duration::from_micros(150);
+const PER_ROW: Duration = Duration::from_micros(2);
+const CLIENTS: usize = 8;
+
+/// One serve run under whatever recorder state the caller set up;
+/// returns end-to-end queries/sec.
+fn run_load(queries_per_client: usize) -> f64 {
+    let obs_len = ObsMode::Grid.obs_len();
+    let factory = SyntheticFactory::new(obs_len, ACTIONS, 7).with_cost(DISPATCH, PER_ROW);
+    let cfg = ServeConfig::new(32, Duration::from_micros(500)).with_shards(2);
+    let server = PolicyServer::start_pool(&factory, cfg).expect("start shard pool");
+    let t0 = Instant::now();
+    run_clients(&server, GameId::Catch, ObsMode::Grid, 11, 10, CLIENTS, queries_per_client)
+        .expect("load generation");
+    let wall = t0.elapsed().as_secs_f64();
+    server.shutdown().expect("shutdown");
+    (CLIENTS * queries_per_client) as f64 / wall.max(1e-9)
+}
+
+/// Best-of-`reps` throughput (max filters scheduler noise: every rep
+/// pays the same tracing cost, so the fastest rep is the cleanest
+/// measurement of it).
+fn best_of(reps: usize, queries: usize) -> f64 {
+    (0..reps).map(|_| run_load(queries)).fold(0.0f64, f64::max)
+}
+
+fn main() {
+    let fast = std::env::var("PAAC_BENCH_FAST").ok().as_deref() == Some("1");
+    let queries = if fast { 150 } else { 1_000 };
+    let reps = if fast { 2 } else { 3 };
+
+    println!(
+        "trace overhead bench: {CLIENTS} clients x {queries} queries/client, best of {reps} \
+         (emulated device dispatch={DISPATCH:?} per-row={PER_ROW:?})"
+    );
+
+    // -- mode 1: recorder disarmed (make sure no recording leaked in) --
+    let _ = trace::stop();
+    let off_qps = best_of(reps, queries);
+
+    // -- mode 2: armed but discarding --
+    trace::start_with_limit(0);
+    let idle_qps = best_of(reps, queries);
+    let _ = trace::stop();
+
+    // -- mode 3: recording (re-armed per rep so buffers start empty) --
+    let mut recording_qps = 0.0f64;
+    let mut recorded_spans = 0usize;
+    for _ in 0..reps {
+        trace::start();
+        let qps = run_load(queries);
+        let recorded = trace::stop().expect("recording was live");
+        recording_qps = recording_qps.max(qps);
+        let summary = trace::validate(&recorded).expect("recorded trace validates");
+        recorded_spans = recorded_spans.max(summary.spans);
+    }
+
+    let best_qps = off_qps.max(idle_qps).max(recording_qps);
+    let disabled_overhead = 1.0 - off_qps / best_qps.max(1e-9);
+    let recording_overhead = 1.0 - recording_qps / best_qps.max(1e-9);
+
+    let mut table = Table::new(&["mode", "q/s", "overhead vs best"]);
+    table.row(vec![
+        "off (disarmed)".into(),
+        format!("{off_qps:.0}"),
+        format!("{:.1}%", disabled_overhead * 100.0),
+    ]);
+    table.row(vec![
+        "armed-idle (limit 0)".into(),
+        format!("{idle_qps:.0}"),
+        format!("{:.1}%", (1.0 - idle_qps / best_qps.max(1e-9)) * 100.0),
+    ]);
+    table.row(vec![
+        "recording".into(),
+        format!("{recording_qps:.0}"),
+        format!("{:.1}%", recording_overhead * 100.0),
+    ]);
+
+    println!("\n## Span recorder overhead on the serve path\n");
+    println!("{}", table.render());
+    println!(
+        "recording captured {recorded_spans} spans per run; the off path is one \
+         relaxed atomic load per span site"
+    );
+
+    let mut report = JsonReport::new("trace_overhead");
+    report.add_table("modes", &table);
+    report.add_num("queries_per_client", queries as f64);
+    report.add_num("off_qps", off_qps);
+    report.add_num("idle_qps", idle_qps);
+    report.add_num("recording_qps", recording_qps);
+    report.add_num("disabled_overhead_frac", disabled_overhead);
+    report.add_num("recording_overhead_frac", recording_overhead);
+    report.add_num("recorded_spans", recorded_spans as f64);
+    let out = std::path::Path::new("BENCH_trace.json");
+    report.write(out).expect("write BENCH_trace.json");
+    println!("\nmachine-readable summary written to {}", out.display());
+
+    assert!(
+        disabled_overhead < 0.05,
+        "disabled-path tracing overhead {:.1}% exceeds the 5% budget \
+         (off {off_qps:.0} q/s vs best {best_qps:.0} q/s)",
+        disabled_overhead * 100.0
+    );
+    assert!(
+        recorded_spans > 0,
+        "recording mode captured no spans — the serve path lost its instrumentation"
+    );
+    println!("disabled-path overhead within budget ({:.1}% < 5%)", disabled_overhead * 100.0);
+}

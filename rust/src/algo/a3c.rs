@@ -19,6 +19,7 @@ use crate::envs::{Env, GameId, ObsMode};
 use crate::error::Result;
 use crate::runtime::{literal_f32, literal_i32, scalar_f32, EntryKind, ParamSet, Runtime};
 use crate::util::rng::Pcg32;
+use crate::util::timer::{Phase, PhaseTimer};
 
 use super::returns::nstep_returns_into;
 
@@ -64,6 +65,12 @@ pub struct A3cReport {
     /// gradient's snapshot and its application (staleness in updates).
     pub mean_staleness: f64,
     pub timesteps_per_sec: f64,
+    /// Per-phase wall time summed over every actor thread (so the total
+    /// exceeds `wall_secs` with more than one actor). Snapshot
+    /// duplication and lock waits land in [`Phase::Other`] /
+    /// [`Phase::Learn`] respectively — the honest Figure-2 view of the
+    /// asynchronous baseline.
+    pub phases: PhaseTimer,
 }
 
 /// Run A3C for `budget` timesteps; returns the report and the final
@@ -93,6 +100,8 @@ pub fn train_a3c(
     let episode_returns = Arc::new(Mutex::new(Vec::<f32>::new()));
     let staleness_sum = Arc::new(AtomicU64::new(0));
     let updates = Arc::new(AtomicU64::new(0));
+    // actors time locally, merge on exit (one lock per thread lifetime)
+    let phase_acc = Arc::new(Mutex::new(PhaseTimer::new()));
 
     let (h, w, c) = info.obs_shape;
     let obs_len = h * w * c;
@@ -108,6 +117,7 @@ pub fn train_a3c(
         let episode_returns = episode_returns.clone();
         let staleness_sum = staleness_sum.clone();
         let updates = updates.clone();
+        let phase_acc = phase_acc.clone();
         let fwd1 = fwd1.clone();
         let grads_exe = grads_exe.clone();
         let apply_exe = apply_exe.clone();
@@ -123,6 +133,7 @@ pub fn train_a3c(
                 let mut rewards = vec![0.0f32; cfg.t_max];
                 let mut dones = vec![false; cfg.t_max];
                 let mut returns = vec![0.0f32; cfg.t_max];
+                let mut timer = PhaseTimer::new();
 
                 let deadline = (cfg.max_wall_secs > 0.0)
                     .then(|| Instant::now() + std::time::Duration::from_secs_f64(cfg.max_wall_secs));
@@ -134,21 +145,30 @@ pub fn train_a3c(
                         }
                     }
                     // 1. snapshot the shared parameters (stale from here on)
+                    // — lock wait + host copy, charged to Other
+                    let t_snap = Instant::now();
                     let (snapshot, v_snap) = {
                         let guard = shared.lock().unwrap();
                         (guard.duplicate()?, version.load(Ordering::Relaxed))
                     };
+                    timer.add_traced(Phase::Other, t_snap);
                     // 2. t_max rollout with batch-1 forwards on the snapshot
                     for t in 0..cfg.t_max {
+                        let t_b = Instant::now();
                         obs_buf[t * obs_len..(t + 1) * obs_len].copy_from_slice(env.obs());
                         let obs_lit = literal_f32(env.obs(), &[1, h, w, c])?;
                         let mut inputs: Vec<&xla::Literal> =
                             snapshot.params.iter().collect();
                         inputs.push(&obs_lit);
+                        timer.add_traced(Phase::Batching, t_b);
+                        let t_f = Instant::now();
                         let out = fwd1.run(&inputs)?;
                         let probs = out[0].to_vec::<f32>()?;
                         let a = rng.categorical(&probs);
+                        timer.add_traced(Phase::ActionSelect, t_f);
+                        let t_e = Instant::now();
                         let inf = env.step(a);
+                        timer.add_traced(Phase::EnvStep, t_e);
                         actions[t] = a as i32;
                         rewards[t] = inf.reward;
                         dones[t] = inf.done;
@@ -158,6 +178,7 @@ pub fn train_a3c(
                         er.extend(env.take_finished_returns());
                     }
                     // 3. bootstrap + returns
+                    let t_r = Instant::now();
                     let bootstrap = if dones[cfg.t_max - 1] {
                         0.0
                     } else {
@@ -168,8 +189,11 @@ pub fn train_a3c(
                         fwd1.run(&inputs)?[1].to_vec::<f32>()?[0]
                     };
                     nstep_returns_into(&rewards, &dones, bootstrap, cfg.gamma, &mut returns);
+                    timer.add_traced(Phase::Returns, t_r);
 
-                    // 4. gradients w.r.t. the STALE snapshot (off-lock)
+                    // 4. gradients w.r.t. the STALE snapshot (off-lock) —
+                    // literal building is Batching, the device call Learn
+                    let t_b = Instant::now();
                     let obs_lit =
                         literal_f32(&obs_buf, &[cfg.t_max, h, w, c])?;
                     let act_lit = literal_i32(&actions, &[cfg.t_max])?;
@@ -178,8 +202,11 @@ pub fn train_a3c(
                     inputs.push(&obs_lit);
                     inputs.push(&act_lit);
                     inputs.push(&ret_lit);
+                    timer.add_traced(Phase::Batching, t_b);
+                    let t_g = Instant::now();
                     let mut gout = grads_exe.run(&inputs)?;
                     let _stats = gout.pop();
+                    timer.add_traced(Phase::Learn, t_g);
 
                     // 5. apply to the shared parameters under a short lock
                     let n = timesteps.fetch_add(cfg.t_max as u64, Ordering::Relaxed);
@@ -192,6 +219,10 @@ pub fn train_a3c(
                     } else {
                         cfg.lr
                     };
+                    // 5b. apply under the shared lock — the lock wait is
+                    // part of what the asynchronous design costs, so the
+                    // whole block (wait + apply) is charged to Learn
+                    let t_a = Instant::now();
                     {
                         let mut guard = shared.lock().unwrap();
                         let lr_lit = scalar_f32(lr);
@@ -208,7 +239,9 @@ pub fn train_a3c(
                             .fetch_add(v_now.saturating_sub(v_snap), Ordering::Relaxed);
                         updates.fetch_add(1, Ordering::Relaxed);
                     }
+                    timer.add_traced(Phase::Learn, t_a);
                 }
+                phase_acc.lock().unwrap().merge(&timer);
                 Ok(())
             },
         )
@@ -232,6 +265,7 @@ pub fn train_a3c(
             0.0
         },
         timesteps_per_sec: n_steps as f64 / wall.max(1e-9),
+        phases: phase_acc.lock().unwrap().clone(),
     };
     let params = Arc::try_unwrap(shared)
         .map_err(|_| crate::error::Error::Train("shared params still referenced".into()))?

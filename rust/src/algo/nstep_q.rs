@@ -618,7 +618,7 @@ impl<B: QBackend> NstepQ<B> {
                 let venv = &self.venv;
                 let backend = &mut self.backend;
                 let greedy = &mut self.greedy_buf;
-                self.timer.time(Phase::ActionSelect, || {
+                self.timer.time_traced(Phase::ActionSelect, || {
                     backend.greedy_batch(venv.obs_batch(), greedy)
                 })?;
             }
@@ -632,15 +632,21 @@ impl<B: QBackend> NstepQ<B> {
             // stage obs + actions before the step mutates the batch
             let t0 = std::time::Instant::now();
             self.replay.stage(self.venv.obs_batch(), &self.actions_buf);
-            self.timer.add(Phase::Batching, t0.elapsed());
+            self.timer.add_traced(Phase::Batching, t0);
             {
                 let actions = &self.actions_buf;
                 let venv = &mut self.venv;
-                self.timer.time(Phase::EnvStep, || venv.step(actions));
+                self.timer.time_traced(Phase::EnvStep, || venv.step(actions));
             }
+            // the commit is where staged transitions become visible to
+            // the sampler — traced as its own span nested inside the
+            // Batching interval it is charged to
             let t1 = std::time::Instant::now();
-            self.replay.commit(self.venv.rewards(), self.venv.dones());
-            self.timer.add(Phase::Batching, t1.elapsed());
+            {
+                let _push = crate::trace::span("train.replay_push");
+                self.replay.commit(self.venv.rewards(), self.venv.dones());
+            }
+            self.timer.add_traced(Phase::Batching, t1);
             self.timestep += n_e as u64;
         }
 
@@ -662,7 +668,11 @@ impl<B: QBackend> NstepQ<B> {
         let bsz = self.opts.batch;
         // -- sample + n-step targets (host) + bootstrap (batched) --
         let t0 = std::time::Instant::now();
-        if !self.replay.sample(&mut self.batch, bsz) {
+        let sampled = {
+            let _sample = crate::trace::span("train.replay_sample");
+            self.replay.sample(&mut self.batch, bsz)
+        };
+        if !sampled {
             return Err(Error::Train(
                 "replay sample underfilled (learner started before warmup)".into(),
             ));
@@ -690,7 +700,7 @@ impl<B: QBackend> NstepQ<B> {
                 self.targets_buf[i] = self.online_buf[i] + self.batch.weights[i] * self.td_buf[i];
             }
         }
-        self.timer.add(Phase::Returns, t0.elapsed());
+        self.timer.add_traced(Phase::Returns, t0);
 
         // -- one synchronous update --
         let stats = {
@@ -698,7 +708,7 @@ impl<B: QBackend> NstepQ<B> {
             let obs = &self.batch.obs;
             let actions = &self.batch.actions;
             let targets = &self.targets_buf;
-            self.timer.time(Phase::Learn, || backend.train(obs, actions, targets, lr))?
+            self.timer.time_traced(Phase::Learn, || backend.train(obs, actions, targets, lr))?
         };
         self.learn_updates += 1;
         if self.learn_updates % self.opts.target_sync == 0 {

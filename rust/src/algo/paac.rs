@@ -84,7 +84,7 @@ impl Paac {
                 let venv = &self.venv;
                 let model = &self.model;
                 self.timer
-                    .time(Phase::ActionSelect, || model.forward(venv.obs_batch()))?
+                    .time_traced(Phase::ActionSelect, || model.forward(venv.obs_batch()))?
             };
             for e in 0..n_e {
                 self.actions_buf[e] = self.rng.categorical(fwd.probs_of(e));
@@ -97,20 +97,20 @@ impl Paac {
             // Copy cost is charged to Batching.
             let t0 = std::time::Instant::now();
             self.rollout.stage_step(self.venv.obs_batch(), &self.actions_buf);
-            self.timer.add(Phase::Batching, t0.elapsed());
+            self.timer.add_traced(Phase::Batching, t0);
 
             // --- parallel env step (lines 7-10) ---
             {
                 let actions = &self.actions_buf;
                 let venv = &mut self.venv;
-                self.timer.time(Phase::EnvStep, || venv.step(actions));
+                self.timer.time_traced(Phase::EnvStep, || venv.step(actions));
             }
 
             // rewards/dones arrive after the step; commit completes the
             // staged timestep.
             let t1 = std::time::Instant::now();
             self.rollout.commit_step(self.venv.rewards(), self.venv.dones());
-            self.timer.add(Phase::Batching, t1.elapsed());
+            self.timer.add_traced(Phase::Batching, t1);
         }
 
         // --- bootstrap V(s_{t_max}) (lines 11-12) ---
@@ -118,7 +118,7 @@ impl Paac {
             let venv = &self.venv;
             let model = &self.model;
             self.timer
-                .time(Phase::ActionSelect, || model.forward(venv.obs_batch()))?
+                .time_traced(Phase::ActionSelect, || model.forward(venv.obs_batch()))?
         };
         self.bootstrap_buf.copy_from_slice(&fwd.values);
 
@@ -127,14 +127,14 @@ impl Paac {
             let rollout = &mut self.rollout;
             let bootstrap = &self.bootstrap_buf;
             let gamma = self.gamma;
-            self.timer.time(Phase::Returns, || rollout.finish(bootstrap, gamma));
+            self.timer.time_traced(Phase::Returns, || rollout.finish(bootstrap, gamma));
         }
 
         // --- synchronous update (lines 16-18) ---
         let stats = {
             let rollout = &self.rollout;
             let model = &mut self.model;
-            self.timer.time(Phase::Learn, || {
+            self.timer.time_traced(Phase::Learn, || {
                 model.train_step(rollout.obs(), rollout.actions(), rollout.returns(), lr)
             })?
         };

@@ -147,6 +147,11 @@ pub struct Config {
     /// Abort the run when the loss turns non-finite (divergence guard;
     /// the paper observes divergence for n_e = 256).
     pub abort_on_divergence: bool,
+    /// Record a Chrome/Perfetto trace of the run (see [`crate::trace`])
+    /// and write it to this path; a copy also lands in the run directory
+    /// as `trace.json`. `None` (the default) keeps the recorder disarmed
+    /// — the off path is a single relaxed atomic load per span site.
+    pub trace: Option<PathBuf>,
 }
 
 impl Default for Config {
@@ -188,6 +193,7 @@ impl Default for Config {
             eval_interval: 0,
             log_interval: 50,
             abort_on_divergence: true,
+            trace: None,
         }
     }
 }
@@ -280,6 +286,7 @@ impl Config {
             eval_interval: doc.i64_or("eval.interval", d.eval_interval as i64) as u64,
             log_interval: doc.i64_or("train.log_interval", d.log_interval as i64) as u64,
             abort_on_divergence: doc.bool_or("train.abort_on_divergence", true),
+            trace: doc.get("run.trace").and_then(|v| v.as_str()).map(PathBuf::from),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -509,6 +516,14 @@ mod tests {
         assert!((c.eps_end - 0.05).abs() < 1e-6);
         // untouched knobs keep their defaults
         assert_eq!(c.replay_min, Config::default().replay_min);
+    }
+
+    #[test]
+    fn trace_toml_override_applies() {
+        let doc = Document::parse("[run]\ntrace = \"out/t.json\"\n").unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert_eq!(c.trace.as_deref(), Some(std::path::Path::new("out/t.json")));
+        assert!(Config::default().trace.is_none());
     }
 
     #[test]

@@ -137,13 +137,40 @@ impl Trainer {
     }
 
     /// Run the configured algorithm to completion.
+    ///
+    /// When [`Config::trace`] is set, a Perfetto recording brackets the
+    /// whole run: armed here before the algorithm starts (unless a caller
+    /// already armed one — that recording is adopted and stopped here),
+    /// stopped and written after it finishes. The trace lands at the
+    /// configured path and, when the run produced a run directory, as
+    /// `trace.json` next to `events.jsonl`.
     pub fn run(&mut self) -> Result<TrainReport> {
-        match self.cfg.algo {
+        let trace_out = self.cfg.trace.clone();
+        if trace_out.is_some() && !crate::trace::active() {
+            crate::trace::start();
+        }
+        let report = match self.cfg.algo {
             Algo::Paac => self.run_paac(true),
             Algo::A3c => self.run_a3c(),
             Algo::Ga3c => self.run_ga3c(),
             Algo::NstepQ => self.run_nstep_q(true),
+        };
+        if let Some(path) = &trace_out {
+            // stop() unconditionally so a failed run still disarms the
+            // recorder; its recording is only written for a clean run
+            if let (Some(trace), true) = (crate::trace::stop(), report.is_ok()) {
+                let rendered = trace.to_string_compact();
+                if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+                    std::fs::create_dir_all(dir)?;
+                }
+                std::fs::write(path, &rendered)?;
+                let run_dir = self.cfg.out_dir.join(&self.cfg.run_name);
+                if run_dir.is_dir() {
+                    std::fs::write(RunLogger::trace_path(&run_dir), &rendered)?;
+                }
+            }
         }
+        report
     }
 
     /// PAAC (Algorithm 1). `with_logging` controls metric-file output
@@ -495,7 +522,12 @@ impl Trainer {
             final_score: mean_score,
             eval,
             score_curve: Vec::new(),
-            phase_fractions: Vec::new(),
+            phase_fractions: report
+                .phases
+                .fractions()
+                .into_iter()
+                .map(|(p, f)| (p.name(), f))
+                .collect(),
             staleness: Some(report.mean_staleness),
             diverged: false,
         })
@@ -566,7 +598,12 @@ impl Trainer {
             final_score: mean_score,
             eval,
             score_curve: Vec::new(),
-            phase_fractions: Vec::new(),
+            phase_fractions: report
+                .phases
+                .fractions()
+                .into_iter()
+                .map(|(p, f)| (p.name(), f))
+                .collect(),
             staleness: Some(report.mean_policy_lag),
             diverged: false,
         })

@@ -82,6 +82,7 @@ pub mod model;
 pub mod replay;
 pub mod runtime;
 pub mod serve;
+pub mod trace;
 pub mod util;
 
 

@@ -4,6 +4,7 @@
 //! paac train   [--config cfg.toml] [--game pong] [--algo paac|a3c|ga3c|nstep-q]
 //!              [--n-e 32] [--n-w 8] [--lr 0.0224] [--steps 1000000] ...
 //!              [--replay-cap 20000] [--per] [--n-step 5] [--target-sync 100]
+//!              [--trace trace.json]                      (Perfetto span recording)
 //! paac eval    --ckpt runs/<name>/final.ckpt [--game pong] [--episodes 30]
 //! paac sweep   [--game breakout] [--steps 200000]       (Figures 3/4 data)
 //! paac inspect [--artifacts artifacts]                  (manifest summary)
@@ -12,8 +13,9 @@
 //!              [--shards 1] [--small-batch 0]           (batcher shard pool)
 //!              [--cache 0] [--no-dedup]                 (redundancy eliminator)
 //!              [--listen 127.0.0.1:4700] [--conns 0]    (TCP transport frontend)
+//!              [--trace trace.json]                      (Perfetto span recording)
 //! paac client  --connect HOST:PORT [--clients 8] [--queries 200]
-//!              [--game catch] [--atari]                 (remote synthetic clients)
+//!              [--game catch] [--atari] [--trace t.json] (remote synthetic clients)
 //! ```
 
 use std::sync::Arc;
@@ -71,6 +73,7 @@ fn cli() -> Cli {
         .flag("n-step", None, "n-step return horizon of the replay assembler (nstep-q)")
         .flag("target-sync", None, "updates between target-network copies (nstep-q)")
         .switch("per", "prioritized replay sampling instead of uniform (nstep-q)")
+        .flag("trace", None, "record a Perfetto trace to FILE (train|serve|client)")
         .switch("atari", "use the 84x84x4 Atari pipeline (arch nips/nature)")
         .switch("no-anneal", "constant learning rate")
         .switch("quiet", "suppress progress output")
@@ -129,6 +132,9 @@ fn build_config(args: &paac::cli::Args) -> Result<Config> {
     }
     if args.has("per") {
         cfg.per = true;
+    }
+    if let Some(t) = args.get("trace") {
+        cfg.trace = Some(t.into());
     }
     cfg.validate()?;
     Ok(cfg)
@@ -193,6 +199,11 @@ fn cmd_train(args: &paac::cli::Args) -> Result<()> {
             print!(" {name}={:.0}%", f * 100.0);
         }
         println!();
+    }
+    if let Some(path) = &trainer.config().trace {
+        if !quiet {
+            println!("trace written to {} (open in ui.perfetto.dev)", path.display());
+        }
     }
     if report.diverged {
         println!("WARNING: run diverged (non-finite loss)");
@@ -331,6 +342,19 @@ fn cmd_inspect(args: &paac::cli::Args) -> Result<()> {
     Ok(())
 }
 
+/// Stop a live `--trace` recording and write it where the flag pointed
+/// (shared by the serve exit paths and `paac client`). A no-op when the
+/// flag wasn't given or nothing was recorded.
+fn write_trace_file(args: &paac::cli::Args, quiet: bool) -> Result<()> {
+    if let Some(path) = args.get("trace") {
+        let path = std::path::Path::new(path);
+        if paac::trace::stop_and_write(path)? && !quiet {
+            println!("trace written to {} (open in ui.perfetto.dev)", path.display());
+        }
+    }
+    Ok(())
+}
+
 /// Write the final snapshot to `runs/<run-name>/serve.jsonl` when
 /// `--run-name` was given (shared by the load-gen and `--listen` modes).
 fn write_serve_record(args: &paac::cli::Args, snap: &StatsSnapshot, quiet: bool) -> Result<()> {
@@ -372,7 +396,8 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
         .with_shards(args.usize_of("shards")?)
         .with_small_batch(args.usize_of("small-batch")?)
         .with_cache(args.usize_of("cache")?)
-        .with_no_dedup(args.has("no-dedup"));
+        .with_no_dedup(args.has("no-dedup"))
+        .with_trace(args.get("trace").is_some());
 
     // host linear-Q checkpoints serve without artifacts; load once and
     // dispatch on the arch tag
@@ -488,6 +513,7 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
         if !shard_lines.is_empty() {
             println!("{shard_lines}");
         }
+        write_trace_file(args, quiet)?;
         return write_serve_record(args, &snap, quiet);
     }
 
@@ -516,6 +542,7 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
         println!("{shard_lines}");
     }
     println!("clients finished {episodes} episodes");
+    write_trace_file(args, quiet)?;
     write_serve_record(args, &snap, quiet)
 }
 
@@ -538,9 +565,13 @@ fn cmd_client(args: &paac::cli::Args) -> Result<()> {
             game.name()
         );
     }
+    if args.get("trace").is_some() {
+        paac::trace::start();
+    }
     let t0 = Instant::now();
     let reports = run_remote_clients(&addr, game, mode, seed, 30, clients, queries)?;
     let wall = t0.elapsed().as_secs_f64();
+    write_trace_file(args, quiet)?;
 
     if !quiet {
         for r in &reports {

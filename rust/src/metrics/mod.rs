@@ -113,6 +113,24 @@ impl RunLogger {
         self.jsonl.record(event)
     }
 
+    /// Canonical location of the per-run trace artifact for a run
+    /// directory: `<dir>/trace.json`, next to `events.jsonl`. Associated
+    /// (not a method) so callers that no longer hold the logger — the
+    /// trainer stops the recording *after* the run loop drops it — agree
+    /// on the same path.
+    pub fn trace_path(dir: &Path) -> PathBuf {
+        dir.join("trace.json")
+    }
+
+    /// Write a rendered [`crate::trace`] recording next to
+    /// `events.jsonl` as `trace.json` (load it in ui.perfetto.dev).
+    /// Returns the written path.
+    pub fn write_trace(&self, trace: &Json) -> Result<PathBuf> {
+        let path = Self::trace_path(&self.dir);
+        std::fs::write(&path, trace.to_string_compact())?;
+        Ok(path)
+    }
+
     /// Replay-store counters (occupancy, throughput, sample age) plus the
     /// current exploration rate — one `"replay"` record in `events.jsonl`
     /// per log interval of an off-policy run.
@@ -194,6 +212,22 @@ mod tests {
         assert_eq!(rec.get("fill").unwrap().as_f64(), Some(0.125));
         assert_eq!(rec.get("samples_drawn").unwrap().as_usize(), Some(160));
         assert!((rec.get("epsilon").unwrap().as_f64().unwrap() - 0.7).abs() < 1e-6);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn write_trace_lands_next_to_events() {
+        let dir = tmpdir("trace");
+        let rl = RunLogger::create(&dir, "traced").unwrap();
+        let trace = Json::Arr(vec![obj(vec![
+            ("name", Json::Str("x".into())),
+            ("ph", Json::Str("X".into())),
+        ])]);
+        let path = rl.write_trace(&trace).unwrap();
+        assert_eq!(path, RunLogger::trace_path(&dir.join("traced")));
+        assert_eq!(path.file_name().unwrap(), "trace.json");
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.as_arr().map(|a| a.len()), Some(1));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

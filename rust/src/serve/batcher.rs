@@ -549,6 +549,8 @@ pub struct Batcher<B: InferBackend> {
     obs_buf: Vec<f32>,
     /// Scratch for per-request latencies (reused across batches).
     lat_buf: Vec<Duration>,
+    /// Scratch for per-request queue waits (reused across batches).
+    wait_buf: Vec<Duration>,
     /// The claimed window, recycled across batches.
     win: Vec<Request>,
     /// uniq_of[i] = index of the unique row serving window request i.
@@ -606,6 +608,7 @@ impl<B: InferBackend> Batcher<B> {
             max_delay,
             obs_buf,
             lat_buf: Vec::new(),
+            wait_buf: Vec::new(),
             win: Vec::new(),
             uniq_of: Vec::new(),
             uniq_first: Vec::new(),
@@ -624,12 +627,16 @@ impl<B: InferBackend> Batcher<B> {
     /// Process one batch. `Ok(false)` signals orderly shutdown (queue
     /// closed and drained); errors are backend failures and fatal.
     pub fn step(&mut self) -> Result<bool> {
+        // the claim span covers the blocking wait too, so a trace shows
+        // how long this shard sat idle/coalescing between windows
+        let claim_span = crate::trace::span("serve.claim");
         if !self
             .queue
             .claim_window_into(self.max_batch, self.max_delay, self.class, &mut self.win)
         {
             return Ok(false);
         }
+        drop(claim_span.arg("requests", self.win.len() as f64));
         let obs_len = self.backend.obs_len();
         // drop malformed payloads (the public handle validates, but the
         // queue is an open type); one bad client must not kill the server
@@ -645,9 +652,30 @@ impl<B: InferBackend> Batcher<B> {
             return Ok(true);
         }
 
+        // book each claimed request's submit->claim wait: the queue_wait
+        // histogram in the stats and, when recording, one trace span per
+        // request anchored on its enqueue timestamp — the same interval
+        // feeding both, so the JSONL tail and the trace cannot disagree
+        let claimed_at = Instant::now();
+        self.wait_buf.clear();
+        self.wait_buf
+            .extend(self.win.iter().map(|r| claimed_at.saturating_duration_since(r.enqueued)));
+        self.stats.record_queue_wait(&self.wait_buf);
+        if crate::trace::active() {
+            for (r, &w) in self.win.iter().zip(self.wait_buf.iter()) {
+                crate::trace::complete_with(
+                    "serve.queue_wait",
+                    claimed_at - w,
+                    claimed_at,
+                    vec![("session", r.session as f64)],
+                );
+            }
+        }
+
         // group bit-identical observations into shared input slots: hash
         // first, exact bit equality second, so a 64-bit collision costs a
         // slot (two uniques) instead of ever sharing a wrong reply
+        let dedup_span = crate::trace::span("serve.dedup");
         self.uniq_of.clear();
         self.uniq_first.clear();
         if self.dedup {
@@ -674,6 +702,11 @@ impl<B: InferBackend> Batcher<B> {
             self.uniq_of.extend(0..self.win.len());
             self.uniq_first.extend(0..self.win.len());
         }
+        drop(
+            dedup_span
+                .arg("window", self.win.len() as f64)
+                .arg("uniques", self.uniq_first.len() as f64),
+        );
 
         // stage the unique rows, zero-pad the dead tail (GA3C predictor
         // idiom), run the device call, fan each row out to its waiters.
@@ -690,7 +723,13 @@ impl<B: InferBackend> Batcher<B> {
             }
             self.obs_buf[chunk * obs_len..].fill(0.0);
 
-            let out = self.backend.infer(&self.obs_buf)?;
+            let out = {
+                let _infer = crate::trace::span("serve.infer")
+                    .arg("rows", chunk as f64)
+                    .arg("shard", self.shard as f64);
+                self.backend.infer(&self.obs_buf)?
+            };
+            let fanout_span = crate::trace::span("serve.fanout");
             let now = Instant::now();
             self.lat_buf.clear();
             for i in 0..self.win.len() {
@@ -710,6 +749,7 @@ impl<B: InferBackend> Batcher<B> {
                 let _ = r.reply.send(reply);
                 self.lat_buf.push(now.saturating_duration_since(r.enqueued));
             }
+            drop(fanout_span.arg("replies", self.lat_buf.len() as f64));
             self.stats.record_batch(self.shard, chunk, self.max_batch, &self.lat_buf);
             off += chunk;
         }

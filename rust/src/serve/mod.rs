@@ -99,6 +99,7 @@ pub use queue::{Reply, Request, ShardClass, SubmissionQueue};
 pub use server::{ClientHandle, Connector, PolicyServer, ServeConfig};
 pub use session::{run_clients, Session, SessionReport};
 pub use stats::{
-    CacheSnapshot, ServeStats, ShardSnapshot, ShardSpec, StatsSnapshot, TransportSnapshot,
+    CacheSnapshot, QueueWaitSnapshot, ServeStats, ShardSnapshot, ShardSpec, StatsSnapshot,
+    TransportSnapshot,
 };
 pub use transport::{run_remote_clients, QueryTransport, RemoteHandle, TcpFrontend};

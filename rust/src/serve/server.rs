@@ -69,6 +69,11 @@ pub struct ServeConfig {
     /// Disable in-flight dedup of bit-identical observations (restores
     /// the PR 1–4 raw-count batching exactly).
     pub no_dedup: bool,
+    /// Arm the process-global [`crate::trace`] recorder when the server
+    /// starts (`--trace FILE`). The recorder outlives the server: stop
+    /// it and write the file with [`crate::trace::stop_and_write`] after
+    /// [`PolicyServer::shutdown`] — the CLI layer owns the output path.
+    pub trace: bool,
 }
 
 impl Default for ServeConfig {
@@ -80,6 +85,7 @@ impl Default for ServeConfig {
             small_batch: 0,
             cache: 0,
             no_dedup: false,
+            trace: false,
         }
     }
 }
@@ -112,6 +118,22 @@ impl ServeConfig {
     pub fn with_no_dedup(mut self, no_dedup: bool) -> ServeConfig {
         self.no_dedup = no_dedup;
         self
+    }
+
+    /// Record a Perfetto trace of this server's lifetime: arms the
+    /// process-global recorder ([`crate::trace::start`]) when the server
+    /// starts, unless a recording is already live (a caller that armed
+    /// earlier — e.g. `paac train` — keeps its epoch).
+    pub fn with_trace(mut self, enabled: bool) -> ServeConfig {
+        self.trace = enabled;
+        self
+    }
+
+    /// Arm the recorder if this config asks for it (start/start_pool).
+    fn arm_trace(&self) {
+        if self.trace && !crate::trace::active() {
+            crate::trace::start();
+        }
     }
 
     /// The queue this config calls for (dedup policy baked in).
@@ -154,6 +176,7 @@ impl PolicyServer {
     /// [`BackendFactory`] to build one backend per shard — see
     /// [`PolicyServer::start_pool`]).
     pub fn start<B: InferBackend + 'static>(backend: B, cfg: ServeConfig) -> PolicyServer {
+        cfg.arm_trace();
         let queue = cfg.build_queue();
         // prefill the real width so telemetry matches start_pool's even
         // before the first batch lands (Batcher::new applies this clamp)
@@ -196,6 +219,7 @@ impl PolicyServer {
     /// All backends are built before any thread spawns, so a factory
     /// error aborts cleanly.
     pub fn start_pool<F: BackendFactory>(factory: &F, cfg: ServeConfig) -> Result<PolicyServer> {
+        cfg.arm_trace();
         let shards = cfg.shards.max(1);
         // usize::MAX means "the full width", which only the factory can
         // resolve (a prebuilt backend resolves it in `start`)
@@ -516,10 +540,13 @@ impl ClientHandle {
         let mut probe_version = 0;
         if let Some(cache) = &self.cache {
             probe_version = cache.version();
+            let probe = crate::trace::span("serve.cache_probe");
             if let Some(reply) = cache.get(obs, obs_hash) {
+                drop(probe.arg("hit", 1.0));
                 self.stats.record_cache_hit();
                 return Ok(reply);
             }
+            drop(probe.arg("hit", 0.0));
             self.stats.record_cache_miss();
         }
         // One channel per query: a timed-out query's late reply lands on

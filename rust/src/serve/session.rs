@@ -52,9 +52,14 @@ pub fn run_clients(
     queries: usize,
 ) -> Result<Vec<SessionReport>> {
     let workers: Vec<_> = (0..clients)
-        .map(|_| {
+        .map(|i| {
             let mut session = Session::new(server.connect(), game, mode, seed, noop_max);
-            std::thread::spawn(move || session.run(queries))
+            // named threads give each client its own labelled track in a
+            // recorded trace (crate::trace keys tracks by thread name)
+            std::thread::Builder::new()
+                .name(format!("paac-client-{i}"))
+                .spawn(move || session.run(queries))
+                .expect("spawn client session thread")
         })
         .collect();
     let mut reports = Vec::with_capacity(clients);

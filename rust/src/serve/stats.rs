@@ -166,6 +166,13 @@ pub struct ServeStats {
     rejected: AtomicU64,
     /// Per-request submit->reply latency, milliseconds (bounded).
     latencies_ms: Mutex<LatencyReservoir>,
+    /// Per-request submit->claim queue wait, milliseconds (bounded) —
+    /// the slice of the reply latency spent waiting for a batcher shard,
+    /// which is exactly what the `serve.queue_wait` trace spans record.
+    queue_wait_ms: Mutex<LatencyReservoir>,
+    /// Exact sum of all queue waits, microseconds: the reservoir samples,
+    /// but the trace-vs-stats consistency test needs the true total.
+    queue_wait_total_us: AtomicU64,
     /// One rollup cell per batcher shard.
     shards: Vec<ShardCell>,
     /// Network-frontend counters (zero without a transport).
@@ -192,6 +199,8 @@ impl ServeStats {
             full_batches: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             latencies_ms: Mutex::new(LatencyReservoir::new(7)),
+            queue_wait_ms: Mutex::new(LatencyReservoir::new(9)),
+            queue_wait_total_us: AtomicU64::new(0),
             shards: specs
                 .iter()
                 .enumerate()
@@ -255,6 +264,21 @@ impl ServeStats {
         }
     }
 
+    /// Record the submit->claim queue waits of one claimed window (one
+    /// entry per request). Called by the batcher at claim time, before
+    /// inference, so the histogram is independent of backend speed.
+    pub fn record_queue_wait(&self, waits: &[Duration]) {
+        let mut total_us = 0u64;
+        {
+            let mut qw = self.queue_wait_ms.lock().unwrap();
+            for d in waits {
+                qw.push(d.as_secs_f64() as f32 * 1e3);
+                total_us += d.as_micros() as u64;
+            }
+        }
+        self.queue_wait_total_us.fetch_add(total_us, Ordering::Relaxed);
+    }
+
     /// Record a request dropped for a malformed payload.
     pub fn record_rejected(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
@@ -315,6 +339,10 @@ impl ServeStats {
         let (lat, max_ms) = {
             let guard = self.latencies_ms.lock().unwrap();
             (guard.samples.clone(), guard.max_ms)
+        };
+        let (qw, qw_max, qw_count) = {
+            let guard = self.queue_wait_ms.lock().unwrap();
+            (guard.samples.clone(), guard.max_ms, guard.seen)
         };
         let wall_secs = self.started.elapsed().as_secs_f64();
         let shards = self
@@ -383,6 +411,14 @@ impl ServeStats {
             p95_ms: math::percentile(&lat, 95.0) as f64,
             p99_ms: math::percentile(&lat, 99.0) as f64,
             max_ms: max_ms as f64,
+            queue_wait: QueueWaitSnapshot {
+                count: qw_count,
+                total_secs: self.queue_wait_total_us.load(Ordering::Relaxed) as f64 / 1e6,
+                p50_ms: math::percentile(&qw, 50.0) as f64,
+                p95_ms: math::percentile(&qw, 95.0) as f64,
+                p99_ms: math::percentile(&qw, 99.0) as f64,
+                max_ms: qw_max as f64,
+            },
             wall_secs,
             shards,
         }
@@ -527,6 +563,45 @@ impl CacheSnapshot {
     }
 }
 
+/// Submit->claim queue-wait histogram inside a [`StatsSnapshot`]: how
+/// long requests sat in the submission queue before a batcher shard
+/// claimed them. This is the stats-side view of the same intervals the
+/// `serve.queue_wait` trace spans record ([`crate::trace`]), so the
+/// JSONL stream and a trace file agree on the tail; `total_secs` is the
+/// exact (non-sampled) sum the trace consistency test checks against.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct QueueWaitSnapshot {
+    /// Requests measured (every claimed request, not sampled).
+    pub count: u64,
+    /// Exact sum of all queue waits, seconds.
+    pub total_secs: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl QueueWaitSnapshot {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("total_secs", Json::Num(self.total_secs)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p95_ms", Json::Num(self.p95_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("max_ms", Json::Num(self.max_ms)),
+        ])
+    }
+
+    /// Human-oriented one-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "queue wait: p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms max {:.2}ms over {} request(s)",
+            self.p50_ms, self.p95_ms, self.p99_ms, self.max_ms, self.count
+        )
+    }
+}
+
 /// Immutable stats view, ready for reporting.
 #[derive(Clone, Debug)]
 pub struct StatsSnapshot {
@@ -547,6 +622,8 @@ pub struct StatsSnapshot {
     pub p95_ms: f64,
     pub p99_ms: f64,
     pub max_ms: f64,
+    /// Submit->claim wait histogram (the queueing slice of the latency).
+    pub queue_wait: QueueWaitSnapshot,
     pub wall_secs: f64,
     /// Per-shard rollups (one entry per batcher shard, id order).
     pub shards: Vec<ShardSnapshot>,
@@ -567,6 +644,7 @@ impl StatsSnapshot {
             ("p99_ms", Json::Num(self.p99_ms)),
             ("max_ms", Json::Num(self.max_ms)),
             ("wall_secs", Json::Num(self.wall_secs)),
+            ("queue_wait", self.queue_wait.to_json()),
             ("shards", Json::Arr(self.shards.iter().map(|s| s.to_json()).collect())),
             ("transport", self.transport.to_json()),
             ("cache", self.cache.to_json()),
@@ -732,6 +810,28 @@ mod tests {
         assert_eq!(snap.full_batch_frac, 0.0, "2/4 rows is not a full batch");
         assert_eq!(snap.shards[0].queries, 6);
         assert!((snap.shards[0].mean_batch_fill - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queue_wait_histogram_accumulates_and_serializes() {
+        let s = ServeStats::new();
+        assert_eq!(s.snapshot().queue_wait, QueueWaitSnapshot::default());
+        s.record_queue_wait(&[Duration::from_millis(2); 3]);
+        s.record_queue_wait(&[Duration::from_millis(10)]);
+        let qw = s.snapshot().queue_wait;
+        assert_eq!(qw.count, 4, "every claimed request is measured");
+        assert!(
+            (qw.total_secs - 0.016).abs() < 1e-4,
+            "exact total must be 3*2ms + 10ms, got {}s",
+            qw.total_secs
+        );
+        assert!(qw.p50_ms >= 2.0 - 1e-3 && qw.p50_ms <= 10.0 + 1e-3);
+        assert!(qw.max_ms >= 10.0 - 1e-3);
+        assert!(qw.p50_ms <= qw.p95_ms && qw.p95_ms <= qw.p99_ms);
+        assert!(qw.summary().contains("4 request(s)"));
+        let j = s.snapshot().to_json().to_string_compact();
+        assert!(j.contains("\"queue_wait\":{"), "queue_wait object missing from JSON");
+        assert!(j.contains("\"count\":4"));
     }
 
     #[test]

@@ -279,19 +279,27 @@ fn bridge_conn(stream: TcpStream, connector: &Connector) -> Result<()> {
             }
         };
         match frame {
-            Frame::Query { obs } => match handle.query(&obs) {
-                Ok(reply) => {
-                    write_frame(
-                        &mut writer,
-                        &Frame::Reply { probs: reply.probs, value: reply.value },
-                    )?;
-                    stats.record_frame_tx();
+            Frame::Query { obs } => {
+                // one span per bridged query on this bridge thread's
+                // track: decode-to-reply, i.e. the wire's view of the
+                // server (queue wait + backend + fan-out + serialization)
+                let bridged = crate::trace::span("serve.bridge")
+                    .arg("session", handle.session() as f64);
+                match handle.query(&obs) {
+                    Ok(reply) => {
+                        write_frame(
+                            &mut writer,
+                            &Frame::Reply { probs: reply.probs, value: reply.value },
+                        )?;
+                        stats.record_frame_tx();
+                    }
+                    // a failed query (bad shape, timeout, server shutting
+                    // down) is reported, not fatal to the connection: the
+                    // client decides whether to hang up
+                    Err(e) => send_error(&mut writer, stats, &e.to_string()),
                 }
-                // a failed query (bad shape, timeout, server shutting
-                // down) is reported, not fatal to the connection: the
-                // client decides whether to hang up
-                Err(e) => send_error(&mut writer, stats, &e.to_string()),
-            },
+                drop(bridged);
+            }
             other => {
                 let msg = format!("unexpected {} frame mid-session", other.name());
                 send_error(&mut writer, stats, &msg);

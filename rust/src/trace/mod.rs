@@ -1,0 +1,566 @@
+//! Perfetto span recorder: per-event timing for serve and train.
+//!
+//! The `Phase` accumulators ([`crate::util::timer`]) and the serve
+//! rollups ([`crate::serve::stats`]) answer "where did the time go *on
+//! average*"; this module answers "where did *this* millisecond go". It
+//! records spans into per-thread buffers and emits Chrome trace-event
+//! JSON — the `[{"name","ph","ts","dur","pid","tid","args"},...]` array
+//! format — via [`crate::util::json`], loadable directly in
+//! `ui.perfetto.dev` (or `chrome://tracing`). Zero dependencies, by
+//! construction.
+//!
+//! Design:
+//!
+//! - **One relaxed atomic load when off.** Every instrumentation site
+//!   ([`span`], [`complete`]) first checks a global [`AtomicBool`]; with
+//!   tracing disabled (the default) that load is the entire cost, so the
+//!   instrumented hot paths stay honest for benchmarking
+//!   (`benches/trace_overhead.rs` pins this down).
+//! - **Per-thread buffers behind a registry.** A recording thread lazily
+//!   registers an `Arc<Mutex<Vec<Event>>>` buffer keyed by a small
+//!   integer `tid` (its Perfetto track) and caches it in a
+//!   thread-local, so the record path takes only its own uncontended
+//!   mutex — the registry lock is paid once per thread per recording.
+//!   Track names come from [`std::thread::Builder::name`], which the
+//!   serve shards (`paac-serve-shard{N}`), TCP bridges
+//!   (`paac-serve-bridge{N}`), and algo drivers already set.
+//! - **Complete events, sorted.** Spans are emitted as `ph:"X"`
+//!   (complete) events — begin + duration in one record — plus `ph:"M"`
+//!   metadata events naming the process and each track. Events are
+//!   sorted by start time per track, so `ts` is monotone within a `tid`
+//!   (asserted by [`validate`], which the trace tests and the
+//!   `trace_check` example share).
+//! - **Bounded.** Each thread buffer caps at
+//!   [`DEFAULT_EVENT_LIMIT`] events (overflow is counted and surfaced as
+//!   a `trace.dropped` event) so an unattended `--trace` serve run
+//!   degrades instead of exhausting memory.
+//!
+//! A recording is process-global: [`start`] arms it, [`stop`] (or
+//! [`stop_and_write`]) disarms and drains it. Starting bumps a
+//! generation counter, which invalidates the thread-local buffers
+//! cached by a previous recording — long-lived threads re-register on
+//! their next span.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::error::Result;
+use crate::util::json::{obj, Json};
+
+/// Per-thread event cap for [`start`]; beyond it events are dropped and
+/// counted. 2^20 X-events is ~100 MB of JSON — roomy for smoke runs,
+/// finite for forgotten ones.
+pub const DEFAULT_EVENT_LIMIT: usize = 1 << 20;
+
+/// One recorded span (a `ph:"X"` complete event in the output).
+struct Event {
+    name: &'static str,
+    /// Start, relative to the recording epoch.
+    ts: Duration,
+    dur: Duration,
+    args: Vec<(&'static str, f64)>,
+}
+
+/// A thread's span buffer plus its overflow count.
+#[derive(Default)]
+struct ThreadBuf {
+    events: Vec<Event>,
+    dropped: u64,
+}
+
+/// Registry entry: the track name and the shared buffer.
+struct ThreadTrack {
+    name: String,
+    buf: Arc<Mutex<ThreadBuf>>,
+}
+
+/// The live recording: epoch, per-thread cap, and the track registry
+/// (index = Perfetto `tid`).
+struct Recorder {
+    epoch: Instant,
+    limit: usize,
+    tracks: Vec<ThreadTrack>,
+}
+
+/// The off-path gate: one relaxed load per instrumentation site.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Bumped by every [`start`] so cached thread-locals from an earlier
+/// recording re-register instead of writing into a drained buffer.
+static GENERATION: AtomicU64 = AtomicU64::new(0);
+static RECORDER: Mutex<Option<Recorder>> = Mutex::new(None);
+
+/// What a thread caches after registering with the live recording.
+struct Local {
+    gen: u64,
+    epoch: Instant,
+    limit: usize,
+    buf: Arc<Mutex<ThreadBuf>>,
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<Local>> = const { RefCell::new(None) };
+}
+
+/// Survive a panicked recorder thread: trace buffers hold plain data,
+/// so a poisoned lock's contents are still coherent.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Register the calling thread with the live recording (if any).
+fn register(gen_now: u64) -> Option<Local> {
+    let mut rec = lock_ignore_poison(&RECORDER);
+    let rec = rec.as_mut()?;
+    let tid = rec.tracks.len();
+    let name = std::thread::current()
+        .name()
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("thread-{tid}"));
+    let buf = Arc::new(Mutex::new(ThreadBuf::default()));
+    rec.tracks.push(ThreadTrack { name, buf: buf.clone() });
+    Some(Local { gen: gen_now, epoch: rec.epoch, limit: rec.limit, buf })
+}
+
+/// Record one complete event into the calling thread's buffer.
+fn record(name: &'static str, start: Instant, end: Instant, args: Vec<(&'static str, f64)>) {
+    LOCAL.with(|cell| {
+        let gen_now = GENERATION.load(Ordering::Acquire);
+        let mut slot = cell.borrow_mut();
+        if slot.as_ref().is_none_or(|l| l.gen != gen_now) {
+            *slot = register(gen_now);
+        }
+        let Some(local) = slot.as_ref() else { return };
+        let ts = start.saturating_duration_since(local.epoch);
+        let dur = end.saturating_duration_since(start);
+        let mut buf = lock_ignore_poison(&local.buf);
+        if buf.events.len() >= local.limit {
+            buf.dropped += 1;
+        } else {
+            buf.events.push(Event { name, ts, dur, args });
+        }
+    });
+}
+
+/// Whether a recording is live. One relaxed atomic load — callers may
+/// gate arbitrary argument-marshalling work behind it.
+#[inline]
+pub fn active() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Arm a recording with the default per-thread event cap.
+pub fn start() {
+    start_with_limit(DEFAULT_EVENT_LIMIT);
+}
+
+/// Arm a recording capping each thread's buffer at `limit` events
+/// (`limit == 0` records nothing but keeps every enabled-path cost —
+/// what the overhead bench calls "enabled-idle"). Replaces any live
+/// recording, discarding its events.
+pub fn start_with_limit(limit: usize) {
+    let mut rec = lock_ignore_poison(&RECORDER);
+    *rec = Some(Recorder { epoch: Instant::now(), limit, tracks: Vec::new() });
+    GENERATION.fetch_add(1, Ordering::AcqRel);
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Disarm and drain: returns the trace-event JSON array, or `None` when
+/// no recording was live. Spans still open on other threads are lost
+/// (they complete after their buffer is drained), which is the honest
+/// cut — the file describes exactly what finished while recording.
+pub fn stop() -> Option<Json> {
+    ENABLED.store(false, Ordering::Release);
+    let rec = lock_ignore_poison(&RECORDER).take()?;
+    Some(render(rec))
+}
+
+/// [`stop`] + write the JSON to `path`. Returns `Ok(false)` when no
+/// recording was live (nothing written).
+pub fn stop_and_write(path: &Path) -> Result<bool> {
+    match stop() {
+        Some(json) => {
+            std::fs::write(path, json.to_string_compact())?;
+            Ok(true)
+        }
+        None => Ok(false),
+    }
+}
+
+const PID: f64 = 1.0;
+
+fn us(d: Duration) -> f64 {
+    d.as_nanos() as f64 / 1000.0
+}
+
+fn meta(name: &str, tid: usize, value: &str) -> Json {
+    obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(PID)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", obj(vec![("name", Json::Str(value.to_string()))])),
+    ])
+}
+
+/// Render the drained recording as the trace-event array: process /
+/// track metadata first, then each track's spans sorted by start time
+/// (so `ts` is monotone per `tid`).
+fn render(rec: Recorder) -> Json {
+    let mut out = vec![meta("process_name", 0, "paac")];
+    for (tid, track) in rec.tracks.iter().enumerate() {
+        out.push(meta("thread_name", tid, &track.name));
+    }
+    for (tid, track) in rec.tracks.iter().enumerate() {
+        let mut buf = lock_ignore_poison(&track.buf);
+        let ThreadBuf { mut events, dropped } = std::mem::take(&mut *buf);
+        events.sort_by_key(|e| e.ts);
+        if dropped > 0 {
+            // the drop marker sits at ts 0, ahead of the track's real
+            // events, so per-track ts stays monotone
+            out.push(obj(vec![
+                ("name", Json::Str("trace.dropped".to_string())),
+                ("cat", Json::Str("paac".to_string())),
+                ("ph", Json::Str("X".to_string())),
+                ("ts", Json::Num(0.0)),
+                ("dur", Json::Num(0.0)),
+                ("pid", Json::Num(PID)),
+                ("tid", Json::Num(tid as f64)),
+                ("args", obj(vec![("count", Json::Num(dropped as f64))])),
+            ]));
+        }
+        for e in events {
+            let mut fields = vec![
+                ("name", Json::Str(e.name.to_string())),
+                ("cat", Json::Str("paac".to_string())),
+                ("ph", Json::Str("X".to_string())),
+                ("ts", Json::Num(us(e.ts))),
+                ("dur", Json::Num(us(e.dur))),
+                ("pid", Json::Num(PID)),
+                ("tid", Json::Num(tid as f64)),
+            ];
+            if !e.args.is_empty() {
+                let args = e.args.into_iter().map(|(k, v)| (k, Json::Num(v))).collect();
+                fields.push(("args", obj(args)));
+            }
+            out.push(obj(fields));
+        }
+    }
+    Json::Arr(out)
+}
+
+/// RAII span: measures from construction to drop, then records a
+/// complete event on the calling thread's track. Free (no timestamp
+/// taken) when no recording is live.
+pub struct Span {
+    start: Option<(&'static str, Instant)>,
+    args: Vec<(&'static str, f64)>,
+}
+
+impl Span {
+    /// Attach a numeric argument (shown in the Perfetto span details).
+    /// No-op on an inactive span.
+    pub fn arg(mut self, key: &'static str, value: f64) -> Span {
+        if self.start.is_some() {
+            self.args.push((key, value));
+        }
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some((name, t0)) = self.start.take() {
+            record(name, t0, Instant::now(), std::mem::take(&mut self.args));
+        }
+    }
+}
+
+/// Open a span named `name` on the calling thread's track.
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    let start = active().then(|| (name, Instant::now()));
+    Span { start, args: Vec::new() }
+}
+
+/// Record an externally measured interval (e.g. a queue wait anchored
+/// on [`Request::enqueued`](crate::serve::queue::Request::enqueued)) on
+/// the calling thread's track.
+#[inline]
+pub fn complete(name: &'static str, start: Instant, end: Instant) {
+    complete_with(name, start, end, Vec::new());
+}
+
+/// [`complete`] with span arguments.
+#[inline]
+pub fn complete_with(
+    name: &'static str,
+    start: Instant,
+    end: Instant,
+    args: Vec<(&'static str, f64)>,
+) {
+    if active() {
+        record(name, start, end, args);
+    }
+}
+
+/// Structural summary of a validated trace (what [`validate`] proves).
+#[derive(Debug, Default)]
+pub struct TraceSummary {
+    /// Total `ph:"X"` span events.
+    pub spans: usize,
+    /// Distinct `tid` tracks that carry span events.
+    pub tracks: usize,
+    /// Per-name span count.
+    pub count_by_name: BTreeMap<String, usize>,
+    /// Per-name summed duration, microseconds.
+    pub dur_us_by_name: BTreeMap<String, f64>,
+    /// `tid -> thread_name` metadata.
+    pub track_names: BTreeMap<u64, String>,
+}
+
+impl TraceSummary {
+    /// Summed duration of all spans named `name`, in seconds.
+    pub fn dur_secs(&self, name: &str) -> f64 {
+        self.dur_us_by_name.get(name).copied().unwrap_or(0.0) / 1e6
+    }
+
+    /// Number of spans named `name`.
+    pub fn count(&self, name: &str) -> usize {
+        self.count_by_name.get(name).copied().unwrap_or(0)
+    }
+}
+
+/// Validate a parsed trace-event array structurally: every event is an
+/// object with `name`/`ph`; `B`/`E` events balance per track (LIFO
+/// nesting); `X` events carry numeric `ts`/`dur >= 0`/`tid`, with `ts`
+/// monotone non-decreasing within each track. Returns a
+/// [`TraceSummary`] for content assertions; `Err` carries a
+/// human-readable reason. Shared by the trace tests and the
+/// `trace_check` example so the smoke target and the unit tests can
+/// never disagree about well-formedness.
+pub fn validate(trace: &Json) -> std::result::Result<TraceSummary, String> {
+    let events = trace.as_arr().ok_or("trace root must be a JSON array")?;
+    let mut summary = TraceSummary::default();
+    let mut last_ts: BTreeMap<u64, f64> = BTreeMap::new();
+    let mut open: BTreeMap<u64, Vec<String>> = BTreeMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        let ctx = |msg: &str| format!("event {i}: {msg}");
+        if ev.as_obj().is_none() {
+            return Err(ctx("not an object"));
+        }
+        let name = ev
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ctx("missing string 'name'"))?
+            .to_string();
+        let ph = ev
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ctx("missing string 'ph'"))?;
+        let tid = || -> std::result::Result<u64, String> {
+            ev.get("tid")
+                .and_then(Json::as_f64)
+                .map(|t| t as u64)
+                .ok_or_else(|| ctx("missing numeric 'tid'"))
+        };
+        match ph {
+            "M" => {
+                if name == "thread_name" {
+                    if let Some(n) = ev.get("args").and_then(|a| a.get("name")).and_then(Json::as_str)
+                    {
+                        summary.track_names.insert(tid()?, n.to_string());
+                    }
+                }
+            }
+            "B" => open.entry(tid()?).or_default().push(name),
+            "E" => {
+                let t = tid()?;
+                match open.get_mut(&t).and_then(Vec::pop) {
+                    Some(b) if b == name || name.is_empty() => {}
+                    Some(b) => return Err(ctx(&format!("'E' for '{name}' closes '{b}'"))),
+                    None => return Err(ctx("'E' with no open 'B' on its track")),
+                }
+            }
+            "X" => {
+                let t = tid()?;
+                let ts = ev
+                    .get("ts")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| ctx("missing numeric 'ts'"))?;
+                let dur = ev
+                    .get("dur")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| ctx("missing numeric 'dur'"))?;
+                if ts.is_nan() || dur.is_nan() || ts < 0.0 || dur < 0.0 {
+                    return Err(ctx(&format!("negative or NaN timing ts={ts} dur={dur}")));
+                }
+                if let Some(&prev) = last_ts.get(&t) {
+                    if ts < prev {
+                        return Err(ctx(&format!("ts {ts} < {prev} on track {t}: not monotone")));
+                    }
+                }
+                last_ts.insert(t, ts);
+                summary.spans += 1;
+                *summary.count_by_name.entry(name.clone()).or_insert(0) += 1;
+                *summary.dur_us_by_name.entry(name).or_insert(0.0) += dur;
+            }
+            other => return Err(ctx(&format!("unknown ph '{other}'"))),
+        }
+    }
+    for (t, stack) in open {
+        if !stack.is_empty() {
+            return Err(format!("track {t}: {} unclosed 'B' event(s)", stack.len()));
+        }
+    }
+    summary.tracks = last_ts.len();
+    Ok(summary)
+}
+
+/// Serialize the trace tests run one-at-a-time: the recorder is
+/// process-global, so concurrent `cargo test` threads that both call
+/// [`start`]/[`stop`] would interleave. Every test that records MUST
+/// hold this lock.
+#[cfg(test)]
+pub(crate) fn test_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    lock_ignore_poison(&LOCK)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing_and_stop_returns_none() {
+        let _g = test_lock();
+        assert!(!active());
+        {
+            let _s = span("ghost");
+        }
+        complete("ghost2", Instant::now(), Instant::now());
+        assert!(stop().is_none(), "no recording was armed");
+    }
+
+    #[test]
+    fn spans_round_trip_through_parse_and_validate() {
+        let _g = test_lock();
+        start();
+        {
+            let _outer = span("outer").arg("k", 3.0);
+            std::thread::sleep(Duration::from_millis(2));
+            let _inner = span("inner");
+        }
+        let t0 = Instant::now();
+        complete_with("measured", t0, t0 + Duration::from_millis(5), vec![("rows", 4.0)]);
+        let json = stop().expect("recording was live");
+        let text = json.to_string_compact();
+        let parsed = Json::parse(&text).expect("trace must re-parse");
+        let summary = validate(&parsed).expect("trace must validate");
+        assert_eq!(summary.count("outer"), 1);
+        assert_eq!(summary.count("inner"), 1);
+        assert_eq!(summary.count("measured"), 1);
+        assert!(summary.dur_secs("outer") >= 0.002, "outer wraps the sleep");
+        assert!(
+            (summary.dur_secs("measured") - 0.005).abs() < 1e-9,
+            "complete() must preserve the measured interval exactly"
+        );
+        assert_eq!(summary.tracks, 1, "single-thread recording is one track");
+        assert!(stop().is_none(), "stop drained the recording");
+    }
+
+    #[test]
+    fn threads_get_their_own_named_tracks() {
+        let _g = test_lock();
+        start();
+        {
+            let _main = span("on-main");
+        }
+        std::thread::Builder::new()
+            .name("trace-test-worker".into())
+            .spawn(|| {
+                let _s = span("on-worker");
+            })
+            .unwrap()
+            .join()
+            .unwrap();
+        let json = stop().unwrap();
+        let summary = validate(&json).unwrap();
+        assert_eq!(summary.tracks, 2);
+        assert!(
+            summary.track_names.values().any(|n| n == "trace-test-worker"),
+            "worker thread name must become a track name: {:?}",
+            summary.track_names
+        );
+    }
+
+    #[test]
+    fn ts_is_monotone_per_track_despite_nested_drop_order() {
+        let _g = test_lock();
+        start();
+        {
+            let _a = span("a"); // dropped LAST, but started first
+            std::thread::sleep(Duration::from_millis(1));
+            let _b = span("b");
+        }
+        let json = stop().unwrap();
+        validate(&json).expect("render must sort spans by start time");
+    }
+
+    #[test]
+    fn event_limit_drops_and_reports() {
+        let _g = test_lock();
+        start_with_limit(3);
+        for _ in 0..10 {
+            let _s = span("burst");
+        }
+        let json = stop().unwrap();
+        let summary = validate(&json).unwrap();
+        assert_eq!(summary.count("burst"), 3, "cap must hold");
+        assert_eq!(summary.count("trace.dropped"), 1, "overflow must be surfaced");
+    }
+
+    #[test]
+    fn restart_invalidates_stale_thread_buffers() {
+        let _g = test_lock();
+        start();
+        {
+            let _s = span("first-recording");
+        }
+        let first = stop().unwrap();
+        assert_eq!(validate(&first).unwrap().count("first-recording"), 1);
+        start();
+        {
+            let _s = span("second-recording");
+        }
+        let second = stop().unwrap();
+        let summary = validate(&second).unwrap();
+        assert_eq!(summary.count("first-recording"), 0, "old events must not leak");
+        assert_eq!(summary.count("second-recording"), 1);
+    }
+
+    #[test]
+    fn validate_rejects_malformed_traces() {
+        assert!(validate(&Json::Num(3.0)).is_err(), "root must be an array");
+        let unbalanced = Json::parse(
+            r#"[{"name":"x","ph":"B","ts":1,"tid":0,"pid":1}]"#,
+        )
+        .unwrap();
+        assert!(validate(&unbalanced).is_err(), "unclosed B must fail");
+        let backwards = Json::parse(
+            r#"[{"name":"a","ph":"X","ts":5,"dur":1,"tid":0,"pid":1},
+                {"name":"b","ph":"X","ts":2,"dur":1,"tid":0,"pid":1}]"#,
+        )
+        .unwrap();
+        assert!(validate(&backwards).is_err(), "non-monotone ts must fail");
+        let balanced = Json::parse(
+            r#"[{"name":"x","ph":"B","ts":1,"tid":0,"pid":1},
+                {"name":"x","ph":"E","ts":2,"tid":0,"pid":1}]"#,
+        )
+        .unwrap();
+        assert!(validate(&balanced).is_ok(), "balanced B/E must pass");
+    }
+}

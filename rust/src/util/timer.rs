@@ -70,6 +70,22 @@ impl Phase {
         }
     }
 
+    /// The trace span name this bucket emits under (see
+    /// [`crate::trace`]): `"train."` + [`Phase::name`]. Keeping the
+    /// mapping here is what makes the Figure-2 breakdown and a recorded
+    /// trace structurally unable to disagree — both are fed by the same
+    /// [`PhaseTimer::time_traced`] / [`PhaseTimer::add_traced`] call.
+    pub fn span_name(self) -> &'static str {
+        match self {
+            Phase::ActionSelect => "train.action_select",
+            Phase::EnvStep => "train.env_step",
+            Phase::Batching => "train.batching",
+            Phase::Returns => "train.returns",
+            Phase::Learn => "train.learn",
+            Phase::Other => "train.other",
+        }
+    }
+
     fn index(self) -> usize {
         match self {
             Phase::ActionSelect => 0,
@@ -104,6 +120,29 @@ impl PhaseTimer {
     /// Charge an externally measured duration.
     pub fn add(&mut self, phase: Phase, d: Duration) {
         self.acc[phase.index()] += d;
+    }
+
+    /// [`PhaseTimer::time`] that also records the interval as a trace
+    /// span named [`Phase::span_name`] (a no-op while no recording is
+    /// live). The span and the bucket share the *same* two timestamps,
+    /// so summing a trace's `train.*` spans reproduces the phase
+    /// breakdown exactly — the consistency the trace tests assert.
+    pub fn time_traced<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let end = Instant::now();
+        crate::trace::complete(phase.span_name(), t0, end);
+        self.acc[phase.index()] += end.saturating_duration_since(t0);
+        out
+    }
+
+    /// [`PhaseTimer::add`] for a region measured by the caller's own
+    /// `Instant`, closing it now: charges the bucket and records the
+    /// matching trace span from the same pair of timestamps.
+    pub fn add_traced(&mut self, phase: Phase, start: Instant) {
+        let end = Instant::now();
+        crate::trace::complete(phase.span_name(), start, end);
+        self.acc[phase.index()] += end.saturating_duration_since(start);
     }
 
     pub fn get(&self, phase: Phase) -> Duration {
@@ -178,6 +217,30 @@ mod tests {
         b.add(Phase::Batching, Duration::from_millis(7));
         a.merge(&b);
         assert_eq!(a.get(Phase::Batching), Duration::from_millis(12));
+    }
+
+    #[test]
+    fn traced_timing_and_trace_spans_agree_exactly() {
+        // the tentpole invariant: the Figure-2 buckets and the Perfetto
+        // spans are fed by the same timestamps, so they cannot disagree
+        let _g = crate::trace::test_lock();
+        crate::trace::start();
+        let mut t = PhaseTimer::new();
+        t.time_traced(Phase::Learn, || std::thread::sleep(Duration::from_millis(3)));
+        let t0 = Instant::now();
+        std::thread::sleep(Duration::from_millis(2));
+        t.add_traced(Phase::EnvStep, t0);
+        let trace = crate::trace::stop().expect("recording was live");
+        let summary = crate::trace::validate(&trace).expect("trace must validate");
+        for phase in [Phase::Learn, Phase::EnvStep] {
+            let bucket = t.get(phase).as_secs_f64();
+            let spans = summary.dur_secs(phase.span_name());
+            assert!(
+                (bucket - spans).abs() <= 1e-6 + bucket * 1e-3,
+                "{}: bucket {bucket}s != span sum {spans}s",
+                phase.name()
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,154 @@
+//! End-to-end trace tests: record real serve and train runs, then prove
+//! the emitted Perfetto JSON is structurally valid AND numerically
+//! consistent with the subsystems' own accounting — the serve queue-wait
+//! histogram and the Figure-2 phase buckets are fed by the same
+//! timestamps as the spans, so the two views must agree.
+//!
+//! The recorder is process-global; these tests serialize on a local
+//! lock (this binary is its own process, so lib tests can't interfere).
+
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use paac::algo::nstep_q::host_nstep_q;
+use paac::config::{Algo, Config};
+use paac::coordinator::master::Trainer;
+use paac::envs::{GameId, ObsMode, ACTIONS};
+use paac::serve::{run_clients, PolicyServer, ServeConfig, SyntheticFactory};
+use paac::trace;
+use paac::util::json::Json;
+use paac::util::timer::Phase;
+
+static TRACE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize recording tests and start each from a disarmed recorder.
+fn trace_guard() -> MutexGuard<'static, ()> {
+    let g = TRACE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _ = trace::stop();
+    g
+}
+
+#[test]
+fn serve_trace_spans_match_queue_wait_stats() {
+    let _g = trace_guard();
+    trace::start();
+
+    let obs_len = ObsMode::Grid.obs_len();
+    let factory = SyntheticFactory::new(obs_len, ACTIONS, 5)
+        .with_cost(Duration::from_micros(200), Duration::from_micros(2));
+    let cfg = ServeConfig::new(8, Duration::from_micros(500)).with_shards(2);
+    let server = PolicyServer::start_pool(&factory, cfg).expect("start shard pool");
+    run_clients(&server, GameId::Catch, ObsMode::Grid, 11, 10, 4, 50).expect("load");
+    let snap = server.shutdown().expect("shutdown");
+
+    let recorded = trace::stop().expect("recording was live");
+    let summary = trace::validate(&recorded).expect("trace must validate");
+
+    // the serve span taxonomy is present
+    for name in ["serve.claim", "serve.queue_wait", "serve.infer", "serve.fanout"] {
+        assert!(summary.count(name) > 0, "no {name} spans recorded");
+    }
+    // every batcher shard and every client session got its own track
+    let tracks: Vec<&str> = summary.track_names.values().map(|s| s.as_str()).collect();
+    for shard in 0..2 {
+        let want = format!("paac-serve-shard{shard}");
+        assert!(tracks.iter().any(|t| *t == want), "missing track {want} in {tracks:?}");
+    }
+    assert!(
+        tracks.iter().any(|t| t.starts_with("paac-client-")),
+        "client sessions should appear as named tracks, got {tracks:?}"
+    );
+
+    // queue-wait consistency: the spans and the stats histogram are fed
+    // by the same measured waits (stats truncate each wait to whole µs,
+    // hence the small absolute slack)
+    let span_total = summary.dur_secs("serve.queue_wait");
+    let stat_total = snap.queue_wait.total_secs;
+    assert!(snap.queue_wait.count > 0, "stats recorded no queue waits");
+    let tol = 1e-3 + 0.02 * stat_total.max(span_total);
+    assert!(
+        (span_total - stat_total).abs() <= tol,
+        "queue-wait span sum {span_total:.6}s disagrees with stats total {stat_total:.6}s \
+         (tolerance {tol:.6}s)"
+    );
+    assert_eq!(summary.count("serve.queue_wait"), snap.queue_wait.count as usize);
+}
+
+#[test]
+fn train_trace_spans_match_phase_buckets() {
+    let _g = trace_guard();
+
+    let mut cfg = Config::default();
+    cfg.algo = Algo::NstepQ;
+    cfg.n_e = 8;
+    cfg.n_w = 4;
+    cfg.replay_capacity = 4_000;
+    cfg.replay_min = 200;
+    cfg.validate().expect("test config is valid");
+    let mut q = host_nstep_q(&cfg, ObsMode::Grid);
+
+    trace::start();
+    for _ in 0..12 {
+        q.cycle(0.01).expect("host nstep-q cycle");
+    }
+    let recorded = trace::stop().expect("recording was live");
+    let summary = trace::validate(&recorded).expect("trace must validate");
+
+    // every phase bucket the run charged must equal its span sum — both
+    // sides come from the same two Instants per region (time_traced /
+    // add_traced), so only µs rendering truncation separates them
+    for phase in Phase::ALL {
+        let bucket = q.timer.get(phase).as_secs_f64();
+        let spans = summary.dur_secs(phase.span_name());
+        assert!(
+            (bucket - spans).abs() <= 1e-4 + bucket * 0.05,
+            "{}: bucket {bucket:.6}s != span sum {spans:.6}s",
+            phase.name()
+        );
+    }
+    // 480 steps past the 200-transition warmup: the learner ran, so the
+    // replay spans nested inside Batching/Returns must be there too
+    assert!(summary.count("train.replay_push") > 0, "no replay_push spans");
+    assert!(summary.count("train.replay_sample") > 0, "no replay_sample spans");
+    assert!(summary.count(Phase::Learn.span_name()) > 0, "learner never traced");
+}
+
+#[test]
+fn trainer_run_writes_trace_files() {
+    let _g = trace_guard();
+
+    let tmp = std::env::temp_dir().join(format!("paac-trace-it-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).unwrap();
+
+    let mut cfg = Config::default();
+    cfg.algo = Algo::NstepQ;
+    cfg.run_name = "traced".into();
+    cfg.out_dir = tmp.join("runs");
+    cfg.max_timesteps = 400;
+    cfg.n_e = 8;
+    cfg.n_w = 4;
+    cfg.replay_capacity = 4_000;
+    cfg.replay_min = 200;
+    cfg.eval_episodes = 0;
+    cfg.trace = Some(tmp.join("t.json"));
+
+    let mut trainer = Trainer::new(cfg).expect("host-fallback trainer");
+    let report = trainer.run().expect("traced run");
+    assert!(report.timesteps >= 400);
+    assert!(!trace::active(), "run() must disarm the recorder");
+
+    // both artifacts: the --trace path and the run-dir copy
+    for path in [tmp.join("t.json"), tmp.join("runs/traced/trace.json")] {
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+        let json = Json::parse(&text).expect("trace file parses");
+        let summary = trace::validate(&json).expect("trace file validates");
+        assert!(
+            summary.count("train.env_step") > 0,
+            "{} has no env_step spans",
+            path.display()
+        );
+    }
+    let _ = std::fs::remove_dir_all(&tmp);
+}
