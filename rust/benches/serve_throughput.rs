@@ -4,7 +4,7 @@
 //! Drives the serve subsystem with concurrent synthetic clients against
 //! a backend that charges a fixed per-call dispatch cost plus a small
 //! per-row cost — the cost shape of a real accelerator, where one
-//! batched call amortizes dispatch over the whole batch. Four tables:
+//! batched call amortizes dispatch over the whole batch. Five tables:
 //!
 //! 1. **Micro-batching** — batched queries/sec (width 32, 500µs
 //!    deadline) vs the unbatched baseline (width 1: one device call per
@@ -22,15 +22,21 @@
 //!    (`--cache 0 --no-dedup`), with dedup only, and with dedup + a
 //!    response cache: queries/sec, cache hit rate and coalesced slots
 //!    vs the no-cache baseline.
+//! 5. **Overload** — a paced pipelined flood at 1x/4x/16x of a bounded
+//!    server's nominal capacity (`--max-queue`, per-id `Overloaded`
+//!    sheds): admitted q/s, shed rate and reply p99 at each offered
+//!    load, with conservation (admitted + shed == submitted) asserted
+//!    on both ends of the wire.
 //!
 //! Run: cargo bench --bench serve_throughput  (PAAC_BENCH_FAST=1 to shorten)
 
+use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use paac::benchkit::{JsonReport, Table};
 use paac::envs::{GameId, ObsMode, ACTIONS};
 use paac::serve::{
-    run_clients, PolicyServer, RemoteHandle, ServeConfig, Session, StatsSnapshot,
+    run_clients, Completion, PolicyServer, RemoteHandle, ServeConfig, Session, StatsSnapshot,
     SyntheticFactory, TcpFrontend,
 };
 use paac::util::rng::Pcg32;
@@ -106,6 +112,128 @@ fn run_dup_load(
     let wall = t0.elapsed().as_secs_f64();
     let snap = server.shutdown().expect("shutdown");
     ((clients * queries_per_client) as f64 / wall.max(1e-9), snap)
+}
+
+/// Emulated slow device for the overload table: with zero per-row cost
+/// a width-4 backend serves exactly `width / OVERLOAD_DISPATCH` queries
+/// per second, which makes "N times capacity" a computable offered load
+/// instead of a guess.
+const OVERLOAD_DISPATCH: Duration = Duration::from_millis(5);
+const OVERLOAD_WIDTH: usize = 4;
+
+/// Pull one completion off a flooding handle and file it: replies book
+/// a latency sample, sheds just count.
+fn drain_one(
+    h: &mut RemoteHandle,
+    submitted_at: &mut HashMap<u32, Instant>,
+    ok: &mut u64,
+    shed: &mut u64,
+    latencies: &mut Vec<f64>,
+) {
+    match h.recv().expect("flood recv") {
+        Completion::Reply(id, _) => {
+            *ok += 1;
+            if let Some(t) = submitted_at.remove(&id) {
+                latencies.push(t.elapsed().as_secs_f64() * 1e3);
+            }
+        }
+        Completion::Shed(id, _) => {
+            *shed += 1;
+            submitted_at.remove(&id);
+        }
+    }
+}
+
+/// One paced pipelined flood client: submit `queries` distinct
+/// observations at `rate_qps` (bursts of 4, bounded in-flight window),
+/// draining completions as they arrive. Returns (replies, sheds,
+/// per-reply latencies in ms).
+fn overload_flood(addr: String, queries: usize, rate_qps: f64, idx: usize) -> (u64, u64, Vec<f64>) {
+    const BURST: usize = 4;
+    const WINDOW: usize = 48;
+    let mut h = RemoteHandle::connect(&addr).expect("connect flood client");
+    let obs_len = h.obs_len();
+    let (mut ok, mut shed) = (0u64, 0u64);
+    let mut latencies = Vec::new();
+    let mut submitted_at: HashMap<u32, Instant> = HashMap::new();
+    let mut inflight = 0usize;
+    let mut submitted = 0usize;
+    let t0 = Instant::now();
+    while submitted < queries {
+        let due = t0 + Duration::from_secs_f64(submitted as f64 / rate_qps);
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        for _ in 0..BURST.min(queries - submitted) {
+            let v = idx as f32 + submitted as f32 * 1e-3;
+            let obs = vec![v; obs_len];
+            let id = h.submit(&obs).expect("pipelined submit");
+            submitted_at.insert(id, Instant::now());
+            submitted += 1;
+            inflight += 1;
+            while inflight >= WINDOW {
+                drain_one(&mut h, &mut submitted_at, &mut ok, &mut shed, &mut latencies);
+                inflight -= 1;
+            }
+        }
+    }
+    while inflight > 0 {
+        drain_one(&mut h, &mut submitted_at, &mut ok, &mut shed, &mut latencies);
+        inflight -= 1;
+    }
+    (ok, shed, latencies)
+}
+
+/// Run one overload row: a bounded (`--max-queue 16`) server flooded at
+/// `multiple` times its nominal capacity for ~`seconds`. Returns
+/// (offered q/s, admitted q/s, shed rate, reply p99 ms); conservation
+/// is asserted, not reported — a lost request is a bug, not a datum.
+fn run_overload(multiple: f64, seconds: f64) -> (f64, f64, f64, f64) {
+    let clients = 4usize;
+    let capacity = OVERLOAD_WIDTH as f64 / OVERLOAD_DISPATCH.as_secs_f64();
+    let offered = capacity * multiple;
+    let per_client_rate = offered / clients as f64;
+    let queries = (per_client_rate * seconds).ceil() as usize;
+    let obs_len = ObsMode::Grid.obs_len();
+    let factory =
+        SyntheticFactory::new(obs_len, ACTIONS, 7).with_cost(OVERLOAD_DISPATCH, Duration::ZERO);
+    let cfg = ServeConfig::new(OVERLOAD_WIDTH, Duration::from_micros(200)).with_max_queue(16);
+    let server = PolicyServer::start_pool(&factory, cfg).expect("start bounded server");
+    let frontend = TcpFrontend::bind_with("127.0.0.1:0", server.connector(), None, 64)
+        .expect("bind overload loopback");
+    let addr = frontend.local_addr().to_string();
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..clients)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || overload_flood(addr, queries, per_client_rate, c))
+        })
+        .collect();
+    let (mut ok, mut shed) = (0u64, 0u64);
+    let mut latencies = Vec::new();
+    for w in workers {
+        let (o, s, mut l) = w.join().expect("flood client thread");
+        ok += o;
+        shed += s;
+        latencies.append(&mut l);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    frontend.shutdown().expect("frontend shutdown");
+    let snap = server.shutdown().expect("shutdown");
+    let submitted = (clients * queries) as u64;
+    assert_eq!(ok + shed, submitted, "flood lost a request on the client side");
+    assert_eq!(
+        snap.overload.admitted + snap.overload.shed_total,
+        submitted,
+        "server books disagree with the wire"
+    );
+    latencies.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+    let p99 = match latencies.len() {
+        0 => 0.0,
+        n => latencies[(n - 1) * 99 / 100],
+    };
+    (offered, ok as f64 / wall.max(1e-9), shed as f64 / submitted.max(1) as f64, p99)
 }
 
 /// One row of the dedup/cache table: throughput, device-rows-per-query
@@ -349,12 +477,53 @@ fn main() {
         cached_snap.cache.coalesced_slots
     );
 
+    // -- table 5: admission control under a 1x/4x/16x-capacity flood --
+
+    let overload_seconds = if fast { 0.5 } else { 2.0 };
+    let mut overload_table = Table::new(&[
+        "offered load",
+        "offered q/s",
+        "admitted q/s",
+        "shed rate",
+        "reply p99 ms",
+    ]);
+    let mut shed_16x = 0.0;
+    let mut admitted_16x = 0.0;
+    for multiple in [1.0f64, 4.0, 16.0] {
+        let (offered, admitted_qps, shed_rate, p99) = run_overload(multiple, overload_seconds);
+        if multiple == 16.0 {
+            shed_16x = shed_rate;
+            admitted_16x = admitted_qps;
+        }
+        overload_table.row(vec![
+            format!("{multiple:.0}x capacity"),
+            format!("{offered:.0}"),
+            format!("{admitted_qps:.0}"),
+            format!("{:.0}%", shed_rate * 100.0),
+            format!("{p99:.3}"),
+        ]);
+    }
+    println!(
+        "\n## Admission control: bounded queue (max-queue 16) under a paced \
+         pipelined flood (width {OVERLOAD_WIDTH}, {OVERLOAD_DISPATCH:?} \
+         dispatch = {:.0} q/s nominal capacity)\n",
+        OVERLOAD_WIDTH as f64 / OVERLOAD_DISPATCH.as_secs_f64()
+    );
+    println!("{}", overload_table.render());
+    println!(
+        "past capacity the server answers with per-id Overloaded frames \
+         instead of queueing: admitted throughput holds near capacity and \
+         reply p99 stays bounded by the queue cap while the shed rate absorbs \
+         the excess (conservation admitted + shed == submitted is asserted)"
+    );
+
     // -- machine-readable summary (the serve perf trajectory) --
     let mut report = JsonReport::new("serve_throughput");
     report.add_table("micro_batching", &table);
     report.add_table("shard_pool", &shard_table);
     report.add_table("transport", &transport_table);
     report.add_table("dedup_cache", &dup_table);
+    report.add_table("overload", &overload_table);
     report.add_num("queries_per_client", queries as f64);
     report.add_num("scaling_low_qps", lo);
     report.add_num("scaling_high_qps", hi);
@@ -365,6 +534,8 @@ fn main() {
     report.add_num("dup_cached_qps", cached_qps);
     report.add_num("dup_cache_hit_rate", cached_snap.cache.hit_rate);
     report.add_num("dup_coalesced_slots", cached_snap.cache.coalesced_slots as f64);
+    report.add_num("overload_shed_rate_16x", shed_16x);
+    report.add_num("overload_admitted_qps_16x", admitted_16x);
     let out = std::path::Path::new("BENCH_serve.json");
     report.write(out).expect("write BENCH_serve.json");
     println!("\nmachine-readable summary written to {}", out.display());

@@ -48,6 +48,11 @@ pub enum Error {
     /// type, truncated/oversized/malformed frames).
     Wire(String),
 
+    /// Admission control shed the request: the submission queue (or a
+    /// connection's pipeline window) was at capacity and the server
+    /// chose to reject rather than stall every client. Retryable.
+    Overloaded(String),
+
     Io(std::io::Error),
 }
 
@@ -66,6 +71,7 @@ impl fmt::Display for Error {
             Error::Train(m) => write!(f, "train: {m}"),
             Error::Serve(m) => write!(f, "serve: {m}"),
             Error::Wire(m) => write!(f, "wire: {m}"),
+            Error::Overloaded(m) => write!(f, "overloaded: {m}"),
             Error::Io(e) => write!(f, "io: {e}"),
         }
     }
@@ -111,6 +117,11 @@ impl Error {
     /// Helper for wire-protocol errors.
     pub fn wire(msg: impl Into<String>) -> Self {
         Error::Wire(msg.into())
+    }
+
+    /// Helper for admission-control shed errors.
+    pub fn overloaded(msg: impl Into<String>) -> Self {
+        Error::Overloaded(msg.into())
     }
 }
 

@@ -12,10 +12,12 @@
 //!              [--batch 32] [--deadline-us 2000]        (micro-batched serving)
 //!              [--shards 1] [--small-batch 0]           (batcher shard pool)
 //!              [--cache 0] [--no-dedup]                 (redundancy eliminator)
+//!              [--max-queue 0] [--pipeline 32]          (admission control)
 //!              [--listen 127.0.0.1:4700] [--conns 0]    (TCP transport frontend)
 //!              [--trace trace.json]                      (Perfetto span recording)
-//! paac client  --connect HOST:PORT [--clients 8] [--queries 200]
+//! paac client  --connect HOST:PORT[,HOST:PORT...] [--clients 8] [--queries 200]
 //!              [--game catch] [--atari] [--trace t.json] (remote synthetic clients)
+//!              [--flood]                                 (pipelined overload probe)
 //! ```
 
 use std::sync::Arc;
@@ -32,8 +34,8 @@ use paac::model::PolicyModel;
 use paac::runtime::checkpoint::Checkpoint;
 use paac::runtime::Runtime;
 use paac::serve::{
-    run_remote_clients, LinearQFactory, ModelBackendFactory, PolicyServer, ServeConfig,
-    StatsSnapshot, SyntheticFactory, TcpFrontend,
+    run_remote_clients, Completion, LinearQFactory, ModelBackendFactory, PolicyServer,
+    RemoteHandle, ServeConfig, StatsSnapshot, SyntheticFactory, TcpFrontend,
 };
 
 fn cli() -> Cli {
@@ -66,9 +68,12 @@ fn cli() -> Cli {
         .flag("small-batch", Some("0"), "small-batch fast-path shard width, 0=off (serve)")
         .flag("cache", Some("0"), "response-cache capacity in entries, 0=off (serve)")
         .switch("no-dedup", "disable in-flight dedup of identical observations (serve)")
+        .flag("max-queue", Some("0"), "shed queries past this queue depth, 0=unbounded (serve)")
+        .flag("pipeline", Some("32"), "per-connection in-flight query window (serve)")
         .flag("listen", None, "serve over TCP on this address, e.g. 127.0.0.1:0 (serve)")
         .flag("conns", Some("0"), "with --listen: exit after N connections, 0=forever (serve)")
-        .flag("connect", None, "server address to run sessions against (client)")
+        .flag("connect", None, "server address(es), comma-separated failover list (client)")
+        .switch("flood", "pipelined flood: count replies vs sheds instead of sessions (client)")
         .flag("replay-cap", None, "replay capacity in transitions (nstep-q)")
         .flag("n-step", None, "n-step return horizon of the replay assembler (nstep-q)")
         .flag("target-sync", None, "updates between target-network copies (nstep-q)")
@@ -397,6 +402,7 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
         .with_small_batch(args.usize_of("small-batch")?)
         .with_cache(args.usize_of("cache")?)
         .with_no_dedup(args.has("no-dedup"))
+        .with_max_queue(args.usize_of("max-queue")?)
         .with_trace(args.get("trace").is_some());
 
     // host linear-Q checkpoints serve without artifacts; load once and
@@ -484,7 +490,9 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
     if let Some(listen_addr) = args.get("listen") {
         let conns = args.u64_of("conns")?;
         let budget = if conns == 0 { None } else { Some(conns) };
-        let frontend = TcpFrontend::bind(listen_addr, server.connector(), budget)?;
+        let pipeline = args.usize_of("pipeline")?.max(1);
+        let frontend =
+            TcpFrontend::bind_with(listen_addr, server.connector(), budget, pipeline)?;
         // exact format matters: the CI smoke harness scrapes this line
         // for the resolved ephemeral port
         println!("listening on {}", frontend.local_addr());
@@ -505,6 +513,10 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
         let snap = server.shutdown()?;
         println!("{}", snap.summary());
         println!("{}", snap.transport.summary());
+        if snap.overload.shed_total > 0 {
+            // the CI overload smoke greps this line for shed evidence
+            println!("{}", snap.overload.summary());
+        }
         let c = snap.cache;
         if c.hits + c.misses + c.coalesced_slots > 0 {
             println!("{}", c.summary());
@@ -533,6 +545,9 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
         total_queries as f64 / wall.max(1e-9)
     );
     println!("{}", snap.summary());
+    if snap.overload.shed_total > 0 {
+        println!("{}", snap.overload.summary());
+    }
     let c = snap.cache;
     if c.hits + c.misses + c.coalesced_slots > 0 {
         println!("{}", c.summary());
@@ -546,9 +561,44 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
     write_serve_record(args, &snap, quiet)
 }
 
+/// One `--flood` worker: pipeline `queries` distinct observations at the
+/// server as fast as the window allows and tally replies vs sheds. The
+/// per-request accounting is the client half of the conservation
+/// invariant the overload tests pin: ok + shed == submitted.
+fn flood_worker(addr: &str, queries: usize, idx: u64) -> Result<(u64, u64)> {
+    // deeper than the server's default per-connection window, so a
+    // flooding client actually overruns admission control
+    const WINDOW: usize = 64;
+    let mut handle = RemoteHandle::connect(addr)?;
+    let obs_len = handle.obs_len();
+    let (mut ok, mut shed) = (0u64, 0u64);
+    let mut submitted = 0usize;
+    let mut inflight = 0usize;
+    while submitted < queries || inflight > 0 {
+        while submitted < queries && inflight < WINDOW {
+            // distinct per client and per query, so dedup/cache cannot
+            // collapse the flood into one forward
+            let v = idx as f32 + submitted as f32 * 1e-3;
+            let obs = vec![v; obs_len];
+            handle.submit(&obs)?;
+            submitted += 1;
+            inflight += 1;
+        }
+        match handle.recv()? {
+            Completion::Reply(..) => ok += 1,
+            Completion::Shed(..) => shed += 1,
+        }
+        inflight -= 1;
+    }
+    Ok((ok, shed))
+}
+
 /// The network twin of the serve load generator: `--clients` concurrent
 /// synthetic sessions, each owning its environment + sampler locally and
-/// querying the remote server at `--connect` for every step.
+/// querying the remote server at `--connect` for every step. With
+/// `--flood`, sessions are replaced by raw pipelined load: every client
+/// keeps a deep window of distinct queries in flight and reports how
+/// many were answered vs shed.
 fn cmd_client(args: &paac::cli::Args) -> Result<()> {
     let addr = args.str_of("connect")?;
     let game = GameId::parse(args.get("game").unwrap_or("catch"))?;
@@ -557,6 +607,38 @@ fn cmd_client(args: &paac::cli::Args) -> Result<()> {
     let queries = args.usize_of("queries")?.max(1);
     let seed = args.get("seed").map(|_| args.u64_of("seed")).transpose()?.unwrap_or(1);
     let quiet = args.has("quiet");
+
+    if args.has("flood") {
+        if !quiet {
+            println!(
+                "flood: {clients} pipelined client(s) -> {addr}, {queries} queries each"
+            );
+        }
+        let t0 = Instant::now();
+        let workers: Vec<_> = (0..clients)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || flood_worker(&addr, queries, i as u64))
+            })
+            .collect();
+        let (mut ok, mut shed) = (0u64, 0u64);
+        for w in workers {
+            let (o, s) =
+                w.join().map_err(|_| Error::serve("flood client thread panicked"))??;
+            ok += o;
+            shed += s;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let submitted = (clients * queries) as u64;
+        // exact format matters: the CI overload smoke greps the
+        // conservation verdict out of this line
+        println!(
+            "flood done in {wall:.2}s: submitted={submitted} ok={ok} shed={shed} \
+             conserved={}",
+            ok + shed == submitted
+        );
+        return Ok(());
+    }
 
     if !quiet {
         println!(

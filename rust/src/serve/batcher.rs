@@ -746,7 +746,7 @@ impl<B: InferBackend> Batcher<B> {
                 let reply =
                     Reply { probs: out.probs_of(u - off).to_vec(), value: out.values[u - off] };
                 // a client that hung up mid-flight is not a server error
-                let _ = r.reply.send(reply);
+                r.reply.send(reply);
                 self.lat_buf.push(now.saturating_duration_since(r.enqueued));
             }
             drop(fanout_span.arg("replies", self.lat_buf.len() as f64));

@@ -81,6 +81,23 @@
 //! concurrent synthetic clients (`--shards`, `--small-batch`);
 //! `benches/serve_throughput.rs` measures the batched-vs-unbatched and
 //! sharded-vs-single throughput curves.
+//!
+//! # Overload & failover (PR 7)
+//!
+//! The stack is hardened for saturation rather than graceful load:
+//! [`ServeConfig::with_max_queue`] bounds the submission queue, and a
+//! query arriving past the cap — or from one session hogging more than
+//! half of it — is **shed** with a typed
+//! [`Error::Overloaded`](crate::error::Error::Overloaded) (the wire's
+//! per-request `Overloaded` frame) instead of stalling every client.
+//! v2 connections pipeline many tagged queries
+//! ([`RemoteHandle::submit`] / [`RemoteHandle::recv`]) under a
+//! per-connection window (`TcpFrontend::bind_with`, `--pipeline`), and
+//! [`ReconnectingHandle`] gives clients jittered-backoff failover
+//! across a server list. Conservation is a tested invariant: admitted +
+//! shed == submitted ([`OverloadSnapshot`]), and the unbounded
+//! single-shard lockstep configuration reproduces the PR 6 behavior
+//! bit-for-bit.
 
 pub mod batcher;
 pub mod cache;
@@ -95,11 +112,14 @@ pub use batcher::{
     ModelBackendFactory, SyntheticBackend, SyntheticFactory,
 };
 pub use cache::{obs_fnv1a, ResponseCache};
-pub use queue::{Reply, Request, ShardClass, SubmissionQueue};
+pub use queue::{Admission, Reply, ReplySink, Request, ShardClass, ShedReason, SubmissionQueue};
 pub use server::{ClientHandle, Connector, PolicyServer, ServeConfig};
 pub use session::{run_clients, Session, SessionReport};
 pub use stats::{
-    CacheSnapshot, QueueWaitSnapshot, ServeStats, ShardSnapshot, ShardSpec, StatsSnapshot,
-    TransportSnapshot,
+    CacheSnapshot, OverloadSnapshot, QueueWaitSnapshot, ServeStats, ShardSnapshot, ShardSpec,
+    StatsSnapshot, TransportSnapshot,
 };
-pub use transport::{run_remote_clients, QueryTransport, RemoteHandle, TcpFrontend};
+pub use transport::{
+    run_remote_clients, Completion, QueryTransport, ReconnectingHandle, RemoteHandle,
+    TcpFrontend, DEFAULT_PIPELINE,
+};

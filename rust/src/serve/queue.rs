@@ -41,8 +41,26 @@
 //! only ever claims at the deadline).
 //! [`SubmissionQueue::without_dedup`] restores raw-count claiming (the
 //! `--no-dedup` escape hatch and the PR 1 comparison baseline).
+//!
+//! Since PR 7 the queue is also the **admission controller**: a queue
+//! built with a depth cap ([`SubmissionQueue::with_limits`], `paac serve
+//! --max-queue N`) sheds excess load at [`SubmissionQueue::admit`]
+//! instead of letting the backlog — and every client's latency — grow
+//! without bound (the GA3C failure mode). Two disjoint shed reasons:
+//! the queue is at its hard cap ([`ShedReason::QueueFull`]), or one
+//! session has grabbed more than its fair share of a bounded queue
+//! ([`ShedReason::SessionShare`], at most `max(1, max_depth / 2)` slots
+//! per session — so a flooding connection saturates its own budget
+//! while everyone else's requests keep being admitted). A shed is a
+//! per-request event: the caller maps it to [`Error::Overloaded`]
+//! in process or an `Overloaded` wire frame, and the connection (and
+//! every other request) proceeds normally. `max_depth == 0` disables
+//! admission control entirely — the unbounded queue is bit-for-bit the
+//! PR 6 behavior, and [`SubmissionQueue::push`] keeps its original
+//! contract. The queue hot path also emits `ph:"C"` trace counters
+//! (`serve.queue_depth`, `serve.shed_total`) when a recording is live.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::Sender;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -70,21 +88,62 @@ pub struct Request {
     /// Submission timestamp (the latency clock starts here and anchors
     /// the coalescing deadline).
     pub enqueued: Instant,
-    /// Where the batcher delivers the result. One channel **per query**:
-    /// a timed-out query's late reply lands on an abandoned receiver
-    /// (never misattributed to a later observation), and dropping an
-    /// undeliverable request — batcher death, shutdown drain —
-    /// disconnects the receiver so the waiting client fails immediately
-    /// instead of burning its full timeout.
-    pub reply: Sender<Reply>,
+    /// Where the batcher delivers the result (see [`ReplySink`]).
+    pub reply: ReplySink,
 }
 
 impl Request {
-    /// Build a request, stamping the enqueue time and the observation's
-    /// dedup hash.
+    /// Build a lockstep request, stamping the enqueue time and the
+    /// observation's dedup hash. One channel **per query**: a timed-out
+    /// query's late reply lands on an abandoned receiver (never
+    /// misattributed to a later observation), and dropping an
+    /// undeliverable request — batcher death, shutdown drain —
+    /// disconnects the receiver so the waiting client fails immediately
+    /// instead of burning its full timeout.
     pub fn new(session: u64, obs: Vec<f32>, reply: Sender<Reply>) -> Request {
         let obs_hash = obs_fnv1a(&obs);
+        Request { session, obs, obs_hash, enqueued: Instant::now(), reply: ReplySink::One(reply) }
+    }
+
+    /// Build a tagged (pipelined) request: the reply travels a shared
+    /// per-connection channel carrying the v2 wire request id, so one
+    /// connection can keep many of these in flight and match the
+    /// out-of-order replies back up.
+    pub fn tagged(session: u64, obs: Vec<f32>, id: u32, tx: Sender<(u32, Reply)>) -> Request {
+        let obs_hash = obs_fnv1a(&obs);
+        let reply = ReplySink::Tagged { id, tx };
         Request { session, obs, obs_hash, enqueued: Instant::now(), reply }
+    }
+}
+
+/// Where a request's reply goes: a dedicated per-query channel (the
+/// in-process lockstep path) or a shared per-connection channel with
+/// the v2 wire request id as the routing tag (the pipelined bridge).
+pub enum ReplySink {
+    /// Lockstep: one channel per query.
+    One(Sender<Reply>),
+    /// Pipelined: a shared channel; the id routes the reply.
+    Tagged {
+        /// The connection-local v2 request id.
+        id: u32,
+        /// The connection's reply channel (drained by its writer).
+        tx: Sender<(u32, Reply)>,
+    },
+}
+
+impl ReplySink {
+    /// Deliver the reply. An unreachable receiver — the client timed out
+    /// or the connection died — is deliberately ignored: late replies
+    /// are dropped, never misrouted.
+    pub fn send(&self, reply: Reply) {
+        match self {
+            ReplySink::One(tx) => {
+                let _ = tx.send(reply);
+            }
+            ReplySink::Tagged { id, tx } => {
+                let _ = tx.send((*id, reply));
+            }
+        }
     }
 }
 
@@ -236,11 +295,51 @@ fn window_shape(q: &VecDeque<Request>, width: usize, dedup: bool) -> WindowShape
     WindowShape { uniques: seen.len(), full_take }
 }
 
+/// The verdict of [`SubmissionQueue::admit`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// The request is in the queue; a reply (or a disconnect) will
+    /// arrive on its [`ReplySink`].
+    Admitted,
+    /// Admission control rejected the request; it was dropped. The
+    /// caller owes the client an overload error, not silence.
+    Shed(ShedReason),
+    /// The queue is closed for shutdown; the request was dropped.
+    Closed,
+}
+
+/// Why admission control shed a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The whole queue is at its hard depth cap.
+    QueueFull,
+    /// This session alone holds its full fair share of the bounded
+    /// queue (`max(1, max_depth / 2)` slots); other sessions' requests
+    /// are still being admitted.
+    SessionShare,
+}
+
+impl ShedReason {
+    /// Stable snake_case tag (stats keys, log lines).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue_full",
+            ShedReason::SessionShare => "session_share",
+        }
+    }
+}
+
 #[derive(Default)]
 struct State {
     q: VecDeque<Request>,
     closed: bool,
     peak_depth: usize,
+    /// Pending requests per session — maintained only on a bounded
+    /// queue (admission fairness needs it; the unbounded fast path
+    /// must not pay for it).
+    session_pending: HashMap<u64, usize>,
+    /// Requests shed so far (feeds the `serve.shed_total` counter).
+    shed: u64,
 }
 
 /// Multi-producer, multi-consumer window-claiming queue.
@@ -254,6 +353,9 @@ pub struct SubmissionQueue {
     /// Window sizes are measured in unique observations (see the module
     /// docs); `false` restores raw-count claiming.
     dedup: bool,
+    /// Admission-control depth cap; 0 = unbounded (no admission
+    /// control, the PR 6 behavior).
+    max_depth: usize,
     /// Recycles request observation buffers between the two ends of the
     /// queue: producers `take` a buffer before pushing, the batcher
     /// `put`s it back once the row is staged — so the submit hot path is
@@ -269,12 +371,20 @@ impl SubmissionQueue {
     }
 
     /// A queue with explicit dedup policy (`with_dedup(false)` ==
-    /// [`SubmissionQueue::without_dedup`]).
+    /// [`SubmissionQueue::without_dedup`]) and no depth cap.
     pub fn with_dedup(dedup: bool) -> SubmissionQueue {
+        SubmissionQueue::with_limits(dedup, 0)
+    }
+
+    /// A queue with explicit dedup policy and admission control:
+    /// `max_depth` pending requests at most (0 = unbounded), excess
+    /// load shed at [`SubmissionQueue::admit`].
+    pub fn with_limits(dedup: bool, max_depth: usize) -> SubmissionQueue {
         SubmissionQueue {
             state: Mutex::new(State::default()),
             cv: Condvar::new(),
             dedup,
+            max_depth,
             obs_pool: BufPool::new(OBS_POOL_IDLE),
         }
     }
@@ -299,15 +409,51 @@ impl SubmissionQueue {
     }
 
     /// Enqueue a request. Returns `false` (dropping the request) once the
-    /// queue is closed for shutdown.
+    /// queue is closed for shutdown. On a bounded queue a shed also
+    /// returns `false`; callers that must distinguish use
+    /// [`SubmissionQueue::admit`].
     pub fn push(&self, req: Request) -> bool {
-        {
+        self.admit(req) == Admission::Admitted
+    }
+
+    /// Enqueue a request through admission control. On a bounded queue
+    /// (`max_depth > 0`) the request is shed — dropped, disconnecting
+    /// its [`ReplySink`] — when the queue is at its cap or this session
+    /// is over its fair share; an unbounded queue admits everything
+    /// (exactly the old `push`).
+    pub fn admit(&self, req: Request) -> Admission {
+        let depth = {
             let mut s = self.state.lock().unwrap();
             if s.closed {
-                return false;
+                return Admission::Closed;
+            }
+            if self.max_depth > 0 {
+                let reason = if s.q.len() >= self.max_depth {
+                    Some(ShedReason::QueueFull)
+                } else if s.session_pending.get(&req.session).copied().unwrap_or(0)
+                    >= self.session_cap()
+                {
+                    Some(ShedReason::SessionShare)
+                } else {
+                    None
+                };
+                if let Some(reason) = reason {
+                    s.shed += 1;
+                    let shed = s.shed;
+                    drop(s);
+                    if crate::trace::active() {
+                        crate::trace::counter("serve.shed_total", shed as f64);
+                    }
+                    return Admission::Shed(reason);
+                }
+                *s.session_pending.entry(req.session).or_insert(0) += 1;
             }
             s.q.push_back(req);
             s.peak_depth = s.peak_depth.max(s.q.len());
+            s.q.len()
+        };
+        if crate::trace::active() {
+            crate::trace::counter("serve.queue_depth", depth as f64);
         }
         // notify_all, not notify_one: with routed multi-consumer draining
         // the woken shard may be the one whose class must *leave* this
@@ -315,7 +461,20 @@ impl SubmissionQueue {
         // bounded by the (small) shard count; a condvar per shard class
         // is the upgrade path if pools ever grow past a handful.
         self.cv.notify_all();
-        true
+        Admission::Admitted
+    }
+
+    /// The admission-control depth cap (0 = unbounded).
+    pub fn max_depth(&self) -> usize {
+        self.max_depth
+    }
+
+    /// The most pending slots any one session may hold on a bounded
+    /// queue: half the cap, but at least one — so a lone flooder leaves
+    /// half the queue for everyone else while a lone legitimate client
+    /// can still use it.
+    pub fn session_cap(&self) -> usize {
+        (self.max_depth / 2).max(1)
     }
 
     /// Close the queue: subsequent pushes fail, and `next_batch` returns
@@ -414,8 +573,26 @@ impl SubmissionQueue {
             };
             if let Some(n) = take {
                 out.extend(s.q.drain(..n));
-                if !s.q.is_empty() {
+                if self.max_depth > 0 {
+                    // release the drained sessions' fairness slots
+                    for r in out.iter() {
+                        if let std::collections::hash_map::Entry::Occupied(mut e) =
+                            s.session_pending.entry(r.session)
+                        {
+                            *e.get_mut() = e.get().saturating_sub(1);
+                            if *e.get() == 0 {
+                                e.remove();
+                            }
+                        }
+                    }
+                }
+                let depth = s.q.len();
+                if depth > 0 {
                     self.cv.notify_all();
+                }
+                drop(s);
+                if crate::trace::active() {
+                    crate::trace::counter("serve.queue_depth", depth as f64);
                 }
                 return true;
             }
@@ -788,6 +965,118 @@ mod tests {
         let wide = ShardClass::Wide { leave_to_small: Some(2) };
         assert_eq!(q.claim_window(2, Duration::ZERO, wide).unwrap().len(), 1);
         assert!(q.claim_window(2, Duration::ZERO, ShardClass::Small).is_none());
+    }
+
+    // -- admission control --
+
+    #[test]
+    fn unbounded_queue_admits_everything() {
+        let q = SubmissionQueue::new();
+        assert_eq!(q.max_depth(), 0);
+        let mut rxs = Vec::new();
+        for i in 0..100 {
+            let (r, rx) = req(i);
+            assert_eq!(q.admit(r), Admission::Admitted);
+            rxs.push(rx);
+        }
+        assert_eq!(q.len(), 100, "an unbounded queue must never shed");
+    }
+
+    #[test]
+    fn bounded_queue_sheds_at_the_depth_cap_and_disconnects_the_sink() {
+        let q = SubmissionQueue::with_limits(true, 4);
+        assert_eq!(q.max_depth(), 4);
+        let mut rxs = Vec::new();
+        let (mut admitted, mut shed) = (0u64, 0u64);
+        for i in 0..10 {
+            let (r, rx) = req(i); // distinct sessions: only the depth cap binds
+            match q.admit(r) {
+                Admission::Admitted => admitted += 1,
+                Admission::Shed(reason) => {
+                    assert_eq!(reason, ShedReason::QueueFull);
+                    // the shed request was dropped, so the waiting
+                    // client fails fast instead of burning a timeout
+                    assert!(matches!(
+                        rx.try_recv(),
+                        Err(std::sync::mpsc::TryRecvError::Disconnected)
+                    ));
+                    shed += 1;
+                }
+                Admission::Closed => panic!("queue is open"),
+            }
+            rxs.push(rx);
+        }
+        assert_eq!((admitted, shed), (4, 6), "cap must bind exactly at max_depth");
+        assert_eq!(admitted + shed, 10, "conservation: admitted + shed == submitted");
+        // push() folds a shed into `false` for callers that can't react
+        let (r, _rx) = req(99);
+        assert!(!q.push(r));
+    }
+
+    #[test]
+    fn one_flooding_session_cannot_starve_the_rest() {
+        let q = SubmissionQueue::with_limits(true, 8);
+        assert_eq!(q.session_cap(), 4);
+        let mut rxs = Vec::new();
+        let (mut admitted, mut shed) = (0, 0);
+        for _ in 0..10 {
+            let (r, rx) = req(1); // one session floods
+            match q.admit(r) {
+                Admission::Admitted => admitted += 1,
+                Admission::Shed(reason) => {
+                    assert_eq!(reason, ShedReason::SessionShare);
+                    shed += 1;
+                }
+                Admission::Closed => panic!("queue is open"),
+            }
+            rxs.push(rx);
+        }
+        assert_eq!((admitted, shed), (4, 6), "flooder capped at half the queue");
+        // the flooder left room: another session is still admitted
+        let (r, rx) = req(2);
+        assert_eq!(q.admit(r), Admission::Admitted);
+        rxs.push(rx);
+    }
+
+    #[test]
+    fn draining_releases_fairness_slots() {
+        let q = SubmissionQueue::with_limits(true, 4);
+        let mut rxs = Vec::new();
+        for i in 0..3 {
+            let (r, rx) = req_obs(1, vec![i as f32]);
+            rxs.push(rx);
+            let verdict = q.admit(r);
+            if i < 2 {
+                assert_eq!(verdict, Admission::Admitted, "request {i}");
+            } else {
+                assert_eq!(verdict, Admission::Shed(ShedReason::SessionShare));
+            }
+        }
+        // draining the backlog frees the session's slots again
+        assert_eq!(q.next_batch(4, Duration::ZERO).unwrap().len(), 2);
+        let (r, _rx) = req_obs(1, vec![9.0]);
+        assert_eq!(q.admit(r), Admission::Admitted, "drain must release the share");
+    }
+
+    #[test]
+    fn admit_reports_closed_after_shutdown() {
+        let q = SubmissionQueue::with_limits(true, 4);
+        q.close();
+        let (r, _rx) = req(1);
+        assert_eq!(q.admit(r), Admission::Closed);
+    }
+
+    #[test]
+    fn tagged_sink_routes_replies_by_request_id() {
+        let (tx, rx) = channel();
+        let a = Request::tagged(5, vec![1.0], 41, tx.clone());
+        let b = Request::tagged(5, vec![2.0], 42, tx);
+        assert_eq!(a.obs_hash, obs_fnv1a(&a.obs));
+        let reply = Reply { probs: vec![0.5, 0.5], value: 1.0 };
+        b.reply.send(reply.clone());
+        a.reply.send(reply.clone());
+        assert_eq!(rx.recv().unwrap(), (42, reply.clone()));
+        assert_eq!(rx.recv().unwrap(), (41, reply));
     }
 
     #[test]

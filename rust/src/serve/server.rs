@@ -38,7 +38,7 @@ use crate::error::{Error, Result};
 
 use super::batcher::{BackendFactory, Batcher, InferBackend};
 use super::cache::{obs_fnv1a, ResponseCache};
-use super::queue::{Reply, Request, ShardClass, SubmissionQueue};
+use super::queue::{Admission, Reply, ReplySink, Request, ShardClass, SubmissionQueue};
 use super::stats::{ServeStats, ShardSpec, StatsSnapshot};
 
 /// Bucket-hash seed of the server-owned response cache (any fixed value
@@ -69,6 +69,12 @@ pub struct ServeConfig {
     /// Disable in-flight dedup of bit-identical observations (restores
     /// the PR 1–4 raw-count batching exactly).
     pub no_dedup: bool,
+    /// Admission-control depth cap on the submission queue; 0 means
+    /// unbounded (the PR 1–6 behavior). With a cap, a query arriving at
+    /// a full queue — or from a session already holding half the cap in
+    /// pending requests — is **shed** with [`Error::Overloaded`] instead
+    /// of stalling every client behind an ever-growing backlog.
+    pub max_queue: usize,
     /// Arm the process-global [`crate::trace`] recorder when the server
     /// starts (`--trace FILE`). The recorder outlives the server: stop
     /// it and write the file with [`crate::trace::stop_and_write`] after
@@ -85,6 +91,7 @@ impl Default for ServeConfig {
             small_batch: 0,
             cache: 0,
             no_dedup: false,
+            max_queue: 0,
             trace: false,
         }
     }
@@ -120,6 +127,16 @@ impl ServeConfig {
         self
     }
 
+    /// Cap the submission queue at `depth` pending requests (0 =
+    /// unbounded, the PR 1–6 behavior). Excess load is shed with
+    /// [`Error::Overloaded`] rather than queued; see
+    /// [`SubmissionQueue::with_limits`] for the fairness share that
+    /// rides along with the cap.
+    pub fn with_max_queue(mut self, depth: usize) -> ServeConfig {
+        self.max_queue = depth;
+        self
+    }
+
     /// Record a Perfetto trace of this server's lifetime: arms the
     /// process-global recorder ([`crate::trace::start`]) when the server
     /// starts, unless a recording is already live (a caller that armed
@@ -136,9 +153,10 @@ impl ServeConfig {
         }
     }
 
-    /// The queue this config calls for (dedup policy baked in).
+    /// The queue this config calls for (dedup + admission policy baked
+    /// in).
     fn build_queue(&self) -> Arc<SubmissionQueue> {
-        Arc::new(SubmissionQueue::with_dedup(!self.no_dedup))
+        Arc::new(SubmissionQueue::with_limits(!self.no_dedup, self.max_queue))
     }
 
     /// The response cache this config calls for (None when disabled).
@@ -471,6 +489,17 @@ impl Connector {
     pub(crate) fn stats(&self) -> &ServeStats {
         &self.stats
     }
+
+    /// The submission queue (the v2 pipelined bridge admits tagged
+    /// requests directly instead of going through a blocking handle).
+    pub(crate) fn queue(&self) -> &Arc<SubmissionQueue> {
+        &self.queue
+    }
+
+    /// The shared response cache, if the server has one.
+    pub(crate) fn cache(&self) -> Option<&Arc<ResponseCache>> {
+        self.cache.as_ref()
+    }
 }
 
 /// A client-side connection handle.
@@ -558,15 +587,24 @@ impl ClientHandle {
         // batcher returns them once the row is staged)
         let mut obs_buf = self.queue.obs_pool().take();
         obs_buf.extend_from_slice(obs);
-        let accepted = self.queue.push(Request {
+        let req = Request {
             session: self.session,
             obs: obs_buf,
             obs_hash,
             enqueued: Instant::now(),
-            reply: reply_tx,
-        });
-        if !accepted {
-            return Err(Error::serve("server is shut down"));
+            reply: ReplySink::One(reply_tx),
+        };
+        match self.queue.admit(req) {
+            Admission::Admitted => self.stats.record_admitted(),
+            Admission::Shed(reason) => {
+                self.stats.record_shed(reason);
+                return Err(Error::overloaded(format!(
+                    "session {}: request shed ({})",
+                    self.session,
+                    reason.name()
+                )));
+            }
+            Admission::Closed => return Err(Error::serve("server is shut down")),
         }
         match reply_rx.recv_timeout(timeout) {
             Ok(reply) => {
@@ -825,6 +863,47 @@ mod tests {
         assert_eq!(snap.queries, 2);
         assert_eq!(snap.cache.hits, 0);
         assert_eq!(snap.cache.misses, 0, "no cache, no probes booked");
+    }
+
+    #[test]
+    fn bounded_server_sheds_with_a_typed_overload_error() {
+        // a backend slow enough that the queue can be observed full: the
+        // batcher claims the first query and sits in the forward while
+        // two more fill the capacity-2 queue; a fourth must shed with
+        // Error::Overloaded instead of queueing behind them
+        let slow = SyntheticBackend::new(1, 4, 6, 13)
+            .with_cost(Duration::from_millis(400), Duration::ZERO);
+        let server =
+            PolicyServer::start(slow, ServeConfig::new(1, Duration::ZERO).with_max_queue(2));
+        let first = server.connect();
+        let t1 = std::thread::spawn(move || first.query(&[0.1; 4]).unwrap());
+        std::thread::sleep(Duration::from_millis(100));
+        let fillers: Vec<_> = [0.2f32, 0.3]
+            .into_iter()
+            .map(|v| {
+                let h = server.connect();
+                std::thread::spawn(move || h.query(&[v; 4]).unwrap())
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(100));
+        match server.connect().query(&[0.4; 4]) {
+            Err(Error::Overloaded(msg)) => assert!(msg.contains("queue_full")),
+            other => panic!("expected an overload shed, got {other:?}"),
+        }
+        t1.join().unwrap();
+        for t in fillers {
+            t.join().unwrap();
+        }
+        let snap = server.shutdown().unwrap();
+        assert_eq!(snap.queries, 3, "the shed query must never reach a backend");
+        assert_eq!(snap.overload.admitted, 3);
+        assert_eq!(snap.overload.shed_queue_full, 1);
+        assert_eq!(snap.overload.shed_total, 1);
+        assert_eq!(
+            snap.overload.admitted + snap.overload.shed_total,
+            4,
+            "conservation: admitted + shed == submitted"
+        );
     }
 
     #[test]

@@ -33,6 +33,16 @@
 //! **queries** (replies fanned out), so with dedup a batch can serve
 //! more queries than its width; without dedup the two coincide and every
 //! pre-PR 5 number is unchanged.
+//!
+//! Since PR 7 the stats also make **admission control** observable:
+//! every request admitted to the submission queue and every request
+//! shed — at the queue depth cap, at a session's fairness share, or at
+//! a connection's pipeline window — is booked here, plus the peak
+//! pipelined in-flight count any one connection reached. The snapshot
+//! carries an [`OverloadSnapshot`] (an `"overload"` object in
+//! `serve.jsonl`), and the conservation the overload tests pin down is
+//! `admitted + shed == submitted`. All zero on an unbounded queue with
+//! lockstep clients.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -43,6 +53,8 @@ use crate::metrics::JsonlWriter;
 use crate::util::json::{obj, Json};
 use crate::util::math;
 use crate::util::rng::Pcg32;
+
+use super::queue::ShedReason;
 
 /// Retained latency samples per reservoir; past this the recorder
 /// switches to uniform reservoir sampling (Algorithm R) so a long-lived
@@ -151,6 +163,22 @@ struct TransportCell {
     wire_errors: AtomicU64,
 }
 
+/// Admission-control counters (written by client handles and the v2
+/// bridge threads; all zero on an unbounded queue).
+#[derive(Default)]
+struct OverloadCell {
+    /// Requests admitted to the submission queue.
+    admitted: AtomicU64,
+    /// Requests shed because the queue hit its depth cap.
+    shed_queue_full: AtomicU64,
+    /// Requests shed because one session held its full fairness share.
+    shed_session: AtomicU64,
+    /// Requests shed at a connection's pipeline window (never queued).
+    shed_pipeline: AtomicU64,
+    /// Peak pipelined in-flight requests on any one connection (gauge).
+    peak_inflight: AtomicU64,
+}
+
 /// Shared counters updated by the batcher shards.
 pub struct ServeStats {
     queries: AtomicU64,
@@ -179,6 +207,8 @@ pub struct ServeStats {
     transport: TransportCell,
     /// Redundancy-eliminator counters (zero with cache + dedup off).
     cache: CacheCell,
+    /// Admission-control counters (zero on an unbounded queue).
+    overload: OverloadCell,
     started: Instant,
 }
 
@@ -208,6 +238,7 @@ impl ServeStats {
                 .collect(),
             transport: TransportCell::default(),
             cache: CacheCell::default(),
+            overload: OverloadCell::default(),
             started: Instant::now(),
         }
     }
@@ -329,6 +360,32 @@ impl ServeStats {
         self.transport.wire_errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Book one request admitted to the submission queue.
+    pub fn record_admitted(&self) {
+        self.overload.admitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Book one request shed by queue admission control.
+    pub fn record_shed(&self, reason: ShedReason) {
+        let cell = match reason {
+            ShedReason::QueueFull => &self.overload.shed_queue_full,
+            ShedReason::SessionShare => &self.overload.shed_session,
+        };
+        cell.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Book one request shed at a connection's pipeline window (rejected
+    /// by the bridge before ever reaching the queue).
+    pub fn record_pipeline_shed(&self) {
+        self.overload.shed_pipeline.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Book a connection's current pipelined in-flight count; the
+    /// snapshot keeps the peak.
+    pub fn record_inflight(&self, n: usize) {
+        self.overload.peak_inflight.fetch_max(n as u64, Ordering::Relaxed);
+    }
+
     /// Consistent point-in-time view (sorts a copy of the latencies).
     pub fn snapshot(&self) -> StatsSnapshot {
         let queries = self.queries.load(Ordering::Relaxed);
@@ -379,6 +436,9 @@ impl ServeStats {
             .collect();
         let hits = self.cache.hits.load(Ordering::Relaxed);
         let misses = self.cache.misses.load(Ordering::Relaxed);
+        let shed_queue_full = self.overload.shed_queue_full.load(Ordering::Relaxed);
+        let shed_session = self.overload.shed_session.load(Ordering::Relaxed);
+        let shed_pipeline = self.overload.shed_pipeline.load(Ordering::Relaxed);
         StatsSnapshot {
             queries,
             batches,
@@ -398,6 +458,14 @@ impl ServeStats {
                     0.0
                 },
                 coalesced_slots: self.cache.coalesced.load(Ordering::Relaxed),
+            },
+            overload: OverloadSnapshot {
+                admitted: self.overload.admitted.load(Ordering::Relaxed),
+                shed_queue_full,
+                shed_session,
+                shed_pipeline,
+                shed_total: shed_queue_full + shed_session + shed_pipeline,
+                peak_inflight: self.overload.peak_inflight.load(Ordering::Relaxed),
             },
             rejected: self.rejected.load(Ordering::Relaxed),
             qps: queries as f64 / wall_secs.max(1e-9),
@@ -563,6 +631,54 @@ impl CacheSnapshot {
     }
 }
 
+/// Admission-control counters inside a [`StatsSnapshot`] (all zero on
+/// an unbounded queue with lockstep clients). The conservation law the
+/// overload tests rely on: every submitted request is exactly one of
+/// admitted / shed (and a cache hit is neither — it never reaches
+/// admission).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OverloadSnapshot {
+    /// Requests admitted to the submission queue.
+    pub admitted: u64,
+    /// Requests shed at the queue's hard depth cap.
+    pub shed_queue_full: u64,
+    /// Requests shed at a session's fairness share.
+    pub shed_session: u64,
+    /// Requests shed at a connection's pipeline window.
+    pub shed_pipeline: u64,
+    /// All sheds combined.
+    pub shed_total: u64,
+    /// Peak pipelined in-flight requests on any one connection.
+    pub peak_inflight: u64,
+}
+
+impl OverloadSnapshot {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("admitted", Json::Num(self.admitted as f64)),
+            ("shed_queue_full", Json::Num(self.shed_queue_full as f64)),
+            ("shed_session", Json::Num(self.shed_session as f64)),
+            ("shed_pipeline", Json::Num(self.shed_pipeline as f64)),
+            ("shed_total", Json::Num(self.shed_total as f64)),
+            ("peak_inflight", Json::Num(self.peak_inflight as f64)),
+        ])
+    }
+
+    /// Human-oriented one-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "overload: {} admitted | {} shed ({} queue-full, {} session-share, {} pipeline) | \
+             peak inflight {}",
+            self.admitted,
+            self.shed_total,
+            self.shed_queue_full,
+            self.shed_session,
+            self.shed_pipeline,
+            self.peak_inflight
+        )
+    }
+}
+
 /// Submit->claim queue-wait histogram inside a [`StatsSnapshot`]: how
 /// long requests sat in the submission queue before a batcher shard
 /// claimed them. This is the stats-side view of the same intervals the
@@ -611,6 +727,8 @@ pub struct StatsSnapshot {
     pub transport: TransportSnapshot,
     /// Response-cache + in-flight-dedup counters.
     pub cache: CacheSnapshot,
+    /// Admission-control counters (zero on an unbounded queue).
+    pub overload: OverloadSnapshot,
     pub rejected: u64,
     /// Queries per second over the server's lifetime so far.
     pub qps: f64,
@@ -648,6 +766,7 @@ impl StatsSnapshot {
             ("shards", Json::Arr(self.shards.iter().map(|s| s.to_json()).collect())),
             ("transport", self.transport.to_json()),
             ("cache", self.cache.to_json()),
+            ("overload", self.overload.to_json()),
         ])
     }
 
@@ -832,6 +951,33 @@ mod tests {
         let j = s.snapshot().to_json().to_string_compact();
         assert!(j.contains("\"queue_wait\":{"), "queue_wait object missing from JSON");
         assert!(j.contains("\"count\":4"));
+    }
+
+    #[test]
+    fn overload_counters_accumulate_and_serialize() {
+        let s = ServeStats::new();
+        assert_eq!(s.snapshot().overload, OverloadSnapshot::default());
+        for _ in 0..5 {
+            s.record_admitted();
+        }
+        s.record_shed(ShedReason::QueueFull);
+        s.record_shed(ShedReason::QueueFull);
+        s.record_shed(ShedReason::SessionShare);
+        s.record_pipeline_shed();
+        s.record_inflight(3);
+        s.record_inflight(9);
+        s.record_inflight(4);
+        let o = s.snapshot().overload;
+        assert_eq!(o.admitted, 5);
+        assert_eq!((o.shed_queue_full, o.shed_session, o.shed_pipeline), (2, 1, 1));
+        assert_eq!(o.shed_total, 4, "shed_total sums every shed class");
+        assert_eq!(o.admitted + o.shed_total, 9, "conservation: admitted + shed == submitted");
+        assert_eq!(o.peak_inflight, 9, "gauge keeps the peak");
+        assert!(o.summary().contains("4 shed"));
+        let j = s.snapshot().to_json().to_string_compact();
+        assert!(j.contains("\"overload\":{"), "overload object missing from JSON");
+        assert!(j.contains("\"shed_total\":4"));
+        assert!(j.contains("\"peak_inflight\":9"));
     }
 
     #[test]

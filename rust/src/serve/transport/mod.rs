@@ -15,7 +15,12 @@
 //!   bridge thread per connection, each owning an in-process
 //!   [`ClientHandle`] and pumping frames; and [`RemoteHandle`], the
 //!   client twin that speaks the same `query(&[f32]) -> Reply` surface
-//!   over a socket.
+//!   over a socket. Since PR 7 the wire is versioned in behavior as
+//!   well as name: v2 connections pipeline tagged queries
+//!   ([`RemoteHandle::submit`]/[`RemoteHandle::recv`]), overload is
+//!   answered with per-request `Overloaded` frames instead of backlog,
+//!   and [`ReconnectingHandle`] adds client-side failover across a
+//!   server list with jittered-backoff re-handshakes.
 //!
 //! [`QueryTransport`] is the seam: [`Session`](crate::serve::Session) is
 //! generic over it, so the same session code — environment,
@@ -26,8 +31,11 @@
 pub mod tcp;
 pub mod wire;
 
-pub use tcp::{run_remote_clients, RemoteHandle, TcpFrontend};
-pub use wire::{Frame, WIRE_VERSION};
+pub use tcp::{
+    run_remote_clients, Completion, ReconnectingHandle, RemoteHandle, TcpFrontend,
+    DEFAULT_PIPELINE,
+};
+pub use wire::{negotiate_version, Frame, WIRE_VERSION};
 
 use crate::error::Result;
 

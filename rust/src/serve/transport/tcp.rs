@@ -27,22 +27,43 @@
 //! see EOF), while a connection budget ([`TcpFrontend::bind`]'s
 //! `max_conns`) lets a server process drain naturally and exit — which
 //! is what the CI loopback smoke test relies on.
+//!
+//! Since PR 7 the wire speaks two protocol versions, negotiated
+//! min-wins from the Hello (`negotiate_version`): **v1** is the
+//! lockstep Query/Reply bridge above, preserved bit-for-bit; **v2**
+//! pipelines — the client tags each query with a `u32` request id
+//! ([`Frame::QueryV2`]) and may keep many in flight, the bridge admits
+//! them into the shard queue as tagged requests and a per-connection
+//! writer thread streams the out-of-order [`Frame::ReplyV2`]s back.
+//! Overload is answered, not queued: a query past the connection's
+//! pipeline window or shed by the bounded submission queue gets a
+//! per-id [`Frame::Overloaded`] while the connection (and every other
+//! in-flight query on it) stays live. [`ReconnectingHandle`] adds the
+//! client-side failover story: a server list, jittered exponential
+//! backoff, transparent re-handshake.
 
+use std::collections::HashMap;
 use std::io::{BufReader, ErrorKind};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::envs::{GameId, ObsMode};
 use crate::error::{Error, Result};
-use crate::serve::queue::Reply;
-use crate::serve::server::Connector;
+use crate::serve::cache::obs_fnv1a;
+use crate::serve::queue::{Admission, Reply, Request};
+use crate::serve::server::{ClientHandle, Connector};
 use crate::serve::session::{Session, SessionReport};
 use crate::serve::stats::ServeStats;
+use crate::util::rng::Pcg32;
 
-use super::wire::{read_frame, read_frame_or_eof, write_frame, write_query, Frame, WIRE_VERSION};
+use super::wire::{
+    negotiate_version, read_frame, read_frame_or_eof, write_frame, write_query, write_query_v2,
+    Frame, WIRE_VERSION,
+};
 use super::QueryTransport;
 
 /// How often the accept loop re-checks the stop flag / reaps finished
@@ -56,6 +77,20 @@ const ACCEPT_POLL: Duration = Duration::from_millis(20);
 /// Comfortably above the server-side reply timeout, so the server always
 /// answers (or errors) first.
 const REMOTE_REPLY_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Default per-connection pipeline window on a v2 bridge: how many
+/// tagged queries one connection may keep in flight before the bridge
+/// sheds the excess with [`Frame::Overloaded`]. 1 forces lockstep (the
+/// v1 discipline over v2 frames); [`TcpFrontend::bind`] uses this
+/// value, [`TcpFrontend::bind_with`] takes an explicit one
+/// (`--pipeline` on the CLI).
+pub const DEFAULT_PIPELINE: usize = 32;
+
+/// Default failover/backoff policy of a [`ReconnectingHandle`]: total
+/// connect-or-retry attempts per query before giving up, and the base
+/// backoff that doubles (with jitter) up to `2^5` times the base.
+const RETRY_MAX_ATTEMPTS: u32 = 10;
+const RETRY_BASE_BACKOFF: Duration = Duration::from_millis(25);
 
 /// The TCP frontend: accept loop + one bridge thread per connection.
 pub struct TcpFrontend {
@@ -90,6 +125,21 @@ impl TcpFrontend {
         connector: Connector,
         max_conns: Option<u64>,
     ) -> Result<TcpFrontend> {
+        TcpFrontend::bind_with(addr, connector, max_conns, DEFAULT_PIPELINE)
+    }
+
+    /// [`TcpFrontend::bind`] with an explicit per-connection pipeline
+    /// window (`--pipeline`): the number of tagged v2 queries one
+    /// connection may keep in flight before the bridge sheds the excess
+    /// with [`Frame::Overloaded`]. Clamped to at least 1; irrelevant to
+    /// v1 connections, which are lockstep by construction.
+    pub fn bind_with<A: ToSocketAddrs>(
+        addr: A,
+        connector: Connector,
+        max_conns: Option<u64>,
+        pipeline: usize,
+    ) -> Result<TcpFrontend> {
+        let pipeline = pipeline.max(1);
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
@@ -98,7 +148,7 @@ impl TcpFrontend {
             let stop = stop.clone();
             std::thread::Builder::new()
                 .name("paac-serve-accept".into())
-                .spawn(move || accept_loop(listener, connector, stop, max_conns))
+                .spawn(move || accept_loop(listener, connector, stop, max_conns, pipeline))
                 .map_err(|e| Error::serve(format!("spawn accept thread: {e}")))?
         };
         Ok(TcpFrontend { local, stop, accept: Some(accept) })
@@ -142,6 +192,7 @@ fn accept_loop(
     connector: Connector,
     stop: Arc<AtomicBool>,
     max_conns: Option<u64>,
+    pipeline: usize,
 ) {
     // (bridge thread, raw socket clone for forced shutdown)
     let mut bridges: Vec<(JoinHandle<()>, TcpStream)> = Vec::new();
@@ -165,7 +216,7 @@ fn accept_loop(
                 let conn = connector.clone();
                 if let Ok(h) = std::thread::Builder::new()
                     .name(format!("paac-serve-bridge{accepted}"))
-                    .spawn(move || bridge(stream, conn))
+                    .spawn(move || bridge(stream, conn, pipeline))
                 {
                     bridges.push((h, raw));
                 }
@@ -205,10 +256,10 @@ fn accept_loop(
 
 /// One connection's bridge: handshake, then pump Query/Reply frames,
 /// with connection/frame/wire-error accounting around the inner loop.
-fn bridge(stream: TcpStream, connector: Connector) {
+fn bridge(stream: TcpStream, connector: Connector, pipeline: usize) {
     let stats = connector.stats();
     stats.record_conn_open();
-    if let Err(e) = bridge_conn(stream, &connector) {
+    if let Err(e) = bridge_conn(stream, &connector, pipeline) {
         if matches!(e, Error::Wire(_)) {
             stats.record_wire_error();
         }
@@ -216,7 +267,7 @@ fn bridge(stream: TcpStream, connector: Connector) {
     stats.record_conn_close();
 }
 
-fn bridge_conn(stream: TcpStream, connector: &Connector) -> Result<()> {
+fn bridge_conn(stream: TcpStream, connector: &Connector, pipeline: usize) -> Result<()> {
     let stats = connector.stats();
     // accepted sockets inherit O_NONBLOCK from the nonblocking listener
     // on the BSDs/macOS (not Linux); the bridge needs blocking reads
@@ -247,17 +298,20 @@ fn bridge_conn(stream: TcpStream, connector: &Connector) -> Result<()> {
             return Err(Error::wire(msg));
         }
     };
-    if version != WIRE_VERSION {
-        let msg =
-            format!("protocol version {version} unsupported (server speaks {WIRE_VERSION})");
-        send_error(&mut writer, stats, &msg);
-        return Err(Error::wire(msg));
-    }
+    // min-wins negotiation: an older (v1) client gets the lockstep
+    // bridge below unchanged, a v2 client gets the pipelined one
+    let version = match negotiate_version(version) {
+        Ok(v) => v,
+        Err(e) => {
+            send_error(&mut writer, stats, &e.to_string());
+            return Err(e);
+        }
+    };
     let handle = connector.connect();
     write_frame(
         &mut writer,
         &Frame::HelloAck {
-            version: WIRE_VERSION,
+            version,
             session: handle.session(),
             obs_len: handle.obs_len() as u32,
             actions: handle.actions() as u32,
@@ -265,7 +319,11 @@ fn bridge_conn(stream: TcpStream, connector: &Connector) -> Result<()> {
     )?;
     stats.record_frame_tx();
 
-    // steady state: one Query in flight at a time
+    if version >= 2 {
+        return bridge_v2(reader, writer, connector, handle, pipeline);
+    }
+
+    // v1 steady state: one Query in flight at a time
     loop {
         let frame = match read_frame_or_eof(&mut reader) {
             Ok(None) => return Ok(()), // client hung up cleanly
@@ -309,6 +367,178 @@ fn bridge_conn(stream: TcpStream, connector: &Connector) -> Result<()> {
     }
 }
 
+/// A query the v2 bridge has admitted but not yet answered: what the
+/// writer thread needs to file the eventual reply in the response
+/// cache. `obs` stays empty when the server has no cache (nothing to
+/// file, so nothing retained).
+struct InflightQuery {
+    obs: Vec<f32>,
+    hash: u64,
+    /// Cache version captured at probe time (same stale-insert guard as
+    /// the in-process handle).
+    version: u64,
+}
+
+/// The v2 (pipelined) steady state. The bridge thread reads tagged
+/// queries and admits them into the shard queue; a per-connection
+/// writer thread drains the shared reply channel and streams
+/// [`Frame::ReplyV2`]s back in completion order. Cache hits and sheds
+/// are answered inline by the reader. The socket's write half is
+/// mutex-shared between the two — every frame is written whole under
+/// the lock, so frames never interleave on the wire.
+fn bridge_v2(
+    mut reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    connector: &Connector,
+    handle: ClientHandle,
+    pipeline: usize,
+) -> Result<()> {
+    let stats = connector.stats();
+    let writer = Arc::new(Mutex::new(writer));
+    let inflight: Arc<Mutex<HashMap<u32, InflightQuery>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+    let (reply_tx, reply_rx) = channel::<(u32, Reply)>();
+
+    let writer_thread = {
+        let writer = writer.clone();
+        let inflight = inflight.clone();
+        let conn = connector.clone();
+        std::thread::Builder::new()
+            .name("paac-serve-replies".into())
+            .spawn(move || {
+                while let Ok((id, reply)) = reply_rx.recv() {
+                    let entry = inflight.lock().unwrap().remove(&id);
+                    if let (Some(cache), Some(e)) = (conn.cache(), &entry) {
+                        if !e.obs.is_empty() {
+                            cache.put(e.version, &e.obs, e.hash, &reply);
+                        }
+                    }
+                    let frame =
+                        Frame::ReplyV2 { id, probs: reply.probs, value: reply.value };
+                    let mut w = writer.lock().unwrap();
+                    if write_frame(&mut *w, &frame).is_err() {
+                        // the client is gone: dropping the receiver makes
+                        // every still-in-flight reply a silent no-op
+                        break;
+                    }
+                    conn.stats().record_frame_tx();
+                }
+            })
+            .map_err(|e| Error::serve(format!("spawn reply writer: {e}")))?
+    };
+
+    let queue = connector.queue();
+    let result = loop {
+        let frame = match read_frame_or_eof(&mut reader) {
+            Ok(None) => break Ok(()), // client hung up cleanly
+            Ok(Some(f)) => {
+                stats.record_frame_rx();
+                f
+            }
+            Err(e) => {
+                send_error(&mut writer.lock().unwrap(), stats, &e.to_string());
+                break Err(e);
+            }
+        };
+        match frame {
+            Frame::QueryV2 { id, obs } => {
+                if obs.len() != handle.obs_len() {
+                    let msg = format!(
+                        "session {}: observation has {} floats, server expects {}",
+                        handle.session(),
+                        obs.len(),
+                        handle.obs_len()
+                    );
+                    send_error(&mut writer.lock().unwrap(), stats, &msg);
+                    continue;
+                }
+                {
+                    let map = inflight.lock().unwrap();
+                    if map.contains_key(&id) {
+                        // a duplicate id is a protocol violation, not load
+                        drop(map);
+                        let msg = format!("request id {id} is already in flight");
+                        send_error(&mut writer.lock().unwrap(), stats, &msg);
+                        break Err(Error::wire(msg));
+                    }
+                    if map.len() >= pipeline {
+                        drop(map);
+                        stats.record_pipeline_shed();
+                        write_overloaded(&writer, stats, id, "pipeline window full");
+                        continue;
+                    }
+                }
+                // cache-first, exactly like the in-process handle
+                let hash = if connector.cache().is_some() || queue.dedup() {
+                    obs_fnv1a(&obs)
+                } else {
+                    0
+                };
+                let mut probe_version = 0;
+                if let Some(cache) = connector.cache() {
+                    probe_version = cache.version();
+                    if let Some(reply) = cache.get(&obs, hash) {
+                        stats.record_cache_hit();
+                        let frame =
+                            Frame::ReplyV2 { id, probs: reply.probs, value: reply.value };
+                        let mut w = writer.lock().unwrap();
+                        if write_frame(&mut *w, &frame).is_ok() {
+                            stats.record_frame_tx();
+                        }
+                        continue;
+                    }
+                    stats.record_cache_miss();
+                }
+                let mut buf = queue.obs_pool().take();
+                buf.extend_from_slice(&obs);
+                let req = Request::tagged(handle.session(), buf, id, reply_tx.clone());
+                match queue.admit(req) {
+                    Admission::Admitted => {
+                        stats.record_admitted();
+                        let kept =
+                            if connector.cache().is_some() { obs } else { Vec::new() };
+                        let mut map = inflight.lock().unwrap();
+                        map.insert(
+                            id,
+                            InflightQuery { obs: kept, hash, version: probe_version },
+                        );
+                        stats.record_inflight(map.len());
+                    }
+                    Admission::Shed(reason) => {
+                        stats.record_shed(reason);
+                        write_overloaded(&writer, stats, id, reason.name());
+                    }
+                    Admission::Closed => {
+                        send_error(&mut writer.lock().unwrap(), stats, "server is shut down");
+                        break Ok(());
+                    }
+                }
+            }
+            other => {
+                let msg = format!("unexpected {} frame on a v2 connection", other.name());
+                send_error(&mut writer.lock().unwrap(), stats, &msg);
+                break Err(Error::wire(msg));
+            }
+        }
+    };
+    // close the reader's sender: once every admitted in-flight reply has
+    // drained (or failed to write), the writer's channel empties and it
+    // exits — which bounds the bridge's lifetime for the accept loop
+    drop(reply_tx);
+    let _ = writer_thread.join();
+    result
+}
+
+/// Best-effort per-id Overloaded frame: the shed stays typed on the
+/// wire while the connection (and every other in-flight query) lives.
+fn write_overloaded(writer: &Arc<Mutex<TcpStream>>, stats: &ServeStats, id: u32, reason: &str) {
+    let frame = Frame::Overloaded { id, message: format!("request shed ({reason})") };
+    let mut w = writer.lock().unwrap();
+    if write_frame(&mut *w, &frame).is_ok() {
+        stats.record_frame_tx();
+    }
+}
+
 /// Best-effort Error frame (the peer may already be gone).
 fn send_error(w: &mut TcpStream, stats: &ServeStats, message: &str) {
     if write_frame(w, &Frame::Error { message: message.to_string() }).is_ok() {
@@ -333,38 +563,70 @@ fn read_timed<R: std::io::Read>(r: &mut R, waiting_for: &str) -> Result<Frame> {
     }
 }
 
+/// One completed pipelined request (see [`RemoteHandle::recv`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Completion {
+    /// The reply to the request with this id.
+    Reply(u32, Reply),
+    /// The server shed the request with this id ([`Frame::Overloaded`]);
+    /// the message names the shed reason. Retry or drop — the
+    /// connection and every other in-flight request are unaffected.
+    Shed(u32, String),
+}
+
 /// Client side of the wire protocol: the network twin of
 /// [`ClientHandle`](crate::serve::ClientHandle).
 ///
-/// Connecting performs the handshake, so an open handle always knows the
+/// Connecting performs the handshake (min-wins version negotiation), so
+/// an open handle always knows the negotiated protocol version, the
 /// server-assigned session id and the served observation/action shape.
-/// Like the in-process handle it is strictly one-request-in-flight;
-/// unlike it, `query` takes `&mut self` because the socket is stateful —
-/// which is exactly the [`QueryTransport`] contract.
+/// On a v2 connection the handle pipelines: [`RemoteHandle::submit`]
+/// fires a tagged query without waiting, [`RemoteHandle::recv`] yields
+/// completions in server order, and the plain blocking
+/// [`RemoteHandle::query`] is submit + receive-until-matched (one frame
+/// each way, so lockstep callers see exactly one round trip per query).
+/// `query` takes `&mut self` because the socket is stateful — which is
+/// exactly the [`QueryTransport`] contract.
 pub struct RemoteHandle {
     writer: TcpStream,
     reader: BufReader<TcpStream>,
     session: u64,
     obs_len: usize,
     actions: usize,
+    /// Negotiated protocol version (1 = lockstep, 2 = pipelined).
+    version: u16,
+    /// Next v2 request id (connection-local, wrapping).
+    next_id: u32,
+    /// Completions that arrived while waiting for a different id.
+    pending: HashMap<u32, std::result::Result<Reply, String>>,
 }
 
 impl RemoteHandle {
-    /// Connect and handshake. Fails on version mismatch, on a server
-    /// `Error` frame, or on anything malformed.
+    /// Connect and handshake at this build's protocol version. Fails on
+    /// a bad negotiation, on a server `Error` frame, or on anything
+    /// malformed.
     pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<RemoteHandle> {
+        RemoteHandle::connect_versioned(addr, WIRE_VERSION)
+    }
+
+    /// [`RemoteHandle::connect`] announcing an explicit protocol
+    /// version (min-wins against the server's).
+    /// `connect_versioned(addr, 1)` reproduces the v1 lockstep client
+    /// frame-for-frame — the compatibility gate the overload
+    /// integration suite pins.
+    pub fn connect_versioned<A: ToSocketAddrs>(addr: A, version: u16) -> Result<RemoteHandle> {
         let mut writer = TcpStream::connect(addr)?;
         let _ = writer.set_nodelay(true);
         // SO_RCVTIMEO is per socket, shared with the reader clone below
         writer.set_read_timeout(Some(REMOTE_REPLY_TIMEOUT))?;
         let mut reader = BufReader::new(writer.try_clone()?);
-        write_frame(&mut writer, &Frame::Hello { version: WIRE_VERSION })?;
+        write_frame(&mut writer, &Frame::Hello { version })?;
         match read_timed(&mut reader, "handshake")? {
-            Frame::HelloAck { version, session, obs_len, actions } => {
-                if version != WIRE_VERSION {
+            Frame::HelloAck { version: acked, session, obs_len, actions } => {
+                if acked == 0 || acked > version {
                     return Err(Error::wire(format!(
-                        "server answered with protocol version {version}, \
-                         this client speaks {WIRE_VERSION}"
+                        "server answered the v{version} handshake with protocol \
+                         version {acked}"
                     )));
                 }
                 Ok(RemoteHandle {
@@ -373,6 +635,9 @@ impl RemoteHandle {
                     session,
                     obs_len: obs_len as usize,
                     actions: actions as usize,
+                    version: acked,
+                    next_id: 0,
+                    pending: HashMap::new(),
                 })
             }
             Frame::Error { message } => {
@@ -400,17 +665,50 @@ impl RemoteHandle {
         self.actions
     }
 
+    /// Negotiated protocol version (1 = lockstep, 2 = pipelined).
+    pub fn version(&self) -> u16 {
+        self.version
+    }
+
+    /// Pipelined submit (v2 only): write one tagged query and return
+    /// its connection-local request id without waiting for the reply.
+    /// Pair with [`RemoteHandle::recv`] to drain completions.
+    pub fn submit(&mut self, obs: &[f32]) -> Result<u32> {
+        if self.version < 2 {
+            return Err(Error::serve(
+                "pipelined submit needs protocol v2 (the server acked v1)",
+            ));
+        }
+        self.check_shape(obs)?;
+        let id = self.next_id;
+        self.next_id = self.next_id.wrapping_add(1);
+        write_query_v2(&mut self.writer, id, obs)?;
+        Ok(id)
+    }
+
+    /// Block for the next completion, in server order (replies may
+    /// complete out of submission order). Completions parked by
+    /// [`RemoteHandle::query`]'s id-matching are yielded first.
+    pub fn recv(&mut self) -> Result<Completion> {
+        if let Some(&id) = self.pending.keys().next() {
+            let done = self.pending.remove(&id).expect("key just observed");
+            return Ok(match done {
+                Ok(reply) => Completion::Reply(id, reply),
+                Err(msg) => Completion::Shed(id, msg),
+            });
+        }
+        self.read_completion()
+    }
+
     /// Submit one observation and block for the policy/value reply —
     /// the same surface as the in-process handle, over the socket.
     pub fn query(&mut self, obs: &[f32]) -> Result<Reply> {
-        if obs.len() != self.obs_len {
-            return Err(Error::Shape(format!(
-                "session {}: observation has {} floats, server expects {}",
-                self.session,
-                obs.len(),
-                self.obs_len
-            )));
+        if self.version >= 2 {
+            let id = self.submit(obs)?;
+            return self.wait_for(id);
         }
+        // v1 lockstep: untagged Query/Reply, exactly the PR 6 frames
+        self.check_shape(obs)?;
         write_query(&mut self.writer, obs)?;
         match read_timed(&mut self.reader, "reply")? {
             Frame::Reply { probs, value } => Ok(Reply { probs, value }),
@@ -419,6 +717,54 @@ impl RemoteHandle {
                 "expected Reply to answer a query, got {}",
                 other.name()
             ))),
+        }
+    }
+
+    fn check_shape(&self, obs: &[f32]) -> Result<()> {
+        if obs.len() != self.obs_len {
+            return Err(Error::Shape(format!(
+                "session {}: observation has {} floats, server expects {}",
+                self.session,
+                obs.len(),
+                self.obs_len
+            )));
+        }
+        Ok(())
+    }
+
+    /// Read one completion frame off the socket.
+    fn read_completion(&mut self) -> Result<Completion> {
+        match read_timed(&mut self.reader, "reply")? {
+            Frame::ReplyV2 { id, probs, value } => {
+                Ok(Completion::Reply(id, Reply { probs, value }))
+            }
+            Frame::Overloaded { id, message } => Ok(Completion::Shed(id, message)),
+            Frame::Error { message } => Err(Error::serve(format!("server error: {message}"))),
+            other => Err(Error::wire(format!(
+                "expected ReplyV2/Overloaded to answer a v2 query, got {}",
+                other.name()
+            ))),
+        }
+    }
+
+    /// Receive until the completion for `want` arrives, parking other
+    /// ids' completions for later [`RemoteHandle::recv`] calls. A shed
+    /// of `want` surfaces as [`Error::Overloaded`].
+    fn wait_for(&mut self, want: u32) -> Result<Reply> {
+        if let Some(done) = self.pending.remove(&want) {
+            return done.map_err(Error::Overloaded);
+        }
+        loop {
+            match self.read_completion()? {
+                Completion::Reply(id, reply) if id == want => return Ok(reply),
+                Completion::Reply(id, reply) => {
+                    self.pending.insert(id, Ok(reply));
+                }
+                Completion::Shed(id, msg) if id == want => return Err(Error::overloaded(msg)),
+                Completion::Shed(id, msg) => {
+                    self.pending.insert(id, Err(msg));
+                }
+            }
         }
     }
 }
@@ -441,9 +787,208 @@ impl QueryTransport for RemoteHandle {
     }
 }
 
+/// A self-healing client: [`RemoteHandle`] plus a server list, jittered
+/// exponential backoff, and transparent re-handshake.
+///
+/// The failover contract: transient failures — connection refused, a
+/// socket dying mid-query, a server `Error` frame, an
+/// [`Error::Overloaded`] shed — are retried against the address list in
+/// round-robin order with jittered exponential backoff, up to a bounded
+/// attempt budget per query. Non-transient errors ([`Error::Shape`])
+/// propagate immediately. The session id this handle reports is the
+/// **first** successful handshake's and never changes across failovers,
+/// so the client's RNG stream — and therefore its episode trajectory —
+/// is stable no matter how often the socket drops; replies stay
+/// bit-identical regardless of which server answers, because every
+/// server computes them as a pure function of the observation.
+pub struct ReconnectingHandle {
+    addrs: Vec<String>,
+    inner: Option<RemoteHandle>,
+    /// Index of the address the live connection used (or the next
+    /// reconnect will try), round-robin.
+    cursor: usize,
+    session: u64,
+    obs_len: usize,
+    actions: usize,
+    reconnects: u64,
+    sheds: u64,
+    /// Backoff jitter stream (deterministic: seeded from the address
+    /// list, so behavior is reproducible run-to-run).
+    rng: Pcg32,
+    max_attempts: u32,
+    base_backoff: Duration,
+}
+
+impl ReconnectingHandle {
+    /// Connect to the first reachable server in `addrs` (tried in
+    /// order). Fails only if every address refuses the initial connect.
+    pub fn connect(addrs: Vec<String>) -> Result<ReconnectingHandle> {
+        if addrs.is_empty() {
+            return Err(Error::config("failover needs at least one server address"));
+        }
+        // deterministic jitter stream: FNV-1a over the address list, so
+        // two handles to different fleets do not share backoff phase
+        let mut seed = 0xcbf2_9ce4_8422_2325u64;
+        for addr in &addrs {
+            for b in addr.as_bytes() {
+                seed = (seed ^ u64::from(*b)).wrapping_mul(0x100_0000_01b3);
+            }
+        }
+        let mut last = None;
+        for (i, addr) in addrs.iter().enumerate() {
+            match RemoteHandle::connect(addr) {
+                Ok(h) => {
+                    return Ok(ReconnectingHandle {
+                        session: h.session(),
+                        obs_len: h.obs_len(),
+                        actions: h.actions(),
+                        cursor: i,
+                        inner: Some(h),
+                        addrs,
+                        reconnects: 0,
+                        sheds: 0,
+                        rng: Pcg32::new(seed, 0xFA11_03ED),
+                        max_attempts: RETRY_MAX_ATTEMPTS,
+                        base_backoff: RETRY_BASE_BACKOFF,
+                    });
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.expect("addrs is non-empty"))
+    }
+
+    /// Override the retry policy: total attempts per query and the base
+    /// backoff (which doubles, jittered, up to `2^5 * base`).
+    pub fn with_retry(mut self, max_attempts: u32, base_backoff: Duration) -> ReconnectingHandle {
+        self.max_attempts = max_attempts.max(1);
+        self.base_backoff = base_backoff;
+        self
+    }
+
+    /// Server-assigned session id of the FIRST handshake (stable across
+    /// failovers — see the type docs).
+    pub fn session(&self) -> u64 {
+        self.session
+    }
+
+    /// Observation length the servers expect per query.
+    pub fn obs_len(&self) -> usize {
+        self.obs_len
+    }
+
+    /// Action-set size of the served policy.
+    pub fn actions(&self) -> usize {
+        self.actions
+    }
+
+    /// Socket-level reconnects performed so far (failovers included).
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects
+    }
+
+    /// Overload sheds absorbed so far (each retried after backoff).
+    pub fn sheds(&self) -> u64 {
+        self.sheds
+    }
+
+    /// Jittered exponential backoff for retry `attempt` (0-based):
+    /// `base * 2^min(attempt, 5)`, scaled by a uniform [0.5, 1.5)
+    /// jitter so a fleet of retrying clients does not thunder back in
+    /// phase.
+    fn backoff(&mut self, attempt: u32) -> Duration {
+        let exp = 1u32 << attempt.min(5);
+        let jitter = 0.5 + self.rng.next_f64();
+        self.base_backoff.mul_f64(f64::from(exp) * jitter)
+    }
+
+    /// Drop the current connection (if any) and advance to the next
+    /// address: the next attempt re-handshakes there.
+    fn rotate(&mut self) {
+        self.inner = None;
+        self.cursor = (self.cursor + 1) % self.addrs.len();
+    }
+
+    fn reconnect(&mut self) -> Result<()> {
+        let addr = &self.addrs[self.cursor];
+        let h = RemoteHandle::connect(addr)?;
+        // the served shape must not drift across failover — a mismatched
+        // server would silently corrupt the session's preprocessing
+        if h.obs_len() != self.obs_len || h.actions() != self.actions {
+            return Err(Error::config(format!(
+                "failover server {addr} serves obs_len {} / {} actions, expected {} / {}",
+                h.obs_len(),
+                h.actions(),
+                self.obs_len,
+                self.actions
+            )));
+        }
+        self.inner = Some(h);
+        self.reconnects += 1;
+        Ok(())
+    }
+
+    /// Submit one observation, retrying across the server list until a
+    /// reply lands or the attempt budget is spent (the last error is
+    /// returned).
+    pub fn query(&mut self, obs: &[f32]) -> Result<Reply> {
+        let mut last: Option<Error> = None;
+        for attempt in 0..self.max_attempts {
+            if attempt > 0 {
+                std::thread::sleep(self.backoff(attempt - 1));
+            }
+            if self.inner.is_none() {
+                if let Err(e) = self.reconnect() {
+                    self.rotate();
+                    last = Some(e);
+                    continue;
+                }
+            }
+            let handle = self.inner.as_mut().expect("connection just established");
+            match handle.query(obs) {
+                Ok(reply) => return Ok(reply),
+                Err(e @ Error::Shape(_)) => return Err(e), // never transient
+                Err(Error::Overloaded(m)) => {
+                    // the connection is healthy — the server chose to
+                    // shed; back off and retry without re-handshaking
+                    self.sheds += 1;
+                    last = Some(Error::Overloaded(m));
+                }
+                Err(e) => {
+                    // socket or server trouble: fail over to the next
+                    // address in the list
+                    self.rotate();
+                    last = Some(e);
+                }
+            }
+        }
+        Err(last.unwrap_or_else(|| Error::serve("retry budget spent with no attempt made")))
+    }
+}
+
+impl QueryTransport for ReconnectingHandle {
+    fn session(&self) -> u64 {
+        ReconnectingHandle::session(self)
+    }
+
+    fn obs_len(&self) -> usize {
+        ReconnectingHandle::obs_len(self)
+    }
+
+    fn actions(&self) -> usize {
+        ReconnectingHandle::actions(self)
+    }
+
+    fn query(&mut self, obs: &[f32]) -> Result<Reply> {
+        ReconnectingHandle::query(self, obs)
+    }
+}
+
 /// The network twin of [`run_clients`](crate::serve::run_clients):
 /// `clients` concurrent synthetic sessions (one thread each) playing
-/// `game` against the server at `addr` for `queries` steps apiece.
+/// `game` against the server(s) at `addr` — a single address or a
+/// comma-separated failover list, each client a [`ReconnectingHandle`]
+/// over it — for `queries` steps apiece.
 ///
 /// Connections are opened **sequentially before any thread spawns**, so
 /// session ids arrive in client order — which is what makes a remote
@@ -458,9 +1003,11 @@ pub fn run_remote_clients(
     clients: usize,
     queries: usize,
 ) -> Result<Vec<SessionReport>> {
+    let addrs: Vec<String> =
+        addr.split(',').map(|a| a.trim().to_string()).filter(|a| !a.is_empty()).collect();
     let mut handles = Vec::with_capacity(clients);
     for _ in 0..clients {
-        let handle = RemoteHandle::connect(addr)?;
+        let handle = ReconnectingHandle::connect(addrs.clone())?;
         if handle.obs_len() != mode.obs_len() {
             return Err(Error::config(format!(
                 "server at {addr} serves {}-float observations but mode {mode:?} \
@@ -547,8 +1094,8 @@ mod tests {
         let mut handle = RemoteHandle::connect(&addr).unwrap();
         // client-side validation catches it first
         assert!(matches!(handle.query(&[1.0; 3]), Err(Error::Shape(_))));
-        // force a bad query past the client check via a raw frame
-        write_frame(&mut handle.writer, &Frame::Query { obs: vec![1.0; 3] }).unwrap();
+        // force a bad query past the client check via a raw tagged frame
+        write_frame(&mut handle.writer, &Frame::QueryV2 { id: 777, obs: vec![1.0; 3] }).unwrap();
         match read_frame(&mut handle.reader).unwrap() {
             Frame::Error { message } => {
                 assert!(message.contains("observation has 3"), "{message}")
@@ -564,10 +1111,10 @@ mod tests {
     }
 
     #[test]
-    fn version_mismatch_is_rejected_with_an_error_frame() {
+    fn version_zero_is_rejected_with_an_error_frame() {
         let (server, frontend, addr) = loopback(4, 2, Duration::ZERO, None);
         let mut raw = TcpStream::connect(&addr).unwrap();
-        write_frame(&mut raw, &Frame::Hello { version: WIRE_VERSION + 9 }).unwrap();
+        write_frame(&mut raw, &Frame::Hello { version: 0 }).unwrap();
         let mut reader = BufReader::new(raw.try_clone().unwrap());
         match read_frame(&mut reader).unwrap() {
             Frame::Error { message } => assert!(message.contains("version"), "{message}"),
@@ -576,7 +1123,141 @@ mod tests {
         drop((raw, reader));
         frontend.shutdown().unwrap();
         let snap = server.shutdown().unwrap();
-        assert!(snap.transport.wire_errors >= 1, "version mismatch must book a wire error");
+        assert!(snap.transport.wire_errors >= 1, "version 0 must book a wire error");
+    }
+
+    #[test]
+    fn a_newer_client_version_negotiates_down_to_the_servers() {
+        // min-wins: a hypothetical v11 client is answered at v2, not
+        // rejected — forward compatibility without a flag day
+        let (server, frontend, addr) = loopback(4, 2, Duration::ZERO, None);
+        let mut h = RemoteHandle::connect_versioned(&addr, WIRE_VERSION + 9).unwrap();
+        assert_eq!(h.version(), WIRE_VERSION);
+        assert_eq!(h.query(&[0.5; 4]).unwrap().probs.len(), ACTIONS);
+        drop(h);
+        frontend.shutdown().unwrap();
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn v1_client_interops_with_a_v2_server_bit_for_bit() {
+        let (server, frontend, addr) = loopback(6, 4, Duration::ZERO, None);
+        let mut v1 = RemoteHandle::connect_versioned(&addr, 1).unwrap();
+        assert_eq!(v1.version(), 1);
+        let obs: Vec<f32> = (0..6).map(|i| 0.1 * i as f32 - 0.2).collect();
+        let want = server.connect().query(&obs).unwrap();
+        let got = v1.query(&obs).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(got.value.to_bits(), want.value.to_bits());
+        assert!(matches!(v1.submit(&obs), Err(Error::Serve(_))), "submit must refuse v1");
+        drop(v1);
+        frontend.shutdown().unwrap();
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn pipelined_queries_complete_out_of_order_safely() {
+        let (server, frontend, addr) = loopback(4, 8, Duration::from_micros(200), None);
+        let mut h = RemoteHandle::connect(&addr).unwrap();
+        assert_eq!(h.version(), WIRE_VERSION);
+        let mk = |i: usize| vec![0.1 * i as f32 + 0.05; 4];
+        let n = 16usize;
+        let mut ids = Vec::new();
+        for i in 0..n {
+            ids.push(h.submit(&mk(i)).unwrap());
+        }
+        let mut got: std::collections::HashMap<u32, Reply> = std::collections::HashMap::new();
+        for _ in 0..n {
+            match h.recv().unwrap() {
+                Completion::Reply(id, reply) => {
+                    assert!(got.insert(id, reply).is_none(), "duplicate reply id");
+                }
+                Completion::Shed(id, msg) => panic!("unbounded server shed id {id}: {msg}"),
+            }
+        }
+        // every submitted id answered, each bit-identical to in-process
+        let local = server.connect();
+        for (i, id) in ids.iter().enumerate() {
+            let want = local.query(&mk(i)).unwrap();
+            assert_eq!(got[id], want, "id {id} matched the wrong reply");
+        }
+        drop((h, local));
+        frontend.shutdown().unwrap();
+        let snap = server.shutdown().unwrap();
+        assert_eq!(snap.overload.shed_total, 0, "nothing sheds on an unbounded server");
+        assert!(snap.overload.peak_inflight >= 1);
+    }
+
+    #[test]
+    fn pipeline_window_sheds_excess_with_per_id_overloaded_frames() {
+        // width-1 backend stuck in a 300 ms forward: submissions 3..6
+        // find the 2-deep pipeline window full and must shed, while the
+        // two admitted queries still complete normally
+        let factory = SyntheticFactory::new(4, ACTIONS, 42)
+            .with_cost(Duration::from_millis(300), Duration::ZERO);
+        let server =
+            PolicyServer::start_pool(&factory, ServeConfig::new(1, Duration::ZERO)).unwrap();
+        let frontend =
+            TcpFrontend::bind_with("127.0.0.1:0", server.connector(), None, 2).unwrap();
+        let addr = frontend.local_addr().to_string();
+        let mut h = RemoteHandle::connect(&addr).unwrap();
+        for i in 0..6 {
+            h.submit(&[0.1 * i as f32 + 1.0; 4]).unwrap();
+        }
+        let (mut ok, mut shed) = (0u32, 0u32);
+        for _ in 0..6 {
+            match h.recv().unwrap() {
+                Completion::Reply(..) => ok += 1,
+                Completion::Shed(_, msg) => {
+                    assert!(msg.contains("pipeline"), "unexpected shed reason: {msg}");
+                    shed += 1;
+                }
+            }
+        }
+        assert_eq!((ok, shed), (2, 4), "window 2 must admit 2 and shed 4");
+        drop(h);
+        frontend.shutdown().unwrap();
+        let snap = server.shutdown().unwrap();
+        assert_eq!(snap.overload.admitted, 2);
+        assert_eq!(snap.overload.shed_pipeline, 4);
+        assert_eq!(snap.overload.peak_inflight, 2);
+    }
+
+    #[test]
+    fn reconnecting_handle_fails_over_to_the_next_server() {
+        // two independent servers over the same synthetic seed: replies
+        // are a pure function of the observation, so failover must be
+        // invisible in the returned bits
+        let (s1, f1, a1) = loopback(4, 2, Duration::ZERO, None);
+        let (s2, f2, a2) = loopback(4, 2, Duration::ZERO, None);
+        let mut h = ReconnectingHandle::connect(vec![a1, a2])
+            .unwrap()
+            .with_retry(6, Duration::from_millis(5));
+        let obs = [0.3f32; 4];
+        let want = s1.connect().query(&obs).unwrap();
+        assert_eq!(h.query(&obs).unwrap(), want);
+        assert_eq!(h.reconnects(), 0);
+        let first_session = h.session();
+        // kill the server the handle is talking to: the next query must
+        // re-handshake against the second address transparently
+        f1.shutdown().unwrap();
+        s1.shutdown().unwrap();
+        let got = h.query(&obs).unwrap();
+        assert_eq!(got, want, "failover changed the served reply");
+        assert_eq!(got.value.to_bits(), want.value.to_bits());
+        assert!(h.reconnects() >= 1, "the failover must book a reconnect");
+        assert_eq!(h.session(), first_session, "session id must survive failover");
+        drop(h);
+        f2.shutdown().unwrap();
+        s2.shutdown().unwrap();
+    }
+
+    #[test]
+    fn reconnecting_handle_needs_a_reachable_server_eventually() {
+        // nothing listens on either address: connect must fail cleanly
+        let dead = vec!["127.0.0.1:1".to_string(), "127.0.0.1:2".to_string()];
+        assert!(ReconnectingHandle::connect(dead).is_err());
+        assert!(ReconnectingHandle::connect(Vec::new()).is_err(), "empty list is a config error");
     }
 
     #[test]

@@ -13,10 +13,23 @@
 //!
 //! A connection opens with a versioned handshake — the client sends
 //! [`Frame::Hello`], the server answers [`Frame::HelloAck`] carrying the
-//! assigned session id and the served observation/action shape — and then
-//! alternates [`Frame::Query`] / [`Frame::Reply`] (or [`Frame::Error`])
-//! strictly one request in flight at a time, which is all a policy client
-//! needs (the next observation depends on the previous action).
+//! negotiated protocol version, the assigned session id and the served
+//! observation/action shape. What follows depends on the version:
+//!
+//! * **v1** alternates [`Frame::Query`] / [`Frame::Reply`] (or
+//!   [`Frame::Error`]) strictly one request in flight at a time — all a
+//!   lockstep policy client needs (the next observation depends on the
+//!   previous action).
+//! * **v2** pipelines: the client tags each [`Frame::QueryV2`] with a
+//!   `u32` request id and may keep many in flight; the server answers
+//!   with matching [`Frame::ReplyV2`] frames **in any order**, or sheds
+//!   an individual request with [`Frame::Overloaded`] when admission
+//!   control rejects it (the connection stays healthy — only that id
+//!   failed).
+//!
+//! Version negotiation is min-wins ([`negotiate_version`]): a v1-only
+//! peer on either side of a v2 build gets the original lockstep
+//! protocol, byte for byte.
 //!
 //! Observations and policy rows travel as raw little-endian `f32` bits,
 //! so a remote query is **bit-identical** to an in-process one — the
@@ -35,7 +48,18 @@ use crate::error::{Error, Result};
 pub const WIRE_MAGIC: u32 = u32::from_le_bytes(*b"PAAC");
 
 /// Protocol version spoken by this build, carried in Hello/HelloAck.
-pub const WIRE_VERSION: u16 = 1;
+/// v1 = lockstep Query/Reply; v2 adds tagged pipelined frames.
+pub const WIRE_VERSION: u16 = 2;
+
+/// Pick the protocol version for a connection whose peer announced
+/// `peer` in its Hello: min-wins, so either side can be the older
+/// build. Version 0 never existed and is rejected outright.
+pub fn negotiate_version(peer: u16) -> Result<u16> {
+    if peer == 0 {
+        return Err(Error::wire("peer announced protocol version 0"));
+    }
+    Ok(peer.min(WIRE_VERSION))
+}
 
 /// Frame header size: magic (4) + frame type (1) + payload length (4).
 pub const HEADER_LEN: usize = 9;
@@ -61,6 +85,15 @@ pub enum Frame {
     /// Server → client: the last query (or the handshake) failed; the
     /// message is the server-side error rendering.
     Error { message: String },
+    /// Client → server (v2): one flattened observation tagged with a
+    /// connection-local request id, so many may be in flight at once.
+    QueryV2 { id: u32, obs: Vec<f32> },
+    /// Server → client (v2): the reply to the [`Frame::QueryV2`] with
+    /// the same id. Replies may arrive in any order.
+    ReplyV2 { id: u32, probs: Vec<f32>, value: f32 },
+    /// Server → client (v2): admission control shed the query with this
+    /// id. The connection stays usable — only this request failed.
+    Overloaded { id: u32, message: String },
 }
 
 impl Frame {
@@ -72,6 +105,9 @@ impl Frame {
             Frame::Query { .. } => 3,
             Frame::Reply { .. } => 4,
             Frame::Error { .. } => 5,
+            Frame::QueryV2 { .. } => 6,
+            Frame::ReplyV2 { .. } => 7,
+            Frame::Overloaded { .. } => 8,
         }
     }
 
@@ -83,6 +119,9 @@ impl Frame {
             Frame::Query { .. } => "Query",
             Frame::Reply { .. } => "Reply",
             Frame::Error { .. } => "Error",
+            Frame::QueryV2 { .. } => "QueryV2",
+            Frame::ReplyV2 { .. } => "ReplyV2",
+            Frame::Overloaded { .. } => "Overloaded",
         }
     }
 
@@ -113,6 +152,25 @@ impl Frame {
             Frame::Error { message } => {
                 let bytes = message.as_bytes();
                 assemble(self.type_id(), 4 + bytes.len(), |b| {
+                    b.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+                    b.extend_from_slice(bytes);
+                })
+            }
+            Frame::QueryV2 { id, obs } => encode_query_v2(*id, obs),
+            Frame::ReplyV2 { id, probs, value } => {
+                assemble(self.type_id(), 4 + 4 + 4 * probs.len() + 4, |b| {
+                    b.extend_from_slice(&id.to_le_bytes());
+                    b.extend_from_slice(&(probs.len() as u32).to_le_bytes());
+                    for v in probs {
+                        b.extend_from_slice(&v.to_le_bytes());
+                    }
+                    b.extend_from_slice(&value.to_le_bytes());
+                })
+            }
+            Frame::Overloaded { id, message } => {
+                let bytes = message.as_bytes();
+                assemble(self.type_id(), 4 + 4 + bytes.len(), |b| {
+                    b.extend_from_slice(&id.to_le_bytes());
                     b.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
                     b.extend_from_slice(bytes);
                 })
@@ -164,6 +222,18 @@ fn assemble(ty: u8, payload_len: usize, fill: impl FnOnce(&mut Vec<u8>)) -> Vec<
 /// the two paths cannot drift.
 pub fn encode_query(obs: &[f32]) -> Vec<u8> {
     assemble(3, 4 + 4 * obs.len(), |b| {
+        b.extend_from_slice(&(obs.len() as u32).to_le_bytes());
+        for v in obs {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+    })
+}
+
+/// [`encode_query`] for the tagged v2 frame: the pipelined client hot
+/// path, borrowing the observation. `Frame::encode` delegates here.
+pub fn encode_query_v2(id: u32, obs: &[f32]) -> Vec<u8> {
+    assemble(6, 4 + 4 + 4 * obs.len(), |b| {
+        b.extend_from_slice(&id.to_le_bytes());
         b.extend_from_slice(&(obs.len() as u32).to_le_bytes());
         for v in obs {
             b.extend_from_slice(&v.to_le_bytes());
@@ -279,6 +349,24 @@ fn decode_payload(ty: u8, payload: &[u8]) -> Result<Frame> {
                 .to_string();
             Frame::Error { message }
         }
+        6 => Frame::QueryV2 {
+            id: c.u32("QueryV2 id")?,
+            obs: c.f32_vec("QueryV2 observation")?,
+        },
+        7 => Frame::ReplyV2 {
+            id: c.u32("ReplyV2 id")?,
+            probs: c.f32_vec("ReplyV2 probs")?,
+            value: c.f32("ReplyV2 value")?,
+        },
+        8 => {
+            let id = c.u32("Overloaded id")?;
+            let n = c.u32("Overloaded length")? as usize;
+            let bytes = c.take(n, "Overloaded message")?;
+            let message = std::str::from_utf8(bytes)
+                .map_err(|_| Error::wire("Overloaded frame message is not UTF-8"))?
+                .to_string();
+            Frame::Overloaded { id, message }
+        }
         other => return Err(Error::wire(format!("unknown frame type {other}"))),
     };
     c.finish(frame.name())?;
@@ -296,6 +384,13 @@ pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
 /// [`Frame::Query`] would force (the client hot path).
 pub fn write_query<W: Write>(w: &mut W, obs: &[f32]) -> Result<()> {
     w.write_all(&encode_query(obs))?;
+    w.flush()?;
+    Ok(())
+}
+
+/// [`write_query`] for the tagged v2 frame (the pipelined hot path).
+pub fn write_query_v2<W: Write>(w: &mut W, id: u32, obs: &[f32]) -> Result<()> {
+    w.write_all(&encode_query_v2(id, obs))?;
     w.flush()?;
     Ok(())
 }
@@ -360,6 +455,11 @@ mod tests {
         roundtrip(Frame::Reply { probs: vec![0.25; 6], value: -0.75 });
         roundtrip(Frame::Error { message: "backend fell over: ünïcode".into() });
         roundtrip(Frame::Error { message: String::new() });
+        roundtrip(Frame::QueryV2 { id: 0, obs: vec![0.5, -1.25] });
+        roundtrip(Frame::QueryV2 { id: u32::MAX, obs: Vec::new() });
+        roundtrip(Frame::ReplyV2 { id: 7, probs: vec![0.125; 6], value: 2.5 });
+        roundtrip(Frame::Overloaded { id: 3, message: "queue full: 64/64".into() });
+        roundtrip(Frame::Overloaded { id: u32::MAX, message: String::new() });
     }
 
     #[test]
@@ -370,6 +470,24 @@ mod tests {
         let (frame, used) = Frame::decode(&bytes).expect("decode");
         assert_eq!(used, bytes.len());
         assert_eq!(frame, Frame::Query { obs });
+        // and the tagged variant pins type 6 with the id up front
+        let obs = vec![9.0f32, -0.5];
+        let bytes = encode_query_v2(41, &obs);
+        let (frame, used) = Frame::decode(&bytes).expect("decode v2");
+        assert_eq!(used, bytes.len());
+        assert_eq!(frame, Frame::QueryV2 { id: 41, obs });
+    }
+
+    #[test]
+    fn handshake_version_negotiation_is_min_wins() {
+        // a v1-only peer (either side) gets the lockstep protocol
+        assert_eq!(negotiate_version(1).unwrap(), 1);
+        // matching builds speak the newest version both know
+        assert_eq!(negotiate_version(WIRE_VERSION).unwrap(), WIRE_VERSION);
+        // a peer from the future is capped at what this build speaks
+        assert_eq!(negotiate_version(99).unwrap(), WIRE_VERSION);
+        // version 0 never existed: reject rather than negotiate down
+        assert!(negotiate_version(0).is_err());
     }
 
     #[test]
@@ -404,6 +522,18 @@ mod tests {
         for cut in 0..full.len() {
             let err = Frame::decode(&full[..cut]).expect_err("truncation must error");
             assert!(matches!(err, crate::error::Error::Wire(_)), "cut={cut}: {err:?}");
+        }
+        // the tagged frames get the same every-prefix sweep
+        for frame in [
+            Frame::QueryV2 { id: 17, obs: vec![1.0, 2.0, 3.0] },
+            Frame::ReplyV2 { id: 17, probs: vec![0.25; 4], value: -1.0 },
+            Frame::Overloaded { id: 17, message: "shed".into() },
+        ] {
+            let full = frame.encode();
+            for cut in 0..full.len() {
+                let err = Frame::decode(&full[..cut]).expect_err("v2 truncation must error");
+                assert!(matches!(err, crate::error::Error::Wire(_)), "cut={cut}: {err:?}");
+            }
         }
         // mid-frame EOF through the Read path is a wire error too
         let err = read_frame(&mut &full[..full.len() - 1]).expect_err("eof mid-frame");
@@ -482,6 +612,68 @@ mod tests {
                 .collect();
             let _ = Frame::decode(&bytes); // must return, not panic
             let _ = read_frame_or_eof(&mut bytes.as_slice());
+        }
+    }
+
+    #[test]
+    fn garbage_behind_a_valid_header_never_panics_or_overallocates() {
+        // byte soup that passes the magic check: a well-formed header
+        // (every frame type, including unknown ones) followed by a
+        // pseudo-random payload of the declared length — the payload
+        // decoders must bounds-check every field
+        let mut x = 0x9E37_79B9u32;
+        let mut rand = move || {
+            x ^= x << 13;
+            x ^= x >> 17;
+            x ^= x << 5;
+            x
+        };
+        for ty in 0..=9u8 {
+            for len in [0usize, 1, 3, 4, 7, 8, 11, 12, 16, 33, 64] {
+                let mut bytes = Vec::with_capacity(HEADER_LEN + len);
+                bytes.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
+                bytes.push(ty);
+                bytes.extend_from_slice(&(len as u32).to_le_bytes());
+                for _ in 0..len {
+                    bytes.push(rand() as u8);
+                }
+                let _ = Frame::decode(&bytes); // must return, not panic
+                let _ = read_frame_or_eof(&mut bytes.as_slice());
+            }
+        }
+    }
+
+    #[test]
+    fn mutated_valid_frames_decode_or_error_but_never_panic() {
+        // single-byte mutations of every valid frame: each mutant either
+        // still decodes (the flipped byte was payload data) or yields
+        // Error::Wire — no other error kind, no panic
+        let frames = [
+            Frame::Hello { version: WIRE_VERSION },
+            Frame::HelloAck { version: 2, session: 3, obs_len: 4, actions: 6 },
+            Frame::Query { obs: vec![1.0, -2.0, 3.5] },
+            Frame::Reply { probs: vec![0.5, 0.5], value: 0.0 },
+            Frame::Error { message: "boom".into() },
+            Frame::QueryV2 { id: 5, obs: vec![1.0, 2.0] },
+            Frame::ReplyV2 { id: 5, probs: vec![0.25; 4], value: 1.0 },
+            Frame::Overloaded { id: 5, message: "shed".into() },
+        ];
+        for frame in &frames {
+            let clean = frame.encode();
+            for pos in 0..clean.len() {
+                for flip in [0x01u8, 0x80, 0xFF] {
+                    let mut bytes = clean.clone();
+                    bytes[pos] ^= flip;
+                    match Frame::decode(&bytes) {
+                        Ok((_, used)) => assert!(used <= bytes.len()),
+                        Err(e) => assert!(
+                            matches!(e, crate::error::Error::Wire(_)),
+                            "{} byte {pos}: non-wire error {e:?}",
+                            frame.name()
+                        ),
+                    }
+                }
+            }
         }
     }
 }

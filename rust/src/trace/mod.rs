@@ -26,10 +26,12 @@
 //!   (`paac-serve-bridge{N}`), and algo drivers already set.
 //! - **Complete events, sorted.** Spans are emitted as `ph:"X"`
 //!   (complete) events — begin + duration in one record — plus `ph:"M"`
-//!   metadata events naming the process and each track. Events are
-//!   sorted by start time per track, so `ts` is monotone within a `tid`
-//!   (asserted by [`validate`], which the trace tests and the
-//!   `trace_check` example share).
+//!   metadata events naming the process and each track. Instantaneous
+//!   samples ([`counter`] — queue depth, shed totals) are emitted as
+//!   `ph:"C"` counter events, which Perfetto renders as a stepped
+//!   value-over-time chart. Events are sorted by start time per track,
+//!   so `ts` is monotone within a `tid` (asserted by [`validate`],
+//!   which the trace tests and the `trace_check` example share).
 //! - **Bounded.** Each thread buffer caps at
 //!   [`DEFAULT_EVENT_LIMIT`] events (overflow is counted and surfaced as
 //!   a `trace.dropped` event) so an unattended `--trace` serve run
@@ -56,8 +58,19 @@ use crate::util::json::{obj, Json};
 /// finite for forgotten ones.
 pub const DEFAULT_EVENT_LIMIT: usize = 1 << 20;
 
-/// One recorded span (a `ph:"X"` complete event in the output).
+/// What an [`Event`] renders as.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum EventKind {
+    /// A `ph:"X"` complete event (start + duration).
+    Span,
+    /// A `ph:"C"` counter sample; the value lives in `args` as
+    /// `("value", v)` and `dur` is zero.
+    Counter,
+}
+
+/// One recorded event (a `ph:"X"` span or a `ph:"C"` counter sample).
 struct Event {
+    kind: EventKind,
     name: &'static str,
     /// Start, relative to the recording epoch.
     ts: Duration,
@@ -127,6 +140,16 @@ fn register(gen_now: u64) -> Option<Local> {
 
 /// Record one complete event into the calling thread's buffer.
 fn record(name: &'static str, start: Instant, end: Instant, args: Vec<(&'static str, f64)>) {
+    record_kind(EventKind::Span, name, start, end, args);
+}
+
+fn record_kind(
+    kind: EventKind,
+    name: &'static str,
+    start: Instant,
+    end: Instant,
+    args: Vec<(&'static str, f64)>,
+) {
     LOCAL.with(|cell| {
         let gen_now = GENERATION.load(Ordering::Acquire);
         let mut slot = cell.borrow_mut();
@@ -140,7 +163,7 @@ fn record(name: &'static str, start: Instant, end: Instant, args: Vec<(&'static 
         if buf.events.len() >= local.limit {
             buf.dropped += 1;
         } else {
-            buf.events.push(Event { name, ts, dur, args });
+            buf.events.push(Event { kind, name, ts, dur, args });
         }
     });
 }
@@ -236,12 +259,20 @@ fn render(rec: Recorder) -> Json {
             let mut fields = vec![
                 ("name", Json::Str(e.name.to_string())),
                 ("cat", Json::Str("paac".to_string())),
-                ("ph", Json::Str("X".to_string())),
-                ("ts", Json::Num(us(e.ts))),
-                ("dur", Json::Num(us(e.dur))),
-                ("pid", Json::Num(PID)),
-                ("tid", Json::Num(tid as f64)),
             ];
+            match e.kind {
+                EventKind::Span => {
+                    fields.push(("ph", Json::Str("X".to_string())));
+                    fields.push(("ts", Json::Num(us(e.ts))));
+                    fields.push(("dur", Json::Num(us(e.dur))));
+                }
+                EventKind::Counter => {
+                    fields.push(("ph", Json::Str("C".to_string())));
+                    fields.push(("ts", Json::Num(us(e.ts))));
+                }
+            }
+            fields.push(("pid", Json::Num(PID)));
+            fields.push(("tid", Json::Num(tid as f64)));
             if !e.args.is_empty() {
                 let args = e.args.into_iter().map(|(k, v)| (k, Json::Num(v))).collect();
                 fields.push(("args", obj(args)));
@@ -307,6 +338,18 @@ pub fn complete_with(
     }
 }
 
+/// Record one counter sample (a `ph:"C"` event) on the calling thread's
+/// track — an instantaneous value Perfetto charts over time (queue
+/// depth, cumulative sheds). Free when no recording is live; hot paths
+/// may additionally gate on [`active`] to skip computing `value`.
+#[inline]
+pub fn counter(name: &'static str, value: f64) {
+    if active() {
+        let now = Instant::now();
+        record_kind(EventKind::Counter, name, now, now, vec![("value", value)]);
+    }
+}
+
 /// Structural summary of a validated trace (what [`validate`] proves).
 #[derive(Debug, Default)]
 pub struct TraceSummary {
@@ -320,6 +363,11 @@ pub struct TraceSummary {
     pub dur_us_by_name: BTreeMap<String, f64>,
     /// `tid -> thread_name` metadata.
     pub track_names: BTreeMap<u64, String>,
+    /// Per-name `ph:"C"` counter sample count.
+    pub counters_by_name: BTreeMap<String, usize>,
+    /// Per-name last counter value seen (events arrive ts-sorted per
+    /// track, so for a single-emitter counter this is the final value).
+    pub counter_last: BTreeMap<String, f64>,
 }
 
 impl TraceSummary {
@@ -332,12 +380,19 @@ impl TraceSummary {
     pub fn count(&self, name: &str) -> usize {
         self.count_by_name.get(name).copied().unwrap_or(0)
     }
+
+    /// Number of counter samples named `name`.
+    pub fn counter_count(&self, name: &str) -> usize {
+        self.counters_by_name.get(name).copied().unwrap_or(0)
+    }
 }
 
 /// Validate a parsed trace-event array structurally: every event is an
 /// object with `name`/`ph`; `B`/`E` events balance per track (LIFO
-/// nesting); `X` events carry numeric `ts`/`dur >= 0`/`tid`, with `ts`
-/// monotone non-decreasing within each track. Returns a
+/// nesting); `X` events carry numeric `ts`/`dur >= 0`/`tid`; `C`
+/// events carry numeric `ts`/`tid` and a finite numeric `args.value`;
+/// `ts` is monotone non-decreasing within each track across `X` and
+/// `C` events alike. Returns a
 /// [`TraceSummary`] for content assertions; `Err` carries a
 /// human-readable reason. Shared by the trace tests and the
 /// `trace_check` example so the smoke target and the unit tests can
@@ -407,6 +462,32 @@ pub fn validate(trace: &Json) -> std::result::Result<TraceSummary, String> {
                 summary.spans += 1;
                 *summary.count_by_name.entry(name.clone()).or_insert(0) += 1;
                 *summary.dur_us_by_name.entry(name).or_insert(0.0) += dur;
+            }
+            "C" => {
+                let t = tid()?;
+                let ts = ev
+                    .get("ts")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| ctx("missing numeric 'ts'"))?;
+                if ts.is_nan() || ts < 0.0 {
+                    return Err(ctx(&format!("negative or NaN counter ts={ts}")));
+                }
+                let value = ev
+                    .get("args")
+                    .and_then(|a| a.get("value"))
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| ctx("counter missing numeric 'args.value'"))?;
+                if !value.is_finite() {
+                    return Err(ctx(&format!("counter value {value} is not finite")));
+                }
+                if let Some(&prev) = last_ts.get(&t) {
+                    if ts < prev {
+                        return Err(ctx(&format!("ts {ts} < {prev} on track {t}: not monotone")));
+                    }
+                }
+                last_ts.insert(t, ts);
+                *summary.counters_by_name.entry(name.clone()).or_insert(0) += 1;
+                summary.counter_last.insert(name, value);
             }
             other => return Err(ctx(&format!("unknown ph '{other}'"))),
         }
@@ -540,6 +621,51 @@ mod tests {
         let summary = validate(&second).unwrap();
         assert_eq!(summary.count("first-recording"), 0, "old events must not leak");
         assert_eq!(summary.count("second-recording"), 1);
+    }
+
+    #[test]
+    fn counters_render_as_ph_c_and_validate() {
+        let _g = test_lock();
+        start();
+        counter("test.depth", 3.0);
+        {
+            let _s = span("work");
+        }
+        counter("test.depth", 5.0);
+        let json = stop().expect("recording was live");
+        let text = json.to_string_compact();
+        assert!(text.contains("\"ph\":\"C\""), "no counter events rendered: {text}");
+        let parsed = Json::parse(&text).expect("trace must re-parse");
+        let summary = validate(&parsed).expect("counters must validate");
+        assert_eq!(summary.counter_count("test.depth"), 2);
+        assert_eq!(summary.counter_last.get("test.depth").copied(), Some(5.0));
+        assert_eq!(summary.count("work"), 1, "spans still counted alongside counters");
+        assert_eq!(summary.count("test.depth"), 0, "counters are not spans");
+    }
+
+    #[test]
+    fn counters_are_free_when_disabled() {
+        let _g = test_lock();
+        assert!(!active());
+        counter("ghost.depth", 1.0);
+        assert!(stop().is_none(), "no recording was armed");
+    }
+
+    #[test]
+    fn validate_rejects_malformed_counters() {
+        let missing = Json::parse(r#"[{"name":"d","ph":"C","ts":1,"tid":0,"pid":1}]"#).unwrap();
+        assert!(validate(&missing).is_err(), "counter without args.value must fail");
+        let backwards = Json::parse(
+            r#"[{"name":"a","ph":"X","ts":5,"dur":1,"tid":0,"pid":1},
+                {"name":"d","ph":"C","ts":2,"tid":0,"pid":1,"args":{"value":1}}]"#,
+        )
+        .unwrap();
+        assert!(validate(&backwards).is_err(), "counter breaking ts monotonicity must fail");
+        let ok = Json::parse(
+            r#"[{"name":"d","ph":"C","ts":1,"tid":0,"pid":1,"args":{"value":4}}]"#,
+        )
+        .unwrap();
+        assert!(validate(&ok).is_ok(), "well-formed counter must pass");
     }
 
     #[test]

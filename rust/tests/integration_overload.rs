@@ -1,0 +1,294 @@
+//! Integration: the overload-hardened TCP frontend under fault
+//! injection — pipelining, admission control, and failover, end to end.
+//!
+//! Three contracts, each proven against the in-process server as ground
+//! truth: (1) chaos — connections cut mid-frame and slow links must be
+//! invisible in the served bits (reconnects and failovers happen, the
+//! trajectory doesn't notice); (2) conservation — under a flood at many
+//! times capacity every request is either answered or shed with a typed
+//! Overloaded, admitted + shed == submitted on both ends of the wire;
+//! (3) compatibility — the unbounded lockstep configuration
+//! (`--shards 1 --pipeline 1 --max-queue 0`, or an explicit v1 client)
+//! reproduces the pre-overload server bit-for-bit.
+
+mod support;
+
+use std::time::{Duration, Instant};
+
+use paac::envs::{GameId, ObsMode, ACTIONS};
+use paac::serve::{
+    run_clients, run_remote_clients, Completion, PolicyServer, ReconnectingHandle, RemoteHandle,
+    ServeConfig, Session, SessionReport, SyntheticFactory, TcpFrontend,
+};
+
+use support::chaos_proxy::{ChaosProxy, Fault};
+
+fn pool_cfg(cfg: ServeConfig, seed: u64) -> PolicyServer {
+    let factory = SyntheticFactory::new(ObsMode::Grid.obs_len(), ACTIONS, seed);
+    PolicyServer::start_pool(&factory, cfg).expect("start shard pool")
+}
+
+/// Everything a trajectory depends on, bit-exact.
+fn fingerprints(reports: &[SessionReport]) -> Vec<(u64, u64, usize, u32, u32)> {
+    reports
+        .iter()
+        .map(|r| {
+            (r.session, r.queries, r.episodes, r.mean_return.to_bits(), r.mean_value.to_bits())
+        })
+        .collect()
+}
+
+#[test]
+fn mid_stream_cuts_reconnect_and_stay_bit_identical() {
+    // a proxy that kills every connection after 4 KiB: the client rides
+    // through repeated mid-frame cuts on reconnects alone (the address
+    // list is just the proxy), and every reply must stay bit-identical
+    // to the in-process answer — a retried query is indistinguishable
+    // from a first-time one because replies are pure functions of the
+    // observation
+    let obs_len = 8;
+    let factory = SyntheticFactory::new(obs_len, ACTIONS, 42);
+    let server =
+        PolicyServer::start_pool(&factory, ServeConfig::new(4, Duration::ZERO)).unwrap();
+    let frontend = TcpFrontend::bind("127.0.0.1:0", server.connector(), None).unwrap();
+    let proxy =
+        ChaosProxy::start(frontend.local_addr().to_string(), Fault::CutAfter(4096)).unwrap();
+    let mut h = ReconnectingHandle::connect(vec![proxy.addr().to_string()])
+        .unwrap()
+        .with_retry(8, Duration::from_millis(2));
+    let local = server.connect();
+    for i in 0..400usize {
+        let obs: Vec<f32> =
+            (0..obs_len).map(|j| 0.01 * i as f32 + 0.1 * j as f32).collect();
+        let want = local.query(&obs).unwrap();
+        let got = h.query(&obs).unwrap();
+        assert_eq!(got, want, "query {i} changed across a cut");
+        assert_eq!(got.value.to_bits(), want.value.to_bits());
+    }
+    assert!(
+        h.reconnects() >= 2,
+        "4 KiB cuts over ~400 queries must force reconnects, saw {}",
+        h.reconnects()
+    );
+    assert!(
+        proxy.connections() >= 3,
+        "proxy relayed only {} connections",
+        proxy.connections()
+    );
+    drop((h, local));
+    proxy.shutdown();
+    frontend.shutdown().unwrap();
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn chaos_failover_leaves_episodes_bit_identical() {
+    // primary server behind a cutting proxy, secondary reachable
+    // directly: the session's ReconnectingHandle must fail over when the
+    // cut lands and the full episode trajectory must match a one-client
+    // in-process run exactly — same session id, same returns, bit for bit
+    let queries = 200;
+    let base = ServeConfig::new(8, Duration::from_micros(300));
+    let want = {
+        let srv = pool_cfg(base, 33);
+        let reports =
+            run_clients(&srv, GameId::Catch, ObsMode::Grid, 13, 10, 1, queries).unwrap();
+        srv.shutdown().unwrap();
+        fingerprints(&reports)
+    };
+    let s1 = pool_cfg(base, 33);
+    let f1 = TcpFrontend::bind("127.0.0.1:0", s1.connector(), None).unwrap();
+    let proxy =
+        ChaosProxy::start(f1.local_addr().to_string(), Fault::CutAfter(2048)).unwrap();
+    let s2 = pool_cfg(base, 33);
+    let f2 = TcpFrontend::bind("127.0.0.1:0", s2.connector(), None).unwrap();
+    let handle = ReconnectingHandle::connect(vec![
+        proxy.addr().to_string(),
+        f2.local_addr().to_string(),
+    ])
+    .unwrap()
+    .with_retry(8, Duration::from_millis(2));
+    let mut session = Session::new(handle, GameId::Catch, ObsMode::Grid, 13, 10);
+    let report = session.run(queries).unwrap();
+    assert_eq!(
+        fingerprints(&[report]),
+        want,
+        "chaos failover changed the episode trajectory"
+    );
+    assert!(proxy.connections() >= 1, "the client never went through the proxy");
+    proxy.shutdown();
+    f1.shutdown().unwrap();
+    s1.shutdown().unwrap();
+    f2.shutdown().unwrap();
+    s2.shutdown().unwrap();
+}
+
+#[test]
+fn a_slow_network_changes_nothing_but_latency() {
+    // a 1 ms-per-chunk delay proxy in front of the frontend: remote
+    // sessions through it must match in-process sessions bit for bit
+    let clients = 3;
+    let queries = 40;
+    let base = ServeConfig::new(8, Duration::from_micros(300));
+    let want = {
+        let srv = pool_cfg(base, 33);
+        let reports =
+            run_clients(&srv, GameId::Catch, ObsMode::Grid, 13, 10, clients, queries).unwrap();
+        srv.shutdown().unwrap();
+        fingerprints(&reports)
+    };
+    let srv = pool_cfg(base, 33);
+    let frontend = TcpFrontend::bind("127.0.0.1:0", srv.connector(), None).unwrap();
+    let proxy = ChaosProxy::start(
+        frontend.local_addr().to_string(),
+        Fault::Delay(Duration::from_millis(1)),
+    )
+    .unwrap();
+    let reports = run_remote_clients(
+        &proxy.addr().to_string(),
+        GameId::Catch,
+        ObsMode::Grid,
+        13,
+        10,
+        clients,
+        queries,
+    )
+    .unwrap();
+    assert_eq!(fingerprints(&reports), want, "a slow link changed served trajectories");
+    assert_eq!(proxy.connections(), clients as u64);
+    proxy.shutdown();
+    frontend.shutdown().unwrap();
+    srv.shutdown().unwrap();
+}
+
+#[test]
+fn flooded_bounded_server_sheds_and_conserves_every_request() {
+    // a pipelined flood at many times capacity against a bounded queue:
+    // the server must answer with per-id Overloaded frames — promptly,
+    // not by stalling — and the books must balance exactly on both ends:
+    // admitted + shed == submitted, with zero panics and zero hangs
+    let obs_len = 8;
+    let factory = SyntheticFactory::new(obs_len, ACTIONS, 7)
+        .with_cost(Duration::from_millis(1), Duration::ZERO);
+    let cfg = ServeConfig::new(4, Duration::from_micros(200)).with_max_queue(8);
+    let server = PolicyServer::start_pool(&factory, cfg).unwrap();
+    let frontend = TcpFrontend::bind_with("127.0.0.1:0", server.connector(), None, 64).unwrap();
+    let addr = frontend.local_addr().to_string();
+    let clients = 3usize;
+    let per_client = 300usize;
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..clients)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || -> (u64, u64) {
+                let mut h = RemoteHandle::connect(&addr).unwrap();
+                let (mut ok, mut shed) = (0u64, 0u64);
+                let mut inflight = 0usize;
+                for i in 0..per_client {
+                    let obs: Vec<f32> = (0..obs_len)
+                        .map(|j| c as f32 + 0.001 * i as f32 + 0.1 * j as f32)
+                        .collect();
+                    h.submit(&obs).unwrap();
+                    inflight += 1;
+                    // drain opportunistically so socket buffers stay shallow
+                    if inflight >= 32 {
+                        match h.recv().unwrap() {
+                            Completion::Reply(..) => ok += 1,
+                            Completion::Shed(..) => shed += 1,
+                        }
+                        inflight -= 1;
+                    }
+                }
+                for _ in 0..inflight {
+                    match h.recv().unwrap() {
+                        Completion::Reply(..) => ok += 1,
+                        Completion::Shed(..) => shed += 1,
+                    }
+                }
+                (ok, shed)
+            })
+        })
+        .collect();
+    let (mut ok_total, mut shed_total) = (0u64, 0u64);
+    for w in workers {
+        let (ok, shed) = w.join().expect("flood client panicked");
+        assert_eq!(ok + shed, per_client as u64, "a request vanished without a completion");
+        ok_total += ok;
+        shed_total += shed;
+    }
+    let wall = t0.elapsed();
+    frontend.shutdown().unwrap();
+    let snap = server.shutdown().unwrap();
+    let submitted = (clients * per_client) as u64;
+    assert_eq!(ok_total + shed_total, submitted);
+    assert!(shed_total > 0, "a flood at many times capacity must shed");
+    assert!(ok_total > 0, "overload must not starve everyone");
+    assert_eq!(snap.overload.admitted, ok_total, "server admissions != client replies");
+    assert_eq!(snap.overload.shed_total, shed_total, "server sheds != client sheds");
+    assert_eq!(snap.overload.admitted + snap.overload.shed_total, submitted);
+    assert_eq!(snap.queries, ok_total, "every admitted query is served exactly once");
+    assert!(wall < Duration::from_secs(60), "shedding must keep the flood bounded: {wall:?}");
+}
+
+#[test]
+fn lockstep_unbounded_config_reproduces_the_prior_wire_behavior() {
+    // the compatibility gate: shards=1, pipeline=1, max_queue=0 must
+    // reproduce the pre-overload server bit-for-bit — in process, over a
+    // pipeline-1 v2 loopback, and over an explicit v1 loopback
+    let clients = 4;
+    let queries = 120;
+    let base = ServeConfig::new(8, Duration::from_micros(300));
+    let in_process = {
+        let srv = pool_cfg(base, 33);
+        let reports =
+            run_clients(&srv, GameId::Catch, ObsMode::Grid, 13, 10, clients, queries).unwrap();
+        srv.shutdown().unwrap();
+        fingerprints(&reports)
+    };
+    let over_pipeline_1 = {
+        let srv = pool_cfg(base, 33);
+        let frontend =
+            TcpFrontend::bind_with("127.0.0.1:0", srv.connector(), None, 1).unwrap();
+        let addr = frontend.local_addr().to_string();
+        let reports =
+            run_remote_clients(&addr, GameId::Catch, ObsMode::Grid, 13, 10, clients, queries)
+                .unwrap();
+        frontend.shutdown().unwrap();
+        let snap = srv.shutdown().unwrap();
+        assert_eq!(snap.overload.shed_total, 0, "lockstep clients never trip a window of 1");
+        // exactly one frame each way per query, plus the handshake
+        assert_eq!(snap.transport.frames_rx, (clients * (queries + 1)) as u64);
+        assert_eq!(snap.transport.frames_tx, (clients * (queries + 1)) as u64);
+        fingerprints(&reports)
+    };
+    let over_v1 = {
+        let srv = pool_cfg(base, 33);
+        let frontend = TcpFrontend::bind("127.0.0.1:0", srv.connector(), None).unwrap();
+        let addr = frontend.local_addr().to_string();
+        // connect v1 handles sequentially (session ids in client order),
+        // then run the sessions concurrently — run_remote_clients' shape
+        let mut handles = Vec::new();
+        for _ in 0..clients {
+            let h = RemoteHandle::connect_versioned(&addr, 1).unwrap();
+            assert_eq!(h.version(), 1);
+            handles.push(h);
+        }
+        let threads: Vec<_> = handles
+            .into_iter()
+            .map(|handle| {
+                let mut session = Session::new(handle, GameId::Catch, ObsMode::Grid, 13, 10);
+                std::thread::spawn(move || session.run(queries))
+            })
+            .collect();
+        let reports: Vec<SessionReport> =
+            threads.into_iter().map(|t| t.join().unwrap().unwrap()).collect();
+        frontend.shutdown().unwrap();
+        let snap = srv.shutdown().unwrap();
+        assert_eq!(snap.transport.frames_rx, (clients * (queries + 1)) as u64);
+        assert_eq!(snap.transport.frames_tx, (clients * (queries + 1)) as u64);
+        assert_eq!(snap.overload.shed_total, 0);
+        fingerprints(&reports)
+    };
+    assert_eq!(over_pipeline_1, in_process, "pipeline=1 v2 changed trajectories");
+    assert_eq!(over_v1, in_process, "the v1 wire changed trajectories");
+}

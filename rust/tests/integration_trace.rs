@@ -14,6 +14,7 @@ use paac::algo::nstep_q::host_nstep_q;
 use paac::config::{Algo, Config};
 use paac::coordinator::master::Trainer;
 use paac::envs::{GameId, ObsMode, ACTIONS};
+use paac::error::Error;
 use paac::serve::{run_clients, PolicyServer, ServeConfig, SyntheticFactory};
 use paac::trace;
 use paac::util::json::Json;
@@ -72,6 +73,50 @@ fn serve_trace_spans_match_queue_wait_stats() {
          (tolerance {tol:.6}s)"
     );
     assert_eq!(summary.count("serve.queue_wait"), snap.queue_wait.count as usize);
+}
+
+#[test]
+fn overload_counters_land_in_the_trace() {
+    let _g = trace_guard();
+
+    // width-1 backend wedged in a 400 ms forward plus a 1-deep bounded
+    // queue: with one query on-device and one admitted behind it, a
+    // third concurrent query is deterministically shed — and the queue
+    // hot path must have emitted ph:"C" counter samples for both the
+    // depth and the shed total, which validate() checks structurally
+    let obs_len = ObsMode::Grid.obs_len();
+    let factory = SyntheticFactory::new(obs_len, ACTIONS, 5)
+        .with_cost(Duration::from_millis(400), Duration::ZERO);
+    let cfg = ServeConfig::new(1, Duration::ZERO).with_max_queue(1);
+    let server = PolicyServer::start_pool(&factory, cfg).expect("start bounded server");
+
+    trace::start();
+    let spawn_query = |v: f32| {
+        let handle = server.connect();
+        let obs = vec![v; obs_len];
+        std::thread::spawn(move || handle.query(&obs))
+    };
+    let t1 = spawn_query(0.1);
+    std::thread::sleep(Duration::from_millis(100)); // t1 claimed: on-device
+    let t2 = spawn_query(0.2);
+    std::thread::sleep(Duration::from_millis(100)); // t2 admitted: queue is full
+    let obs3 = vec![0.3f32; obs_len];
+    let shed = server.connect().query(&obs3);
+    assert!(matches!(shed, Err(Error::Overloaded(_))), "expected a shed, got {shed:?}");
+    t1.join().expect("t1 thread").expect("t1 reply");
+    t2.join().expect("t2 thread").expect("t2 reply");
+    let snap = server.shutdown().expect("shutdown");
+    let recorded = trace::stop().expect("recording was live");
+    let summary = trace::validate(&recorded).expect("counter events must validate");
+
+    assert_eq!(snap.overload.shed_total, 1);
+    assert_eq!(snap.overload.admitted + snap.overload.shed_total, 3);
+    assert!(
+        summary.counter_count("serve.queue_depth") >= 2,
+        "admits and drains must both sample serve.queue_depth"
+    );
+    assert_eq!(summary.counter_count("serve.shed_total"), 1);
+    assert_eq!(summary.counter_last.get("serve.shed_total").copied(), Some(1.0));
 }
 
 #[test]

@@ -1,0 +1,179 @@
+//! A deterministic TCP fault-injection proxy for the overload/failover
+//! integration suite.
+//!
+//! The proxy sits between a client and a real `TcpFrontend`, relays
+//! bytes in both directions, and injects one configured [`Fault`] per
+//! connection: mid-stream byte truncation (the relay force-closes both
+//! sides partway through a frame — the "server died under me" case a
+//! reconnecting client must survive) or a per-chunk delay (a slow
+//! network that must change latency and nothing else). Faults are
+//! byte-counted, not timer-driven, so runs are reproducible.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How often the accept loop re-checks the stop flag while idle.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+
+/// The fault a [`ChaosProxy`] injects into every connection it relays.
+#[derive(Clone, Copy, Debug)]
+pub enum Fault {
+    /// Relay this many bytes (counted across both directions), then
+    /// force-close both sides of the connection. For any realistic
+    /// traffic the cut lands mid-frame, which is the point: the client
+    /// sees a truncated read, never a tidy goodbye.
+    CutAfter(u64),
+    /// Sleep this long before forwarding each chunk, both directions:
+    /// pure latency, zero corruption.
+    Delay(Duration),
+}
+
+/// The fault-injection proxy: a loopback listener relaying every
+/// accepted connection to one upstream address under a [`Fault`].
+pub struct ChaosProxy {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accepted: Arc<AtomicU64>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ChaosProxy {
+    /// Listen on an ephemeral loopback port (read it back via
+    /// [`ChaosProxy::addr`]) and relay every accepted connection to
+    /// `upstream` with `fault` applied.
+    pub fn start(upstream: String, fault: Fault) -> std::io::Result<ChaosProxy> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accepted = Arc::new(AtomicU64::new(0));
+        let accept = {
+            let stop = stop.clone();
+            let accepted = accepted.clone();
+            std::thread::Builder::new()
+                .name("chaos-proxy-accept".into())
+                .spawn(move || accept_loop(listener, upstream, fault, stop, accepted))?
+        };
+        Ok(ChaosProxy { addr, stop, accepted, accept: Some(accept) })
+    }
+
+    /// The address clients should connect to.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Connections relayed so far — i.e. how many times a client
+    /// (re)connected through the proxy and the fault got to act.
+    pub fn connections(&self) -> u64 {
+        self.accepted.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting and force-close every live relay.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    upstream: String,
+    fault: Fault,
+    stop: Arc<AtomicBool>,
+    accepted: Arc<AtomicU64>,
+) {
+    // raw socket clones per relay, so shutdown can force-close them all
+    let mut relays: Vec<(TcpStream, TcpStream)> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((client, _peer)) => {
+                // the listener is nonblocking and accepted sockets can
+                // inherit that on some platforms; the pumps need blocking
+                if client.set_nonblocking(false).is_err() {
+                    continue;
+                }
+                let server = match TcpStream::connect(&upstream) {
+                    Ok(s) => s,
+                    Err(_) => continue, // upstream gone: refuse the client
+                };
+                let clones = (
+                    client.try_clone(),
+                    server.try_clone(),
+                    client.try_clone(),
+                    server.try_clone(),
+                );
+                let (Ok(c2), Ok(s2), Ok(ck), Ok(sk)) = clones else {
+                    continue;
+                };
+                accepted.fetch_add(1, Ordering::SeqCst);
+                // one budget per connection, shared by both directions
+                let moved = Arc::new(AtomicU64::new(0));
+                {
+                    let moved = moved.clone();
+                    std::thread::spawn(move || pump(client, s2, fault, moved));
+                }
+                std::thread::spawn(move || pump(server, c2, fault, moved));
+                relays.push((ck, sk));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+    for (c, s) in &relays {
+        let _ = c.shutdown(Shutdown::Both);
+        let _ = s.shutdown(Shutdown::Both);
+    }
+    // the pump threads exit on their own once their sockets are closed
+}
+
+/// Relay one direction until EOF, error, or the fault fires. A cut (or
+/// a one-directional EOF) kills the whole relay: real network failures
+/// rarely fail half-duplex, and the tests want a clean, observable cut.
+fn pump(mut from: TcpStream, mut to: TcpStream, fault: Fault, moved: Arc<AtomicU64>) {
+    let mut buf = [0u8; 4096];
+    loop {
+        let n = match from.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => n,
+        };
+        let mut take = n;
+        match fault {
+            Fault::Delay(d) => {
+                if !d.is_zero() {
+                    std::thread::sleep(d);
+                }
+            }
+            Fault::CutAfter(limit) => {
+                let before = moved.fetch_add(n as u64, Ordering::SeqCst);
+                if before >= limit {
+                    break; // budget already spent: cut without forwarding
+                }
+                // forward exactly up to the budget — a genuine mid-frame
+                // truncation, not a polite frame-boundary close
+                take = ((limit - before) as usize).min(n);
+            }
+        }
+        if to.write_all(&buf[..take]).is_err() || take < n {
+            break;
+        }
+    }
+    let _ = from.shutdown(Shutdown::Both);
+    let _ = to.shutdown(Shutdown::Both);
+}

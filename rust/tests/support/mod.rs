@@ -1,0 +1,4 @@
+//! Shared helpers for the integration suite. Each test binary that
+//! needs one declares `mod support;` and pulls what it uses.
+
+pub mod chaos_proxy;
