@@ -45,14 +45,14 @@ fn main() -> Result<()> {
     let queries = args.usize_of("queries")?.max(1);
     let batch = args.usize_of("batch")?.max(1);
     let seed = args.u64_of("seed")?;
-    let cfg = ServeConfig::new(
-        batch,
-        Duration::from_secs_f64(args.f64_of("deadline-us")?.max(0.0) / 1e6),
-    )
-    .with_shards(args.usize_of("shards")?)
-    .with_small_batch(args.usize_of("small-batch")?)
-    .with_cache(args.usize_of("cache")?)
-    .with_no_dedup(args.has("no-dedup"));
+    let cfg = ServeConfig::builder()
+        .max_batch(batch)
+        .max_delay(Duration::from_secs_f64(args.f64_of("deadline-us")?.max(0.0) / 1e6))
+        .shards(args.usize_of("shards")?)
+        .small_batch(args.usize_of("small-batch")?)
+        .cache(args.usize_of("cache")?)
+        .no_dedup(args.has("no-dedup"))
+        .build()?;
 
     println!("== PAAC serve: train -> checkpoint -> serve ==");
 

@@ -198,7 +198,12 @@ fn run_overload(multiple: f64, seconds: f64) -> (f64, f64, f64, f64) {
     let obs_len = ObsMode::Grid.obs_len();
     let factory =
         SyntheticFactory::new(obs_len, ACTIONS, 7).with_cost(OVERLOAD_DISPATCH, Duration::ZERO);
-    let cfg = ServeConfig::new(OVERLOAD_WIDTH, Duration::from_micros(200)).with_max_queue(16);
+    let cfg = ServeConfig::builder()
+        .max_batch(OVERLOAD_WIDTH)
+        .max_delay(Duration::from_micros(200))
+        .max_queue(16)
+        .build()
+        .unwrap();
     let server = PolicyServer::start_pool(&factory, cfg).expect("start bounded server");
     let frontend = TcpFrontend::bind_with("127.0.0.1:0", server.connector(), None, 64)
         .expect("bind overload loopback");
@@ -319,9 +324,13 @@ fn main() {
 
     let shards = 4;
     let small = 4;
-    let sharded_cfg = ServeConfig::new(width, deadline)
-        .with_shards(shards)
-        .with_small_batch(small);
+    let sharded_cfg = ServeConfig::builder()
+        .max_batch(width)
+        .max_delay(deadline)
+        .shards(shards)
+        .small_batch(small)
+        .build()
+        .unwrap();
     let sharded_col = format!("shards={shards} q/s");
     let mut shard_table = Table::new(&[
         "clients",
@@ -442,7 +451,7 @@ fn main() {
 
     let dup_clients = 8usize;
     let dup_pool = 32usize;
-    let dup_cfg = ServeConfig::new(width, deadline);
+    let dup_cfg = ServeConfig::builder().max_batch(width).max_delay(deadline);
     let mut dup_table = Table::new(&[
         "config",
         "q/s",
@@ -453,10 +462,11 @@ fn main() {
         "speedup",
     ]);
     let (base_qps, base_snap) =
-        run_dup_load(dup_clients, queries, dup_pool, dup_cfg.with_no_dedup(true));
-    let (dedup_qps, dedup_snap) = run_dup_load(dup_clients, queries, dup_pool, dup_cfg);
+        run_dup_load(dup_clients, queries, dup_pool, dup_cfg.no_dedup(true).build().unwrap());
+    let (dedup_qps, dedup_snap) =
+        run_dup_load(dup_clients, queries, dup_pool, dup_cfg.build().unwrap());
     let (cached_qps, cached_snap) =
-        run_dup_load(dup_clients, queries, dup_pool, dup_cfg.with_cache(1024));
+        run_dup_load(dup_clients, queries, dup_pool, dup_cfg.cache(1024).build().unwrap());
     dup_row(&mut dup_table, "baseline (--cache 0 --no-dedup)", base_qps, &base_snap, base_qps);
     dup_row(&mut dup_table, "dedup only", dedup_qps, &dedup_snap, base_qps);
     dup_row(&mut dup_table, "dedup + cache 1024", cached_qps, &cached_snap, base_qps);

@@ -36,7 +36,12 @@ const CLIENTS: usize = 8;
 fn run_load(queries_per_client: usize) -> f64 {
     let obs_len = ObsMode::Grid.obs_len();
     let factory = SyntheticFactory::new(obs_len, ACTIONS, 7).with_cost(DISPATCH, PER_ROW);
-    let cfg = ServeConfig::new(32, Duration::from_micros(500)).with_shards(2);
+    let cfg = ServeConfig::builder()
+        .max_batch(32)
+        .max_delay(Duration::from_micros(500))
+        .shards(2)
+        .build()
+        .unwrap();
     let server = PolicyServer::start_pool(&factory, cfg).expect("start shard pool");
     let t0 = Instant::now();
     run_clients(&server, GameId::Catch, ObsMode::Grid, 11, 10, CLIENTS, queries_per_client)

@@ -241,7 +241,9 @@ impl Trainer {
         }
         let wall = t0.elapsed().as_secs_f64();
 
-        // final checkpoint
+        // final checkpoint: container first (atomic tmp + rename), then
+        // the .ready marker — the commit point a watching `paac serve
+        // --watch` hot-reloads on
         if with_logging {
             let ckpt_path = cfg.out_dir.join(&cfg.run_name).join("final.ckpt");
             let mut ckpt = Checkpoint::new(cfg.arch.clone(), timestep);
@@ -254,6 +256,10 @@ impl Trainer {
                 );
             }
             ckpt.save(&ckpt_path)?;
+            crate::metrics::write_ready_marker(&ckpt_path, timestep)?;
+            if let Some(l) = logger.as_mut() {
+                l.log_checkpoint_ready(timestep, &ckpt_path)?;
+            }
         }
 
         // evaluation under the Table-1 protocol
@@ -415,7 +421,8 @@ impl Trainer {
         }
         let wall = t0.elapsed().as_secs_f64();
 
-        // final checkpoint (same container + location as PAAC's)
+        // final checkpoint (same container + location as PAAC's), with
+        // the same publish rhythm: container, then the .ready marker
         if with_logging {
             let ckpt_path = cfg.out_dir.join(&cfg.run_name).join("final.ckpt");
             let mut ckpt = Checkpoint::new(q.backend.ckpt_arch(), timestep);
@@ -423,6 +430,10 @@ impl Trainer {
                 ckpt.push(name, dims, data);
             }
             ckpt.save(&ckpt_path)?;
+            crate::metrics::write_ready_marker(&ckpt_path, timestep)?;
+            if let Some(l) = logger.as_mut() {
+                l.log_checkpoint_ready(timestep, &ckpt_path)?;
+            }
         }
 
         // evaluation under the Table-1 protocol (near-greedy actors)

@@ -14,7 +14,10 @@
 //!              [--cache 0] [--no-dedup]                 (redundancy eliminator)
 //!              [--max-queue 0] [--pipeline 32]          (admission control)
 //!              [--listen 127.0.0.1:4700] [--conns 0]    (TCP transport frontend)
+//!              [--watch runs/<name>]                     (hot checkpoint reload)
 //!              [--trace trace.json]                      (Perfetto span recording)
+//! paac ctl     reload --connect HOST:PORT --ckpt FILE   (push a checkpoint swap)
+//!              info   --connect HOST:PORT               (live params_version)
 //! paac client  --connect HOST:PORT[,HOST:PORT...] [--clients 8] [--queries 200]
 //!              [--game catch] [--atari] [--trace t.json] (remote synthetic clients)
 //!              [--flood]                                 (pipelined overload probe)
@@ -34,9 +37,11 @@ use paac::model::PolicyModel;
 use paac::runtime::checkpoint::Checkpoint;
 use paac::runtime::Runtime;
 use paac::serve::{
-    run_remote_clients, Completion, LinearQFactory, ModelBackendFactory, PolicyServer,
-    RemoteHandle, ServeConfig, StatsSnapshot, SyntheticFactory, TcpFrontend,
+    run_remote_clients, CheckpointWatcher, Completion, LinearQFactory, ModelBackendFactory,
+    PolicyServer, QueryTransport, ReloadEvent, RemoteHandle, ServeConfig, StatsSnapshot,
+    SyntheticFactory, TcpFrontend,
 };
+use paac::util::json::{obj, Json};
 
 fn cli() -> Cli {
     Cli::new("paac", "Parallel Advantage Actor-Critic (Clemente et al. 2017)")
@@ -45,6 +50,7 @@ fn cli() -> Cli {
         .subcommand("sweep", "n_e sweep for the Figure 3/4 analysis")
         .subcommand("inspect", "print the artifact manifest summary")
         .subcommand("serve", "serve a policy to concurrent clients via the micro-batcher")
+        .subcommand("ctl", "control a running `paac serve --listen` (reload | info)")
         .subcommand("client", "run synthetic sessions against a remote `paac serve --listen`")
         .flag("config", None, "TOML run config (flags below override it)")
         .flag("game", None, "game id (catch|pong|breakout|...)")
@@ -72,6 +78,7 @@ fn cli() -> Cli {
         .flag("pipeline", Some("32"), "per-connection in-flight query window (serve)")
         .flag("listen", None, "serve over TCP on this address, e.g. 127.0.0.1:0 (serve)")
         .flag("conns", Some("0"), "with --listen: exit after N connections, 0=forever (serve)")
+        .flag("watch", None, "hot-reload checkpoints published under this run dir (serve)")
         .flag("connect", None, "server address(es), comma-separated failover list (client)")
         .switch("flood", "pipelined flood: count replies vs sheds instead of sessions (client)")
         .flag("replay-cap", None, "replay capacity in transitions (nstep-q)")
@@ -361,12 +368,27 @@ fn write_trace_file(args: &paac::cli::Args, quiet: bool) -> Result<()> {
 }
 
 /// Write the final snapshot to `runs/<run-name>/serve.jsonl` when
-/// `--run-name` was given (shared by the load-gen and `--listen` modes).
-fn write_serve_record(args: &paac::cli::Args, snap: &StatsSnapshot, quiet: bool) -> Result<()> {
+/// `--run-name` was given (shared by the load-gen and `--listen` modes),
+/// followed by one `serve_reload` record per completed hot reload —
+/// the audit trail the CI reload smoke greps for.
+fn write_serve_record(
+    args: &paac::cli::Args,
+    snap: &StatsSnapshot,
+    reloads: &[ReloadEvent],
+    quiet: bool,
+) -> Result<()> {
     if let Some(run_name) = args.get("run-name") {
         let dir = std::path::Path::new("runs").join(run_name);
         let mut sink = JsonlWriter::create(&dir.join("serve.jsonl"))?;
         snap.log_to(&mut sink)?;
+        for e in reloads {
+            sink.record(&obj(vec![
+                ("type", Json::Str("serve_reload".into())),
+                ("params_version", Json::Num(e.version as f64)),
+                ("timestep", Json::Num(e.timestep as f64)),
+                ("evicted_entries", Json::Num(e.evicted as f64)),
+            ]))?;
+        }
         if !quiet {
             println!("stats written to {}", dir.join("serve.jsonl").display());
         }
@@ -397,13 +419,19 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
     let deadline = Duration::from_secs_f64(args.f64_of("deadline-us")?.max(0.0) / 1e6);
     let seed = args.get("seed").map(|_| args.u64_of("seed")).transpose()?.unwrap_or(1);
     let quiet = args.has("quiet");
-    let cfg = ServeConfig::new(batch, deadline)
-        .with_shards(args.usize_of("shards")?)
-        .with_small_batch(args.usize_of("small-batch")?)
-        .with_cache(args.usize_of("cache")?)
-        .with_no_dedup(args.has("no-dedup"))
-        .with_max_queue(args.usize_of("max-queue")?)
-        .with_trace(args.get("trace").is_some());
+    let cfg = ServeConfig::builder()
+        .max_batch(batch)
+        .max_delay(deadline)
+        .shards(args.usize_of("shards")?)
+        .small_batch(args.usize_of("small-batch")?)
+        .cache(args.usize_of("cache")?)
+        .no_dedup(args.has("no-dedup"))
+        .max_queue(args.usize_of("max-queue")?)
+        .trace(args.get("trace").is_some())
+        .build()?;
+    // --watch (and `paac ctl reload`) need the hot-reloadable pool; the
+    // cold pool stays the default so the plain serve path is untouched
+    let hot = args.get("watch").is_some();
 
     // host linear-Q checkpoints serve without artifacts; load once and
     // dispatch on the arch tag
@@ -430,7 +458,11 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
                     factory.timestep
                 );
             }
-            PolicyServer::start_pool(&factory, cfg)?
+            if hot {
+                PolicyServer::start_pool_hot(factory, cfg)?
+            } else {
+                PolicyServer::start_pool(&factory, cfg)?
+            }
         }
         (Some(ckpt_path), Some(ckpt)) if paac::runtime::pjrt_available() => {
             let artifacts = args.str_of("artifacts")?;
@@ -446,7 +478,11 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
                     factory.arch()
                 );
             }
-            PolicyServer::start_pool(&factory, cfg)?
+            if hot {
+                PolicyServer::start_pool_hot(factory, cfg)?
+            } else {
+                PolicyServer::start_pool(&factory, cfg)?
+            }
         }
         (maybe_ckpt, _) => {
             if !quiet {
@@ -459,8 +495,27 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
                 }
             }
             let factory = SyntheticFactory::new(obs_len, paac::envs::ACTIONS, seed);
-            PolicyServer::start_pool(&factory, cfg)?
+            if hot {
+                PolicyServer::start_pool_hot(factory, cfg)?
+            } else {
+                PolicyServer::start_pool(&factory, cfg)?
+            }
         }
+    };
+
+    // the filesystem side of the control plane: poll the run directory's
+    // `.ready` marker and swap freshly published checkpoints in live
+    let watcher = match args.get("watch") {
+        Some(dir) => {
+            let handle = server
+                .reload_handle()
+                .ok_or_else(|| Error::serve("--watch needs a hot-reloadable server"))?;
+            if !quiet {
+                println!("serve: watching {dir} for published checkpoints");
+            }
+            Some(CheckpointWatcher::spawn(dir, handle, quiet))
+        }
+        None => None,
     };
 
     if !quiet {
@@ -510,9 +565,14 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
             );
         }
         frontend.join()?;
+        let reload_events = server.reload_events();
+        drop(watcher);
         let snap = server.shutdown()?;
         println!("{}", snap.summary());
         println!("{}", snap.transport.summary());
+        if snap.reload.count > 0 {
+            println!("{}", snap.reload.summary());
+        }
         if snap.overload.shed_total > 0 {
             // the CI overload smoke greps this line for shed evidence
             println!("{}", snap.overload.summary());
@@ -526,7 +586,7 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
             println!("{shard_lines}");
         }
         write_trace_file(args, quiet)?;
-        return write_serve_record(args, &snap, quiet);
+        return write_serve_record(args, &snap, &reload_events, quiet);
     }
 
     if !quiet {
@@ -535,6 +595,8 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
     let t0 = Instant::now();
     let reports = paac::serve::run_clients(&server, game, mode, seed, 30, clients, queries)?;
     let wall = t0.elapsed().as_secs_f64();
+    let reload_events = server.reload_events();
+    drop(watcher);
     let snap = server.shutdown()?;
 
     let total_queries: u64 = reports.iter().map(|r| r.queries).sum();
@@ -545,6 +607,9 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
         total_queries as f64 / wall.max(1e-9)
     );
     println!("{}", snap.summary());
+    if snap.reload.count > 0 {
+        println!("{}", snap.reload.summary());
+    }
     if snap.overload.shed_total > 0 {
         println!("{}", snap.overload.summary());
     }
@@ -558,18 +623,20 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
     }
     println!("clients finished {episodes} episodes");
     write_trace_file(args, quiet)?;
-    write_serve_record(args, &snap, quiet)
+    write_serve_record(args, &snap, &reload_events, quiet)
 }
 
 /// One `--flood` worker: pipeline `queries` distinct observations at the
 /// server as fast as the window allows and tally replies vs sheds. The
 /// per-request accounting is the client half of the conservation
-/// invariant the overload tests pin: ok + shed == submitted.
-fn flood_worker(addr: &str, queries: usize, idx: u64) -> Result<(u64, u64)> {
+/// invariant the overload tests pin: ok + shed == submitted. Generic
+/// over [`QueryTransport`] — submit/recv are part of the trait since
+/// PR 8, so the same driver floods an in-process handle, a raw socket
+/// or a failover list.
+fn flood_worker<T: QueryTransport>(mut handle: T, queries: usize, idx: u64) -> Result<(u64, u64)> {
     // deeper than the server's default per-connection window, so a
     // flooding client actually overruns admission control
     const WINDOW: usize = 64;
-    let mut handle = RemoteHandle::connect(addr)?;
     let obs_len = handle.obs_len();
     let (mut ok, mut shed) = (0u64, 0u64);
     let mut submitted = 0usize;
@@ -591,6 +658,46 @@ fn flood_worker(addr: &str, queries: usize, idx: u64) -> Result<(u64, u64)> {
         inflight -= 1;
     }
     Ok((ok, shed))
+}
+
+/// The serve control plane's CLI: push a checkpoint into a running
+/// `paac serve --listen` (`paac ctl reload --connect HOST:PORT --ckpt
+/// FILE`) or read its live state (`paac ctl info --connect HOST:PORT`).
+/// Control frames ride the data-plane connection (protocol v3), so a
+/// reload lands without interrupting in-flight queries.
+fn cmd_ctl(args: &paac::cli::Args) -> Result<()> {
+    let addr = args.str_of("connect")?;
+    let verb = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| Error::Cli("ctl needs a verb: reload | info".into()))?;
+    let mut handle = RemoteHandle::connect(&addr)?;
+    match verb {
+        "reload" => {
+            let ckpt_path = args.str_of("ckpt")?;
+            let ckpt = Checkpoint::load(std::path::Path::new(&ckpt_path))?;
+            let step = ckpt.timestep;
+            let info = handle.reload_checkpoint(ckpt.to_bytes())?;
+            println!(
+                "reloaded {ckpt_path} (step {step}): params_version {} \
+                 ({} reload(s) total)",
+                info.params_version, info.reloads
+            );
+        }
+        "info" => {
+            let info = handle.server_info()?;
+            println!(
+                "params_version {} | {} reload(s) | checkpoint step {} | \
+                 obs_len {} | {} actions",
+                info.params_version, info.reloads, info.timestep, info.obs_len, info.actions
+            );
+        }
+        other => {
+            return Err(Error::Cli(format!("unknown ctl verb '{other}' (reload | info)")));
+        }
+    }
+    Ok(())
 }
 
 /// The network twin of the serve load generator: `--clients` concurrent
@@ -618,7 +725,9 @@ fn cmd_client(args: &paac::cli::Args) -> Result<()> {
         let workers: Vec<_> = (0..clients)
             .map(|i| {
                 let addr = addr.clone();
-                std::thread::spawn(move || flood_worker(&addr, queries, i as u64))
+                std::thread::spawn(move || {
+                    flood_worker(RemoteHandle::connect(&addr)?, queries, i as u64)
+                })
             })
             .collect();
         let (mut ok, mut shed) = (0u64, 0u64);
@@ -681,6 +790,7 @@ fn main() {
         Some("sweep") => cmd_sweep(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("serve") => cmd_serve(&args),
+        Some("ctl") => cmd_ctl(&args),
         Some("client") => cmd_client(&args),
         _ => {
             eprintln!("{}", cli().help());

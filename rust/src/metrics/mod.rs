@@ -4,6 +4,15 @@
 //! interval; the data behind Figures 3/4) and `runs/<name>/meta.json`
 //! (config + summary). The writers are plain files — no external deps —
 //! and flush on every record so partial runs remain analyzable.
+//!
+//! This module also owns the **`.ready` marker convention** coupling the
+//! trainer to a watching server ([`crate::serve::CheckpointWatcher`]):
+//! after a checkpoint lands (itself an atomic tmp-file + rename —
+//! [`Checkpoint::save`](crate::runtime::checkpoint::Checkpoint::save)),
+//! the trainer calls [`write_ready_marker`], which atomically publishes
+//! `<ckpt>.ready` carrying the checkpoint's timestep. A watcher that
+//! sees the marker change is therefore guaranteed a complete, CRC-valid
+//! checkpoint next to it — never a half-written one.
 
 use std::fs::File;
 use std::io::{BufWriter, Write};
@@ -12,6 +21,31 @@ use std::path::{Path, PathBuf};
 use crate::error::Result;
 use crate::replay::ReplayStats;
 use crate::util::json::{obj, Json};
+
+/// The `.ready` marker path for a checkpoint: `final.ckpt` →
+/// `final.ckpt.ready` (appended, so the checkpoint's own extension
+/// stays intact).
+pub fn ready_marker_path(ckpt: &Path) -> PathBuf {
+    let mut name = ckpt.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".ready");
+    ckpt.with_file_name(name)
+}
+
+/// Atomically publish the `.ready` marker for `ckpt`: write the
+/// checkpoint's training timestep to a tmp file, fsync, rename. Call
+/// this **after** the checkpoint itself is on disk — the marker is the
+/// watcher-visible commit point of the whole publish.
+pub fn write_ready_marker(ckpt: &Path, timestep: u64) -> Result<PathBuf> {
+    let marker = ready_marker_path(ckpt);
+    let tmp = marker.with_extension("ready.tmp");
+    {
+        let mut f = File::create(&tmp)?;
+        f.write_all(timestep.to_string().as_bytes())?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, &marker)?;
+    Ok(marker)
+}
 
 /// Columnar CSV writer with a fixed header.
 pub struct CsvWriter {
@@ -131,6 +165,18 @@ impl RunLogger {
         Ok(path)
     }
 
+    /// Book a published checkpoint — container written, `.ready` marker
+    /// committed — as a `"checkpoint"` event in `events.jsonl`, so a
+    /// run's publish history is auditable next to its metrics.
+    pub fn log_checkpoint_ready(&mut self, timestep: u64, ckpt: &Path) -> Result<()> {
+        self.jsonl.record(&obj(vec![
+            ("type", Json::Str("checkpoint".into())),
+            ("timestep", Json::Num(timestep as f64)),
+            ("path", Json::Str(ckpt.display().to_string())),
+            ("ready_marker", Json::Str(ready_marker_path(ckpt).display().to_string())),
+        ]))
+    }
+
     /// Replay-store counters (occupancy, throughput, sample age) plus the
     /// current exploration rate — one `"replay"` record in `events.jsonl`
     /// per log interval of an off-policy run.
@@ -228,6 +274,46 @@ mod tests {
         assert_eq!(path.file_name().unwrap(), "trace.json");
         let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(back.as_arr().map(|a| a.len()), Some(1));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn ready_marker_appends_to_the_checkpoint_name() {
+        let p = ready_marker_path(Path::new("runs/myrun/final.ckpt"));
+        assert_eq!(p, Path::new("runs/myrun/final.ckpt.ready"));
+    }
+
+    #[test]
+    fn ready_marker_publishes_atomically_and_carries_the_timestep() {
+        let dir = tmpdir("marker");
+        let ckpt = dir.join("final.ckpt");
+        std::fs::write(&ckpt, b"fake-ckpt").unwrap();
+        let marker = write_ready_marker(&ckpt, 4096).unwrap();
+        assert_eq!(marker, dir.join("final.ckpt.ready"));
+        assert_eq!(std::fs::read_to_string(&marker).unwrap(), "4096");
+        // no tmp file left behind: the rename committed the publish
+        assert!(!dir.join("final.ckpt.ready.tmp").exists());
+        // re-publishing overwrites in place (a retrained run)
+        write_ready_marker(&ckpt, 8192).unwrap();
+        assert_eq!(std::fs::read_to_string(&marker).unwrap(), "8192");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn checkpoint_ready_event_lands_in_events_jsonl() {
+        let dir = tmpdir("ckpt-event");
+        let mut rl = RunLogger::create(&dir, "pub").unwrap();
+        rl.log_checkpoint_ready(500, &dir.join("pub/final.ckpt")).unwrap();
+        let text = std::fs::read_to_string(dir.join("pub/events.jsonl")).unwrap();
+        let rec = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(rec.get("type").unwrap().as_str(), Some("checkpoint"));
+        assert_eq!(rec.get("timestep").unwrap().as_usize(), Some(500));
+        assert!(rec
+            .get("ready_marker")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .ends_with("final.ckpt.ready"));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

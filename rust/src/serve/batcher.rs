@@ -36,6 +36,15 @@
 //! [`ModelBackendFactory`] builds checkpoint-restored [`ModelBackend`]s,
 //! snapping each requested width to the nearest compiled forward
 //! artifact.
+//!
+//! Hot reload rides the same ownership: a factory that supports it
+//! rebinds to a new checkpoint via [`BackendFactory::with_checkpoint`],
+//! the control plane builds one replacement backend per shard and
+//! stages each into that shard's [`SwapSlot`](super::reload::SwapSlot),
+//! and the batcher installs it inside [`Batcher::step`] between the
+//! window claim and the device call — a **batch boundary**, so an
+//! in-flight device call always completes on the parameters it started
+//! with and no window ever mixes versions.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -49,6 +58,7 @@ use crate::util::math::softmax_inplace;
 use crate::util::rng::Pcg32;
 
 use super::queue::{Reply, Request, ShardClass, SubmissionQueue};
+use super::reload::SwapSlot;
 use super::stats::ServeStats;
 
 /// A policy-evaluation backend serving fixed-width batched queries.
@@ -265,6 +275,22 @@ pub trait BackendFactory {
     /// actually evaluate (e.g. the available compiled artifact widths);
     /// the batcher re-reads the real width off the built instance.
     fn build(&self, width: usize, shard: usize) -> Result<Self::Backend>;
+
+    /// Rebind this factory to a new checkpoint: the hot-reload hook.
+    ///
+    /// Returns a factory that serves the new parameters but is otherwise
+    /// identical (same observation/action shape, same runtime, same
+    /// width policy), so the control plane can rebuild every shard's
+    /// backend and stage the swap. Factories that cannot restore a
+    /// checkpoint keep the default, which rejects the reload — the
+    /// server then reports the error to the operator and keeps serving
+    /// the current parameters.
+    fn with_checkpoint(&self, _ckpt: Checkpoint) -> Result<Self>
+    where
+        Self: Sized,
+    {
+        Err(Error::serve("this backend does not support hot checkpoint reload"))
+    }
 }
 
 /// Wide-shard width a [`SyntheticFactory`] pool defaults to when the
@@ -321,6 +347,15 @@ impl BackendFactory for SyntheticFactory {
         // the batch dimension, so all shards serve the same policy
         Ok(SyntheticBackend::new(width.max(1), self.obs_len, self.actions, self.seed)
             .with_cost(self.dispatch, self.per_row))
+    }
+
+    /// The synthetic policy has no tensors to restore; a reload reseeds
+    /// the weights from the checkpoint's training timestep instead. That
+    /// keeps the swap deterministic AND observable (a different timestep
+    /// serves measurably different logits) — which is exactly what the
+    /// reload tests and the clean-checkout smoke need.
+    fn with_checkpoint(&self, ckpt: Checkpoint) -> Result<SyntheticFactory> {
+        Ok(SyntheticFactory { seed: ckpt.timestep, ..*self })
     }
 }
 
@@ -437,6 +472,30 @@ impl BackendFactory for ModelBackendFactory {
         model.params = self.ckpt.to_param_set(&info.params)?;
         Ok(ModelBackend { model })
     }
+
+    /// Rebind to a new checkpoint of the **same architecture**: the
+    /// runtime, artifact widths and seed carry over, only the parameters
+    /// change. The tensor payload is validated eagerly (shape-checked
+    /// against the manifest) so a bad checkpoint is rejected before any
+    /// shard backend is rebuilt.
+    fn with_checkpoint(&self, ckpt: Checkpoint) -> Result<ModelBackendFactory> {
+        if ckpt.arch != self.ckpt.arch {
+            return Err(Error::config(format!(
+                "reload checkpoint arch '{}' does not match the served arch '{}'",
+                ckpt.arch, self.ckpt.arch
+            )));
+        }
+        let info = self.rt.manifest().arch(&ckpt.arch)?.clone();
+        ckpt.to_param_set(&info.params)?;
+        Ok(ModelBackendFactory {
+            rt: self.rt.clone(),
+            ckpt,
+            seed: self.seed,
+            obs_len: self.obs_len,
+            actions: self.actions,
+            widths: self.widths.clone(),
+        })
+    }
 }
 
 /// Backend over a [`HostLinearQ`](crate::algo::nstep_q::HostLinearQ)
@@ -528,6 +587,12 @@ impl BackendFactory for LinearQFactory {
         // the same parameters at every width: width-transparent
         Ok(LinearQBackend { q: self.q.clone(), batch: width.max(1) })
     }
+
+    /// Restore a fresh `host-linear-q` checkpoint (arch and shape are
+    /// validated by the container restore).
+    fn with_checkpoint(&self, ckpt: Checkpoint) -> Result<LinearQFactory> {
+        LinearQFactory::from_checkpoint(&ckpt)
+    }
 }
 
 /// The batching loop: one instance, one shard thread, one backend.
@@ -558,6 +623,14 @@ pub struct Batcher<B: InferBackend> {
     /// uniq_first[u] = index of the first window request of unique row u
     /// (the one whose observation gets staged).
     uniq_first: Vec<usize>,
+    /// Hot-reload double buffer: the control plane stages a replacement
+    /// backend here and this batcher installs it at its next batch
+    /// boundary. `None` on pools started without reload support — the
+    /// hot path then pays nothing.
+    swap: Option<Arc<SwapSlot<B>>>,
+    /// Last swap-slot epoch this batcher observed (0 = the backend it
+    /// was built with).
+    seen_epoch: u64,
 }
 
 impl<B: InferBackend> Batcher<B> {
@@ -612,7 +685,34 @@ impl<B: InferBackend> Batcher<B> {
             win: Vec::new(),
             uniq_of: Vec::new(),
             uniq_first: Vec::new(),
+            swap: None,
+            seen_epoch: 0,
         }
+    }
+
+    /// Attach the hot-reload double buffer this batcher polls at every
+    /// batch boundary (set once, before the shard thread starts).
+    pub fn attach_swap(&mut self, slot: Arc<SwapSlot<B>>) {
+        self.seen_epoch = slot.epoch();
+        self.swap = Some(slot);
+    }
+
+    /// Install a staged replacement backend, if one has been published
+    /// since the last boundary: one relaxed atomic load when idle.
+    /// Called by [`Batcher::step`] between the window claim and the
+    /// device call — never mid-batch — so every reply in a window comes
+    /// from one backend and no reply ever mixes parameter versions.
+    fn maybe_swap_backend(&mut self) {
+        let Some(slot) = &self.swap else { return };
+        let Some(backend) = slot.take(&mut self.seen_epoch) else { return };
+        self.backend = backend;
+        // the control plane rebuilds at this shard's recorded width, but
+        // recompute defensively: the staging buffer and clamp must track
+        // whatever the new backend actually evaluates
+        let width = self.backend.batch_width();
+        self.max_batch = self.max_batch.clamp(1, width);
+        self.obs_buf.clear();
+        self.obs_buf.resize(width * self.backend.obs_len(), 0.0);
     }
 
     pub fn max_batch(&self) -> usize {
@@ -637,6 +737,15 @@ impl<B: InferBackend> Batcher<B> {
             return Ok(false);
         }
         drop(claim_span.arg("requests", self.win.len() as f64));
+        // batch boundary: install a hot-reloaded backend after the claim
+        // closed (no request can join this window anymore) and before
+        // the device call. The ordering is what keeps the response
+        // cache honest: a request that ends up served by the OLD
+        // parameters was necessarily claimed — and therefore
+        // cache-probed — before the swap was staged and the version
+        // bumped, so its version-checked insert can never file
+        // old-parameter logits under the new params version.
+        self.maybe_swap_backend();
         let obs_len = self.backend.obs_len();
         // drop malformed payloads (the public handle validates, but the
         // queue is an open type); one bad client must not kill the server
@@ -1080,6 +1189,75 @@ mod tests {
             Duration::ZERO,
         );
         assert_eq!(wide.max_batch(), 4);
+    }
+
+    #[test]
+    fn synthetic_factory_reload_reseeds_from_the_checkpoint_timestep() {
+        let f = SyntheticFactory::new(6, 4, 11);
+        let reloaded = f.with_checkpoint(Checkpoint::new("synthetic", 99)).unwrap();
+        let obs: Vec<f32> = (0..6).map(|i| 0.2 * i as f32 - 0.4).collect();
+        let before = f.build(1, 0).unwrap().infer(&obs).unwrap();
+        let after = reloaded.build(1, 0).unwrap().infer(&obs).unwrap();
+        assert_ne!(before.probs, after.probs, "a reload must be observable");
+        // and the reload is deterministic: seed == the checkpoint timestep
+        let expect = SyntheticFactory::new(6, 4, 99).build(1, 0).unwrap().infer(&obs).unwrap();
+        assert_eq!(after.probs, expect.probs);
+        assert_eq!(after.values[0].to_bits(), expect.values[0].to_bits());
+    }
+
+    #[test]
+    fn staged_swap_installs_at_the_next_batch_boundary() {
+        let mut b = mk_batcher(4, 5, 13);
+        let slot = Arc::new(SwapSlot::new());
+        b.attach_swap(slot.clone());
+        let obs = vec![0.5f32; 5];
+
+        // before any swap: the seed-13 policy answers
+        let rx = submit(&b.queue, 0, obs.clone());
+        assert!(b.step().unwrap());
+        let old_reply = recv_reply(&rx);
+
+        // stage a replacement; nothing changes until the next boundary,
+        // then the very next window is served by the new backend
+        slot.stage(SyntheticBackend::new(4, 5, 6, 99));
+        let rx = submit(&b.queue, 1, obs.clone());
+        assert!(b.step().unwrap());
+        let new_reply = recv_reply(&rx);
+        assert_ne!(new_reply, old_reply, "swap must change the served policy");
+        let mut solo = mk_batcher(4, 5, 99);
+        let solo_rx = submit(&solo.queue, 2, obs.clone());
+        solo.step().unwrap();
+        assert_eq!(recv_reply(&solo_rx), new_reply, "swapped backend must serve its own bits");
+
+        // the slot is drained: a third step with no new stage keeps it
+        let rx = submit(&b.queue, 3, obs);
+        assert!(b.step().unwrap());
+        assert_eq!(recv_reply(&rx), new_reply);
+    }
+
+    #[test]
+    fn default_with_checkpoint_rejects_reload() {
+        struct NoReload;
+        impl BackendFactory for NoReload {
+            type Backend = SyntheticBackend;
+            fn obs_len(&self) -> usize {
+                2
+            }
+            fn actions(&self) -> usize {
+                2
+            }
+            fn native_width(&self) -> usize {
+                2
+            }
+            fn build(&self, width: usize, _shard: usize) -> Result<SyntheticBackend> {
+                Ok(SyntheticBackend::new(width.max(1), 2, 2, 0))
+            }
+        }
+        let err = match NoReload.with_checkpoint(Checkpoint::new("x", 1)) {
+            Ok(_) => panic!("default with_checkpoint must reject"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("hot checkpoint reload"), "{err}");
     }
 
     #[test]

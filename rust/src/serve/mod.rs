@@ -32,8 +32,14 @@
 //!   preprocessing (Atari mode) and the client-side action sampler.
 //! * [`server`] — the facade: spawn one batcher
 //!   ([`PolicyServer::start`]) or a shard pool
-//!   ([`PolicyServer::start_pool`]), connect
-//!   ([`PolicyServer::connect`]), shut down; plus [`ServeConfig`].
+//!   ([`PolicyServer::start_pool`], hot-reloadable via
+//!   [`PolicyServer::start_pool_hot`]), connect
+//!   ([`PolicyServer::connect`]), shut down; plus [`ServeConfig`] and
+//!   its validating [`ServeConfig::builder`].
+//! * [`reload`] — the control plane: per-shard [`SwapSlot`] double
+//!   buffers, the [`ReloadHandle`] every reload path funnels through,
+//!   and the [`CheckpointWatcher`] that follows a training run
+//!   directory (`--watch`) and swaps checkpoints into a live server.
 //! * [`stats`] — latency (p50/p95/p99), throughput, per-shard rollup and
 //!   transport (connection/frame) accounting, renderable into the
 //!   [`crate::metrics`] JSONL/CSV sinks.
@@ -66,9 +72,13 @@
 //!
 //! // 4 shards: one narrow fast-path shard + three wide shards
 //! let factory = SyntheticFactory::new(ObsMode::Grid.obs_len(), ACTIONS, 1);
-//! let cfg = ServeConfig::new(32, Duration::from_millis(1))
-//!     .with_shards(4)
-//!     .with_small_batch(4);
+//! let cfg = ServeConfig::builder()
+//!     .max_batch(32)
+//!     .max_delay(Duration::from_millis(1))
+//!     .shards(4)
+//!     .small_batch(4)
+//!     .build()
+//!     .unwrap();
 //! let server = PolicyServer::start_pool(&factory, cfg).unwrap();
 //! let mut client = Session::new(server.connect(), GameId::Catch, ObsMode::Grid, 1, 30);
 //! let report = client.run(1_000).unwrap();
@@ -85,7 +95,7 @@
 //! # Overload & failover (PR 7)
 //!
 //! The stack is hardened for saturation rather than graceful load:
-//! [`ServeConfig::with_max_queue`] bounds the submission queue, and a
+//! [`ServeConfigBuilder::max_queue`] bounds the submission queue, and a
 //! query arriving past the cap — or from one session hogging more than
 //! half of it — is **shed** with a typed
 //! [`Error::Overloaded`](crate::error::Error::Overloaded) (the wire's
@@ -98,10 +108,28 @@
 //! shed == submitted ([`OverloadSnapshot`]), and the unbounded
 //! single-shard lockstep configuration reproduces the PR 6 behavior
 //! bit-for-bit.
+//!
+//! # Control plane & hot reload (PR 8)
+//!
+//! A server started with [`PolicyServer::start_pool_hot`] can swap its
+//! parameters without restarting: the trainer publishes a checkpoint
+//! plus an atomically-renamed `.ready` marker, the
+//! [`CheckpointWatcher`] (`--watch runs/myrun/`) — or a
+//! `ReloadCheckpoint` control frame pushed by `paac ctl reload` —
+//! rebuilds every shard's backend, stages each behind its shard's
+//! [`SwapSlot`], and bumps `params_version`. Batchers install the
+//! staged backend at a batch boundary, so an in-flight batch always
+//! finishes on the parameters it started with and no reply ever mixes
+//! versions; the response cache is keyed under the version, so stale
+//! hits are impossible by construction. The same PR folded the
+//! pipelined `submit`/`recv` pair into [`QueryTransport`] (completions
+//! as typed [`Completion`] values) and collapsed the `with_*` setter
+//! sprawl into [`ServeConfig::builder`].
 
 pub mod batcher;
 pub mod cache;
 pub mod queue;
+pub mod reload;
 pub mod server;
 pub mod session;
 pub mod stats;
@@ -113,13 +141,14 @@ pub use batcher::{
 };
 pub use cache::{obs_fnv1a, ResponseCache};
 pub use queue::{Admission, Reply, ReplySink, Request, ShardClass, ShedReason, SubmissionQueue};
-pub use server::{ClientHandle, Connector, PolicyServer, ServeConfig};
+pub use reload::{CheckpointWatcher, ReloadHandle, SwapSlot, DEFAULT_POLL_INTERVAL};
+pub use server::{ClientHandle, Connector, PolicyServer, ServeConfig, ServeConfigBuilder};
 pub use session::{run_clients, Session, SessionReport};
 pub use stats::{
-    CacheSnapshot, OverloadSnapshot, QueueWaitSnapshot, ServeStats, ShardSnapshot, ShardSpec,
-    StatsSnapshot, TransportSnapshot,
+    CacheSnapshot, OverloadSnapshot, QueueWaitSnapshot, ReloadEvent, ReloadSnapshot, ServeStats,
+    ShardSnapshot, ShardSpec, StatsSnapshot, TransportSnapshot,
 };
 pub use transport::{
     run_remote_clients, Completion, QueryTransport, ReconnectingHandle, RemoteHandle,
-    TcpFrontend, DEFAULT_PIPELINE,
+    ServerStatus, TcpFrontend, DEFAULT_PIPELINE,
 };

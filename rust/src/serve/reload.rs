@@ -1,0 +1,289 @@
+//! The serve control plane: hot checkpoint reload without a restart.
+//!
+//! Three pieces, deliberately decoupled from the data plane:
+//!
+//! * [`SwapSlot`] — the per-shard double buffer. The control plane
+//!   builds one replacement backend per shard (all-or-nothing: a build
+//!   error on any shard aborts the reload with every shard still on the
+//!   old parameters), [`stages`](SwapSlot::stage) each into its shard's
+//!   slot and bumps the slot epoch; the batcher polls the epoch — one
+//!   relaxed atomic load — inside every
+//!   [`step`](super::batcher::Batcher::step), after the window claim
+//!   closed and before the device call, and installs the staged backend
+//!   **at that batch boundary**. An in-flight device call always
+//!   completes on the parameters it started with, so no individual reply
+//!   ever mixes versions; and because a window served by old parameters
+//!   was fully claimed (hence cache-probed) before the stage, the
+//!   version-checked cache insert can never file old logits under the
+//!   bumped version. Shards swap independently at their own next
+//!   boundary, which is invisible to clients because every batcher
+//!   drains the same queue and every reply is single-version.
+//! * [`ReloadHandle`] — the cloneable entry point the watcher, the TCP
+//!   control frames ([`Frame::ReloadCheckpoint`]) and
+//!   [`PolicyServer::reload_checkpoint`] all funnel through: restore the
+//!   factory onto the new checkpoint, rebuild every shard backend at its
+//!   recorded width, stage the swap, then bump the params version —
+//!   which evicts the response cache, so a stale cached reply is
+//!   impossible by construction (the cache is keyed under the version).
+//! * [`CheckpointWatcher`] — the filesystem side of the control plane:
+//!   a polling thread watching a training run directory for
+//!   `final.ckpt` plus its `.ready` marker
+//!   ([`crate::metrics::ready_marker_path`]), written atomically
+//!   (tmp-file + rename) by the trainer **after** the checkpoint itself.
+//!   A marker change therefore proves a complete checkpoint; the marker
+//!   present when the watcher starts is remembered, not reloaded — the
+//!   server already restored that checkpoint at startup. Reload errors
+//!   are logged and the watcher keeps polling: a bad checkpoint must not
+//!   take down a serving process.
+//!
+//! [`Frame::ReloadCheckpoint`]: super::transport::Frame::ReloadCheckpoint
+//! [`PolicyServer::reload_checkpoint`]: super::server::PolicyServer::reload_checkpoint
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, SystemTime};
+
+use crate::error::Result;
+use crate::runtime::checkpoint::Checkpoint;
+
+/// One shard's hot-reload double buffer: a staged replacement backend
+/// behind an epoch counter.
+///
+/// The idle cost on the batcher side is a single relaxed-ordering load
+/// per batch boundary; the mutex is touched only when the epoch moved.
+pub struct SwapSlot<B> {
+    epoch: AtomicU64,
+    staged: Mutex<Option<B>>,
+}
+
+impl<B> SwapSlot<B> {
+    pub fn new() -> SwapSlot<B> {
+        SwapSlot { epoch: AtomicU64::new(0), staged: Mutex::new(None) }
+    }
+
+    /// The current publish epoch (0 = nothing ever staged).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Publish a replacement backend: store it, then bump the epoch. A
+    /// second stage before the batcher reached its boundary simply
+    /// replaces the staged instance — the batcher installs the newest.
+    pub fn stage(&self, backend: B) {
+        *self.staged.lock().unwrap_or_else(|p| p.into_inner()) = Some(backend);
+        self.epoch.fetch_add(1, Ordering::Release);
+    }
+
+    /// Batcher side: take the staged backend if the epoch moved past
+    /// `seen` (which is updated to the current epoch). The cheap path —
+    /// no publish since last boundary — is one atomic load, no lock.
+    pub fn take(&self, seen: &mut u64) -> Option<B> {
+        let epoch = self.epoch.load(Ordering::Acquire);
+        if epoch == *seen {
+            return None;
+        }
+        *seen = epoch;
+        self.staged.lock().unwrap_or_else(|p| p.into_inner()).take()
+    }
+}
+
+impl<B> Default for SwapSlot<B> {
+    fn default() -> Self {
+        SwapSlot::new()
+    }
+}
+
+/// A cloneable, `'static` handle onto a running server's reload path.
+///
+/// Minted by [`PolicyServer::start_pool_hot`]; the [`CheckpointWatcher`]
+/// and the TCP bridges each hold one, so the control plane works from
+/// any thread without borrowing the server.
+///
+/// [`PolicyServer::start_pool_hot`]: super::server::PolicyServer::start_pool_hot
+#[derive(Clone)]
+pub struct ReloadHandle {
+    pub(crate) reloader: Arc<dyn Fn(Checkpoint) -> Result<u64> + Send + Sync>,
+}
+
+impl ReloadHandle {
+    /// Swap the running server onto `ckpt`: validate, rebuild every
+    /// shard's backend, stage the double-buffer swap and bump the params
+    /// version. Returns the new version. On error nothing was swapped —
+    /// every shard keeps serving the old parameters.
+    pub fn reload(&self, ckpt: Checkpoint) -> Result<u64> {
+        (self.reloader)(ckpt)
+    }
+}
+
+/// Default marker poll cadence of [`CheckpointWatcher::spawn`].
+pub const DEFAULT_POLL_INTERVAL: Duration = Duration::from_millis(250);
+
+/// Polls a training run directory and hot-reloads the server whenever
+/// the trainer publishes a fresh checkpoint (`--watch runs/myrun/`).
+pub struct CheckpointWatcher {
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl CheckpointWatcher {
+    /// Watch `dir/final.ckpt` at the default poll cadence. With `quiet`
+    /// false, each completed reload prints a one-line status (what the
+    /// CI reload smoke greps for).
+    pub fn spawn(dir: impl Into<PathBuf>, handle: ReloadHandle, quiet: bool) -> CheckpointWatcher {
+        CheckpointWatcher::spawn_with(dir, handle, DEFAULT_POLL_INTERVAL, quiet)
+    }
+
+    /// [`CheckpointWatcher::spawn`] with an explicit poll interval.
+    pub fn spawn_with(
+        dir: impl Into<PathBuf>,
+        handle: ReloadHandle,
+        interval: Duration,
+        quiet: bool,
+    ) -> CheckpointWatcher {
+        let dir = dir.into();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = stop.clone();
+        let thread = std::thread::Builder::new()
+            .name("paac-ckpt-watch".into())
+            .spawn(move || watch_loop(&dir, &handle, interval, quiet, &stop_flag))
+            .expect("spawn checkpoint watcher");
+        CheckpointWatcher { stop, thread: Some(thread) }
+    }
+
+    /// Stop polling and join the watcher thread.
+    pub fn stop(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for CheckpointWatcher {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+/// The `.ready` marker's observable identity: mtime + contents. The
+/// trainer rewrites the marker (atomically) after every checkpoint, so
+/// either field moving means a complete new checkpoint is on disk.
+fn marker_state(marker: &Path) -> Option<(SystemTime, String)> {
+    let mtime = std::fs::metadata(marker).ok()?.modified().ok()?;
+    let content = std::fs::read_to_string(marker).ok()?;
+    Some((mtime, content))
+}
+
+fn watch_loop(
+    dir: &Path,
+    handle: &ReloadHandle,
+    interval: Duration,
+    quiet: bool,
+    stop: &AtomicBool,
+) {
+    let ckpt_path = dir.join("final.ckpt");
+    let marker = crate::metrics::ready_marker_path(&ckpt_path);
+    // the checkpoint already on disk is the one the server started from:
+    // remember its marker, reload only on change
+    let mut seen = marker_state(&marker);
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(interval);
+        let current = marker_state(&marker);
+        if current.is_none() || current == seen {
+            continue;
+        }
+        seen = current;
+        match Checkpoint::load(&ckpt_path) {
+            Ok(ckpt) => {
+                let step = ckpt.timestep;
+                match handle.reload(ckpt) {
+                    Ok(version) => {
+                        if !quiet {
+                            println!(
+                                "serve: reloaded checkpoint at step {step} \
+                                 (params_version {version})"
+                            );
+                        }
+                    }
+                    Err(e) => eprintln!("serve: checkpoint reload rejected: {e}"),
+                }
+            }
+            Err(e) => eprintln!("serve: cannot read {}: {e}", ckpt_path.display()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn swap_slot_take_is_edge_triggered() {
+        let slot: SwapSlot<u32> = SwapSlot::new();
+        let mut seen = slot.epoch();
+        assert_eq!(seen, 0);
+        assert!(slot.take(&mut seen).is_none(), "nothing staged yet");
+
+        slot.stage(7);
+        assert_eq!(slot.epoch(), 1);
+        assert_eq!(slot.take(&mut seen), Some(7));
+        assert_eq!(seen, 1);
+        assert!(slot.take(&mut seen).is_none(), "a publish is consumed once");
+
+        // two publishes before the consumer's next boundary: the newest
+        // instance wins, the older one is dropped
+        slot.stage(8);
+        slot.stage(9);
+        assert_eq!(slot.take(&mut seen), Some(9));
+        assert!(slot.take(&mut seen).is_none());
+    }
+
+    #[test]
+    fn watcher_fires_once_per_published_marker_and_skips_the_initial_one() {
+        let tmp = std::env::temp_dir().join(format!("paac-watch-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&tmp);
+        std::fs::create_dir_all(&tmp).unwrap();
+        let ckpt_path = tmp.join("final.ckpt");
+
+        // a checkpoint + marker published BEFORE the watcher starts: this
+        // is what the server restored at startup, not a reload
+        Checkpoint::new("synthetic", 100).save(&ckpt_path).unwrap();
+        crate::metrics::write_ready_marker(&ckpt_path, 100).unwrap();
+
+        let reloads = Arc::new(Mutex::new(Vec::<u64>::new()));
+        let log = reloads.clone();
+        let handle = ReloadHandle {
+            reloader: Arc::new(move |ckpt: Checkpoint| {
+                let mut seen = log.lock().unwrap_or_else(|p| p.into_inner());
+                seen.push(ckpt.timestep);
+                Ok(seen.len() as u64)
+            }),
+        };
+        let watcher = CheckpointWatcher::spawn_with(&tmp, handle, Duration::from_millis(10), true);
+        std::thread::sleep(Duration::from_millis(80));
+        assert!(
+            reloads.lock().unwrap().is_empty(),
+            "the startup checkpoint must not trigger a reload"
+        );
+
+        // the trainer publishes a fresh checkpoint: ckpt first, marker
+        // second — the watcher reloads exactly once
+        Checkpoint::new("synthetic", 200).save(&ckpt_path).unwrap();
+        crate::metrics::write_ready_marker(&ckpt_path, 200).unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while reloads.lock().unwrap().is_empty() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        std::thread::sleep(Duration::from_millis(60)); // no double-fire
+        assert_eq!(reloads.lock().unwrap().clone(), vec![200]);
+
+        watcher.stop();
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+}

@@ -24,22 +24,39 @@
 //! queue, so a repeat observation costs one lock instead of a queue
 //! round trip and a backend slot. Misses fall through to the queue and
 //! insert their reply on the way back. The cache is keyed under the
-//! server's `params_version` ([`PolicyServer::bump_params_version`] —
-//! the hook any future checkpoint-hot-reload path must call), which
-//! makes a stale hit impossible by construction.
+//! server's `params_version` ([`PolicyServer::bump_params_version`]),
+//! which makes a stale hit impossible by construction.
+//!
+//! Since PR 8 the server also has a **control plane**
+//! ([`super::reload`]): [`PolicyServer::start_pool_hot`] wires a
+//! [`SwapSlot`] into every shard and mints a [`ReloadHandle`] that swaps
+//! the whole pool onto a freshly trained checkpoint — at batch
+//! boundaries, never mid-query — then bumps the params version, which
+//! evicts the response cache by construction. The same PR folded the
+//! pipelined submit/recv surface into [`ClientHandle`]
+//! ([`ClientHandle::submit`] / [`ClientHandle::recv`]), so the
+//! in-process handle and the network
+//! [`RemoteHandle`](crate::serve::RemoteHandle) speak one
+//! [`QueryTransport`](super::transport::QueryTransport) interface, and
+//! configuration moved to [`ServeConfig::builder`] — the `with_*`
+//! setters remain as deprecated shims for one release.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, RecvTimeoutError};
-use std::sync::Arc;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
+use crate::runtime::checkpoint::Checkpoint;
 
 use super::batcher::{BackendFactory, Batcher, InferBackend};
 use super::cache::{obs_fnv1a, ResponseCache};
 use super::queue::{Admission, Reply, ReplySink, Request, ShardClass, SubmissionQueue};
-use super::stats::{ServeStats, ShardSpec, StatsSnapshot};
+use super::reload::{ReloadHandle, SwapSlot};
+use super::stats::{ReloadEvent, ServeStats, ShardSpec, StatsSnapshot};
+use super::transport::Completion;
 
 /// Bucket-hash seed of the server-owned response cache (any fixed value
 /// works; per-deployment seeding is a `ResponseCache::new` parameter).
@@ -103,44 +120,54 @@ impl ServeConfig {
         ServeConfig { max_batch, max_delay, ..ServeConfig::default() }
     }
 
+    /// Start from the defaults and set fields fluently;
+    /// [`ServeConfigBuilder::build`] runs the cross-field validation
+    /// the CLI layer used to do ad hoc.
+    pub fn builder() -> ServeConfigBuilder {
+        ServeConfigBuilder::default()
+    }
+
     /// Set the shard-pool size (see [`PolicyServer::start_pool`]).
+    #[deprecated(note = "use ServeConfig::builder().shards(..); shim kept for one release")]
     pub fn with_shards(mut self, shards: usize) -> ServeConfig {
         self.shards = shards.max(1);
         self
     }
 
     /// Dedicate a small-batch fast-path shard of this width (0 disables).
+    #[deprecated(
+        note = "use ServeConfig::builder().small_batch(..); shim kept for one release"
+    )]
     pub fn with_small_batch(mut self, width: usize) -> ServeConfig {
         self.small_batch = width;
         self
     }
 
     /// Cache up to `entries` responses (0 disables the cache).
+    #[deprecated(note = "use ServeConfig::builder().cache(..); shim kept for one release")]
     pub fn with_cache(mut self, entries: usize) -> ServeConfig {
         self.cache = entries;
         self
     }
 
     /// Toggle in-flight dedup off (`true` = `--no-dedup`).
+    #[deprecated(note = "use ServeConfig::builder().no_dedup(..); shim kept for one release")]
     pub fn with_no_dedup(mut self, no_dedup: bool) -> ServeConfig {
         self.no_dedup = no_dedup;
         self
     }
 
     /// Cap the submission queue at `depth` pending requests (0 =
-    /// unbounded, the PR 1–6 behavior). Excess load is shed with
-    /// [`Error::Overloaded`] rather than queued; see
-    /// [`SubmissionQueue::with_limits`] for the fairness share that
-    /// rides along with the cap.
+    /// unbounded). Excess load is shed with [`Error::Overloaded`]
+    /// rather than queued.
+    #[deprecated(note = "use ServeConfig::builder().max_queue(..); shim kept for one release")]
     pub fn with_max_queue(mut self, depth: usize) -> ServeConfig {
         self.max_queue = depth;
         self
     }
 
-    /// Record a Perfetto trace of this server's lifetime: arms the
-    /// process-global recorder ([`crate::trace::start`]) when the server
-    /// starts, unless a recording is already live (a caller that armed
-    /// earlier — e.g. `paac train` — keeps its epoch).
+    /// Record a Perfetto trace of this server's lifetime.
+    #[deprecated(note = "use ServeConfig::builder().trace(..); shim kept for one release")]
     pub fn with_trace(mut self, enabled: bool) -> ServeConfig {
         self.trace = enabled;
         self
@@ -165,6 +192,151 @@ impl ServeConfig {
     }
 }
 
+/// Fluent constructor for [`ServeConfig`] with cross-field validation.
+///
+/// [`ServeConfigBuilder::build`] is the single place the config's
+/// invariants live — a zero-width coalescing window, a zero-shard pool,
+/// a small-batch fast path without a wide shard to leave full windows
+/// to — so every entry point (library callers, `paac serve`, the
+/// benches) rejects a nonsensical config with the same
+/// [`Error::Config`] instead of each validating ad hoc. Unset fields
+/// keep [`ServeConfig::default`]'s values.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeConfigBuilder {
+    cfg: ServeConfig,
+}
+
+impl ServeConfigBuilder {
+    /// See [`ServeConfig::max_batch`].
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.cfg.max_batch = n;
+        self
+    }
+
+    /// See [`ServeConfig::max_delay`].
+    pub fn max_delay(mut self, d: Duration) -> Self {
+        self.cfg.max_delay = d;
+        self
+    }
+
+    /// See [`ServeConfig::shards`].
+    pub fn shards(mut self, n: usize) -> Self {
+        self.cfg.shards = n;
+        self
+    }
+
+    /// See [`ServeConfig::small_batch`].
+    pub fn small_batch(mut self, width: usize) -> Self {
+        self.cfg.small_batch = width;
+        self
+    }
+
+    /// See [`ServeConfig::cache`].
+    pub fn cache(mut self, entries: usize) -> Self {
+        self.cfg.cache = entries;
+        self
+    }
+
+    /// See [`ServeConfig::no_dedup`].
+    pub fn no_dedup(mut self, no_dedup: bool) -> Self {
+        self.cfg.no_dedup = no_dedup;
+        self
+    }
+
+    /// See [`ServeConfig::max_queue`].
+    pub fn max_queue(mut self, depth: usize) -> Self {
+        self.cfg.max_queue = depth;
+        self
+    }
+
+    /// See [`ServeConfig::trace`].
+    pub fn trace(mut self, enabled: bool) -> Self {
+        self.cfg.trace = enabled;
+        self
+    }
+
+    /// Validate the cross-field invariants and produce the config.
+    pub fn build(self) -> Result<ServeConfig> {
+        let cfg = self.cfg;
+        if cfg.max_batch == 0 {
+            return Err(Error::config(
+                "serve: max_batch 0 would coalesce nothing; use usize::MAX for the \
+                 backend's full width",
+            ));
+        }
+        if cfg.shards == 0 {
+            return Err(Error::config("serve: a batcher pool needs at least one shard"));
+        }
+        if cfg.small_batch > 0 && cfg.shards < 2 {
+            return Err(Error::config(
+                "serve: a small-batch fast path needs shards >= 2 — the pool must keep \
+                 a wide shard to leave full windows to",
+            ));
+        }
+        Ok(cfg)
+    }
+}
+
+/// A planned shard pool: every backend already built — so a factory
+/// error aborts before any thread spawns — plus each shard's claim
+/// class and final spec. Shared between [`PolicyServer::start_pool`]
+/// and [`PolicyServer::start_pool_hot`].
+struct PoolPlan<B> {
+    backends: Vec<B>,
+    /// Per-shard (claim width, claim class), aligned with `backends`.
+    classes: Vec<(usize, ShardClass)>,
+    specs: Vec<ShardSpec>,
+}
+
+impl<B: InferBackend> PoolPlan<B> {
+    /// Plan the pool and build every backend up front. The wide shards'
+    /// leave-to-small threshold uses the small shard's EFFECTIVE width —
+    /// a factory may snap the requested width to what its artifacts
+    /// support, and a threshold above what the small shard can actually
+    /// claim would strand mid-size windows.
+    fn new<F: BackendFactory<Backend = B>>(factory: &F, cfg: &ServeConfig) -> Result<PoolPlan<B>> {
+        let shards = cfg.shards.max(1);
+        // usize::MAX means "the full width", which only the factory can
+        // resolve (a prebuilt backend resolves it in `start`)
+        let wide_width = if cfg.max_batch == usize::MAX {
+            factory.native_width().max(1)
+        } else {
+            cfg.max_batch.max(1)
+        };
+        let small_width = if shards >= 2 && cfg.small_batch > 0 {
+            Some(cfg.small_batch.min(wide_width))
+        } else {
+            None
+        };
+        let mut backends: Vec<B> = Vec::with_capacity(shards);
+        let mut classes: Vec<(usize, ShardClass)> = Vec::with_capacity(shards);
+        if let Some(sw) = small_width {
+            let small_backend = factory.build(sw, 0)?;
+            let sw_eff = sw.clamp(1, small_backend.batch_width());
+            backends.push(small_backend);
+            classes.push((sw_eff, ShardClass::Small));
+            for shard in 1..shards {
+                backends.push(factory.build(wide_width, shard)?);
+                classes.push((wide_width, ShardClass::Wide { leave_to_small: Some(sw_eff) }));
+            }
+        } else {
+            for shard in 0..shards {
+                backends.push(factory.build(wide_width, shard)?);
+                classes.push((wide_width, ShardClass::Wide { leave_to_small: None }));
+            }
+        }
+        let specs: Vec<ShardSpec> = backends
+            .iter()
+            .zip(&classes)
+            .map(|(b, (width, class))| ShardSpec {
+                width: (*width).clamp(1, b.batch_width()),
+                small: *class == ShardClass::Small,
+            })
+            .collect();
+        Ok(PoolPlan { backends, classes, specs })
+    }
+}
+
 /// A running inference server.
 /// Slack added on top of the coalescing deadline for the default
 /// per-query reply timeout (device time + scheduling headroom).
@@ -186,6 +358,13 @@ pub struct PolicyServer {
     actions: usize,
     max_batch: usize,
     max_delay: Duration,
+    /// Monotone parameter-set version: 0 at start, +1 per completed
+    /// reload (or explicit bump). Kept in lockstep with the response
+    /// cache's key version when a cache exists.
+    params_version: Arc<AtomicU64>,
+    /// The control plane (None unless the server came up via
+    /// [`PolicyServer::start_pool_hot`]).
+    reload: Option<ReloadHandle>,
 }
 
 impl PolicyServer {
@@ -221,6 +400,8 @@ impl PolicyServer {
             actions,
             max_batch,
             max_delay: cfg.max_delay,
+            params_version: Arc::new(AtomicU64::new(0)),
+            reload: None,
         }
     }
 
@@ -238,62 +419,115 @@ impl PolicyServer {
     /// error aborts cleanly.
     pub fn start_pool<F: BackendFactory>(factory: &F, cfg: ServeConfig) -> Result<PolicyServer> {
         cfg.arm_trace();
-        let shards = cfg.shards.max(1);
-        // usize::MAX means "the full width", which only the factory can
-        // resolve (a prebuilt backend resolves it in `start`)
-        let wide_width = if cfg.max_batch == usize::MAX {
-            factory.native_width().max(1)
-        } else {
-            cfg.max_batch.max(1)
-        };
-        let small_width = if shards >= 2 && cfg.small_batch > 0 {
-            Some(cfg.small_batch.min(wide_width))
-        } else {
-            None
-        };
+        let plan = PoolPlan::new(factory, &cfg)?;
+        Ok(PolicyServer::spawn_pool(plan, &cfg, factory.obs_len(), factory.actions(), None))
+    }
 
-        // plan the pool and build every backend up front (no thread has
-        // spawned yet, so a factory error aborts cleanly). The wide
-        // shards' leave-to-small threshold uses the small shard's
-        // EFFECTIVE width — a factory may snap the requested width to
-        // what its artifacts support, and a threshold above what the
-        // small shard can actually claim would strand mid-size windows.
-        let mut backends: Vec<F::Backend> = Vec::with_capacity(shards);
-        let mut plan: Vec<(usize, ShardClass)> = Vec::with_capacity(shards);
-        if let Some(sw) = small_width {
-            let small_backend = factory.build(sw, 0)?;
-            let sw_eff = sw.clamp(1, small_backend.batch_width());
-            backends.push(small_backend);
-            plan.push((sw_eff, ShardClass::Small));
-            for shard in 1..shards {
-                backends.push(factory.build(wide_width, shard)?);
-                plan.push((wide_width, ShardClass::Wide { leave_to_small: Some(sw_eff) }));
-            }
-        } else {
-            for shard in 0..shards {
-                backends.push(factory.build(wide_width, shard)?);
-                plan.push((wide_width, ShardClass::Wide { leave_to_small: None }));
-            }
-        }
-        let specs: Vec<ShardSpec> = backends
-            .iter()
-            .zip(&plan)
-            .map(|(b, (width, class))| ShardSpec {
-                width: (*width).clamp(1, b.batch_width()),
-                small: *class == ShardClass::Small,
-            })
-            .collect();
+    /// [`PolicyServer::start_pool`] with the control plane armed: every
+    /// shard gets a hot-reload [`SwapSlot`], and the returned server
+    /// carries a [`ReloadHandle`] ([`PolicyServer::reload_checkpoint`],
+    /// [`PolicyServer::reload_handle`]) that swaps the whole pool onto a
+    /// new [`Checkpoint`] without a restart. Takes the factory by value:
+    /// the reload path keeps it for the server's lifetime to rebuild
+    /// backends from ([`BackendFactory::with_checkpoint`]).
+    ///
+    /// The swap is all-or-nothing and batch-aligned: every replacement
+    /// backend is built and validated before any shard's slot is staged,
+    /// each batcher installs its replacement at its next batch boundary
+    /// (in-flight batches finish on the old parameters; no reply ever
+    /// mixes versions), and the params-version bump evicts the response
+    /// cache — a stale cached reply is impossible by construction. With
+    /// the handle never exercised, the server is behaviorally identical
+    /// to [`PolicyServer::start_pool`].
+    pub fn start_pool_hot<F>(factory: F, cfg: ServeConfig) -> Result<PolicyServer>
+    where
+        F: BackendFactory + Send + Sync + 'static,
+    {
+        cfg.arm_trace();
+        let plan = PoolPlan::new(&factory, &cfg)?;
+        let specs = plan.specs.clone();
+        let mut slots = Vec::with_capacity(specs.len());
+        let mut server = PolicyServer::spawn_pool(
+            plan,
+            &cfg,
+            factory.obs_len(),
+            factory.actions(),
+            Some(&mut slots),
+        );
+        let (obs_len, actions) = (server.obs_len, server.actions);
+        let stats = server.stats.clone();
+        let cache = server.cache.clone();
+        let params_version = server.params_version.clone();
+        // one reload at a time: the gate keeps racing control-plane
+        // callers (watcher + ctl frames) from interleaving their
+        // stage/bump sequences
+        let gate = Mutex::new(());
+        server.reload = Some(ReloadHandle {
+            reloader: Arc::new(move |ckpt: Checkpoint| {
+                let _one_at_a_time = gate.lock().unwrap_or_else(|p| p.into_inner());
+                let span = crate::trace::span("serve.reload");
+                let timestep = ckpt.timestep;
+                let fresh = factory.with_checkpoint(ckpt)?;
+                if fresh.obs_len() != obs_len || fresh.actions() != actions {
+                    return Err(Error::config(format!(
+                        "reload: checkpoint policy has obs_len {} / {} actions, the \
+                         running server serves {obs_len} / {actions}",
+                        fresh.obs_len(),
+                        fresh.actions()
+                    )));
+                }
+                // all-or-nothing: build (and check) every shard's
+                // replacement before staging any — an error here leaves
+                // the whole pool on the old parameters
+                let mut backends = Vec::with_capacity(specs.len());
+                for (shard, spec) in specs.iter().enumerate() {
+                    let backend = fresh.build(spec.width, shard)?;
+                    if backend.obs_len() != obs_len || backend.actions() != actions {
+                        return Err(Error::config(format!(
+                            "reload: shard {shard} rebuilt with obs_len {} / {} \
+                             actions, expected {obs_len} / {actions}",
+                            backend.obs_len(),
+                            backend.actions()
+                        )));
+                    }
+                    backends.push(backend);
+                }
+                // cache occupancy before the bump = entries the bump
+                // evicts (the bump empties the cache by construction)
+                let evicted = cache.as_ref().map_or(0, |c| c.len() as u64);
+                for (slot, backend) in slots.iter().zip(backends) {
+                    slot.stage(backend);
+                }
+                let version = params_version.fetch_add(1, Ordering::SeqCst) + 1;
+                if let Some(c) = &cache {
+                    c.bump_version();
+                }
+                stats.record_reload(version, timestep, evicted);
+                crate::trace::counter("serve.params_version", version as f64);
+                drop(span.arg("params_version", version as f64));
+                Ok(version)
+            }),
+        });
+        Ok(server)
+    }
 
+    /// Spawn the planned pool's batcher threads. With `swap` set, each
+    /// shard gets a hot-reload slot attached (and pushed onto the vec,
+    /// shard-id order) before its thread starts.
+    fn spawn_pool<B: InferBackend + 'static>(
+        plan: PoolPlan<B>,
+        cfg: &ServeConfig,
+        obs_len: usize,
+        actions: usize,
+        mut swap: Option<&mut Vec<Arc<SwapSlot<B>>>>,
+    ) -> PolicyServer {
+        let PoolPlan { backends, classes, specs } = plan;
         let queue = cfg.build_queue();
         let stats = Arc::new(ServeStats::for_shards(&specs));
-        let obs_len = factory.obs_len();
-        let actions = factory.actions();
-        let mut batchers = Vec::with_capacity(shards);
-        for (shard, (backend, (width, class))) in
-            backends.into_iter().zip(plan).enumerate()
-        {
+        let mut batchers = Vec::with_capacity(specs.len());
+        for (shard, (backend, (width, class))) in backends.into_iter().zip(classes).enumerate() {
             // Batcher::for_shard applies the same width clamp as `specs`
-            let batcher = Batcher::for_shard(
+            let mut batcher = Batcher::for_shard(
                 backend,
                 queue.clone(),
                 stats.clone(),
@@ -303,6 +537,11 @@ impl PolicyServer {
                 cfg.max_delay,
             );
             debug_assert_eq!(batcher.max_batch(), specs[shard].width);
+            if let Some(slots) = swap.as_deref_mut() {
+                let slot = Arc::new(SwapSlot::new());
+                batcher.attach_swap(slot.clone());
+                slots.push(slot);
+            }
             let handle = std::thread::Builder::new()
                 .name(format!("paac-serve-shard{shard}"))
                 .spawn(move || batcher.run())
@@ -310,7 +549,7 @@ impl PolicyServer {
             batchers.push(handle);
         }
         let max_batch = specs.iter().map(|s| s.width).max().unwrap_or(1);
-        Ok(PolicyServer {
+        PolicyServer {
             queue,
             stats,
             cache: cfg.build_cache(),
@@ -321,7 +560,9 @@ impl PolicyServer {
             actions,
             max_batch,
             max_delay: cfg.max_delay,
-        })
+            params_version: Arc::new(AtomicU64::new(0)),
+            reload: None,
+        }
     }
 
     pub fn obs_len(&self) -> usize {
@@ -363,24 +604,59 @@ impl PolicyServer {
         self.cache.as_ref().map_or(0, |c| c.len())
     }
 
-    /// The parameter-set version cached replies are keyed under (0 when
-    /// the cache is off or the parameters never changed).
+    /// The parameter-set version replies are served under: 0 at start,
+    /// +1 per completed hot reload (or explicit bump). Cached replies
+    /// are keyed under this value.
     pub fn params_version(&self) -> u64 {
-        self.cache.as_ref().map_or(0, |c| c.version())
+        self.params_version.load(Ordering::SeqCst)
     }
 
     /// Declare that the served parameters changed (checkpoint restore):
-    /// every cached reply is evicted and future inserts key under a
-    /// fresh version, so a reloaded model can never serve stale logits.
-    /// Returns the new version. Any future hot-reload path MUST call
-    /// this after swapping the backend parameters.
+    /// the version advances and every cached reply is evicted — future
+    /// inserts key under the fresh version, so a reloaded model can
+    /// never serve stale logits. Returns the new version.
+    /// [`PolicyServer::start_pool_hot`]'s reload path calls this bump
+    /// internally; call it yourself only when swapping parameters by
+    /// some out-of-band means.
     pub fn bump_params_version(&self) -> u64 {
-        self.cache.as_ref().map_or(0, |c| c.bump_version())
+        let version = self.params_version.fetch_add(1, Ordering::SeqCst) + 1;
+        if let Some(c) = &self.cache {
+            c.bump_version();
+        }
+        version
+    }
+
+    /// Hot-swap the running pool onto `ckpt` (see
+    /// [`PolicyServer::start_pool_hot`]). Returns the new params
+    /// version. Errors — leaving every shard on the old parameters — if
+    /// the checkpoint does not fit the served policy, or the server was
+    /// not started with the control plane armed.
+    pub fn reload_checkpoint(&self, ckpt: Checkpoint) -> Result<u64> {
+        match &self.reload {
+            Some(h) => h.reload(ckpt),
+            None => Err(Error::serve(
+                "hot reload is not enabled: start the server with start_pool_hot",
+            )),
+        }
+    }
+
+    /// The cloneable control-plane handle (None unless the server came
+    /// up via [`PolicyServer::start_pool_hot`]); hand it to a
+    /// [`CheckpointWatcher`](super::reload::CheckpointWatcher) or a
+    /// transport frontend.
+    pub fn reload_handle(&self) -> Option<ReloadHandle> {
+        self.reload.clone()
     }
 
     /// Point-in-time serving stats.
     pub fn stats(&self) -> StatsSnapshot {
         self.stats.snapshot()
+    }
+
+    /// Every completed hot reload so far, in order — the audit trail
+    /// the CLI turns into `serve_reload` JSONL records.
+    pub fn reload_events(&self) -> Vec<ReloadEvent> {
+        self.stats.reload_events()
     }
 
     /// Current submission backlog (diagnostics).
@@ -407,6 +683,8 @@ impl PolicyServer {
             stats: self.stats.clone(),
             cache: self.cache.clone(),
             next_session: self.next_session.clone(),
+            params_version: self.params_version.clone(),
+            reload: self.reload.clone(),
             obs_len: self.obs_len,
             actions: self.actions,
             default_timeout: self.max_delay.saturating_add(REPLY_TIMEOUT_SLACK),
@@ -454,6 +732,8 @@ pub struct Connector {
     stats: Arc<ServeStats>,
     cache: Option<Arc<ResponseCache>>,
     next_session: Arc<AtomicU64>,
+    params_version: Arc<AtomicU64>,
+    reload: Option<ReloadHandle>,
     obs_len: usize,
     actions: usize,
     default_timeout: Duration,
@@ -462,6 +742,7 @@ pub struct Connector {
 impl Connector {
     /// Open a client connection with a fresh server-assigned session id.
     pub fn connect(&self) -> ClientHandle {
+        let (tagged_tx, tagged_rx) = channel();
         ClientHandle {
             session: self.next_session.fetch_add(1, Ordering::Relaxed),
             queue: self.queue.clone(),
@@ -470,7 +751,25 @@ impl Connector {
             obs_len: self.obs_len,
             actions: self.actions,
             default_timeout: self.default_timeout,
+            next_id: 0,
+            tagged_tx,
+            tagged_rx,
+            inflight: Vec::new(),
+            parked: VecDeque::new(),
         }
+    }
+
+    /// Current parameter-set version — what a `ServerInfo` control
+    /// frame reports to remote peers.
+    pub fn params_version(&self) -> u64 {
+        self.params_version.load(Ordering::SeqCst)
+    }
+
+    /// The control-plane reload handle, when the server armed one (the
+    /// TCP bridge answers `ReloadCheckpoint` frames through this; None
+    /// means remote reloads are rejected with an error frame).
+    pub(crate) fn reload_handle(&self) -> Option<&ReloadHandle> {
+        self.reload.as_ref()
     }
 
     /// Observation length served (what [`Connector::connect`] handles
@@ -504,12 +803,23 @@ impl Connector {
 
 /// A client-side connection handle.
 ///
-/// One request is in flight per handle at a time — a policy client is
-/// inherently sequential (the next observation depends on the previous
-/// action) — so a plain blocking `query` is the whole API. Handles are
-/// `Send`; give each client thread its own via [`PolicyServer::connect`].
+/// Two query surfaces, the same ones the network
+/// [`RemoteHandle`](crate::serve::RemoteHandle) speaks — so both
+/// implement [`QueryTransport`](super::transport::QueryTransport)
+/// identically and a session or flood driver is generic over where the
+/// server lives:
 ///
-/// The query path is cache-first when the server has a response cache:
+/// * blocking [`ClientHandle::query`] — one request in flight at a time
+///   (a policy client is inherently sequential: the next observation
+///   depends on the previous action);
+/// * pipelined [`ClientHandle::submit`] / [`ClientHandle::recv`] — many
+///   requests in flight, completions ([`Completion`]) in server order,
+///   overload surfacing as typed [`Completion::Shed`] data.
+///
+/// Handles are `Send`; give each client thread its own via
+/// [`PolicyServer::connect`].
+///
+/// Both paths are cache-first when the server has a response cache:
 /// probe, and only on a miss pay the queue round trip (inserting the
 /// reply on the way back). TCP bridges drive these same handles, so
 /// remote clients get the cache for free.
@@ -522,6 +832,29 @@ pub struct ClientHandle {
     actions: usize,
     /// Coalescing deadline + slack (see `REPLY_TIMEOUT_SLACK`).
     default_timeout: Duration,
+    /// Next pipelined request id ([`ClientHandle::submit`]).
+    next_id: u32,
+    /// Shared reply channel for tagged (pipelined) requests. The handle
+    /// keeps a sender clone so the channel stays connected even with
+    /// nothing in flight.
+    tagged_tx: Sender<(u32, Reply)>,
+    tagged_rx: Receiver<(u32, Reply)>,
+    /// Pipelined requests awaiting replies (submission order).
+    inflight: Vec<PendingQuery>,
+    /// Completions resolved at submit time (cache hits, sheds), yielded
+    /// by [`ClientHandle::recv`] before it touches the channel.
+    parked: VecDeque<Completion>,
+}
+
+/// One pipelined request in flight on a [`ClientHandle`]: what `recv`
+/// needs to file the reply into the response cache when it lands.
+struct PendingQuery {
+    id: u32,
+    obs: Vec<f32>,
+    obs_hash: u64,
+    /// Cache version captured at probe time — an insert racing a reload
+    /// must never file old-parameter logits under the new version.
+    probe_version: u64,
 }
 
 impl ClientHandle {
@@ -615,6 +948,106 @@ impl ClientHandle {
             }
             Err(RecvTimeoutError::Timeout) => {
                 Err(Error::serve(format!("no reply within {timeout:?}")))
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(Error::serve("request dropped: batcher is gone (server shutting down?)"))
+            }
+        }
+    }
+
+    /// Pipelined submit: enqueue one observation and return its
+    /// handle-local request id without waiting for the reply. Pair with
+    /// [`ClientHandle::recv`] to drain completions — the same surface
+    /// [`RemoteHandle`](crate::serve::RemoteHandle) speaks over a
+    /// socket.
+    ///
+    /// A cache hit or an admission shed resolves immediately: its
+    /// completion parks and the next `recv` yields it without blocking.
+    /// Sheds surface as [`Completion::Shed`] — typed data, never a
+    /// panic — so one shed request costs exactly one completion, same
+    /// as over the wire.
+    pub fn submit(&mut self, obs: &[f32]) -> Result<u32> {
+        if obs.len() != self.obs_len {
+            return Err(Error::Shape(format!(
+                "session {}: observation has {} floats, server expects {}",
+                self.session,
+                obs.len(),
+                self.obs_len
+            )));
+        }
+        let id = self.next_id;
+        self.next_id = self.next_id.wrapping_add(1);
+        let obs_hash = if self.cache.is_some() || self.queue.dedup() {
+            obs_fnv1a(obs)
+        } else {
+            0
+        };
+        let mut probe_version = 0;
+        if let Some(cache) = &self.cache {
+            probe_version = cache.version();
+            let probe = crate::trace::span("serve.cache_probe");
+            if let Some(reply) = cache.get(obs, obs_hash) {
+                drop(probe.arg("hit", 1.0));
+                self.stats.record_cache_hit();
+                self.parked.push_back(Completion::Reply(id, reply));
+                return Ok(id);
+            }
+            drop(probe.arg("hit", 0.0));
+            self.stats.record_cache_miss();
+        }
+        let mut obs_buf = self.queue.obs_pool().take();
+        obs_buf.extend_from_slice(obs);
+        let req = Request {
+            session: self.session,
+            obs: obs_buf,
+            obs_hash,
+            enqueued: Instant::now(),
+            reply: ReplySink::Tagged { id, tx: self.tagged_tx.clone() },
+        };
+        match self.queue.admit(req) {
+            Admission::Admitted => {
+                self.stats.record_admitted();
+                self.inflight.push(PendingQuery { id, obs: obs.to_vec(), obs_hash, probe_version });
+                self.stats.record_inflight(self.inflight.len());
+                Ok(id)
+            }
+            Admission::Shed(reason) => {
+                self.stats.record_shed(reason);
+                self.parked.push_back(Completion::Shed(
+                    id,
+                    format!("session {}: request shed ({})", self.session, reason.name()),
+                ));
+                Ok(id)
+            }
+            Admission::Closed => Err(Error::serve("server is shut down")),
+        }
+    }
+
+    /// Block for the next completion: parked ones (cache hits, sheds)
+    /// first, then replies in server order — which may differ from
+    /// submission order. Errors when nothing is outstanding.
+    pub fn recv(&mut self) -> Result<Completion> {
+        if let Some(done) = self.parked.pop_front() {
+            return Ok(done);
+        }
+        if self.inflight.is_empty() {
+            return Err(Error::serve("recv with no request in flight"));
+        }
+        match self.tagged_rx.recv_timeout(self.default_timeout) {
+            Ok((id, reply)) => {
+                let Some(pos) = self.inflight.iter().position(|p| p.id == id) else {
+                    return Err(Error::serve(format!(
+                        "reply for unknown request id {id} (duplicate or stale reply)"
+                    )));
+                };
+                let done = self.inflight.swap_remove(pos);
+                if let Some(cache) = &self.cache {
+                    cache.put(done.probe_version, &done.obs, done.obs_hash, &reply);
+                }
+                Ok(Completion::Reply(id, reply))
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                Err(Error::serve(format!("no completion within {:?}", self.default_timeout)))
             }
             Err(RecvTimeoutError::Disconnected) => {
                 Err(Error::serve("request dropped: batcher is gone (server shutting down?)"))
@@ -742,9 +1175,13 @@ mod tests {
         // 1 small (width 2) + 1 wide (width 8) shard; a lone client's
         // straggler queries must be served by shard 0, the fast path
         let factory = SyntheticFactory::new(4, 6, 7);
-        let cfg = ServeConfig::new(8, Duration::from_micros(200))
-            .with_shards(2)
-            .with_small_batch(2);
+        let cfg = ServeConfig::builder()
+            .max_batch(8)
+            .max_delay(Duration::from_micros(200))
+            .shards(2)
+            .small_batch(2)
+            .build()
+            .unwrap();
         let server = PolicyServer::start_pool(&factory, cfg).unwrap();
         assert_eq!(server.shards(), 2);
         assert_eq!(server.small_batch(), Some(2));
@@ -767,9 +1204,13 @@ mod tests {
         // the wide shards must serve (nearly) all of it
         let width = 8;
         let factory = SyntheticFactory::new(4, 6, 9);
-        let cfg = ServeConfig::new(width, Duration::from_millis(2))
-            .with_shards(3)
-            .with_small_batch(2);
+        let cfg = ServeConfig::builder()
+            .max_batch(width)
+            .max_delay(Duration::from_millis(2))
+            .shards(3)
+            .small_batch(2)
+            .build()
+            .unwrap();
         let server = PolicyServer::start_pool(&factory, cfg).unwrap();
         let threads: Vec<_> = (0..width)
             .map(|_| {
@@ -806,7 +1247,12 @@ mod tests {
     fn cache_hits_skip_the_queue_and_stay_bitwise() {
         let server = PolicyServer::start(
             SyntheticBackend::new(2, 4, 6, 11),
-            ServeConfig::new(2, Duration::ZERO).with_cache(64),
+            ServeConfig::builder()
+                .max_batch(2)
+                .max_delay(Duration::ZERO)
+                .cache(64)
+                .build()
+                .unwrap(),
         );
         assert_eq!(server.cache_capacity(), Some(64));
         let client = server.connect();
@@ -830,7 +1276,12 @@ mod tests {
     fn params_version_bump_evicts_cached_replies() {
         let server = PolicyServer::start(
             SyntheticBackend::new(2, 4, 6, 3),
-            ServeConfig::new(2, Duration::ZERO).with_cache(16),
+            ServeConfig::builder()
+                .max_batch(2)
+                .max_delay(Duration::ZERO)
+                .cache(16)
+                .build()
+                .unwrap(),
         );
         let client = server.connect();
         let obs = [0.9f32; 4];
@@ -873,8 +1324,15 @@ mod tests {
         // Error::Overloaded instead of queueing behind them
         let slow = SyntheticBackend::new(1, 4, 6, 13)
             .with_cost(Duration::from_millis(400), Duration::ZERO);
-        let server =
-            PolicyServer::start(slow, ServeConfig::new(1, Duration::ZERO).with_max_queue(2));
+        let server = PolicyServer::start(
+            slow,
+            ServeConfig::builder()
+                .max_batch(1)
+                .max_delay(Duration::ZERO)
+                .max_queue(2)
+                .build()
+                .unwrap(),
+        );
         let first = server.connect();
         let t1 = std::thread::spawn(move || first.query(&[0.1; 4]).unwrap());
         std::thread::sleep(Duration::from_millis(100));
@@ -924,5 +1382,230 @@ mod tests {
             assert_eq!(client.query(&obs).unwrap(), solo);
         }
         noisy.join().unwrap();
+    }
+
+    #[test]
+    fn builder_validates_cross_field_invariants() {
+        assert!(matches!(ServeConfig::builder().max_batch(0).build(), Err(Error::Config(_))));
+        assert!(matches!(ServeConfig::builder().shards(0).build(), Err(Error::Config(_))));
+        assert!(matches!(
+            ServeConfig::builder().shards(1).small_batch(2).build(),
+            Err(Error::Config(_))
+        ));
+        let cfg = ServeConfig::builder()
+            .max_batch(8)
+            .max_delay(Duration::from_millis(1))
+            .shards(2)
+            .small_batch(2)
+            .cache(64)
+            .no_dedup(false)
+            .max_queue(16)
+            .trace(false)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.max_batch, 8);
+        assert_eq!(cfg.max_delay, Duration::from_millis(1));
+        assert_eq!((cfg.shards, cfg.small_batch), (2, 2));
+        assert_eq!((cfg.cache, cfg.max_queue), (64, 16));
+        assert!(!cfg.no_dedup && !cfg.trace);
+        // untouched fields keep the defaults
+        let d = ServeConfig::builder().build().unwrap();
+        assert_eq!(d.max_batch, usize::MAX);
+        assert_eq!(d.shards, 1);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_with_setters_still_compose() {
+        let old = ServeConfig::new(4, Duration::from_millis(1))
+            .with_shards(2)
+            .with_small_batch(2)
+            .with_cache(8)
+            .with_no_dedup(true)
+            .with_max_queue(4)
+            .with_trace(false);
+        let new = ServeConfig::builder()
+            .max_batch(4)
+            .max_delay(Duration::from_millis(1))
+            .shards(2)
+            .small_batch(2)
+            .cache(8)
+            .no_dedup(true)
+            .max_queue(4)
+            .build()
+            .unwrap();
+        assert_eq!(old.max_batch, new.max_batch);
+        assert_eq!(old.max_delay, new.max_delay);
+        assert_eq!((old.shards, old.small_batch), (new.shards, new.small_batch));
+        assert_eq!((old.cache, old.max_queue), (new.cache, new.max_queue));
+        assert_eq!((old.no_dedup, old.trace), (new.no_dedup, new.trace));
+    }
+
+    #[test]
+    fn hot_reload_swaps_the_pool_and_bumps_the_version() {
+        let cfg = ServeConfig::builder()
+            .max_batch(4)
+            .max_delay(Duration::ZERO)
+            .shards(2)
+            .build()
+            .unwrap();
+        let server = PolicyServer::start_pool_hot(SyntheticFactory::new(4, 6, 42), cfg).unwrap();
+        assert_eq!(server.params_version(), 0);
+        assert!(server.reload_handle().is_some());
+        let client = server.connect();
+        let obs = [0.6f32; 4];
+        let before = client.query(&obs).unwrap();
+
+        // the post-reload reference: a cold pool restored from the same
+        // checkpoint (the synthetic factory reseeds from the timestep)
+        let reference = PolicyServer::start_pool(&SyntheticFactory::new(4, 6, 99), cfg).unwrap();
+        let want = reference.connect().query(&obs).unwrap();
+        assert_ne!(before, want, "reseeding must actually change the policy");
+
+        let version = server.reload_checkpoint(Checkpoint::new("synthetic", 99)).unwrap();
+        assert_eq!(version, 1);
+        assert_eq!(server.params_version(), 1);
+        // each shard installs at its next batch boundary; queries keep
+        // flowing meanwhile and soon serve the new parameters
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let got = client.query(&obs).unwrap();
+            if got == want {
+                break;
+            }
+            assert_eq!(got, before, "a reply must be wholly old or wholly new");
+            assert!(Instant::now() < deadline, "swap never landed");
+        }
+        let snap = server.shutdown().unwrap();
+        assert_eq!(snap.reload.count, 1);
+        assert_eq!(snap.reload.params_version, 1);
+        assert_eq!(snap.reload.last_timestep, 99);
+        reference.shutdown().unwrap();
+    }
+
+    #[test]
+    fn cold_server_rejects_hot_reload() {
+        let factory = SyntheticFactory::new(4, 6, 5);
+        let server =
+            PolicyServer::start_pool(&factory, ServeConfig::new(2, Duration::ZERO)).unwrap();
+        assert!(server.reload_handle().is_none());
+        match server.reload_checkpoint(Checkpoint::new("synthetic", 9)) {
+            Err(Error::Serve(msg)) => assert!(msg.contains("not enabled")),
+            other => panic!("expected a serve error, got {other:?}"),
+        }
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn hot_pool_left_alone_matches_the_cold_pool_bitwise() {
+        let cfg = ServeConfig::builder()
+            .max_batch(4)
+            .max_delay(Duration::ZERO)
+            .shards(2)
+            .build()
+            .unwrap();
+        let cold = PolicyServer::start_pool(&SyntheticFactory::new(6, 5, 21), cfg).unwrap();
+        let hot = PolicyServer::start_pool_hot(SyntheticFactory::new(6, 5, 21), cfg).unwrap();
+        let (a, b) = (cold.connect(), hot.connect());
+        for i in 0..16 {
+            let obs = vec![0.05 * i as f32 - 0.3; 6];
+            assert_eq!(a.query(&obs).unwrap(), b.query(&obs).unwrap());
+        }
+        assert_eq!(hot.params_version(), 0, "no reload, no version bump");
+        cold.shutdown().unwrap();
+        hot.shutdown().unwrap();
+    }
+
+    #[test]
+    fn pipelined_submit_recv_matches_the_blocking_query() {
+        let server = synthetic_server(4, 6, Duration::from_micros(200));
+        let mut pipelined = server.connect();
+        let blocking = server.connect();
+        let mk = |i: usize| vec![0.1 * i as f32 + 0.05; 6];
+        let n = 12usize;
+        let mut ids = Vec::new();
+        for i in 0..n {
+            ids.push(pipelined.submit(&mk(i)).unwrap());
+        }
+        let mut got = std::collections::HashMap::new();
+        for _ in 0..n {
+            match pipelined.recv().unwrap() {
+                Completion::Reply(id, reply) => {
+                    assert!(got.insert(id, reply).is_none(), "duplicate completion id");
+                }
+                Completion::Shed(id, msg) => panic!("unbounded server shed id {id}: {msg}"),
+            }
+        }
+        for (i, id) in ids.iter().enumerate() {
+            let want = blocking.query(&mk(i)).unwrap();
+            assert_eq!(got[id], want, "id {id} matched the wrong reply");
+        }
+        assert!(matches!(pipelined.recv(), Err(Error::Serve(_))), "nothing left in flight");
+        let snap = server.shutdown().unwrap();
+        assert_eq!(snap.queries, 2 * n as u64);
+    }
+
+    #[test]
+    fn pipelined_cache_hits_park_and_never_reach_the_queue() {
+        let server = PolicyServer::start(
+            SyntheticBackend::new(2, 4, 6, 17),
+            ServeConfig::builder()
+                .max_batch(2)
+                .max_delay(Duration::ZERO)
+                .cache(16)
+                .build()
+                .unwrap(),
+        );
+        let mut client = server.connect();
+        let obs = [0.4f32; 4];
+        let warm = client.query(&obs).unwrap(); // miss: fills the cache
+        let id = client.submit(&obs).unwrap(); // hit: parks immediately
+        match client.recv().unwrap() {
+            Completion::Reply(got_id, reply) => {
+                assert_eq!(got_id, id);
+                assert_eq!(reply, warm, "a parked hit must be the cached reply");
+            }
+            Completion::Shed(id, msg) => panic!("hit shed as id {id}: {msg}"),
+        }
+        let snap = server.shutdown().unwrap();
+        assert_eq!(snap.queries, 1, "the hit must never reach the batcher");
+        assert_eq!(snap.cache.hits, 1);
+        assert_eq!(snap.cache.misses, 1);
+    }
+
+    #[test]
+    fn pipelined_sheds_surface_as_typed_completions() {
+        let slow = SyntheticBackend::new(1, 4, 6, 19)
+            .with_cost(Duration::from_millis(300), Duration::ZERO);
+        let server = PolicyServer::start(
+            slow,
+            ServeConfig::builder()
+                .max_batch(1)
+                .max_delay(Duration::ZERO)
+                .max_queue(2)
+                .build()
+                .unwrap(),
+        );
+        let mut client = server.connect();
+        let n = 8usize;
+        for i in 0..n {
+            client.submit(&[0.1 * i as f32; 4]).unwrap();
+        }
+        let (mut ok, mut shed) = (0u64, 0u64);
+        for _ in 0..n {
+            match client.recv().unwrap() {
+                Completion::Reply(..) => ok += 1,
+                Completion::Shed(_, msg) => {
+                    assert!(msg.contains("shed"), "unexpected shed message: {msg}");
+                    shed += 1;
+                }
+            }
+        }
+        assert_eq!(ok + shed, n as u64);
+        assert!(shed >= 1, "a capacity-2 queue must shed an 8-deep burst");
+        let snap = server.shutdown().unwrap();
+        assert_eq!(snap.overload.admitted, ok);
+        assert_eq!(snap.overload.shed_total, shed);
+        assert_eq!(snap.queries, ok);
     }
 }

@@ -43,6 +43,16 @@
 //! `serve.jsonl`), and the conservation the overload tests pin down is
 //! `admitted + shed == submitted`. All zero on an unbounded queue with
 //! lockstep clients.
+//!
+//! Since PR 8 the stats also make the **control plane** observable:
+//! every completed hot checkpoint reload books the params version it
+//! published, the loaded checkpoint's trainer timestep and the cache
+//! entries the version bump evicted
+//! ([`ServeStats::record_reload`]), both as rollup counters in the
+//! snapshot's [`ReloadSnapshot`] (a `"reload"` object in `serve.jsonl`)
+//! and as an ordered per-event list ([`ServeStats::reload_events`]) the
+//! CLI turns into one `serve_reload` JSONL record per reload. All zero
+//! on a server that never reloads.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -163,6 +173,36 @@ struct TransportCell {
     wire_errors: AtomicU64,
 }
 
+/// Control-plane counters (written by the reload path; all zero until
+/// the first hot checkpoint reload).
+#[derive(Default)]
+struct ReloadCell {
+    /// Completed hot reloads.
+    count: AtomicU64,
+    /// Params version published by the most recent reload.
+    params_version: AtomicU64,
+    /// Trainer timestep of the most recently loaded checkpoint.
+    last_timestep: AtomicU64,
+    /// Response-cache entries evicted across all reloads.
+    evicted_entries: AtomicU64,
+    /// One record per completed reload, publish order (reloads are
+    /// rare — checkpoint cadence, not query cadence — so an unbounded
+    /// list is fine).
+    events: Mutex<Vec<ReloadEvent>>,
+}
+
+/// One completed hot checkpoint reload (see
+/// [`ServeStats::record_reload`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReloadEvent {
+    /// Params version the reload published.
+    pub version: u64,
+    /// Trainer timestep of the loaded checkpoint.
+    pub timestep: u64,
+    /// Response-cache entries the version bump evicted.
+    pub evicted: u64,
+}
+
 /// Admission-control counters (written by client handles and the v2
 /// bridge threads; all zero on an unbounded queue).
 #[derive(Default)]
@@ -209,6 +249,8 @@ pub struct ServeStats {
     cache: CacheCell,
     /// Admission-control counters (zero on an unbounded queue).
     overload: OverloadCell,
+    /// Control-plane counters (zero until the first hot reload).
+    reload: ReloadCell,
     started: Instant,
 }
 
@@ -239,6 +281,7 @@ impl ServeStats {
             transport: TransportCell::default(),
             cache: CacheCell::default(),
             overload: OverloadCell::default(),
+            reload: ReloadCell::default(),
             started: Instant::now(),
         }
     }
@@ -386,6 +429,35 @@ impl ServeStats {
         self.overload.peak_inflight.fetch_max(n as u64, Ordering::Relaxed);
     }
 
+    /// Book one completed hot checkpoint reload: the params version it
+    /// published, the loaded checkpoint's trainer timestep, and how
+    /// many cached replies the version bump evicted.
+    pub fn record_reload(&self, version: u64, timestep: u64, evicted: u64) {
+        self.reload.count.fetch_add(1, Ordering::Relaxed);
+        self.reload.params_version.store(version, Ordering::Relaxed);
+        self.reload.last_timestep.store(timestep, Ordering::Relaxed);
+        self.reload.evicted_entries.fetch_add(evicted, Ordering::Relaxed);
+        self.reload.events.lock().unwrap().push(ReloadEvent { version, timestep, evicted });
+    }
+
+    /// Completed hot reloads so far (what a `ServerInfo` control frame
+    /// reports).
+    pub fn reloads(&self) -> u64 {
+        self.reload.count.load(Ordering::Relaxed)
+    }
+
+    /// Trainer timestep of the most recently reloaded checkpoint (0
+    /// until the first reload).
+    pub fn last_reload_timestep(&self) -> u64 {
+        self.reload.last_timestep.load(Ordering::Relaxed)
+    }
+
+    /// Every completed reload, publish order — what the CLI renders as
+    /// one `serve_reload` JSONL record per event.
+    pub fn reload_events(&self) -> Vec<ReloadEvent> {
+        self.reload.events.lock().unwrap().clone()
+    }
+
     /// Consistent point-in-time view (sorts a copy of the latencies).
     pub fn snapshot(&self) -> StatsSnapshot {
         let queries = self.queries.load(Ordering::Relaxed);
@@ -466,6 +538,12 @@ impl ServeStats {
                 shed_pipeline,
                 shed_total: shed_queue_full + shed_session + shed_pipeline,
                 peak_inflight: self.overload.peak_inflight.load(Ordering::Relaxed),
+            },
+            reload: ReloadSnapshot {
+                count: self.reload.count.load(Ordering::Relaxed),
+                params_version: self.reload.params_version.load(Ordering::Relaxed),
+                last_timestep: self.reload.last_timestep.load(Ordering::Relaxed),
+                evicted_entries: self.reload.evicted_entries.load(Ordering::Relaxed),
             },
             rejected: self.rejected.load(Ordering::Relaxed),
             qps: queries as f64 / wall_secs.max(1e-9),
@@ -679,6 +757,40 @@ impl OverloadSnapshot {
     }
 }
 
+/// Control-plane counters inside a [`StatsSnapshot`] (all zero until
+/// the first hot checkpoint reload).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReloadSnapshot {
+    /// Completed hot reloads.
+    pub count: u64,
+    /// Params version published by the most recent reload (0 = the
+    /// startup parameters are still serving).
+    pub params_version: u64,
+    /// Trainer timestep of the most recently loaded checkpoint.
+    pub last_timestep: u64,
+    /// Response-cache entries evicted across all reloads.
+    pub evicted_entries: u64,
+}
+
+impl ReloadSnapshot {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("params_version", Json::Num(self.params_version as f64)),
+            ("last_timestep", Json::Num(self.last_timestep as f64)),
+            ("evicted_entries", Json::Num(self.evicted_entries as f64)),
+        ])
+    }
+
+    /// Human-oriented one-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "reload: {} reload(s) | params_version {} | last checkpoint step {}",
+            self.count, self.params_version, self.last_timestep
+        )
+    }
+}
+
 /// Submit->claim queue-wait histogram inside a [`StatsSnapshot`]: how
 /// long requests sat in the submission queue before a batcher shard
 /// claimed them. This is the stats-side view of the same intervals the
@@ -729,6 +841,8 @@ pub struct StatsSnapshot {
     pub cache: CacheSnapshot,
     /// Admission-control counters (zero on an unbounded queue).
     pub overload: OverloadSnapshot,
+    /// Control-plane counters (zero until the first hot reload).
+    pub reload: ReloadSnapshot,
     pub rejected: u64,
     /// Queries per second over the server's lifetime so far.
     pub qps: f64,
@@ -767,6 +881,7 @@ impl StatsSnapshot {
             ("transport", self.transport.to_json()),
             ("cache", self.cache.to_json()),
             ("overload", self.overload.to_json()),
+            ("reload", self.reload.to_json()),
         ])
     }
 
@@ -978,6 +1093,36 @@ mod tests {
         assert!(j.contains("\"overload\":{"), "overload object missing from JSON");
         assert!(j.contains("\"shed_total\":4"));
         assert!(j.contains("\"peak_inflight\":9"));
+    }
+
+    #[test]
+    fn reload_counters_accumulate_and_serialize() {
+        let s = ServeStats::new();
+        assert_eq!(s.snapshot().reload, ReloadSnapshot::default());
+        assert_eq!(s.reloads(), 0);
+        assert!(s.reload_events().is_empty());
+        s.record_reload(1, 4_000, 17);
+        s.record_reload(2, 8_000, 0);
+        assert_eq!(s.reloads(), 2);
+        assert_eq!(s.last_reload_timestep(), 8_000);
+        assert_eq!(
+            s.reload_events(),
+            vec![
+                ReloadEvent { version: 1, timestep: 4_000, evicted: 17 },
+                ReloadEvent { version: 2, timestep: 8_000, evicted: 0 },
+            ],
+            "events keep publish order"
+        );
+        let r = s.snapshot().reload;
+        assert_eq!(r.count, 2);
+        assert_eq!(r.params_version, 2, "snapshot keeps the latest version");
+        assert_eq!(r.last_timestep, 8_000);
+        assert_eq!(r.evicted_entries, 17, "evictions sum across reloads");
+        assert!(r.summary().contains("2 reload(s)"));
+        let j = s.snapshot().to_json().to_string_compact();
+        assert!(j.contains("\"reload\":{"), "reload object missing from JSON");
+        assert!(j.contains("\"params_version\":2"));
+        assert!(j.contains("\"last_timestep\":8000"));
     }
 
     #[test]

@@ -26,13 +26,22 @@
 //! generic over it, so the same session code — environment,
 //! preprocessing, sampler — drives an in-process server or a remote one,
 //! and the loopback integration tests assert the two are bit-for-bit
-//! identical.
+//! identical. Since PR 8 the seam carries **both** query surfaces: the
+//! blocking `query` and the pipelined `submit`/`recv` pair (completions
+//! as [`Completion`] values, overload as typed [`Completion::Shed`]
+//! data), implemented identically by the in-process
+//! [`ClientHandle`], the network [`RemoteHandle`] and the failover
+//! [`ReconnectingHandle`] — so a flood driver or a session is generic
+//! over where the server lives. The same PR extended the wire with
+//! control frames ([`Frame::ReloadCheckpoint`] / [`Frame::ServerInfo`]
+//! / [`Frame::GetInfo`], protocol v3): the train→serve control plane
+//! rides the data plane's transport.
 
 pub mod tcp;
 pub mod wire;
 
 pub use tcp::{
-    run_remote_clients, Completion, ReconnectingHandle, RemoteHandle, TcpFrontend,
+    run_remote_clients, ReconnectingHandle, RemoteHandle, ServerStatus, TcpFrontend,
     DEFAULT_PIPELINE,
 };
 pub use wire::{negotiate_version, Frame, WIRE_VERSION};
@@ -41,6 +50,19 @@ use crate::error::Result;
 
 use super::queue::Reply;
 use super::server::ClientHandle;
+
+/// One completed pipelined request (see [`QueryTransport::recv`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Completion {
+    /// The reply to the request with this id.
+    Reply(u32, Reply),
+    /// The request with this id was shed by admission control; the
+    /// message names the shed reason. Retry or drop — the connection
+    /// and every other in-flight request are unaffected. Over the wire
+    /// this is a [`Frame::Overloaded`]; in process it is the admission
+    /// verdict of [`ClientHandle::submit`], typed data either way.
+    Shed(u32, String),
+}
 
 /// The client-side query surface a [`Session`](crate::serve::Session)
 /// drives: one blocking request in flight at a time, plus the connection
@@ -64,6 +86,18 @@ pub trait QueryTransport: Send {
 
     /// Submit one observation and block for the policy/value reply.
     fn query(&mut self, obs: &[f32]) -> Result<Reply>;
+
+    /// Pipelined submit: enqueue one observation and return its
+    /// connection-local request id without waiting for the reply. Pair
+    /// with [`QueryTransport::recv`] to drain completions; many
+    /// requests may be in flight at once.
+    fn submit(&mut self, obs: &[f32]) -> Result<u32>;
+
+    /// Block for the next completion — replies arrive in server order,
+    /// which may differ from submission order, and sheds surface as
+    /// typed [`Completion::Shed`] data, never a panic. Errors when
+    /// nothing is outstanding.
+    fn recv(&mut self) -> Result<Completion>;
 }
 
 impl QueryTransport for ClientHandle {
@@ -81,5 +115,13 @@ impl QueryTransport for ClientHandle {
 
     fn query(&mut self, obs: &[f32]) -> Result<Reply> {
         ClientHandle::query(self, obs)
+    }
+
+    fn submit(&mut self, obs: &[f32]) -> Result<u32> {
+        ClientHandle::submit(self, obs)
+    }
+
+    fn recv(&mut self) -> Result<Completion> {
+        ClientHandle::recv(self)
     }
 }

@@ -41,6 +41,19 @@
 //! in-flight query on it) stays live. [`ReconnectingHandle`] adds the
 //! client-side failover story: a server list, jittered exponential
 //! backoff, transparent re-handshake.
+//!
+//! Since PR 8 the wire also carries the train→serve control plane
+//! (**v3**): [`Frame::ReloadCheckpoint`] pushes a serialized checkpoint
+//! for a hot-started server to swap in without restarting
+//! ([`RemoteHandle::reload_checkpoint`], `paac ctl reload`), and
+//! [`Frame::GetInfo`] / [`Frame::ServerInfo`] report the live
+//! `params_version` and reload counters
+//! ([`RemoteHandle::server_info`], `paac ctl info`). Control frames
+//! ride the same connection as queries — the data plane keeps flowing
+//! while a reload stages — and a v1/v2 peer never sees them. Both
+//! remote handles also implement the full two-surface
+//! [`QueryTransport`]: blocking `query` plus pipelined `submit`/`recv`
+//! yielding typed [`Completion`] values.
 
 use std::collections::HashMap;
 use std::io::{BufReader, ErrorKind};
@@ -53,6 +66,7 @@ use std::time::Duration;
 
 use crate::envs::{GameId, ObsMode};
 use crate::error::{Error, Result};
+use crate::runtime::checkpoint::Checkpoint;
 use crate::serve::cache::obs_fnv1a;
 use crate::serve::queue::{Admission, Reply, Request};
 use crate::serve::server::{ClientHandle, Connector};
@@ -64,7 +78,7 @@ use super::wire::{
     negotiate_version, read_frame, read_frame_or_eof, write_frame, write_query, write_query_v2,
     Frame, WIRE_VERSION,
 };
-use super::QueryTransport;
+use super::{Completion, QueryTransport};
 
 /// How often the accept loop re-checks the stop flag / reaps finished
 /// bridge threads while the listener has nothing to accept.
@@ -320,7 +334,7 @@ fn bridge_conn(stream: TcpStream, connector: &Connector, pipeline: usize) -> Res
     stats.record_frame_tx();
 
     if version >= 2 {
-        return bridge_v2(reader, writer, connector, handle, pipeline);
+        return bridge_v2(reader, writer, connector, handle, pipeline, version);
     }
 
     // v1 steady state: one Query in flight at a time
@@ -386,12 +400,22 @@ struct InflightQuery {
 /// are answered inline by the reader. The socket's write half is
 /// mutex-shared between the two — every frame is written whole under
 /// the lock, so frames never interleave on the wire.
+///
+/// On a v3 connection the same loop answers control frames inline:
+/// `ReloadCheckpoint` funnels into the server's [`ReloadHandle`] (an
+/// `Error` frame if the server was not started hot) and `GetInfo` gets
+/// a `ServerInfo` snapshot — in-flight queries are untouched either
+/// way. A v2 peer sending a control frame hits the unexpected-frame
+/// path, exactly as before this build.
+///
+/// [`ReloadHandle`]: crate::serve::reload::ReloadHandle
 fn bridge_v2(
     mut reader: BufReader<TcpStream>,
     writer: TcpStream,
     connector: &Connector,
     handle: ClientHandle,
     pipeline: usize,
+    version: u16,
 ) -> Result<()> {
     let stats = connector.stats();
     let writer = Arc::new(Mutex::new(writer));
@@ -514,8 +538,25 @@ fn bridge_v2(
                     }
                 }
             }
+            Frame::ReloadCheckpoint { ckpt } if version >= 3 => {
+                let outcome = Checkpoint::from_bytes(&ckpt).and_then(|c| {
+                    match connector.reload_handle() {
+                        Some(h) => h.reload(c),
+                        None => Err(Error::serve(
+                            "hot reload is not enabled: start the server with start_pool_hot",
+                        )),
+                    }
+                });
+                match outcome {
+                    Ok(_) => send_server_info(&writer, connector, &handle, stats),
+                    Err(e) => send_error(&mut writer.lock().unwrap(), stats, &e.to_string()),
+                }
+            }
+            Frame::GetInfo if version >= 3 => {
+                send_server_info(&writer, connector, &handle, stats);
+            }
             other => {
-                let msg = format!("unexpected {} frame on a v2 connection", other.name());
+                let msg = format!("unexpected {} frame on a v{version} connection", other.name());
                 send_error(&mut writer.lock().unwrap(), stats, &msg);
                 break Err(Error::wire(msg));
             }
@@ -527,6 +568,27 @@ fn bridge_v2(
     drop(reply_tx);
     let _ = writer_thread.join();
     result
+}
+
+/// Best-effort `ServerInfo` frame: the control plane's view of the
+/// server — live params version, reload counters, served shape.
+fn send_server_info(
+    writer: &Arc<Mutex<TcpStream>>,
+    connector: &Connector,
+    handle: &ClientHandle,
+    stats: &ServeStats,
+) {
+    let frame = Frame::ServerInfo {
+        params_version: connector.params_version(),
+        reloads: stats.reloads(),
+        timestep: stats.last_reload_timestep(),
+        obs_len: handle.obs_len() as u32,
+        actions: handle.actions() as u32,
+    };
+    let mut w = writer.lock().unwrap();
+    if write_frame(&mut *w, &frame).is_ok() {
+        stats.record_frame_tx();
+    }
 }
 
 /// Best-effort per-id Overloaded frame: the shed stays typed on the
@@ -563,15 +625,22 @@ fn read_timed<R: std::io::Read>(r: &mut R, waiting_for: &str) -> Result<Frame> {
     }
 }
 
-/// One completed pipelined request (see [`RemoteHandle::recv`]).
-#[derive(Clone, Debug, PartialEq)]
-pub enum Completion {
-    /// The reply to the request with this id.
-    Reply(u32, Reply),
-    /// The server shed the request with this id ([`Frame::Overloaded`]);
-    /// the message names the shed reason. Retry or drop — the
-    /// connection and every other in-flight request are unaffected.
-    Shed(u32, String),
+/// A server's control-plane state, as carried by a
+/// [`Frame::ServerInfo`] answer to [`RemoteHandle::server_info`] or
+/// [`RemoteHandle::reload_checkpoint`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServerStatus {
+    /// Current parameters version (bumped once per completed reload).
+    pub params_version: u64,
+    /// Total completed hot reloads since the server started.
+    pub reloads: u64,
+    /// Training timestep of the checkpoint now serving (0 until the
+    /// first reload).
+    pub timestep: u64,
+    /// Served observation length.
+    pub obs_len: u32,
+    /// Served action count.
+    pub actions: u32,
 }
 
 /// Client side of the wire protocol: the network twin of
@@ -720,6 +789,71 @@ impl RemoteHandle {
         }
     }
 
+    /// Push a serialized checkpoint to the server (protocol v3): the
+    /// server restores it, hot-swaps every shard at its next batch
+    /// boundary, and answers with its new control-plane state. `ckpt`
+    /// is a [`Checkpoint::to_bytes`] container. In-flight pipelined
+    /// completions that arrive first are parked for later
+    /// [`RemoteHandle::recv`] calls; a refused reload (bad checkpoint,
+    /// cold-started server) is an error here and leaves the connection
+    /// — and the server — fully usable.
+    pub fn reload_checkpoint(&mut self, ckpt: Vec<u8>) -> Result<ServerStatus> {
+        self.check_control()?;
+        write_frame(&mut self.writer, &Frame::ReloadCheckpoint { ckpt })?;
+        self.wait_for_info("reload ack")
+    }
+
+    /// Ask the server for its control-plane state (protocol v3): live
+    /// params version, reload counters and served shape.
+    pub fn server_info(&mut self) -> Result<ServerStatus> {
+        self.check_control()?;
+        write_frame(&mut self.writer, &Frame::GetInfo)?;
+        self.wait_for_info("server info")
+    }
+
+    fn check_control(&self) -> Result<()> {
+        if self.version < 3 {
+            return Err(Error::serve(format!(
+                "control frames need protocol v3 (the server acked v{})",
+                self.version
+            )));
+        }
+        Ok(())
+    }
+
+    /// Receive until a `ServerInfo` lands, parking data-plane
+    /// completions that arrive first.
+    fn wait_for_info(&mut self, waiting_for: &str) -> Result<ServerStatus> {
+        loop {
+            match read_timed(&mut self.reader, waiting_for)? {
+                Frame::ServerInfo { params_version, reloads, timestep, obs_len, actions } => {
+                    return Ok(ServerStatus {
+                        params_version,
+                        reloads,
+                        timestep,
+                        obs_len,
+                        actions,
+                    });
+                }
+                Frame::ReplyV2 { id, probs, value } => {
+                    self.pending.insert(id, Ok(Reply { probs, value }));
+                }
+                Frame::Overloaded { id, message } => {
+                    self.pending.insert(id, Err(message));
+                }
+                Frame::Error { message } => {
+                    return Err(Error::serve(format!("server error: {message}")));
+                }
+                other => {
+                    return Err(Error::wire(format!(
+                        "expected ServerInfo to answer a control frame, got {}",
+                        other.name()
+                    )));
+                }
+            }
+        }
+    }
+
     fn check_shape(&self, obs: &[f32]) -> Result<()> {
         if obs.len() != self.obs_len {
             return Err(Error::Shape(format!(
@@ -785,6 +919,14 @@ impl QueryTransport for RemoteHandle {
     fn query(&mut self, obs: &[f32]) -> Result<Reply> {
         RemoteHandle::query(self, obs)
     }
+
+    fn submit(&mut self, obs: &[f32]) -> Result<u32> {
+        RemoteHandle::submit(self, obs)
+    }
+
+    fn recv(&mut self) -> Result<Completion> {
+        RemoteHandle::recv(self)
+    }
 }
 
 /// A self-healing client: [`RemoteHandle`] plus a server list, jittered
@@ -817,6 +959,13 @@ pub struct ReconnectingHandle {
     rng: Pcg32,
     max_attempts: u32,
     base_backoff: Duration,
+    /// Next handle-local (outer) pipelined request id. Outer ids are
+    /// stable across failovers — inner ids restart at 0 on every
+    /// reconnect, so callers never see them.
+    next_id: u32,
+    /// In-flight pipelined requests: inner (connection-local) id → the
+    /// outer id [`ReconnectingHandle::submit`] handed out.
+    ids: HashMap<u32, u32>,
 }
 
 impl ReconnectingHandle {
@@ -850,6 +999,8 @@ impl ReconnectingHandle {
                         rng: Pcg32::new(seed, 0xFA11_03ED),
                         max_attempts: RETRY_MAX_ATTEMPTS,
                         base_backoff: RETRY_BASE_BACKOFF,
+                        next_id: 0,
+                        ids: HashMap::new(),
                     });
                 }
                 Err(e) => last = Some(e),
@@ -906,6 +1057,11 @@ impl ReconnectingHandle {
     /// address: the next attempt re-handshakes there.
     fn rotate(&mut self) {
         self.inner = None;
+        // inner request ids are connection-local: anything still mapped
+        // was in flight on the dead socket and will never complete, and
+        // the next connection's inner ids restart at 0 — keeping stale
+        // entries would misfile fresh completions
+        self.ids.clear();
         self.cursor = (self.cursor + 1) % self.addrs.len();
     }
 
@@ -964,6 +1120,73 @@ impl ReconnectingHandle {
         }
         Err(last.unwrap_or_else(|| Error::serve("retry budget spent with no attempt made")))
     }
+
+    /// Pipelined submit on the current connection. Unlike
+    /// [`ReconnectingHandle::query`], pipelined requests do **not**
+    /// fail over transparently — a mid-flight reconnect would strand
+    /// every id already on the dead socket — so a connection error
+    /// clears the in-flight set, rotates to the next server and
+    /// propagates; the caller resubmits what it still cares about. The
+    /// returned (outer) ids are handle-local and stable across
+    /// failovers.
+    pub fn submit(&mut self, obs: &[f32]) -> Result<u32> {
+        if self.inner.is_none() {
+            if let Err(e) = self.reconnect() {
+                self.rotate();
+                return Err(e);
+            }
+        }
+        let handle = self.inner.as_mut().expect("connection just established");
+        match handle.submit(obs) {
+            Ok(inner_id) => {
+                let outer = self.next_id;
+                self.next_id = self.next_id.wrapping_add(1);
+                self.ids.insert(inner_id, outer);
+                Ok(outer)
+            }
+            Err(e @ Error::Shape(_)) => Err(e), // never transient
+            Err(e) => {
+                self.rotate();
+                Err(e)
+            }
+        }
+    }
+
+    /// Block for the next completion of a [`ReconnectingHandle::submit`]
+    /// request, with ids translated back to the outer space. Errors
+    /// when nothing is in flight, and on connection loss — after which
+    /// the in-flight set is empty and the next
+    /// [`ReconnectingHandle::submit`] reconnects.
+    pub fn recv(&mut self) -> Result<Completion> {
+        loop {
+            if self.ids.is_empty() {
+                return Err(Error::serve("recv with no request in flight"));
+            }
+            let done = match self.inner.as_mut() {
+                Some(h) => h.recv(),
+                None => Err(Error::serve("connection lost with requests in flight")),
+            };
+            match done {
+                Ok(Completion::Reply(inner, reply)) => {
+                    if let Some(outer) = self.ids.remove(&inner) {
+                        return Ok(Completion::Reply(outer, reply));
+                    }
+                    // a completion for an id the last rotate() wrote
+                    // off: drop it and keep draining
+                }
+                Ok(Completion::Shed(inner, msg)) => {
+                    if let Some(outer) = self.ids.remove(&inner) {
+                        self.sheds += 1;
+                        return Ok(Completion::Shed(outer, msg));
+                    }
+                }
+                Err(e) => {
+                    self.rotate();
+                    return Err(e);
+                }
+            }
+        }
+    }
 }
 
 impl QueryTransport for ReconnectingHandle {
@@ -981,6 +1204,14 @@ impl QueryTransport for ReconnectingHandle {
 
     fn query(&mut self, obs: &[f32]) -> Result<Reply> {
         ReconnectingHandle::query(self, obs)
+    }
+
+    fn submit(&mut self, obs: &[f32]) -> Result<u32> {
+        ReconnectingHandle::submit(self, obs)
+    }
+
+    fn recv(&mut self) -> Result<Completion> {
+        ReconnectingHandle::recv(self)
     }
 }
 
@@ -1287,6 +1518,92 @@ mod tests {
         // the bridge is parked in a blocking read; shutdown must not hang
         frontend.shutdown().unwrap();
         assert!(handle.query(&[0.0; 4]).is_err(), "socket should be closed");
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn control_frames_reload_a_hot_pool_over_the_wire() {
+        let factory = SyntheticFactory::new(4, ACTIONS, 42);
+        let cfg = ServeConfig::builder().max_batch(4).max_delay(Duration::ZERO).build().unwrap();
+        let server = PolicyServer::start_pool_hot(factory, cfg).unwrap();
+        let frontend = TcpFrontend::bind("127.0.0.1:0", server.connector(), None).unwrap();
+        let addr = frontend.local_addr().to_string();
+        let mut h = RemoteHandle::connect(&addr).unwrap();
+        assert_eq!(h.version(), WIRE_VERSION);
+
+        let info = h.server_info().unwrap();
+        assert_eq!(info.params_version, 0, "no reload yet");
+        assert_eq!(info.reloads, 0);
+        assert_eq!(info.obs_len, 4);
+        assert_eq!(info.actions, ACTIONS as u32);
+
+        let pushed = Checkpoint::new("synthetic", 321);
+        let info = h.reload_checkpoint(pushed.to_bytes()).unwrap();
+        assert_eq!(info.params_version, 1, "the reload must bump the version");
+        assert_eq!(info.reloads, 1);
+        assert_eq!(info.timestep, 321);
+
+        // the data plane keeps flowing on the same connection
+        assert_eq!(h.query(&[0.25; 4]).unwrap().probs.len(), ACTIONS);
+        drop(h);
+        frontend.shutdown().unwrap();
+        let snap = server.shutdown().unwrap();
+        assert_eq!(snap.reload.count, 1);
+        assert_eq!(snap.reload.params_version, 1);
+    }
+
+    #[test]
+    fn a_cold_pool_refuses_wire_reloads_and_the_connection_survives() {
+        let (server, frontend, addr) = loopback(4, 2, Duration::ZERO, None);
+        let mut h = RemoteHandle::connect(&addr).unwrap();
+        let err = h.reload_checkpoint(Checkpoint::new("synthetic", 1).to_bytes()).unwrap_err();
+        assert!(err.to_string().contains("not enabled"), "{err}");
+        assert_eq!(h.query(&[0.5; 4]).unwrap().probs.len(), ACTIONS);
+        let info = h.server_info().unwrap();
+        assert_eq!(info.params_version, 0, "a refused reload must not bump anything");
+        drop(h);
+        frontend.shutdown().unwrap();
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn a_v2_connection_refuses_control_frames_client_side() {
+        let (server, frontend, addr) = loopback(4, 2, Duration::ZERO, None);
+        let mut h = RemoteHandle::connect_versioned(&addr, 2).unwrap();
+        assert!(matches!(h.server_info(), Err(Error::Serve(_))));
+        assert!(matches!(h.reload_checkpoint(Vec::new()), Err(Error::Serve(_))));
+        drop(h);
+        frontend.shutdown().unwrap();
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn reconnecting_handle_pipelines_with_stable_outer_ids() {
+        let (server, frontend, addr) = loopback(4, 4, Duration::ZERO, None);
+        let mut h = ReconnectingHandle::connect(vec![addr]).unwrap();
+        let mk = |i: usize| vec![0.2 * i as f32 + 0.1; 4];
+        let n = 8usize;
+        let mut ids = Vec::new();
+        for i in 0..n {
+            ids.push(h.submit(&mk(i)).unwrap());
+        }
+        let mut got: HashMap<u32, Reply> = HashMap::new();
+        for _ in 0..n {
+            match h.recv().unwrap() {
+                Completion::Reply(id, reply) => {
+                    assert!(got.insert(id, reply).is_none(), "duplicate outer id");
+                }
+                Completion::Shed(id, msg) => panic!("unbounded server shed id {id}: {msg}"),
+            }
+        }
+        let local = server.connect();
+        for (i, id) in ids.iter().enumerate() {
+            let want = local.query(&mk(i)).unwrap();
+            assert_eq!(got[id], want, "outer id {id} matched the wrong reply");
+        }
+        assert!(matches!(h.recv(), Err(Error::Serve(_))), "idle recv must error");
+        drop((h, local));
+        frontend.shutdown().unwrap();
         server.shutdown().unwrap();
     }
 

@@ -26,10 +26,16 @@
 //!   an individual request with [`Frame::Overloaded`] when admission
 //!   control rejects it (the connection stays healthy — only that id
 //!   failed).
+//! * **v3** adds the control plane: [`Frame::ReloadCheckpoint`] pushes
+//!   a serialized checkpoint container for the server to hot-swap into
+//!   its shard pool, and [`Frame::GetInfo`] / [`Frame::ServerInfo`]
+//!   report the live `params_version` and reload count. Control frames
+//!   ride the same connection as queries — the data plane keeps flowing
+//!   while a reload stages.
 //!
 //! Version negotiation is min-wins ([`negotiate_version`]): a v1-only
-//! peer on either side of a v2 build gets the original lockstep
-//! protocol, byte for byte.
+//! peer on either side of a newer build gets the original lockstep
+//! protocol, byte for byte, and a v2 peer never sees a control frame.
 //!
 //! Observations and policy rows travel as raw little-endian `f32` bits,
 //! so a remote query is **bit-identical** to an in-process one — the
@@ -48,8 +54,9 @@ use crate::error::{Error, Result};
 pub const WIRE_MAGIC: u32 = u32::from_le_bytes(*b"PAAC");
 
 /// Protocol version spoken by this build, carried in Hello/HelloAck.
-/// v1 = lockstep Query/Reply; v2 adds tagged pipelined frames.
-pub const WIRE_VERSION: u16 = 2;
+/// v1 = lockstep Query/Reply; v2 adds tagged pipelined frames; v3 adds
+/// the control frames (ReloadCheckpoint / GetInfo / ServerInfo).
+pub const WIRE_VERSION: u16 = 3;
 
 /// Pick the protocol version for a connection whose peer announced
 /// `peer` in its Hello: min-wins, so either side can be the older
@@ -94,6 +101,33 @@ pub enum Frame {
     /// Server → client (v2): admission control shed the query with this
     /// id. The connection stays usable — only this request failed.
     Overloaded { id: u32, message: String },
+    /// Client → server (v3, control plane): hot-swap the shard pool onto
+    /// the checkpoint serialized in `ckpt` (a [`Checkpoint::to_bytes`]
+    /// container — self-describing, CRC-checked). The server answers
+    /// with [`Frame::ServerInfo`] on success or [`Frame::Error`] if the
+    /// checkpoint is rejected; in-flight queries are unaffected either
+    /// way.
+    ///
+    /// [`Checkpoint::to_bytes`]: crate::runtime::checkpoint::Checkpoint::to_bytes
+    ReloadCheckpoint { ckpt: Vec<u8> },
+    /// Server → client (v3, control plane): the live control-plane state
+    /// — answers [`Frame::GetInfo`] and acks [`Frame::ReloadCheckpoint`].
+    ServerInfo {
+        /// Current parameters version (bumped once per swap).
+        params_version: u64,
+        /// Total completed hot reloads since the server started.
+        reloads: u64,
+        /// Training timestep of the checkpoint now being served (0 until
+        /// the first reload for backends that predate the counter).
+        timestep: u64,
+        /// Served observation length, for client-side sanity checks.
+        obs_len: u32,
+        /// Served action count.
+        actions: u32,
+    },
+    /// Client → server (v3, control plane): ask for a
+    /// [`Frame::ServerInfo`] snapshot.
+    GetInfo,
 }
 
 impl Frame {
@@ -108,6 +142,9 @@ impl Frame {
             Frame::QueryV2 { .. } => 6,
             Frame::ReplyV2 { .. } => 7,
             Frame::Overloaded { .. } => 8,
+            Frame::ReloadCheckpoint { .. } => 9,
+            Frame::ServerInfo { .. } => 10,
+            Frame::GetInfo => 11,
         }
     }
 
@@ -122,6 +159,9 @@ impl Frame {
             Frame::QueryV2 { .. } => "QueryV2",
             Frame::ReplyV2 { .. } => "ReplyV2",
             Frame::Overloaded { .. } => "Overloaded",
+            Frame::ReloadCheckpoint { .. } => "ReloadCheckpoint",
+            Frame::ServerInfo { .. } => "ServerInfo",
+            Frame::GetInfo => "GetInfo",
         }
     }
 
@@ -175,6 +215,22 @@ impl Frame {
                     b.extend_from_slice(bytes);
                 })
             }
+            Frame::ReloadCheckpoint { ckpt } => {
+                assemble(self.type_id(), 4 + ckpt.len(), |b| {
+                    b.extend_from_slice(&(ckpt.len() as u32).to_le_bytes());
+                    b.extend_from_slice(ckpt);
+                })
+            }
+            Frame::ServerInfo { params_version, reloads, timestep, obs_len, actions } => {
+                assemble(self.type_id(), 8 + 8 + 8 + 4 + 4, |b| {
+                    b.extend_from_slice(&params_version.to_le_bytes());
+                    b.extend_from_slice(&reloads.to_le_bytes());
+                    b.extend_from_slice(&timestep.to_le_bytes());
+                    b.extend_from_slice(&obs_len.to_le_bytes());
+                    b.extend_from_slice(&actions.to_le_bytes());
+                })
+            }
+            Frame::GetInfo => assemble(self.type_id(), 0, |_| {}),
         }
     }
 
@@ -367,6 +423,19 @@ fn decode_payload(ty: u8, payload: &[u8]) -> Result<Frame> {
                 .to_string();
             Frame::Overloaded { id, message }
         }
+        9 => {
+            let n = c.u32("ReloadCheckpoint length")? as usize;
+            let ckpt = c.take(n, "ReloadCheckpoint container")?.to_vec();
+            Frame::ReloadCheckpoint { ckpt }
+        }
+        10 => Frame::ServerInfo {
+            params_version: c.u64("ServerInfo params_version")?,
+            reloads: c.u64("ServerInfo reloads")?,
+            timestep: c.u64("ServerInfo timestep")?,
+            obs_len: c.u32("ServerInfo obs_len")?,
+            actions: c.u32("ServerInfo actions")?,
+        },
+        11 => Frame::GetInfo,
         other => return Err(Error::wire(format!("unknown frame type {other}"))),
     };
     c.finish(frame.name())?;
@@ -460,6 +529,16 @@ mod tests {
         roundtrip(Frame::ReplyV2 { id: 7, probs: vec![0.125; 6], value: 2.5 });
         roundtrip(Frame::Overloaded { id: 3, message: "queue full: 64/64".into() });
         roundtrip(Frame::Overloaded { id: u32::MAX, message: String::new() });
+        roundtrip(Frame::ReloadCheckpoint { ckpt: vec![0x50, 0x41, 0x41, 0x43, 0xFF, 0x00] });
+        roundtrip(Frame::ReloadCheckpoint { ckpt: Vec::new() });
+        roundtrip(Frame::ServerInfo {
+            params_version: u64::MAX,
+            reloads: 3,
+            timestep: 1_000_000,
+            obs_len: 1600,
+            actions: 6,
+        });
+        roundtrip(Frame::GetInfo);
     }
 
     #[test]
@@ -482,6 +561,8 @@ mod tests {
     fn handshake_version_negotiation_is_min_wins() {
         // a v1-only peer (either side) gets the lockstep protocol
         assert_eq!(negotiate_version(1).unwrap(), 1);
+        // a v2 peer pipelines but never sees a control frame
+        assert_eq!(negotiate_version(2).unwrap(), 2);
         // matching builds speak the newest version both know
         assert_eq!(negotiate_version(WIRE_VERSION).unwrap(), WIRE_VERSION);
         // a peer from the future is capped at what this build speaks
@@ -528,6 +609,14 @@ mod tests {
             Frame::QueryV2 { id: 17, obs: vec![1.0, 2.0, 3.0] },
             Frame::ReplyV2 { id: 17, probs: vec![0.25; 4], value: -1.0 },
             Frame::Overloaded { id: 17, message: "shed".into() },
+            Frame::ReloadCheckpoint { ckpt: vec![1, 2, 3, 4, 5] },
+            Frame::ServerInfo {
+                params_version: 1,
+                reloads: 1,
+                timestep: 9,
+                obs_len: 4,
+                actions: 6,
+            },
         ] {
             let full = frame.encode();
             for cut in 0..full.len() {
@@ -628,7 +717,7 @@ mod tests {
             x ^= x << 5;
             x
         };
-        for ty in 0..=9u8 {
+        for ty in 0..=13u8 {
             for len in [0usize, 1, 3, 4, 7, 8, 11, 12, 16, 33, 64] {
                 let mut bytes = Vec::with_capacity(HEADER_LEN + len);
                 bytes.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
@@ -657,6 +746,15 @@ mod tests {
             Frame::QueryV2 { id: 5, obs: vec![1.0, 2.0] },
             Frame::ReplyV2 { id: 5, probs: vec![0.25; 4], value: 1.0 },
             Frame::Overloaded { id: 5, message: "shed".into() },
+            Frame::ReloadCheckpoint { ckpt: vec![7, 8, 9] },
+            Frame::ServerInfo {
+                params_version: 2,
+                reloads: 2,
+                timestep: 400,
+                obs_len: 4,
+                actions: 6,
+            },
+            Frame::GetInfo,
         ];
         for frame in &frames {
             let clean = frame.encode();

@@ -170,7 +170,12 @@ fn flooded_bounded_server_sheds_and_conserves_every_request() {
     let obs_len = 8;
     let factory = SyntheticFactory::new(obs_len, ACTIONS, 7)
         .with_cost(Duration::from_millis(1), Duration::ZERO);
-    let cfg = ServeConfig::new(4, Duration::from_micros(200)).with_max_queue(8);
+    let cfg = ServeConfig::builder()
+        .max_batch(4)
+        .max_delay(Duration::from_micros(200))
+        .max_queue(8)
+        .build()
+        .unwrap();
     let server = PolicyServer::start_pool(&factory, cfg).unwrap();
     let frontend = TcpFrontend::bind_with("127.0.0.1:0", server.connector(), None, 64).unwrap();
     let addr = frontend.local_addr().to_string();

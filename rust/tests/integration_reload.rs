@@ -1,0 +1,278 @@
+//! Integration: the hot-reload control plane end-to-end over the
+//! synthetic backend (runs on a clean checkout — no artifacts needed).
+//!
+//! The synthetic factory makes reloads *observable*: a reload reseeds
+//! the policy from the checkpoint's training timestep, so every reply
+//! can be attributed to exactly one params version by comparing its
+//! bits against per-version reference backends. That turns the paper's
+//! "swap parameters under live traffic" requirement into a bitwise
+//! assertion: no reply may ever blend versions, and a server with the
+//! control plane enabled but unused must be indistinguishable from one
+//! without it.
+
+use std::time::{Duration, Instant};
+
+use paac::envs::{GameId, ObsMode, ACTIONS};
+use paac::metrics::write_ready_marker;
+use paac::runtime::checkpoint::Checkpoint;
+use paac::serve::{
+    run_clients, BackendFactory, CheckpointWatcher, ClientHandle, InferBackend, PolicyServer,
+    RemoteHandle, Reply, ServeConfig, SessionReport, SyntheticFactory, TcpFrontend,
+};
+
+/// The exact reply bits a given params version serves for `obs`: the
+/// batcher copies backend rows verbatim, so a width-1 reference backend
+/// predicts the served `Reply` bit for bit.
+fn reference_bits(seed: u64, obs: &[f32]) -> (Vec<u32>, u32) {
+    let f = SyntheticFactory::new(ObsMode::Grid.obs_len(), ACTIONS, seed);
+    let out = f.build(1, 0).unwrap().infer(obs).unwrap();
+    (out.probs_of(0).iter().map(|p| p.to_bits()).collect(), out.values[0].to_bits())
+}
+
+fn reply_bits(reply: &Reply) -> (Vec<u32>, u32) {
+    (reply.probs.iter().map(|p| p.to_bits()).collect(), reply.value.to_bits())
+}
+
+fn hot_pool(cfg: ServeConfig, seed: u64) -> PolicyServer {
+    let factory = SyntheticFactory::new(ObsMode::Grid.obs_len(), ACTIONS, seed);
+    PolicyServer::start_pool_hot(factory, cfg).expect("start hot shard pool")
+}
+
+/// Query until the server answers with `want`'s bits (the staged swap
+/// lands at the next batch boundary, so the first reply after a reload
+/// may still carry the old version). Returns how many queries it took.
+fn poll_until_version(handle: &ClientHandle, obs: &[f32], want: &(Vec<u32>, u32)) -> usize {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut polls = 0;
+    loop {
+        polls += 1;
+        let reply = handle.query(obs).unwrap();
+        if reply_bits(&reply) == *want {
+            return polls;
+        }
+        assert!(Instant::now() < deadline, "server never started serving the reloaded version");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+#[test]
+fn replies_under_concurrent_reloads_match_exactly_one_version() {
+    // the tentpole invariant: clients hammer a 2-shard hot pool while
+    // three reloads land mid-flight. Every reply must be bitwise equal
+    // to what exactly one params version serves for that observation —
+    // a blended or torn reply matches none of them.
+    let obs_len = ObsMode::Grid.obs_len();
+    let seeds: [u64; 4] = [33, 101, 202, 303]; // startup + 3 reloads
+    let clients: usize = 4;
+    let per_client = 300;
+
+    let cfg = ServeConfig::builder()
+        .max_batch(8)
+        .max_delay(Duration::from_micros(300))
+        .shards(2)
+        .cache(256)
+        .build()
+        .unwrap();
+    let srv = hot_pool(cfg, seeds[0]);
+
+    // one fixed observation per client, with per-version references —
+    // pairwise distinct, so set membership pins exactly one version
+    let obs_of: Vec<Vec<f32>> =
+        (0..clients).map(|i| vec![0.1 + 0.07 * i as f32; obs_len]).collect();
+    let refs: Vec<Vec<(Vec<u32>, u32)>> = obs_of
+        .iter()
+        .map(|obs| seeds.iter().map(|&s| reference_bits(s, obs)).collect())
+        .collect();
+    for per_obs in &refs {
+        for (a, ra) in per_obs.iter().enumerate() {
+            for rb in &per_obs[a + 1..] {
+                assert_ne!(ra, rb, "versions must serve distinct bits");
+            }
+        }
+    }
+
+    let threads: Vec<_> = (0..clients)
+        .map(|i| {
+            let handle = srv.connect();
+            let obs = obs_of[i].clone();
+            std::thread::spawn(move || {
+                let mut seen = Vec::with_capacity(per_client);
+                for _ in 0..per_client {
+                    seen.push(reply_bits(&handle.query(&obs).unwrap()));
+                }
+                seen
+            })
+        })
+        .collect();
+
+    // land the reloads while the clients are mid-flight
+    for (k, &seed) in seeds[1..].iter().enumerate() {
+        std::thread::sleep(Duration::from_millis(5));
+        let version = srv.reload_checkpoint(Checkpoint::new("synthetic", seed)).unwrap();
+        assert_eq!(version, (k + 1) as u64);
+    }
+
+    let mut total = 0u64;
+    for (i, t) in threads.into_iter().enumerate() {
+        for (q, bits) in t.join().unwrap().into_iter().enumerate() {
+            total += 1;
+            assert!(
+                refs[i].contains(&bits),
+                "client {i} query {q} matches no params version — a reply mixed versions"
+            );
+        }
+    }
+
+    // after the dust settles the LAST version must actually be serving
+    let handle = srv.connect();
+    total += poll_until_version(&handle, &obs_of[0], &refs[0][seeds.len() - 1]) as u64;
+
+    let snap = srv.shutdown().unwrap();
+    assert_eq!(snap.reload.count, 3);
+    assert_eq!(snap.reload.params_version, 3);
+    assert_eq!(snap.reload.last_timestep, seeds[3]);
+    // cache conservation survives version bumps: every query is a hit or
+    // a batcher-served miss, and no hit can cross a version (the key
+    // carries the version)
+    assert_eq!(snap.queries + snap.cache.hits, total);
+    assert_eq!(snap.cache.hits + snap.cache.misses, total);
+}
+
+/// Everything a trajectory depends on, bit-exact.
+fn fingerprints(reports: &[SessionReport]) -> Vec<(u64, u64, usize, u32, u32)> {
+    reports
+        .iter()
+        .map(|r| {
+            (r.session, r.queries, r.episodes, r.mean_return.to_bits(), r.mean_value.to_bits())
+        })
+        .collect()
+}
+
+#[test]
+fn unused_hot_pool_is_bit_identical_to_a_cold_pool() {
+    // the acceptance gate for "off means off": start_pool_hot with no
+    // reload ever issued must play the same client workload identically
+    // to plain start_pool — same episodes, same returns, bit for bit
+    let clients = 5;
+    let queries = 150;
+    let cfg = ServeConfig::builder()
+        .max_batch(8)
+        .max_delay(Duration::from_micros(300))
+        .shards(3)
+        .small_batch(2)
+        .build()
+        .unwrap();
+    let run = |srv: PolicyServer| {
+        let reports =
+            run_clients(&srv, GameId::Catch, ObsMode::Grid, 13, 10, clients, queries).unwrap();
+        let snap = srv.shutdown().unwrap();
+        (fingerprints(&reports), snap)
+    };
+    let factory = SyntheticFactory::new(ObsMode::Grid.obs_len(), ACTIONS, 33);
+    let (hot, snap_hot) = run(PolicyServer::start_pool_hot(factory, cfg).unwrap());
+    let (cold, snap_cold) = run(PolicyServer::start_pool(&factory, cfg).unwrap());
+    assert_eq!(hot, cold, "an unused control plane changed served trajectories");
+    assert_eq!(snap_hot.reload.count, 0);
+    assert_eq!(snap_hot.reload.params_version, 0);
+    assert_eq!(snap_hot.queries, snap_cold.queries);
+}
+
+#[test]
+fn ctl_reload_over_tcp_swaps_the_served_version() {
+    // the `paac ctl reload` path end-to-end: a v3 RemoteHandle pushes a
+    // checkpoint over the wire, the ServerInfo ack reports the bumped
+    // version, and subsequent queries serve the new parameters — while
+    // the connection keeps working throughout
+    let cfg = ServeConfig::builder()
+        .max_batch(4)
+        .max_delay(Duration::from_micros(200))
+        .build()
+        .unwrap();
+    let srv = hot_pool(cfg, 5);
+    let frontend = TcpFrontend::bind("127.0.0.1:0", srv.connector(), None).unwrap();
+    let addr = frontend.local_addr().to_string();
+    let mut handle = RemoteHandle::connect(&addr).unwrap();
+
+    let obs = vec![0.25f32; ObsMode::Grid.obs_len()];
+    let before = reference_bits(5, &obs);
+    let after = reference_bits(909, &obs);
+    assert_ne!(before, after);
+    assert_eq!(reply_bits(&handle.query(&obs).unwrap()), before);
+
+    let info = handle.server_info().unwrap();
+    assert_eq!(info.params_version, 0);
+    assert_eq!(info.obs_len as usize, ObsMode::Grid.obs_len());
+    assert_eq!(info.actions as usize, ACTIONS);
+
+    let status = handle.reload_checkpoint(Checkpoint::new("synthetic", 909).to_bytes()).unwrap();
+    assert_eq!(status.params_version, 1);
+    assert_eq!(status.reloads, 1);
+    assert_eq!(status.timestep, 909);
+
+    // the swap lands at the next batch boundary; the connection serves
+    // the old version until then, the new one after, never a blend
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let bits = reply_bits(&handle.query(&obs).unwrap());
+        if bits == after {
+            break;
+        }
+        assert_eq!(bits, before, "a remote reply matched neither version");
+        assert!(Instant::now() < deadline, "reload never reached the serving path");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    drop(handle);
+    frontend.shutdown().unwrap();
+    let snap = srv.shutdown().unwrap();
+    assert_eq!(snap.reload.count, 1);
+    assert_eq!(snap.reload.last_timestep, 909);
+    assert_eq!(snap.transport.wire_errors, 0);
+}
+
+#[test]
+fn checkpoint_watcher_follows_a_training_run_directory() {
+    // the --watch path end-to-end through the filesystem: a trainer-side
+    // publish (checkpoint, then atomically renamed .ready marker) must
+    // reach a live server's replies with no restart and no client errors
+    let tmp = std::env::temp_dir().join(format!("paac-reload-it-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).unwrap();
+    let ckpt_path = tmp.join("final.ckpt");
+
+    // the checkpoint the server "restored at startup": its marker is
+    // already on disk when the watcher starts, so it must NOT reload
+    Checkpoint::new("synthetic", 7).save(&ckpt_path).unwrap();
+    write_ready_marker(&ckpt_path, 7).unwrap();
+
+    let cfg = ServeConfig::builder()
+        .max_batch(4)
+        .max_delay(Duration::from_micros(200))
+        .build()
+        .unwrap();
+    let srv = hot_pool(cfg, 7);
+    let watcher = CheckpointWatcher::spawn_with(
+        &tmp,
+        srv.reload_handle().expect("hot pool mints a reload handle"),
+        Duration::from_millis(10),
+        true,
+    );
+
+    let obs = vec![0.5f32; ObsMode::Grid.obs_len()];
+    let handle = srv.connect();
+    assert_eq!(reply_bits(&handle.query(&obs).unwrap()), reference_bits(7, &obs));
+
+    // trainer publishes a fresh checkpoint: container first, marker last
+    Checkpoint::new("synthetic", 4242).save(&ckpt_path).unwrap();
+    write_ready_marker(&ckpt_path, 4242).unwrap();
+
+    poll_until_version(&handle, &obs, &reference_bits(4242, &obs));
+    assert_eq!(srv.params_version(), 1);
+
+    watcher.stop();
+    let snap = srv.shutdown().unwrap();
+    assert_eq!(snap.reload.count, 1);
+    assert_eq!(snap.reload.params_version, 1);
+    assert_eq!(snap.reload.last_timestep, 4242);
+    let _ = std::fs::remove_dir_all(&tmp);
+}

@@ -23,9 +23,13 @@ fn server(width: usize, delay_us: u64, seed: u64) -> PolicyServer {
 
 fn pool(width: usize, shards: usize, small: usize, delay_us: u64, seed: u64) -> PolicyServer {
     let factory = SyntheticFactory::new(ObsMode::Grid.obs_len(), ACTIONS, seed);
-    let cfg = ServeConfig::new(width, Duration::from_micros(delay_us))
-        .with_shards(shards)
-        .with_small_batch(small);
+    let cfg = ServeConfig::builder()
+        .max_batch(width)
+        .max_delay(Duration::from_micros(delay_us))
+        .shards(shards)
+        .small_batch(small)
+        .build()
+        .expect("valid serve config");
     PolicyServer::start_pool(&factory, cfg).expect("start shard pool")
 }
 
@@ -222,7 +226,7 @@ fn cache_and_dedup_leave_in_process_episodes_bit_identical() {
     // is indistinguishable from a dedicated forward.
     let clients = 6;
     let queries = 200;
-    let base = ServeConfig::new(8, Duration::from_micros(300));
+    let base = ServeConfig::builder().max_batch(8).max_delay(Duration::from_micros(300));
     let run = |cfg: ServeConfig| {
         let srv = pool_cfg(cfg, 33);
         let reports =
@@ -230,9 +234,9 @@ fn cache_and_dedup_leave_in_process_episodes_bit_identical() {
         let snap = srv.shutdown().unwrap();
         (fingerprints(&reports), snap)
     };
-    let (eliminated, snap_on) = run(base.with_cache(1024));
-    let (dedup_only, _) = run(base);
-    let (plain, snap_off) = run(base.with_no_dedup(true));
+    let (eliminated, snap_on) = run(base.cache(1024).build().unwrap());
+    let (dedup_only, _) = run(base.build().unwrap());
+    let (plain, snap_off) = run(base.no_dedup(true).build().unwrap());
     assert_eq!(eliminated, plain, "cache+dedup changed served trajectories");
     assert_eq!(dedup_only, plain, "dedup changed served trajectories");
     // accounting stays conservation-exact: every client query is either
@@ -252,7 +256,7 @@ fn tcp_loopback_cache_on_matches_cache_off_bit_for_bit() {
     // cache-first path or pays a forward per query
     let clients = 4;
     let queries = 150;
-    let cfg = ServeConfig::new(8, Duration::from_micros(300));
+    let cfg = ServeConfig::builder().max_batch(8).max_delay(Duration::from_micros(300));
     let run = |cfg: ServeConfig| {
         let srv = pool_cfg(cfg, 33);
         let frontend = TcpFrontend::bind("127.0.0.1:0", srv.connector(), None).unwrap();
@@ -264,8 +268,8 @@ fn tcp_loopback_cache_on_matches_cache_off_bit_for_bit() {
         let snap = srv.shutdown().unwrap();
         (fingerprints(&reports), snap)
     };
-    let (cached, snap_on) = run(cfg.with_cache(1024));
-    let (uncached, snap_off) = run(cfg);
+    let (cached, snap_on) = run(cfg.cache(1024).build().unwrap());
+    let (uncached, snap_off) = run(cfg.build().unwrap());
     assert_eq!(cached, uncached, "the response cache changed remote trajectories");
     // every remote query is either a hit or a batcher query; the wire
     // sees the identical frame traffic either way
@@ -285,7 +289,12 @@ fn duplicate_heavy_clients_get_served_with_nonzero_savings() {
     let clients = 8;
     let per_client = 50;
     let srv = pool_cfg(
-        ServeConfig::new(8, Duration::from_micros(500)).with_cache(64),
+        ServeConfig::builder()
+            .max_batch(8)
+            .max_delay(Duration::from_micros(500))
+            .cache(64)
+            .build()
+            .unwrap(),
         21,
     );
     let obs = vec![0.625f32; ObsMode::Grid.obs_len()];

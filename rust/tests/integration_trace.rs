@@ -37,7 +37,12 @@ fn serve_trace_spans_match_queue_wait_stats() {
     let obs_len = ObsMode::Grid.obs_len();
     let factory = SyntheticFactory::new(obs_len, ACTIONS, 5)
         .with_cost(Duration::from_micros(200), Duration::from_micros(2));
-    let cfg = ServeConfig::new(8, Duration::from_micros(500)).with_shards(2);
+    let cfg = ServeConfig::builder()
+        .max_batch(8)
+        .max_delay(Duration::from_micros(500))
+        .shards(2)
+        .build()
+        .unwrap();
     let server = PolicyServer::start_pool(&factory, cfg).expect("start shard pool");
     run_clients(&server, GameId::Catch, ObsMode::Grid, 11, 10, 4, 50).expect("load");
     let snap = server.shutdown().expect("shutdown");
@@ -87,7 +92,12 @@ fn overload_counters_land_in_the_trace() {
     let obs_len = ObsMode::Grid.obs_len();
     let factory = SyntheticFactory::new(obs_len, ACTIONS, 5)
         .with_cost(Duration::from_millis(400), Duration::ZERO);
-    let cfg = ServeConfig::new(1, Duration::ZERO).with_max_queue(1);
+    let cfg = ServeConfig::builder()
+        .max_batch(1)
+        .max_delay(Duration::ZERO)
+        .max_queue(1)
+        .build()
+        .unwrap();
     let server = PolicyServer::start_pool(&factory, cfg).expect("start bounded server");
 
     trace::start();
