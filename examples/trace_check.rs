@@ -4,16 +4,36 @@
 //! For every path given on the command line: parse the file with the
 //! crate's own JSON parser, run the [`paac::trace::validate`] structural
 //! checks (array root, well-formed `ph:"X"`/`ph:"M"` events, per-track
-//! `ts` monotonicity), and print a one-line summary per file. Exits
-//! nonzero on the first file that fails, so `make trace-smoke` can gate
-//! on it without jq.
+//! `ts` monotonicity), and print a one-line summary per file. A
+//! *directory* argument is treated as a `--trace-stream` chunk
+//! directory and validated with [`paac::trace::validate_dir`], which
+//! stitches the rotated `trace.NNNN.json` chunks into one summary.
+//! Exits nonzero on the first path that fails, so `make trace-smoke`
+//! can gate on it without jq.
 //!
-//! Run: cargo run --example trace_check -- trace.json [more.json ...]
+//! Run: cargo run --example trace_check -- trace.json [chunk-dir ...]
 
 use paac::trace;
 use paac::util::json::Json;
 
 fn check(path: &str) -> Result<(), String> {
+    if std::path::Path::new(path).is_dir() {
+        let summary = trace::validate_dir(std::path::Path::new(path))?;
+        if summary.spans == 0 {
+            return Err("chunks contain no spans".into());
+        }
+        let mut names: Vec<&str> =
+            summary.count_by_name.keys().map(|s| s.as_str()).collect();
+        names.sort_unstable();
+        println!(
+            "{path}: ok — {} chunk(s), {} spans on {} track(s), names: {}",
+            summary.chunks,
+            summary.spans,
+            summary.tracks,
+            names.join(", ")
+        );
+        return Ok(());
+    }
     let text = std::fs::read_to_string(path).map_err(|e| format!("read: {e}"))?;
     let json = Json::parse(&text).map_err(|e| format!("parse: {e}"))?;
     let summary = trace::validate(&json)?;
@@ -34,7 +54,7 @@ fn check(path: &str) -> Result<(), String> {
 fn main() {
     let paths: Vec<String> = std::env::args().skip(1).collect();
     if paths.is_empty() {
-        eprintln!("usage: trace_check FILE.json [FILE.json ...]");
+        eprintln!("usage: trace_check FILE.json|CHUNK_DIR [more ...]");
         std::process::exit(2);
     }
     for path in &paths {
@@ -43,5 +63,5 @@ fn main() {
             std::process::exit(1);
         }
     }
-    println!("{} trace file(s) validated", paths.len());
+    println!("{} trace path(s) validated", paths.len());
 }

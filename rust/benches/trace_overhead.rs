@@ -1,6 +1,6 @@
 //! Tracing overhead on the serve path: what the span recorder costs.
 //!
-//! Drives the same synthetic-device serve workload three times:
+//! Drives the same synthetic-device serve workload four times:
 //!
 //! 1. **off** — the recorder is disarmed; every span site costs one
 //!    relaxed atomic load. This is the price of *shipping* the tracing
@@ -9,12 +9,17 @@
 //!    cap at zero events: the span sites take the full enabled path
 //!    (two `Instant::now()` calls + a thread-local lookup per span)
 //!    without memory growth.
-//! 3. **recording** — a real recording, rendered and validated after
-//!    each run.
+//! 3. **recording** — a real one-shot recording, rendered and validated
+//!    after each run.
+//! 4. **streaming** — the PR 9 long-lived mode: a background flusher
+//!    drains the per-thread buffers into rotated chunk files while the
+//!    load runs, validated with `validate_dir` after each run.
 //!
 //! The bench asserts the disabled path stays within 5% of the best mode
-//! (so a regression that puts work on the off path fails CI) and writes
-//! `BENCH_trace.json` so successive runs build a perf trajectory.
+//! (so a regression that puts work on the off path fails CI), that
+//! streaming stays within 10% of one-shot recording (the flusher must
+//! not tax the hot path), and writes `BENCH_trace.json` so successive
+//! runs build a perf trajectory.
 //!
 //! Run: cargo bench --bench trace_overhead  (PAAC_BENCH_FAST=1 to shorten)
 
@@ -89,9 +94,28 @@ fn main() {
         recorded_spans = recorded_spans.max(summary.spans);
     }
 
-    let best_qps = off_qps.max(idle_qps).max(recording_qps);
+    // -- mode 4: streaming (chunks rotate to disk while the load runs) --
+    let stream_dir = std::env::temp_dir().join(format!("paac-bench-stream-{}", std::process::id()));
+    let mut streaming_qps = 0.0f64;
+    let mut streamed_spans = 0usize;
+    let mut streamed_chunks = 0usize;
+    for _ in 0..reps {
+        let _ = std::fs::remove_dir_all(&stream_dir);
+        trace::start_streaming(&stream_dir, trace::DEFAULT_FLUSH_INTERVAL, u64::MAX)
+            .expect("start streaming");
+        let qps = run_load(queries);
+        trace::stop_streaming().expect("stop streaming");
+        streaming_qps = streaming_qps.max(qps);
+        let summary = trace::validate_dir(&stream_dir).expect("streamed chunks validate");
+        streamed_spans = streamed_spans.max(summary.spans);
+        streamed_chunks = streamed_chunks.max(summary.chunks);
+    }
+    let _ = std::fs::remove_dir_all(&stream_dir);
+
+    let best_qps = off_qps.max(idle_qps).max(recording_qps).max(streaming_qps);
     let disabled_overhead = 1.0 - off_qps / best_qps.max(1e-9);
     let recording_overhead = 1.0 - recording_qps / best_qps.max(1e-9);
+    let streaming_overhead = 1.0 - streaming_qps / best_qps.max(1e-9);
 
     let mut table = Table::new(&["mode", "q/s", "overhead vs best"]);
     table.row(vec![
@@ -109,12 +133,18 @@ fn main() {
         format!("{recording_qps:.0}"),
         format!("{:.1}%", recording_overhead * 100.0),
     ]);
+    table.row(vec![
+        "streaming".into(),
+        format!("{streaming_qps:.0}"),
+        format!("{:.1}%", streaming_overhead * 100.0),
+    ]);
 
     println!("\n## Span recorder overhead on the serve path\n");
     println!("{}", table.render());
     println!(
-        "recording captured {recorded_spans} spans per run; the off path is one \
-         relaxed atomic load per span site"
+        "recording captured {recorded_spans} spans per run; streaming rotated \
+         {streamed_spans} spans over {streamed_chunks} chunk(s); the off path is \
+         one relaxed atomic load per span site"
     );
 
     let mut report = JsonReport::new("trace_overhead");
@@ -123,9 +153,13 @@ fn main() {
     report.add_num("off_qps", off_qps);
     report.add_num("idle_qps", idle_qps);
     report.add_num("recording_qps", recording_qps);
+    report.add_num("streaming_qps", streaming_qps);
     report.add_num("disabled_overhead_frac", disabled_overhead);
     report.add_num("recording_overhead_frac", recording_overhead);
+    report.add_num("streaming_overhead_frac", streaming_overhead);
     report.add_num("recorded_spans", recorded_spans as f64);
+    report.add_num("streamed_spans", streamed_spans as f64);
+    report.add_num("streamed_chunks", streamed_chunks as f64);
     let out = std::path::Path::new("BENCH_trace.json");
     report.write(out).expect("write BENCH_trace.json");
     println!("\nmachine-readable summary written to {}", out.display());
@@ -140,5 +174,19 @@ fn main() {
         recorded_spans > 0,
         "recording mode captured no spans — the serve path lost its instrumentation"
     );
+    assert!(
+        streamed_spans > 0,
+        "streaming mode captured no spans — the flusher lost the timeline"
+    );
+    assert!(
+        streaming_qps >= recording_qps * 0.9,
+        "streaming throughput {streaming_qps:.0} q/s fell more than 10% below \
+         one-shot recording {recording_qps:.0} q/s — the background flusher is \
+         taxing the hot path"
+    );
     println!("disabled-path overhead within budget ({:.1}% < 5%)", disabled_overhead * 100.0);
+    println!(
+        "streaming within 10% of one-shot recording ({streaming_qps:.0} vs \
+         {recording_qps:.0} q/s)"
+    );
 }

@@ -144,6 +144,11 @@ pub struct Config {
     pub eval_interval: u64,
     /// Emit a metrics record every this many updates.
     pub log_interval: u64,
+    /// Publish a ready-marked checkpoint every this many timesteps
+    /// (0 = only the final one). Each publish is atomic (tmp + rename +
+    /// `.ready` marker), so a `paac serve --watch` follower hot-reloads
+    /// repeatedly while the run is still going.
+    pub publish_every: u64,
     /// Abort the run when the loss turns non-finite (divergence guard;
     /// the paper observes divergence for n_e = 256).
     pub abort_on_divergence: bool,
@@ -192,6 +197,7 @@ impl Default for Config {
             eval_episodes: 30,
             eval_interval: 0,
             log_interval: 50,
+            publish_every: 0,
             abort_on_divergence: true,
             trace: None,
         }
@@ -285,6 +291,7 @@ impl Config {
             eval_episodes: doc.i64_or("eval.episodes", d.eval_episodes as i64) as usize,
             eval_interval: doc.i64_or("eval.interval", d.eval_interval as i64) as u64,
             log_interval: doc.i64_or("train.log_interval", d.log_interval as i64) as u64,
+            publish_every: doc.i64_or("train.publish_every", d.publish_every as i64) as u64,
             abort_on_divergence: doc.bool_or("train.abort_on_divergence", true),
             trace: doc.get("run.trace").and_then(|v| v.as_str()).map(PathBuf::from),
         };

@@ -188,6 +188,9 @@ impl Trainer {
             None
         };
 
+        // --publish-every: next timestep at which to publish a mid-run
+        // checkpoint (0 disables; the guard below never fires)
+        let mut next_publish = cfg.publish_every;
         let mut timestep = 0u64;
         let mut update = 0u64;
         let mut score = Ema::new(0.95);
@@ -236,6 +239,29 @@ impl Trainer {
                         out.stats.entropy,
                         out.stats.grad_norm,
                     )?;
+                }
+            }
+            if cfg.publish_every > 0 && with_logging && timestep >= next_publish {
+                // mid-run publish: the same container + .ready rhythm as
+                // the final checkpoint below, so a `paac serve --watch`
+                // follower hot-reloads while this run keeps training
+                let ckpt_path = cfg.out_dir.join(&cfg.run_name).join("final.ckpt");
+                let mut ckpt = Checkpoint::new(cfg.arch.clone(), timestep);
+                let host = paac.model.params.params_to_host()?;
+                for (spec, data) in paac.model.params.specs().iter().zip(host) {
+                    ckpt.push(
+                        spec.name.clone(),
+                        spec.shape.iter().map(|&d| d as u64).collect(),
+                        data,
+                    );
+                }
+                ckpt.save(&ckpt_path)?;
+                crate::metrics::write_ready_marker(&ckpt_path, timestep)?;
+                if let Some(l) = logger.as_mut() {
+                    l.log_checkpoint_ready(timestep, &ckpt_path)?;
+                }
+                while next_publish <= timestep {
+                    next_publish += cfg.publish_every;
                 }
             }
         }
@@ -367,6 +393,8 @@ impl Trainer {
             None
         };
 
+        // --publish-every, same contract as run_paac's
+        let mut next_publish = cfg.publish_every;
         let mut timestep = 0u64;
         let mut update = 0u64;
         let mut score = Ema::new(0.95);
@@ -416,6 +444,22 @@ impl Trainer {
                         out.stats.grad_norm,
                     )?;
                     l.log_replay(timestep, &q.replay_stats(), q.epsilon())?;
+                }
+            }
+            if cfg.publish_every > 0 && with_logging && timestep >= next_publish {
+                // mid-run publish, same rhythm as the final block below
+                let ckpt_path = cfg.out_dir.join(&cfg.run_name).join("final.ckpt");
+                let mut ckpt = Checkpoint::new(q.backend.ckpt_arch(), timestep);
+                for (name, dims, data) in q.backend.ckpt_tensors()? {
+                    ckpt.push(name, dims, data);
+                }
+                ckpt.save(&ckpt_path)?;
+                crate::metrics::write_ready_marker(&ckpt_path, timestep)?;
+                if let Some(l) = logger.as_mut() {
+                    l.log_checkpoint_ready(timestep, &ckpt_path)?;
+                }
+                while next_publish <= timestep {
+                    next_publish += cfg.publish_every;
                 }
             }
         }

@@ -48,6 +48,10 @@ pub enum Error {
     /// type, truncated/oversized/malformed frames).
     Wire(String),
 
+    /// Trace-recorder misuse (double-armed streaming, invalid chunk
+    /// directory).
+    Trace(String),
+
     /// Admission control shed the request: the submission queue (or a
     /// connection's pipeline window) was at capacity and the server
     /// chose to reject rather than stall every client. Retryable.
@@ -71,6 +75,7 @@ impl fmt::Display for Error {
             Error::Train(m) => write!(f, "train: {m}"),
             Error::Serve(m) => write!(f, "serve: {m}"),
             Error::Wire(m) => write!(f, "wire: {m}"),
+            Error::Trace(m) => write!(f, "trace: {m}"),
             Error::Overloaded(m) => write!(f, "overloaded: {m}"),
             Error::Io(e) => write!(f, "io: {e}"),
         }
@@ -117,6 +122,11 @@ impl Error {
     /// Helper for wire-protocol errors.
     pub fn wire(msg: impl Into<String>) -> Self {
         Error::Wire(msg.into())
+    }
+
+    /// Helper for trace-recorder errors.
+    pub fn trace(msg: impl Into<String>) -> Self {
+        Error::Trace(msg.into())
     }
 
     /// Helper for admission-control shed errors.

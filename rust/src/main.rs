@@ -4,6 +4,7 @@
 //! paac train   [--config cfg.toml] [--game pong] [--algo paac|a3c|ga3c|nstep-q]
 //!              [--n-e 32] [--n-w 8] [--lr 0.0224] [--steps 1000000] ...
 //!              [--replay-cap 20000] [--per] [--n-step 5] [--target-sync 100]
+//!              [--publish-every 0]                       (mid-run checkpoint publishes)
 //!              [--trace trace.json]                      (Perfetto span recording)
 //! paac eval    --ckpt runs/<name>/final.ckpt [--game pong] [--episodes 30]
 //! paac sweep   [--game breakout] [--steps 200000]       (Figures 3/4 data)
@@ -16,8 +17,11 @@
 //!              [--listen 127.0.0.1:4700] [--conns 0]    (TCP transport frontend)
 //!              [--watch runs/<name>]                     (hot checkpoint reload)
 //!              [--trace trace.json]                      (Perfetto span recording)
+//!              [--trace-stream DIR]                      (rotating trace chunks)
+//!              [--metrics-interval 0]                    (live metrics sampling)
 //! paac ctl     reload --connect HOST:PORT --ckpt FILE   (push a checkpoint swap)
 //!              info   --connect HOST:PORT               (live params_version)
+//!              stats  --connect HOST:PORT [--watch 2]   (live metrics, wire v4)
 //! paac client  --connect HOST:PORT[,HOST:PORT...] [--clients 8] [--queries 200]
 //!              [--game catch] [--atari] [--trace t.json] (remote synthetic clients)
 //!              [--flood]                                 (pipelined overload probe)
@@ -50,7 +54,7 @@ fn cli() -> Cli {
         .subcommand("sweep", "n_e sweep for the Figure 3/4 analysis")
         .subcommand("inspect", "print the artifact manifest summary")
         .subcommand("serve", "serve a policy to concurrent clients via the micro-batcher")
-        .subcommand("ctl", "control a running `paac serve --listen` (reload | info)")
+        .subcommand("ctl", "control a running `paac serve --listen` (reload | info | stats)")
         .subcommand("client", "run synthetic sessions against a remote `paac serve --listen`")
         .flag("config", None, "TOML run config (flags below override it)")
         .flag("game", None, "game id (catch|pong|breakout|...)")
@@ -78,7 +82,12 @@ fn cli() -> Cli {
         .flag("pipeline", Some("32"), "per-connection in-flight query window (serve)")
         .flag("listen", None, "serve over TCP on this address, e.g. 127.0.0.1:0 (serve)")
         .flag("conns", Some("0"), "with --listen: exit after N connections, 0=forever (serve)")
-        .flag("watch", None, "hot-reload checkpoints published under this run dir (serve)")
+        .flag(
+            "watch",
+            None,
+            "serve: hot-reload checkpoints published under this run dir; \
+             ctl stats: refresh every SECS",
+        )
         .flag("connect", None, "server address(es), comma-separated failover list (client)")
         .switch("flood", "pipelined flood: count replies vs sheds instead of sessions (client)")
         .flag("replay-cap", None, "replay capacity in transitions (nstep-q)")
@@ -86,6 +95,17 @@ fn cli() -> Cli {
         .flag("target-sync", None, "updates between target-network copies (nstep-q)")
         .switch("per", "prioritized replay sampling instead of uniform (nstep-q)")
         .flag("trace", None, "record a Perfetto trace to FILE (train|serve|client)")
+        .flag(
+            "trace-stream",
+            None,
+            "stream rotating trace chunks into DIR, bounded on-disk budget (serve)",
+        )
+        .flag(
+            "metrics-interval",
+            Some("0"),
+            "sample live serve metrics every SECS into runs/<name>/metrics.jsonl, 0=off (serve)",
+        )
+        .flag("publish-every", None, "publish a ready checkpoint every N timesteps (train)")
         .switch("atari", "use the 84x84x4 Atari pipeline (arch nips/nature)")
         .switch("no-anneal", "constant learning rate")
         .switch("quiet", "suppress progress output")
@@ -144,6 +164,9 @@ fn build_config(args: &paac::cli::Args) -> Result<Config> {
     }
     if args.has("per") {
         cfg.per = true;
+    }
+    if args.get("publish-every").is_some() {
+        cfg.publish_every = args.u64_of("publish-every")?;
     }
     if let Some(t) = args.get("trace") {
         cfg.trace = Some(t.into());
@@ -419,6 +442,26 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
     let deadline = Duration::from_secs_f64(args.f64_of("deadline-us")?.max(0.0) / 1e6);
     let seed = args.get("seed").map(|_| args.u64_of("seed")).transpose()?.unwrap_or(1);
     let quiet = args.has("quiet");
+    // streaming trace mode: arm the recorder before the server spins up
+    // (so the first batch is on the timeline); chunks rotate to DIR in
+    // the background under a bounded on-disk budget, which is what lets
+    // a --watch server trace forever
+    let stream_dir = args.get("trace-stream").map(std::path::PathBuf::from);
+    if let Some(dir) = &stream_dir {
+        if args.get("trace").is_some() {
+            return Err(Error::Cli(
+                "--trace and --trace-stream are mutually exclusive".into(),
+            ));
+        }
+        paac::trace::start_streaming(
+            dir,
+            paac::trace::DEFAULT_FLUSH_INTERVAL,
+            paac::trace::DEFAULT_STREAM_BUDGET,
+        )?;
+        if !quiet {
+            println!("serve: streaming trace chunks into {}", dir.display());
+        }
+    }
     let cfg = ServeConfig::builder()
         .max_batch(batch)
         .max_delay(deadline)
@@ -518,6 +561,31 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
         None => None,
     };
 
+    // the live metrics plane: sample the server's atomics on an interval
+    // into runs/<name>/metrics.jsonl (with --run-name) and the trace
+    // counter tracks; `paac ctl stats` reads the same sample over wire v4
+    let metrics_secs = args.f64_of("metrics-interval")?;
+    let hub = if metrics_secs > 0.0 {
+        let sink = match args.get("run-name") {
+            Some(run_name) => {
+                let path = std::path::Path::new("runs").join(run_name).join("metrics.jsonl");
+                let sink = JsonlWriter::create(&path)?;
+                if !quiet {
+                    println!("serve: metrics every {metrics_secs}s -> {}", path.display());
+                }
+                Some(sink)
+            }
+            None => None,
+        };
+        Some(paac::serve::MetricsHub::spawn(
+            server.connector(),
+            Duration::from_secs_f64(metrics_secs),
+            sink,
+        ))
+    } else {
+        None
+    };
+
     if !quiet {
         let pool = match server.small_batch() {
             Some(sw) => format!(
@@ -567,6 +635,12 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
         frontend.join()?;
         let reload_events = server.reload_events();
         drop(watcher);
+        if let Some(hub) = hub {
+            let last = hub.stop();
+            if !quiet {
+                println!("metrics: {}", last.summary());
+            }
+        }
         let snap = server.shutdown()?;
         println!("{}", snap.summary());
         println!("{}", snap.transport.summary());
@@ -585,7 +659,7 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
         if !shard_lines.is_empty() {
             println!("{shard_lines}");
         }
-        write_trace_file(args, quiet)?;
+        finish_trace(args, &stream_dir, quiet)?;
         return write_serve_record(args, &snap, &reload_events, quiet);
     }
 
@@ -597,6 +671,12 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     let reload_events = server.reload_events();
     drop(watcher);
+    if let Some(hub) = hub {
+        let last = hub.stop();
+        if !quiet {
+            println!("metrics: {}", last.summary());
+        }
+    }
     let snap = server.shutdown()?;
 
     let total_queries: u64 = reports.iter().map(|r| r.queries).sum();
@@ -622,8 +702,33 @@ fn cmd_serve(args: &paac::cli::Args) -> Result<()> {
         println!("{shard_lines}");
     }
     println!("clients finished {episodes} episodes");
-    write_trace_file(args, quiet)?;
+    finish_trace(args, &stream_dir, quiet)?;
     write_serve_record(args, &snap, &reload_events, quiet)
+}
+
+/// Close out whichever trace mode `cmd_serve` opened: stop a streaming
+/// recording and validate its chunk directory, or fall back to the
+/// one-shot `--trace` file write.
+fn finish_trace(
+    args: &paac::cli::Args,
+    stream_dir: &Option<std::path::PathBuf>,
+    quiet: bool,
+) -> Result<()> {
+    if let Some(dir) = stream_dir {
+        if paac::trace::stop_streaming()? && !quiet {
+            match paac::trace::validate_dir(dir) {
+                Ok(s) => println!(
+                    "trace: {} chunk(s), {} spans in {} (open any chunk in ui.perfetto.dev)",
+                    s.chunks,
+                    s.spans,
+                    dir.display()
+                ),
+                Err(e) => println!("trace: chunks in {} (validation: {e})", dir.display()),
+            }
+        }
+        return Ok(());
+    }
+    write_trace_file(args, quiet)
 }
 
 /// One `--flood` worker: pipeline `queries` distinct observations at the
@@ -662,16 +767,18 @@ fn flood_worker<T: QueryTransport>(mut handle: T, queries: usize, idx: u64) -> R
 
 /// The serve control plane's CLI: push a checkpoint into a running
 /// `paac serve --listen` (`paac ctl reload --connect HOST:PORT --ckpt
-/// FILE`) or read its live state (`paac ctl info --connect HOST:PORT`).
-/// Control frames ride the data-plane connection (protocol v3), so a
-/// reload lands without interrupting in-flight queries.
+/// FILE`), read its live state (`paac ctl info --connect HOST:PORT`),
+/// or watch its live metrics (`paac ctl stats --connect HOST:PORT
+/// [--watch SECS]`, wire protocol v4). Control and metrics frames ride
+/// the data-plane connection, so none of it interrupts in-flight
+/// queries.
 fn cmd_ctl(args: &paac::cli::Args) -> Result<()> {
     let addr = args.str_of("connect")?;
     let verb = args
         .positional
         .first()
         .map(String::as_str)
-        .ok_or_else(|| Error::Cli("ctl needs a verb: reload | info".into()))?;
+        .ok_or_else(|| Error::Cli("ctl needs a verb: reload | info | stats".into()))?;
     let mut handle = RemoteHandle::connect(&addr)?;
     match verb {
         "reload" => {
@@ -693,8 +800,29 @@ fn cmd_ctl(args: &paac::cli::Args) -> Result<()> {
                 info.params_version, info.reloads, info.timestep, info.obs_len, info.actions
             );
         }
+        "stats" => {
+            // --watch SECS: keep the connection open and re-sample on an
+            // interval — a minimal live terminal view of a remote server
+            let watch = args
+                .get("watch")
+                .map(|s| {
+                    s.parse::<f64>()
+                        .map_err(|_| Error::Cli(format!("bad --watch '{s}' (seconds)")))
+                })
+                .transpose()?;
+            loop {
+                let m = handle.get_metrics()?;
+                println!("{}", m.summary());
+                match watch {
+                    Some(secs) => std::thread::sleep(Duration::from_secs_f64(secs.max(0.1))),
+                    None => break,
+                }
+            }
+        }
         other => {
-            return Err(Error::Cli(format!("unknown ctl verb '{other}' (reload | info)")));
+            return Err(Error::Cli(format!(
+                "unknown ctl verb '{other}' (reload | info | stats)"
+            )));
         }
     }
     Ok(())

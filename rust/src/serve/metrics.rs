@@ -1,0 +1,324 @@
+//! The live metrics plane: periodic samples of a running server.
+//!
+//! [`super::stats`] keeps cumulative counters and whole-run reservoirs;
+//! this module turns them into a *time series*. A [`MetricsHub`] owns a
+//! sampling thread that every interval reads the already-existing
+//! atomics through a [`Connector`] — queue depth, admitted/shed, cache
+//! hit/miss/coalesced, batch fill, reload count, params version, plus
+//! reply-latency and queue-wait quantiles from the sliding windows
+//! ([`ServeStats::windowed_latency_quantiles`]) — into a
+//! [`MetricsSample`], and fans each sample out three ways:
+//!
+//! * an in-memory **ring** of the most recent [`DEFAULT_RING`] samples
+//!   (what an attached debugger or test inspects),
+//! * one JSONL row per tick in `runs/<name>/metrics.jsonl` (the
+//!   `serve --metrics-interval` sink — `type:"serve_metrics"` rows
+//!   whose cumulative fields are monotone and whose last row equals the
+//!   final [`StatsSnapshot`](super::stats::StatsSnapshot) totals; the
+//!   conservation integration test pins this),
+//! * `ph:"C"` trace counter tracks (`serve.cache_hit_rate`,
+//!   `serve.batch_fill`) when a trace recording is live, so the
+//!   Perfetto timeline and the metrics file cannot disagree.
+//!
+//! The same [`sample_now`] function also answers `GetMetrics` control
+//! frames on wire protocol v4 (`paac ctl stats`), so the remote view
+//! and the local file are produced by one code path. Sampling is
+//! read-only and lock-light (atomics plus two short reservoir locks);
+//! a 1 s interval costs nothing measurable next to inference.
+//!
+//! [`ServeStats::windowed_latency_quantiles`]:
+//! super::stats::ServeStats::windowed_latency_quantiles
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::metrics::JsonlWriter;
+use crate::util::json::{obj, Json};
+
+use super::server::Connector;
+
+/// Samples retained in the in-memory ring (oldest evicted first).
+pub const DEFAULT_RING: usize = 512;
+
+/// One timestamped sample of the serving plane. Counter fields
+/// (`queries`, `admitted`, …) are cumulative since server start, so
+/// deltas between consecutive samples are rates; gauge fields
+/// (`queue_depth`, quantiles) are instantaneous.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSample {
+    /// Server uptime at sample time, microseconds.
+    pub uptime_us: u64,
+    /// Submission-queue depth at sample time (gauge).
+    pub queue_depth: u64,
+    /// Queries served through the batchers (cumulative).
+    pub queries: u64,
+    /// Batches executed (cumulative).
+    pub batches: u64,
+    /// Requests admitted to the submission queue (cumulative).
+    pub admitted: u64,
+    /// Requests shed, all classes combined (cumulative).
+    pub shed: u64,
+    /// Response-cache hits (cumulative).
+    pub cache_hits: u64,
+    /// Cache probes that fell through to the queue (cumulative).
+    pub cache_misses: u64,
+    /// Duplicate in-flight requests coalesced into shared backend slots
+    /// (cumulative).
+    pub coalesced: u64,
+    /// Completed hot checkpoint reloads (cumulative).
+    pub reloads: u64,
+    /// Parameter-set version currently serving.
+    pub params_version: u64,
+    /// Mean live-rows / capacity over all batches so far.
+    pub batch_fill: f64,
+    /// hits / (hits + misses); 0 when the cache never probed.
+    pub cache_hit_rate: f64,
+    /// Reply-latency quantiles over the recent sliding window, ms.
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Queue-wait quantiles over the recent sliding window, ms.
+    pub queue_wait_p50_ms: f64,
+    pub queue_wait_p95_ms: f64,
+}
+
+impl MetricsSample {
+    /// The `type:"serve_metrics"` JSONL row.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("type", Json::Str("serve_metrics".into())),
+            ("uptime_secs", Json::Num(self.uptime_us as f64 / 1e6)),
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
+            ("queries", Json::Num(self.queries as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("admitted", Json::Num(self.admitted as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("cache_hits", Json::Num(self.cache_hits as f64)),
+            ("cache_misses", Json::Num(self.cache_misses as f64)),
+            ("coalesced", Json::Num(self.coalesced as f64)),
+            ("cache_hit_rate", Json::Num(self.cache_hit_rate)),
+            ("batch_fill", Json::Num(self.batch_fill)),
+            ("reloads", Json::Num(self.reloads as f64)),
+            ("params_version", Json::Num(self.params_version as f64)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p95_ms", Json::Num(self.p95_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("queue_wait_p50_ms", Json::Num(self.queue_wait_p50_ms)),
+            ("queue_wait_p95_ms", Json::Num(self.queue_wait_p95_ms)),
+        ])
+    }
+
+    /// Human-oriented one-line view (what `paac ctl stats` prints).
+    pub fn summary(&self) -> String {
+        format!(
+            "up {:.0}s | queue {} | {} queries / {} batches (fill {:.0}%) | \
+             admitted {} shed {} | cache {:.0}% hit | \
+             p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms | wait p50 {:.2}ms | \
+             {} reload(s), params v{}",
+            self.uptime_us as f64 / 1e6,
+            self.queue_depth,
+            self.queries,
+            self.batches,
+            self.batch_fill * 100.0,
+            self.admitted,
+            self.shed,
+            self.cache_hit_rate * 100.0,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.queue_wait_p50_ms,
+            self.reloads,
+            self.params_version
+        )
+    }
+}
+
+/// Read one sample off a live server right now. Shared by the hub tick
+/// and the TCP bridge's `GetMetrics` handler, so the metrics file and
+/// the wire report can never disagree about a field's meaning.
+pub fn sample_now(connector: &Connector) -> MetricsSample {
+    let stats = connector.stats();
+    let snap = stats.snapshot();
+    let (p50, p95, p99) = stats.windowed_latency_quantiles();
+    let (qw50, qw95) = stats.windowed_queue_wait_quantiles();
+    MetricsSample {
+        uptime_us: (snap.wall_secs * 1e6) as u64,
+        queue_depth: connector.queue().len() as u64,
+        queries: snap.queries,
+        batches: snap.batches,
+        admitted: snap.overload.admitted,
+        shed: snap.overload.shed_total,
+        cache_hits: snap.cache.hits,
+        cache_misses: snap.cache.misses,
+        coalesced: snap.cache.coalesced_slots,
+        reloads: snap.reload.count,
+        params_version: connector.params_version(),
+        batch_fill: snap.mean_batch_fill,
+        cache_hit_rate: snap.cache.hit_rate,
+        p50_ms: p50,
+        p95_ms: p95,
+        p99_ms: p99,
+        queue_wait_p50_ms: qw50,
+        queue_wait_p95_ms: qw95,
+    }
+}
+
+struct HubShared {
+    connector: Connector,
+    stop: AtomicBool,
+    ring: Mutex<VecDeque<MetricsSample>>,
+    sink: Option<Mutex<JsonlWriter>>,
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tick(shared: &HubShared) {
+    let sample = sample_now(&shared.connector);
+    crate::trace::counter("serve.cache_hit_rate", sample.cache_hit_rate);
+    crate::trace::counter("serve.batch_fill", sample.batch_fill);
+    if let Some(sink) = &shared.sink {
+        let _ = lock(sink).record(&sample.to_json());
+    }
+    let mut ring = lock(&shared.ring);
+    while ring.len() >= DEFAULT_RING {
+        ring.pop_front();
+    }
+    ring.push_back(sample);
+}
+
+fn run_loop(shared: &HubShared, interval: Duration) {
+    // sleep in short ticks so stop() is prompt even at long intervals
+    let tick_len = interval.max(Duration::from_millis(1)).min(Duration::from_millis(50));
+    let mut elapsed = Duration::ZERO;
+    while !shared.stop.load(Ordering::Relaxed) {
+        std::thread::sleep(tick_len);
+        elapsed += tick_len;
+        if elapsed < interval {
+            continue;
+        }
+        elapsed = Duration::ZERO;
+        tick(shared);
+    }
+}
+
+/// The sampling thread plus its ring and sinks. [`MetricsHub::stop`]
+/// takes one final sample before returning, so after a clean shutdown
+/// the last `metrics.jsonl` row equals the final stats snapshot.
+pub struct MetricsHub {
+    shared: Arc<HubShared>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl MetricsHub {
+    /// Start sampling `connector` every `interval` into the ring, an
+    /// optional JSONL sink, and (when a trace recording is live) the
+    /// `serve.*` counter tracks.
+    pub fn spawn(
+        connector: Connector,
+        interval: Duration,
+        sink: Option<JsonlWriter>,
+    ) -> MetricsHub {
+        let shared = Arc::new(HubShared {
+            connector,
+            stop: AtomicBool::new(false),
+            ring: Mutex::new(VecDeque::new()),
+            sink: sink.map(Mutex::new),
+        });
+        let worker = shared.clone();
+        let thread = std::thread::Builder::new()
+            .name("paac-serve-metrics".into())
+            .spawn(move || run_loop(&worker, interval))
+            .expect("spawn metrics hub");
+        MetricsHub { shared, thread: Some(thread) }
+    }
+
+    /// Take one sample immediately, outside the timer cadence (tests
+    /// and shutdown paths use this for determinism).
+    pub fn tick_now(&self) {
+        tick(&self.shared);
+    }
+
+    /// The retained ring, oldest first.
+    pub fn samples(&self) -> Vec<MetricsSample> {
+        lock(&self.shared.ring).iter().cloned().collect()
+    }
+
+    /// The most recent sample, if any tick has fired yet.
+    pub fn latest(&self) -> Option<MetricsSample> {
+        lock(&self.shared.ring).back().cloned()
+    }
+
+    /// Stop the sampling thread, then take one final sample (the last
+    /// JSONL row — equal to the server's state at stop time) and
+    /// return it.
+    pub fn stop(mut self) -> MetricsSample {
+        self.halt();
+        tick(&self.shared);
+        lock(&self.shared.ring).back().cloned().unwrap_or_default()
+    }
+
+    fn halt(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for MetricsHub {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_serializes_to_a_typed_jsonl_row() {
+        let s = MetricsSample {
+            uptime_us: 2_500_000,
+            queue_depth: 3,
+            queries: 100,
+            batches: 10,
+            admitted: 90,
+            shed: 10,
+            cache_hits: 40,
+            cache_misses: 60,
+            coalesced: 5,
+            reloads: 2,
+            params_version: 2,
+            batch_fill: 0.75,
+            cache_hit_rate: 0.4,
+            p50_ms: 1.5,
+            p95_ms: 3.0,
+            p99_ms: 4.0,
+            queue_wait_p50_ms: 0.5,
+            queue_wait_p95_ms: 1.0,
+        };
+        let text = s.to_json().to_string_compact();
+        assert!(text.contains("\"type\":\"serve_metrics\""));
+        assert!(text.contains("\"queue_depth\":3"));
+        assert!(text.contains("\"cache_hit_rate\":0.4"));
+        assert!(text.contains("\"params_version\":2"));
+        assert!(Json::parse(&text).is_ok(), "row must re-parse");
+        let line = s.summary();
+        assert!(line.contains("queue 3"));
+        assert!(line.contains("params v2"));
+        assert!(line.contains("40% hit"));
+    }
+
+    #[test]
+    fn default_sample_is_all_zero() {
+        let s = MetricsSample::default();
+        assert_eq!(s.queries, 0);
+        assert_eq!(s.params_version, 0);
+        assert!(Json::parse(&s.to_json().to_string_compact()).is_ok());
+    }
+}

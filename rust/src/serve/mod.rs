@@ -42,7 +42,14 @@
 //!   directory (`--watch`) and swaps checkpoints into a live server.
 //! * [`stats`] — latency (p50/p95/p99), throughput, per-shard rollup and
 //!   transport (connection/frame) accounting, renderable into the
-//!   [`crate::metrics`] JSONL/CSV sinks.
+//!   [`crate::metrics`] JSONL/CSV sinks. Since PR 9 the whole-run
+//!   reservoirs are complemented by sliding windows over recent
+//!   traffic, feeding the live plane below.
+//! * [`metrics`] — the live metrics plane (PR 9): a [`MetricsHub`]
+//!   samples the server's atomics on an interval into a ring of
+//!   timestamped [`MetricsSample`]s, a `metrics.jsonl` sink, and
+//!   `ph:"C"` trace counter tracks; the same sample answers
+//!   `GetMetrics` frames (wire v4) behind `paac ctl stats`.
 //! * [`transport`] — the network frontend: a zero-dependency
 //!   (`std::net`) TCP server ([`TcpFrontend`]) speaking a versioned,
 //!   length-prefixed little-endian wire protocol ([`transport::wire`]),
@@ -128,6 +135,7 @@
 
 pub mod batcher;
 pub mod cache;
+pub mod metrics;
 pub mod queue;
 pub mod reload;
 pub mod server;
@@ -140,6 +148,7 @@ pub use batcher::{
     ModelBackendFactory, SyntheticBackend, SyntheticFactory,
 };
 pub use cache::{obs_fnv1a, ResponseCache};
+pub use metrics::{sample_now, MetricsHub, MetricsSample};
 pub use queue::{Admission, Reply, ReplySink, Request, ShardClass, ShedReason, SubmissionQueue};
 pub use reload::{CheckpointWatcher, ReloadHandle, SwapSlot, DEFAULT_POLL_INTERVAL};
 pub use server::{ClientHandle, Connector, PolicyServer, ServeConfig, ServeConfigBuilder};

@@ -53,6 +53,14 @@
 //! and as an ordered per-event list ([`ServeStats::reload_events`]) the
 //! CLI turns into one `serve_reload` JSONL record per reload. All zero
 //! on a server that never reloads.
+//!
+//! Since PR 9 the stats additionally feed the **live metrics plane**
+//! ([`super::metrics`]): alongside the whole-run reservoirs, latencies
+//! and queue waits also land in bounded *sliding windows* (the last
+//! [`LATENCY_WINDOW`] observations verbatim), so
+//! [`ServeStats::windowed_latency_quantiles`] answers "how slow is the
+//! server *lately*" — a traffic spike moves the next metrics tick
+//! instead of being averaged into hours of history.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -70,6 +78,11 @@ use super::queue::ShedReason;
 /// switches to uniform reservoir sampling (Algorithm R) so a long-lived
 /// server's memory and snapshot cost stay bounded.
 const LATENCY_RESERVOIR: usize = 65_536;
+
+/// Sliding-window size for the live metrics plane's quantiles: recent
+/// enough that a spike dominates the next sample, large enough to be
+/// statistically stable at high q/s.
+pub const LATENCY_WINDOW: usize = 4096;
 
 struct LatencyReservoir {
     samples: Vec<f32>,
@@ -102,6 +115,45 @@ impl LatencyReservoir {
                 self.samples[j as usize] = ms;
             }
         }
+    }
+}
+
+/// Sliding-window histogram: the last `window` observations verbatim in
+/// a circular buffer. Where [`LatencyReservoir`] summarizes the whole
+/// run (uniform over every observation ever), this answers "lately" —
+/// the quantile source for the live metrics plane, where a spike must
+/// show up in the next tick rather than be diluted by history. The
+/// property test below pins it against a brute-force recompute of the
+/// last `min(n, window)` observations.
+struct WindowedReservoir {
+    window: usize,
+    buf: Vec<f32>,
+    /// Next write position (wraps once the buffer filled).
+    next: usize,
+    /// Total observations ever offered.
+    seen: u64,
+}
+
+impl WindowedReservoir {
+    fn new(window: usize) -> WindowedReservoir {
+        WindowedReservoir { window: window.max(1), buf: Vec::new(), next: 0, seen: 0 }
+    }
+
+    fn push(&mut self, ms: f32) {
+        self.seen += 1;
+        if self.buf.len() < self.window {
+            self.buf.push(ms);
+        } else {
+            self.buf[self.next] = ms;
+        }
+        self.next = (self.next + 1) % self.window;
+    }
+
+    /// Percentiles over the current window contents
+    /// ([`math::percentile`] sorts a copy, so insertion order is
+    /// irrelevant — the window is a multiset).
+    fn percentiles(&self, ps: &[f32]) -> Vec<f64> {
+        ps.iter().map(|&p| math::percentile(&self.buf, p) as f64).collect()
     }
 }
 
@@ -241,6 +293,11 @@ pub struct ServeStats {
     /// Exact sum of all queue waits, microseconds: the reservoir samples,
     /// but the trace-vs-stats consistency test needs the true total.
     queue_wait_total_us: AtomicU64,
+    /// The most recent [`LATENCY_WINDOW`] reply latencies verbatim —
+    /// the live metrics plane's quantile source.
+    latencies_window: Mutex<WindowedReservoir>,
+    /// The most recent [`LATENCY_WINDOW`] queue waits verbatim.
+    queue_wait_window: Mutex<WindowedReservoir>,
     /// One rollup cell per batcher shard.
     shards: Vec<ShardCell>,
     /// Network-frontend counters (zero without a transport).
@@ -273,6 +330,8 @@ impl ServeStats {
             latencies_ms: Mutex::new(LatencyReservoir::new(7)),
             queue_wait_ms: Mutex::new(LatencyReservoir::new(9)),
             queue_wait_total_us: AtomicU64::new(0),
+            latencies_window: Mutex::new(WindowedReservoir::new(LATENCY_WINDOW)),
+            queue_wait_window: Mutex::new(WindowedReservoir::new(LATENCY_WINDOW)),
             shards: specs
                 .iter()
                 .enumerate()
@@ -317,6 +376,12 @@ impl ServeStats {
                 lat.push(d.as_secs_f64() as f32 * 1e3);
             }
         }
+        {
+            let mut win = self.latencies_window.lock().unwrap();
+            for d in latencies {
+                win.push(d.as_secs_f64() as f32 * 1e3);
+            }
+        }
         if let Some(cell) = self.shards.get(shard) {
             cell.width.fetch_max(capacity as u64, Ordering::Relaxed);
             cell.queries.fetch_add(queries, Ordering::Relaxed);
@@ -348,6 +413,12 @@ impl ServeStats {
             for d in waits {
                 qw.push(d.as_secs_f64() as f32 * 1e3);
                 total_us += d.as_micros() as u64;
+            }
+        }
+        {
+            let mut win = self.queue_wait_window.lock().unwrap();
+            for d in waits {
+                win.push(d.as_secs_f64() as f32 * 1e3);
             }
         }
         self.queue_wait_total_us.fetch_add(total_us, Ordering::Relaxed);
@@ -456,6 +527,21 @@ impl ServeStats {
     /// one `serve_reload` JSONL record per event.
     pub fn reload_events(&self) -> Vec<ReloadEvent> {
         self.reload.events.lock().unwrap().clone()
+    }
+
+    /// Reply-latency quantiles over the most recent [`LATENCY_WINDOW`]
+    /// requests: `(p50_ms, p95_ms, p99_ms)`. All zero before the first
+    /// served batch.
+    pub fn windowed_latency_quantiles(&self) -> (f64, f64, f64) {
+        let v = self.latencies_window.lock().unwrap().percentiles(&[50.0, 95.0, 99.0]);
+        (v[0], v[1], v[2])
+    }
+
+    /// Queue-wait quantiles over the most recent [`LATENCY_WINDOW`]
+    /// claimed requests: `(p50_ms, p95_ms)`.
+    pub fn windowed_queue_wait_quantiles(&self) -> (f64, f64) {
+        let v = self.queue_wait_window.lock().unwrap().percentiles(&[50.0, 95.0]);
+        (v[0], v[1])
     }
 
     /// Consistent point-in-time view (sorts a copy of the latencies).
@@ -992,6 +1078,57 @@ mod tests {
         assert_eq!(r.seen, total);
         // the true max survives sampling even if its sample was evicted
         assert!((r.max_ms - (total - 1) as f32 * 0.001).abs() < 1e-2);
+    }
+
+    #[test]
+    fn windowed_reservoir_matches_brute_force_window_recompute() {
+        // property test: at every probe point, the window's quantiles
+        // must equal a brute-force recompute over the last min(n, W)
+        // pushed values — pinning both the circular indexing and the
+        // partial-fill phase across window sizes
+        let mut rng = Pcg32::new(0xFEED, 1);
+        for &window in &[1usize, 7, 64, 257] {
+            let mut w = WindowedReservoir::new(window);
+            let mut all: Vec<f32> = Vec::new();
+            for i in 0..1_000usize {
+                let v = (rng.next_f64() * 50.0) as f32;
+                w.push(v);
+                all.push(v);
+                if i % 97 == 0 || i + 1 == 1_000 {
+                    let start = all.len().saturating_sub(window);
+                    let brute: Vec<f32> = all[start..].to_vec();
+                    assert_eq!(w.buf.len(), brute.len(), "window {window} at {i}");
+                    for p in [0.0f32, 25.0, 50.0, 95.0, 99.0, 100.0] {
+                        let got = math::percentile(&w.buf, p);
+                        let want = math::percentile(&brute, p);
+                        assert!(
+                            (got - want).abs() < 1e-6,
+                            "window {window} at {i}, p{p}: got {got}, brute-force {want}"
+                        );
+                    }
+                    assert_eq!(w.seen, all.len() as u64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn windowed_quantiles_reflect_only_recent_traffic() {
+        let s = ServeStats::new();
+        let slow = vec![Duration::from_millis(1); LATENCY_WINDOW];
+        s.record_batch(0, 1, 1, &slow);
+        let fast = vec![Duration::from_millis(100); LATENCY_WINDOW];
+        s.record_batch(0, 1, 1, &fast);
+        let (p50, p95, p99) = s.windowed_latency_quantiles();
+        assert!(
+            p50 >= 99.0 && p95 >= 99.0 && p99 >= 99.0,
+            "a full window of new traffic must age the old out: p50 {p50}"
+        );
+        // the whole-run reservoir still remembers the 1ms era
+        assert!(s.snapshot().p50_ms < 99.0, "whole-run p50 mixes both eras");
+        s.record_queue_wait(&[Duration::from_millis(2); 8]);
+        let (q50, q95) = s.windowed_queue_wait_quantiles();
+        assert!(q50 >= 1.9 && q95 >= 1.9 && q50 <= q95);
     }
 
     #[test]

@@ -35,7 +35,11 @@
 //! over where the server lives. The same PR extended the wire with
 //! control frames ([`Frame::ReloadCheckpoint`] / [`Frame::ServerInfo`]
 //! / [`Frame::GetInfo`], protocol v3): the train→serve control plane
-//! rides the data plane's transport.
+//! rides the data plane's transport. PR 9 added the metrics plane
+//! ([`Frame::GetMetrics`] / [`Frame::MetricsReport`], protocol v4):
+//! [`RemoteHandle::get_metrics`] reads one live
+//! [`MetricsSample`](crate::serve::metrics::MetricsSample) off a
+//! running server, the payload behind `paac ctl stats`.
 
 pub mod tcp;
 pub mod wire;

@@ -54,6 +54,15 @@
 //! remote handles also implement the full two-surface
 //! [`QueryTransport`]: blocking `query` plus pipelined `submit`/`recv`
 //! yielding typed [`Completion`] values.
+//!
+//! Since PR 9 the wire also carries the metrics plane (**v4**):
+//! [`Frame::GetMetrics`] asks the bridge for one live
+//! [`MetricsSample`] — the same struct the in-process
+//! [`MetricsHub`](crate::serve::metrics::MetricsHub) samples, built by
+//! the same [`sample_now`] call, so `paac ctl stats` over the network
+//! and `metrics.jsonl` on the server agree by construction
+//! ([`RemoteHandle::get_metrics`]). A v1–v3 peer never sees a metrics
+//! frame.
 
 use std::collections::HashMap;
 use std::io::{BufReader, ErrorKind};
@@ -68,6 +77,7 @@ use crate::envs::{GameId, ObsMode};
 use crate::error::{Error, Result};
 use crate::runtime::checkpoint::Checkpoint;
 use crate::serve::cache::obs_fnv1a;
+use crate::serve::metrics::{sample_now, MetricsSample};
 use crate::serve::queue::{Admission, Reply, Request};
 use crate::serve::server::{ClientHandle, Connector};
 use crate::serve::session::{Session, SessionReport};
@@ -555,6 +565,9 @@ fn bridge_v2(
             Frame::GetInfo if version >= 3 => {
                 send_server_info(&writer, connector, &handle, stats);
             }
+            Frame::GetMetrics if version >= 4 => {
+                send_metrics_report(&writer, connector, stats);
+            }
             other => {
                 let msg = format!("unexpected {} frame on a v{version} connection", other.name());
                 send_error(&mut writer.lock().unwrap(), stats, &msg);
@@ -585,6 +598,22 @@ fn send_server_info(
         obs_len: handle.obs_len() as u32,
         actions: handle.actions() as u32,
     };
+    let mut w = writer.lock().unwrap();
+    if write_frame(&mut *w, &frame).is_ok() {
+        stats.record_frame_tx();
+    }
+}
+
+/// Best-effort `MetricsReport` frame: one live sample off the metrics
+/// plane, built by the same [`sample_now`] the in-process
+/// [`MetricsHub`](crate::serve::metrics::MetricsHub) ticks — the wire
+/// view and the `metrics.jsonl` view cannot drift.
+fn send_metrics_report(
+    writer: &Arc<Mutex<TcpStream>>,
+    connector: &Connector,
+    stats: &ServeStats,
+) {
+    let frame = Frame::MetricsReport { metrics: sample_now(connector) };
     let mut w = writer.lock().unwrap();
     if write_frame(&mut *w, &frame).is_ok() {
         stats.record_frame_tx();
@@ -819,6 +848,41 @@ impl RemoteHandle {
             )));
         }
         Ok(())
+    }
+
+    /// Ask the server for one live metrics sample (protocol v4): queue
+    /// depth, admitted/shed, cache hit rate, windowed latency
+    /// quantiles, params version — the payload behind `paac ctl
+    /// stats`. Data-plane completions that arrive first are parked,
+    /// like the v3 control calls.
+    pub fn get_metrics(&mut self) -> Result<MetricsSample> {
+        if self.version < 4 {
+            return Err(Error::serve(format!(
+                "metrics frames need protocol v4 (the server acked v{})",
+                self.version
+            )));
+        }
+        write_frame(&mut self.writer, &Frame::GetMetrics)?;
+        loop {
+            match read_timed(&mut self.reader, "metrics report")? {
+                Frame::MetricsReport { metrics } => return Ok(metrics),
+                Frame::ReplyV2 { id, probs, value } => {
+                    self.pending.insert(id, Ok(Reply { probs, value }));
+                }
+                Frame::Overloaded { id, message } => {
+                    self.pending.insert(id, Err(message));
+                }
+                Frame::Error { message } => {
+                    return Err(Error::serve(format!("server error: {message}")));
+                }
+                other => {
+                    return Err(Error::wire(format!(
+                        "expected MetricsReport to answer GetMetrics, got {}",
+                        other.name()
+                    )));
+                }
+            }
+        }
     }
 
     /// Receive until a `ServerInfo` lands, parking data-plane
@@ -1572,6 +1636,61 @@ mod tests {
         let mut h = RemoteHandle::connect_versioned(&addr, 2).unwrap();
         assert!(matches!(h.server_info(), Err(Error::Serve(_))));
         assert!(matches!(h.reload_checkpoint(Vec::new()), Err(Error::Serve(_))));
+        assert!(matches!(h.get_metrics(), Err(Error::Serve(_))));
+        drop(h);
+        frontend.shutdown().unwrap();
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn metrics_frames_report_live_counters_over_the_wire() {
+        let factory = SyntheticFactory::new(4, ACTIONS, 42);
+        let cfg = ServeConfig::builder().max_batch(4).max_delay(Duration::ZERO).build().unwrap();
+        let server = PolicyServer::start_pool_hot(factory, cfg).unwrap();
+        let frontend = TcpFrontend::bind("127.0.0.1:0", server.connector(), None).unwrap();
+        let addr = frontend.local_addr().to_string();
+        let mut h = RemoteHandle::connect(&addr).unwrap();
+        assert_eq!(h.version(), WIRE_VERSION);
+
+        for i in 0..8 {
+            let obs = vec![0.125 * i as f32; 4];
+            assert_eq!(h.query(&obs).unwrap().probs.len(), ACTIONS);
+        }
+        let m = h.get_metrics().unwrap();
+        assert_eq!(m.queries, 8, "every served query must be counted");
+        assert!(m.batches >= 1);
+        assert_eq!(m.admitted, 8, "the v2 bridge admits through the queue");
+        assert_eq!(m.shed, 0);
+        assert_eq!(m.params_version, 0, "no reload yet");
+        assert!(m.batch_fill > 0.0);
+        assert!(m.p99_ms >= m.p50_ms, "windowed quantiles must be ordered");
+
+        // a hot reload moves the version the next sample reports
+        h.reload_checkpoint(Checkpoint::new("synthetic", 99).to_bytes()).unwrap();
+        let m = h.get_metrics().unwrap();
+        assert_eq!(m.params_version, 1);
+        assert_eq!(m.reloads, 1);
+
+        // and the sample agrees with the same call made in-process
+        let local = sample_now(&server.connector());
+        assert_eq!(local.queries, m.queries);
+        assert_eq!(local.params_version, m.params_version);
+        drop(h);
+        frontend.shutdown().unwrap();
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn a_v3_client_interops_but_never_sees_a_metrics_frame() {
+        let (server, frontend, addr) = loopback(4, 2, Duration::ZERO, None);
+        let mut h = RemoteHandle::connect_versioned(&addr, 3).unwrap();
+        assert_eq!(h.version(), 3, "min-wins must settle on the client's v3");
+        // the v3 surface still works end to end
+        assert_eq!(h.query(&[0.5; 4]).unwrap().probs.len(), ACTIONS);
+        assert_eq!(h.server_info().unwrap().params_version, 0);
+        // but the v4 surface is refused client-side before any frame
+        let err = h.get_metrics().unwrap_err();
+        assert!(err.to_string().contains("protocol v4"), "{err}");
         drop(h);
         frontend.shutdown().unwrap();
         server.shutdown().unwrap();

@@ -32,6 +32,12 @@
 //!   report the live `params_version` and reload count. Control frames
 //!   ride the same connection as queries — the data plane keeps flowing
 //!   while a reload stages.
+//! * **v4** adds the metrics plane: [`Frame::GetMetrics`] asks for a
+//!   [`Frame::MetricsReport`] — one fixed-size
+//!   [`MetricsSample`](crate::serve::metrics::MetricsSample) (queue
+//!   depth, admitted/shed, cache hit rate, windowed latency quantiles,
+//!   params_version) read off the live server, the payload behind
+//!   `paac ctl stats`.
 //!
 //! Version negotiation is min-wins ([`negotiate_version`]): a v1-only
 //! peer on either side of a newer build gets the original lockstep
@@ -49,14 +55,16 @@
 use std::io::{ErrorKind, Read, Write};
 
 use crate::error::{Error, Result};
+use crate::serve::metrics::MetricsSample;
 
 /// Leading magic of every frame (the bytes `b"PAAC"`, read little-endian).
 pub const WIRE_MAGIC: u32 = u32::from_le_bytes(*b"PAAC");
 
 /// Protocol version spoken by this build, carried in Hello/HelloAck.
 /// v1 = lockstep Query/Reply; v2 adds tagged pipelined frames; v3 adds
-/// the control frames (ReloadCheckpoint / GetInfo / ServerInfo).
-pub const WIRE_VERSION: u16 = 3;
+/// the control frames (ReloadCheckpoint / GetInfo / ServerInfo); v4
+/// adds the metrics plane (GetMetrics / MetricsReport).
+pub const WIRE_VERSION: u16 = 4;
 
 /// Pick the protocol version for a connection whose peer announced
 /// `peer` in its Hello: min-wins, so either side can be the older
@@ -128,7 +136,20 @@ pub enum Frame {
     /// Client → server (v3, control plane): ask for a
     /// [`Frame::ServerInfo`] snapshot.
     GetInfo,
+    /// Client → server (v4, metrics plane): ask for a
+    /// [`Frame::MetricsReport`].
+    GetMetrics,
+    /// Server → client (v4, metrics plane): one live
+    /// [`MetricsSample`] — the same struct the in-process
+    /// [`MetricsHub`](crate::serve::metrics::MetricsHub) rings and logs,
+    /// serialized as 11 `u64`s then 7 `f64`s, all little-endian
+    /// ([`METRICS_REPORT_LEN`] bytes).
+    MetricsReport { metrics: MetricsSample },
 }
+
+/// Fixed payload size of a [`Frame::MetricsReport`]: 11 `u64` counters
+/// + 7 `f64` gauges.
+pub const METRICS_REPORT_LEN: usize = 11 * 8 + 7 * 8;
 
 impl Frame {
     /// Wire type id (the header's `type` byte).
@@ -145,6 +166,8 @@ impl Frame {
             Frame::ReloadCheckpoint { .. } => 9,
             Frame::ServerInfo { .. } => 10,
             Frame::GetInfo => 11,
+            Frame::GetMetrics => 12,
+            Frame::MetricsReport { .. } => 13,
         }
     }
 
@@ -162,6 +185,8 @@ impl Frame {
             Frame::ReloadCheckpoint { .. } => "ReloadCheckpoint",
             Frame::ServerInfo { .. } => "ServerInfo",
             Frame::GetInfo => "GetInfo",
+            Frame::GetMetrics => "GetMetrics",
+            Frame::MetricsReport { .. } => "MetricsReport",
         }
     }
 
@@ -231,6 +256,37 @@ impl Frame {
                 })
             }
             Frame::GetInfo => assemble(self.type_id(), 0, |_| {}),
+            Frame::GetMetrics => assemble(self.type_id(), 0, |_| {}),
+            Frame::MetricsReport { metrics } => {
+                assemble(self.type_id(), METRICS_REPORT_LEN, |b| {
+                    for v in [
+                        metrics.uptime_us,
+                        metrics.queue_depth,
+                        metrics.queries,
+                        metrics.batches,
+                        metrics.admitted,
+                        metrics.shed,
+                        metrics.cache_hits,
+                        metrics.cache_misses,
+                        metrics.coalesced,
+                        metrics.reloads,
+                        metrics.params_version,
+                    ] {
+                        b.extend_from_slice(&v.to_le_bytes());
+                    }
+                    for v in [
+                        metrics.batch_fill,
+                        metrics.cache_hit_rate,
+                        metrics.p50_ms,
+                        metrics.p95_ms,
+                        metrics.p99_ms,
+                        metrics.queue_wait_p50_ms,
+                        metrics.queue_wait_p95_ms,
+                    ] {
+                        b.extend_from_slice(&v.to_le_bytes());
+                    }
+                })
+            }
         }
     }
 
@@ -359,6 +415,10 @@ impl<'a> Cursor<'a> {
         Ok(f32::from_le_bytes(self.take(4, what)?.try_into().expect("4-byte slice")))
     }
 
+    fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8, what)?.try_into().expect("8-byte slice")))
+    }
+
     /// A `u32` count followed by that many raw little-endian f32s.
     fn f32_vec(&mut self, what: &str) -> Result<Vec<f32>> {
         let n = self.u32(what)? as usize;
@@ -436,6 +496,29 @@ fn decode_payload(ty: u8, payload: &[u8]) -> Result<Frame> {
             actions: c.u32("ServerInfo actions")?,
         },
         11 => Frame::GetInfo,
+        12 => Frame::GetMetrics,
+        13 => Frame::MetricsReport {
+            metrics: MetricsSample {
+                uptime_us: c.u64("MetricsReport uptime_us")?,
+                queue_depth: c.u64("MetricsReport queue_depth")?,
+                queries: c.u64("MetricsReport queries")?,
+                batches: c.u64("MetricsReport batches")?,
+                admitted: c.u64("MetricsReport admitted")?,
+                shed: c.u64("MetricsReport shed")?,
+                cache_hits: c.u64("MetricsReport cache_hits")?,
+                cache_misses: c.u64("MetricsReport cache_misses")?,
+                coalesced: c.u64("MetricsReport coalesced")?,
+                reloads: c.u64("MetricsReport reloads")?,
+                params_version: c.u64("MetricsReport params_version")?,
+                batch_fill: c.f64("MetricsReport batch_fill")?,
+                cache_hit_rate: c.f64("MetricsReport cache_hit_rate")?,
+                p50_ms: c.f64("MetricsReport p50_ms")?,
+                p95_ms: c.f64("MetricsReport p95_ms")?,
+                p99_ms: c.f64("MetricsReport p99_ms")?,
+                queue_wait_p50_ms: c.f64("MetricsReport queue_wait_p50_ms")?,
+                queue_wait_p95_ms: c.f64("MetricsReport queue_wait_p95_ms")?,
+            },
+        },
         other => return Err(Error::wire(format!("unknown frame type {other}"))),
     };
     c.finish(frame.name())?;
@@ -539,6 +622,40 @@ mod tests {
             actions: 6,
         });
         roundtrip(Frame::GetInfo);
+        roundtrip(Frame::GetMetrics);
+        roundtrip(Frame::MetricsReport { metrics: sample_metrics() });
+        roundtrip(Frame::MetricsReport { metrics: MetricsSample::default() });
+    }
+
+    fn sample_metrics() -> MetricsSample {
+        MetricsSample {
+            uptime_us: 12_000_000,
+            queue_depth: 7,
+            queries: 10_000,
+            batches: 400,
+            admitted: 9_990,
+            shed: 10,
+            cache_hits: 2_000,
+            cache_misses: 8_000,
+            coalesced: 55,
+            reloads: 3,
+            params_version: u64::MAX,
+            batch_fill: 0.8125,
+            cache_hit_rate: 0.2,
+            p50_ms: 1.5,
+            p95_ms: 4.25,
+            p99_ms: 9.0,
+            queue_wait_p50_ms: 0.25,
+            queue_wait_p95_ms: 0.75,
+        }
+    }
+
+    #[test]
+    fn metrics_report_payload_is_exactly_the_documented_size() {
+        let bytes = Frame::MetricsReport { metrics: sample_metrics() }.encode();
+        assert_eq!(bytes.len(), HEADER_LEN + METRICS_REPORT_LEN);
+        // empty request frame, like GetInfo
+        assert_eq!(Frame::GetMetrics.encode().len(), HEADER_LEN);
     }
 
     #[test]
@@ -563,6 +680,8 @@ mod tests {
         assert_eq!(negotiate_version(1).unwrap(), 1);
         // a v2 peer pipelines but never sees a control frame
         assert_eq!(negotiate_version(2).unwrap(), 2);
+        // a v3 peer gets the control plane but never a metrics frame
+        assert_eq!(negotiate_version(3).unwrap(), 3);
         // matching builds speak the newest version both know
         assert_eq!(negotiate_version(WIRE_VERSION).unwrap(), WIRE_VERSION);
         // a peer from the future is capped at what this build speaks
@@ -617,6 +736,7 @@ mod tests {
                 obs_len: 4,
                 actions: 6,
             },
+            Frame::MetricsReport { metrics: sample_metrics() },
         ] {
             let full = frame.encode();
             for cut in 0..full.len() {
@@ -717,7 +837,7 @@ mod tests {
             x ^= x << 5;
             x
         };
-        for ty in 0..=13u8 {
+        for ty in 0..=15u8 {
             for len in [0usize, 1, 3, 4, 7, 8, 11, 12, 16, 33, 64] {
                 let mut bytes = Vec::with_capacity(HEADER_LEN + len);
                 bytes.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
@@ -755,6 +875,8 @@ mod tests {
                 actions: 6,
             },
             Frame::GetInfo,
+            Frame::GetMetrics,
+            Frame::MetricsReport { metrics: sample_metrics() },
         ];
         for frame in &frames {
             let clean = frame.encode();

@@ -33,30 +33,62 @@
 //!   so `ts` is monotone within a `tid` (asserted by [`validate`],
 //!   which the trace tests and the `trace_check` example share).
 //! - **Bounded.** Each thread buffer caps at
-//!   [`DEFAULT_EVENT_LIMIT`] events (overflow is counted and surfaced as
-//!   a `trace.dropped` event) so an unattended `--trace` serve run
-//!   degrades instead of exhausting memory.
+//!   [`DEFAULT_EVENT_LIMIT`] events (overflow is counted and surfaced
+//!   once per recording as a `trace.dropped` event carrying the total
+//!   count) so an unattended `--trace` serve run degrades instead of
+//!   exhausting memory.
 //!
-//! A recording is process-global: [`start`] arms it, [`stop`] (or
-//! [`stop_and_write`]) disarms and drains it. Starting bumps a
-//! generation counter, which invalidates the thread-local buffers
-//! cached by a previous recording — long-lived threads re-register on
-//! their next span.
+//! A recording is process-global and runs in one of two modes:
+//!
+//! - **One-shot** — [`start`] arms it, [`stop`] (or [`stop_and_write`])
+//!   disarms and drains everything into a single JSON array. The right
+//!   shape for bounded runs (train, bench, `--queries N` serve smokes).
+//! - **Streaming** — [`start_streaming`] arms the same recorder *plus* a
+//!   background flusher thread that drains every thread buffer on an
+//!   interval into chunked files `trace.0001.json`, `trace.0002.json`, …
+//!   inside a directory, each chunk an independently loadable trace
+//!   (metadata events are repeated per chunk). The directory's total
+//!   chunk bytes are bounded: past the budget the **oldest** chunks are
+//!   deleted, so a server that never exits keeps a sliding window of its
+//!   most recent history instead of hitting the in-memory event cap.
+//!   [`validate_dir`] stitches the surviving chunks back into one
+//!   [`TraceSummary`]. Because buffers drain every interval, the
+//!   per-thread cap only bounds one interval's burst, not the recording.
+//!
+//! Starting either mode bumps a generation counter, which invalidates
+//! the thread-local buffers cached by a previous recording — long-lived
+//! threads re-register on their next span.
+//!
+//! Chunk ordering caveat: events are recorded when a span *closes*, so a
+//! span that outlives a flush boundary lands in a later chunk with its
+//! true (earlier) start timestamp. Each chunk is therefore ts-monotone
+//! per track internally, but monotonicity is not enforced *across*
+//! chunks — Perfetto sorts on load, and [`validate_dir`] validates each
+//! chunk independently before merging the summaries.
 
 use std::cell::RefCell;
-use std::collections::BTreeMap;
-use std::path::Path;
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::util::json::{obj, Json};
 
 /// Per-thread event cap for [`start`]; beyond it events are dropped and
 /// counted. 2^20 X-events is ~100 MB of JSON — roomy for smoke runs,
-/// finite for forgotten ones.
+/// finite for forgotten ones. Under [`start_streaming`] the cap bounds a
+/// single flush interval's burst instead of the whole recording.
 pub const DEFAULT_EVENT_LIMIT: usize = 1 << 20;
+
+/// Default flush cadence for [`start_streaming`] callers that don't
+/// care: twice a second keeps chunks small without measurable overhead.
+pub const DEFAULT_FLUSH_INTERVAL: Duration = Duration::from_millis(500);
+
+/// Default on-disk chunk budget for [`start_streaming`]: 32 MiB of
+/// trace history before the oldest chunks are evicted.
+pub const DEFAULT_STREAM_BUDGET: u64 = 32 * 1024 * 1024;
 
 /// What an [`Event`] renders as.
 #[derive(Clone, Copy, PartialEq, Eq)]
@@ -105,6 +137,27 @@ static ENABLED: AtomicBool = AtomicBool::new(false);
 /// recording re-register instead of writing into a drained buffer.
 static GENERATION: AtomicU64 = AtomicU64::new(0);
 static RECORDER: Mutex<Option<Recorder>> = Mutex::new(None);
+
+/// The streaming side: chunk directory, byte budget, and flush
+/// bookkeeping shared between the flusher thread and the public API.
+struct StreamShared {
+    dir: PathBuf,
+    budget: u64,
+    stop: AtomicBool,
+    inner: Mutex<StreamInner>,
+}
+
+/// Serialized per-flush state: the next chunk number and the
+/// generation-total dropped-event count (surfaced once, at the final
+/// flush). Holding this lock across render+write serializes concurrent
+/// flushes (timer thread vs [`flush_streaming`]).
+struct StreamInner {
+    next_seq: u64,
+    dropped: u64,
+}
+
+#[allow(clippy::type_complexity)]
+static STREAM: Mutex<Option<(Arc<StreamShared>, std::thread::JoinHandle<()>)>> = Mutex::new(None);
 
 /// What a thread caches after registering with the live recording.
 struct Local {
@@ -194,8 +247,11 @@ pub fn start_with_limit(limit: usize) {
 /// Disarm and drain: returns the trace-event JSON array, or `None` when
 /// no recording was live. Spans still open on other threads are lost
 /// (they complete after their buffer is drained), which is the honest
-/// cut — the file describes exactly what finished while recording.
+/// cut — the file describes exactly what finished while recording. If a
+/// streaming flusher is running it is joined first without a final
+/// flush; prefer [`stop_streaming`] for streaming recordings.
 pub fn stop() -> Option<Json> {
+    halt_streamer();
     ENABLED.store(false, Ordering::Release);
     let rec = lock_ignore_poison(&RECORDER).take()?;
     Some(render(rec))
@@ -211,6 +267,202 @@ pub fn stop_and_write(path: &Path) -> Result<bool> {
         }
         None => Ok(false),
     }
+}
+
+/// Arm a **streaming** recording: the usual recorder plus a background
+/// flusher thread that every `interval` drains all thread buffers into
+/// the next `trace.NNNN.json` chunk under `dir`, then deletes the
+/// oldest chunks until the directory's total chunk bytes fit
+/// `budget_bytes` (the newest chunk always survives). Replaces any live
+/// one-shot recording; errors if a streaming recording is already live.
+pub fn start_streaming(dir: &Path, interval: Duration, budget_bytes: u64) -> Result<()> {
+    start_streaming_with_limit(dir, interval, budget_bytes, DEFAULT_EVENT_LIMIT)
+}
+
+/// [`start_streaming`] with an explicit per-thread event cap (bounds a
+/// single flush interval's burst; drained buffers refill from zero).
+fn start_streaming_with_limit(
+    dir: &Path,
+    interval: Duration,
+    budget_bytes: u64,
+    limit: usize,
+) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut stream = lock_ignore_poison(&STREAM);
+    if stream.is_some() {
+        return Err(Error::trace("a streaming recording is already live"));
+    }
+    start_with_limit(limit);
+    let shared = Arc::new(StreamShared {
+        dir: dir.to_path_buf(),
+        budget: budget_bytes.max(1),
+        stop: AtomicBool::new(false),
+        inner: Mutex::new(StreamInner { next_seq: 1, dropped: 0 }),
+    });
+    let flusher = shared.clone();
+    let thread = std::thread::Builder::new()
+        .name("paac-trace-flush".into())
+        .spawn(move || flush_loop(&flusher, interval))
+        .map_err(|e| Error::trace(format!("cannot spawn flusher: {e}")))?;
+    *stream = Some((shared, thread));
+    Ok(())
+}
+
+/// Stop a streaming recording: join the flusher, write the final chunk
+/// (carrying the once-per-generation `trace.dropped` marker if any
+/// buffer overflowed between flushes) and disarm the recorder. Returns
+/// `Ok(false)` when no streaming recording was live.
+pub fn stop_streaming() -> Result<bool> {
+    let taken = lock_ignore_poison(&STREAM).take();
+    let Some((shared, thread)) = taken else { return Ok(false) };
+    shared.stop.store(true, Ordering::Relaxed);
+    let _ = thread.join();
+    ENABLED.store(false, Ordering::Release);
+    let flushed = flush_chunk(&shared, true);
+    *lock_ignore_poison(&RECORDER) = None;
+    flushed?;
+    Ok(true)
+}
+
+/// Whether a streaming recording is live (flusher running).
+pub fn streaming() -> bool {
+    lock_ignore_poison(&STREAM).is_some()
+}
+
+/// Force an immediate flush of the live streaming recording — what
+/// tests and benches use instead of depending on flusher timing.
+/// Returns whether a chunk was written: `Ok(false)` when not streaming
+/// or when every buffer was empty (empty flushes write no file).
+pub fn flush_streaming() -> Result<bool> {
+    let stream = lock_ignore_poison(&STREAM);
+    match stream.as_ref() {
+        Some((shared, _)) => flush_chunk(shared, false),
+        None => Ok(false),
+    }
+}
+
+/// Stop and join a live flusher thread without a final flush.
+fn halt_streamer() {
+    let taken = lock_ignore_poison(&STREAM).take();
+    if let Some((shared, thread)) = taken {
+        shared.stop.store(true, Ordering::Relaxed);
+        let _ = thread.join();
+    }
+}
+
+/// Flusher thread body: sleep in short ticks (so stop is prompt), flush
+/// a chunk every `interval`.
+fn flush_loop(shared: &StreamShared, interval: Duration) {
+    let tick = interval.max(Duration::from_millis(1)).min(Duration::from_millis(20));
+    let mut elapsed = Duration::ZERO;
+    while !shared.stop.load(Ordering::Relaxed) {
+        std::thread::sleep(tick);
+        elapsed += tick;
+        if elapsed < interval {
+            continue;
+        }
+        elapsed = Duration::ZERO;
+        let _ = flush_chunk(shared, false);
+    }
+}
+
+/// Drain every registered thread buffer into one chunk file under the
+/// stream directory, then enforce the byte budget. The final flush
+/// (`final_flush`) also emits the generation's `trace.dropped` marker
+/// and always writes a chunk even if empty, so a stopped stream always
+/// validates. Returns whether a chunk was written.
+fn flush_chunk(shared: &StreamShared, final_flush: bool) -> Result<bool> {
+    // drain under the recorder lock; render and write after releasing it
+    let (names, drained, dropped_now) = {
+        let guard = lock_ignore_poison(&RECORDER);
+        let Some(rec) = guard.as_ref() else { return Ok(false) };
+        let mut names = Vec::with_capacity(rec.tracks.len());
+        let mut drained = Vec::new();
+        let mut dropped = 0u64;
+        for (tid, track) in rec.tracks.iter().enumerate() {
+            names.push(track.name.clone());
+            let mut buf = lock_ignore_poison(&track.buf);
+            let taken = std::mem::take(&mut *buf);
+            dropped += taken.dropped;
+            if !taken.events.is_empty() {
+                drained.push((tid, taken.events));
+            }
+        }
+        (names, drained, dropped)
+    };
+    let mut inner = lock_ignore_poison(&shared.inner);
+    inner.dropped += dropped_now;
+    let marker = (final_flush && inner.dropped > 0).then_some(inner.dropped);
+    let force_first = final_flush && inner.next_seq == 1;
+    if drained.is_empty() && marker.is_none() && !force_first {
+        return Ok(false);
+    }
+    let seq = inner.next_seq;
+    inner.next_seq += 1;
+
+    let mut out = vec![meta("process_name", 0, "paac")];
+    for (tid, name) in names.iter().enumerate() {
+        out.push(meta("thread_name", tid, name));
+    }
+    if let Some(count) = marker {
+        out.push(meta("thread_name", names.len(), "trace-overflow"));
+        out.push(dropped_event(names.len(), count));
+    }
+    for (tid, mut events) in drained {
+        events.sort_by_key(|e| e.ts);
+        for e in events {
+            out.push(event_json(tid, e));
+        }
+    }
+    let json = Json::Arr(out);
+
+    // atomic publish: tmp + rename, like checkpoint markers
+    let path = shared.dir.join(format!("trace.{seq:04}.json"));
+    let tmp = shared.dir.join(format!(".trace.{seq:04}.json.tmp"));
+    std::fs::write(&tmp, json.to_string_compact())?;
+    std::fs::rename(&tmp, &path)?;
+    enforce_budget(&shared.dir, shared.budget)?;
+    Ok(true)
+}
+
+/// Delete oldest chunks until the directory's total chunk bytes fit
+/// `budget`. The newest chunk always survives, even alone over budget —
+/// a trace directory never silently becomes empty.
+fn enforce_budget(dir: &Path, budget: u64) -> Result<()> {
+    let chunks = list_chunks(dir)?;
+    let sizes: Vec<u64> = chunks
+        .iter()
+        .map(|(_, p)| std::fs::metadata(p).map(|m| m.len()).unwrap_or(0))
+        .collect();
+    let mut total: u64 = sizes.iter().sum();
+    for (i, (_, path)) in chunks.iter().enumerate() {
+        if total <= budget || i + 1 == chunks.len() {
+            break;
+        }
+        if std::fs::remove_file(path).is_ok() {
+            total -= sizes[i];
+        }
+    }
+    Ok(())
+}
+
+/// The `trace.NNNN.json` chunks under `dir`, sorted by sequence number
+/// (numeric, so sequences past 9999 still order correctly). A one-shot
+/// `trace.json` in the same directory is not a chunk.
+fn list_chunks(dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(seq) = name.strip_prefix("trace.").and_then(|s| s.strip_suffix(".json")) else {
+            continue;
+        };
+        let Ok(seq) = seq.parse::<u64>() else { continue };
+        out.push((seq, entry.path()));
+    }
+    out.sort_by_key(|c| c.0);
+    Ok(out)
 }
 
 const PID: f64 = 1.0;
@@ -229,55 +481,74 @@ fn meta(name: &str, tid: usize, value: &str) -> Json {
     ])
 }
 
+/// The once-per-generation overflow marker: a zero-length span on its
+/// own `trace-overflow` track carrying the **total** dropped-event
+/// count in `args.count` (what [`TraceSummary::dropped`] sums).
+fn dropped_event(tid: usize, count: u64) -> Json {
+    obj(vec![
+        ("name", Json::Str("trace.dropped".to_string())),
+        ("cat", Json::Str("paac".to_string())),
+        ("ph", Json::Str("X".to_string())),
+        ("ts", Json::Num(0.0)),
+        ("dur", Json::Num(0.0)),
+        ("pid", Json::Num(PID)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", obj(vec![("count", Json::Num(count as f64))])),
+    ])
+}
+
+fn event_json(tid: usize, e: Event) -> Json {
+    let mut fields = vec![
+        ("name", Json::Str(e.name.to_string())),
+        ("cat", Json::Str("paac".to_string())),
+    ];
+    match e.kind {
+        EventKind::Span => {
+            fields.push(("ph", Json::Str("X".to_string())));
+            fields.push(("ts", Json::Num(us(e.ts))));
+            fields.push(("dur", Json::Num(us(e.dur))));
+        }
+        EventKind::Counter => {
+            fields.push(("ph", Json::Str("C".to_string())));
+            fields.push(("ts", Json::Num(us(e.ts))));
+        }
+    }
+    fields.push(("pid", Json::Num(PID)));
+    fields.push(("tid", Json::Num(tid as f64)));
+    if !e.args.is_empty() {
+        let args = e.args.into_iter().map(|(k, v)| (k, Json::Num(v))).collect();
+        fields.push(("args", obj(args)));
+    }
+    obj(fields)
+}
+
 /// Render the drained recording as the trace-event array: process /
-/// track metadata first, then each track's spans sorted by start time
-/// (so `ts` is monotone per `tid`).
+/// track metadata first, one `trace.dropped` marker if any buffer
+/// overflowed, then each track's spans sorted by start time (so `ts` is
+/// monotone per `tid`).
 fn render(rec: Recorder) -> Json {
     let mut out = vec![meta("process_name", 0, "paac")];
     for (tid, track) in rec.tracks.iter().enumerate() {
         out.push(meta("thread_name", tid, &track.name));
     }
+    let mut dropped = 0u64;
+    let mut drained: Vec<(usize, Vec<Event>)> = Vec::new();
     for (tid, track) in rec.tracks.iter().enumerate() {
         let mut buf = lock_ignore_poison(&track.buf);
-        let ThreadBuf { mut events, dropped } = std::mem::take(&mut *buf);
-        events.sort_by_key(|e| e.ts);
-        if dropped > 0 {
-            // the drop marker sits at ts 0, ahead of the track's real
-            // events, so per-track ts stays monotone
-            out.push(obj(vec![
-                ("name", Json::Str("trace.dropped".to_string())),
-                ("cat", Json::Str("paac".to_string())),
-                ("ph", Json::Str("X".to_string())),
-                ("ts", Json::Num(0.0)),
-                ("dur", Json::Num(0.0)),
-                ("pid", Json::Num(PID)),
-                ("tid", Json::Num(tid as f64)),
-                ("args", obj(vec![("count", Json::Num(dropped as f64))])),
-            ]));
+        let taken = std::mem::take(&mut *buf);
+        dropped += taken.dropped;
+        if !taken.events.is_empty() {
+            drained.push((tid, taken.events));
         }
+    }
+    if dropped > 0 {
+        out.push(meta("thread_name", rec.tracks.len(), "trace-overflow"));
+        out.push(dropped_event(rec.tracks.len(), dropped));
+    }
+    for (tid, mut events) in drained {
+        events.sort_by_key(|e| e.ts);
         for e in events {
-            let mut fields = vec![
-                ("name", Json::Str(e.name.to_string())),
-                ("cat", Json::Str("paac".to_string())),
-            ];
-            match e.kind {
-                EventKind::Span => {
-                    fields.push(("ph", Json::Str("X".to_string())));
-                    fields.push(("ts", Json::Num(us(e.ts))));
-                    fields.push(("dur", Json::Num(us(e.dur))));
-                }
-                EventKind::Counter => {
-                    fields.push(("ph", Json::Str("C".to_string())));
-                    fields.push(("ts", Json::Num(us(e.ts))));
-                }
-            }
-            fields.push(("pid", Json::Num(PID)));
-            fields.push(("tid", Json::Num(tid as f64)));
-            if !e.args.is_empty() {
-                let args = e.args.into_iter().map(|(k, v)| (k, Json::Num(v))).collect();
-                fields.push(("args", obj(args)));
-            }
-            out.push(obj(fields));
+            out.push(event_json(tid, e));
         }
     }
     Json::Arr(out)
@@ -357,6 +628,12 @@ pub struct TraceSummary {
     pub spans: usize,
     /// Distinct `tid` tracks that carry span events.
     pub tracks: usize,
+    /// Chunk files merged by [`validate_dir`] (0 for a single-file
+    /// [`validate`]).
+    pub chunks: usize,
+    /// Events dropped on overflowing thread buffers: the sum of the
+    /// `trace.dropped` markers' `args.count` values.
+    pub dropped: u64,
     /// Per-name span count.
     pub count_by_name: BTreeMap<String, usize>,
     /// Per-name summed duration, microseconds.
@@ -398,9 +675,48 @@ impl TraceSummary {
 /// `trace_check` example so the smoke target and the unit tests can
 /// never disagree about well-formedness.
 pub fn validate(trace: &Json) -> std::result::Result<TraceSummary, String> {
-    let events = trace.as_arr().ok_or("trace root must be a JSON array")?;
     let mut summary = TraceSummary::default();
     let mut last_ts: BTreeMap<u64, f64> = BTreeMap::new();
+    validate_events(trace, &mut summary, &mut last_ts)?;
+    summary.tracks = last_ts.len();
+    Ok(summary)
+}
+
+/// Validate a streaming-trace chunk directory: every `trace.NNNN.json`
+/// chunk must pass [`validate`]'s structural checks independently, and
+/// the per-chunk summaries are merged into one [`TraceSummary`]
+/// (`chunks` counts the files). Monotonicity is per chunk, not across
+/// chunks — see the module docs for why (spans record at close time).
+pub fn validate_dir(dir: &Path) -> std::result::Result<TraceSummary, String> {
+    let chunks = list_chunks(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    if chunks.is_empty() {
+        return Err(format!("{}: no trace chunks (trace.NNNN.json)", dir.display()));
+    }
+    let mut summary = TraceSummary::default();
+    let mut tracks: BTreeSet<u64> = BTreeSet::new();
+    for (_, path) in &chunks {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        let mut last_ts: BTreeMap<u64, f64> = BTreeMap::new();
+        validate_events(&json, &mut summary, &mut last_ts)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        tracks.extend(last_ts.keys().copied());
+    }
+    summary.chunks = chunks.len();
+    summary.tracks = tracks.len();
+    Ok(summary)
+}
+
+/// The shared validation core: walk one trace-event array, accumulate
+/// into `summary`, enforce per-track monotonicity via `last_ts`. `B`/`E`
+/// balance is checked within the array (the recorder never emits them;
+/// foreign files get the stricter per-file check).
+fn validate_events(
+    trace: &Json,
+    summary: &mut TraceSummary,
+    last_ts: &mut BTreeMap<u64, f64>,
+) -> std::result::Result<(), String> {
+    let events = trace.as_arr().ok_or("trace root must be a JSON array")?;
     let mut open: BTreeMap<u64, Vec<String>> = BTreeMap::new();
     for (i, ev) in events.iter().enumerate() {
         let ctx = |msg: &str| format!("event {i}: {msg}");
@@ -425,8 +741,8 @@ pub fn validate(trace: &Json) -> std::result::Result<TraceSummary, String> {
         match ph {
             "M" => {
                 if name == "thread_name" {
-                    if let Some(n) = ev.get("args").and_then(|a| a.get("name")).and_then(Json::as_str)
-                    {
+                    let arg = ev.get("args").and_then(|a| a.get("name")).and_then(Json::as_str);
+                    if let Some(n) = arg {
                         summary.track_names.insert(tid()?, n.to_string());
                     }
                 }
@@ -460,6 +776,13 @@ pub fn validate(trace: &Json) -> std::result::Result<TraceSummary, String> {
                 }
                 last_ts.insert(t, ts);
                 summary.spans += 1;
+                if name == "trace.dropped" {
+                    if let Some(count) =
+                        ev.get("args").and_then(|a| a.get("count")).and_then(Json::as_f64)
+                    {
+                        summary.dropped += count as u64;
+                    }
+                }
                 *summary.count_by_name.entry(name.clone()).or_insert(0) += 1;
                 *summary.dur_us_by_name.entry(name).or_insert(0.0) += dur;
             }
@@ -497,8 +820,7 @@ pub fn validate(trace: &Json) -> std::result::Result<TraceSummary, String> {
             return Err(format!("track {t}: {} unclosed 'B' event(s)", stack.len()));
         }
     }
-    summary.tracks = last_ts.len();
-    Ok(summary)
+    Ok(())
 }
 
 /// Serialize the trace tests run one-at-a-time: the recorder is
@@ -550,6 +872,7 @@ mod tests {
             "complete() must preserve the measured interval exactly"
         );
         assert_eq!(summary.tracks, 1, "single-thread recording is one track");
+        assert_eq!(summary.dropped, 0, "nothing overflowed");
         assert!(stop().is_none(), "stop drained the recording");
     }
 
@@ -601,7 +924,8 @@ mod tests {
         let json = stop().unwrap();
         let summary = validate(&json).unwrap();
         assert_eq!(summary.count("burst"), 3, "cap must hold");
-        assert_eq!(summary.count("trace.dropped"), 1, "overflow must be surfaced");
+        assert_eq!(summary.count("trace.dropped"), 1, "one marker per generation");
+        assert_eq!(summary.dropped, 7, "the marker must carry the dropped count");
     }
 
     #[test]
@@ -649,6 +973,113 @@ mod tests {
         assert!(!active());
         counter("ghost.depth", 1.0);
         assert!(stop().is_none(), "no recording was armed");
+    }
+
+    fn stream_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("paac-trace-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn streaming_chunks_stitch_into_one_summary() {
+        let _g = test_lock();
+        let dir = stream_dir("stitch");
+        // interval far in the future: every chunk below is an explicit flush
+        start_streaming(&dir, Duration::from_secs(3600), u64::MAX).unwrap();
+        assert!(streaming());
+        for _ in 0..5 {
+            let _s = span("phase-one");
+        }
+        assert!(flush_streaming().unwrap(), "buffered events must produce a chunk");
+        for _ in 0..7 {
+            let _s = span("phase-two");
+        }
+        counter("stream.depth", 4.0);
+        assert!(stop_streaming().unwrap());
+        assert!(!streaming());
+        assert!(!active(), "stop_streaming must disarm the recorder");
+        let summary = validate_dir(&dir).expect("chunk directory must validate");
+        assert!(summary.chunks >= 2, "manual flush + final flush: {} chunk(s)", summary.chunks);
+        assert_eq!(summary.count("phase-one"), 5);
+        assert_eq!(summary.count("phase-two"), 7);
+        assert_eq!(summary.counter_count("stream.depth"), 1);
+        assert_eq!(summary.dropped, 0);
+        assert!(stop().is_none(), "recording fully drained");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn streaming_budget_evicts_oldest_chunks() {
+        let _g = test_lock();
+        let dir = stream_dir("evict");
+        start_streaming(&dir, Duration::from_secs(3600), 4096).unwrap();
+        for _ in 0..6 {
+            for _ in 0..64 {
+                let _s = span("evict-load");
+            }
+            assert!(flush_streaming().unwrap());
+        }
+        stop_streaming().unwrap();
+        assert!(
+            !dir.join("trace.0001.json").exists(),
+            "64 spans per chunk blows a 4 KiB budget: the oldest chunk must be evicted"
+        );
+        let summary = validate_dir(&dir).expect("surviving chunks must validate");
+        assert!(summary.count("evict-load") > 0, "the newest chunk always survives");
+        assert!(
+            summary.count("evict-load") < 6 * 64,
+            "eviction must have removed early spans, kept {}",
+            summary.count("evict-load")
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn streaming_outlives_the_per_thread_cap_and_reports_drops_once() {
+        let _g = test_lock();
+        let dir = stream_dir("drops");
+        start_streaming_with_limit(&dir, Duration::from_secs(3600), u64::MAX, 3).unwrap();
+        for _ in 0..10 {
+            let _s = span("burst");
+        }
+        assert!(flush_streaming().unwrap());
+        // the flush drained the buffer, so the next interval records again
+        // — where the one-shot recorder would have stayed saturated
+        for _ in 0..10 {
+            let _s = span("burst");
+        }
+        stop_streaming().unwrap();
+        let summary = validate_dir(&dir).unwrap();
+        assert_eq!(summary.count("burst"), 6, "cap bounds each flush window, not the run");
+        assert_eq!(summary.count("trace.dropped"), 1, "one marker per generation");
+        assert_eq!(summary.dropped, 14, "7 dropped per saturated window");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn second_start_streaming_is_rejected_while_live() {
+        let _g = test_lock();
+        let dir = stream_dir("double");
+        start_streaming(&dir, Duration::from_secs(3600), u64::MAX).unwrap();
+        assert!(
+            start_streaming(&dir, Duration::from_secs(3600), u64::MAX).is_err(),
+            "double-arming streaming must fail"
+        );
+        stop_streaming().unwrap();
+        assert!(!stop_streaming().unwrap(), "second stop is a no-op");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn validate_dir_rejects_empty_and_broken_directories() {
+        let dir = stream_dir("bad");
+        assert!(validate_dir(&dir).is_err(), "no chunks must fail");
+        std::fs::write(dir.join("trace.0001.json"), "[not json").unwrap();
+        let err = validate_dir(&dir).unwrap_err();
+        assert!(err.contains("trace.0001.json"), "error must name the chunk: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,144 @@
+//! Conservation tests for the live metrics plane: the `metrics.jsonl`
+//! time series a [`MetricsHub`] writes must agree with the server's own
+//! cumulative accounting. Both views read the same atomics, so any
+//! disagreement means a sampling bug — cumulative fields must be
+//! monotone across rows, no row may exceed the final totals, and the
+//! last row (the sample `stop()` takes) must equal the final
+//! [`StatsSnapshot`] exactly.
+//!
+//! The hub's timer is set to an hour so every sample in the file comes
+//! from an explicit `tick_now()` — the test is deterministic, not a
+//! race against the sampling thread.
+
+use std::time::Duration;
+
+use paac::metrics::JsonlWriter;
+use paac::serve::{sample_now, MetricsHub, PolicyServer, ServeConfig, SyntheticFactory};
+use paac::util::json::Json;
+
+const OBS_LEN: usize = 24;
+const ACTIONS_OUT: usize = 4;
+
+fn start_server(cache: usize) -> PolicyServer {
+    let factory = SyntheticFactory::new(OBS_LEN, ACTIONS_OUT, 11)
+        .with_cost(Duration::from_micros(100), Duration::from_micros(1));
+    let cfg = ServeConfig::builder()
+        .max_batch(8)
+        .max_delay(Duration::from_micros(200))
+        .cache(cache)
+        .build()
+        .unwrap();
+    PolicyServer::start_pool(&factory, cfg).expect("start server")
+}
+
+/// Pull a numeric field out of a parsed `serve_metrics` row.
+fn num(row: &Json, key: &str) -> f64 {
+    row.get(key)
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("row missing numeric field {key:?}: {row:?}"))
+}
+
+#[test]
+fn metrics_jsonl_rows_conserve_the_final_snapshot() {
+    let tmp = std::env::temp_dir().join(format!("paac-metrics-it-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    let sink_path = tmp.join("metrics.jsonl");
+
+    let server = start_server(64);
+    let sink = JsonlWriter::create(&sink_path).expect("create metrics sink");
+    // hour-long timer: only tick_now()/stop() produce rows
+    let hub = MetricsHub::spawn(server.connector(), Duration::from_secs(3600), Some(sink));
+
+    // three bursts of traffic, one explicit sample after each; repeat
+    // one observation so the response cache participates too
+    let mut expect_queries = 0u64;
+    for burst in 0..3u64 {
+        for i in 0..20u64 {
+            let v = if i % 4 == 0 { 0.5 } else { (burst * 20 + i) as f32 * 0.01 };
+            let obs = vec![v; OBS_LEN];
+            server.connect().query(&obs).expect("query");
+            expect_queries += 1;
+        }
+        hub.tick_now();
+    }
+
+    let last = hub.stop();
+    let snap = server.stats();
+
+    // the returned final sample IS the final snapshot
+    assert_eq!(last.queries, snap.queries);
+    assert_eq!(last.batches, snap.batches);
+    assert_eq!(last.admitted, snap.overload.admitted);
+    assert_eq!(last.shed, snap.overload.shed_total);
+    assert_eq!(last.cache_hits, snap.cache.hits);
+    assert_eq!(last.cache_misses, snap.cache.misses);
+    assert_eq!(last.reloads, snap.reload.count);
+    // cache hits resolve at submit time and never reach the batchers,
+    // so batcher queries + hits must conserve the issued total
+    assert_eq!(
+        last.queries + last.cache_hits,
+        expect_queries,
+        "every issued query must land in exactly one of queries/cache_hits"
+    );
+    assert_eq!(last.shed, 0, "nothing sheds at this load");
+    assert!(last.cache_hits > 0, "the repeated observation must hit the cache");
+
+    // and an independent sample agrees with the hub's view
+    let fresh = sample_now(&server.connector());
+    assert_eq!(fresh.queries, last.queries);
+    assert_eq!(fresh.params_version, last.params_version);
+
+    // the file: 4 rows (3 bursts + the stop sample), all well-formed,
+    // cumulative fields monotone, none exceeding the final totals
+    let text = std::fs::read_to_string(&sink_path).expect("read metrics.jsonl");
+    let rows: Vec<Json> = text
+        .lines()
+        .map(|l| Json::parse(l).expect("metrics row parses"))
+        .collect();
+    assert_eq!(rows.len(), 4, "3 explicit ticks + the stop sample");
+    let cumulative =
+        ["uptime_secs", "queries", "batches", "admitted", "shed", "cache_hits", "cache_misses"];
+    for row in &rows {
+        assert_eq!(row.get("type").and_then(Json::as_str), Some("serve_metrics"));
+        for key in cumulative {
+            assert!(num(row, key) <= num(&rows[3], key) + 1e-9, "{key} exceeds final row");
+        }
+    }
+    for pair in rows.windows(2) {
+        for key in cumulative {
+            assert!(
+                num(&pair[0], key) <= num(&pair[1], key) + 1e-9,
+                "{key} went backwards between consecutive rows"
+            );
+        }
+    }
+    // rows 1..3 each saw exactly one more 20-query burst (split between
+    // the batchers and the response cache)
+    for (i, row) in rows.iter().take(3).enumerate() {
+        let seen = num(row, "queries") as u64 + num(row, "cache_hits") as u64;
+        assert_eq!(seen, 20 * (i as u64 + 1));
+    }
+    assert_eq!(num(&rows[3], "queries") as u64, snap.queries);
+    assert_eq!(num(&rows[3], "cache_hits") as u64, snap.cache.hits);
+
+    server.shutdown().expect("shutdown");
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn the_ring_is_bounded_and_latest_tracks_the_tail() {
+    let server = start_server(0);
+    let hub = MetricsHub::spawn(server.connector(), Duration::from_secs(3600), None);
+
+    for _ in 0..(paac::serve::metrics::DEFAULT_RING + 40) {
+        hub.tick_now();
+    }
+    let samples = hub.samples();
+    assert_eq!(samples.len(), paac::serve::metrics::DEFAULT_RING, "ring must evict, not grow");
+    let latest = hub.latest().expect("ring is non-empty");
+    assert_eq!(&latest, samples.last().unwrap());
+    assert_eq!(latest.queries, 0, "no traffic was driven");
+
+    drop(hub); // Drop must join the sampling thread without a stop()
+    server.shutdown().expect("shutdown");
+}

@@ -22,9 +22,11 @@ use paac::util::timer::Phase;
 
 static TRACE_LOCK: Mutex<()> = Mutex::new(());
 
-/// Serialize recording tests and start each from a disarmed recorder.
+/// Serialize recording tests and start each from a disarmed recorder
+/// (stopping a leaked streaming session first, which also disarms).
 fn trace_guard() -> MutexGuard<'static, ()> {
     let g = TRACE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _ = trace::stop_streaming();
     let _ = trace::stop();
     g
 }
@@ -78,6 +80,53 @@ fn serve_trace_spans_match_queue_wait_stats() {
          (tolerance {tol:.6}s)"
     );
     assert_eq!(summary.count("serve.queue_wait"), snap.queue_wait.count as usize);
+}
+
+#[test]
+fn streaming_chunks_capture_a_full_serve_run() {
+    let _g = trace_guard();
+
+    let dir = std::env::temp_dir().join(format!("paac-trace-stream-it-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // fast flush interval so the background flusher (not just the final
+    // drain) writes chunks while the load is still running
+    trace::start_streaming(&dir, Duration::from_millis(5), u64::MAX).expect("start streaming");
+    assert!(trace::streaming(), "streaming session should be live");
+    assert!(trace::active(), "streaming must arm the span recorder");
+
+    let obs_len = ObsMode::Grid.obs_len();
+    let factory = SyntheticFactory::new(obs_len, ACTIONS, 5)
+        .with_cost(Duration::from_micros(200), Duration::from_micros(2));
+    let cfg = ServeConfig::builder()
+        .max_batch(8)
+        .max_delay(Duration::from_micros(500))
+        .shards(2)
+        .build()
+        .unwrap();
+    let server = PolicyServer::start_pool(&factory, cfg).expect("start shard pool");
+    run_clients(&server, GameId::Catch, ObsMode::Grid, 11, 10, 4, 50).expect("load");
+    let snap = server.shutdown().expect("shutdown");
+
+    trace::flush_streaming().expect("manual flush while live");
+    assert!(trace::stop_streaming().expect("stop streaming"), "a session was live");
+    assert!(!trace::active(), "stop_streaming must disarm the recorder");
+
+    let summary = trace::validate_dir(&dir).expect("rotated chunks validate");
+    assert!(summary.chunks >= 1, "no chunk files written");
+    assert_eq!(summary.dropped, 0, "nothing should be dropped under u64::MAX budget");
+    // the streamed timeline carries the same span taxonomy as one-shot
+    // recording, with per-batch counts agreeing with the server's stats
+    for name in ["serve.claim", "serve.queue_wait", "serve.infer", "serve.fanout"] {
+        assert!(summary.count(name) > 0, "no {name} spans in streamed chunks");
+    }
+    assert_eq!(
+        summary.count("serve.infer"),
+        snap.batches as usize,
+        "one serve.infer span per batch must survive chunk rotation"
+    );
+    assert_eq!(summary.count("serve.queue_wait"), snap.queue_wait.count as usize);
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
