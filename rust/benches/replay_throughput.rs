@@ -20,12 +20,15 @@
 
 use paac::benchkit::{Bench, JsonReport, Table};
 use paac::envs::GRID_OBS_LEN;
-use paac::replay::{ReplayBuffer, SampleBatch, SamplerKind};
+use paac::replay::{ObsStore, ReplayBuffer, SampleBatch, SamplerKind};
 use paac::util::rng::Pcg32;
 
 const N_STEP: usize = 5;
 const T_MAX: usize = 5;
 const GAMMA: f32 = 0.99;
+/// Atari observation row: 84*84 planes, 4-deep stack (table 4).
+const ATARI_STACK: usize = 4;
+const ATARI_OBS_LEN: usize = 84 * 84 * ATARI_STACK;
 
 /// Build a store and keep it warm: capacity ~64k transitions, obs data
 /// deterministic but non-constant, occasional episode boundaries.
@@ -37,21 +40,36 @@ struct Driver {
     dones: Vec<bool>,
     rng: Pcg32,
     n_e: usize,
+    obs_len: usize,
     step: u64,
 }
 
 impl Driver {
     fn new(n_e: usize, kind: SamplerKind) -> Driver {
-        let capacity = 65_536;
-        let buf = ReplayBuffer::new(capacity, n_e, GRID_OBS_LEN, N_STEP, GAMMA, kind, 7);
+        Driver::with(n_e, 65_536, GRID_OBS_LEN, kind, ObsStore::Stacked)
+    }
+
+    fn with(
+        n_e: usize,
+        capacity: usize,
+        obs_len: usize,
+        kind: SamplerKind,
+        store: ObsStore,
+    ) -> Driver {
+        let buf = ReplayBuffer::with_store(capacity, n_e, obs_len, N_STEP, GAMMA, kind, 7, store);
+        let mut rng = Pcg32::new(11, 3);
+        // Non-zero obs everywhere so frame-mode episode heads allocate
+        // their side blocks (the realistic worst case for residency).
+        let obs: Vec<f32> = (0..n_e * obs_len).map(|_| rng.next_f32()).collect();
         Driver {
             buf,
-            obs: vec![0.0; n_e * GRID_OBS_LEN],
+            obs,
             actions: vec![0; n_e],
             rewards: vec![0.0; n_e],
             dones: vec![false; n_e],
-            rng: Pcg32::new(11, 3),
+            rng,
             n_e,
+            obs_len,
             step: 0,
         }
     }
@@ -61,7 +79,7 @@ impl Driver {
         self.step += 1;
         for e in 0..self.n_e {
             // cheap obs churn: rotate one float per env per step
-            let idx = e * GRID_OBS_LEN + (self.step as usize % GRID_OBS_LEN);
+            let idx = e * self.obs_len + (self.step as usize % self.obs_len);
             self.obs[idx] = (self.step % 255) as f32 / 255.0;
             self.actions[e] = (self.step as usize + e) % 6;
             self.rewards[e] = if self.rng.chance(0.05) { 1.0 } else { 0.0 };
@@ -171,13 +189,69 @@ fn main() {
          and IS-weight math on top of the uniform gather"
     );
 
+    // -- table 4: stacked vs frame-native storage at Atari shape --
+    // 84x84x4 rows are ~47x the grid size, so this is where the obs
+    // copy dominates and frame mode pays off: one 84x84 plane pushed
+    // per step instead of the whole stack, reconstructed at gather.
+    let mut frame_table = Table::new(&[
+        "store",
+        "push frames/s",
+        "sample tr/s",
+        "resident MiB",
+        "vs stacked",
+    ]);
+    let mut frame_ratio = 1.0f64;
+    {
+        let n_e = 8usize;
+        let capacity = 2_048; // 2048 * 28224 floats = 231 MiB stacked
+        let batch_size = n_e * T_MAX;
+        for store in [ObsStore::Stacked, ObsStore::Frame { stack: ATARI_STACK }] {
+            let label = match store {
+                ObsStore::Stacked => "stacked",
+                ObsStore::Frame { .. } => "frame",
+            };
+            let mut d = Driver::with(n_e, capacity, ATARI_OBS_LEN, SamplerKind::Uniform, store);
+            // warm past one full lane so residency is at steady state
+            d.warm(capacity / n_e + 64);
+            let sp = bench
+                .run(&format!("atari-push {label}"), n_e as f64, || d.push())
+                .clone();
+            let mut b = SampleBatch::new(batch_size, ATARI_OBS_LEN);
+            let ss = bench
+                .run(&format!("atari-sample {label}"), batch_size as f64, || {
+                    assert!(d.buf.sample(&mut b, batch_size));
+                })
+                .clone();
+            let st = d.buf.stats();
+            if matches!(store, ObsStore::Frame { .. }) {
+                frame_ratio = st.compression;
+            }
+            frame_table.row(vec![
+                label.to_string(),
+                format!("{:.0}", sp.throughput()),
+                format!("{:.0}", ss.throughput()),
+                format!("{:.1}", st.obs_bytes_resident as f64 / (1024.0 * 1024.0)),
+                format!("{:.2}x", st.compression),
+            ]);
+        }
+    }
+    println!("\n## Stacked vs frame-native obs storage (Atari shape, 84x84x4)\n");
+    println!("{}", frame_table.render());
+    println!(
+        "frame mode stores one 84x84 plane per pushed step and rebuilds the \
+         4-deep stack at sample time; compression = stacked-equivalent bytes \
+         over resident bytes (head blocks included)"
+    );
+
     // -- machine-readable summary --
     report.add_samples("samples", &bench);
     report.add_table("push_rates", &push_table);
     report.add_table("sample_rates", &sample_table);
     report.add_table("priority_updates", &upd_table);
+    report.add_table("frame_store", &frame_table);
     report.add_num("obs_len", GRID_OBS_LEN as f64);
     report.add_num("n_step", N_STEP as f64);
+    report.add_num("frame_compression_ratio", frame_ratio);
     let out = std::path::Path::new("BENCH_replay.json");
     report.write(out).expect("write BENCH_replay.json");
     println!("\nmachine-readable summary written to {}", out.display());

@@ -43,7 +43,7 @@ use crate::config::Config;
 use crate::envs::{GameId, ObsMode, VecEnv, ACTIONS};
 use crate::error::{Error, Result};
 use crate::model::{PolicyModel, TrainStats};
-use crate::replay::{ReplayBuffer, ReplayStats, SampleBatch, SamplerKind};
+use crate::replay::{ObsStore, ReplayBuffer, ReplayStats, SampleBatch, SamplerKind};
 use crate::runtime::checkpoint::Checkpoint;
 use crate::runtime::ParamSet;
 use crate::util::rng::Pcg32;
@@ -494,6 +494,10 @@ pub struct NstepQOpts {
     pub per: bool,
     pub per_alpha: f32,
     pub per_beta: f32,
+    /// Replay observation layout: frame-native plane lanes for stacked
+    /// Atari observations, full rows otherwise (see
+    /// [`Config::replay_frame_enabled`]).
+    pub obs_store: ObsStore,
     pub seed: u64,
 }
 
@@ -517,6 +521,11 @@ impl NstepQOpts {
             per: cfg.per,
             per_alpha: cfg.per_alpha,
             per_beta: cfg.per_beta,
+            obs_store: if cfg.replay_frame_enabled() {
+                ObsStore::Frame { stack: crate::envs::preprocess::STACK }
+            } else {
+                ObsStore::Stacked
+            },
             seed: cfg.seed,
         }
     }
@@ -561,7 +570,7 @@ impl<B: QBackend> NstepQ<B> {
         let n_e = venv.n_e();
         let obs_len = venv.obs_len();
         assert_eq!(obs_len, backend.obs_len(), "backend obs_len != venv obs_len");
-        let replay = ReplayBuffer::new(
+        let replay = ReplayBuffer::with_store(
             opts.capacity,
             n_e,
             obs_len,
@@ -569,6 +578,7 @@ impl<B: QBackend> NstepQ<B> {
             opts.gamma,
             opts.sampler_kind(),
             opts.seed,
+            opts.obs_store,
         );
         NstepQ {
             backend,
@@ -648,6 +658,14 @@ impl<B: QBackend> NstepQ<B> {
             }
             self.timer.add_traced(Phase::Batching, t1);
             self.timestep += n_e as u64;
+        }
+        if crate::trace::active() {
+            // counter track next to the push/sample spans: resident obs
+            // bytes, the quantity frame-native storage divides by ~STACK
+            crate::trace::counter(
+                "replay.obs_bytes",
+                self.replay.ring().obs_bytes_resident() as f64,
+            );
         }
 
         let stats = if self.replay.len() >= self.opts.learn_start.max(self.opts.batch) {
@@ -766,8 +784,24 @@ mod tests {
             per,
             per_alpha: 0.6,
             per_beta: 0.4,
+            obs_store: ObsStore::Stacked,
             seed: 7,
         }
+    }
+
+    #[test]
+    fn from_config_resolves_obs_store_from_frame_mode() {
+        let mut cfg = Config::default();
+        cfg.algo = crate::config::Algo::NstepQ;
+        assert_eq!(NstepQOpts::from_config(&cfg).obs_store, ObsStore::Stacked);
+        cfg.atari_mode = true; // frame_mode auto follows the obs shape
+        cfg.arch = "nips".into();
+        assert_eq!(
+            NstepQOpts::from_config(&cfg).obs_store,
+            ObsStore::Frame { stack: crate::envs::preprocess::STACK }
+        );
+        cfg.replay_frame_mode = crate::config::FrameMode::Off;
+        assert_eq!(NstepQOpts::from_config(&cfg).obs_store, ObsStore::Stacked);
     }
 
     #[test]

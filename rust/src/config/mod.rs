@@ -67,6 +67,43 @@ pub enum LrSchedule {
     LinearToZero,
 }
 
+/// How the replay store lays out observations (`[replay] frame_mode`).
+/// Frame-native storage keeps one downsampled plane per step instead of
+/// the full STACK-deep row and reconstructs the stack at gather time —
+/// ~STACK× fewer resident obs bytes. It only makes sense when the
+/// observation's channels are a temporal frame stack (atari_mode); grid
+/// observations interleave feature channels, so they stay stacked.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameMode {
+    /// Frame-native iff the run uses stacked Atari observations.
+    Auto,
+    /// Force frame-native storage (config error on non-stacked obs).
+    On,
+    /// Always store full observation rows.
+    Off,
+}
+
+impl FrameMode {
+    pub fn parse(s: &str) -> Result<FrameMode> {
+        match s {
+            "auto" => Ok(FrameMode::Auto),
+            "on" => Ok(FrameMode::On),
+            "off" => Ok(FrameMode::Off),
+            _ => Err(Error::config(format!(
+                "unknown replay frame_mode '{s}' (valid: auto|on|off)"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FrameMode::Auto => "auto",
+            FrameMode::On => "on",
+            FrameMode::Off => "off",
+        }
+    }
+}
+
 /// Full run configuration. Field defaults are the paper's Table-1
 /// hyperparameters (§5.1), scaled where the testbed differs (see
 /// DESIGN.md §1).
@@ -136,6 +173,9 @@ pub struct Config {
     pub per_alpha: f32,
     /// PER importance-sampling exponent beta.
     pub per_beta: f32,
+    /// Replay observation layout: frame-native plane storage
+    /// (`[replay] frame_mode`) vs full stacked rows.
+    pub replay_frame_mode: FrameMode,
 
     // -- evaluation / logging --
     /// Episodes per evaluation pass.
@@ -194,6 +234,7 @@ impl Default for Config {
             per: false,
             per_alpha: 0.6,
             per_beta: 0.4,
+            replay_frame_mode: FrameMode::Auto,
             eval_episodes: 30,
             eval_interval: 0,
             log_interval: 50,
@@ -288,6 +329,10 @@ impl Config {
             per: doc.bool_or("replay.per", d.per),
             per_alpha: doc.f64_or("replay.per_alpha", d.per_alpha as f64) as f32,
             per_beta: doc.f64_or("replay.per_beta", d.per_beta as f64) as f32,
+            replay_frame_mode: FrameMode::parse(&doc.str_or(
+                "replay.frame_mode",
+                d.replay_frame_mode.name(),
+            ))?,
             eval_episodes: doc.i64_or("eval.episodes", d.eval_episodes as i64) as usize,
             eval_interval: doc.i64_or("eval.interval", d.eval_interval as i64) as u64,
             log_interval: doc.i64_or("train.log_interval", d.log_interval as i64) as u64,
@@ -332,20 +377,43 @@ impl Config {
             // the store packs window lengths into a u8
             return Err(Error::config("replay n_step must be in 1..=255"));
         }
+        // frame-native storage needs a temporal frame stack to split:
+        // grid observations interleave 6 feature channels, not history
+        if self.replay_frame_mode == FrameMode::On && !self.atari_mode {
+            return Err(Error::config(
+                "replay.frame_mode = \"on\" requires env.atari_mode = true: grid \
+                 observations interleave feature channels, not a temporal frame \
+                 stack, so there is no per-step plane to store (use \"auto\" to \
+                 enable it only for stacked observations)",
+            ));
+        }
         // lane geometry only binds when the replay store will be built
         if self.algo == Algo::NstepQ {
+            // frame-native lanes additionally hold stack-1 history planes
+            // behind every gatherable transition
+            let stack = if self.replay_frame_enabled() {
+                crate::envs::preprocess::STACK
+            } else {
+                1
+            };
             let lane = self.replay_capacity / self.n_e;
-            if lane <= self.n_step + 1 {
+            if lane <= self.n_step + stack {
                 return Err(Error::config(format!(
-                    "replay capacity {} too small for n_e={} at n_step={}: each env lane \
-                     must hold more than one n-step window (capacity > n_e * (n_step + 2))",
-                    self.replay_capacity, self.n_e, self.n_step
+                    "replay capacity {} too small for n_e={} at n_step={} (frame \
+                     history {}): each env lane must hold an n-step window plus the \
+                     frame history (capacity > n_e * (n_step + {} + 1))",
+                    self.replay_capacity,
+                    self.n_e,
+                    self.n_step,
+                    stack - 1,
+                    stack
                 )));
             }
-            // the assembler's window lag means only n_e * (lane - n_step)
-            // transitions are guaranteed sampleable at once; below the
-            // learner warmup the run would never update
-            let usable = self.n_e * (lane - self.n_step);
+            // the assembler's window lag (and frame history, in frame
+            // mode) means only this many transitions are guaranteed
+            // sampleable at once; below the learner warmup the run would
+            // never update
+            let usable = self.n_e * (lane - self.n_step - (stack - 1));
             let need = self.replay_min.max(self.batch_size());
             if usable < need {
                 return Err(Error::config(format!(
@@ -395,6 +463,17 @@ impl Config {
     /// n_e * t_max).
     pub fn batch_size(&self) -> usize {
         self.n_e * self.t_max
+    }
+
+    /// Whether the replay store runs frame-native for this run: `on`
+    /// forces it, `off` disables it, `auto` follows the observation
+    /// shape (stacked Atari planes yes, flat grid channels no).
+    pub fn replay_frame_enabled(&self) -> bool {
+        match self.replay_frame_mode {
+            FrameMode::On => true,
+            FrameMode::Off => false,
+            FrameMode::Auto => self.atari_mode,
+        }
     }
 
     /// Learning rate at a given timestep under the configured schedule.
@@ -573,5 +652,60 @@ mod tests {
         let mut c = Config::default();
         c.replay_capacity = 100;
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn frame_mode_parses_and_defaults_to_auto() {
+        assert_eq!(Config::default().replay_frame_mode, FrameMode::Auto);
+        let doc = Document::parse("[replay]\nframe_mode = \"off\"\n").unwrap();
+        assert_eq!(Config::from_doc(&doc).unwrap().replay_frame_mode, FrameMode::Off);
+        let doc = Document::parse("[replay]\nframe_mode = \"sideways\"\n").unwrap();
+        assert!(Config::from_doc(&doc).is_err());
+        for m in [FrameMode::Auto, FrameMode::On, FrameMode::Off] {
+            assert_eq!(FrameMode::parse(m.name()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn frame_mode_resolves_by_observation_shape() {
+        let mut c = Config::default();
+        assert!(!c.replay_frame_enabled()); // auto + grid obs
+        c.atari_mode = true;
+        assert!(c.replay_frame_enabled()); // auto + stacked obs
+        c.replay_frame_mode = FrameMode::Off;
+        assert!(!c.replay_frame_enabled());
+    }
+
+    #[test]
+    fn frame_mode_on_rejects_flat_observations() {
+        let mut c = Config::default();
+        c.algo = Algo::NstepQ;
+        c.replay_frame_mode = FrameMode::On; // grid obs: no temporal stack
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("atari_mode"), "unexpected error: {err}");
+
+        // the same setting is fine on stacked observations
+        c.atari_mode = true;
+        c.arch = "nips".into();
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn frame_mode_widens_the_lane_geometry_check() {
+        // 8 slots/lane clears stacked geometry (n_step 5 + 1) but not the
+        // frame-native history (n_step 5 + STACK 4)
+        let mut c = Config::default();
+        c.algo = Algo::NstepQ;
+        c.atari_mode = true;
+        c.arch = "nips".into();
+        c.n_e = 32;
+        c.replay_capacity = 32 * 8;
+        c.replay_min = 32;
+        c.t_max = 1;
+        c.replay_frame_mode = FrameMode::Off;
+        c.validate().unwrap();
+        c.replay_frame_mode = FrameMode::On;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("frame"), "unexpected error: {err}");
     }
 }

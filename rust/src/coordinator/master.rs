@@ -49,6 +49,8 @@ pub struct TrainReport {
     pub phase_fractions: Vec<(&'static str, f64)>,
     /// Baseline-specific diagnostics (staleness / policy lag).
     pub staleness: Option<f64>,
+    /// Final replay-store counters (algo = nstep-q only).
+    pub replay: Option<crate::replay::ReplayStats>,
     pub diverged: bool,
 }
 
@@ -328,6 +330,7 @@ impl Trainer {
             score_curve: curve,
             phase_fractions: fractions,
             staleness: None,
+            replay: None,
             diverged,
         })
     }
@@ -520,6 +523,7 @@ impl Trainer {
             score_curve: curve,
             phase_fractions: fractions,
             staleness: None,
+            replay: Some(q.replay_stats()),
             diverged,
         })
     }
@@ -584,6 +588,7 @@ impl Trainer {
                 .map(|(p, f)| (p.name(), f))
                 .collect(),
             staleness: Some(report.mean_staleness),
+            replay: None,
             diverged: false,
         })
     }
@@ -660,6 +665,7 @@ impl Trainer {
                 .map(|(p, f)| (p.name(), f))
                 .collect(),
             staleness: Some(report.mean_policy_lag),
+            replay: None,
             diverged: false,
         })
     }

@@ -314,6 +314,14 @@ impl Env {
     pub fn episode_reward(&self) -> f32 {
         self.episode_reward
     }
+
+    /// Agent steps taken in the current episode (0 right after a reset).
+    /// A frame-native replay consumer can use this to tell how much real
+    /// in-episode history the current stacked observation carries; no-op
+    /// start planes (pushed during `reset`) are not counted.
+    pub fn episode_age(&self) -> u64 {
+        self.episode_steps
+    }
 }
 
 #[cfg(test)]
@@ -388,6 +396,25 @@ mod tests {
         let returns = env.take_finished_returns();
         assert!(!returns.is_empty());
         assert!(env.take_finished_returns().is_empty()); // drained
+    }
+
+    #[test]
+    fn episode_age_counts_agent_steps_only() {
+        let mut env = Env::new(GameId::Catch, ObsMode::Grid, 3, 0, 30);
+        // no-op start frames are not agent steps
+        assert_eq!(env.episode_age(), 0);
+        let mut last_done = false;
+        for t in 0..200 {
+            let before = env.episode_age();
+            let info = env.step(t % ACTIONS);
+            if info.done {
+                last_done = true;
+                assert_eq!(env.episode_age(), 0); // auto-reset
+            } else {
+                assert_eq!(env.episode_age(), before + 1);
+            }
+        }
+        assert!(last_done, "catch should finish episodes in 200 steps");
     }
 
     #[test]

@@ -191,6 +191,14 @@ impl AtariPipeline {
             }
         }
     }
+
+    /// The most recent processed OUT x OUT plane — what `write_obs`
+    /// interleaves as channel STACK-1, and the only new payload a
+    /// frame-native replay store needs per step.
+    pub fn newest_plane(&self) -> &[f32] {
+        let plane_len = OUT * OUT;
+        &self.stack[self.head * plane_len..(self.head + 1) * plane_len]
+    }
 }
 
 impl Default for AtariPipeline {
@@ -298,6 +306,29 @@ mod tests {
         p.write_obs(&mut obs);
         for &v in &obs {
             assert!((0.0..=1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn newest_plane_is_channel_stack_minus_one() {
+        let mut rng = crate::util::rng::Pcg32::new(13, 0);
+        let mut game = GameId::Pong.build();
+        game.reset(&mut rng);
+        let mut p = AtariPipeline::new();
+        p.reset();
+        let mut obs = vec![0.0; OUT * OUT * STACK];
+        for t in 0..6 {
+            p.step(game.as_mut(), t % 6, &mut rng);
+            p.write_obs(&mut obs);
+            let plane = p.newest_plane();
+            assert_eq!(plane.len(), OUT * OUT);
+            for (i, &v) in plane.iter().enumerate() {
+                assert_eq!(
+                    v.to_bits(),
+                    obs[i * STACK + (STACK - 1)].to_bits(),
+                    "t={t} i={i}"
+                );
+            }
         }
     }
 

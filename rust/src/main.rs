@@ -33,7 +33,7 @@ use std::time::{Duration, Instant};
 use paac::algo::evaluator::{evaluate, random_baseline, EvalProtocol};
 use paac::algo::nstep_q;
 use paac::cli::Cli;
-use paac::config::{Algo, Config, LrSchedule};
+use paac::config::{Algo, Config, FrameMode, LrSchedule};
 use paac::envs::{GameId, ObsMode};
 use paac::error::{Error, Result};
 use paac::metrics::JsonlWriter;
@@ -90,10 +90,22 @@ fn cli() -> Cli {
         )
         .flag("connect", None, "server address(es), comma-separated failover list (client)")
         .switch("flood", "pipelined flood: count replies vs sheds instead of sessions (client)")
-        .flag("replay-cap", None, "replay capacity in transitions (nstep-q)")
+        .flag(
+            "replay-cap",
+            None,
+            "TOTAL replay transitions across all envs (not per env, not raw \
+             frames), split into n_e per-env lanes of capacity/n_e (nstep-q)",
+        )
         .flag("n-step", None, "n-step return horizon of the replay assembler (nstep-q)")
         .flag("target-sync", None, "updates between target-network copies (nstep-q)")
         .switch("per", "prioritized replay sampling instead of uniform (nstep-q)")
+        .flag(
+            "frame-mode",
+            None,
+            "replay obs storage auto|on|off: store one plane per step and \
+             rebuild the stack at sample time (~4x fewer obs bytes; auto = \
+             on for --atari, off for grid obs) (nstep-q)",
+        )
         .flag("trace", None, "record a Perfetto trace to FILE (train|serve|client)")
         .flag(
             "trace-stream",
@@ -165,6 +177,9 @@ fn build_config(args: &paac::cli::Args) -> Result<Config> {
     if args.has("per") {
         cfg.per = true;
     }
+    if let Some(m) = args.get("frame-mode") {
+        cfg.replay_frame_mode = FrameMode::parse(m)?;
+    }
     if args.get("publish-every").is_some() {
         cfg.publish_every = args.u64_of("publish-every")?;
     }
@@ -192,10 +207,11 @@ fn cmd_train(args: &paac::cli::Args) -> Result<()> {
         );
         if cfg.algo == Algo::NstepQ {
             println!(
-                "replay: cap={} n_step={} sampler={} eps={}->{} target-sync={}",
+                "replay: cap={} n_step={} sampler={} store={} eps={}->{} target-sync={}",
                 cfg.replay_capacity,
                 cfg.n_step,
                 if cfg.per { "prioritized" } else { "uniform" },
+                if cfg.replay_frame_enabled() { "frame" } else { "stacked" },
                 cfg.eps_start,
                 cfg.eps_end,
                 cfg.target_sync
@@ -227,6 +243,19 @@ fn cmd_train(args: &paac::cli::Args) -> Result<()> {
     }
     if let Some(st) = report.staleness {
         println!("staleness/policy-lag (updates): {st:.2}");
+    }
+    if let Some(rs) = &report.replay {
+        println!(
+            "replay: {}/{} transitions resident, obs {:.1} MiB ({:.0} B/transition, \
+             {:.2}x vs stacked), {} sampled, mean age {:.1}",
+            rs.occupancy,
+            rs.capacity,
+            rs.obs_bytes_resident as f64 / (1024.0 * 1024.0),
+            rs.bytes_per_transition,
+            rs.compression,
+            rs.samples_drawn,
+            rs.mean_age
+        );
     }
     if !report.phase_fractions.is_empty() && !quiet {
         print!("time usage:");

@@ -192,6 +192,9 @@ impl RunLogger {
             ("samples_drawn", Json::Num(stats.samples_drawn as f64)),
             ("last_mean_age", Json::Num(stats.last_mean_age)),
             ("mean_age", Json::Num(stats.mean_age)),
+            ("obs_bytes_resident", Json::Num(stats.obs_bytes_resident as f64)),
+            ("bytes_per_transition", Json::Num(stats.bytes_per_transition)),
+            ("compression", Json::Num(stats.compression)),
             ("epsilon", Json::Num(epsilon as f64)),
         ]))
     }
@@ -249,6 +252,9 @@ mod tests {
             samples_drawn: 160,
             last_mean_age: 12.5,
             mean_age: 10.0,
+            obs_bytes_resident: 3_702_784,
+            bytes_per_transition: 28_928.0,
+            compression: 3.9,
         };
         rl.log_replay(3200, &stats, 0.7).unwrap();
         let text = std::fs::read_to_string(dir.join("qrun/events.jsonl")).unwrap();
@@ -257,6 +263,12 @@ mod tests {
         assert_eq!(rec.get("occupancy").unwrap().as_usize(), Some(128));
         assert_eq!(rec.get("fill").unwrap().as_f64(), Some(0.125));
         assert_eq!(rec.get("samples_drawn").unwrap().as_usize(), Some(160));
+        assert_eq!(
+            rec.get("obs_bytes_resident").unwrap().as_usize(),
+            Some(3_702_784)
+        );
+        assert_eq!(rec.get("bytes_per_transition").unwrap().as_f64(), Some(28_928.0));
+        assert!((rec.get("compression").unwrap().as_f64().unwrap() - 3.9).abs() < 1e-9);
         assert!((rec.get("epsilon").unwrap().as_f64().unwrap() - 0.7).abs() < 1e-6);
         std::fs::remove_dir_all(&dir).unwrap();
     }

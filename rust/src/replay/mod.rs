@@ -30,7 +30,7 @@ pub mod ring;
 pub mod sampler;
 pub mod sumtree;
 
-pub use ring::{ReplayRing, TransitionMeta};
+pub use ring::{ObsStore, ReplayRing, TransitionMeta};
 pub use sampler::{ReplayBuffer, SampleBatch, SamplerKind};
 pub use sumtree::SumTree;
 
@@ -52,6 +52,14 @@ pub struct ReplayStats {
     pub last_mean_age: f64,
     /// Running mean sample age over the whole run.
     pub mean_age: f64,
+    /// Observation bytes currently resident in the store (plane slots
+    /// plus episode-head blocks in frame mode).
+    pub obs_bytes_resident: u64,
+    /// Resident observation bytes per sampleable transition.
+    pub bytes_per_transition: f64,
+    /// Stacked-equivalent obs bytes over resident obs bytes: 1.0 for
+    /// stacked storage, ~STACK for frame-native storage.
+    pub compression: f64,
 }
 
 impl ReplayStats {
@@ -61,6 +69,79 @@ impl ReplayStats {
             0.0
         } else {
             self.occupancy as f64 / self.capacity as f64
+        }
+    }
+}
+
+/// Shared fixtures for the frame-store equivalence tests: a synthetic
+/// stand-in for `AtariPipeline` producing stack-consistent interleaved
+/// observations (shift register of planes, randomized no-op-style
+/// episode-head history), so ring- and sampler-level tests can assert
+/// frame-native reads are bit-identical to stacked storage.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::util::rng::Pcg32;
+
+    pub struct ShiftStream {
+        stack: usize,
+        pl: usize,
+        /// Channel-major planes; channel `stack - 1` is the newest.
+        chans: Vec<f32>,
+        rng: Pcg32,
+    }
+
+    impl ShiftStream {
+        pub fn new(stack: usize, pl: usize, seed: u64) -> Self {
+            let mut s = ShiftStream {
+                stack,
+                pl,
+                chans: vec![0.0; stack * pl],
+                rng: Pcg32::new(seed, 0x5111),
+            };
+            s.reset();
+            s
+        }
+
+        /// Begin an episode: 0..stack-1 of the older channels carry
+        /// "no-op start" planes (newest-first, like the real pipeline
+        /// after 0..=noop_max raw steps), the rest are the reset zeros.
+        pub fn reset(&mut self) {
+            let filled = self.rng.below(self.stack as u32) as usize;
+            for c in 0..self.stack - 1 {
+                let fresh = c >= self.stack - 1 - filled;
+                for i in 0..self.pl {
+                    self.chans[c * self.pl + i] = if fresh { self.rng.next_f32() } else { 0.0 };
+                }
+            }
+            self.fresh_newest();
+        }
+
+        /// Advance one step: shift every channel one plane older and
+        /// draw a fresh newest plane.
+        pub fn step(&mut self) {
+            for c in 0..self.stack - 1 {
+                let (dst, src) = self.chans.split_at_mut((c + 1) * self.pl);
+                dst[c * self.pl..].copy_from_slice(&src[..self.pl]);
+            }
+            self.fresh_newest();
+        }
+
+        fn fresh_newest(&mut self) {
+            let c = self.stack - 1;
+            for i in 0..self.pl {
+                self.chans[c * self.pl + i] = self.rng.next_f32();
+            }
+        }
+
+        /// Interleave HWC like `AtariPipeline::write_obs`:
+        /// `out[i * stack + c] = plane_c[i]`.
+        pub fn write_obs(&self, out: &mut [f32]) {
+            assert_eq!(out.len(), self.stack * self.pl);
+            for c in 0..self.stack {
+                for i in 0..self.pl {
+                    out[i * self.stack + c] = self.chans[c * self.pl + i];
+                }
+            }
         }
     }
 }

@@ -31,12 +31,58 @@
 //! [`crate::algo::returns::nstep_returns_into`], property-tested against
 //! it below.
 //!
+//! ## Frame-native storage ([`ObsStore::Frame`])
+//!
+//! Stacked observations (Atari: `STACK` planes interleaved HWC as
+//! `out[i * STACK + age]`) repeat each downsampled plane STACK times
+//! across consecutive steps of one env. Because a lane is contiguous in
+//! time, frame mode stores only the **newest** plane per step — slot `t`
+//! holds plane `t`, and the full stack of frame `t` is the plane run
+//! `t-STACK+1 ..= t` — and [`ReplayRing::read`] reconstructs the
+//! interleaved stack at gather time with strided plane copies. Planes
+//! that predate the episode start are zero-filled (matching the
+//! preprocessor's stack reset), with one wrinkle: no-op starts push real
+//! planes *before* the first policy observation, so the first frame of
+//! each episode keeps its older channels verbatim in a pooled
+//! **episode-head block** (`STACK-1` planes, allocated only when some
+//! older channel is nonzero, freed when the slot is overwritten). Every
+//! later frame of the episode reads those channels back through the
+//! shift recurrence `obs_t[c] = obs_head[c + (t - head)]`.
+//!
 //! ## Eviction
 //!
 //! Overwriting frame `t` (the ring wrapped) invalidates the transition
 //! that starts at `t`; the store reports the freed slot so a prioritized
-//! sampler can zero its mass. Valid transitions per lane therefore form
-//! the contiguous window `[pushed - lane_cap, frontier)`.
+//! sampler can zero its mass. In frame mode a transition needs planes
+//! back to `t - STACK + 1`, so the wrap invalidates `STACK` frames ahead
+//! instead of one. Valid transitions per lane therefore form the
+//! contiguous window `[pushed - lane_cap + stack - 1, frontier)` (with
+//! `stack = 1` for stacked storage).
+
+/// How the ring stores observation rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObsStore {
+    /// Each slot holds the full observation as staged (the default; the
+    /// only valid choice for flat/feature-channel observations).
+    Stacked,
+    /// Each slot holds one `obs_len / stack` plane — the newest channel
+    /// of an HWC-interleaved temporal stack — and reads reconstruct the
+    /// stack from the lane's plane run. ~`stack`× fewer obs bytes.
+    Frame { stack: usize },
+}
+
+impl ObsStore {
+    /// Temporal depth of one stored observation (1 for stacked rows).
+    pub fn stack(self) -> usize {
+        match self {
+            ObsStore::Stacked => 1,
+            ObsStore::Frame { stack } => stack,
+        }
+    }
+}
+
+/// `head_of` sentinel: slot has no episode-head block.
+const NO_HEAD: u32 = u32::MAX;
 
 /// Per-transition metadata returned by [`ReplayRing::read`].
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -57,8 +103,16 @@ pub struct ReplayRing {
     n_step: usize,
     gamma: f32,
     lane_cap: usize,
+    store: ObsStore,
+    /// Stored floats per slot: `obs_len / store.stack()`.
+    plane_len: usize,
     // -- frame ring, lane-major: slot = e * lane_cap + (t % lane_cap) --
     obs: Vec<f32>,
+    // -- frame mode only: episode-head blocks (older channels of each
+    //    episode's first frame), pooled in units of (stack-1) planes --
+    head_of: Vec<u32>,
+    head_pool: Vec<f32>,
+    head_free: Vec<u32>,
     actions: Vec<i32>,
     rewards: Vec<f32>,
     dones: Vec<bool>,
@@ -83,24 +137,54 @@ impl ReplayRing {
     /// `capacity / n_e` slots and must fit more than one full n-step
     /// window.
     pub fn new(capacity: usize, n_e: usize, obs_len: usize, n_step: usize, gamma: f32) -> Self {
+        Self::with_store(capacity, n_e, obs_len, n_step, gamma, ObsStore::Stacked)
+    }
+
+    /// Like [`ReplayRing::new`] with an explicit observation layout. In
+    /// frame mode each lane must additionally hold the `stack - 1`
+    /// history planes a transition gathers behind its start frame.
+    pub fn with_store(
+        capacity: usize,
+        n_e: usize,
+        obs_len: usize,
+        n_step: usize,
+        gamma: f32,
+        store: ObsStore,
+    ) -> Self {
         assert!(n_e >= 1 && obs_len >= 1 && n_step >= 1);
         // window lengths are stored as u8
         assert!(n_step <= u8::MAX as usize, "n_step {n_step} exceeds 255");
         assert!((0.0..=1.0).contains(&gamma));
+        let stack = store.stack();
+        if let ObsStore::Frame { stack } = store {
+            assert!(stack >= 2, "frame store needs a stack of at least 2");
+            assert!(
+                obs_len % stack == 0,
+                "obs_len {obs_len} is not divisible by stack {stack}"
+            );
+        }
         let lane_cap = capacity / n_e;
         assert!(
-            lane_cap > n_step + 1,
+            lane_cap > n_step + stack,
             "replay capacity {capacity} too small: n_e={n_e} lanes of {lane_cap} \
-             cannot hold an n_step={n_step} window (need capacity > n_e * (n_step + 2))"
+             cannot hold an n_step={n_step} window plus {stack} frame(s) of \
+             history (need capacity > n_e * (n_step + stack + 1))"
         );
         let slots = n_e * lane_cap;
+        let plane_len = obs_len / stack;
+        let frame_mode = matches!(store, ObsStore::Frame { .. });
         ReplayRing {
             n_e,
             obs_len,
             n_step,
             gamma,
             lane_cap,
-            obs: vec![0.0; slots * obs_len],
+            store,
+            plane_len,
+            obs: vec![0.0; slots * plane_len],
+            head_of: if frame_mode { vec![NO_HEAD; slots] } else { Vec::new() },
+            head_pool: Vec::new(),
+            head_free: Vec::new(),
             actions: vec![0; slots],
             rewards: vec![0.0; slots],
             dones: vec![false; slots],
@@ -157,24 +241,82 @@ impl ReplayRing {
         debug_assert_eq!(actions.len(), self.n_e);
         self.emitted.clear();
         self.evicted.clear();
-        let cap = self.lane_cap as u64;
         for e in 0..self.n_e {
             let t = self.pushed[e];
-            // the frame about to be overwritten carries the transition
-            // occupying the same slot out of the valid window
-            if t >= cap {
-                let old_t = t - cap;
+            // overwriting the oldest plane slides the valid window: every
+            // transition that would gather from it leaves. Stacked stores
+            // drop exactly the same-slot transition; frame stores drop up
+            // to `stack` transitions at the first wrap (see inval_lo).
+            let (lo_now, lo_next) = (self.inval_lo(t), self.inval_lo(t + 1));
+            for old_t in lo_now..lo_next {
                 if old_t < self.frontier[e] {
                     let s = self.slot(e, old_t);
                     self.evicted.push(s);
                 }
             }
             let s = self.slot(e, t);
-            self.obs[s * self.obs_len..(s + 1) * self.obs_len]
-                .copy_from_slice(&obs_batch[e * self.obs_len..(e + 1) * self.obs_len]);
+            let row = &obs_batch[e * self.obs_len..(e + 1) * self.obs_len];
+            match self.store {
+                ObsStore::Stacked => {
+                    self.obs[s * self.obs_len..(s + 1) * self.obs_len].copy_from_slice(row);
+                }
+                ObsStore::Frame { stack } => {
+                    // reusing the slot drops the previous occupant's
+                    // episode-head block (if any)
+                    if self.head_of[s] != NO_HEAD {
+                        self.head_free.push(self.head_of[s]);
+                        self.head_of[s] = NO_HEAD;
+                    }
+                    let pl = self.plane_len;
+                    let newest = stack - 1;
+                    for i in 0..pl {
+                        self.obs[s * pl + i] = row[i * stack + newest];
+                    }
+                    let is_head = t == 0 || self.dones[self.slot(e, t - 1)];
+                    if is_head {
+                        // keep the head frame's older channels verbatim:
+                        // no-op starts push real planes before the first
+                        // policy obs, so zero-fill alone is not bit-exact.
+                        // All-zero histories skip the allocation.
+                        let any_bits = (0..stack - 1)
+                            .any(|c| (0..pl).any(|i| row[i * stack + c].to_bits() != 0));
+                        if any_bits {
+                            let block = (stack - 1) * pl;
+                            let idx = match self.head_free.pop() {
+                                Some(idx) => idx,
+                                None => {
+                                    let idx = (self.head_pool.len() / block) as u32;
+                                    self.head_pool.resize(self.head_pool.len() + block, 0.0);
+                                    idx
+                                }
+                            };
+                            let base = idx as usize * block;
+                            for c in 0..stack - 1 {
+                                for i in 0..pl {
+                                    self.head_pool[base + c * pl + i] = row[i * stack + c];
+                                }
+                            }
+                            self.head_of[s] = idx;
+                        }
+                    }
+                }
+            }
             self.actions[s] = actions[e] as i32;
         }
         self.staged = true;
+    }
+
+    /// Lower edge of lane validity after `pushed` frames: stacked stores
+    /// keep `lane_cap` frames of gatherable history; frame stores give up
+    /// `stack - 1` more because transition `t` reads planes back to
+    /// `t - stack + 1`, which must not have been overwritten.
+    fn inval_lo(&self, pushed: u64) -> u64 {
+        let cap = self.lane_cap as u64;
+        if pushed <= cap {
+            0
+        } else {
+            pushed - cap + (self.store.stack() as u64 - 1)
+        }
     }
 
     /// Record the staged timestep's outcome and run the assembler.
@@ -239,8 +381,7 @@ impl ReplayRing {
 
     /// The valid transition window `[lo, hi)` of lane `e`.
     pub fn lane_window(&self, e: usize) -> (u64, u64) {
-        let lo = self.pushed[e].saturating_sub(self.lane_cap as u64);
-        (lo, self.frontier[e])
+        (self.inval_lo(self.pushed[e]), self.frontier[e])
     }
 
     /// Number of currently sampleable transitions.
@@ -317,11 +458,101 @@ impl ReplayRing {
             len: self.t_len[s] as usize,
             done: self.t_done[s],
         };
-        obs_out.copy_from_slice(&self.obs[s * self.obs_len..(s + 1) * self.obs_len]);
         let next_t = if meta.done { t } else { t + meta.len as u64 };
-        let ns = self.slot(e, next_t);
-        next_out.copy_from_slice(&self.obs[ns * self.obs_len..(ns + 1) * self.obs_len]);
+        match self.store {
+            ObsStore::Stacked => {
+                obs_out.copy_from_slice(&self.obs[s * self.obs_len..(s + 1) * self.obs_len]);
+                let ns = self.slot(e, next_t);
+                next_out.copy_from_slice(&self.obs[ns * self.obs_len..(ns + 1) * self.obs_len]);
+            }
+            ObsStore::Frame { .. } => {
+                self.gather_stack(e, t, obs_out);
+                self.gather_stack(e, next_t, next_out);
+            }
+        }
         meta
+    }
+
+    /// Rebuild the HWC-interleaved stack of frame `t` from the lane's
+    /// plane run (frame mode only). Channel `c` (0 = oldest) is plane
+    /// `t - (stack-1-c)`: copied from the lane when that plane is part of
+    /// frame `t`'s episode, read back from the episode head's side block
+    /// via the shift recurrence `obs_t[c] = obs_head[c + (t - head)]`
+    /// when it predates the episode, and zero otherwise.
+    fn gather_stack(&self, e: usize, t: u64, out: &mut [f32]) {
+        let ObsStore::Frame { stack } = self.store else {
+            unreachable!("frame gather on a stacked store");
+        };
+        debug_assert_eq!(out.len(), self.obs_len);
+        let pl = self.plane_len;
+        // most recent episode head in (t - stack + 1 ..= t]: frame t-k+1
+        // starts an episode iff t-k+1 == 0 or frame t-k carried a done
+        let mut head: Option<u64> = None;
+        for k in 1..stack as u64 {
+            if t < k || self.dones[self.slot(e, t - k)] {
+                head = Some(t - k + 1);
+                break;
+            }
+        }
+        for c in 0..stack {
+            let back = (stack - 1 - c) as u64;
+            let in_episode = match head {
+                None => true,
+                Some(h) => t >= back && t - back >= h,
+            };
+            if in_episode {
+                let ps = self.slot(e, t - back);
+                let plane = &self.obs[ps * pl..(ps + 1) * pl];
+                for (i, &v) in plane.iter().enumerate() {
+                    out[i * stack + c] = v;
+                }
+            } else {
+                let h = head.expect("pre-episode plane without a head");
+                let hc = c + (t - h) as usize;
+                debug_assert!(hc < stack - 1);
+                let idx = self.head_of[self.slot(e, h)];
+                if idx == NO_HEAD {
+                    for i in 0..pl {
+                        out[i * stack + c] = 0.0;
+                    }
+                } else {
+                    let base = idx as usize * (stack - 1) * pl + hc * pl;
+                    let plane = &self.head_pool[base..base + pl];
+                    for (i, &v) in plane.iter().enumerate() {
+                        out[i * stack + c] = v;
+                    }
+                }
+            }
+        }
+    }
+
+    /// The ring's observation layout.
+    pub fn store(&self) -> ObsStore {
+        self.store
+    }
+
+    /// Bytes of observation payload currently resident: occupied plane
+    /// slots plus live episode-head blocks (frame mode).
+    pub fn obs_bytes_resident(&self) -> u64 {
+        let f32_bytes = std::mem::size_of::<f32>() as u64;
+        let mut bytes = self.occupied_frames() * self.plane_len as u64 * f32_bytes;
+        if let ObsStore::Frame { stack } = self.store {
+            let block = ((stack - 1) * self.plane_len) as u64;
+            let live = self.head_pool.len() as u64 / block - self.head_free.len() as u64;
+            bytes += live * block * f32_bytes;
+        }
+        bytes
+    }
+
+    /// What the same occupancy would hold as full stacked rows — the
+    /// numerator of the frame-store compression ratio.
+    pub fn obs_bytes_stacked_equiv(&self) -> u64 {
+        self.occupied_frames() * self.obs_len as u64 * std::mem::size_of::<f32>() as u64
+    }
+
+    fn occupied_frames(&self) -> u64 {
+        let cap = self.lane_cap as u64;
+        self.pushed.iter().map(|&p| p.min(cap)).sum()
     }
 
     /// Discount to apply to the bootstrap of transition meta:
@@ -509,5 +740,166 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Frame-native storage acceptance: over a stack-consistent stream
+    /// (shift-register planes, no-op-style episode heads, episode
+    /// boundaries, ring wrap), every read in the frame store's valid
+    /// window is bit-identical to a stacked store fed the same rows.
+    #[test]
+    fn frame_reads_are_bit_identical_to_stacked() {
+        use crate::replay::testutil::ShiftStream;
+        prop::check("replay-frame-vs-stacked", 60, |g| {
+            let stack = g.usize_in(2, 4);
+            let pl = g.usize_in(1, 3);
+            let obs_len = stack * pl;
+            let n = g.usize_in(1, 3);
+            let lane_cap = g.usize_in(n + stack + 1, 24);
+            let t_total = g.usize_in(lane_cap, 3 * lane_cap);
+            let mut stream = ShiftStream::new(stack, pl, g.u64());
+            let mut frame =
+                ReplayRing::with_store(lane_cap, 1, obs_len, n, 0.9, ObsStore::Frame { stack });
+            let mut stacked = ReplayRing::new(lane_cap, 1, obs_len, n, 0.9);
+            let mut row = vec![0.0; obs_len];
+            for t in 0..t_total {
+                stream.write_obs(&mut row);
+                frame.stage(&row, &[t % 4]);
+                stacked.stage(&row, &[t % 4]);
+                let done = g.bool_with(0.2);
+                frame.commit(&[0.25], &[done]);
+                stacked.commit(&[0.25], &[done]);
+                if done {
+                    stream.reset();
+                } else {
+                    stream.step();
+                }
+            }
+            let (lo, hi) = frame.lane_window(0);
+            let (slo, shi) = stacked.lane_window(0);
+            if hi != shi || lo < slo {
+                return Err(format!(
+                    "windows diverge: frame [{lo},{hi}) vs stacked [{slo},{shi})"
+                ));
+            }
+            let (mut of, mut nf) = (vec![0.0; obs_len], vec![0.0; obs_len]);
+            let (mut os, mut ns) = (vec![0.0; obs_len], vec![0.0; obs_len]);
+            for t in lo..hi {
+                let mf = frame.read(0, t, &mut of, &mut nf);
+                let ms = stacked.read(0, t, &mut os, &mut ns);
+                if mf != ms {
+                    return Err(format!("meta diverges at t={t}: {mf:?} vs {ms:?}"));
+                }
+                for i in 0..obs_len {
+                    if of[i].to_bits() != os[i].to_bits() {
+                        return Err(format!("obs diverges at t={t} i={i}"));
+                    }
+                    if nf[i].to_bits() != ns[i].to_bits() {
+                        return Err(format!("next_obs diverges at t={t} i={i}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// ISSUE regression: the wrap must invalidate `n + STACK` frames, not
+    /// `n + 1` — the first overwrite drops `stack` transitions at once,
+    /// steady state drops one per push.
+    #[test]
+    fn frame_wrap_invalidates_n_plus_stack_window() {
+        use crate::replay::testutil::ShiftStream;
+        let (stack, pl, n) = (4usize, 2usize, 2usize);
+        let mut ring = ReplayRing::with_store(8, 1, stack * pl, n, 0.9, ObsStore::Frame { stack });
+        let mut stream = ShiftStream::new(stack, pl, 7);
+        let mut row = vec![0.0; stack * pl];
+        for t in 0..8 {
+            stream.write_obs(&mut row);
+            ring.stage(&row, &[t % 3]);
+            ring.commit(&[1.0], &[false]);
+            stream.step();
+        }
+        // pre-wrap the window matches stacked storage
+        assert_eq!(ring.lane_window(0), (0, 6));
+        // frame 8 overwrites plane 0; transitions 0..=3 gather it
+        // (t - stack + 1 <= 0 < t + 1), so all four leave at once
+        stream.write_obs(&mut row);
+        ring.stage(&row, &[0]);
+        assert_eq!(ring.evicted_slots(), &[0, 1, 2, 3]);
+        ring.commit(&[1.0], &[false]);
+        assert_eq!(ring.lane_window(0).0, 4);
+        // steady state: one eviction per push again
+        stream.step();
+        stream.write_obs(&mut row);
+        ring.stage(&row, &[0]);
+        assert_eq!(ring.evicted_slots(), &[4]);
+    }
+
+    /// Deterministic walk of the head-block machinery: a no-op start
+    /// whose history planes the ring never received must reconstruct
+    /// verbatim, a clean start must zero-fill without allocating.
+    #[test]
+    fn frame_gather_reconstructs_noop_heads_and_zero_fill() {
+        let (stack, n) = (3usize, 2usize);
+        let x = [0.11f32, 0.12];
+        let y = [0.21f32, 0.22, 0.23];
+        // pl = 1: each row is the interleaved 3-stack [oldest, mid, newest].
+        // Episode A starts after a no-op run (planes 0.5/0.7 predate the
+        // ring); episode B starts clean.
+        let rows: [[f32; 3]; 6] = [
+            [0.5, 0.7, 0.9],
+            [0.7, 0.9, x[0]],
+            [0.9, x[0], x[1]], // done -> episode B
+            [0.0, 0.0, y[0]],
+            [0.0, y[0], y[1]],
+            [y[0], y[1], y[2]], // done
+        ];
+        let mut ring = ReplayRing::with_store(8, 1, 3, n, 1.0, ObsStore::Frame { stack });
+        for (t, row) in rows.iter().enumerate() {
+            ring.stage(row, &[t]);
+            ring.commit(&[1.0], &[t == 2 || t == 5]);
+        }
+        assert_eq!(ring.lane_window(0), (0, 6));
+        let (mut o, mut nx) = (vec![0.0; 3], vec![0.0; 3]);
+        for t in 0..6usize {
+            let m = ring.read(0, t as u64, &mut o, &mut nx);
+            assert_eq!(o, rows[t].to_vec(), "obs t={t}");
+            let next = if m.done { t } else { t + m.len };
+            assert_eq!(nx, rows[next].to_vec(), "next_obs t={t}");
+        }
+        // resident: 6 plane slots + episode A's one 2-plane head block
+        // (episode B's zero history allocated nothing)
+        assert_eq!(ring.obs_bytes_resident(), (6 + 2) * 4);
+        assert_eq!(ring.obs_bytes_stacked_equiv(), 6 * 3 * 4);
+    }
+
+    /// Acceptance: on Atari-shaped (stack=4) observations the frame store
+    /// keeps >= 3.5x fewer resident obs bytes than stacked storage.
+    #[test]
+    fn frame_store_compresses_atari_shaped_obs() {
+        use crate::replay::testutil::ShiftStream;
+        let (stack, pl, n) = (4usize, 49usize, 4usize);
+        let obs_len = stack * pl;
+        let mut ring = ReplayRing::with_store(64, 1, obs_len, n, 0.99, ObsStore::Frame { stack });
+        let mut stream = ShiftStream::new(stack, pl, 11);
+        let mut row = vec![0.0; obs_len];
+        for t in 0..160 {
+            stream.write_obs(&mut row);
+            ring.stage(&row, &[0]);
+            let done = t % 37 == 36;
+            ring.commit(&[0.0], &[done]);
+            if done {
+                stream.reset();
+            } else {
+                stream.step();
+            }
+        }
+        let ratio = ring.obs_bytes_stacked_equiv() as f64 / ring.obs_bytes_resident() as f64;
+        assert!(ratio >= 3.5, "compression {ratio:.2} below 3.5x");
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn frame_store_rejects_undivisible_obs() {
+        let _ = ReplayRing::with_store(64, 1, 10, 2, 0.9, ObsStore::Frame { stack: 4 });
     }
 }

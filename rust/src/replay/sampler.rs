@@ -4,7 +4,7 @@
 
 use crate::util::rng::Pcg32;
 
-use super::ring::ReplayRing;
+use super::ring::{ObsStore, ReplayRing};
 use super::sumtree::SumTree;
 use super::ReplayStats;
 
@@ -94,11 +94,28 @@ impl ReplayBuffer {
         kind: SamplerKind,
         seed: u64,
     ) -> ReplayBuffer {
+        Self::with_store(capacity, n_e, obs_len, n_step, gamma, kind, seed, ObsStore::Stacked)
+    }
+
+    /// Like [`ReplayBuffer::new`] with an explicit ring observation
+    /// layout ([`ObsStore::Frame`] stores one plane per step and
+    /// reconstructs the stack at gather time).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_store(
+        capacity: usize,
+        n_e: usize,
+        obs_len: usize,
+        n_step: usize,
+        gamma: f32,
+        kind: SamplerKind,
+        seed: u64,
+        store: ObsStore,
+    ) -> ReplayBuffer {
         if let SamplerKind::Prioritized { alpha, beta } = kind {
             assert!((0.0..=1.0).contains(&alpha), "per alpha out of [0,1]");
             assert!((0.0..=1.0).contains(&beta), "per beta out of [0,1]");
         }
-        let ring = ReplayRing::new(capacity, n_e, obs_len, n_step, gamma);
+        let ring = ReplayRing::with_store(capacity, n_e, obs_len, n_step, gamma, store);
         let tree = matches!(kind, SamplerKind::Prioritized { .. })
             .then(|| SumTree::new(ring.capacity()));
         ReplayBuffer {
@@ -164,10 +181,15 @@ impl ReplayBuffer {
             return false;
         }
         let mut age_acc = 0.0f64;
-        match self.kind {
-            SamplerKind::Uniform => self.sample_uniform(batch, size, &mut age_acc),
-            SamplerKind::Prioritized { beta, .. } => {
-                self.sample_prioritized(batch, size, beta, &mut age_acc)
+        {
+            // the draw+gather hot path: in frame mode this is where the
+            // stacks are reconstructed, so give it its own trace span
+            let _gather = crate::trace::span("train.replay_gather");
+            match self.kind {
+                SamplerKind::Uniform => self.sample_uniform(batch, size, &mut age_acc),
+                SamplerKind::Prioritized { beta, .. } => {
+                    self.sample_prioritized(batch, size, beta, &mut age_acc)
+                }
             }
         }
         batch.len = size;
@@ -305,8 +327,10 @@ impl ReplayBuffer {
 
     /// Occupancy / throughput / sample-age counters for the metrics log.
     pub fn stats(&self) -> ReplayStats {
+        let occupancy = self.ring.len();
+        let obs_bytes_resident = self.ring.obs_bytes_resident();
         ReplayStats {
-            occupancy: self.ring.len(),
+            occupancy,
             capacity: self.ring.capacity(),
             frames_pushed: self.ring.frames_pushed(),
             transitions_assembled: self.ring.transitions_assembled(),
@@ -316,6 +340,17 @@ impl ReplayBuffer {
                 self.age_sum / self.samples_drawn as f64
             } else {
                 0.0
+            },
+            obs_bytes_resident,
+            bytes_per_transition: if occupancy > 0 {
+                obs_bytes_resident as f64 / occupancy as f64
+            } else {
+                0.0
+            },
+            compression: if obs_bytes_resident > 0 {
+                self.ring.obs_bytes_stacked_equiv() as f64 / obs_bytes_resident as f64
+            } else {
+                1.0
             },
         }
     }
@@ -503,6 +538,136 @@ mod tests {
             batch.slots.as_ptr(),
         );
         assert_eq!(after, ptrs, "gather buffers must be reused, not rebuilt");
+    }
+
+    /// Frame-mode acceptance at the sampler layer: identically-seeded
+    /// buffers fed the same stack-consistent stream draw bit-identical
+    /// `SampleBatch`es whether the ring stores stacks or planes —
+    /// including PER (same priorities -> same tree -> same picks).
+    /// Sized to stay pre-wrap: after a wrap the frame window is
+    /// `stack - 1` transitions narrower per lane, so the draw streams
+    /// legitimately diverge (the ring-level property test covers wrap).
+    #[test]
+    fn frame_mode_batches_are_bit_identical_pre_wrap() {
+        use crate::replay::testutil::ShiftStream;
+        use crate::util::prop;
+        let (stack, pl) = (4usize, 3usize);
+        let obs_len = stack * pl;
+        prop::check("sampler-frame-vs-stacked", 20, |g| {
+            let per = g.bool_with(0.5);
+            let kind = if per {
+                SamplerKind::Prioritized { alpha: 0.6, beta: 0.4 }
+            } else {
+                SamplerKind::Uniform
+            };
+            let seed = g.u64();
+            let n_e = 2;
+            // lanes of 40, stream of 30 steps: never wraps
+            let mut stacked =
+                ReplayBuffer::with_store(80, n_e, obs_len, 2, 0.9, kind, seed, ObsStore::Stacked);
+            let mut frame = ReplayBuffer::with_store(
+                80,
+                n_e,
+                obs_len,
+                2,
+                0.9,
+                kind,
+                seed,
+                ObsStore::Frame { stack },
+            );
+            let mut streams: Vec<ShiftStream> = (0..n_e)
+                .map(|e| ShiftStream::new(stack, pl, seed ^ e as u64))
+                .collect();
+            let mut row = vec![0.0; n_e * obs_len];
+            for t in 0..30u64 {
+                for (e, s) in streams.iter_mut().enumerate() {
+                    s.write_obs(&mut row[e * obs_len..(e + 1) * obs_len]);
+                }
+                let actions = [(t % 6) as usize, ((t + 2) % 6) as usize];
+                stacked.stage(&row, &actions);
+                frame.stage(&row, &actions);
+                let dones = [g.bool_with(0.15), g.bool_with(0.15)];
+                let rewards = [t as f32 * 0.5, -(t as f32)];
+                stacked.commit(&rewards, &dones);
+                frame.commit(&rewards, &dones);
+                for (e, s) in streams.iter_mut().enumerate() {
+                    if dones[e] {
+                        s.reset();
+                    } else {
+                        s.step();
+                    }
+                }
+            }
+            let mut bs = SampleBatch::new(16, obs_len);
+            let mut bf = SampleBatch::new(16, obs_len);
+            for round in 0..8 {
+                if !stacked.sample(&mut bs, 16) || !frame.sample(&mut bf, 16) {
+                    return Err(format!("round {round}: underfilled"));
+                }
+                if bs.slots != bf.slots || bs.actions != bf.actions {
+                    return Err(format!("round {round}: draw streams diverge"));
+                }
+                for i in 0..16 * obs_len {
+                    if bs.obs[i].to_bits() != bf.obs[i].to_bits()
+                        || bs.next_obs[i].to_bits() != bf.next_obs[i].to_bits()
+                    {
+                        return Err(format!("round {round}: obs bytes diverge at {i}"));
+                    }
+                }
+                if bs.rewards != bf.rewards
+                    || bs.discounts != bf.discounts
+                    || bs.weights != bf.weights
+                {
+                    return Err(format!("round {round}: targets diverge"));
+                }
+                // keep the PER trees in lockstep with identical updates
+                let tds: Vec<f32> = (0..16).map(|i| (i as f32 - 4.0) * 0.3).collect();
+                stacked.update_priorities(&bs.slots[..16], &tds);
+                frame.update_priorities(&bf.slots[..16], &tds);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn frame_mode_stats_report_compression() {
+        use crate::replay::testutil::ShiftStream;
+        let (stack, pl) = (4usize, 25usize);
+        let obs_len = stack * pl;
+        let mut buf = ReplayBuffer::with_store(
+            32,
+            1,
+            obs_len,
+            2,
+            0.9,
+            SamplerKind::Uniform,
+            3,
+            ObsStore::Frame { stack },
+        );
+        let mut stream = ShiftStream::new(stack, pl, 9);
+        let mut row = vec![0.0; obs_len];
+        for t in 0..80u64 {
+            stream.write_obs(&mut row);
+            buf.stage(&row, &[0]);
+            let done = t % 29 == 28;
+            buf.commit(&[0.0], &[done]);
+            if done {
+                stream.reset();
+            } else {
+                stream.step();
+            }
+        }
+        let s = buf.stats();
+        assert!(s.obs_bytes_resident > 0);
+        // 32 plane slots of 25 floats resident, plus at most two live
+        // 3-plane head blocks
+        assert!(s.obs_bytes_resident <= ((32 + 2 * 3) * pl * 4) as u64);
+        assert!(s.compression >= 3.5, "compression {}", s.compression);
+        assert!(
+            s.bytes_per_transition > 0.0 && s.bytes_per_transition < (obs_len * 4) as f64,
+            "bytes/transition {}",
+            s.bytes_per_transition
+        );
     }
 
     #[test]

@@ -13,7 +13,7 @@ use std::path::PathBuf;
 
 use paac::algo::evaluator::EvalProtocol;
 use paac::algo::nstep_q::{evaluate_q, HostLinearQ, HOST_LINEAR_ARCH};
-use paac::config::{Algo, Config, LrSchedule};
+use paac::config::{Algo, Config, FrameMode, LrSchedule};
 use paac::coordinator::master::Trainer;
 use paac::envs::{GameId, ObsMode};
 use paac::runtime::checkpoint::Checkpoint;
@@ -152,6 +152,69 @@ fn nstep_q_prioritized_variant_runs() {
     assert!(!report.diverged);
     assert!(dir.join("qrun/final.ckpt").exists());
     std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Frame-native replay storage is a pure representation change: on a
+/// seeded run sized to stay pre-wrap, training with `frame_mode = on`
+/// must produce the exact same score curve and final checkpoint as the
+/// stacked store, while holding ~4x fewer resident obs bytes.
+#[test]
+fn frame_mode_run_matches_stacked_bit_for_bit() {
+    if !host_mode() {
+        return;
+    }
+    let run = |tag: &str, mode: FrameMode| {
+        let dir = tmpdir(tag);
+        let mut cfg = small_cfg(&dir, 2_400, false);
+        // 84x84x4 stacked obs so frame mode has a temporal axis to strip
+        cfg.atari_mode = true;
+        cfg.arch = "nips".into();
+        cfg.n_e = 4;
+        cfg.eval_episodes = 0; // compare the train loop, not eval
+        // no-op starts off: episodes then begin from a zeroed stack, so
+        // frame mode never needs episode-head side blocks and residency
+        // is exactly one plane per pushed step (a clean 4.0x)
+        cfg.noop_max = 0;
+        cfg.replay_frame_mode = mode;
+        // lane cap 4000/4 = 1000 frames/env > 600 steps/env: no wrap,
+        // so both stores expose identical sampling windows all run
+        let mut trainer = Trainer::new(cfg).unwrap();
+        let report = trainer.run().unwrap();
+        let ckpt = Checkpoint::load(&dir.join("qrun/final.ckpt")).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+        (report, ckpt)
+    };
+    let (stacked, ckpt_s) = run("frame-off", FrameMode::Off);
+    let (frame, ckpt_f) = run("frame-on", FrameMode::On);
+
+    assert_eq!(stacked.timesteps, frame.timesteps);
+    assert_eq!(stacked.updates, frame.updates);
+    assert_eq!(stacked.episodes, frame.episodes);
+    // wall_secs legitimately differs between runs; scores may not
+    let curve = |r: &paac::coordinator::master::TrainReport| -> Vec<(u64, f32)> {
+        r.score_curve.iter().map(|p| (p.timestep, p.score)).collect()
+    };
+    assert_eq!(
+        curve(&stacked),
+        curve(&frame),
+        "frame-mode run diverged from stacked on the score curve"
+    );
+    assert_eq!(ckpt_s, ckpt_f, "frame-mode final checkpoint differs from stacked");
+
+    // and the representation actually paid: >= 3.5x on Atari-shaped obs
+    let rs = stacked.replay.expect("stacked replay stats");
+    let rf = frame.replay.expect("frame replay stats");
+    assert!(
+        (rs.compression - 1.0).abs() < 1e-6,
+        "stacked store should report 1.0x compression, got {}",
+        rs.compression
+    );
+    assert!(
+        rf.compression >= 3.5,
+        "frame store compression below 3.5x on 84x84x4 obs: {}",
+        rf.compression
+    );
+    assert!(rf.obs_bytes_resident < rs.obs_bytes_resident / 3);
 }
 
 #[test]
